@@ -1,0 +1,83 @@
+//! HW-SW co-design (paper §5.3 in miniature): train one config per
+//! accumulator policy and compare FINN-style LUT estimates.
+//!
+//! Shows the Fig. 6 mechanism end to end: the same (M, N) budget costs very
+//! different LUTs depending on how the accumulator is chosen, and A2Q turns
+//! the accumulator into a *design input* while guaranteeing correctness.
+//!
+//! Run: `cargo run --release --example codesign_lut [model] [steps]`
+
+use a2q::config::RunConfig;
+use a2q::coordinator::Trainer;
+use a2q::finn::estimate::{estimate_network, AccumulatorPolicy, DEFAULT_CYCLES_BUDGET};
+use a2q::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "cnn".to_string());
+    let steps: u64 = std::env::args().nth(2).map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let (m, n, p_target) = (6u32, 6u32, 14u32);
+
+    let engine = Engine::new("artifacts")?;
+    let manifest = engine.manifest(&model)?;
+    let geoms = manifest.geoms()?;
+
+    // Train QAT (accumulator-oblivious) and A2Q (accumulator-aware) once each.
+    let qat_cfg = RunConfig::new(&model, "qat", m, n, 32, steps);
+    let trainer = Trainer::new(&engine, &qat_cfg)?;
+    let qat = trainer.run(&qat_cfg)?;
+    let a2q_cfg = RunConfig::new(&model, "a2q", m, n, p_target, steps);
+    let a2q = trainer.run(&a2q_cfg)?;
+    anyhow::ensure!(a2q.guarantee_ok, "Eq. 15 audit failed");
+
+    println!(
+        "{model} @ M={m} N={n} (cycles budget {DEFAULT_CYCLES_BUDGET}), A2Q target P={p_target}\n"
+    );
+    println!(
+        "{:<28} {:>10} {:>10} {:>10} {:>8}",
+        "co-design setting", "compute", "memory", "total", "perf"
+    );
+    let mut base_total = None;
+    for (name, policy, l1, perf) in [
+        ("qat + fixed 32-bit acc", AccumulatorPolicy::Fixed32, &qat.l1_norms, qat.perf),
+        ("qat + data-type bound", AccumulatorPolicy::DataTypeBound, &qat.l1_norms, qat.perf),
+        ("qat + PTM (weight bound)", AccumulatorPolicy::WeightNorm, &qat.l1_norms, qat.perf),
+        (
+            "a2q + target P",
+            AccumulatorPolicy::A2qTarget(p_target),
+            &a2q.l1_norms,
+            a2q.perf,
+        ),
+    ] {
+        let est = estimate_network(&geoms, (m, n, p_target), policy, Some(l1), DEFAULT_CYCLES_BUDGET);
+        let total = est.total_luts();
+        if base_total.is_none() {
+            base_total = Some(total);
+        }
+        println!(
+            "{:<28} {:>10.0} {:>10.0} {:>10.0} {:>8.4}   ({:.2}x vs fixed32)",
+            name,
+            est.total.compute,
+            est.total.memory,
+            total,
+            perf,
+            base_total.unwrap() / total
+        );
+    }
+
+    // Per-layer accumulator widths under A2Q (Fig. 7's mechanism).
+    let est = estimate_network(
+        &geoms,
+        (m, n, p_target),
+        AccumulatorPolicy::A2qTarget(p_target),
+        Some(&a2q.l1_norms),
+        DEFAULT_CYCLES_BUDGET,
+    );
+    println!("\nper-layer accumulators under A2Q (boundary layers use their weight bound):");
+    for l in &est.layers {
+        println!(
+            "  {:<6} P={:>2}  pe={:<3} simd={:<4} compute {:>8.0}  memory {:>8.0}",
+            l.name, l.p_used, l.pe, l.simd, l.luts.compute, l.luts.memory
+        );
+    }
+    Ok(())
+}

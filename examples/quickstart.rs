@@ -1,0 +1,56 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. Compute the paper's accumulator bounds for a layer shape.
+//! 2. Train the 1-layer binary-MNIST QNN with A2Q at a 14-bit accumulator
+//!    target, fully from Rust via the AOT artifacts.
+//! 3. Export the integer weights and *prove* overflow is impossible with the
+//!    bit-exact accumulation simulator.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use a2q::accsim::matmul::quantize_inputs;
+use a2q::accsim::{qlinear_forward, AccMode};
+use a2q::config::RunConfig;
+use a2q::coordinator::Trainer;
+use a2q::datasets::Split;
+use a2q::quant::bounds::{data_type_bound, weight_bound, DotShape};
+use a2q::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. bounds (paper Sec. 3) ------------------------------------------
+    let shape = DotShape { k: 784, m_bits: 8, n_bits: 1, x_signed: false };
+    println!("binary-MNIST layer: K=784, M=8, N=1");
+    println!("  data-type bound (Eq. 8):  P >= {}", data_type_bound(shape));
+    println!(
+        "  weight bound at ||w||_1=4000 (Eq. 12): P >= {}",
+        weight_bound(4000.0, 1, false)
+    );
+
+    // --- 2. train with A2Q at P = 14 ---------------------------------------
+    let target_p = 14;
+    let engine = Engine::new("artifacts")?;
+    let mut cfg = RunConfig::new("mlp", "a2q", 8, 1, target_p, 300);
+    cfg.lr = Some(0.05);
+    let trainer = Trainer::new(&engine, &cfg)?;
+    let outcome = trainer.run(&cfg)?;
+    println!(
+        "\ntrained mlp with A2Q @ P={target_p}: test acc {:.3}, weight sparsity {:.2}",
+        outcome.perf, outcome.sparsity
+    );
+    assert!(outcome.guarantee_ok, "Eq. 15 audit must pass");
+
+    // --- 3. prove overflow avoidance with the bit-exact simulator ----------
+    let layer = outcome.exported.as_ref().unwrap()[0].to_qtensor();
+    println!("exported integer weights: max ||w||_1 = {}", layer.max_l1());
+    let idx: Vec<usize> = (0..256).collect();
+    let batch = trainer.dataset.gather(Split::Test, &idx);
+    let x_int = quantize_inputs(&batch.x, 1.0, 1, false);
+    let sim = qlinear_forward(&x_int, 1.0, &layer, AccMode::Wrap { p_bits: target_p });
+    println!(
+        "simulated {} dot products ({} MACs) in a {target_p}-bit wraparound register: {} overflows",
+        sim.stats.dots, sim.stats.macs, sim.stats.overflow_events
+    );
+    assert_eq!(sim.stats.overflow_events, 0, "A2Q guarantees this is zero");
+    println!("guaranteed overflow avoidance: VERIFIED");
+    Ok(())
+}

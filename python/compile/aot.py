@@ -1,0 +1,157 @@
+# AOT export: lower every (model, alg, mode) graph to HLO *text* plus a JSON
+# manifest describing the artifact interface for the Rust runtime.
+#
+# HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+# HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+# version behind the published `xla` rust crate) rejects; the HLO text parser
+# reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+#
+# Python runs ONCE at `make artifacts`; after that the Rust binary is fully
+# self-contained: it initializes, trains, evaluates and exports models purely
+# by executing these artifacts via PJRT.
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .models import REGISTRY
+
+ALGS = ("a2q", "qat", "float")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shapes_of(tree):
+    return [list(l.shape) for l in M.flatten(tree)]
+
+
+def lower_model(spec, out_dir, algs, verbose=True):
+    """Lower init/train/infer/export for one model; return its manifest dict."""
+    name = spec.name
+    bs = spec.batch_size
+    x_shape = [bs, *spec.input_shape]
+    y_shape = [bs] if spec.task == "classify" else [bs, *spec.target_shape]
+
+    files = {}
+
+    def emit(tag, fn, arg_specs):
+        fname = f"{name}_{tag}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        # keep_unused=True: the artifact interface is positional and fixed;
+        # graphs that ignore an input (e.g. the float baseline ignores `bits`)
+        # must still accept it so the Rust runtime can treat every train step
+        # identically.
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        files[tag] = fname
+        if verbose:
+            print(f"  {fname}: {len(text)//1024} KiB")
+        return path
+
+    # --- init (alg-independent: quantizer params are part of the state for
+    # every algorithm, float simply ignores them) ------------------------------
+    emit("init", M.make_init(spec), [_spec(())])
+
+    template = M.init_state(spec, jax.random.PRNGKey(0))
+    state_layout = M.state_paths(template)
+    params_layout = M.state_paths(template["params"])
+    state_specs = [_spec(s) for _, s in state_layout]
+    param_specs = [_spec(s) for _, s in params_layout]
+
+    per_alg = {}
+    for alg in algs:
+        train_fn, _, _ = M.make_train_step(spec, alg)
+        emit(f"{alg}_train", train_fn, state_specs + [_spec(x_shape), _spec(y_shape), _spec([3]), _spec(())])
+
+        infer_fn, _, _ = M.make_infer(spec, alg)
+        emit(f"{alg}_infer", infer_fn, param_specs + [_spec(x_shape), _spec([3])])
+
+        entry = {"train": files[f"{alg}_train"], "infer": files[f"{alg}_infer"]}
+        if alg != "float":
+            export_fn, _, _ = M.make_export(spec, alg)
+            emit(f"{alg}_export", export_fn, param_specs + [_spec([3])])
+            entry["export"] = files[f"{alg}_export"]
+        per_alg[alg] = entry
+
+    export_outputs = []
+    for q in spec.qlayers:
+        export_outputs += [
+            {"layer": q.name, "tensor": "w_int", "shape": [q.c_out, q.k]},
+            {"layer": q.name, "tensor": "s", "shape": [q.c_out, 1]},
+            {"layer": q.name, "tensor": "b", "shape": [q.c_out]},
+        ]
+
+    manifest = spec.manifest()
+    manifest.update(
+        {
+            "init": files["init"],
+            "algs": per_alg,
+            "state": [{"path": p, "shape": s} for p, s in state_layout],
+            "params": [{"path": p, "shape": s} for p, s in params_layout],
+            "export_outputs": export_outputs,
+            "train_inputs": {"x": x_shape, "y": y_shape, "bits": [3], "lr": []},
+        }
+    )
+    return manifest
+
+
+def input_fingerprint():
+    """Hash of the compile package, so `make artifacts` can skip clean rebuilds."""
+    root = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for dirpath, _, fnames in sorted(os.walk(root)):
+        for fn in sorted(fnames):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--models", default=",".join(REGISTRY), help="comma-separated subset")
+    ap.add_argument("--algs", default=",".join(ALGS))
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    models = [m for m in args.models.split(",") if m]
+    algs = [a for a in args.algs.split(",") if a]
+
+    index = {"fingerprint": input_fingerprint(), "models": {}}
+    for name in models:
+        spec = REGISTRY[name]
+        print(f"[aot] lowering {name} (bs={spec.batch_size}, K*={spec.largest_k()})")
+        manifest = lower_model(spec, out_dir, algs)
+        mpath = os.path.join(out_dir, f"{name}.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+        index["models"][name] = f"{name}.json"
+
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] wrote {len(models)} manifests to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+# L1 Pallas kernel: the A2Q accumulator-aware weight quantizer (paper Eq. 20-23).
+#
+# The quantizer is a per-output-channel reduction (the l1 norm of the direction
+# vector v) followed by an elementwise map (scale, round-toward-zero, clip,
+# dequantize). We tile the [C, K] weight matrix along the channel axis with a
+# BlockSpec so each grid step holds one block of channels fully in VMEM,
+# computes the row norms once, and applies the elementwise pipeline -- the
+# HBM<->VMEM schedule FINN expresses with PE/SIMD unrolling (see DESIGN.md
+# "Hardware-Adaptation").
+#
+# interpret=True is mandatory on this image: real-TPU lowering emits a Mosaic
+# custom-call the CPU PJRT plugin cannot execute. Interpret mode lowers the
+# kernel to plain HLO, which is exactly what the Rust runtime loads.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# All scalar operands enter the kernel as [1, 1] f32 arrays: Pallas kernel
+# arguments must be refs, and a (1, 1) block is the simplest portable way to
+# feed runtime scalars (bit widths are *runtime inputs* so a single AOT
+# artifact serves the whole (M, N, P) grid search).
+_SCALAR_SPEC = pl.BlockSpec((1, 1), lambda *_: (0, 0))
+
+
+def _scalar(x):
+    return jnp.asarray(x, jnp.float32).reshape(1, 1)
+
+
+def _a2q_kernel(v_ref, d_ref, t_ref, m_ref, n_ref, p_ref, sig_ref, wq_ref, wi_ref, s_ref):
+    """One channel-block of the A2Q quantizer.
+
+    v_ref:   [Cb, K]  direction parameters
+    d_ref:   [Cb, 1]  log2 scale        (s = 2^d)
+    t_ref:   [Cb, 1]  log2 norm         (g = 2^min(T, t))
+    m/n/p_ref, sig_ref: [1,1] runtime scalars M, N, P, 1_signed(x)
+    wq_ref:  [Cb, K]  dequantized weights  (w_int * s)
+    wi_ref:  [Cb, K]  integer codes
+    s_ref:   [Cb, 1]  per-channel scale
+    """
+    v = v_ref[...]
+    d = d_ref[...]
+    t = t_ref[...]
+    m_bits = m_ref[0, 0]
+    n_bits = n_ref[0, 0]
+    p_bits = p_ref[0, 0]
+    sig = sig_ref[0, 0]
+
+    s = 2.0**d
+    # Accumulator-bound cap on the norm parameter (Eq. 23):
+    #   T = 1_signed(x) + log2(2^(P-1) - 1) + d - N
+    cap = sig + jnp.log2(2.0 ** (p_bits - 1.0) - 1.0) + d - n_bits
+    g = 2.0 ** jnp.minimum(cap, t)
+
+    # Per-channel l1 norm: one reduction per row, computed once per block.
+    l1 = jnp.sum(jnp.abs(v), axis=-1, keepdims=True)
+    w_cont = g * v / jnp.where(l1 == 0.0, 1.0, l1)
+
+    # scale -> round-toward-zero -> clip -> dequantize (Eq. 20).
+    lo = -(2.0 ** (m_bits - 1.0))
+    hi = 2.0 ** (m_bits - 1.0) - 1.0
+    w_int = jnp.clip(jnp.trunc(w_cont / s), lo, hi)
+
+    wq_ref[...] = w_int * s
+    wi_ref[...] = w_int
+    s_ref[...] = s
+
+
+def _channel_block(c, k):
+    """Channel-block size: keep a [Cb, K] f32 block within ~256 KiB of VMEM."""
+    budget = 256 * 1024 // 4  # floats per block
+    cb = max(1, min(c, budget // max(k, 1)))
+    # Prefer sublane-aligned blocks when we have the headroom (TPU tiling is
+    # (8, 128) for f32); interpret mode does not care but the structure should
+    # be the one a real TPU would want.
+    if cb >= 8:
+        cb -= cb % 8
+    return cb
+
+
+@functools.partial(jax.jit, static_argnames=())
+def a2q_quantize(v, d, t, m_bits, n_bits, p_bits, x_signed):
+    """Pallas A2Q weight quantizer over a [C, K] weight matrix.
+
+    Mirrors ref.ref_a2q_quantize (the pure-jnp oracle) exactly; see that
+    docstring for the math. Returns (w_q, w_int, s).
+    """
+    v = jnp.asarray(v, jnp.float32)
+    c, k = v.shape
+    cb = _channel_block(c, k)
+    grid = (pl.cdiv(c, cb),)
+
+    out = pl.pallas_call(
+        _a2q_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cb, k), lambda i: (i, 0)),
+            pl.BlockSpec((cb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((cb, 1), lambda i: (i, 0)),
+            _SCALAR_SPEC,
+            _SCALAR_SPEC,
+            _SCALAR_SPEC,
+            _SCALAR_SPEC,
+        ],
+        out_specs=[
+            pl.BlockSpec((cb, k), lambda i: (i, 0)),
+            pl.BlockSpec((cb, k), lambda i: (i, 0)),
+            pl.BlockSpec((cb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, k), jnp.float32),
+            jax.ShapeDtypeStruct((c, k), jnp.float32),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        v,
+        jnp.asarray(d, jnp.float32).reshape(c, 1),
+        jnp.asarray(t, jnp.float32).reshape(c, 1),
+        _scalar(m_bits),
+        _scalar(n_bits),
+        _scalar(p_bits),
+        _scalar(x_signed),
+    )
+    return tuple(out)

@@ -1,0 +1,97 @@
+# L1 Pallas kernel: the baseline uniform affine quantizer (paper Eq. 1/2).
+#
+# This is the standard QAT fake-quant operator with z = 0 and half-even
+# rounding -- used for (a) the baseline-QAT weight quantizer the paper
+# compares against in Figs. 4/6, and (b) all activation quantizers (both
+# algorithms quantize activations the standard way, paper Sec. 4.1 end).
+#
+# Elementwise with a row-broadcast scale, so the BlockSpec tiles rows and
+# keeps full rows in VMEM; bit-width bounds are runtime scalars.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SCALAR_SPEC = pl.BlockSpec((1, 1), lambda *_: (0, 0))
+
+
+def _scalar(x):
+    return jnp.asarray(x, jnp.float32).reshape(1, 1)
+
+
+def _affine_kernel(x_ref, s_ref, bits_ref, sig_ref, rtz_ref, q_ref, qi_ref):
+    """One row-block of the affine quantizer.
+
+    x_ref:    [Rb, C] values
+    s_ref:    [Rb, 1] scale (caller broadcasts per-tensor scales to rows)
+    bits_ref: [1, 1]  bit width
+    sig_ref:  [1, 1]  1.0 if the quantized domain is signed
+    rtz_ref:  [1, 1]  1.0 -> round-toward-zero, 0.0 -> half-even (Eq. 1)
+    """
+    x = x_ref[...]
+    s = s_ref[...]
+    bits = bits_ref[0, 0]
+    sig = sig_ref[0, 0]
+    rtz = rtz_ref[0, 0]
+
+    lo = jnp.where(sig > 0.5, -(2.0 ** (bits - 1.0)), 0.0)
+    hi = jnp.where(sig > 0.5, 2.0 ** (bits - 1.0) - 1.0, 2.0**bits - 1.0)
+    u = x / s
+    r = jnp.where(rtz > 0.5, jnp.trunc(u), jnp.round(u))
+    q = jnp.clip(r, lo, hi)
+    q_ref[...] = q * s
+    qi_ref[...] = q
+
+
+def _row_block(r, c):
+    budget = 256 * 1024 // 4
+    rb = max(1, min(r, budget // max(c, 1)))
+    if rb >= 8:
+        rb -= rb % 8
+    return rb
+
+
+@functools.partial(jax.jit, static_argnames=())
+def affine_quantize(x, scale, bits, signed, rtz=False):
+    """Pallas uniform affine quantizer over a [R, C] tensor.
+
+    `scale` may be per-tensor (scalar) or per-row ([R] / [R, 1]); it is
+    broadcast to rows before entering the kernel. Mirrors
+    ref.ref_affine_quantize (rtz=False) / ref.ref_rtz_quantize (rtz=True).
+    Returns (dequantized, integer_codes).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    r, c = x.shape
+    s = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(-1, 1), (r, 1))
+    rb = _row_block(r, c)
+    grid = (pl.cdiv(r, rb),)
+
+    out = pl.pallas_call(
+        _affine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, c), lambda i: (i, 0)),
+            pl.BlockSpec((rb, 1), lambda i: (i, 0)),
+            _SCALAR_SPEC,
+            _SCALAR_SPEC,
+            _SCALAR_SPEC,
+        ],
+        out_specs=[
+            pl.BlockSpec((rb, c), lambda i: (i, 0)),
+            pl.BlockSpec((rb, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        x,
+        s,
+        _scalar(bits),
+        _scalar(1.0 if signed is True else 0.0 if signed is False else signed),
+        _scalar(1.0 if rtz is True else 0.0 if rtz is False else rtz),
+    )
+    return tuple(out)

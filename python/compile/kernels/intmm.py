@@ -1,0 +1,76 @@
+# L1 Pallas kernel: tiled quantized matmul  y[b, c] = sum_k x[b, k] w[c, k].
+#
+# This is the fixed-point dot product of paper Fig. 1 as lowered for a TPU:
+# MXU-aligned (up to 128x128x128) tiles, accumulation in the output block
+# across the K grid axis (the classic revisiting-accumulator Pallas pattern).
+#
+# Numerics note: the kernel accumulates in fp32. fp32 holds every integer up
+# to 2^24 exactly, so for quantized operands the emulation is *bit-exact*
+# whenever all partial sums fit in 24 bits -- which A2Q's constraint
+# guarantees for every P <= 24 we evaluate (paper's range is P <= 32 on the
+# register, but the magnitude bound is 2^(P-1)-1 with P <= 24 in all our
+# sweeps). The Rust `accsim` substrate performs the wide-register bit-exact
+# check for arbitrary P.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # x block: [bm, bk], w block: [bn, bk] -> contribution [bm, bn] on the MXU.
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _tile(n, target):
+    return min(n, target)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def int_matmul(x, w):
+    """Pallas tiled matmul: x [B, K] times w [C, K] transposed -> [B, C].
+
+    Mirrors ref.ref_int_matmul. Operands are quantized values carried in
+    fp32 (see module docstring for why this is exact in the A2Q regime).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    b, k = x.shape
+    c, k2 = w.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+
+    bm, bn, bk = _tile(b, 128), _tile(c, 128), _tile(k, 128)
+
+    # Zero-pad every axis to a tile multiple: interpret-mode edge blocks read
+    # unspecified padding, and the K axis is contracted so garbage there would
+    # pollute *valid* outputs. Zero padding keeps the sum exact.
+    bp, cp, kp = -(-b // bm) * bm, -(-c // bn) * bn, -(-k // bk) * bk
+    if (bp, kp) != (b, k):
+        x = jnp.pad(x, ((0, bp - b), (0, kp - k)))
+    if (cp, kp) != (c, k):
+        w = jnp.pad(w, ((0, cp - c), (0, kp - k)))
+    grid = (bp // bm, cp // bn, kp // bk)
+
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bn, bk), lambda i, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, cp), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return out[:b, :c]

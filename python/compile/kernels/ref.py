@@ -1,0 +1,120 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# Everything here is the *reference semantics* of the paper's operators:
+#
+#   * `ref_affine_quantize`   -- standard uniform affine quantizer (paper Eq. 1/2)
+#     with half-even rounding, the baseline-QAT weight/activation quantizer.
+#   * `ref_rtz_quantize`      -- scale / round-toward-zero / clip / dequantize,
+#     the elementwise core of A2Q (paper Eq. 20).
+#   * `ref_a2q_quantize`      -- the full accumulator-aware weight quantizer
+#     (paper Eq. 20-23): per-channel l1 weight normalization with the norm
+#     parameter g = 2^min(T, t) clamped by the accumulator bound.
+#   * `ref_int_matmul`        -- plain matmul oracle for the tiled kernel.
+#
+# The Pallas kernels in a2q.py / affine.py / intmm.py must match these
+# bit-for-bit (fp32) under pytest/hypothesis sweeps.
+
+import jax.numpy as jnp
+
+
+def round_half_even(x):
+    """Half-way rounding |.| used by the baseline QAT quantizer (Eq. 1)."""
+    return jnp.round(x)
+
+
+def round_toward_zero(x):
+    """Round-toward-zero |.| used by A2Q (paper footnote 2).
+
+    Functionally different from floor/ceil: trunc(-1.5) = -1, floor(-1.5) = -2.
+    Prevents any upward rounding in magnitude that could push the l1 norm of
+    the quantized weights past the accumulator constraint.
+    """
+    return jnp.trunc(x)
+
+
+def int_bounds(bits, signed):
+    """Representation range [n, p] of a `bits`-wide integer (paper Sec. 2.1)."""
+    bits = jnp.asarray(bits, jnp.float32)
+    signed = jnp.asarray(signed, bool)
+    n = jnp.where(signed, -(2.0 ** (bits - 1.0)), 0.0)
+    p = jnp.where(signed, 2.0 ** (bits - 1.0) - 1.0, 2.0**bits - 1.0)
+    return n, p
+
+
+def ref_affine_quantize(x, scale, bits, signed):
+    """Baseline QAT quantizer: dequantize(quantize(x)) with z = 0.
+
+    q = clip(round_half_even(x / s), n, p) * s        (Eq. 1 + Eq. 2)
+
+    `scale` broadcasts against `x` (per-tensor () or per-channel [C, 1]).
+    Returns (dequantized, integer_codes).
+    """
+    n, p = int_bounds(bits, signed)
+    q = jnp.clip(round_half_even(x / scale), n, p)
+    return q * scale, q
+
+
+def ref_rtz_quantize(x, scale, bits, signed):
+    """A2Q elementwise core: scale -> round-toward-zero -> clip -> dequantize."""
+    n, p = int_bounds(bits, signed)
+    q = jnp.clip(round_toward_zero(x / scale), n, p)
+    return q * scale, q
+
+
+def a2q_norm_cap(p_bits, n_bits, x_signed, d):
+    """log2 cap T on the norm parameter t (paper Eq. 23).
+
+    T = 1_signed(x) + log2(2^(P-1) - 1) + d - N
+    """
+    sig = jnp.asarray(x_signed, jnp.float32)
+    return (
+        sig
+        + jnp.log2(2.0 ** (jnp.asarray(p_bits, jnp.float32) - 1.0) - 1.0)
+        + d
+        - jnp.asarray(n_bits, jnp.float32)
+    )
+
+
+def ref_a2q_quantize(v, d, t, m_bits, n_bits, p_bits, x_signed):
+    """Accumulator-aware weight quantizer (paper Eq. 20-23), reference semantics.
+
+    Args:
+      v:       [C, K] float32 weight direction parameters (one row per output
+               channel; conv weights are reshaped to [C_out, K]).
+      d:       [C, 1] per-channel log2 scale  (s = 2^d).
+      t:       [C, 1] per-channel log2 norm   (g = 2^min(T, t)).
+      m_bits:  weight bit width M (clip range of the integer codes).
+      n_bits:  *input activation* bit width N feeding this layer.
+      p_bits:  target accumulator bit width P.
+      x_signed: 1.0 if the layer input is signed, else 0.0.
+
+    Returns (w_q, w_int, s) with w_q = w_int * s, and by construction
+      ||w_int||_1 <= (2^(P-1) - 1) * 2^(1_signed(x) - N)   per channel (Eq. 15),
+    which is the guaranteed-overflow-avoidance condition.
+    """
+    v = jnp.asarray(v, jnp.float32)
+    s = 2.0**d
+    cap = a2q_norm_cap(p_bits, n_bits, x_signed, d)
+    g = 2.0 ** jnp.minimum(cap, t)
+    l1 = jnp.sum(jnp.abs(v), axis=-1, keepdims=True)
+    # Guard the degenerate all-zero row: g * v / l1 -> 0 like brevitas does.
+    w_cont = g * v / jnp.where(l1 == 0.0, 1.0, l1)
+    n, p = int_bounds(m_bits, True)  # weights are always signed
+    w_int = jnp.clip(round_toward_zero(w_cont / s), n, p)
+    return w_int * s, w_int, s
+
+
+def ref_l1_cap(p_bits, n_bits, x_signed):
+    """Upper bound on the *integer* weight l1 norm (paper Eq. 15, s-normalized).
+
+    ||w_int||_1 <= (2^(P-1) - 1) * 2^(1_signed(x) - N)
+    """
+    sig = jnp.asarray(x_signed, jnp.float32)
+    return (2.0 ** (jnp.asarray(p_bits, jnp.float32) - 1.0) - 1.0) * 2.0 ** (
+        sig - jnp.asarray(n_bits, jnp.float32)
+    )
+
+
+def ref_int_matmul(x, w):
+    """Oracle for the tiled matmul kernel: y[b, c] = sum_k x[b, k] w[c, k]."""
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32).T

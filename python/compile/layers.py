@@ -1,0 +1,228 @@
+# L2 building blocks: quantized layers with STE gradients, calling the L1
+# Pallas kernels on the forward path.
+#
+# Gradient strategy (matches brevitas semantics):
+#   * the elementwise quantizer core  q(x) = clip(rnd(x/s), lo, hi) * s  is a
+#     custom_vjp primitive `qcore`: forward runs the Pallas affine kernel,
+#     backward implements the clipped straight-through estimator (STE [3])
+#     plus the LSQ-style scale gradient
+#        dq/dx = 1{lo <= rnd(x/s) <= hi}
+#        dq/ds = q_int - 1{in range} * x/s
+#   * everything around the core (the A2Q weight-normalization reparam
+#     w = 2^min(T,t) * v / ||v||_1, the 2^d scale, the regularizer) is plain
+#     jnp and differentiates natively.
+#   * the Pallas tiled matmul also gets a custom_vjp (dx = g W, dW = g^T x)
+#     because pallas_call has no autodiff rule.
+#
+# Bit widths (M, N, P) are *runtime scalars* threaded through every layer so a
+# single AOT artifact serves the entire (M, N, P) grid search from Rust.
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.affine import affine_quantize
+from .kernels.a2q import a2q_quantize
+from .kernels.intmm import int_matmul
+
+LN2 = 0.6931471805599453
+
+
+# ---------------------------------------------------------------------------
+# qcore: elementwise quantizer with STE backward
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def qcore(x, s, bits, signed, rtz):
+    """clip(rnd(x / s), n(bits, signed), p(bits, signed)) * s.
+
+    x: [R, C]; s: [R, 1] or [1, 1] (pre-broadcast by callers); bits/signed/rtz
+    are f32 scalars (runtime). Returns (dequantized, integer_codes).
+    """
+    q, qi = affine_quantize(x, jnp.broadcast_to(s, (x.shape[0], 1)), bits, signed, rtz)
+    return q, qi
+
+
+def _qcore_fwd(x, s, bits, signed, rtz):
+    out = qcore(x, s, bits, signed, rtz)
+    return out, (x, s, bits, signed, out[1])
+
+
+def _qcore_bwd(res, cts):
+    x, s, bits, signed, qi = res
+    g, _ = cts  # no gradient flows through the integer codes
+    lo = jnp.where(signed > 0.5, -(2.0 ** (bits - 1.0)), 0.0)
+    hi = jnp.where(signed > 0.5, 2.0 ** (bits - 1.0) - 1.0, 2.0**bits - 1.0)
+    u = x / s
+    in_range = jnp.asarray((u >= lo) & (u <= hi), jnp.float32)
+    gx = g * in_range
+    # dq/ds = qi - 1{in} * u   (for clipped elements dq/ds = lo or hi = qi).
+    gs_elem = g * (qi - in_range * u)
+    gs = jnp.sum(gs_elem, axis=-1, keepdims=True)
+    if s.shape[0] == 1:
+        gs = jnp.sum(gs, axis=0, keepdims=True)
+    return gx, gs, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())
+
+
+qcore.defvjp(_qcore_fwd, _qcore_bwd)
+
+
+# ---------------------------------------------------------------------------
+# matmul with VJP around the Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def qmatmul(x, w):
+    """y[b, c] = sum_k x[b, k] w[c, k] via the Pallas MXU-tiled kernel."""
+    return int_matmul(x, w)
+
+
+def _qmm_fwd(x, w):
+    return int_matmul(x, w), (x, w)
+
+
+def _qmm_bwd(res, g):
+    x, w = res
+    return int_matmul(g, w.T), int_matmul(g.T, x.T)
+
+
+qmatmul.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# weight quantizers
+# ---------------------------------------------------------------------------
+
+
+def a2q_weight(v, d, t, m_bits, n_bits, p_bits, x_signed):
+    """A2Q weight quantizer (paper Eq. 20-23) with training gradients.
+
+    v [C, K], d [C, 1], t [C, 1]. Returns (w_q [C, K], reg) where
+    reg = sum_i max(t_i - T_i, 0), the penalty of paper Sec. 4.1 that keeps t
+    from drifting above its accumulator cap T.
+    """
+    s = 2.0**d
+    cap = x_signed + jnp.log2(2.0 ** (p_bits - 1.0) - 1.0) + d - n_bits
+    g = 2.0 ** jnp.minimum(cap, t)
+    l1 = jnp.sum(jnp.abs(v), axis=-1, keepdims=True)
+    w_cont = g * v / jnp.where(l1 == 0.0, 1.0, l1)
+    w_q, _ = qcore(w_cont, s, m_bits, jnp.float32(1.0), jnp.float32(1.0))
+    reg = jnp.sum(jnp.maximum(t - cap, 0.0))
+    return w_q, reg
+
+
+def qat_weight(v, d, m_bits):
+    """Baseline-QAT weight quantizer: per-channel symmetric affine, half-even."""
+    s = 2.0**d
+    w_q, _ = qcore(v, s, m_bits, jnp.float32(1.0), jnp.float32(0.0))
+    return w_q, jnp.zeros(())
+
+
+def quantize_weight(alg, v, d, t, m_bits, n_bits, p_bits, x_signed):
+    """Dispatch on the (static) algorithm: 'a2q' | 'qat' | 'float'."""
+    if alg == "a2q":
+        return a2q_weight(v, d, t, m_bits, n_bits, p_bits, x_signed)
+    if alg == "qat":
+        return qat_weight(v, d, m_bits)
+    if alg == "float":
+        return v, jnp.zeros(())
+    raise ValueError(f"unknown alg {alg!r}")
+
+
+def export_weight(alg, v, d, t, m_bits, n_bits, p_bits, x_signed):
+    """Integer codes + scale for deployment (Rust accsim / FINN estimator).
+
+    Runs the *full-pipeline* Pallas kernel (a2q_quantize) so the export path
+    exercises the fused kernel, not the training decomposition.
+    """
+    if alg == "a2q":
+        _, w_int, s = a2q_quantize(v, d, t, m_bits, n_bits, p_bits, x_signed)
+        return w_int, s
+    if alg in ("qat", "float"):
+        s = 2.0**d
+        _, w_int = affine_quantize(v, s, m_bits, 1.0, False)
+        return w_int, jnp.broadcast_to(s, (v.shape[0], 1))
+    raise ValueError(f"unknown alg {alg!r}")
+
+
+# ---------------------------------------------------------------------------
+# activation quantizer
+# ---------------------------------------------------------------------------
+
+
+def quant_act(alg, x, d_act, n_bits, signed):
+    """Per-tensor activation quantizer (standard QAT; used by both algorithms,
+    paper Sec. 4.1 end). x may be 2D [B, F] or 4D [B, H, W, C]."""
+    if alg == "float":
+        return x
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
+    s = (2.0**d_act).reshape(1, 1)
+    q, _ = qcore(x2, s, n_bits, jnp.asarray(signed, jnp.float32), jnp.float32(0.0))
+    return q.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, k_in, c_out, scale=1.0):
+    """Parameters for a quantized dense layer: v [C, K], d/t [C, 1], b [C]."""
+    v = jax.random.normal(key, (c_out, k_in)) * (scale / jnp.sqrt(k_in))
+    return _with_qparams(v, c_out)
+
+
+def init_conv(key, kh, kw, c_in, c_out, groups=1):
+    """Parameters for a conv layer stored flat as v [C_out, K=kh*kw*(c_in/groups)]."""
+    k = kh * kw * (c_in // groups)
+    v = jax.random.normal(key, (c_out, k)) * jnp.sqrt(2.0 / k)
+    p = _with_qparams(v, c_out)
+    return p
+
+
+def _with_qparams(v, c_out):
+    max_abs = jnp.maximum(jnp.max(jnp.abs(v), axis=-1, keepdims=True), 1e-8)
+    d = jnp.log2(max_abs / 127.0)  # init as if M = 8
+    t = jnp.log2(jnp.maximum(jnp.sum(jnp.abs(v), axis=-1, keepdims=True), 1e-8))
+    return {"v": v, "d": d, "t": t, "b": jnp.zeros((c_out,))}
+
+
+def init_act(init_scale_log2=-5.0):
+    """Per-tensor activation quantizer parameter (log2 scale)."""
+    return {"d": jnp.full((1, 1), init_scale_log2)}
+
+
+def dense(alg, p, x, m_bits, n_bits, p_bits, x_signed):
+    """Quantized dense layer over pre-quantized input x [B, K]."""
+    w_q, reg = quantize_weight(alg, p["v"], p["d"], p["t"], m_bits, n_bits, p_bits, x_signed)
+    y = qmatmul(x, w_q) + p["b"][None, :]
+    return y, reg
+
+
+def conv2d(alg, p, x, m_bits, n_bits, p_bits, x_signed, kh, kw, c_in, c_out, stride=1, groups=1):
+    """Quantized conv layer; weights live flat as [C_out, K] for the per-channel
+    quantizers (each output channel's accumulator sees K = kh*kw*(c_in/groups)
+    MACs -- the granularity of paper Eq. 15), reshaped to HWIO for lax.conv."""
+    w_q, reg = quantize_weight(alg, p["v"], p["d"], p["t"], m_bits, n_bits, p_bits, x_signed)
+    w = w_q.reshape(c_out, kh, kw, c_in // groups).transpose(1, 2, 3, 0)
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + p["b"][None, None, None, :], reg
+
+
+def nn_upsample(x, r):
+    """Nearest-neighbor resize by integer factor r (NNRC upsampling, paper B.2)."""
+    x = jnp.repeat(x, r, axis=1)
+    return jnp.repeat(x, r, axis=2)
+
+
+def avg_pool_global(x):
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,196 @@
+# L2 top level: losses, optimizers, and the build-time graph constructors
+# (init / train_step / infer / export) that aot.py lowers to HLO artifacts.
+#
+# Everything here is *positional-flat* at the artifact boundary: the Rust
+# runtime carries training state as an opaque ordered list of f32 tensors and
+# the manifest (aot.py) records the (path, shape) layout. The algorithm
+# ('a2q' | 'qat' | 'float') and model topology are static per artifact; the
+# (M, N, P) bit widths, learning rate and PRNG seed are runtime inputs.
+
+import jax
+import jax.numpy as jnp
+
+from .models import REGISTRY  # noqa: F401  (re-exported for aot/tests)
+from . import layers
+
+REG_LAMBDA = 1e-3  # paper B: lambda for L_reg = sum_l sum_i max(t_i - T_i, 0)
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def task_loss(spec, out, y):
+    """Cross-entropy for classifiers (y: f32 labels), MSE for SR (y: image)."""
+    if spec.task == "classify":
+        labels = y.astype(jnp.int32)
+        logz = jax.nn.logsumexp(out, axis=-1)
+        picked = jnp.take_along_axis(out, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - picked)
+    return jnp.mean((out - y) ** 2)
+
+
+def total_loss(spec, alg, params, x, y, bits):
+    out, reg = spec.apply(alg, params, x, bits, train=True)
+    return task_loss(spec, out, y) + REG_LAMBDA * reg
+
+
+# ---------------------------------------------------------------------------
+# optimizers (decoupled so the Rust coordinator only supplies lr per step;
+# schedules live in Rust)
+# ---------------------------------------------------------------------------
+
+
+def _is_weight(path):
+    """Weight decay applies to direction vectors v only, not scales/biases."""
+    return path and getattr(path[-1], "key", None) == "v"
+
+
+def _tree_wd(params, grads, wd):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, g, p: g + wd * p if _is_weight(path) else g, grads, params
+    )
+
+
+def sgd_step(spec, params, mom, grads, lr):
+    grads = _tree_wd(params, grads, spec.weight_decay)
+    mom = jax.tree.map(lambda m, g: spec.momentum * m + g, mom, grads)
+    params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+    return params, mom
+
+
+def adam_step(spec, params, m, v, step, grads, lr):
+    grads = _tree_wd(params, grads, spec.weight_decay)
+    m = jax.tree.map(lambda a, g: ADAM_B1 * a + (1 - ADAM_B1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: ADAM_B2 * a + (1 - ADAM_B2) * g * g, v, grads)
+    bc1 = 1.0 - ADAM_B1**step
+    bc2 = 1.0 - ADAM_B2**step
+    params = jax.tree.map(
+        lambda p, a, b: p - lr * (a / bc1) / (jnp.sqrt(b / bc2) + ADAM_EPS),
+        params,
+        m,
+        v,
+    )
+    return params, m, v
+
+
+# ---------------------------------------------------------------------------
+# state flattening
+# ---------------------------------------------------------------------------
+
+
+def init_state(spec, key):
+    """(params, opt...) pytree for the model's optimizer, plus a step counter."""
+    params = spec.init(key)
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    if spec.optimizer == "sgd":
+        return {"params": params, "mom": zeros(), "step": jnp.zeros(())}
+    return {"params": params, "m": zeros(), "v": zeros(), "step": jnp.zeros(())}
+
+
+def state_paths(state):
+    """Stable (path, shape) layout of the flattened state for the manifest."""
+    leaves = jax.tree_util.tree_leaves_with_path(state)
+    return [
+        ("/".join(str(getattr(k, "key", k)) for k in path), list(leaf.shape))
+        for path, leaf in leaves
+    ]
+
+
+def flatten(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+def unflatten_like(tree, leaves):
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(tree), leaves)
+
+
+# ---------------------------------------------------------------------------
+# graph constructors (one positional-flat callable per artifact)
+# ---------------------------------------------------------------------------
+
+
+def make_init(spec):
+    """seed f32[] -> flat initial training state."""
+
+    def fn(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+        return tuple(flatten(init_state(spec, key)))
+
+    return fn
+
+
+def make_train_step(spec, alg):
+    """(*state, x, y, bits f32[3], lr f32[]) -> (*state', loss)."""
+    template = init_state(spec, jax.random.PRNGKey(0))
+    n_leaves = len(flatten(template))
+
+    def fn(*args):
+        state_leaves = args[:n_leaves]
+        x, y, bits, lr = args[n_leaves:]
+        state = unflatten_like(template, list(state_leaves))
+        params = state["params"]
+        bits3 = (bits[0], bits[1], bits[2])
+        loss, grads = jax.value_and_grad(total_loss, argnums=2)(
+            spec, alg, params, x, y, bits3
+        )
+        step = state["step"] + 1.0
+        if spec.optimizer == "sgd":
+            params, mom = sgd_step(spec, params, state["mom"], grads, lr)
+            new_state = {"params": params, "mom": mom, "step": step}
+        else:
+            params, m, v = adam_step(spec, params, state["m"], state["v"], step, grads, lr)
+            new_state = {"params": params, "m": m, "v": v, "step": step}
+        return tuple(flatten(new_state)) + (loss,)
+
+    return fn, n_leaves, template
+
+
+def make_infer(spec, alg):
+    """(*params, x, bits f32[3]) -> model output (logits or SR image)."""
+    p_template = spec.init(jax.random.PRNGKey(0))
+    n_leaves = len(flatten(p_template))
+
+    def fn(*args):
+        param_leaves = args[:n_leaves]
+        x, bits = args[n_leaves:]
+        params = unflatten_like(p_template, list(param_leaves))
+        out, _ = spec.apply(alg, params, x, (bits[0], bits[1], bits[2]), train=False)
+        return (out,)
+
+    return fn, n_leaves, p_template
+
+
+def make_export(spec, alg):
+    """(*params, bits f32[3]) -> per-qlayer (w_int [C,K], s [C,1], b [C]).
+
+    This is the deployment boundary: integer codes + scales feed the Rust
+    accsim (bit-exact overflow checks) and the FINN estimator (weight /
+    threshold storage). Runs the fused Pallas export kernel
+    (layers.export_weight).
+    """
+    from .models.common import pick
+
+    p_template = spec.init(jax.random.PRNGKey(0))
+    n_leaves = len(flatten(p_template))
+
+    def fn(*args):
+        param_leaves = args[:n_leaves]
+        (bits,) = args[n_leaves:]
+        params = unflatten_like(p_template, list(param_leaves))
+        bits3 = (bits[0], bits[1], bits[2])
+        outs = []
+        for q in spec.qlayers:
+            lp = params[q.name]
+            m = pick(bits3, q.m_bits)
+            n = pick(bits3, q.n_bits)
+            p = pick(bits3, q.p_bits)
+            w_int, s = layers.export_weight(
+                alg, lp["v"], lp["d"], lp["t"], m, n, p, 1.0 if q.x_signed else 0.0
+            )
+            outs += [w_int, s, lp["b"]]
+        return tuple(outs)
+
+    return fn, n_leaves, p_template

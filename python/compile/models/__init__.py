@@ -1,0 +1,10 @@
+# Model zoo registry: the paper's four benchmark topologies (paper Sec. 5.1)
+# plus the 1-layer binary-MNIST model of the motivating example (Fig. 2).
+
+from . import cnn, espcn, mlp, resnet, unet
+
+REGISTRY = {
+    s.name: s for s in (mlp.SPEC, cnn.SPEC, resnet.SPEC, espcn.SPEC, unet.SPEC)
+}
+
+__all__ = ["REGISTRY"]

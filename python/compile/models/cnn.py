@@ -1,0 +1,88 @@
+# MobileNetV1-style depthwise-separable CNN for synthetic CIFAR (paper B.1,
+# width/depth-reduced for the 16x16 synthetic substrate -- see DESIGN.md
+# substitution table). First/last layers are fixed at 8-bit weights and
+# activations with unconstrained (32-bit) accumulators, as in the paper;
+# every hidden layer uses the runtime (M, N, P) triple.
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+from .common import ModelSpec, QLayer, pick
+
+H = W = 16
+C_IN = 3
+WIDTHS = (32, 64, 128, 128)
+N_CLASSES = 10
+
+
+def init(key):
+    ks = jax.random.split(key, 9)
+    w0, w1, w2, w3 = WIDTHS
+    return {
+        "stem": layers.init_conv(ks[0], 3, 3, C_IN, w0),
+        "dw1": layers.init_conv(ks[1], 3, 3, w0, w0, groups=w0),
+        "pw1": layers.init_conv(ks[2], 1, 1, w0, w1),
+        "dw2": layers.init_conv(ks[3], 3, 3, w1, w1, groups=w1),
+        "pw2": layers.init_conv(ks[4], 1, 1, w1, w2),
+        "dw3": layers.init_conv(ks[5], 3, 3, w2, w2, groups=w2),
+        "pw3": layers.init_conv(ks[6], 1, 1, w2, w3),
+        "head": layers.init_dense(ks[7], w3, N_CLASSES),
+        "aq": {f"a{i}": layers.init_act() for i in range(7)},
+    }
+
+
+def apply(alg, params, x, bits, train):
+    m, n, p = (pick(bits, s) for s in ("M", "N", "P"))
+    w0, w1, w2, w3 = WIDTHS
+    aq = params["aq"]
+    regs = []
+
+    def block(name, h, kh, cin, cout, stride, groups, mm, nn, pp, aq_bits, aq_key):
+        y, reg = layers.conv2d(
+            alg, params[name], h, mm, nn, pp, 0.0, kh, kh, cin, cout, stride, groups
+        )
+        regs.append(reg)
+        y = jax.nn.relu(y)
+        return layers.quant_act(alg, y, aq[aq_key]["d"], aq_bits, 0.0)
+
+    h = block("stem", x, 3, C_IN, w0, 1, 1, 8.0, 8.0, 32.0, n, "a0")
+    h = block("dw1", h, 3, w0, w0, 2, w0, m, n, p, n, "a1")
+    h = block("pw1", h, 1, w0, w1, 1, 1, m, n, p, n, "a2")
+    h = block("dw2", h, 3, w1, w1, 2, w1, m, n, p, n, "a3")
+    h = block("pw2", h, 1, w1, w2, 1, 1, m, n, p, n, "a4")
+    h = block("dw3", h, 3, w2, w2, 1, w2, m, n, p, n, "a5")
+    h = block("pw3", h, 1, w2, w3, 1, 1, m, n, p, 8.0, "a6")  # feeds 8-bit head
+    h = layers.avg_pool_global(h)
+    logits, reg = layers.dense(alg, params["head"], h, 8.0, 8.0, 32.0, 0.0)
+    regs.append(reg)
+    return logits, sum(regs)
+
+
+def _q(name, kind, cout, k, m, n, p, oh, ow, kh, cin, stride=1, groups=1):
+    return QLayer(name, kind, cout, k, m, n, p, False, oh, ow, kh, kh, cin, stride, groups)
+
+
+w0, w1, w2, w3 = WIDTHS
+SPEC = ModelSpec(
+    name="cnn",
+    input_shape=(H, W, C_IN),
+    batch_size=64,
+    task="classify",
+    n_classes=N_CLASSES,
+    optimizer="sgd",
+    lr=5e-2,
+    weight_decay=1e-5,
+    init=init,
+    apply=apply,
+    qlayers=[
+        _q("stem", "conv", w0, 9 * C_IN, 8, 8, 32, 16, 16, 3, C_IN),
+        _q("dw1", "dwconv", w0, 9, "M", "N", "P", 8, 8, 3, w0, 2, w0),
+        _q("pw1", "conv", w1, w0, "M", "N", "P", 8, 8, 1, w0),
+        _q("dw2", "dwconv", w1, 9, "M", "N", "P", 4, 4, 3, w1, 2, w1),
+        _q("pw2", "conv", w2, w1, "M", "N", "P", 4, 4, 1, w1),
+        _q("dw3", "dwconv", w2, 9, "M", "N", "P", 4, 4, 3, w2, 1, w2),
+        _q("pw3", "conv", w3, w2, "M", "N", "P", 4, 4, 1, w2),
+        QLayer("head", "dense", N_CLASSES, w3, 8, 8, 32, False, c_in=w3),
+    ],
+)

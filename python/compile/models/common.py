@@ -1,0 +1,125 @@
+# Shared model-zoo plumbing: the ModelSpec contract every model module
+# implements, and the QLayer metadata that flows into the artifact manifest so
+# the Rust coordinator (FINN estimator, accsim, export) knows each layer's
+# geometry without re-deriving it from HLO.
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+
+@dataclass
+class QLayer:
+    """Metadata for one quantized layer (the unit paper Eq. 15 constrains).
+
+    Attributes:
+      name:     stable identifier, also the pytree key of its parameters.
+      kind:     'dense' | 'conv' | 'dwconv'
+      c_out:    output channels (== number of accumulators).
+      k:        dot-product length per accumulator (kh*kw*c_in/groups).
+      m_bits:   'M' for the runtime hidden-layer width, or a fixed int (8).
+      n_bits:   'N' for runtime, or fixed int (8 for data/head, 1 for bMNIST).
+      p_bits:   'P' for runtime accumulator target, or fixed int (32).
+      x_signed: whether this layer's *input* is signed (False after ReLU
+                quant / unsigned image data).
+      out_h/out_w: spatial size of the output feature map (1 for dense) --
+                used by the FINN estimator for stream folding.
+      kh/kw/c_in/stride/groups: conv geometry (dense: kh=kw=1, c_in=k).
+    """
+
+    name: str
+    kind: str
+    c_out: int
+    k: int
+    m_bits: object
+    n_bits: object
+    p_bits: object
+    x_signed: bool
+    out_h: int = 1
+    out_w: int = 1
+    kh: int = 1
+    kw: int = 1
+    c_in: int = 0
+    stride: int = 1
+    groups: int = 1
+
+    def manifest(self):
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "c_out": self.c_out,
+            "k": self.k,
+            "m_bits": self.m_bits if isinstance(self.m_bits, int) else str(self.m_bits),
+            "n_bits": self.n_bits if isinstance(self.n_bits, int) else str(self.n_bits),
+            "p_bits": self.p_bits if isinstance(self.p_bits, int) else str(self.p_bits),
+            "x_signed": self.x_signed,
+            "out_h": self.out_h,
+            "out_w": self.out_w,
+            "kh": self.kh,
+            "kw": self.kw,
+            "c_in": self.c_in,
+            "stride": self.stride,
+            "groups": self.groups,
+        }
+
+
+@dataclass
+class ModelSpec:
+    """Contract between the model zoo, aot.py and the Rust coordinator.
+
+    apply(alg, params, x, bits, train) -> (output, reg) where bits is the
+    (M, N, P) runtime scalar triple and alg in {'a2q', 'qat', 'float'} is a
+    *static* structural choice (one artifact per (model, alg)).
+    """
+
+    name: str
+    input_shape: Tuple[int, ...]  # per-sample, NHWC (or flat for mlp)
+    batch_size: int
+    task: str  # 'classify' | 'sr'
+    n_classes: int = 0
+    sr_factor: int = 0
+    optimizer: str = "sgd"  # 'sgd' | 'adam'
+    lr: float = 1e-2
+    weight_decay: float = 1e-5
+    momentum: float = 0.9
+    init: Callable = None
+    apply: Callable = None
+    qlayers: List[QLayer] = field(default_factory=list)
+
+    @property
+    def target_shape(self):
+        if self.task == "classify":
+            return ()
+        h, w, _ = self.input_shape
+        return (h * self.sr_factor, w * self.sr_factor, 1)
+
+    def largest_k(self):
+        """K* = argmax_l K_l: the layer that sets the model's data-type bound
+        on the accumulator (paper Sec. 5.1)."""
+        return max(q.k for q in self.qlayers)
+
+    def manifest(self):
+        return {
+            "name": self.name,
+            "input_shape": list(self.input_shape),
+            "batch_size": self.batch_size,
+            "task": self.task,
+            "n_classes": self.n_classes,
+            "sr_factor": self.sr_factor,
+            "optimizer": self.optimizer,
+            "lr": self.lr,
+            "weight_decay": self.weight_decay,
+            "largest_k": self.largest_k(),
+            "qlayers": [q.manifest() for q in self.qlayers],
+        }
+
+
+def pick(bits, spec_val):
+    """Resolve a QLayer bit-width spec against the runtime (M, N, P) triple."""
+    m, n, p = bits
+    if spec_val == "M":
+        return m
+    if spec_val == "N":
+        return n
+    if spec_val == "P":
+        return p
+    return float(spec_val)

@@ -1,0 +1,68 @@
+# ESPCN-style single-image super-resolution network (paper B.2): the
+# sub-pixel convolution is replaced by a nearest-neighbor resize convolution
+# (NNRC), exactly as the paper does for hardware friendliness. 3x upscaling
+# of grayscale synthetic-BSD patches.
+
+import jax
+
+from .. import layers
+from .common import ModelSpec, QLayer, pick
+
+H = W = 16
+FACTOR = 3
+W0, W1 = 32, 32
+
+
+def init(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "c1": layers.init_conv(ks[0], 5, 5, 1, W0),
+        "c2": layers.init_conv(ks[1], 3, 3, W0, W1),
+        "c3": layers.init_conv(ks[2], 3, 3, W1, W1),
+        "out": layers.init_conv(ks[3], 3, 3, W1, 1),
+        "aq": {f"a{i}": layers.init_act() for i in range(3)} | {"out": layers.init_act(-8.0)},
+    }
+
+
+def apply(alg, params, x, bits, train):
+    m, n, p = (pick(bits, s) for s in ("M", "N", "P"))
+    aq = params["aq"]
+    regs = []
+
+    def conv(name, h, kh, cin, cout, mm, nn, pp):
+        y, reg = layers.conv2d(alg, params[name], h, mm, nn, pp, 0.0, kh, kh, cin, cout, 1)
+        regs.append(reg)
+        return y
+
+    def act(h, key, bitsv):
+        return layers.quant_act(alg, jax.nn.relu(h), aq[key]["d"], bitsv, 0.0)
+
+    h = act(conv("c1", x, 5, 1, W0, 8.0, 8.0, 32.0), "a0", n)
+    h = act(conv("c2", h, 3, W0, W1, m, n, p), "a1", n)
+    h = act(conv("c3", h, 3, W1, W1, m, n, p), "a2", 8.0)  # feeds 8-bit output layer
+    h = layers.nn_upsample(h, FACTOR)
+    y = conv("out", h, 3, W1, 1, 8.0, 8.0, 32.0)
+    # Output layer carries 8-bit unsigned activations (paper fixes the output
+    # layer to 8-bit weights *and* activations).
+    y = layers.quant_act(alg, y, aq["out"]["d"], 8.0, 0.0)
+    return y, sum(regs)
+
+
+SPEC = ModelSpec(
+    name="espcn",
+    input_shape=(H, W, 1),
+    batch_size=16,
+    task="sr",
+    sr_factor=FACTOR,
+    optimizer="adam",
+    lr=1e-3,
+    weight_decay=1e-4,
+    init=init,
+    apply=apply,
+    qlayers=[
+        QLayer("c1", "conv", W0, 25, 8, 8, 32, False, 16, 16, 5, 5, 1),
+        QLayer("c2", "conv", W1, 9 * W0, "M", "N", "P", False, 16, 16, 3, 3, W0),
+        QLayer("c3", "conv", W1, 9 * W1, "M", "N", "P", False, 16, 16, 3, 3, W1),
+        QLayer("out", "conv", 1, 9 * W1, 8, 8, 32, False, 48, 48, 3, 3, W1),
+    ],
+)

@@ -1,0 +1,42 @@
+# The paper's motivating model (Fig. 2 / Appendix A): a 1-layer linear QNN
+# classifying binary MNIST. Inputs are 784-dimensional 1-bit unsigned vectors
+# (N = 1), weights are 8-bit (M = 8), and the accumulator target P is the
+# runtime variable under study: the data-type bound (Eq. 8) gives P = 19 at
+# K = 784, and Fig. 2 sweeps P below it.
+
+import jax
+
+from .. import layers
+from .common import ModelSpec, QLayer, pick
+
+K_IN = 784
+N_CLASSES = 2
+
+
+def init(key):
+    return {"fc": layers.init_dense(key, K_IN, N_CLASSES)}
+
+
+def apply(alg, params, x, bits, train):
+    # x is exactly representable in 1 bit ({0, 1}); no input quantizer needed.
+    _, _, p_bits = bits
+    p = pick(bits, "P")
+    logits, reg = layers.dense(alg, params["fc"], x, 8.0, 1.0, p, 0.0)
+    return logits, reg
+
+
+SPEC = ModelSpec(
+    name="mlp",
+    input_shape=(K_IN,),
+    batch_size=128,
+    task="classify",
+    n_classes=N_CLASSES,
+    optimizer="sgd",
+    lr=1e-2,
+    weight_decay=1e-5,
+    init=init,
+    apply=apply,
+    qlayers=[
+        QLayer("fc", "dense", N_CLASSES, K_IN, 8, 1, "P", False, c_in=K_IN),
+    ],
+)

@@ -1,0 +1,86 @@
+# ResNet18-style residual CNN for synthetic CIFAR (paper B.1): 3x3 stem with
+# stride/padding 1, no max pool, and *convolutional* shortcuts (the paper
+# found conv shortcuts superior to identity for quantized residual blocks).
+# Depth/width-reduced to two residual stages for the 16x16 substrate.
+
+import jax
+
+from .. import layers
+from .common import ModelSpec, QLayer, pick
+
+H = W = 16
+C_IN = 3
+W0, W1, W2 = 32, 64, 128
+N_CLASSES = 10
+
+
+def init(key):
+    ks = jax.random.split(key, 9)
+    return {
+        "stem": layers.init_conv(ks[0], 3, 3, C_IN, W0),
+        "b1c1": layers.init_conv(ks[1], 3, 3, W0, W1),
+        "b1c2": layers.init_conv(ks[2], 3, 3, W1, W1),
+        "b1sc": layers.init_conv(ks[3], 1, 1, W0, W1),
+        "b2c1": layers.init_conv(ks[4], 3, 3, W1, W2),
+        "b2c2": layers.init_conv(ks[5], 3, 3, W2, W2),
+        "b2sc": layers.init_conv(ks[6], 1, 1, W1, W2),
+        "head": layers.init_dense(ks[7], W2, N_CLASSES),
+        "aq": {f"a{i}": layers.init_act() for i in range(6)},
+    }
+
+
+def apply(alg, params, x, bits, train):
+    m, n, p = (pick(bits, s) for s in ("M", "N", "P"))
+    aq = params["aq"]
+    regs = []
+
+    def conv(name, h, kh, cin, cout, stride, mm, nn, pp):
+        y, reg = layers.conv2d(alg, params[name], h, mm, nn, pp, 0.0, kh, kh, cin, cout, stride)
+        regs.append(reg)
+        return y
+
+    def act(h, key, bitsv):
+        return layers.quant_act(alg, jax.nn.relu(h), aq[key]["d"], bitsv, 0.0)
+
+    h = act(conv("stem", x, 3, C_IN, W0, 1, 8.0, 8.0, 32.0), "a0", n)
+
+    # residual stage 1: W0 -> W1, stride 2, conv shortcut
+    y = act(conv("b1c1", h, 3, W0, W1, 2, m, n, p), "a1", n)
+    y = conv("b1c2", y, 3, W1, W1, 1, m, n, p)
+    sc = conv("b1sc", h, 1, W0, W1, 2, m, n, p)
+    h = act(y + sc, "a2", n)
+
+    # residual stage 2: W1 -> W2, stride 2, conv shortcut
+    y = act(conv("b2c1", h, 3, W1, W2, 2, m, n, p), "a3", n)
+    y = conv("b2c2", y, 3, W2, W2, 1, m, n, p)
+    sc = conv("b2sc", h, 1, W1, W2, 2, m, n, p)
+    h = act(y + sc, "a4", 8.0)  # feeds the 8-bit head
+
+    h = layers.avg_pool_global(h)
+    logits, reg = layers.dense(alg, params["head"], h, 8.0, 8.0, 32.0, 0.0)
+    regs.append(reg)
+    return logits, sum(regs)
+
+
+SPEC = ModelSpec(
+    name="resnet",
+    input_shape=(H, W, C_IN),
+    batch_size=64,
+    task="classify",
+    n_classes=N_CLASSES,
+    optimizer="sgd",
+    lr=5e-2,
+    weight_decay=1e-5,
+    init=init,
+    apply=apply,
+    qlayers=[
+        QLayer("stem", "conv", W0, 9 * C_IN, 8, 8, 32, False, 16, 16, 3, 3, C_IN),
+        QLayer("b1c1", "conv", W1, 9 * W0, "M", "N", "P", False, 8, 8, 3, 3, W0, 2),
+        QLayer("b1c2", "conv", W1, 9 * W1, "M", "N", "P", False, 8, 8, 3, 3, W1),
+        QLayer("b1sc", "conv", W1, W0, "M", "N", "P", False, 8, 8, 1, 1, W0, 2),
+        QLayer("b2c1", "conv", W2, 9 * W1, "M", "N", "P", False, 4, 4, 3, 3, W1, 2),
+        QLayer("b2c2", "conv", W2, 9 * W2, "M", "N", "P", False, 4, 4, 3, 3, W2),
+        QLayer("b2sc", "conv", W2, W1, "M", "N", "P", False, 4, 4, 1, 1, W1, 2),
+        QLayer("head", "dense", N_CLASSES, W2, 8, 8, 32, False, c_in=W2),
+    ],
+)

@@ -1,0 +1,74 @@
+# UNet-style super-resolution network (paper B.2, shrunk): encoder/decoder
+# with additive skip connections (the paper replaces concatenations with
+# additions), transposed convolutions replaced by NNRCs, and a final NNRC 3x
+# stage for upscaling. Grayscale synthetic-BSD patches.
+
+import jax
+
+from .. import layers
+from .common import ModelSpec, QLayer, pick
+
+H = W = 16
+FACTOR = 3
+W0, W1 = 16, 32
+
+
+def init(key):
+    ks = jax.random.split(key, 7)
+    return {
+        "enc1": layers.init_conv(ks[0], 3, 3, 1, W0),
+        "down": layers.init_conv(ks[1], 3, 3, W0, W1),
+        "bott": layers.init_conv(ks[2], 3, 3, W1, W1),
+        "up": layers.init_conv(ks[3], 3, 3, W1, W0),
+        "dec1": layers.init_conv(ks[4], 3, 3, W0, W0),
+        "out": layers.init_conv(ks[5], 3, 3, W0, 1),
+        "aq": {f"a{i}": layers.init_act() for i in range(5)} | {"out": layers.init_act(-8.0)},
+    }
+
+
+def apply(alg, params, x, bits, train):
+    m, n, p = (pick(bits, s) for s in ("M", "N", "P"))
+    aq = params["aq"]
+    regs = []
+
+    def conv(name, h, cin, cout, stride, mm, nn, pp):
+        y, reg = layers.conv2d(alg, params[name], h, mm, nn, pp, 0.0, 3, 3, cin, cout, stride)
+        regs.append(reg)
+        return y
+
+    def act(h, key, bitsv):
+        return layers.quant_act(alg, jax.nn.relu(h), aq[key]["d"], bitsv, 0.0)
+
+    e1 = act(conv("enc1", x, 1, W0, 1, 8.0, 8.0, 32.0), "a0", n)  # 16x16xW0
+    h = act(conv("down", e1, W0, W1, 2, m, n, p), "a1", n)  # 8x8xW1
+    h = act(conv("bott", h, W1, W1, 1, m, n, p), "a2", n)  # 8x8xW1
+    h = layers.nn_upsample(h, 2)  # 16x16xW1
+    h = act(conv("up", h, W1, W0, 1, m, n, p), "a3", n)  # 16x16xW0
+    h = h + e1  # additive skip (paper B.2)
+    h = act(conv("dec1", h, W0, W0, 1, m, n, p), "a4", 8.0)  # feeds 8-bit out
+    h = layers.nn_upsample(h, FACTOR)  # 48x48xW0
+    y = conv("out", h, W0, 1, 1, 8.0, 8.0, 32.0)
+    y = layers.quant_act(alg, y, aq["out"]["d"], 8.0, 0.0)
+    return y, sum(regs)
+
+
+SPEC = ModelSpec(
+    name="unet",
+    input_shape=(H, W, 1),
+    batch_size=16,
+    task="sr",
+    sr_factor=FACTOR,
+    optimizer="adam",
+    lr=1e-3,
+    weight_decay=1e-4,
+    init=init,
+    apply=apply,
+    qlayers=[
+        QLayer("enc1", "conv", W0, 9, 8, 8, 32, False, 16, 16, 3, 3, 1),
+        QLayer("down", "conv", W1, 9 * W0, "M", "N", "P", False, 8, 8, 3, 3, W0, 2),
+        QLayer("bott", "conv", W1, 9 * W1, "M", "N", "P", False, 8, 8, 3, 3, W1),
+        QLayer("up", "conv", W0, 9 * W1, "M", "N", "P", False, 16, 16, 3, 3, W1),
+        QLayer("dec1", "conv", W0, 9 * W0, "M", "N", "P", False, 16, 16, 3, 3, W0),
+        QLayer("out", "conv", 1, 9 * W0, 8, 8, 32, False, 48, 48, 3, 3, W0),
+    ],
+)

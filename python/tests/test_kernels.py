@@ -1,0 +1,192 @@
+# Kernel-vs-oracle correctness: the CORE L1 signal. Hypothesis sweeps shapes
+# and bit widths; every Pallas kernel must match its pure-jnp reference in
+# ref.py exactly (fp32 bit-for-bit for the quantizers, tight allclose for the
+# MXU-tiled matmul).
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.a2q import a2q_quantize
+from compile.kernels.affine import affine_quantize
+from compile.kernels.intmm import int_matmul
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rng_array(seed, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# affine quantizer
+# ---------------------------------------------------------------------------
+
+
+@given(
+    r=st.integers(1, 40),
+    c=st.integers(1, 70),
+    bits=st.integers(2, 8),
+    signed=st.booleans(),
+    rtz=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_affine_matches_ref(r, c, bits, signed, rtz, seed):
+    x = rng_array(seed, (r, c), scale=3.0)
+    s = 0.05 + (seed % 7) * 0.01
+    q, qi = affine_quantize(x, s, float(bits), signed, rtz)
+    if rtz:
+        rq, ri = ref.ref_rtz_quantize(x, s, float(bits), signed)
+    else:
+        rq, ri = ref.ref_affine_quantize(x, s, float(bits), signed)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(rq))
+    np.testing.assert_array_equal(np.asarray(qi), np.asarray(ri))
+
+
+@given(bits=st.integers(2, 8), signed=st.booleans(), seed=st.integers(0, 100))
+def test_affine_codes_in_range(bits, signed, seed):
+    x = rng_array(seed, (16, 16), scale=10.0)
+    _, qi = affine_quantize(x, 0.03, float(bits), signed)
+    lo = -(2 ** (bits - 1)) if signed else 0
+    hi = 2 ** (bits - 1) - 1 if signed else 2**bits - 1
+    assert qi.min() >= lo and qi.max() <= hi
+
+
+def test_affine_per_channel_scale():
+    x = rng_array(3, (8, 32))
+    s = jnp.linspace(0.01, 0.2, 8).reshape(8, 1)
+    q, _ = affine_quantize(x, s, 8.0, True)
+    rq, _ = ref.ref_affine_quantize(x, s, 8.0, True)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(rq))
+
+
+def test_rtz_is_trunc_not_floor():
+    x = jnp.array([[-1.5, -0.7, 0.7, 1.5]])
+    _, qi = affine_quantize(x, 1.0, 8.0, True, rtz=True)
+    np.testing.assert_array_equal(np.asarray(qi)[0], [-1.0, 0.0, 0.0, 1.0])
+
+
+def test_zero_preserved():
+    """z = 0 mapping: zero is exactly representable (paper Sec. 2.1)."""
+    x = jnp.zeros((4, 4))
+    q, qi = affine_quantize(x, 0.1, 8.0, True)
+    assert float(jnp.abs(q).max()) == 0.0
+    assert float(jnp.abs(qi).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# A2Q quantizer
+# ---------------------------------------------------------------------------
+
+
+@given(
+    c=st.integers(1, 24),
+    k=st.integers(1, 200),
+    m=st.integers(3, 8),
+    n=st.integers(1, 8),
+    p=st.integers(8, 24),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_a2q_matches_ref(c, k, m, n, p, signed, seed):
+    v = rng_array(seed, (c, k))
+    d = jnp.full((c, 1), -4.0) + (seed % 5) * 0.3
+    t = jnp.full((c, 1), 2.0)
+    sig = 1.0 if signed else 0.0
+    out = a2q_quantize(v, d, t, float(m), float(n), float(p), sig)
+    refo = ref.ref_a2q_quantize(v, d, t, float(m), float(n), float(p), sig)
+    for a, b in zip(out, refo):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(
+    c=st.integers(1, 16),
+    k=st.integers(1, 300),
+    n=st.integers(1, 8),
+    p=st.integers(6, 24),
+    signed=st.booleans(),
+    t_off=st.floats(-2.0, 12.0),
+    seed=st.integers(0, 2**16),
+)
+def test_a2q_l1_constraint_always_holds(c, k, n, p, signed, t_off, seed):
+    """THE paper guarantee (Eq. 15): whatever v, d, t are, the integer codes
+    satisfy ||w_int||_1 <= (2^(P-1)-1) * 2^(1signed - N) per channel -- which
+    is exactly the no-overflow condition for any N-bit input stream."""
+    v = rng_array(seed, (c, k), scale=2.0)
+    d = jnp.full((c, 1), -5.0)
+    t = jnp.full((c, 1), float(t_off))  # even t far above its cap T
+    sig = 1.0 if signed else 0.0
+    _, w_int, _ = a2q_quantize(v, d, t, 8.0, float(n), float(p), sig)
+    cap = float(ref.ref_l1_cap(float(p), float(n), sig))
+    row_l1 = np.abs(np.asarray(w_int)).sum(axis=1)
+    assert (row_l1 <= cap + 1e-3).all(), (row_l1.max(), cap)
+
+
+def test_a2q_zero_row_is_safe():
+    v = jnp.zeros((3, 50))
+    d = jnp.full((3, 1), -4.0)
+    t = jnp.full((3, 1), 2.0)
+    wq, wi, s = a2q_quantize(v, d, t, 8.0, 4.0, 16.0, 0.0)
+    assert np.isfinite(np.asarray(wq)).all()
+    assert float(jnp.abs(wi).max()) == 0.0
+
+
+def test_a2q_norm_decreases_with_p():
+    """Tightening P must monotonically shrink the admissible l1 norm."""
+    v = rng_array(0, (4, 128))
+    d = jnp.full((4, 1), -6.0)
+    t = jnp.full((4, 1), 8.0)  # ask for a big norm; the cap must bind
+    norms = []
+    for p in (20.0, 16.0, 12.0, 10.0, 8.0):
+        _, wi, _ = a2q_quantize(v, d, t, 8.0, 8.0, p, 0.0)
+        norms.append(float(jnp.abs(wi).sum(-1).max()))
+    assert norms == sorted(norms, reverse=True)
+    assert norms[-1] < norms[0]
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 200),
+    k=st.integers(1, 300),
+    c=st.integers(1, 150),
+    seed=st.integers(0, 2**16),
+)
+def test_intmm_matches_ref(b, k, c, seed):
+    x = rng_array(seed, (b, k))
+    w = rng_array(seed + 1, (c, k))
+    got = int_matmul(x, w)
+    want = ref.ref_int_matmul(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@given(b=st.integers(1, 64), k=st.integers(1, 256), c=st.integers(1, 64), seed=st.integers(0, 99))
+def test_intmm_exact_on_integers(b, k, c, seed):
+    """Integer operands small enough that all partial sums fit in 24 bits must
+    be reproduced exactly (the fp32-accumulation argument from intmm.py)."""
+    kx = jax.random.PRNGKey(seed)
+    x = jnp.asarray(jax.random.randint(kx, (b, k), -15, 16), jnp.float32)
+    w = jnp.asarray(jax.random.randint(jax.random.PRNGKey(seed + 1), (c, k), -7, 8), jnp.float32)
+    got = int_matmul(x, w)
+    want = ref.ref_int_matmul(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_intmm_tile_edges():
+    """Shapes straddling the 128-tile boundary (127/128/129)."""
+    for b, k, c in [(127, 129, 128), (128, 128, 128), (129, 257, 1), (1, 1, 1)]:
+        x = rng_array(b, (b, k))
+        w = rng_array(c, (c, k))
+        np.testing.assert_allclose(
+            np.asarray(int_matmul(x, w)),
+            np.asarray(ref.ref_int_matmul(x, w)),
+            rtol=1e-5,
+            atol=1e-4,
+        )

@@ -1,0 +1,133 @@
+# STE/gradient semantics of the L2 layer library: the custom_vjp rules around
+# the Pallas kernels must implement the clipped straight-through estimator and
+# the LSQ-style scale gradient, and the A2Q reparameterization must be
+# trainable (non-zero, finite gradients into v, d and t).
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+
+
+def test_qcore_ste_passthrough_in_range():
+    """Inside the clip range, dq/dx = 1 (STE [3]: grad of rounding = 1)."""
+    x = jnp.array([[0.4, -0.3, 1.2]])
+    s = jnp.ones((1, 1)) * 0.5
+
+    def f(x):
+        q, _ = layers.qcore(x, s, jnp.float32(8.0), jnp.float32(1.0), jnp.float32(0.0))
+        return jnp.sum(q)
+
+    g = jax.grad(f)(x)
+    np.testing.assert_array_equal(np.asarray(g), np.ones_like(g))
+
+
+def test_qcore_ste_zero_outside_range():
+    """Clipped elements receive zero input gradient (clipped STE)."""
+    x = jnp.array([[100.0, -100.0, 0.1]])
+    s = jnp.ones((1, 1)) * 0.1  # 100/0.1 = 1000 >> 127
+
+    def f(x):
+        q, _ = layers.qcore(x, s, jnp.float32(8.0), jnp.float32(1.0), jnp.float32(0.0))
+        return jnp.sum(q)
+
+    g = np.asarray(jax.grad(f)(x))
+    assert g[0, 0] == 0.0 and g[0, 1] == 0.0 and g[0, 2] == 1.0
+
+
+def test_qcore_scale_gradient_clipped_elements():
+    """For saturated elements dq/ds = clip bound (the LSQ gradient)."""
+    x = jnp.array([[100.0]])
+    s = jnp.ones((1, 1)) * 0.1
+
+    def f(s):
+        q, _ = layers.qcore(x, s, jnp.float32(8.0), jnp.float32(1.0), jnp.float32(0.0))
+        return jnp.sum(q)
+
+    g = float(jax.grad(f)(s)[0, 0])
+    assert abs(g - 127.0) < 1e-5  # dq/ds = p = 127 for a saturated-positive elem
+
+
+def test_qmatmul_grads_match_dense_matmul():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 40))
+    w = jax.random.normal(jax.random.PRNGKey(1), (5, 40))
+
+    def f(x, w):
+        return jnp.sum(jnp.sin(layers.qmatmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(x @ w.T))
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-5, atol=1e-5)
+
+
+def test_a2q_weight_gradients_finite_and_nonzero():
+    key = jax.random.PRNGKey(2)
+    v = jax.random.normal(key, (6, 64))
+    d = jnp.full((6, 1), -4.0)
+    t = jnp.full((6, 1), 1.0)
+
+    def f(v, d, t):
+        w_q, reg = layers.a2q_weight(v, d, t, 6.0, 6.0, 16.0, 0.0)
+        return jnp.sum(w_q**2) + reg
+
+    gv, gd, gt = jax.grad(f, argnums=(0, 1, 2))(v, d, t)
+    for g in (gv, gd, gt):
+        assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(gv).max()) > 0.0
+    assert float(jnp.abs(gt).max()) > 0.0  # norm parameter is actually learned
+
+
+def test_a2q_regularizer_activates_above_cap():
+    """reg = sum max(t - T, 0): zero when t is far below T, positive above."""
+    v = jnp.ones((2, 16))
+    d = jnp.zeros((2, 1))
+    # T = 0 + log2(2^15 - 1) + 0 - 8 ~= 6.99  for P=16, N=8, unsigned
+    _, reg_lo = layers.a2q_weight(v, d, jnp.full((2, 1), -3.0), 8.0, 8.0, 16.0, 0.0)
+    _, reg_hi = layers.a2q_weight(v, d, jnp.full((2, 1), 10.0), 8.0, 8.0, 16.0, 0.0)
+    assert float(reg_lo) == 0.0
+    assert float(reg_hi) > 0.0
+
+
+def test_quant_act_shapes_4d():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 16))
+    d = jnp.full((1, 1), -5.0)
+    y = layers.quant_act("qat", x, d, 6.0, 0.0)
+    assert y.shape == x.shape
+    assert float(y.min()) >= 0.0  # unsigned domain
+
+
+def test_quant_act_float_passthrough():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 10))
+    y = layers.quant_act("float", x, jnp.zeros((1, 1)), 8.0, 0.0)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_export_weight_matches_training_quantizer():
+    """The fused export kernel and the training decomposition must agree on
+    the integer codes (same Eq. 20 pipeline, two implementations)."""
+    key = jax.random.PRNGKey(3)
+    v = jax.random.normal(key, (4, 32))
+    d = jnp.full((4, 1), -4.0)
+    t = jnp.full((4, 1), 0.5)
+    args = (v, d, t, 6.0, 4.0, 14.0, 0.0)
+    w_q_train, _ = layers.a2q_weight(*args)
+    w_int, s = layers.export_weight("a2q", *args)
+    np.testing.assert_allclose(
+        np.asarray(w_q_train), np.asarray(w_int * s), rtol=0, atol=1e-7
+    )
+
+
+def test_nn_upsample():
+    x = jnp.arange(4.0).reshape(1, 2, 2, 1)
+    y = layers.nn_upsample(x, 3)
+    assert y.shape == (1, 6, 6, 1)
+    assert float(y[0, 0, 0, 0]) == 0.0 and float(y[0, 5, 5, 0]) == 3.0
+    # every 3x3 cell is constant
+    np.testing.assert_array_equal(np.asarray(y[0, :3, :3, 0]), np.zeros((3, 3)))

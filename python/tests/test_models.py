@@ -1,0 +1,158 @@
+# Model-zoo contract tests: shapes, trainability (loss decreases over a few
+# steps for every (model, alg)), the overflow-impossibility invariant on
+# exported integer weights, and manifest consistency (QLayer metadata vs the
+# actual parameter tensors -- the Rust coordinator trusts this metadata).
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+from compile.models import REGISTRY
+from compile.models.common import pick
+
+BITS = jnp.array([6.0, 6.0, 16.0])
+
+
+def fake_batch(spec, key):
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(kx, (spec.batch_size, *spec.input_shape))
+    if spec.name == "mlp":
+        x = jnp.round(x)  # 1-bit binary inputs
+    else:
+        x = jnp.round(x * 255.0) / 255.0  # 8-bit image grid
+    if spec.task == "classify":
+        y = jnp.asarray(
+            jax.random.randint(ky, (spec.batch_size,), 0, spec.n_classes), jnp.float32
+        )
+    else:
+        y = jax.random.uniform(ky, (spec.batch_size, *spec.target_shape))
+    return x, y
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+@pytest.mark.parametrize("alg", ["a2q", "qat", "float"])
+def test_apply_shapes(name, alg):
+    spec = REGISTRY[name]
+    params = spec.init(jax.random.PRNGKey(0))
+    x, _ = fake_batch(spec, jax.random.PRNGKey(1))
+    out, reg = spec.apply(alg, params, x, tuple(BITS), train=True)
+    if spec.task == "classify":
+        assert out.shape == (spec.batch_size, spec.n_classes)
+    else:
+        assert out.shape == (spec.batch_size, *spec.target_shape)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(reg) >= 0.0
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+@pytest.mark.parametrize("alg", ["a2q", "qat"])
+def test_train_step_decreases_loss(name, alg):
+    spec = REGISTRY[name]
+    fn, n_leaves, template = M.make_train_step(spec, alg)
+    fn = jax.jit(fn)
+    state = M.flatten(M.init_state(spec, jax.random.PRNGKey(0)))
+    x, y = fake_batch(spec, jax.random.PRNGKey(1))
+    lr = jnp.asarray(spec.lr, jnp.float32)
+    losses = []
+    for _ in range(8):
+        out = fn(*state, x, y, BITS, lr)
+        state, loss = list(out[:-1]), float(out[-1])
+        losses.append(loss)
+        assert np.isfinite(loss)
+    # memorizing a single repeated batch must make progress
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_export_respects_l1_cap(name):
+    """Paper Eq. 15 on every layer of every model, straight from the export
+    graph the Rust side consumes."""
+    spec = REGISTRY[name]
+    # a short burst of training so d/t move off their init
+    fn, _, _ = M.make_train_step(spec, "a2q")
+    fn = jax.jit(fn)
+    state = M.flatten(M.init_state(spec, jax.random.PRNGKey(0)))
+    x, y = fake_batch(spec, jax.random.PRNGKey(1))
+    for _ in range(3):
+        out = fn(*state, x, y, BITS, jnp.asarray(spec.lr, jnp.float32))
+        state = list(out[:-1])
+    st = M.unflatten_like(M.init_state(spec, jax.random.PRNGKey(0)), state)
+    params = st["params"]
+
+    export_fn, _, _ = M.make_export(spec, "a2q")
+    outs = jax.jit(export_fn)(*M.flatten(params), BITS)
+    bits3 = tuple(float(b) for b in BITS)
+    for i, q in enumerate(spec.qlayers):
+        w_int = np.asarray(outs[3 * i])
+        n = pick(bits3, q.n_bits)
+        p = pick(bits3, q.p_bits)
+        cap = float(ref.ref_l1_cap(p, n, 1.0 if q.x_signed else 0.0))
+        row_l1 = np.abs(w_int).sum(axis=1)
+        assert (row_l1 <= cap + 1e-3).all(), (q.name, row_l1.max(), cap)
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_qlayer_metadata_matches_params(name):
+    """The manifest geometry the Rust FINN estimator trusts must match the
+    actual tensors: v is [c_out, k], and k = kh*kw*c_in/groups for convs."""
+    spec = REGISTRY[name]
+    params = spec.init(jax.random.PRNGKey(0))
+    for q in spec.qlayers:
+        v = params[q.name]["v"]
+        assert v.shape == (q.c_out, q.k), (q.name, v.shape, (q.c_out, q.k))
+        if q.kind in ("conv", "dwconv"):
+            assert q.k == q.kh * q.kw * (q.c_in // q.groups), q.name
+        assert q.out_h >= 1 and q.out_w >= 1
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_init_state_layout_is_stable(name):
+    spec = REGISTRY[name]
+    s1 = M.state_paths(M.init_state(spec, jax.random.PRNGKey(0)))
+    s2 = M.state_paths(M.init_state(spec, jax.random.PRNGKey(7)))
+    assert s1 == s2
+    # params is a prefix-consistent subtree: every param path appears in state
+    ppaths = {p for p, _ in M.state_paths(M.init_state(spec, jax.random.PRNGKey(0))["params"])}
+    spaths = {p.split("/", 1)[1] for p, _ in s1 if p.startswith("params/")}
+    assert ppaths == spaths
+
+
+def test_largest_k_matches_paper_mlp():
+    """Fig. 2 setup: K = 784, N = 1, M = 8 -> data-type bound P = 19."""
+    spec = REGISTRY["mlp"]
+    assert spec.largest_k() == 784
+    k, n_bits, m_bits = 784.0, 1.0, 8.0
+    alpha = np.log2(k) + n_bits + m_bits - 1.0 - 0.0
+    p_min = np.ceil(alpha + np.log2(1 + 2.0**-alpha) + 1.0)
+    assert p_min == 19.0
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn"])
+def test_a2q_sparsity_grows_as_p_shrinks(name):
+    """Paper Sec. 5.2.1: tightening P raises unstructured weight sparsity."""
+    spec = REGISTRY[name]
+    fn, _, _ = M.make_train_step(spec, "a2q")
+    fn = jax.jit(fn)
+    export_fn, _, _ = M.make_export(spec, "a2q")
+    export_fn = jax.jit(export_fn)
+    x, y = fake_batch(spec, jax.random.PRNGKey(1))
+
+    def sparsity_at(p_bits):
+        bits = jnp.array([6.0, 6.0, p_bits])
+        state = M.flatten(M.init_state(spec, jax.random.PRNGKey(0)))
+        for _ in range(10):
+            out = fn(*state, x, y, bits, jnp.asarray(spec.lr, jnp.float32))
+            state = list(out[:-1])
+        st = M.unflatten_like(M.init_state(spec, jax.random.PRNGKey(0)), state)
+        outs = export_fn(*M.flatten(st["params"]), bits)
+        total = nz = 0
+        for i in range(len(spec.qlayers)):
+            w = np.asarray(outs[3 * i])
+            total += w.size
+            nz += (w == 0).sum()
+        return nz / total
+
+    assert sparsity_at(10.0) > sparsity_at(24.0)

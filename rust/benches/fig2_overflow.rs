@@ -1,0 +1,76 @@
+//! Bench + regeneration of paper Fig. 2: overflow impact on the 1-layer
+//! binary-MNIST QNN. Times the accsim hot loop (the bit-exact P-bit
+//! register simulation) and regenerates a reduced fig2.csv end to end
+//! (training included) when artifacts are present.
+
+#[path = "harness.rs"]
+mod harness;
+
+use a2q::accsim::matmul::quantize_inputs;
+use a2q::accsim::{qlinear_forward, AccMode};
+use a2q::datasets::{synth_mnist, Split};
+use a2q::quant::QTensor;
+use a2q::report::fig2;
+use a2q::rng::Rng;
+use a2q::runtime::Engine;
+use a2q::tensor::Tensor;
+
+fn synthetic_layer(k: usize, c_out: usize, seed: u64) -> QTensor {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..c_out * k)
+        .map(|_| (rng.normal() * 40.0).round().clamp(-128.0, 127.0) as f32)
+        .collect();
+    QTensor::from_export(
+        &Tensor::new(vec![c_out, k], w),
+        &Tensor::new(vec![c_out, 1], vec![0.01; c_out]),
+        &Tensor::from_vec(vec![0.0; c_out]),
+    )
+}
+
+fn main() {
+    // --- microbench: the accsim inner loop over the Fig. 2 shape ------------
+    let ds = synth_mnist::generate(0, 256, 0);
+    let idx: Vec<usize> = (0..256).collect();
+    let batch = ds.gather(Split::Test, &idx);
+    let x_int = quantize_inputs(&batch.x, 1.0, 1, false);
+    let layer = synthetic_layer(synth_mnist::DIM, 2, 1);
+    let macs = (x_int.len() * layer.c_out * layer.k) as u64;
+
+    for (name, mode) in [
+        ("wide", AccMode::Wide),
+        ("wrap_p14", AccMode::Wrap { p_bits: 14 }),
+        ("saturate_p14", AccMode::Saturate { p_bits: 14 }),
+    ] {
+        let r = harness::bench(&format!("fig2/accsim_{name}_256x2x784"), 2, 10, || {
+            qlinear_forward(&x_int, 1.0, &layer, mode)
+        });
+        println!("  ({:.1} M MAC/s)", harness::throughput(&r, macs) / 1e6);
+    }
+
+    // --- end-to-end figure regeneration (needs artifacts) -------------------
+    if !std::path::Path::new("artifacts/mlp.json").exists() {
+        println!("artifacts missing; skipping end-to-end fig2 regeneration");
+        return;
+    }
+    let steps = if harness::quick() { 60 } else { 250 };
+    let engine = Engine::new("artifacts").expect("engine");
+    let p_values: Vec<u32> = vec![10, 12, 14, 16, 18, 20];
+    let t0 = std::time::Instant::now();
+    let rep = fig2::run(&engine, &p_values, steps, 256, 0).expect("fig2 run");
+    fig2::emit(&rep, std::path::Path::new("results")).expect("emit");
+    println!(
+        "fig2 end-to-end ({} trainings + sims) in {:.1}s; wide acc {:.4}",
+        p_values.len() + 1,
+        t0.elapsed().as_secs_f64(),
+        rep.acc_wide
+    );
+    // Paper-shape checks: overflow rate decreases with P; A2Q never overflows
+    // and beats wraparound at the lowest P.
+    for w in rep.rows.windows(2) {
+        assert!(w[0].overflow_rate_wrap >= w[1].overflow_rate_wrap);
+    }
+    assert!(rep.rows.iter().all(|r| r.a2q_overflows == 0));
+    let lowest = &rep.rows[0];
+    assert!(lowest.acc_a2q >= lowest.acc_wrap);
+    println!("fig2 invariants hold (monotone overflow rate, A2Q overflow-free & dominant at low P)");
+}

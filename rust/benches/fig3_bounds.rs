@@ -1,0 +1,35 @@
+//! Bench + regeneration of paper Fig. 3: the accumulator bound comparison.
+//! Pure computation (no artifacts needed). Emits results/fig3.csv and times
+//! the 1000-draw sampling study.
+
+#[path = "harness.rs"]
+mod harness;
+
+use a2q::report::fig3;
+
+fn main() {
+    let draws = if harness::quick() { 50 } else { 1000 };
+    let ks: Vec<usize> = (5..=14).map(|e| 1usize << e).collect();
+    let bits = [4u32, 5, 6, 7, 8];
+
+    let r = harness::bench("fig3/bounds_1000_draws", 1, 5, || {
+        fig3::run(&ks, &bits, draws, 0)
+    });
+    println!(
+        "  ({} grid cells x {draws} draws -> {:.1} Mdraws/s)",
+        ks.len() * bits.len(),
+        harness::throughput(&r, (ks.len() * bits.len() * draws) as u64) / 1e6
+    );
+
+    // Regenerate the figure data alongside the timing.
+    let rows = fig3::run(&ks, &bits, draws, 0);
+    fig3::emit(&rows, std::path::Path::new("results")).expect("emit fig3");
+    println!("wrote results/fig3.csv ({} rows)", rows.len());
+
+    // Shape assertions that mirror the paper's plot: weight bound strictly
+    // tighter than the data-type bound, both increasing in K.
+    for r in &rows {
+        assert!(r.weight_bound_max <= r.data_type_bound + 1e-9);
+    }
+    println!("fig3 invariants hold (weight bound <= data-type bound everywhere)");
+}

@@ -1,0 +1,76 @@
+//! Bench + regeneration of paper Fig. 4: the perf-vs-accumulator Pareto
+//! frontiers. Consumes sweep records (results/runs.jsonl, produced by
+//! `a2q sweep`); if absent, runs a reduced inline sweep on the mlp so the
+//! bench is self-contained.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use a2q::config::SweepConfig;
+use a2q::coordinator::{run_sweep, MetricsSink};
+use a2q::pareto::frontier_dominates;
+use a2q::report::fig45;
+use a2q::runtime::ModelManifest;
+
+fn main() {
+    let sink = MetricsSink::new("results/runs.jsonl");
+    let mut records = sink.load().expect("sink parse");
+    if records.is_empty() {
+        println!("no sweep records; running a reduced inline mlp sweep");
+        let mut cfg = SweepConfig::default_grid(vec!["mlp".into()], if harness::quick() { 40 } else { 200 });
+        cfg.algs.push("float".into());
+        cfg.mn_values = vec![8];
+        records = run_sweep(
+            cfg,
+            PathBuf::from("artifacts"),
+            PathBuf::from("results/runs.jsonl"),
+            false,
+        )
+        .expect("inline sweep");
+    }
+
+    let mut largest_k = BTreeMap::new();
+    let mut models: Vec<String> = records.iter().map(|r| r.config.model.clone()).collect();
+    models.sort();
+    models.dedup();
+    for m in &models {
+        let manifest = ModelManifest::load(std::path::Path::new("artifacts"), m).expect("manifest");
+        largest_k.insert(m.clone(), manifest.largest_k);
+    }
+
+    // Time the frontier construction over the full record set.
+    let r = harness::bench("fig4/frontiers_from_records", 2, 20, || {
+        fig45::fig4(&records, &largest_k)
+    });
+    println!("  ({} records -> {} models)", records.len(), models.len());
+    let _ = r;
+
+    let f4 = fig45::fig4(&records, &largest_k);
+    fig45::emit_fig4(&f4, std::path::Path::new("results")).expect("emit");
+    for m in &f4 {
+        // Paper headline: A2Q reaches strictly lower P than the QAT heuristic
+        // while remaining on the frontier.
+        let a2q = m.frontiers.iter().find(|(a, _)| a == "a2q");
+        let qat = m.frontiers.iter().find(|(a, _)| a == "qat");
+        if let (Some((_, af)), Some((_, qf))) = (a2q, qat) {
+            let a2q_min_p = af.iter().map(|p| p.cost).fold(f64::INFINITY, f64::min);
+            let qat_min_p = qf.iter().map(|p| p.cost).fold(f64::INFINITY, f64::min);
+            println!(
+                "{:<8} A2Q min P {:>4}  QAT min safe P {:>4}  dominance(A2Q>=QAT): {}",
+                m.model,
+                a2q_min_p,
+                qat_min_p,
+                frontier_dominates(af, qf, 1e-9)
+            );
+            assert!(
+                a2q_min_p <= qat_min_p,
+                "{}: A2Q must reach at least as low an accumulator",
+                m.model
+            );
+        }
+    }
+    println!("wrote results/fig4_*.csv");
+}

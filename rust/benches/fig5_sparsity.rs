@@ -1,0 +1,51 @@
+//! Bench + regeneration of paper Fig. 5: sparsity and relative accuracy vs
+//! accumulator width, aggregated across models. Consumes sweep records.
+
+#[path = "harness.rs"]
+mod harness;
+
+use a2q::coordinator::MetricsSink;
+use a2q::report::fig45;
+
+fn main() {
+    let sink = MetricsSink::new("results/runs.jsonl");
+    let records = sink.load().expect("sink parse");
+    if records.is_empty() {
+        println!("no sweep records at results/runs.jsonl; run `a2q sweep` first");
+        return;
+    }
+
+    let r = harness::bench("fig5/aggregate_from_records", 2, 50, || fig45::fig5(&records));
+    let _ = r;
+
+    let rows = fig45::fig5(&records);
+    fig45::emit_fig5(&rows, std::path::Path::new("results")).expect("emit");
+    println!("P  sparsity(mean±std)  rel_perf(mean±std)  n");
+    for row in &rows {
+        println!(
+            "{:>2}  {:.3}±{:.3}          {:.3}±{:.3}        {}",
+            row.p_bits,
+            row.sparsity_mean,
+            row.sparsity_std,
+            row.rel_perf_mean,
+            row.rel_perf_std,
+            row.n
+        );
+    }
+    // Paper shape: sparsity grows as P shrinks (compare the extremes).
+    if rows.len() >= 2 {
+        let lo = &rows[0];
+        let hi = rows.last().unwrap();
+        assert!(
+            lo.sparsity_mean >= hi.sparsity_mean,
+            "sparsity should grow as P tightens: {} vs {}",
+            lo.sparsity_mean,
+            hi.sparsity_mean
+        );
+        println!(
+            "fig5 invariant holds (sparsity {:.3} @ P={} >= {:.3} @ P={})",
+            lo.sparsity_mean, lo.p_bits, hi.sparsity_mean, hi.p_bits
+        );
+    }
+    println!("wrote results/fig5.csv");
+}

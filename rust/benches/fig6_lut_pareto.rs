@@ -1,0 +1,58 @@
+//! Bench + regeneration of paper Figs. 6 and 7: LUTs-vs-accuracy Pareto
+//! frontiers under the four accumulator co-design policies, plus the
+//! compute/memory breakdown and the abstract's headline LUT-reduction
+//! factor. Consumes sweep records.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::collections::BTreeMap;
+
+use a2q::coordinator::MetricsSink;
+use a2q::report::fig67;
+use a2q::runtime::ModelManifest;
+
+fn main() {
+    let sink = MetricsSink::new("results/runs.jsonl");
+    let records = sink.load().expect("sink parse");
+    if records.is_empty() {
+        println!("no sweep records at results/runs.jsonl; run `a2q sweep` first");
+        return;
+    }
+
+    let mut geoms = BTreeMap::new();
+    let mut models: Vec<String> = records.iter().map(|r| r.config.model.clone()).collect();
+    models.sort();
+    models.dedup();
+    for m in &models {
+        let manifest = ModelManifest::load(std::path::Path::new("artifacts"), m).expect("manifest");
+        geoms.insert(m.clone(), manifest.geoms().expect("geoms"));
+    }
+
+    // Time the full estimate + frontier pass (every record x 4 policies).
+    let r = harness::bench("fig6/estimate_all_policies", 2, 10, || {
+        fig67::fig6(&records, &geoms)
+    });
+    println!("  ({} records x 4 policies)", records.len());
+    let _ = r;
+
+    let f6 = fig67::fig6(&records, &geoms);
+    fig67::emit(&f6, std::path::Path::new("results")).expect("emit");
+    for m in &f6 {
+        // Paper shape: fixed-32 is never cheaper than the A2Q frontier at
+        // comparable accuracy; report the headline factor.
+        match fig67::headline_reduction(m, 0.95) {
+            Some((red, rel)) => {
+                println!(
+                    "{:<8} {:.2}x LUT reduction vs fixed-32 at {:.1}% of float perf",
+                    m.model,
+                    red,
+                    rel * 100.0
+                );
+                assert!(red >= 1.0, "{}: A2Q must not cost more LUTs", m.model);
+            }
+            None => println!("{:<8} (no point at >=95% of float perf)", m.model),
+        }
+    }
+    println!("wrote results/fig6_*.csv and results/fig7_*.csv");
+}

@@ -1,0 +1,50 @@
+//! Bench + regeneration of paper Fig. 8: associativity breaking under
+//! saturating accumulation. Times the permutation study core and, with
+//! artifacts present, regenerates results/fig8.csv end to end.
+
+#[path = "harness.rs"]
+mod harness;
+
+use a2q::accsim::reorder_study;
+use a2q::report::fig8;
+use a2q::rng::Rng;
+use a2q::runtime::Engine;
+
+fn main() {
+    // --- microbench: 100-permutation study on a K=784 dot product -----------
+    let mut rng = Rng::new(5);
+    let x: Vec<i64> = (0..784).map(|_| (rng.uniform() > 0.7) as i64).collect();
+    let w: Vec<i64> = (0..784)
+        .map(|_| (rng.normal() * 40.0).round().clamp(-128.0, 127.0) as i64)
+        .collect();
+    let perms = if harness::quick() { 20 } else { 100 };
+    let r = harness::bench(&format!("fig8/reorder_{perms}perm_k784"), 2, 10, || {
+        reorder_study(&x, &w, 12, perms, 9)
+    });
+    println!(
+        "  ({:.1} M MAC/s through the saturating register)",
+        harness::throughput(&r, (perms * 784) as u64) / 1e6
+    );
+
+    // --- end-to-end regeneration --------------------------------------------
+    if !std::path::Path::new("artifacts/mlp.json").exists() {
+        println!("artifacts missing; skipping end-to-end fig8 regeneration");
+        return;
+    }
+    let steps = if harness::quick() { 60 } else { 250 };
+    let engine = Engine::new("artifacts").expect("engine");
+    let t0 = std::time::Instant::now();
+    let rep = fig8::run(&engine, 12, 100, steps, 128, 0).expect("fig8");
+    fig8::emit(&rep, std::path::Path::new("results")).expect("emit");
+    let (lo, hi) = rep.inner_acc_spread();
+    println!(
+        "fig8 end-to-end in {:.1}s: inner acc in [{lo:.4}, {hi:.4}], outer {:.4}, wide {:.4}",
+        t0.elapsed().as_secs_f64(),
+        rep.outer_acc,
+        rep.acc_wide
+    );
+    // Paper-shape check: the outer-loop (final-only) model underestimates the
+    // damage the inner loop actually does.
+    assert!(rep.inner_mae_mean() >= rep.outer_mae);
+    println!("fig8 invariant holds (inner-loop MAE >= outer-loop MAE)");
+}

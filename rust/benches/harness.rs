@@ -1,0 +1,69 @@
+//! Minimal benchmark harness (offline replacement for criterion): warms up,
+//! runs timed iterations, reports min/median/mean. Benches are `harness =
+//! false` binaries; `cargo bench` runs each `main`.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} iters {:>3}  min {:>12?}  median {:>12?}  mean {:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs. Returns
+/// per-iteration stats; `f`'s return value is black-boxed via `sink`.
+#[allow(dead_code)]
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        sink(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        sink(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / iters.max(1) as u32;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        min: times[0],
+        median: times[times.len() / 2],
+        mean,
+    };
+    r.print();
+    r
+}
+
+/// Opaque value sink (prevents the optimizer from deleting the work).
+#[allow(dead_code)]
+pub fn sink<T>(v: T) {
+    let boxed = Box::new(v);
+    std::hint::black_box(&boxed);
+    drop(boxed);
+}
+
+/// Throughput helper: ops/sec at a given per-iteration op count.
+#[allow(dead_code)]
+pub fn throughput(r: &BenchResult, ops_per_iter: u64) -> f64 {
+    ops_per_iter as f64 / r.median.as_secs_f64()
+}
+
+/// Scale benchmark sizes down when A2Q_BENCH_QUICK=1 (used by `make test`
+/// smoke runs; full `cargo bench` uses paper-scale settings).
+#[allow(dead_code)]
+pub fn quick() -> bool {
+    std::env::var("A2Q_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}

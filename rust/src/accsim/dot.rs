@@ -1,0 +1,184 @@
+//! MAC-by-MAC dot-product simulation with a P-bit accumulator register.
+
+/// Accumulator register model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccMode {
+    /// Wide i64 reference register (no overflow at our magnitudes).
+    Wide,
+    /// Wraparound two's-complement arithmetic at `p_bits`.
+    Wrap { p_bits: u32 },
+    /// Saturating (clipping) arithmetic at `p_bits`, applied to every
+    /// intermediate partial sum (inner-most loop, Appendix A).
+    Saturate { p_bits: u32 },
+    /// Saturation applied only to the *final* result (outer-most loop) —
+    /// the approximation prior work uses that ignores partial sums; kept for
+    /// the Fig. 8 comparison.
+    SaturateFinal { p_bits: u32 },
+}
+
+/// Outcome of one simulated dot product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DotResult {
+    /// Final register value.
+    pub value: i64,
+    /// Number of MACs whose partial sum left the P-bit range (each one either
+    /// wrapped or clipped depending on the mode).
+    pub overflows: u32,
+}
+
+#[inline]
+fn range(p_bits: u32) -> (i64, i64) {
+    debug_assert!((2..=63).contains(&p_bits), "p_bits {p_bits} out of range");
+    let hi = (1i64 << (p_bits - 1)) - 1;
+    (-hi - 1, hi)
+}
+
+/// Two's-complement wraparound of `v` into P bits.
+///
+/// Implemented as shift-based sign extension (`(v << (64-P)) >> (64-P)`),
+/// which is exact for P in 1..=64 and ~16x faster than the modular-arithmetic
+/// formulation it replaced (i128 `rem_euclid` costs a division per MAC; see
+/// EXPERIMENTS.md §Perf).
+#[inline]
+pub fn wrap_to(v: i64, p_bits: u32) -> i64 {
+    debug_assert!((1..=64).contains(&p_bits));
+    let sh = 64 - p_bits;
+    v.wrapping_shl(sh) >> sh
+}
+
+/// Simulate `sum_i x[i] * w[i]` MAC by MAC under the given register model.
+///
+/// Inputs are i64 but must individually fit the data types being modelled
+/// (the caller quantizes); products are taken exactly, and only the
+/// *accumulator* is subject to the register model — matching Fig. 1's
+/// fixed-point pipeline where the multiplier output is full-width.
+pub fn dot_accumulate(x: &[i64], w: &[i64], mode: AccMode) -> DotResult {
+    debug_assert_eq!(x.len(), w.len());
+    match mode {
+        AccMode::Wide => {
+            let mut acc = 0i64;
+            for (xi, wi) in x.iter().zip(w) {
+                acc += xi * wi;
+            }
+            DotResult { value: acc, overflows: 0 }
+        }
+        AccMode::Wrap { p_bits } => {
+            let mut acc = 0i64;
+            let mut overflows = 0u32;
+            for (xi, wi) in x.iter().zip(w) {
+                let wide = acc + xi * wi; // exact in i64
+                acc = wrap_to(wide, p_bits);
+                // branchless: wrapped != wide  <=>  the partial sum left the
+                // P-bit range (one cmov instead of a data-dependent branch)
+                overflows += (acc != wide) as u32;
+            }
+            DotResult { value: acc, overflows }
+        }
+        AccMode::Saturate { p_bits } => {
+            let (lo, hi) = range(p_bits);
+            let mut acc = 0i64;
+            let mut overflows = 0;
+            for (xi, wi) in x.iter().zip(w) {
+                let wide = acc + xi * wi;
+                if wide < lo || wide > hi {
+                    overflows += 1;
+                }
+                acc = wide.clamp(lo, hi);
+            }
+            DotResult { value: acc, overflows }
+        }
+        AccMode::SaturateFinal { p_bits } => {
+            let (lo, hi) = range(p_bits);
+            let mut acc = 0i64;
+            for (xi, wi) in x.iter().zip(w) {
+                acc += xi * wi;
+            }
+            let clipped = acc.clamp(lo, hi);
+            DotResult {
+                value: clipped,
+                overflows: u32::from(clipped != acc),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wide_matches_naive() {
+        let x = vec![1, -2, 3, 4];
+        let w = vec![5, 6, -7, 8];
+        let r = dot_accumulate(&x, &w, AccMode::Wide);
+        assert_eq!(r.value, 5 - 12 - 21 + 32);
+        assert_eq!(r.overflows, 0);
+    }
+
+    #[test]
+    fn wrap_is_twos_complement() {
+        assert_eq!(wrap_to(128, 8), -128);
+        assert_eq!(wrap_to(127, 8), 127);
+        assert_eq!(wrap_to(-129, 8), 127);
+        assert_eq!(wrap_to(256, 8), 0);
+        assert_eq!(wrap_to(-32769, 16), 32767);
+    }
+
+    #[test]
+    fn no_overflow_when_within_bound() {
+        // sum |x||w| = 100 < 2^(8-1) - 1 = 127 -> all modes agree, 0 overflow.
+        let x = vec![5i64; 10];
+        let w = vec![2i64; 10];
+        for mode in [
+            AccMode::Wide,
+            AccMode::Wrap { p_bits: 8 },
+            AccMode::Saturate { p_bits: 8 },
+            AccMode::SaturateFinal { p_bits: 8 },
+        ] {
+            let r = dot_accumulate(&x, &w, mode);
+            assert_eq!(r.value, 100, "{mode:?}");
+            assert_eq!(r.overflows, 0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn wrap_and_saturate_diverge_on_overflow() {
+        let x = vec![100i64; 4];
+        let w = vec![1i64; 4]; // partials: 100, 200, 300, 400 under 8-bit reg
+        let wrap = dot_accumulate(&x, &w, AccMode::Wrap { p_bits: 8 });
+        let sat = dot_accumulate(&x, &w, AccMode::Saturate { p_bits: 8 });
+        let wide = dot_accumulate(&x, &w, AccMode::Wide);
+        assert_eq!(wide.value, 400);
+        assert_eq!(sat.value, 127); // pinned at the rail
+        assert_eq!(wrap.value, wrap_to(400, 8));
+        assert!(wrap.overflows > 0 && sat.overflows > 0);
+    }
+
+    #[test]
+    fn intermediate_overflow_detected_even_if_final_fits() {
+        // partials: 120, 240 (overflow), 120 -> final fits in 8 bits but the
+        // inner loop overflowed; Saturate catches it, SaturateFinal cannot.
+        let x = vec![120i64, 120, -120];
+        let w = vec![1i64, 1, 1];
+        let inner = dot_accumulate(&x, &w, AccMode::Saturate { p_bits: 8 });
+        let outer = dot_accumulate(&x, &w, AccMode::SaturateFinal { p_bits: 8 });
+        assert_eq!(outer.overflows, 0);
+        assert_eq!(outer.value, 120);
+        assert!(inner.overflows > 0);
+        assert_eq!(inner.value, 7); // clamped at 127 then -120
+    }
+
+    #[test]
+    fn saturate_order_dependent_wide_not() {
+        // Appendix A.1: clipping breaks associativity.
+        let x = vec![120i64, 120, -120, -120];
+        let w = vec![1i64; 4];
+        let fwd = dot_accumulate(&x, &w, AccMode::Saturate { p_bits: 8 });
+        let rev_x: Vec<i64> = x.iter().rev().copied().collect();
+        let rev = dot_accumulate(&rev_x, &w, AccMode::Saturate { p_bits: 8 });
+        assert_ne!(fwd.value, rev.value);
+        let wf = dot_accumulate(&x, &w, AccMode::Wide);
+        let wr = dot_accumulate(&rev_x, &w, AccMode::Wide);
+        assert_eq!(wf.value, wr.value);
+    }
+}

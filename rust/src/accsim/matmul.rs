@@ -1,0 +1,124 @@
+//! Batched integer linear-layer simulation: the deployment-side forward pass
+//! of a quantized dense layer under a P-bit accumulator, used to measure the
+//! *actual* numerical error wraparound/saturation would inflict (Fig. 2).
+
+use super::dot::{dot_accumulate, AccMode};
+use super::stats::OverflowStats;
+use crate::quant::QTensor;
+use crate::tensor::Tensor;
+
+/// Result of a simulated quantized linear forward.
+#[derive(Clone, Debug)]
+pub struct MatmulStats {
+    /// Dequantized outputs `[batch, c_out]` under the simulated register.
+    pub out: Tensor,
+    /// Dequantized outputs under the wide reference register.
+    pub out_wide: Tensor,
+    /// Overflow statistics across all batch x c_out dot products.
+    pub stats: OverflowStats,
+}
+
+/// Forward one batch of *integer* inputs `x_int [batch, k]` through a
+/// quantized linear layer under the given accumulator model.
+///
+/// `x_scale` is the (per-tensor) input scale so outputs dequantize to
+/// `acc * s_w[c] * s_x + bias[c]` — the requantization step of Fig. 1 with
+/// the bias applied in float, as FINN's threshold stage does.
+pub fn qlinear_forward(
+    x_int: &[Vec<i64>],
+    x_scale: f32,
+    w: &QTensor,
+    mode: AccMode,
+) -> MatmulStats {
+    let batch = x_int.len();
+    let mut out = Tensor::zeros(vec![batch, w.c_out]);
+    let mut out_wide = Tensor::zeros(vec![batch, w.c_out]);
+    let mut stats = OverflowStats::default();
+
+    for (bi, xb) in x_int.iter().enumerate() {
+        assert_eq!(xb.len(), w.k, "input length {} vs k {}", xb.len(), w.k);
+        for c in 0..w.c_out {
+            let row = w.row(c);
+            let sim = dot_accumulate(xb, row, mode);
+            let wide = dot_accumulate(xb, row, AccMode::Wide);
+            stats.record(w.k, sim.overflows, sim.value, wide.value);
+            let scale = w.scales[c] * x_scale;
+            out.data_mut()[bi * w.c_out + c] = sim.value as f32 * scale + w.bias[c];
+            out_wide.data_mut()[bi * w.c_out + c] =
+                wide.value as f32 * scale + w.bias[c];
+        }
+    }
+    MatmulStats { out, out_wide, stats }
+}
+
+/// Quantize a float input batch to integers on an N-bit unsigned grid with
+/// the given scale (the standard activation quantizer of paper Eq. 1, z=0).
+pub fn quantize_inputs(x: &Tensor, scale: f32, n_bits: u32, x_signed: bool) -> Vec<Vec<i64>> {
+    let (lo, hi) = if x_signed {
+        (-(1i64 << (n_bits - 1)), (1i64 << (n_bits - 1)) - 1)
+    } else {
+        (0, (1i64 << n_bits) - 1)
+    };
+    (0..x.rows())
+        .map(|r| {
+            x.row(r)
+                .iter()
+                .map(|v| ((v / scale).round() as i64).clamp(lo, hi))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> QTensor {
+        // 2 channels, k=3; channel 0 small weights, channel 1 big.
+        let w = Tensor::new(vec![2, 3], vec![1.0, 1.0, 1.0, 100.0, 100.0, 100.0]);
+        let s = Tensor::new(vec![2, 1], vec![1.0, 1.0]);
+        let b = Tensor::from_vec(vec![0.0, 0.0]);
+        QTensor::from_export(&w, &s, &b)
+    }
+
+    #[test]
+    fn wide_equals_float_matmul() {
+        let w = layer();
+        let x = vec![vec![1i64, 2, 3]];
+        let r = qlinear_forward(&x, 1.0, &w, AccMode::Wide);
+        assert_eq!(r.out.data(), &[6.0, 600.0]);
+        assert_eq!(r.stats.overflow_events, 0);
+    }
+
+    #[test]
+    fn overflow_only_on_big_channel() {
+        let w = layer();
+        let x = vec![vec![1i64, 1, 1]];
+        // 8-bit register: channel 0 sums to 3 (fine); channel 1 partials
+        // 100, 200, 300 overflow.
+        let r = qlinear_forward(&x, 1.0, &w, AccMode::Wrap { p_bits: 8 });
+        assert_eq!(r.out.data()[0], 3.0);
+        assert_ne!(r.out.data()[1], 300.0);
+        assert_eq!(r.out_wide.data()[1], 300.0);
+        assert!(r.stats.overflow_events >= 1);
+        assert_eq!(r.stats.dot_overflow_fraction(), 0.5);
+    }
+
+    #[test]
+    fn input_quantization_clamps() {
+        let x = Tensor::new(vec![1, 4], vec![0.0, 0.4, 0.9, 5.0]);
+        let q = quantize_inputs(&x, 1.0, 1, false); // 1-bit unsigned: {0, 1}
+        assert_eq!(q[0], vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn dequant_uses_both_scales_and_bias() {
+        let w = Tensor::new(vec![1, 2], vec![2.0, -1.0]);
+        let s = Tensor::new(vec![1, 1], vec![0.5]);
+        let b = Tensor::from_vec(vec![1.0]);
+        let q = QTensor::from_export(&w, &s, &b);
+        let r = qlinear_forward(&[vec![3, 1]], 0.25, &q, AccMode::Wide);
+        // acc = 2*3 - 1 = 5; out = 5 * 0.5 * 0.25 + 1.0 = 1.625
+        assert_eq!(r.out.data(), &[1.625]);
+    }
+}

@@ -1,0 +1,26 @@
+//! Exact integer accumulation simulator (the substrate behind paper Fig. 2,
+//! Fig. 8 and Appendix A).
+//!
+//! Simulates the MAC-by-MAC behaviour of a P-bit accumulator register at the
+//! *inner-most loop* — i.e. every intermediate partial sum passes through the
+//! register, not just the final dot-product result. Three register models:
+//!
+//! * [`AccMode::Wide`]      — an i64 reference register (the "32-bit" gold
+//!   result at our magnitudes; exact for every P <= 63).
+//! * [`AccMode::Wrap`]      — wraparound two's-complement at P bits, the
+//!   default hardware behaviour whose numerical errors the paper studies.
+//! * [`AccMode::Saturate`]  — clip-on-accumulate at P bits, the industry
+//!   "saturation arithmetic" baseline; breaks associativity (Appendix A.1).
+//!
+//! All simulation is in i64 with explicit wrapping/clamping, so results are
+//! bit-exact and platform-independent.
+
+pub mod dot;
+pub mod matmul;
+pub mod reorder;
+pub mod stats;
+
+pub use dot::{dot_accumulate, AccMode, DotResult};
+pub use matmul::{qlinear_forward, MatmulStats};
+pub use reorder::reorder_study;
+pub use stats::OverflowStats;

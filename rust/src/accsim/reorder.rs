@@ -1,0 +1,113 @@
+//! Associativity study (paper Fig. 8 / Appendix A.1): randomly re-order the
+//! additions of a dot product under saturating accumulation and measure how
+//! the result distribution spreads — saturation at the inner loop makes the
+//! result order-dependent, while the outer-loop model (and any overflow-free
+//! execution) is order-invariant.
+
+use super::dot::{dot_accumulate, AccMode, DotResult};
+use crate::rng::Rng;
+
+/// Distribution of dot-product results over random permutations.
+#[derive(Clone, Debug)]
+pub struct ReorderStudy {
+    /// Result of each random permutation (inner-loop model).
+    pub inner_values: Vec<i64>,
+    /// Result of the outer-loop (final-only) model — order-invariant.
+    pub outer_value: i64,
+    /// Wide-register reference.
+    pub wide_value: i64,
+}
+
+impl ReorderStudy {
+    pub fn mean_abs_err_inner(&self) -> f64 {
+        let n = self.inner_values.len().max(1) as f64;
+        self.inner_values
+            .iter()
+            .map(|v| (v - self.wide_value).abs() as f64)
+            .sum::<f64>()
+            / n
+    }
+
+    pub fn abs_err_outer(&self) -> f64 {
+        (self.outer_value - self.wide_value).abs() as f64
+    }
+
+    /// Number of distinct results across permutations (1 == deterministic).
+    pub fn distinct_inner(&self) -> usize {
+        let mut v = self.inner_values.clone();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+}
+
+/// Run `n_perms` random re-orderings of the MACs of `x . w` under an
+/// inner-loop saturating P-bit register, plus the outer-loop / wide models.
+pub fn reorder_study(
+    x: &[i64],
+    w: &[i64],
+    p_bits: u32,
+    n_perms: usize,
+    seed: u64,
+) -> ReorderStudy {
+    assert_eq!(x.len(), w.len());
+    let wide = dot_accumulate(x, w, AccMode::Wide).value;
+    let outer = dot_accumulate(x, w, AccMode::SaturateFinal { p_bits }).value;
+
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    let mut xp = vec![0i64; x.len()];
+    let mut wp = vec![0i64; w.len()];
+    let inner_values = (0..n_perms)
+        .map(|_| {
+            rng.shuffle(&mut idx);
+            for (j, &i) in idx.iter().enumerate() {
+                xp[j] = x[i];
+                wp[j] = w[i];
+            }
+            let DotResult { value, .. } =
+                dot_accumulate(&xp, &wp, AccMode::Saturate { p_bits });
+            value
+        })
+        .collect();
+
+    ReorderStudy { inner_values, outer_value: outer, wide_value: wide }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_overflow_means_order_invariant() {
+        let x: Vec<i64> = (0..32).map(|i| (i % 3) - 1).collect();
+        let w: Vec<i64> = (0..32).map(|i| (i % 5) - 2).collect();
+        // sum |x||w| <= 64 << 2^15 so a 16-bit register never clips.
+        let s = reorder_study(&x, &w, 16, 50, 42);
+        assert_eq!(s.distinct_inner(), 1);
+        assert_eq!(s.inner_values[0], s.wide_value);
+        assert_eq!(s.abs_err_outer(), 0.0);
+    }
+
+    #[test]
+    fn saturation_spreads_under_overflow() {
+        // Alternating big +/- terms: prefix magnitude far exceeds 8 bits, so
+        // different orders pin the register at different times.
+        let x: Vec<i64> = (0..64).map(|i| if i % 2 == 0 { 100 } else { -100 }).collect();
+        let w = vec![1i64; 64];
+        let s = reorder_study(&x, &w, 8, 200, 7);
+        assert!(s.distinct_inner() > 1, "expected order dependence");
+        assert!(s.mean_abs_err_inner() > 0.0);
+        // outer-loop model sees a zero final sum -> no clipping at all
+        assert_eq!(s.abs_err_outer(), 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x: Vec<i64> = (0..40).map(|i| (i * 37 % 200) - 100).collect();
+        let w: Vec<i64> = (0..40).map(|i| (i * 13 % 7) - 3).collect();
+        let a = reorder_study(&x, &w, 10, 25, 5);
+        let b = reorder_study(&x, &w, 10, 25, 5);
+        assert_eq!(a.inner_values, b.inner_values);
+    }
+}

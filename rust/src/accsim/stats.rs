@@ -1,0 +1,96 @@
+//! Aggregated overflow statistics across a batch of simulated dot products.
+
+/// Running overflow/error statistics for a simulated layer execution.
+#[derive(Clone, Debug, Default)]
+pub struct OverflowStats {
+    /// Total dot products simulated.
+    pub dots: u64,
+    /// Total MACs executed.
+    pub macs: u64,
+    /// MAC-level overflow events (partial sum left the P-bit range).
+    pub overflow_events: u64,
+    /// Dot products with at least one overflow.
+    pub dots_overflowed: u64,
+    /// Sum of |simulated - wide| over all outputs, in the integer domain.
+    pub abs_err_sum: f64,
+    /// Count of outputs compared for abs_err_sum.
+    pub outputs: u64,
+}
+
+impl OverflowStats {
+    pub fn record(&mut self, k: usize, overflows: u32, sim: i64, wide: i64) {
+        self.dots += 1;
+        self.macs += k as u64;
+        self.overflow_events += overflows as u64;
+        if overflows > 0 {
+            self.dots_overflowed += 1;
+        }
+        self.abs_err_sum += (sim - wide).abs() as f64;
+        self.outputs += 1;
+    }
+
+    pub fn merge(&mut self, other: &OverflowStats) {
+        self.dots += other.dots;
+        self.macs += other.macs;
+        self.overflow_events += other.overflow_events;
+        self.dots_overflowed += other.dots_overflowed;
+        self.abs_err_sum += other.abs_err_sum;
+        self.outputs += other.outputs;
+    }
+
+    /// Overflows per dot product (the y-axis of paper Fig. 2 top).
+    pub fn overflow_rate(&self) -> f64 {
+        if self.dots == 0 {
+            0.0
+        } else {
+            self.overflow_events as f64 / self.dots as f64
+        }
+    }
+
+    /// Fraction of dot products that overflowed at least once.
+    pub fn dot_overflow_fraction(&self) -> f64 {
+        if self.dots == 0 {
+            0.0
+        } else {
+            self.dots_overflowed as f64 / self.dots as f64
+        }
+    }
+
+    /// Mean absolute integer error versus the wide register.
+    pub fn mean_abs_err(&self) -> f64 {
+        if self.outputs == 0 {
+            0.0
+        } else {
+            self.abs_err_sum / self.outputs as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let mut s = OverflowStats::default();
+        s.record(10, 0, 5, 5);
+        s.record(10, 3, 2, 9);
+        assert_eq!(s.dots, 2);
+        assert_eq!(s.macs, 20);
+        assert_eq!(s.overflow_rate(), 1.5);
+        assert_eq!(s.dot_overflow_fraction(), 0.5);
+        assert_eq!(s.mean_abs_err(), 3.5);
+    }
+
+    #[test]
+    fn merge() {
+        let mut a = OverflowStats::default();
+        a.record(4, 1, 0, 1);
+        let mut b = OverflowStats::default();
+        b.record(6, 0, 2, 2);
+        a.merge(&b);
+        assert_eq!(a.dots, 2);
+        assert_eq!(a.macs, 10);
+        assert_eq!(a.overflow_events, 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal command-line parsing (offline replacement for `clap`).
+//!
+//! Grammar: `a2q [--global value]... <subcommand> [--flag value | --flag=value]...`
+//! Unknown flags are an error; every flag takes a value except those
+//! registered as boolean switches.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: positional subcommand words + `--flag` values.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `switches` lists boolean flags that
+    /// take no value (`--foo` == `--foo true`).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, switches: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switches.contains(&flag) {
+                    // optional explicit value: --flag true/false
+                    match iter.peek().map(|s| s.as_str()) {
+                        Some("true") | Some("false") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(flag.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(flag.to_string(), "true".to_string());
+                        }
+                    }
+                } else {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("flag --{flag} needs a value"))?;
+                    out.flags.insert(flag.to_string(), v);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(other) => bail!("--{key} expects true/false, got {other:?}"),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &str) -> Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str_or(key, default);
+        raw.split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse::<T>()
+                    .map_err(|e| anyhow::anyhow!("--{key} item {t:?}: {e}"))
+            })
+            .collect()
+    }
+
+    /// Error on flags not in the accepted set (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), &["verbose"]).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["train", "--model", "cnn", "--steps=100", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str_or("model", "x"), "cnn");
+        assert_eq!(a.num_or("steps", 0u64).unwrap(), 100);
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["sweep"]);
+        assert_eq!(a.str_or("model", "cnn"), "cnn");
+        assert_eq!(a.num_or("m", 6u32).unwrap(), 6);
+        assert!(!a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--mn", "5, 6,8"]);
+        assert_eq!(a.list_or::<u32>("mn", "").unwrap(), vec![5, 6, 8]);
+        let b = parse(&["x"]);
+        assert_eq!(b.list_or::<u32>("mn", "6,8").unwrap(), vec![6, 8]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--model".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_check() {
+        let a = parse(&["x", "--modle", "cnn"]);
+        assert!(a.check_known(&["model"]).is_err());
+        assert!(a.check_known(&["modle"]).is_ok());
+    }
+
+    #[test]
+    fn switch_with_explicit_value() {
+        let a = parse(&["x", "--verbose", "false"]);
+        assert!(!a.bool_or("verbose", true).unwrap());
+    }
+}

@@ -1,0 +1,348 @@
+//! Experiment configuration: JSON-loadable, CLI-overridable, validated.
+//!
+//! Two levels: a [`RunConfig`] describes one training run (model, algorithm,
+//! bit widths, schedule); a [`SweepConfig`] describes a grid search over the
+//! quantization design space (paper §5.1: M = N in 5..8, P from the
+//! data-type bound down to 10 bits below it).
+
+use crate::json::Json;
+use crate::quant::bounds::{data_type_bound, DotShape};
+
+use anyhow::Result;
+
+/// One training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub model: String,
+    /// 'a2q' | 'qat' | 'float'
+    pub alg: String,
+    /// Weight bits M for hidden layers.
+    pub m: u32,
+    /// Activation bits N for hidden layers.
+    pub n: u32,
+    /// Target accumulator bits P for hidden layers.
+    pub p: u32,
+    /// Optimizer steps.
+    pub steps: u64,
+    /// Dataset + init seed.
+    pub seed: u64,
+    /// Override the model's default learning rate.
+    pub lr: Option<f64>,
+    /// Multiplicative LR decay factor, applied every `lr_decay_every` steps
+    /// (paper B trains with epoch-wise step decay).
+    pub lr_decay: f64,
+    pub lr_decay_every: u64,
+    /// Synthetic dataset sizes.
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Fraction of the step budget spent pre-training the float model before
+    /// switching to the quantized graph (paper B.1 initializes from float
+    /// models pre-trained to convergence). Ignored for alg == "float".
+    pub float_warmup_frac: f64,
+}
+
+pub const DEFAULT_N_TRAIN: usize = 2048;
+pub const DEFAULT_N_TEST: usize = 512;
+
+impl RunConfig {
+    pub fn new(model: &str, alg: &str, m: u32, n: u32, p: u32, steps: u64) -> Self {
+        RunConfig {
+            model: model.into(),
+            alg: alg.into(),
+            m,
+            n,
+            p,
+            steps,
+            seed: 0,
+            lr: None,
+            lr_decay: 0.5,
+            lr_decay_every: 200,
+            n_train: DEFAULT_N_TRAIN,
+            n_test: DEFAULT_N_TEST,
+            float_warmup_frac: 0.4,
+        }
+    }
+
+    pub fn bits(&self) -> (u32, u32, u32) {
+        (self.m, self.n, self.p)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            matches!(self.alg.as_str(), "a2q" | "qat" | "float"),
+            "unknown algorithm {:?}",
+            self.alg
+        );
+        anyhow::ensure!((2..=8).contains(&self.m), "M={} outside 2..=8", self.m);
+        anyhow::ensure!((1..=8).contains(&self.n), "N={} outside 1..=8", self.n);
+        anyhow::ensure!((4..=32).contains(&self.p), "P={} outside 4..=32", self.p);
+        anyhow::ensure!(self.steps > 0, "steps must be positive");
+        anyhow::ensure!(self.n_train > 0 && self.n_test > 0, "empty dataset");
+        anyhow::ensure!(self.lr.map_or(true, |l| l > 0.0), "lr must be positive");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.float_warmup_frac),
+            "float_warmup_frac must be in [0, 1)"
+        );
+        Ok(())
+    }
+
+    /// The LR at a given step under the decay schedule.
+    pub fn lr_at(&self, base_lr: f64, step: u64) -> f64 {
+        base_lr * self.lr_decay.powi((step / self.lr_decay_every.max(1)) as i32)
+    }
+
+    // ---------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("alg", Json::str(&self.alg)),
+            ("m", Json::num(self.m as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("p", Json::num(self.p as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "lr",
+                self.lr.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("lr_decay", Json::num(self.lr_decay)),
+            ("lr_decay_every", Json::num(self.lr_decay_every as f64)),
+            ("n_train", Json::num(self.n_train as f64)),
+            ("n_test", Json::num(self.n_test as f64)),
+            ("float_warmup_frac", Json::num(self.float_warmup_frac)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut cfg = RunConfig::new(
+            v.get("model")?.as_str()?,
+            v.get("alg")?.as_str()?,
+            v.get("m")?.as_u32()?,
+            v.get("n")?.as_u32()?,
+            v.get("p")?.as_u32()?,
+            v.get("steps")?.as_u64()?,
+        );
+        if let Some(s) = v.opt("seed") {
+            cfg.seed = s.as_u64()?;
+        }
+        if let Some(lr) = v.opt("lr") {
+            cfg.lr = match lr {
+                Json::Null => None,
+                other => Some(other.as_f64()?),
+            };
+        }
+        if let Some(d) = v.opt("lr_decay") {
+            cfg.lr_decay = d.as_f64()?;
+        }
+        if let Some(d) = v.opt("lr_decay_every") {
+            cfg.lr_decay_every = d.as_u64()?;
+        }
+        if let Some(d) = v.opt("n_train") {
+            cfg.n_train = d.as_usize()?;
+        }
+        if let Some(d) = v.opt("n_test") {
+            cfg.n_test = d.as_usize()?;
+        }
+        if let Some(d) = v.opt("float_warmup_frac") {
+            cfg.float_warmup_frac = d.as_f64()?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_json(&Json::parse(&text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// A grid search over the quantization design space.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub models: Vec<String>,
+    pub algs: Vec<String>,
+    /// Uniform M = N values to sweep (paper: 5..8).
+    pub mn_values: Vec<u32>,
+    /// Accumulator offsets below each config's data-type bound
+    /// (paper: down to a 10-bit reduction).
+    pub p_offsets: Vec<u32>,
+    pub steps: u64,
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+impl SweepConfig {
+    /// Paper-shaped default grid, scaled for CPU budgets.
+    pub fn default_grid(models: Vec<String>, steps: u64) -> Self {
+        SweepConfig {
+            models,
+            algs: vec!["a2q".into(), "qat".into()],
+            mn_values: vec![6, 8],
+            p_offsets: vec![0, 2, 4, 6, 8, 10],
+            steps,
+            seed: 0,
+            n_train: DEFAULT_N_TRAIN,
+            n_test: DEFAULT_N_TEST,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let strs = |key: &str| -> Result<Vec<String>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect()
+        };
+        let nums = |key: &str| -> Result<Vec<u32>> {
+            v.get(key)?.as_arr()?.iter().map(|n| n.as_u32()).collect()
+        };
+        let mut cfg = SweepConfig::default_grid(strs("models")?, v.get("steps")?.as_u64()?);
+        if v.opt("algs").is_some() {
+            cfg.algs = strs("algs")?;
+        }
+        if v.opt("mn_values").is_some() {
+            cfg.mn_values = nums("mn_values")?;
+        }
+        if v.opt("p_offsets").is_some() {
+            cfg.p_offsets = nums("p_offsets")?;
+        }
+        if let Some(s) = v.opt("seed") {
+            cfg.seed = s.as_u64()?;
+        }
+        if let Some(s) = v.opt("n_train") {
+            cfg.n_train = s.as_usize()?;
+        }
+        if let Some(s) = v.opt("n_test") {
+            cfg.n_test = s.as_usize()?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Expand to concrete runs. `largest_k` is the model's K* so the grid is
+    /// anchored at the model's data-type bound (paper §5.1).
+    pub fn expand_for_model(&self, model: &str, largest_k: usize) -> Vec<RunConfig> {
+        let mut out = Vec::new();
+        for &mn in &self.mn_values {
+            let dt = data_type_bound(DotShape {
+                k: largest_k,
+                m_bits: mn,
+                n_bits: mn,
+                x_signed: false,
+            })
+            .min(32);
+            for &off in &self.p_offsets {
+                let p = dt.saturating_sub(off).max(4);
+                // A2Q treats P as a free design variable (one run per P).
+                if self.algs.iter().any(|a| a == "a2q") {
+                    let mut rc = RunConfig::new(model, "a2q", mn, mn, p, self.steps);
+                    rc.seed = self.seed;
+                    rc.n_train = self.n_train;
+                    rc.n_test = self.n_test;
+                    out.push(rc);
+                }
+            }
+            // The QAT baseline is accumulator-oblivious: its training is
+            // identical for every P, and its only *safe* deployment width is
+            // the data-type bound. One run per (M, N).
+            if self.algs.iter().any(|a| a == "qat") {
+                let mut rc = RunConfig::new(model, "qat", mn, mn, dt, self.steps);
+                rc.seed = self.seed;
+                rc.n_train = self.n_train;
+                rc.n_test = self.n_test;
+                out.push(rc);
+            }
+        }
+        if self.algs.iter().any(|a| a == "float") {
+            // One float reference per model: bit widths are ignored by the
+            // float graph; pin them for a stable resume key.
+            let mut rc = RunConfig::new(model, "float", 8, 8, 32, self.steps);
+            rc.seed = self.seed;
+            rc.n_train = self.n_train;
+            rc.n_test = self.n_test;
+            out.push(rc);
+        }
+        // The QAT heuristic cannot act on P (its effective accumulator is
+        // its data-type bound): dedup identical tuples.
+        out.sort_by(|a, b| {
+            (a.alg.clone(), a.m, a.n, a.p).cmp(&(b.alg.clone(), b.m, b.n, b.p))
+        });
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = RunConfig::new("cnn", "a2q", 6, 6, 16, 100);
+        assert!(c.validate().is_ok());
+        c.alg = "magic".into();
+        assert!(c.validate().is_err());
+        c.alg = "qat".into();
+        c.m = 9;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lr_schedule() {
+        let c = RunConfig::new("cnn", "a2q", 6, 6, 16, 1000);
+        assert_eq!(c.lr_at(1.0, 0), 1.0);
+        assert_eq!(c.lr_at(1.0, 199), 1.0);
+        assert_eq!(c.lr_at(1.0, 200), 0.5);
+        assert_eq!(c.lr_at(1.0, 400), 0.25);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = RunConfig::new("espcn", "qat", 5, 5, 14, 50);
+        c.lr = Some(2e-3);
+        c.seed = 7;
+        let back = RunConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn sweep_from_json_defaults() {
+        let v = Json::parse(r#"{"models": ["mlp"], "steps": 25}"#).unwrap();
+        let s = SweepConfig::from_json(&v).unwrap();
+        assert_eq!(s.models, vec!["mlp"]);
+        assert_eq!(s.mn_values, vec![6, 8]);
+    }
+
+    #[test]
+    fn sweep_expansion_anchored_at_bound() {
+        let mut sweep = SweepConfig::default_grid(vec!["mlp".into()], 10);
+        sweep.algs.push("float".into());
+        let runs = sweep.expand_for_model("mlp", 784);
+        assert!(!runs.is_empty());
+        let dt = data_type_bound(DotShape { k: 784, m_bits: 8, n_bits: 8, x_signed: false });
+        assert!(runs.iter().any(|r| r.m == 8 && r.p == dt && r.alg == "a2q"));
+        assert_eq!(runs.iter().filter(|r| r.alg == "float").count(), 1);
+        assert!(runs.iter().all(|r| r.p >= 4 && r.p <= 32));
+        for r in &runs {
+            r.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn sweep_dedups() {
+        let mut sweep = SweepConfig::default_grid(vec!["mlp".into()], 10);
+        sweep.p_offsets = vec![0, 0, 0];
+        let runs = sweep.expand_for_model("mlp", 784);
+        let mut uniq = runs.clone();
+        uniq.dedup();
+        assert_eq!(runs.len(), uniq.len());
+    }
+}

@@ -1,0 +1,138 @@
+//! Checkpointing: serialize a training state (flattened leaves + the
+//! manifest's layout) to a single JSON file, restore it later.
+//!
+//! JSON-of-f32 keeps the format debuggable and dependency-free; our largest
+//! state (cnn + SGD momentum) is a few MB on disk, well within budget. The
+//! layout recorded alongside the data lets restore detect drift between the
+//! checkpoint and the current artifacts.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::json::Json;
+use crate::runtime::{ModelManifest, TrainState};
+use crate::tensor::Tensor;
+
+struct Entry {
+    path: String,
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+pub struct Checkpoint {
+    pub model: String,
+    pub alg: String,
+    pub step: u64,
+    entries: Vec<Entry>,
+}
+
+impl Checkpoint {
+    /// Capture the current state.
+    pub fn capture(
+        manifest: &ModelManifest,
+        alg: &str,
+        step: u64,
+        state: &TrainState,
+    ) -> Result<Self> {
+        let tensors = state.to_tensors()?;
+        anyhow::ensure!(tensors.len() == manifest.state.len(), "state length drift");
+        let entries = tensors
+            .iter()
+            .zip(&manifest.state)
+            .map(|(t, meta)| Entry {
+                path: meta.path.clone(),
+                shape: t.shape().to_vec(),
+                data: t.data().to_vec(),
+            })
+            .collect();
+        Ok(Checkpoint { model: manifest.name.clone(), alg: alg.to_string(), step, entries })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("alg", Json::str(&self.alg)),
+            ("step", Json::num(self.step as f64)),
+            (
+                "entries",
+                Json::arr(self.entries.iter().map(|e| {
+                    Json::obj(vec![
+                        ("path", Json::str(&e.path)),
+                        ("shape", Json::from_usizes(&e.shape)),
+                        ("data", Json::from_f32s(&e.data)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let entries = v
+            .get("entries")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(Entry {
+                    path: e.get("path")?.as_str()?.to_string(),
+                    shape: e.get("shape")?.as_usize_vec()?,
+                    data: e
+                        .get("data")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| Ok(x.as_f64()? as f32))
+                        .collect::<Result<Vec<f32>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Checkpoint {
+            model: v.get("model")?.as_str()?.to_string(),
+            alg: v.get("alg")?.as_str()?.to_string(),
+            step: v.get("step")?.as_u64()?,
+            entries,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Restore into a device-resident state, validating the layout against
+    /// the manifest (shape or path drift is an error, not a crash later).
+    pub fn restore(&self, manifest: &ModelManifest) -> Result<TrainState> {
+        anyhow::ensure!(
+            self.model == manifest.name,
+            "checkpoint is for {}, manifest is {}",
+            self.model,
+            manifest.name
+        );
+        anyhow::ensure!(
+            self.entries.len() == manifest.state.len(),
+            "checkpoint has {} leaves, manifest {}",
+            self.entries.len(),
+            manifest.state.len()
+        );
+        let mut tensors = Vec::with_capacity(self.entries.len());
+        for (e, meta) in self.entries.iter().zip(&manifest.state) {
+            anyhow::ensure!(e.path == meta.path, "leaf {} vs {}", e.path, meta.path);
+            anyhow::ensure!(
+                e.shape == meta.shape,
+                "shape drift on {}: {:?} vs {:?}",
+                e.path,
+                e.shape,
+                meta.shape
+            );
+            tensors.push(Tensor::new(e.shape.clone(), e.data.clone()));
+        }
+        TrainState::from_tensors(&tensors)
+    }
+}

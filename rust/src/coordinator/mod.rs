@@ -1,0 +1,19 @@
+//! The L3 coordinator: the training loop, the (M, N, P) grid-search
+//! scheduler, checkpointing and the metrics sink.
+//!
+//! Threading model: PJRT handles (`xla::PjRtClient` and friends) hold raw
+//! pointers and are not `Send`, so all executions happen on one dedicated
+//! worker thread that owns the [`crate::runtime::Engine`]; the tokio side
+//! ([`sweep`]) feeds it jobs over a channel, streams results to the JSONL
+//! sink, and supports resume by skipping configs already on disk. XLA's CPU
+//! backend parallelizes *inside* each executable, so a single worker already
+//! saturates the machine for our workloads.
+
+pub mod checkpoint;
+pub mod sink;
+pub mod sweep;
+pub mod trainer;
+
+pub use sink::{MetricsSink, RunRecord};
+pub use sweep::run_sweep;
+pub use trainer::{TrainOutcome, Trainer};

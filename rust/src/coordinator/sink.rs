@@ -1,0 +1,183 @@
+//! Metrics sink: append-only JSONL of run records, with resume support.
+
+use std::io::{BufRead, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::json::Json;
+
+use super::trainer::TrainOutcome;
+
+/// The durable record of one grid-search run.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub config: RunConfig,
+    /// Final-eval task performance (accuracy in [0,1] or PSNR dB).
+    pub perf: f64,
+    /// Exported-weight unstructured sparsity over constrained layers.
+    pub sparsity: f64,
+    /// Per-layer max per-channel integer l1 norms.
+    pub l1_norms: Vec<f64>,
+    /// Eq. 15 audit result.
+    pub guarantee_ok: bool,
+    pub final_loss: f64,
+    pub first_loss: f64,
+    pub train_secs: f64,
+}
+
+impl RunRecord {
+    pub fn from_outcome(o: &TrainOutcome) -> Self {
+        RunRecord {
+            config: o.config.clone(),
+            perf: o.perf,
+            sparsity: o.sparsity,
+            l1_norms: o.l1_norms.clone(),
+            guarantee_ok: o.guarantee_ok,
+            final_loss: o.loss_history.last().map(|(_, l)| *l).unwrap_or(f64::NAN),
+            first_loss: o.loss_history.first().map(|(_, l)| *l).unwrap_or(f64::NAN),
+            train_secs: o.train_secs,
+        }
+    }
+
+    /// Identity key for resume (config uniquely identifies a run).
+    pub fn key(cfg: &RunConfig) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}|{}",
+            cfg.model, cfg.alg, cfg.m, cfg.n, cfg.p, cfg.steps, cfg.seed
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("perf", Json::num(self.perf)),
+            ("sparsity", Json::num(self.sparsity)),
+            ("l1_norms", Json::from_f64s(&self.l1_norms)),
+            ("guarantee_ok", Json::Bool(self.guarantee_ok)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("first_loss", Json::num(self.first_loss)),
+            ("train_secs", Json::num(self.train_secs)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(RunRecord {
+            config: RunConfig::from_json(v.get("config")?)?,
+            perf: v.get("perf")?.as_f64()?,
+            sparsity: v.get("sparsity")?.as_f64()?,
+            l1_norms: v.get("l1_norms")?.as_f64_vec()?,
+            guarantee_ok: v.get("guarantee_ok")?.as_bool()?,
+            final_loss: v.get("final_loss")?.as_f64()?,
+            first_loss: v.get("first_loss")?.as_f64()?,
+            train_secs: v.get("train_secs")?.as_f64()?,
+        })
+    }
+}
+
+/// Append-only JSONL sink.
+pub struct MetricsSink {
+    path: PathBuf,
+}
+
+impl MetricsSink {
+    pub fn new(path: impl AsRef<Path>) -> Self {
+        MetricsSink { path: path.as_ref().to_path_buf() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record (creates parent dirs / file on first use).
+    pub fn append(&self, record: &RunRecord) -> Result<()> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", record.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load every record currently on disk (empty if the file is absent).
+    pub fn load(&self) -> Result<Vec<RunRecord>> {
+        let file = match std::fs::File::open(&self.path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        };
+        let mut out = Vec::new();
+        for (i, line) in std::io::BufReader::new(file).lines().enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = RunRecord::from_json(&Json::parse(&line)?)
+                .map_err(|e| anyhow::anyhow!("{:?} line {}: {e}", self.path, i + 1))?;
+            out.push(rec);
+        }
+        Ok(out)
+    }
+
+    /// Keys of configs already completed (for resume).
+    pub fn completed_keys(&self) -> Result<std::collections::HashSet<String>> {
+        Ok(self
+            .load()?
+            .iter()
+            .map(|r| RunRecord::key(&r.config))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    fn record(p: u32) -> RunRecord {
+        RunRecord {
+            config: RunConfig::new("mlp", "a2q", 8, 8, p, 10),
+            perf: 0.9,
+            sparsity: 0.5,
+            l1_norms: vec![12.0],
+            guarantee_ok: true,
+            final_loss: 0.1,
+            first_loss: 0.7,
+            train_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn append_and_load_round_trip() {
+        let dir = TempDir::new().unwrap();
+        let sink = MetricsSink::new(dir.path().join("runs.jsonl"));
+        sink.append(&record(16)).unwrap();
+        sink.append(&record(12)).unwrap();
+        let recs = sink.load().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].config.p, 12);
+        assert_eq!(recs[0].l1_norms, vec![12.0]);
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let dir = TempDir::new().unwrap();
+        let sink = MetricsSink::new(dir.path().join("nope.jsonl"));
+        assert!(sink.load().unwrap().is_empty());
+        assert!(sink.completed_keys().unwrap().is_empty());
+    }
+
+    #[test]
+    fn resume_keys() {
+        let dir = TempDir::new().unwrap();
+        let sink = MetricsSink::new(dir.path().join("runs.jsonl"));
+        sink.append(&record(16)).unwrap();
+        let keys = sink.completed_keys().unwrap();
+        assert!(keys.contains(&RunRecord::key(&record(16).config)));
+        assert!(!keys.contains(&RunRecord::key(&record(12).config)));
+    }
+}

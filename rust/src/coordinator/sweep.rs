@@ -1,0 +1,113 @@
+//! Grid-search scheduler: a dedicated PJRT worker thread plus a streaming
+//! result channel.
+//!
+//! PJRT handles are not `Send`, so one OS thread owns the
+//! [`Engine`](crate::runtime::Engine) and executes jobs sequentially (XLA's
+//! CPU backend parallelizes inside each executable); the scheduler streams
+//! jobs in, streams [`RunRecord`]s out to the JSONL sink as they finish, and
+//! skips configs already completed on disk (resume).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, SweepConfig};
+use crate::runtime::{artifact::ModelManifest, Engine};
+
+use super::sink::{MetricsSink, RunRecord};
+use super::trainer::Trainer;
+
+/// Expand a sweep against the manifests on disk (needs K* per model).
+pub fn expand_sweep(cfg: &SweepConfig, artifacts_dir: &PathBuf) -> Result<Vec<RunConfig>> {
+    let mut runs = Vec::new();
+    for model in &cfg.models {
+        let manifest = ModelManifest::load(artifacts_dir, model)?;
+        runs.extend(cfg.expand_for_model(model, manifest.largest_k));
+    }
+    Ok(runs)
+}
+
+/// Run every config in the sweep, appending records to `sink_path` as they
+/// complete. Returns all records (existing + new) at the end.
+pub fn run_sweep(
+    cfg: SweepConfig,
+    artifacts_dir: PathBuf,
+    sink_path: PathBuf,
+    verbose: bool,
+) -> Result<Vec<RunRecord>> {
+    let sink = MetricsSink::new(&sink_path);
+    let done = sink.completed_keys()?;
+    let all = expand_sweep(&cfg, &artifacts_dir)?;
+    let todo: Vec<RunConfig> = all
+        .into_iter()
+        .filter(|r| !done.contains(&RunRecord::key(r)))
+        .collect();
+    let total = todo.len();
+    if verbose {
+        println!(
+            "[sweep] {} configs to run ({} already complete in {:?})",
+            total,
+            done.len(),
+            sink_path
+        );
+    }
+
+    let (tx, rx) = mpsc::channel::<Result<RunRecord>>();
+
+    // Dedicated PJRT worker thread: owns the Engine, runs jobs in order.
+    // Trainers (and their compiled executables) are cached per model by the
+    // Engine's compile cache, so consecutive configs of the same model reuse
+    // compilation.
+    let worker = std::thread::spawn(move || {
+        let engine = match Engine::new(&artifacts_dir) {
+            Ok(e) => e,
+            Err(e) => {
+                let _ = tx.send(Err(e));
+                return;
+            }
+        };
+        for rc in todo {
+            let result = (|| {
+                let trainer = Trainer::new(&engine, &rc)?;
+                let outcome = trainer.run(&rc)?;
+                Ok(RunRecord::from_outcome(&outcome))
+            })();
+            if tx.send(result).is_err() {
+                break; // scheduler gone
+            }
+        }
+    });
+
+    let mut finished = 0usize;
+    for result in rx {
+        let record = result?;
+        sink.append(&record)?;
+        finished += 1;
+        if verbose {
+            println!(
+                "[sweep] {}/{} {} {} M={} N={} P={} -> perf {:.4} sparsity {:.3} ({:.1}s)",
+                finished,
+                total,
+                record.config.model,
+                record.config.alg,
+                record.config.m,
+                record.config.n,
+                record.config.p,
+                record.perf,
+                record.sparsity,
+                record.train_secs,
+            );
+        }
+    }
+    worker.join().map_err(|_| anyhow::anyhow!("sweep worker panicked"))?;
+    sink.load()
+}
+
+/// Synchronous single-run helper used by the CLI `train` command and tests.
+pub fn run_single(artifacts_dir: &PathBuf, rc: &RunConfig) -> Result<RunRecord> {
+    let engine = Engine::new(artifacts_dir)?;
+    let trainer = Trainer::new(&engine, rc)?;
+    let outcome = trainer.run(rc)?;
+    Ok(RunRecord::from_outcome(&outcome))
+}

@@ -1,0 +1,276 @@
+//! Single-run training driver: epochs over a synthetic dataset, LR schedule,
+//! evaluation, deployment export and the overflow-guarantee audit.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::datasets::{self, Dataset, Split};
+use crate::finn::estimate::BitSpec;
+use crate::metrics::{self, LossTracker};
+use crate::quant::a2q::row_satisfies_cap;
+use crate::rng::Rng;
+use crate::runtime::{Engine, ExportedLayer, ModelManifest, TrainState};
+use crate::tensor::Tensor;
+
+/// Everything a finished run produces.
+pub struct TrainOutcome {
+    pub config: RunConfig,
+    /// (step, loss) for every optimizer step.
+    pub loss_history: Vec<(u64, f64)>,
+    /// Test-set task performance: top-1 accuracy in [0,1] or PSNR in dB.
+    pub perf: f64,
+    /// Unstructured sparsity of the exported integer weights (hidden layers).
+    pub sparsity: f64,
+    /// Per-layer max per-channel integer l1 norm (for PTM bounds, Fig. 6).
+    pub l1_norms: Vec<f64>,
+    /// Whether every layer's exported codes satisfy Eq. 15 at its (N, P).
+    pub guarantee_ok: bool,
+    /// Final training state (for checkpointing / further analysis).
+    pub state: TrainState,
+    /// Exported deployment layers (None for the float baseline).
+    pub exported: Option<Vec<ExportedLayer>>,
+    /// Wall-clock seconds spent in the step loop.
+    pub train_secs: f64,
+}
+
+/// Drives one model's artifacts against one dataset.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub manifest: ModelManifest,
+    pub dataset: Dataset,
+}
+
+impl<'e> Trainer<'e> {
+    /// Set up for `cfg.model`, generating its default synthetic dataset.
+    pub fn new(engine: &'e Engine, cfg: &RunConfig) -> Result<Self> {
+        let manifest = engine.manifest(&cfg.model)?;
+        let ds_name = datasets::default_for_model(&cfg.model);
+        let dataset = datasets::by_name(ds_name, cfg.n_train, cfg.n_test, cfg.seed)?;
+        Ok(Trainer { engine, manifest, dataset })
+    }
+
+    /// With an explicit dataset (tests, custom workloads).
+    pub fn with_dataset(engine: &'e Engine, model: &str, dataset: Dataset) -> Result<Self> {
+        let manifest = engine.manifest(model)?;
+        Ok(Trainer { engine, manifest, dataset })
+    }
+
+    /// Run the full training loop + evaluation + export for one config.
+    pub fn run(&self, cfg: &RunConfig) -> Result<TrainOutcome> {
+        cfg.validate()?;
+        let bits = cfg.bits();
+        let base_lr = cfg.lr.unwrap_or(self.manifest.lr);
+        let bs = self.manifest.batch_size;
+
+        let mut state = self.engine.init(&self.manifest, cfg.seed as f32)?;
+        let mut rng = Rng::new(cfg.seed ^ 0x7a31_9e55);
+        let mut tracker = LossTracker::new(0.05);
+        let mut step = 0u64;
+        let t0 = Instant::now();
+
+        // The paper initializes QNNs from float models pre-trained to
+        // convergence (Appendix B.1). The state layout is algorithm-
+        // independent, so we emulate that by spending the first
+        // `float_warmup_frac` of the budget on the float train artifact and
+        // switching to the quantized one afterwards.
+        let warmup = if cfg.alg == "float" {
+            0
+        } else {
+            (cfg.steps as f64 * cfg.float_warmup_frac) as u64
+        };
+
+        'outer: loop {
+            for idx in self.dataset.epoch(Split::Train, bs, &mut rng) {
+                if step >= cfg.steps {
+                    break 'outer;
+                }
+                let batch = self.dataset.gather(Split::Train, &idx);
+                let lr = cfg.lr_at(base_lr, step) as f32;
+                if warmup > 0 && step == warmup {
+                    // Switching float -> quantized: re-calibrate the
+                    // quantizer parameters from the warmed-up weights (what
+                    // brevitas does when loading a float checkpoint).
+                    self.recalibrate_quantizers(&mut state, cfg)?;
+                }
+                let alg = if step < warmup { "float" } else { cfg.alg.as_str() };
+                let loss = self.engine.train_step(
+                    &self.manifest,
+                    alg,
+                    &mut state,
+                    &batch.x,
+                    &batch.y,
+                    bits,
+                    lr,
+                )?;
+                anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+                tracker.push(step, loss as f64);
+                step += 1;
+            }
+            if step >= cfg.steps {
+                break;
+            }
+        }
+        let train_secs = t0.elapsed().as_secs_f64();
+
+        let perf = self.evaluate(&state, &cfg.alg, bits)?;
+        let (exported, sparsity, l1_norms, guarantee_ok) = if cfg.alg == "float" {
+            (None, 0.0, Vec::new(), true)
+        } else {
+            let layers = self.engine.export(&self.manifest, &cfg.alg, &state, bits)?;
+            let (sp, l1s, ok) = self.audit(&layers, bits, &cfg.alg);
+            (Some(layers), sp, l1s, ok)
+        };
+
+        Ok(TrainOutcome {
+            config: cfg.clone(),
+            loss_history: tracker.history.clone(),
+            perf,
+            sparsity,
+            l1_norms,
+            guarantee_ok,
+            state,
+            exported,
+            train_secs,
+        })
+    }
+
+    /// Re-initialize per-channel quantizer parameters from the *current*
+    /// weights: `d = log2(max|v_c| / (2^(M-1)-1))`, `t = log2(||v_c||_1)`
+    /// (the same rules `layers._with_qparams` applies at init), and clear
+    /// their momentum/Adam slots so the optimizer does not drag them back
+    /// toward the stale values.
+    fn recalibrate_quantizers(&self, state: &mut TrainState, cfg: &RunConfig) -> Result<()> {
+        let mut tensors = state.to_tensors()?;
+        let find = |path: &str| self.manifest.state.iter().position(|e| e.path == path);
+        for q in &self.manifest.qlayers {
+            let m_bits = match q.m_bits.to_bitspec()? {
+                crate::finn::estimate::BitSpec::Fixed(v) => v,
+                _ => cfg.m,
+            };
+            let vmax = (2f32.powi(m_bits as i32 - 1) - 1.0).max(1.0);
+            let vi = find(&format!("params/{}/v", q.name))
+                .ok_or_else(|| anyhow::anyhow!("missing v for {}", q.name))?;
+            let v = tensors[vi].clone();
+            for (name, f) in [
+                ("d", true),  // log2(max_abs / (2^(M-1)-1))
+                ("t", false), // log2(l1)
+            ] {
+                let Some(pi) = find(&format!("params/{}/{}", q.name, name)) else {
+                    continue;
+                };
+                for c in 0..v.rows() {
+                    let row = v.row(c);
+                    let val = if f {
+                        let max_abs = row.iter().fold(0f32, |a, x| a.max(x.abs())).max(1e-8);
+                        (max_abs / vmax).log2()
+                    } else {
+                        row.iter().map(|x| x.abs()).sum::<f32>().max(1e-8).log2()
+                    };
+                    tensors[pi].data_mut()[c] = val;
+                }
+                // zero the optimizer slots for this leaf (mom / m / v trees)
+                for prefix in ["mom", "m", "v"] {
+                    if let Some(oi) = find(&format!("{prefix}/{}/{}", q.name, name)) {
+                        tensors[oi].data_mut().fill(0.0);
+                    }
+                }
+            }
+        }
+        *state = TrainState::from_tensors(&tensors)?;
+        Ok(())
+    }
+
+    /// Test-set performance at the given bit widths.
+    pub fn evaluate(&self, state: &TrainState, alg: &str, bits: (u32, u32, u32)) -> Result<f64> {
+        let bs = self.manifest.batch_size;
+        if self.manifest.task == "classify" {
+            let (mut correct, mut total) = (0u64, 0u64);
+            for (idx, n_valid) in self.dataset.eval_batches(Split::Test, bs) {
+                let b = self.dataset.gather(Split::Test, &idx);
+                let logits = self.engine.infer(&self.manifest, alg, state, &b.x, bits)?;
+                let (c, n) = metrics::top1_accuracy(&logits, b.y.data(), n_valid);
+                correct += c;
+                total += n;
+            }
+            Ok(correct as f64 / total.max(1) as f64)
+        } else {
+            let (mut sse_acc, mut count) = (0.0f64, 0u64);
+            for (idx, n_valid) in self.dataset.eval_batches(Split::Test, bs) {
+                let b = self.dataset.gather(Split::Test, &idx);
+                let pred = self.engine.infer(&self.manifest, alg, state, &b.x, bits)?;
+                let (s, n) = metrics::sse(&pred, &b.y, n_valid);
+                sse_acc += s;
+                count += n;
+            }
+            Ok(metrics::psnr_from_sse(sse_acc, count))
+        }
+    }
+
+    /// Sparsity / l1 norms / Eq. 15 audit over exported hidden layers.
+    ///
+    /// For A2Q the guarantee must hold on *every* layer at its resolved
+    /// (N, P); QAT has no guarantee and is audited informationally only
+    /// (its `guarantee_ok` reports whether it happened to satisfy Eq. 15).
+    fn audit(
+        &self,
+        layers: &[ExportedLayer],
+        bits: (u32, u32, u32),
+        _alg: &str,
+    ) -> (f64, Vec<f64>, bool) {
+        let (m, n, p) = bits;
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        let mut l1_norms = Vec::with_capacity(layers.len());
+        let mut ok = true;
+        for (layer, meta) in layers.iter().zip(&self.manifest.qlayers) {
+            let q = layer.to_qtensor();
+            // sparsity over hidden (runtime-P) layers, matching Fig. 5 which
+            // studies the constrained layers
+            if meta.p_bits.to_bitspec().map(|b| b.is_runtime_p()).unwrap_or(false) {
+                zeros += q.codes.iter().filter(|c| **c == 0).count();
+                total += q.codes.len();
+            }
+            l1_norms.push(q.max_l1() as f64);
+            let n_res = meta
+                .n_bits
+                .to_bitspec()
+                .map(|b| b.resolve(m, n, p))
+                .unwrap_or(8);
+            let p_res = meta
+                .p_bits
+                .to_bitspec()
+                .map(|b| b.resolve(m, n, p))
+                .unwrap_or(32);
+            if matches!(meta.p_bits.to_bitspec(), Ok(BitSpec::P)) {
+                for c in 0..q.c_out {
+                    let row: Vec<f32> = q.row(c).iter().map(|v| *v as f32).collect();
+                    if !row_satisfies_cap(&row, p_res, n_res, meta.x_signed) {
+                        ok = false;
+                    }
+                }
+            }
+        }
+        let sparsity = if total == 0 { 0.0 } else { zeros as f64 / total as f64 };
+        (sparsity, l1_norms, ok)
+    }
+
+    /// Run inference over the test set and return raw outputs (figure code).
+    pub fn infer_test(
+        &self,
+        state: &TrainState,
+        alg: &str,
+        bits: (u32, u32, u32),
+        max_batches: usize,
+    ) -> Result<Vec<(Tensor, Tensor, usize)>> {
+        let bs = self.manifest.batch_size;
+        let mut out = Vec::new();
+        for (idx, n_valid) in self.dataset.eval_batches(Split::Test, bs).into_iter().take(max_batches) {
+            let b = self.dataset.gather(Split::Test, &idx);
+            let pred = self.engine.infer(&self.manifest, alg, state, &b.x, bits)?;
+            out.push((pred, b.y, n_valid));
+        }
+        Ok(out)
+    }
+}

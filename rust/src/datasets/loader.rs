@@ -1,0 +1,167 @@
+//! Dataset container + deterministic shuffled batching for the training loop.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Which half of the fixed split to read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// One training batch: inputs plus targets (class labels carried as f32 for
+/// the all-f32 artifact interface, or SR target images).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Tensor,
+}
+
+/// An in-memory dataset with a fixed train/test split.
+///
+/// `x_shape` / `y_shape` are *per-sample* shapes; samples are stored
+/// row-major and materialized into contiguous batch tensors on demand.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: &'static str,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    train_x: Vec<f32>,
+    train_y: Vec<f32>,
+    test_x: Vec<f32>,
+    test_y: Vec<f32>,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+impl Dataset {
+    pub fn new(
+        name: &'static str,
+        x_shape: Vec<usize>,
+        y_shape: Vec<usize>,
+        train_x: Vec<f32>,
+        train_y: Vec<f32>,
+        test_x: Vec<f32>,
+        test_y: Vec<f32>,
+    ) -> Self {
+        let xs: usize = x_shape.iter().product();
+        let ys: usize = y_shape.iter().product::<usize>().max(1);
+        let n_train = train_x.len() / xs;
+        let n_test = test_x.len() / xs;
+        assert_eq!(train_x.len(), n_train * xs);
+        assert_eq!(train_y.len(), n_train * ys);
+        assert_eq!(test_y.len(), n_test * ys);
+        Dataset { name, x_shape, y_shape, train_x, train_y, test_x, test_y, n_train, n_test }
+    }
+
+    fn raw(&self, split: Split) -> (&[f32], &[f32], usize) {
+        match split {
+            Split::Train => (&self.train_x, &self.train_y, self.n_train),
+            Split::Test => (&self.test_x, &self.test_y, self.n_test),
+        }
+    }
+
+    pub fn len(&self, split: Split) -> usize {
+        self.raw(split).2
+    }
+
+    /// Materialize the batch for the given sample indices.
+    pub fn gather(&self, split: Split, idx: &[usize]) -> Batch {
+        let (xs, ys, n) = self.raw(split);
+        let xd: usize = self.x_shape.iter().product();
+        let yd: usize = self.y_shape.iter().product::<usize>().max(1);
+        let mut x = Vec::with_capacity(idx.len() * xd);
+        let mut y = Vec::with_capacity(idx.len() * yd);
+        for &i in idx {
+            assert!(i < n, "index {i} out of range {n}");
+            x.extend_from_slice(&xs[i * xd..(i + 1) * xd]);
+            y.extend_from_slice(&ys[i * yd..(i + 1) * yd]);
+        }
+        let mut bx = vec![idx.len()];
+        bx.extend(&self.x_shape);
+        let mut by = vec![idx.len()];
+        by.extend(&self.y_shape);
+        Batch { x: Tensor::new(bx, x), y: Tensor::new(by, y) }
+    }
+
+    /// Deterministic epoch iterator: shuffled index order, fixed batch size,
+    /// drops the ragged tail (HLO artifacts are shape-static).
+    pub fn epoch(&self, split: Split, batch_size: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        let n = self.len(split);
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        idx.chunks(batch_size)
+            .filter(|c| c.len() == batch_size)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// Sequential full-coverage batches for evaluation, padding the tail by
+    /// wrapping (callers weight by `n_valid` to keep metrics exact).
+    pub fn eval_batches(&self, split: Split, batch_size: usize) -> Vec<(Vec<usize>, usize)> {
+        let n = self.len(split);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let mut idx = Vec::with_capacity(batch_size);
+            let n_valid = (n - i).min(batch_size);
+            for j in 0..batch_size {
+                idx.push((i + j) % n);
+            }
+            out.push((idx, n_valid));
+            i += batch_size;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        // 5 train / 3 test samples of shape [2], scalar labels
+        Dataset::new(
+            "toy",
+            vec![2],
+            vec![],
+            (0..10).map(|v| v as f32).collect(),
+            (0..5).map(|v| v as f32).collect(),
+            (0..6).map(|v| (100 + v) as f32).collect(),
+            (0..3).map(|v| v as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let d = toy();
+        let b = d.gather(Split::Train, &[0, 2]);
+        assert_eq!(b.x.shape(), &[2, 2]);
+        assert_eq!(b.x.data(), &[0.0, 1.0, 4.0, 5.0]);
+        assert_eq!(b.y.data(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn epoch_covers_without_ragged_tail() {
+        let d = toy();
+        let mut rng = Rng::new(0);
+        let batches = d.epoch(Split::Train, 2, &mut rng);
+        assert_eq!(batches.len(), 2); // 5 samples, bs=2 -> drop tail
+        let mut seen: Vec<usize> = batches.concat();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 4);
+    }
+
+    #[test]
+    fn eval_batches_cover_everything() {
+        let d = toy();
+        let batches = d.eval_batches(Split::Test, 2);
+        let covered: usize = batches.iter().map(|(_, v)| v).sum();
+        assert_eq!(covered, 3);
+        for (idx, _) in &batches {
+            assert_eq!(idx.len(), 2); // padded to batch size
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Synthetic dataset substrates (DESIGN.md substitution table).
+//!
+//! The paper evaluates on MNIST / CIFAR10 / BSD300. A2Q's claims are about
+//! arithmetic — overflow, norm constraints, resource cost — not dataset
+//! semantics, so we substitute deterministic synthetic sets with identical
+//! tensor shapes and dtypes, non-trivial learnable structure, and fixed
+//! train/test splits:
+//!
+//! * [`synth_mnist`] — 28x28 **1-bit** binary stroke images, 2 classes
+//!   (the Fig. 2 motivating task: K = 784, N = 1).
+//! * [`synth_cifar`] — 16x16x3 images on the 8-bit grid, 10 classes built
+//!   from smooth class prototypes plus noise.
+//! * [`synth_bsd`]   — band-limited grayscale textures for 3x single-image
+//!   super-resolution: 48x48 high-res targets, 16x16 box-downsampled inputs.
+//!
+//! All generation is seeded [`crate::rng::Rng`]; every experiment is
+//! bit-reproducible.
+
+pub mod loader;
+pub mod synth_bsd;
+pub mod synth_cifar;
+pub mod synth_mnist;
+
+pub use loader::{Batch, Dataset, Split};
+
+/// Snap a float in [0, 1] onto the B-bit unsigned grid (emulating B-bit
+/// image data, so "8-bit images" are exactly representable downstream).
+pub fn snap_to_grid(v: f64, bits: u32) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f64;
+    ((v.clamp(0.0, 1.0) * levels).round() / levels) as f32
+}
+
+/// Build the dataset named in a config: "synth_mnist" | "synth_cifar" |
+/// "synth_bsd".
+pub fn by_name(name: &str, n_train: usize, n_test: usize, seed: u64) -> anyhow::Result<Dataset> {
+    match name {
+        "synth_mnist" => Ok(synth_mnist::generate(n_train, n_test, seed)),
+        "synth_cifar" => Ok(synth_cifar::generate(n_train, n_test, seed)),
+        "synth_bsd" => Ok(synth_bsd::generate(n_train, n_test, seed)),
+        other => Err(anyhow::anyhow!("unknown dataset {other:?}")),
+    }
+}
+
+/// Default dataset for each model in the zoo.
+pub fn default_for_model(model: &str) -> &'static str {
+    match model {
+        "mlp" => "synth_mnist",
+        "cnn" | "resnet" => "synth_cifar",
+        _ => "synth_bsd",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_snapping() {
+        assert_eq!(snap_to_grid(0.0, 8), 0.0);
+        assert_eq!(snap_to_grid(1.0, 8), 1.0);
+        let v = snap_to_grid(0.5, 8);
+        assert!((v * 255.0 - (v * 255.0).round()).abs() < 1e-6);
+        // 1-bit grid is {0, 1}
+        assert_eq!(snap_to_grid(0.49, 1), 0.0);
+        assert_eq!(snap_to_grid(0.51, 1), 1.0);
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        assert!(by_name("synth_mnist", 8, 4, 0).is_ok());
+        assert!(by_name("nope", 8, 4, 0).is_err());
+    }
+}

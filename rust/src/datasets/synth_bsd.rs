@@ -1,0 +1,155 @@
+//! BSD300 substitute for 3x single-image super-resolution: band-limited
+//! grayscale textures.
+//!
+//! Each sample is a 48x48 high-resolution patch built from a random mixture
+//! of oriented sinusoids (low through mid spatial frequencies) plus a soft
+//! edge, snapped to the 8-bit grid; the network input is its 3x3 box-
+//! downsampled 16x16 version. Super-resolving band-limited texture is
+//! exactly the regime where PSNR degrades smoothly with quantization, which
+//! is what the ESPCN/UNet rows of Figs. 4-6 measure.
+
+use super::{loader::Dataset, snap_to_grid};
+use crate::rng::Rng;
+
+pub const LR_SIDE: usize = 16;
+pub const FACTOR: usize = 3;
+pub const HR_SIDE: usize = LR_SIDE * FACTOR;
+pub const LR_DIM: usize = LR_SIDE * LR_SIDE;
+pub const HR_DIM: usize = HR_SIDE * HR_SIDE;
+
+fn draw_hr(rng: &mut Rng, hr: &mut [f64]) {
+    let n_waves = 3 + rng.below(4);
+    let waves: Vec<(f64, f64, f64, f64)> = (0..n_waves)
+        .map(|_| {
+            let theta = rng.uniform() * std::f64::consts::PI;
+            // wavelength 6..24 px: representable at LR after 3x downsampling
+            let freq = 2.0 * std::f64::consts::PI / (6.0 + rng.uniform() * 18.0);
+            let phase = rng.uniform() * 2.0 * std::f64::consts::PI;
+            let amp = 0.1 + rng.uniform() * 0.25;
+            (theta, freq, phase, amp)
+        })
+        .collect();
+    // one soft edge per patch
+    let edge_theta = rng.uniform() * std::f64::consts::PI;
+    let edge_off = (rng.uniform() - 0.5) * HR_SIDE as f64;
+    let edge_amp = rng.uniform() * 0.3;
+    for r in 0..HR_SIDE {
+        for c in 0..HR_SIDE {
+            let (x, y) = (c as f64 - HR_SIDE as f64 / 2.0, r as f64 - HR_SIDE as f64 / 2.0);
+            let mut v = 0.5;
+            for (theta, freq, phase, amp) in &waves {
+                let u = x * theta.cos() + y * theta.sin();
+                v += amp * (freq * u + phase).sin();
+            }
+            let d = x * edge_theta.cos() + y * edge_theta.sin() - edge_off;
+            v += edge_amp * (d / 2.0).tanh() * 0.5;
+            hr[r * HR_SIDE + c] = v;
+        }
+    }
+}
+
+fn box_downsample(hr: &[f32], lr: &mut [f32]) {
+    for r in 0..LR_SIDE {
+        for c in 0..LR_SIDE {
+            let mut acc = 0.0f64;
+            for dr in 0..FACTOR {
+                for dc in 0..FACTOR {
+                    acc += hr[(r * FACTOR + dr) * HR_SIDE + c * FACTOR + dc] as f64;
+                }
+            }
+            lr[r * LR_SIDE + c] = snap_to_grid(acc / (FACTOR * FACTOR) as f64, 8);
+        }
+    }
+}
+
+/// Generate the dataset: x = 16x16x1 low-res inputs, y = 48x48x1 targets.
+pub fn generate(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xb5d3_0003);
+    let mut hr_f64 = vec![0.0f64; HR_DIM];
+    let mut make = |n: usize, rng: &mut Rng| {
+        let mut xs = vec![0.0f32; n * LR_DIM];
+        let mut ys = vec![0.0f32; n * HR_DIM];
+        for i in 0..n {
+            draw_hr(rng, &mut hr_f64);
+            let hr_img = &mut ys[i * HR_DIM..(i + 1) * HR_DIM];
+            for (o, v) in hr_img.iter_mut().zip(&hr_f64) {
+                *o = snap_to_grid(*v, 8);
+            }
+            box_downsample(hr_img, &mut xs[i * LR_DIM..(i + 1) * LR_DIM]);
+        }
+        (xs, ys)
+    };
+    let (tx, ty) = make(n_train, &mut rng);
+    let (ex, ey) = make(n_test, &mut rng);
+    Dataset::new(
+        "synth_bsd",
+        vec![LR_SIDE, LR_SIDE, 1],
+        vec![HR_SIDE, HR_SIDE, 1],
+        tx,
+        ty,
+        ex,
+        ey,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Split;
+
+    #[test]
+    fn shapes_and_grid() {
+        let d = generate(8, 4, 0);
+        assert_eq!(d.x_shape, vec![16, 16, 1]);
+        assert_eq!(d.y_shape, vec![48, 48, 1]);
+        let b = d.gather(Split::Train, &[0, 1]);
+        assert_eq!(b.x.shape(), &[2, 16, 16, 1]);
+        assert_eq!(b.y.shape(), &[2, 48, 48, 1]);
+        for v in b.y.data() {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+
+    #[test]
+    fn downsample_consistency() {
+        // The LR input must equal the 3x3 box mean of the HR target (up to
+        // 8-bit snapping of both): nearest-neighbor 3x upsampling of the LR
+        // then re-downsampling must be a fixed point.
+        let d = generate(4, 0, 5);
+        let b = d.gather(Split::Train, &[0]);
+        for r in 0..LR_SIDE {
+            for c in 0..LR_SIDE {
+                let mut acc = 0.0f64;
+                for dr in 0..FACTOR {
+                    for dc in 0..FACTOR {
+                        acc += b.y.data()[(r * FACTOR + dr) * HR_SIDE + c * FACTOR + dc] as f64;
+                    }
+                }
+                let want = snap_to_grid(acc / 9.0, 8);
+                let got = b.x.data()[r * LR_SIDE + c];
+                assert!((want - got).abs() < 2.5 / 255.0, "LR({r},{c}) {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn texture_has_structure_not_noise() {
+        // Neighboring pixels must be correlated (band-limited textures),
+        // otherwise SR is information-theoretically hopeless.
+        let d = generate(4, 0, 7);
+        let b = d.gather(Split::Train, &[0]);
+        let y = b.y.data();
+        let mean = y.iter().map(|v| *v as f64).sum::<f64>() / HR_DIM as f64;
+        let mut cov = 0.0;
+        let mut var = 0.0;
+        for r in 0..HR_SIDE {
+            for c in 0..HR_SIDE - 1 {
+                let a = y[r * HR_SIDE + c] as f64 - mean;
+                let bb = y[r * HR_SIDE + c + 1] as f64 - mean;
+                cov += a * bb;
+                var += a * a;
+            }
+        }
+        assert!(cov / var > 0.7, "neighbor correlation {}", cov / var);
+    }
+}

@@ -1,0 +1,153 @@
+//! CIFAR10 substitute: 16x16x3 images on the 8-bit grid, 10 classes.
+//!
+//! Each class owns a smooth random prototype (a mixture of low-frequency
+//! color gradients and 2-3 Gaussian blobs); samples are the prototype under
+//! a random gain/shift plus pixel noise, snapped to the 8-bit grid. The
+//! structure is deliberately conv-friendly (local correlations, class-
+//! specific color statistics) and hard enough that accuracy degrades
+//! smoothly as quantization tightens — which is what Figs. 4-6 measure.
+
+use super::{loader::Dataset, snap_to_grid};
+use crate::rng::Rng;
+
+pub const SIDE: usize = 16;
+pub const CHANNELS: usize = 3;
+pub const DIM: usize = SIDE * SIDE * CHANNELS;
+pub const CLASSES: usize = 10;
+
+struct Prototype {
+    base: Vec<f64>, // DIM
+}
+
+fn make_prototype(rng: &mut Rng) -> Prototype {
+    let mut base = vec![0.0f64; DIM];
+    // low-frequency color gradient
+    let gx: Vec<f64> = (0..CHANNELS).map(|_| rng.normal() * 0.15).collect();
+    let gy: Vec<f64> = (0..CHANNELS).map(|_| rng.normal() * 0.15).collect();
+    let bias: Vec<f64> = (0..CHANNELS).map(|_| 0.35 + rng.uniform() * 0.3).collect();
+    // 2-3 colored Gaussian blobs
+    let n_blobs = 2 + rng.below(2);
+    let blobs: Vec<(f64, f64, f64, Vec<f64>)> = (0..n_blobs)
+        .map(|_| {
+            let cx = rng.uniform() * SIDE as f64;
+            let cy = rng.uniform() * SIDE as f64;
+            let sigma = 1.5 + rng.uniform() * 3.0;
+            let amp: Vec<f64> = (0..CHANNELS).map(|_| rng.normal() * 0.4).collect();
+            (cx, cy, sigma, amp)
+        })
+        .collect();
+    for r in 0..SIDE {
+        for c in 0..SIDE {
+            for ch in 0..CHANNELS {
+                let mut v = bias[ch]
+                    + gx[ch] * (c as f64 / SIDE as f64 - 0.5)
+                    + gy[ch] * (r as f64 / SIDE as f64 - 0.5);
+                for (cx, cy, sigma, amp) in &blobs {
+                    let d2 = (c as f64 - cx).powi(2) + (r as f64 - cy).powi(2);
+                    v += amp[ch] * (-d2 / (2.0 * sigma * sigma)).exp();
+                }
+                base[(r * SIDE + c) * CHANNELS + ch] = v;
+            }
+        }
+    }
+    Prototype { base }
+}
+
+fn draw_sample(rng: &mut Rng, proto: &Prototype, img: &mut [f32]) {
+    let gain = 0.85 + rng.uniform() * 0.3;
+    let shift = rng.normal() * 0.04;
+    for (o, b) in img.iter_mut().zip(&proto.base) {
+        let noisy = b * gain + shift + rng.normal() * 0.06;
+        *o = snap_to_grid(noisy, 8);
+    }
+}
+
+/// Generate the dataset with a fixed train/test split.
+pub fn generate(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xc1fa_0002);
+    let protos: Vec<Prototype> = (0..CLASSES).map(|_| make_prototype(&mut rng)).collect();
+    let make = |n: usize, rng: &mut Rng| {
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = vec![0.0f32; n];
+        for i in 0..n {
+            let class = i % CLASSES; // balanced
+            draw_sample(rng, &protos[class], &mut xs[i * DIM..(i + 1) * DIM]);
+            ys[i] = class as f32;
+        }
+        (xs, ys)
+    };
+    let (tx, ty) = make(n_train, &mut rng);
+    let (ex, ey) = make(n_test, &mut rng);
+    Dataset::new(
+        "synth_cifar",
+        vec![SIDE, SIDE, CHANNELS],
+        vec![],
+        tx,
+        ty,
+        ex,
+        ey,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Split;
+
+    #[test]
+    fn on_8bit_grid_and_in_range() {
+        let d = generate(40, 10, 0);
+        let b = d.gather(Split::Train, &(0..40).collect::<Vec<_>>());
+        for v in b.x.data() {
+            assert!((0.0..=1.0).contains(v));
+            let lv = v * 255.0;
+            assert!((lv - lv.round()).abs() < 1e-4, "off-grid value {v}");
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let d = generate(20, 20, 1);
+        assert_eq!(d.x_shape, vec![16, 16, 3]);
+        let b = d.gather(Split::Test, &[0, 1, 2]);
+        assert_eq!(b.x.shape(), &[3, 16, 16, 3]);
+    }
+
+    #[test]
+    fn nearest_prototype_classifier_beats_chance() {
+        // Classes must carry enough signal that a trivial nearest-mean
+        // classifier fit on train generalizes to test far above 10% chance.
+        let d = generate(400, 100, 2);
+        let tr = d.gather(Split::Train, &(0..400).collect::<Vec<_>>());
+        let te = d.gather(Split::Test, &(0..100).collect::<Vec<_>>());
+        let mut means = vec![vec![0.0f64; DIM]; CLASSES];
+        let mut counts = vec![0usize; CLASSES];
+        for i in 0..400 {
+            let cls = tr.y.data()[i] as usize;
+            counts[cls] += 1;
+            for j in 0..DIM {
+                means[cls][j] += tr.x.data()[i * DIM + j] as f64;
+            }
+        }
+        for (m, c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= *c as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..100 {
+            let x = &te.x.data()[i * DIM..(i + 1) * DIM];
+            let pred = (0..CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f64 = x.iter().zip(&means[a]).map(|(v, m)| (*v as f64 - m).powi(2)).sum();
+                    let db: f64 = x.iter().zip(&means[b]).map(|(v, m)| (*v as f64 - m).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == te.y.data()[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 60, "nearest-mean only {correct}/100");
+    }
+}

@@ -1,0 +1,135 @@
+//! Binary-MNIST substitute: 28x28 **1-bit** stroke images, 2 classes.
+//!
+//! Class 0 draws predominantly *vertical* strokes, class 1 predominantly
+//! *horizontal* ones, with jitter, thickness variation and salt noise. The
+//! classes are (approximately) linearly separable — the paper's Fig. 2 model
+//! is a 1-layer linear QNN at 91.5% test accuracy, and this substrate puts a
+//! linear probe in the same regime. Inputs are exactly {0, 1}: N = 1 bit,
+//! K = 784, matching Appendix A.
+
+use super::loader::Dataset;
+use crate::rng::Rng;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+
+fn draw_sample(rng: &mut Rng, class: usize, img: &mut [f32]) {
+    img.fill(0.0);
+    let n_strokes = 2 + rng.below(3);
+    for _ in 0..n_strokes {
+        // Dominant orientation by class, with 20% distractor strokes.
+        let vertical = if rng.uniform() < 0.8 { class == 0 } else { class == 1 };
+        // Stroke lanes are class-biased (class 0 left/top third, class 1
+        // right/bottom third, overlapping in the middle): this makes the two
+        // classes *linearly* separable from raw pixels at the ~90% level the
+        // paper's 1-layer linear QNN reaches on binary MNIST (91.5%), while
+        // the orientation cue stays nonlinear.
+        let lane_span = SIDE - 6 - 8;
+        let pos = if class == 0 {
+            3 + rng.below(lane_span)
+        } else {
+            3 + 8 + rng.below(lane_span)
+        };
+        let start = rng.below(8);
+        let len = 12 + rng.below(SIDE - 12 - start);
+        let thick = 1 + rng.below(2);
+        for along in start..(start + len).min(SIDE) {
+            // small jitter so strokes are not perfectly straight
+            let wobble = (rng.uniform() * 2.0) as usize;
+            for t in 0..thick {
+                let lane = (pos + t + wobble).min(SIDE - 1);
+                let (r, c) = if vertical { (along, lane) } else { (lane, along) };
+                img[r * SIDE + c] = 1.0;
+            }
+        }
+    }
+    // salt noise: flip ~1% of pixels
+    for _ in 0..8 {
+        let p = rng.below(DIM);
+        img[p] = 1.0 - img[p];
+    }
+}
+
+/// Generate the dataset with a fixed train/test split.
+pub fn generate(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5a17_0001);
+    let make = |n: usize, rng: &mut Rng| {
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = vec![0.0f32; n];
+        for i in 0..n {
+            let class = i % 2; // balanced
+            draw_sample(rng, class, &mut xs[i * DIM..(i + 1) * DIM]);
+            ys[i] = class as f32;
+        }
+        (xs, ys)
+    };
+    let (tx, ty) = make(n_train, &mut rng);
+    let (ex, ey) = make(n_test, &mut rng);
+    Dataset::new("synth_mnist", vec![DIM], vec![], tx, ty, ex, ey)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Split;
+
+    #[test]
+    fn strictly_binary_pixels() {
+        let d = generate(32, 16, 0);
+        let b = d.gather(Split::Train, &(0..32).collect::<Vec<_>>());
+        assert!(b.x.data().iter().all(|v| *v == 0.0 || *v == 1.0));
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let d = generate(100, 10, 1);
+        let b = d.gather(Split::Train, &(0..100).collect::<Vec<_>>());
+        let ones = b.y.data().iter().filter(|v| **v == 1.0).count();
+        assert_eq!(ones, 50);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(16, 4, 9);
+        let b = generate(16, 4, 9);
+        let ba = a.gather(Split::Test, &[0, 1]);
+        let bb = b.gather(Split::Test, &[0, 1]);
+        assert_eq!(ba.x.data(), bb.x.data());
+    }
+
+    #[test]
+    fn classes_linearly_separable() {
+        // A *linear* probe (nearest class mean == linear decision rule) fit
+        // on train must generalize to held-out test data at the level the
+        // paper's 1-layer linear QNN reaches on binary MNIST (~91.5%):
+        // this is exactly the signal the Fig. 2 model needs.
+        let d = generate(400, 200, 3);
+        let tr = d.gather(Split::Train, &(0..400).collect::<Vec<_>>());
+        let te = d.gather(Split::Test, &(0..200).collect::<Vec<_>>());
+        let mut means = vec![vec![0.0f64; DIM]; 2];
+        let mut counts = [0usize; 2];
+        for i in 0..400 {
+            let cls = tr.y.data()[i] as usize;
+            counts[cls] += 1;
+            for j in 0..DIM {
+                means[cls][j] += tr.x.data()[i * DIM + j] as f64;
+            }
+        }
+        for (m, c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= *c as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..200 {
+            let x = &te.x.data()[i * DIM..(i + 1) * DIM];
+            let d0: f64 = x.iter().zip(&means[0]).map(|(v, m)| (*v as f64 - m).powi(2)).sum();
+            let d1: f64 = x.iter().zip(&means[1]).map(|(v, m)| (*v as f64 - m).powi(2)).sum();
+            let pred = if d0 < d1 { 0.0 } else { 1.0 };
+            if pred == te.y.data()[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 160, "linear probe only {correct}/200");
+    }
+}

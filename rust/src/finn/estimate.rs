@@ -1,0 +1,287 @@
+//! Whole-network LUT roll-up under the four accumulator co-design policies
+//! of paper §5.3 (Fig. 6): fixed 32-bit, per-layer data-type bound, per-layer
+//! post-training weight-norm minimization (PTM), and A2Q's user-specified P.
+
+use super::mvau::{self, LutBreakdown};
+use super::thresholds;
+use crate::quant::bounds::{self, DotShape};
+
+/// Geometry of one layer, mirrored from the artifact manifest (the Rust side
+/// trusts `python/compile/models/*.py` QLayer metadata, which is itself
+/// cross-checked against the parameter tensors in pytest).
+#[derive(Clone, Debug)]
+pub struct LayerGeom {
+    pub name: String,
+    /// 'dense' | 'conv' | 'dwconv'
+    pub kind: String,
+    pub c_out: usize,
+    pub k: usize,
+    /// Bit-width specs: fixed width, or the runtime variable ("M"/"N"/"P").
+    pub m_spec: BitSpec,
+    pub n_spec: BitSpec,
+    pub p_spec: BitSpec,
+    pub x_signed: bool,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub kh: usize,
+    pub c_in: usize,
+    pub stride: usize,
+}
+
+/// Fixed bit width or one of the runtime grid variables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BitSpec {
+    Fixed(u32),
+    M,
+    N,
+    P,
+}
+
+impl BitSpec {
+    pub fn resolve(self, m: u32, n: u32, p: u32) -> u32 {
+        match self {
+            BitSpec::Fixed(v) => v,
+            BitSpec::M => m,
+            BitSpec::N => n,
+            BitSpec::P => p,
+        }
+    }
+
+    /// True for layers whose accumulator is the A2Q-constrained runtime P.
+    pub fn is_runtime_p(self) -> bool {
+        self == BitSpec::P
+    }
+}
+
+/// Resolved per-layer bit widths.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerBits {
+    pub m: u32,
+    pub n_in: u32,
+    pub n_out: u32,
+    pub p: u32,
+}
+
+/// Accumulator selection policy (the four Fig. 6 settings).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AccumulatorPolicy {
+    /// Baseline: every accumulator is 32 bits.
+    Fixed32,
+    /// Per-layer minimum from the data-type bound (Eq. 8).
+    DataTypeBound,
+    /// Post-training minimization: per-layer weight-norm bound (Eq. 12) on
+    /// the trained weights' l1 norms (supplied per layer).
+    WeightNorm,
+    /// A2Q: hidden layers use the user target P (overflow is guaranteed
+    /// impossible by training); fixed 8-bit boundary layers fall back to
+    /// their weight-norm bound (they were trained with loose caps).
+    A2qTarget(u32),
+}
+
+/// One layer's estimate.
+#[derive(Clone, Debug)]
+pub struct LayerEstimate {
+    pub name: String,
+    pub luts: LutBreakdown,
+    pub p_used: u32,
+    pub pe: usize,
+    pub simd: usize,
+}
+
+/// Whole-network estimate.
+#[derive(Clone, Debug)]
+pub struct NetworkEstimate {
+    pub layers: Vec<LayerEstimate>,
+    pub total: LutBreakdown,
+}
+
+impl NetworkEstimate {
+    pub fn total_luts(&self) -> f64 {
+        self.total.total()
+    }
+}
+
+/// Default cycles-per-frame folding budget (matches a mid-size FINN build).
+pub const DEFAULT_CYCLES_BUDGET: usize = 4096;
+
+/// Select the accumulator width for one layer under a policy.
+///
+/// `l1_norm` is the layer's max per-channel integer-weight l1 norm (used by
+/// WeightNorm / the A2Q boundary-layer fallback). Every policy is floored at
+/// the width needed for correctness, and capped at 32 like the paper's
+/// baseline register.
+pub fn select_p(
+    geom: &LayerGeom,
+    bits: (u32, u32, u32),
+    policy: AccumulatorPolicy,
+    l1_norm: Option<f64>,
+) -> u32 {
+    let (m, n, p) = bits;
+    let n_in = geom.n_spec.resolve(m, n, p);
+    let shape = DotShape { k: geom.k, m_bits: geom.m_spec.resolve(m, n, p), n_bits: n_in, x_signed: geom.x_signed };
+    let dt = bounds::data_type_bound(shape).min(32);
+    let wn = l1_norm
+        .map(|l1| bounds::weight_bound(l1, n_in, geom.x_signed).min(32))
+        .unwrap_or(dt);
+    match policy {
+        AccumulatorPolicy::Fixed32 => 32,
+        AccumulatorPolicy::DataTypeBound => dt,
+        AccumulatorPolicy::WeightNorm => wn.min(dt),
+        AccumulatorPolicy::A2qTarget(target) => {
+            if geom.p_spec.is_runtime_p() {
+                target.min(dt)
+            } else {
+                wn.min(dt)
+            }
+        }
+    }
+}
+
+/// Estimate one layer at resolved bit widths.
+pub fn estimate_layer(geom: &LayerGeom, lb: LayerBits, cycles_budget: usize) -> LayerEstimate {
+    let out_pixels = geom.out_h * geom.out_w;
+    let cfg = mvau::fold(geom.c_out, geom.k, out_pixels, cycles_budget);
+
+    let mut luts = LutBreakdown::default();
+    luts.compute += mvau::compute_luts(cfg, lb.m, lb.n_in, lb.p);
+    luts.compute += thresholds::threshold_compare_luts(cfg.pe, lb.p);
+    luts.memory += mvau::weight_memory_luts(geom.c_out, geom.k, lb.m);
+    luts.memory += thresholds::threshold_memory_luts(geom.c_out, lb.n_out, lb.p);
+    if geom.kind != "dense" {
+        let in_w = geom.out_w * geom.stride;
+        luts.memory += thresholds::window_buffer_luts(geom.kh, in_w, geom.c_in, lb.n_in);
+    }
+
+    LayerEstimate { name: geom.name.clone(), luts, p_used: lb.p, pe: cfg.pe, simd: cfg.simd }
+}
+
+/// Estimate the whole network at grid point `(m, n, p)` under a policy.
+///
+/// `l1_norms[i]` is layer i's max per-channel integer l1 norm from the
+/// export artifact (None -> data-type fallback, used for Fixed32/DataType).
+pub fn estimate_network(
+    geoms: &[LayerGeom],
+    bits: (u32, u32, u32),
+    policy: AccumulatorPolicy,
+    l1_norms: Option<&[f64]>,
+    cycles_budget: usize,
+) -> NetworkEstimate {
+    let (m, n, p) = bits;
+    let mut layers = Vec::with_capacity(geoms.len());
+    let mut total = LutBreakdown::default();
+    for (i, g) in geoms.iter().enumerate() {
+        let l1 = l1_norms.and_then(|v| v.get(i).copied());
+        let p_used = select_p(g, bits, policy, l1);
+        // N_out = the next layer's input precision; the last layer emits
+        // 8-bit outputs (paper fixes boundary layers at 8 bits).
+        let n_out = geoms
+            .get(i + 1)
+            .map(|nx| nx.n_spec.resolve(m, n, p))
+            .unwrap_or(8);
+        let lb = LayerBits { m: g.m_spec.resolve(m, n, p), n_in: g.n_spec.resolve(m, n, p), n_out, p: p_used };
+        let est = estimate_layer(g, lb, cycles_budget);
+        total.add(est.luts);
+        layers.push(est);
+    }
+    NetworkEstimate { layers, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_net() -> Vec<LayerGeom> {
+        vec![
+            LayerGeom {
+                name: "stem".into(),
+                kind: "conv".into(),
+                c_out: 32,
+                k: 27,
+                m_spec: BitSpec::Fixed(8),
+                n_spec: BitSpec::Fixed(8),
+                p_spec: BitSpec::Fixed(32),
+                x_signed: false,
+                out_h: 16,
+                out_w: 16,
+                kh: 3,
+                c_in: 3,
+                stride: 1,
+            },
+            LayerGeom {
+                name: "mid".into(),
+                kind: "conv".into(),
+                c_out: 64,
+                k: 288,
+                m_spec: BitSpec::M,
+                n_spec: BitSpec::N,
+                p_spec: BitSpec::P,
+                x_signed: false,
+                out_h: 8,
+                out_w: 8,
+                kh: 3,
+                c_in: 32,
+                stride: 2,
+            },
+            LayerGeom {
+                name: "head".into(),
+                kind: "dense".into(),
+                c_out: 10,
+                k: 64,
+                m_spec: BitSpec::Fixed(8),
+                n_spec: BitSpec::Fixed(8),
+                p_spec: BitSpec::Fixed(32),
+                x_signed: false,
+                out_h: 1,
+                out_w: 1,
+                kh: 1,
+                c_in: 64,
+                stride: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn policies_are_ordered() {
+        // Fixed32 >= DataType >= WeightNorm >= A2Q(low target) in total LUTs.
+        let net = toy_net();
+        let bits = (6, 6, 16);
+        let l1 = vec![300.0, 900.0, 90.0];
+        let f32_ = estimate_network(&net, bits, AccumulatorPolicy::Fixed32, Some(&l1), 4096);
+        let dt = estimate_network(&net, bits, AccumulatorPolicy::DataTypeBound, Some(&l1), 4096);
+        let wn = estimate_network(&net, bits, AccumulatorPolicy::WeightNorm, Some(&l1), 4096);
+        let a2q = estimate_network(&net, bits, AccumulatorPolicy::A2qTarget(12), Some(&l1), 4096);
+        assert!(f32_.total_luts() > dt.total_luts());
+        assert!(dt.total_luts() >= wn.total_luts());
+        assert!(wn.total_luts() >= a2q.total_luts());
+    }
+
+    #[test]
+    fn a2q_target_only_touches_runtime_p_layers() {
+        let net = toy_net();
+        let l1 = vec![300.0, 900.0, 90.0];
+        let est = estimate_network(&net, (6, 6, 10), AccumulatorPolicy::A2qTarget(10), Some(&l1), 4096);
+        assert_eq!(est.layers[1].p_used, 10); // hidden layer takes the target
+        assert_ne!(est.layers[0].p_used, 10); // boundary layers use their bound
+    }
+
+    #[test]
+    fn select_p_never_exceeds_data_type_bound() {
+        let net = toy_net();
+        for p in [8u32, 12, 16, 24, 32] {
+            let sel = select_p(&net[1], (8, 8, p), AccumulatorPolicy::A2qTarget(p), Some(1e9));
+            let dt = bounds::data_type_bound(DotShape { k: 288, m_bits: 8, n_bits: 8, x_signed: false });
+            assert!(sel <= dt.min(32));
+        }
+    }
+
+    #[test]
+    fn narrower_bits_mean_fewer_luts() {
+        let net = toy_net();
+        let hi = estimate_network(&net, (8, 8, 32), AccumulatorPolicy::A2qTarget(32), None, 4096);
+        let lo = estimate_network(&net, (5, 5, 12), AccumulatorPolicy::A2qTarget(12), None, 4096);
+        assert!(lo.total_luts() < hi.total_luts());
+        // both compute and memory move (Fig. 7's two bars)
+        assert!(lo.total.compute < hi.total.compute);
+        assert!(lo.total.memory < hi.total.memory);
+    }
+}

@@ -1,0 +1,29 @@
+//! FINN-style FPGA resource estimation (the substrate behind paper §5.3,
+//! Figs. 6-7).
+//!
+//! The paper generates streaming-dataflow accelerators with the FINN
+//! compiler and reports Vivado LUT estimates, with the compiler configured
+//! to use **LUTs only** (no DSPs/BRAM) — so every cost reduces to LUTs. We
+//! rebuild that estimator analytically, following the published FINN-R cost
+//! model structure (Blott et al., TRETS 2018; Umuroglu & Jahre 2017):
+//!
+//! * each layer becomes a matrix-vector-activation unit (MVAU) with `PE`
+//!   processing elements x `SIMD` lanes ([`mvau`]);
+//! * compute LUTs: LUT-based multipliers scale with `M x N`, the adder tree
+//!   and the accumulator registers/carry chains scale with the accumulator
+//!   width `P` — this is precisely where A2Q saves compute resources;
+//! * memory LUTs: weight storage in LUTRAM scales with `c_out*K*M`;
+//!   quantized monotone activations are implemented as *threshold
+//!   comparisons* whose storage scales with `c_out * (2^N_out - 1) * P`
+//!   ([`thresholds`]) — exponential in activation precision and linear in
+//!   accumulator width, the effect Fig. 7 attributes the memory savings to.
+//!
+//! Absolute numbers are model-based, not Vivado reports; the *relative*
+//! shape across (M, N, P) is what Figs. 6-7 exercise (DESIGN.md §3).
+
+pub mod estimate;
+pub mod mvau;
+pub mod thresholds;
+
+pub use estimate::{estimate_network, AccumulatorPolicy, LayerBits, LayerGeom, NetworkEstimate};
+pub use mvau::{fold, LutBreakdown, MvauConfig};

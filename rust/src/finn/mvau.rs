@@ -1,0 +1,125 @@
+//! Matrix-vector-activation unit (MVAU) LUT cost model.
+//!
+//! The MVAU (paper Fig. 9b) is FINN's building block for dense and conv
+//! layers: `PE` processing elements parallelize output channels, `SIMD`
+//! lanes parallelize the dot product. We model a LUT-only instantiation.
+
+/// Stream-folding configuration for one MVAU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MvauConfig {
+    /// Processing elements (parallel output channels), `1..=c_out`.
+    pub pe: usize,
+    /// SIMD input lanes (parallel MACs per PE), `1..=k`.
+    pub simd: usize,
+}
+
+/// LUT cost split used by Fig. 7 (control overhead excluded, as the paper
+/// does — it is constant per topology).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LutBreakdown {
+    pub compute: f64,
+    pub memory: f64,
+}
+
+impl LutBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.memory
+    }
+
+    pub fn add(&mut self, other: LutBreakdown) {
+        self.compute += other.compute;
+        self.memory += other.memory;
+    }
+}
+
+/// Pick a folding (PE, SIMD) meeting a cycles-per-frame budget.
+///
+/// FINN balances layer throughputs by folding; we model the same knob with a
+/// single budget: each layer needs `c_out*k*out_pixels` MACs per frame and
+/// gets `pe*simd` MACs per cycle.
+pub fn fold(c_out: usize, k: usize, out_pixels: usize, cycles_budget: usize) -> MvauConfig {
+    let macs = (c_out * k * out_pixels) as f64;
+    let need = (macs / cycles_budget.max(1) as f64).ceil().max(1.0) as usize;
+    let simd = need.min(k).max(1);
+    let pe = ((need + simd - 1) / simd).min(c_out).max(1);
+    MvauConfig { pe, simd }
+}
+
+/// LUTs for one `M x N -> wide` LUT-based multiplier.
+///
+/// A 6-input-LUT fabric realizes an MxN partial-product multiplier in about
+/// `(M*N + 1) / 2` LUTs (two partial-product bits per LUT6 with carry) — the
+/// standard first-order estimate Vivado synthesis tracks for small
+/// multipliers.
+pub fn multiplier_luts(m_bits: u32, n_bits: u32) -> f64 {
+    ((m_bits * n_bits + 1) / 2) as f64
+}
+
+/// Compute-side LUTs of one MVAU: multipliers + adder tree + accumulator.
+///
+/// * multipliers: `pe * simd * mul(M, N)`
+/// * adder tree: `simd - 1` adders per PE; operand width grows from `M+N`
+///   toward `P`, modelled at the accumulator width `P` per FINN-R (the tree
+///   is instantiated at full precision to preserve exactness): `~P` LUTs per
+///   adder (one LUT per result bit with carry chain).
+/// * accumulator: one `P`-bit adder + register per PE.
+///
+/// The `P` terms are exactly where reducing the accumulator width pays off
+/// in compute (paper §5.3.1: "the reductions in compute resources primarily
+/// come from the reduced cost of MACs").
+pub fn compute_luts(cfg: MvauConfig, m_bits: u32, n_bits: u32, p_bits: u32) -> f64 {
+    let mults = (cfg.pe * cfg.simd) as f64 * multiplier_luts(m_bits, n_bits);
+    let adder_tree = cfg.pe as f64 * (cfg.simd.saturating_sub(1)) as f64 * p_bits as f64;
+    let accumulator = cfg.pe as f64 * p_bits as f64;
+    mults + adder_tree + accumulator
+}
+
+/// Memory-side LUTs for weight storage: `c_out * k * M` bits in LUTRAM at
+/// 64 bits per LUT (Xilinx RAM64X1S-class primitives).
+pub fn weight_memory_luts(c_out: usize, k: usize, m_bits: u32) -> f64 {
+    ((c_out * k) as f64 * m_bits as f64 / 64.0).ceil()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_respects_limits() {
+        let f = fold(64, 128, 16, 4096);
+        assert!(f.pe >= 1 && f.pe <= 64);
+        assert!(f.simd >= 1 && f.simd <= 128);
+        // throughput satisfied
+        assert!(f.pe * f.simd * 4096 >= 64 * 128 * 16);
+    }
+
+    #[test]
+    fn fold_tiny_layer_is_1x1() {
+        let f = fold(2, 784, 1, 1_000_000);
+        assert_eq!(f, MvauConfig { pe: 1, simd: 1 });
+    }
+
+    #[test]
+    fn compute_monotone_in_every_bit_width() {
+        let cfg = MvauConfig { pe: 4, simd: 16 };
+        let base = compute_luts(cfg, 6, 6, 16);
+        assert!(compute_luts(cfg, 7, 6, 16) > base);
+        assert!(compute_luts(cfg, 6, 7, 16) > base);
+        assert!(compute_luts(cfg, 6, 6, 20) > base);
+    }
+
+    #[test]
+    fn accumulator_width_moves_compute_cost() {
+        // 32b -> 16b accumulator on a wide MVAU should save a visible chunk.
+        let cfg = MvauConfig { pe: 8, simd: 32 };
+        let wide = compute_luts(cfg, 4, 4, 32);
+        let narrow = compute_luts(cfg, 4, 4, 16);
+        assert!(narrow < wide * 0.75, "{narrow} vs {wide}");
+    }
+
+    #[test]
+    fn weight_memory() {
+        assert_eq!(weight_memory_luts(10, 100, 8), (8000.0f64 / 64.0).ceil());
+        assert!(weight_memory_luts(10, 100, 4) < weight_memory_luts(10, 100, 8));
+    }
+}

@@ -1,0 +1,69 @@
+//! Threshold-activation LUT cost model.
+//!
+//! FINN implements every quantized monotone activation as a bank of
+//! threshold comparisons mapping the P-bit accumulator value to an
+//! N_out-bit output (paper Fig. 9b, [42]): `2^N_out - 1` thresholds per
+//! output channel, each a P-bit constant, compared against the accumulator.
+//! Batch norm, biases and scaling factors are absorbed into the thresholds,
+//! so this stage *is* the layer's activation memory. Its cost is therefore
+//! exponential in activation precision and linear in accumulator width —
+//! the dominant memory effect Fig. 7 reports.
+
+/// Number of threshold constants per output channel for an N_out-bit output.
+pub fn thresholds_per_channel(n_out_bits: u32) -> u64 {
+    (1u64 << n_out_bits) - 1
+}
+
+/// Memory LUTs for threshold storage: `c_out * (2^N_out - 1)` thresholds of
+/// `P` bits each, in 64-bit-per-LUT distributed RAM.
+pub fn threshold_memory_luts(c_out: usize, n_out_bits: u32, p_bits: u32) -> f64 {
+    let bits = c_out as u64 * thresholds_per_channel(n_out_bits) * p_bits as u64;
+    (bits as f64 / 64.0).ceil()
+}
+
+/// Compute LUTs for the comparators: each PE compares the P-bit accumulator
+/// against its threshold bank; a P-bit comparator costs ~P/2 LUTs and the
+/// unit time-multiplexes the `2^N_out - 1` thresholds, so the *instantiated*
+/// comparator cost is per-PE, not per-threshold.
+pub fn threshold_compare_luts(pe: usize, p_bits: u32) -> f64 {
+    pe as f64 * (p_bits as f64 / 2.0).ceil()
+}
+
+/// Stream-buffer memory LUTs: the sliding-window (line) buffer feeding a
+/// conv MVAU holds `kh` rows of `in_w * c_in` pixels at `N` bits.
+pub fn window_buffer_luts(kh: usize, in_w: usize, c_in: usize, n_bits: u32) -> f64 {
+    let bits = (kh * in_w * c_in) as u64 * n_bits as u64;
+    (bits as f64 / 64.0).ceil()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_counts() {
+        assert_eq!(thresholds_per_channel(1), 1);
+        assert_eq!(thresholds_per_channel(4), 15);
+        assert_eq!(thresholds_per_channel(8), 255);
+    }
+
+    #[test]
+    fn memory_exponential_in_activation_bits() {
+        let a4 = threshold_memory_luts(64, 4, 16);
+        let a8 = threshold_memory_luts(64, 8, 16);
+        assert!(a8 > a4 * 15.0, "{a8} vs {a4}");
+    }
+
+    #[test]
+    fn memory_linear_in_accumulator_bits() {
+        let p16 = threshold_memory_luts(64, 4, 16);
+        let p32 = threshold_memory_luts(64, 4, 32);
+        let ratio = p32 / p16;
+        assert!((ratio - 2.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn buffers_scale_with_precision() {
+        assert!(window_buffer_luts(3, 16, 32, 8) > window_buffer_luts(3, 16, 32, 4));
+    }
+}

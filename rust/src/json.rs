@@ -1,0 +1,426 @@
+//! Minimal JSON: parse + serialize, no external dependencies.
+//!
+//! The environment pins the dependency set to the image's offline crate
+//! cache (xla + anyhow), so the manifest/config/record plumbing carries its
+//! own JSON implementation. Scope: everything `python/compile/aot.py` emits
+//! and everything the coordinator persists — objects, arrays, strings with
+//! standard escapes, f64 numbers, bools, null. Not a general-purpose
+//! validator (it accepts a few super-sets of JSON, e.g. lone NaN is
+//! rejected on write but tolerated never on read).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, ensure, Result};
+
+/// A JSON value. Numbers are f64 (ints round-trip exactly to 2^53, far
+/// beyond anything in our manifests).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ----------------------------------------------------------------- parse
+
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+        Ok(v)
+    }
+
+    // ------------------------------------------------------------- accessors
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow::anyhow!("missing key {key:?}")),
+            _ => bail!("not an object (looking for {key:?})"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        ensure!(n >= 0.0 && n.fract() == 0.0, "expected unsigned integer, got {n}");
+        Ok(n as usize)
+    }
+
+    pub fn as_u32(&self) -> Result<u32> {
+        Ok(self.as_usize()? as u32)
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        Ok(self.as_usize()? as u64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+
+    /// `[1, 2, 3]` -> `Vec<usize>` (shape lists).
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    // ---------------------------------------------------------- constructors
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn from_f64s(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
+    }
+
+    pub fn from_f32s(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|x| Json::Num(*x as f64)).collect())
+    }
+
+    pub fn from_usizes(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|x| Json::Num(*x as f64)).collect())
+    }
+
+    // -------------------------------------------------------------- serialize
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    // shortest round-trip float formatting
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        ensure!(self.peek()? == b, "expected {:?} at byte {}", b as char, self.pos);
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
+        ensure!(
+            self.bytes[self.pos..].starts_with(lit.as_bytes()),
+            "bad literal at byte {}",
+            self.pos
+        );
+        self.pos += lit.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected {:?} at byte {}", c as char, self.pos),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(key, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', got {:?} at byte {}", c as char, self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']', got {:?} at byte {}", c as char, self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.pos += 4;
+                            // surrogate pairs: JSON from our own writer never
+                            // emits them for BMP text; decode best-effort
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => bail!("bad escape \\{}", other as char),
+                    }
+                }
+                _ => {
+                    // re-consume as UTF-8: back up and take the full char
+                    self.pos -= 1;
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(text.parse::<f64>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_manifest_like() {
+        let text = r#"{"name": "cnn", "batch_size": 64, "lr": 0.05,
+                       "qlayers": [{"m_bits": 8}, {"m_bits": "M"}],
+                       "ok": true, "none": null, "neg": -1.5e-3}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "cnn");
+        assert_eq!(v.get("batch_size").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(v.get("lr").unwrap().as_f64().unwrap(), 0.05);
+        assert_eq!(v.get("qlayers").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.get("ok").unwrap().as_bool().unwrap());
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::Str("a\"b\\c\nd\te\u{1}".into());
+        let s = v.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_pass_through() {
+        let v = Json::parse("\"héllo ☃\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo ☃");
+    }
+
+    #[test]
+    fn numbers() {
+        for (text, want) in [("0", 0.0), ("-12", -12.0), ("3.5", 3.5), ("1e3", 1000.0), ("-2.5E-2", -0.025)] {
+            assert_eq!(Json::parse(text).unwrap().as_f64().unwrap(), want, "{text}");
+        }
+        // integers serialize without exponent/decimal
+        assert_eq!(Json::Num(784.0).to_string(), "784");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\":1} x").is_err());
+        assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn nested_deep() {
+        let v = Json::parse("[[[[1,2],[3]],[]],[{\"k\":[true]}]]").unwrap();
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn shape_vec() {
+        let v = Json::parse("[128, 16, 16, 3]").unwrap();
+        assert_eq!(v.as_usize_vec().unwrap(), vec![128, 16, 16, 3]);
+        assert!(Json::parse("[1.5]").unwrap().as_usize_vec().is_err());
+    }
+}

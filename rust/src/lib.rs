@@ -1,0 +1,40 @@
+//! # A2Q — Accumulator-Aware Quantization with Guaranteed Overflow Avoidance
+//!
+//! A from-scratch reproduction of Colbert, Pappalardo & Petri-Koenig (2023)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas, build time)** — the A2Q weight quantizer, the baseline
+//!   affine quantizer and an MXU-tiled matmul live in
+//!   `python/compile/kernels/` and are lowered into the model HLO.
+//! * **L2 (JAX, build time)** — the quantized model zoo (mlp / cnn / resnet /
+//!   espcn / unet) with STE gradients and SGD/Adam train steps, AOT-exported
+//!   to HLO text artifacts by `python/compile/aot.py`.
+//! * **L3 (this crate, run time)** — everything else: the PJRT [`runtime`]
+//!   that executes the artifacts, the [`coordinator`] that runs training
+//!   loops and the (M, N, P) grid search, and the substrates the paper's
+//!   evaluation needs: exact integer accumulation simulation ([`accsim`]),
+//!   accumulator bit-width bounds ([`quant`]), synthetic datasets
+//!   ([`datasets`]), a FINN-style FPGA LUT cost model ([`finn`]), Pareto
+//!   frontiers ([`pareto`]), task metrics ([`metrics`]) and per-figure report
+//!   generation ([`report`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the `a2q`
+//! binary trains, evaluates, sweeps and reports entirely from Rust.
+
+pub mod accsim;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod finn;
+pub mod json;
+pub mod metrics;
+pub mod pareto;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+
+pub use tensor::Tensor;

@@ -1,0 +1,296 @@
+//! `a2q` — the leader binary: train QNNs for low-precision accumulation,
+//! sweep the (M, N, P) design space, estimate FPGA resources, simulate
+//! overflow, and regenerate every figure of the paper.
+//!
+//! Python never runs here: all compute executes AOT-compiled HLO artifacts
+//! (`make artifacts`) through PJRT.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use a2q::accsim::{dot_accumulate, AccMode};
+use a2q::cli::Args;
+use a2q::config::{RunConfig, SweepConfig};
+use a2q::coordinator::{run_sweep, sweep::run_single, MetricsSink};
+use a2q::datasets;
+use a2q::finn::estimate::{estimate_network, AccumulatorPolicy, DEFAULT_CYCLES_BUDGET};
+use a2q::quant::bounds::{data_type_bound, weight_bound, DotShape};
+use a2q::report;
+use a2q::rng::Rng;
+use a2q::runtime::{artifact::discover_models, Engine, ModelManifest};
+
+const USAGE: &str = "\
+a2q — accumulator-aware quantization (A2Q) reproduction
+
+USAGE: a2q [--artifacts DIR] [--results DIR] <command> [flags]
+
+COMMANDS:
+  train      --model M --alg a2q|qat|float --m 6 --n 6 --p 16 --steps 300
+             --seed 0 [--config run.json]
+  sweep      --models cnn,resnet [--steps 200] [--mn 6,8]
+             [--offsets 0,2,4,6,8,10] [--float-ref true] [--sink runs.jsonl]
+             [--config sweep.json]
+  figure     <fig2|fig3|fig4|fig5|fig6|fig7|fig8|all>
+             [--sink runs.jsonl] [--steps 200] [--seed 0]
+  estimate   --model M --m 6 --n 6 --p 16
+  bounds     --k 784 --m 8 --n 1 [--signed] [--l1 NORM]
+  accsim     --k 784 --p 16 --m 8 --n 1 --seed 0
+  models     (list models available in the artifacts dir)
+";
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(raw, &["signed", "float-ref"])?;
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let results = PathBuf::from(args.str_or("results", "results"));
+    let cmd = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("missing command\n{USAGE}"))?
+        .clone();
+
+    match cmd.as_str() {
+        "train" => cmd_train(&args, &artifacts),
+        "sweep" => cmd_sweep(&args, &artifacts, &results),
+        "figure" => cmd_figure(&args, &artifacts, &results),
+        "estimate" => cmd_estimate(&args, &artifacts),
+        "bounds" => cmd_bounds(&args),
+        "accsim" => cmd_accsim(&args),
+        "models" => cmd_models(&artifacts),
+        other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    args.check_known(&[
+        "artifacts", "results", "model", "alg", "m", "n", "p", "steps", "seed", "config",
+        "lr", "n-train", "n-test",
+    ])?;
+    let rc = match args.opt_str("config") {
+        Some(path) => RunConfig::load(&PathBuf::from(path))?,
+        None => {
+            let mut rc = RunConfig::new(
+                &args.str_or("model", "cnn"),
+                &args.str_or("alg", "a2q"),
+                args.num_or("m", 6u32)?,
+                args.num_or("n", 6u32)?,
+                args.num_or("p", 16u32)?,
+                args.num_or("steps", 300u64)?,
+            );
+            rc.seed = args.num_or("seed", 0u64)?;
+            if let Some(lr) = args.opt_str("lr") {
+                rc.lr = Some(lr.parse()?);
+            }
+            rc.n_train = args.num_or("n-train", rc.n_train)?;
+            rc.n_test = args.num_or("n-test", rc.n_test)?;
+            rc
+        }
+    };
+    let record = run_single(artifacts, &rc)?;
+    println!("{}", record.to_json().to_string());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()> {
+    args.check_known(&[
+        "artifacts", "results", "models", "steps", "mn", "offsets", "float-ref", "config",
+        "sink", "seed", "n-train", "n-test",
+    ])?;
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => SweepConfig::load(&PathBuf::from(path))?,
+        None => {
+            let models = match args.opt_str("models") {
+                Some(s) => s.split(',').map(|m| m.trim().to_string()).collect(),
+                None => discover_models(artifacts)?,
+            };
+            let mut c = SweepConfig::default_grid(models, args.num_or("steps", 200u64)?);
+            c.mn_values = args.list_or("mn", "6,8")?;
+            c.p_offsets = args.list_or("offsets", "0,2,4,6,8,10")?;
+            c.seed = args.num_or("seed", 0u64)?;
+            c.n_train = args.num_or("n-train", c.n_train)?;
+            c.n_test = args.num_or("n-test", c.n_test)?;
+            c
+        }
+    };
+    if args.bool_or("float-ref", true)? && !cfg.algs.iter().any(|a| a == "float") {
+        cfg.algs.push("float".into());
+    }
+    let sink_path = results.join(args.str_or("sink", "runs.jsonl"));
+    let records = run_sweep(cfg, artifacts.clone(), sink_path, true)?;
+    println!("[sweep] {} total records", records.len());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()> {
+    args.check_known(&["artifacts", "results", "sink", "steps", "seed"])?;
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("figure needs an id (fig2..fig8 or all)"))?
+        .clone();
+    let steps = args.num_or("steps", 200u64)?;
+    let seed = args.num_or("seed", 0u64)?;
+    let want = |x: &str| id == x || id == "all";
+    let mut matched = false;
+
+    if want("fig2") {
+        matched = true;
+        let engine = Engine::new(artifacts)?;
+        let p_values: Vec<u32> = (10..=20).collect();
+        let rep = report::fig2::run(&engine, &p_values, steps, 256, seed)?;
+        report::fig2::emit(&rep, results)?;
+        println!("[fig2] wide acc {:.4}; wrote {}/fig2.csv", rep.acc_wide, results.display());
+    }
+    if want("fig3") {
+        matched = true;
+        let ks: Vec<usize> = (5..=14).map(|e| 1usize << e).collect();
+        let rows = report::fig3::run(&ks, &[4, 5, 6, 7, 8], 1000, seed);
+        report::fig3::emit(&rows, results)?;
+        println!("[fig3] {} rows; wrote {}/fig3.csv", rows.len(), results.display());
+    }
+    if want("fig4") || want("fig5") || want("fig6") || want("fig7") {
+        matched = true;
+        let sink = MetricsSink::new(results.join(args.str_or("sink", "runs.jsonl")));
+        let records = sink.load()?;
+        anyhow::ensure!(
+            !records.is_empty(),
+            "no sweep records at {:?}; run `a2q sweep` first",
+            sink.path()
+        );
+        let mut largest_k = BTreeMap::new();
+        let mut geoms = BTreeMap::new();
+        let mut models: Vec<String> = records.iter().map(|r| r.config.model.clone()).collect();
+        models.sort();
+        models.dedup();
+        for m in &models {
+            let manifest = ModelManifest::load(artifacts, m)?;
+            largest_k.insert(m.clone(), manifest.largest_k);
+            geoms.insert(m.clone(), manifest.geoms()?);
+        }
+        if want("fig4") || want("fig5") {
+            let f4 = report::fig45::fig4(&records, &largest_k);
+            report::fig45::emit_fig4(&f4, results)?;
+            let f5 = report::fig45::fig5(&records);
+            report::fig45::emit_fig5(&f5, results)?;
+            println!("[fig4/5] {} models; wrote fig4_*.csv, fig5.csv", f4.len());
+        }
+        if want("fig6") || want("fig7") {
+            let f6 = report::fig67::fig6(&records, &geoms);
+            report::fig67::emit(&f6, results)?;
+            for m in &f6 {
+                if let Some((red, rel)) = report::fig67::headline_reduction(m, 0.95) {
+                    println!(
+                        "[fig6] {}: {:.2}x LUT reduction at {:.1}% of float perf",
+                        m.model,
+                        red,
+                        rel * 100.0
+                    );
+                }
+            }
+        }
+    }
+    if want("fig8") {
+        matched = true;
+        let engine = Engine::new(artifacts)?;
+        let rep = report::fig8::run(&engine, 12, 200, steps, 128, seed)?;
+        report::fig8::emit(&rep, results)?;
+        let (lo, hi) = rep.inner_acc_spread();
+        println!(
+            "[fig8] inner acc spread [{lo:.4}, {hi:.4}], outer acc {:.4}, wide {:.4}",
+            rep.outer_acc, rep.acc_wide
+        );
+    }
+    anyhow::ensure!(matched, "unknown figure {id:?} (fig2..fig8 or all)");
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    args.check_known(&["artifacts", "results", "model", "m", "n", "p"])?;
+    let model = args.str_or("model", "cnn");
+    let (m, n, p) = (
+        args.num_or("m", 6u32)?,
+        args.num_or("n", 6u32)?,
+        args.num_or("p", 16u32)?,
+    );
+    let manifest = ModelManifest::load(artifacts, &model)?;
+    let geoms = manifest.geoms()?;
+    println!("{model} at M={m} N={n} P={p} (cycles budget {DEFAULT_CYCLES_BUDGET}):");
+    println!("{:<10} {:>12} {:>12} {:>12}", "policy", "compute", "memory", "total");
+    for (name, policy) in [
+        ("fixed32", AccumulatorPolicy::Fixed32),
+        ("datatype", AccumulatorPolicy::DataTypeBound),
+        ("a2q", AccumulatorPolicy::A2qTarget(p)),
+    ] {
+        let est = estimate_network(&geoms, (m, n, p), policy, None, DEFAULT_CYCLES_BUDGET);
+        println!(
+            "{:<10} {:>12.0} {:>12.0} {:>12.0}",
+            name, est.total.compute, est.total.memory, est.total_luts()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bounds(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "results", "k", "m", "n", "signed", "l1"])?;
+    let shape = DotShape {
+        k: args.num_or("k", 784usize)?,
+        m_bits: args.num_or("m", 8u32)?,
+        n_bits: args.num_or("n", 8u32)?,
+        x_signed: args.bool_or("signed", false)?,
+    };
+    println!("data-type bound (Eq. 8): P >= {}", data_type_bound(shape));
+    if let Some(l1) = args.opt_str("l1") {
+        let l1: f64 = l1.parse()?;
+        println!(
+            "weight bound (Eq. 12) at ||w||_1 = {l1}: P >= {}",
+            weight_bound(l1, shape.n_bits, shape.x_signed)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_accsim(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "results", "k", "p", "m", "n", "seed"])?;
+    let k = args.num_or("k", 784usize)?;
+    let p = args.num_or("p", 16u32)?;
+    let m = args.num_or("m", 8u32)?;
+    let n = args.num_or("n", 1u32)?;
+    let mut rng = Rng::new(args.num_or("seed", 0u64)?);
+    let wmax = (1i64 << (m - 1)) - 1;
+    let xmax = (1i64 << n) - 1;
+    let x: Vec<i64> = (0..k).map(|_| rng.below((xmax + 1) as usize) as i64).collect();
+    let w: Vec<i64> = (0..k)
+        .map(|_| rng.below((2 * wmax + 1) as usize) as i64 - wmax)
+        .collect();
+    for mode in [AccMode::Wide, AccMode::Wrap { p_bits: p }, AccMode::Saturate { p_bits: p }] {
+        let r = dot_accumulate(&x, &w, mode);
+        println!("{mode:?}: value={} overflows={}", r.value, r.overflows);
+    }
+    println!(
+        "data-type bound for this shape: P >= {}",
+        data_type_bound(DotShape { k, m_bits: m, n_bits: n, x_signed: false })
+    );
+    Ok(())
+}
+
+fn cmd_models(artifacts: &PathBuf) -> Result<()> {
+    for m in discover_models(artifacts)? {
+        let manifest = ModelManifest::load(artifacts, &m)?;
+        println!(
+            "{:<8} task={:<9} bs={:<4} K*={:<5} layers={} dataset={}",
+            m,
+            manifest.task,
+            manifest.batch_size,
+            manifest.largest_k,
+            manifest.qlayers.len(),
+            datasets::default_for_model(&m),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Task metrics: top-1 accuracy, PSNR, logit MAE, sparsity and loss tracking
+//! (paper §5.1: classification -> top-1, super-resolution -> PSNR).
+
+use crate::tensor::Tensor;
+
+/// Top-1 accuracy of logits `[batch, classes]` against f32 labels, counting
+/// only the first `n_valid` rows (eval batches pad by wrapping).
+pub fn top1_accuracy(logits: &Tensor, labels: &[f32], n_valid: usize) -> (u64, u64) {
+    let classes = logits.cols();
+    let mut correct = 0u64;
+    for r in 0..n_valid.min(logits.rows()) {
+        let row = logits.row(r);
+        let mut arg = 0usize;
+        for c in 1..classes {
+            if row[c] > row[arg] {
+                arg = c;
+            }
+        }
+        if arg as f32 == labels[r] {
+            correct += 1;
+        }
+    }
+    (correct, n_valid as u64)
+}
+
+/// Peak signal-to-noise ratio over a batch of images in [0, 1]:
+/// `10 log10(1 / mse)`. Returns (sum of squared error, pixel count) so
+/// callers can aggregate exactly across batches before the log.
+pub fn sse(pred: &Tensor, target: &Tensor, n_valid: usize) -> (f64, u64) {
+    let per = pred.len() / pred.shape()[0];
+    let mut acc = 0.0f64;
+    for i in 0..n_valid * per {
+        let d = (pred.data()[i] - target.data()[i]) as f64;
+        acc += d * d;
+    }
+    (acc, (n_valid * per) as u64)
+}
+
+/// Convert aggregated SSE to PSNR in dB (peak = 1.0).
+pub fn psnr_from_sse(sse: f64, count: u64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let mse = (sse / count as f64).max(1e-12);
+    10.0 * (1.0 / mse).log10()
+}
+
+/// Mean absolute error between two logit tensors (Fig. 2's y-axis: MAE
+/// between P-bit and 32-bit accumulator results).
+pub fn logit_mae(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (x - y).abs() as f64)
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Exponentially-smoothed loss tracker for training logs.
+#[derive(Clone, Debug)]
+pub struct LossTracker {
+    ema: Option<f64>,
+    alpha: f64,
+    pub history: Vec<(u64, f64)>,
+}
+
+impl LossTracker {
+    pub fn new(alpha: f64) -> Self {
+        Self { ema: None, alpha, history: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: u64, loss: f64) {
+        let e = match self.ema {
+            None => loss,
+            Some(prev) => prev * (1.0 - self.alpha) + loss * self.alpha,
+        };
+        self.ema = Some(e);
+        self.history.push((step, loss));
+    }
+
+    pub fn smoothed(&self) -> Option<f64> {
+        self.ema
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.history.last().map(|(_, l)| *l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy() {
+        let logits = Tensor::new(vec![3, 2], vec![0.1, 0.9, 0.8, 0.2, 0.4, 0.6]);
+        let (c, n) = top1_accuracy(&logits, &[1.0, 0.0, 0.0], 3);
+        assert_eq!((c, n), (2, 3));
+        // n_valid truncates padded rows
+        let (c, n) = top1_accuracy(&logits, &[1.0, 0.0, 0.0], 2);
+        assert_eq!((c, n), (2, 2));
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        let a = Tensor::from_vec(vec![0.5; 100]).reshape(vec![1, 100]);
+        let b = Tensor::from_vec(vec![0.6; 100]).reshape(vec![1, 100]);
+        let (s, n) = sse(&a, &b, 1);
+        let p = psnr_from_sse(s, n);
+        assert!((p - 20.0).abs() < 1e-4, "psnr {p}"); // mse = 0.01 -> 20 dB (f32 inputs)
+    }
+
+    #[test]
+    fn identical_images_have_huge_psnr() {
+        let a = Tensor::from_vec(vec![0.3; 16]).reshape(vec![1, 16]);
+        let (s, n) = sse(&a, &a, 1);
+        assert!(psnr_from_sse(s, n) > 100.0);
+    }
+
+    #[test]
+    fn mae() {
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![0.0, 4.0]);
+        assert_eq!(logit_mae(&a, &b), 1.5);
+    }
+
+    #[test]
+    fn loss_tracker_smooths() {
+        let mut t = LossTracker::new(0.5);
+        t.push(0, 4.0);
+        t.push(1, 2.0);
+        assert_eq!(t.smoothed(), Some(3.0));
+        assert_eq!(t.last(), Some(2.0));
+        assert_eq!(t.history.len(), 2);
+    }
+}

@@ -1,0 +1,110 @@
+//! Pareto-frontier extraction for the paper's trade-off plots (Figs. 4, 6):
+//! minimize cost (accumulator bits / LUTs) while maximizing task performance.
+
+/// One evaluated design point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Point<T> {
+    /// Cost axis (lower is better): accumulator bits, LUTs, ...
+    pub cost: f64,
+    /// Performance axis (higher is better): accuracy, PSNR, ...
+    pub perf: f64,
+    /// Payload describing the configuration.
+    pub tag: T,
+}
+
+/// True iff `a` dominates `b`: no worse on both axes, strictly better on one.
+pub fn dominates<T>(a: &Point<T>, b: &Point<T>) -> bool {
+    (a.cost <= b.cost && a.perf >= b.perf) && (a.cost < b.cost || a.perf > b.perf)
+}
+
+/// Extract the Pareto frontier (max perf per cost), sorted by cost ascending.
+///
+/// Ties on cost keep only the best perf; the returned frontier is strictly
+/// increasing in both cost and perf.
+pub fn frontier<T: Clone>(points: &[Point<T>]) -> Vec<Point<T>> {
+    let mut sorted: Vec<&Point<T>> = points.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.cost
+            .partial_cmp(&b.cost)
+            .unwrap()
+            .then(b.perf.partial_cmp(&a.perf).unwrap())
+    });
+    let mut out: Vec<Point<T>> = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.perf > best {
+            best = p.perf;
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+/// Max observed perf at cost <= budget (a vertical slice of the frontier,
+/// how the paper reads "best attainable accuracy at a resource budget").
+pub fn best_at_budget<T>(points: &[Point<T>], budget: f64) -> Option<&Point<T>> {
+    points
+        .iter()
+        .filter(|p| p.cost <= budget)
+        .max_by(|a, b| a.perf.partial_cmp(&b.perf).unwrap())
+}
+
+/// Area-style dominance check between two frontiers: `a` dominates `b` if at
+/// every cost where b has a point, a achieves at least that perf at no more
+/// cost (used to assert "A2Q provides a dominant Pareto frontier").
+pub fn frontier_dominates<T>(a: &[Point<T>], b: &[Point<T>], tol: f64) -> bool {
+    b.iter().all(|pb| {
+        a.iter()
+            .any(|pa| pa.cost <= pb.cost + tol && pa.perf >= pb.perf - tol)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(cost: f64, perf: f64) -> Point<u32> {
+        Point { cost, perf, tag: 0 }
+    }
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&p(1.0, 2.0), &p(2.0, 1.0)));
+        assert!(!dominates(&p(1.0, 1.0), &p(1.0, 1.0))); // equal: no strict edge
+        assert!(!dominates(&p(1.0, 1.0), &p(0.5, 2.0)));
+    }
+
+    #[test]
+    fn frontier_extraction() {
+        let pts = vec![p(1.0, 0.5), p(2.0, 0.9), p(2.0, 0.7), p(3.0, 0.8), p(4.0, 0.95)];
+        let f = frontier(&pts);
+        let pairs: Vec<(f64, f64)> = f.iter().map(|q| (q.cost, q.perf)).collect();
+        assert_eq!(pairs, vec![(1.0, 0.5), (2.0, 0.9), (4.0, 0.95)]);
+    }
+
+    #[test]
+    fn frontier_strictly_monotone() {
+        let pts: Vec<Point<u32>> =
+            (0..50).map(|i| p((i % 10) as f64, ((i * 7) % 13) as f64 / 13.0)).collect();
+        let f = frontier(&pts);
+        for w in f.windows(2) {
+            assert!(w[1].cost > w[0].cost);
+            assert!(w[1].perf > w[0].perf);
+        }
+    }
+
+    #[test]
+    fn budget_slice() {
+        let pts = vec![p(1.0, 0.5), p(2.0, 0.9), p(4.0, 0.95)];
+        assert_eq!(best_at_budget(&pts, 2.5).unwrap().perf, 0.9);
+        assert!(best_at_budget(&pts, 0.5).is_none());
+    }
+
+    #[test]
+    fn frontier_domination() {
+        let a = vec![p(1.0, 0.6), p(2.0, 0.9)];
+        let b = vec![p(1.5, 0.55), p(2.5, 0.85)];
+        assert!(frontier_dominates(&a, &b, 1e-9));
+        assert!(!frontier_dominates(&b, &a, 1e-9));
+    }
+}

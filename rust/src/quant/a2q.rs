@@ -1,0 +1,120 @@
+//! Bit-exact Rust mirror of the A2Q weight quantizer (paper Eq. 20-23).
+//!
+//! The authoritative implementation is the L1 Pallas kernel
+//! (`python/compile/kernels/a2q.py`); this mirror exists so the Rust side can
+//! (a) independently verify exported integer weights without a PJRT round
+//! trip, and (b) drive pure-Rust property tests over the guarantee. The two
+//! implementations are cross-checked through the export artifacts in the
+//! integration tests.
+
+/// Upper bound on the integer-weight l1 norm for a P-bit accumulator fed by
+/// N-bit inputs (Eq. 15): `(2^(P-1) - 1) * 2^(1_signed(x) - N)`.
+pub fn l1_cap(p_bits: u32, n_bits: u32, x_signed: bool) -> f64 {
+    let sig = if x_signed { 1.0 } else { 0.0 };
+    (2f64.powi(p_bits as i32 - 1) - 1.0) * 2f64.powf(sig - n_bits as f64)
+}
+
+/// Quantize one output channel's direction vector `v` with per-channel
+/// log2-scale `d` and log2-norm `t` (Eq. 20-23). Returns (w_int, s).
+///
+/// All arithmetic in f32 to match the XLA artifact bit-for-bit.
+pub fn a2q_quantize_row(
+    v: &[f32],
+    d: f32,
+    t: f32,
+    m_bits: u32,
+    n_bits: u32,
+    p_bits: u32,
+    x_signed: bool,
+) -> (Vec<f32>, f32) {
+    let s = 2f32.powf(d);
+    let sig: f32 = if x_signed { 1.0 } else { 0.0 };
+    // T = 1_signed(x) + log2(2^(P-1) - 1) + d - N        (Eq. 23)
+    let cap = sig + (2f32.powf(p_bits as f32 - 1.0) - 1.0).log2() + d - n_bits as f32;
+    let g = 2f32.powf(cap.min(t));
+    let l1: f32 = v.iter().map(|x| x.abs()).sum();
+    let l1 = if l1 == 0.0 { 1.0 } else { l1 };
+    let lo = -(2f32.powf(m_bits as f32 - 1.0));
+    let hi = 2f32.powf(m_bits as f32 - 1.0) - 1.0;
+    let w_int: Vec<f32> = v
+        .iter()
+        .map(|&x| {
+            let w_cont = g * x / l1;
+            (w_cont / s).trunc().clamp(lo, hi) // round-toward-zero then clip
+        })
+        .collect();
+    (w_int, s)
+}
+
+/// Check Eq. 15 on a row of integer codes: the guaranteed-overflow-avoidance
+/// invariant every exported A2Q layer must satisfy.
+pub fn row_satisfies_cap(
+    w_int: &[f32],
+    p_bits: u32,
+    n_bits: u32,
+    x_signed: bool,
+) -> bool {
+    let l1: f64 = w_int.iter().map(|x| x.abs() as f64).sum();
+    l1 <= l1_cap(p_bits, n_bits, x_signed) + 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn cap_matches_paper_numbers() {
+        // P=16, N=8, unsigned: (2^15 - 1) * 2^-8 = 127.996...
+        let c = l1_cap(16, 8, false);
+        assert!((c - 32767.0 / 256.0).abs() < 1e-9);
+        // signed input doubles the cap
+        assert_eq!(l1_cap(16, 8, true), 2.0 * l1_cap(16, 8, false));
+    }
+
+    #[test]
+    fn quantized_rows_always_satisfy_cap() {
+        let mut rng = Rng::new(11);
+        for trial in 0..200 {
+            let k = 1 + rng.below(400);
+            let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 2.0).collect();
+            let d = -6.0 + rng.uniform() as f32 * 4.0;
+            let t = -2.0 + rng.uniform() as f32 * 14.0; // often far above cap
+            let m = 3 + (trial % 6) as u32;
+            let n = 1 + (trial % 8) as u32;
+            let p = 6 + (trial % 18) as u32;
+            let signed = trial % 2 == 0;
+            let (w_int, _) = a2q_quantize_row(&v, d, t, m, n, p, signed);
+            assert!(
+                row_satisfies_cap(&w_int, p, n, signed),
+                "violated at trial {trial}: k={k} m={m} n={n} p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn codes_within_m_bits() {
+        let mut rng = Rng::new(3);
+        let v: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let (w_int, _) = a2q_quantize_row(&v, -8.0, 10.0, 4, 4, 24, false);
+        for w in &w_int {
+            assert!(*w >= -8.0 && *w <= 7.0, "4-bit signed range violated: {w}");
+        }
+    }
+
+    #[test]
+    fn rtz_never_rounds_up_in_magnitude() {
+        let v = vec![0.9999f32, -0.9999, 0.5, -0.5];
+        let (w_int, s) = a2q_quantize_row(&v, 0.0, 1.0, 8, 1, 20, false);
+        // g = 2^min(T,1); l1 ~= 3; every |w_cont/s| < 1 must truncate to 0.
+        for (wi, vi) in w_int.iter().zip(&v) {
+            assert!(wi.abs() * s <= vi.abs() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_vector_is_fixed_point() {
+        let (w_int, _) = a2q_quantize_row(&[0.0; 64], -4.0, 2.0, 8, 8, 16, false);
+        assert!(w_int.iter().all(|w| *w == 0.0));
+    }
+}

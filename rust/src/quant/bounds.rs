@@ -1,0 +1,139 @@
+//! Accumulator bit-width lower bounds (paper §3).
+//!
+//! Two bounds on the accumulator width P needed to make overflow impossible
+//! for a K-element dot product of N-bit inputs and M-bit signed weights:
+//!
+//! * **data-type bound** (Eq. 8-10) — worst case over the representation
+//!   ranges alone:  `P >= alpha + phi(alpha) + 1`,
+//!   `alpha = log2(K) + N + M - 1 - 1_signed(x)`.
+//! * **weight-norm bound** (Eq. 12-14) — tighter, using the frozen weights:
+//!   `P >= beta + phi(beta) + 1`, `beta = log2(||w||_1) + N - 1_signed(x)`.
+//!
+//! with `phi(a) = log2(1 + 2^-a)`. Both guarantee every *intermediate partial
+//! sum* fits (the derivation bounds `sum |x_i||w_i|`, which dominates every
+//! prefix), not just the final result.
+
+/// Geometry of one dot product: K MACs of N-bit inputs times M-bit weights.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DotShape {
+    /// Dot-product length (elements accumulated per output).
+    pub k: usize,
+    /// Weight bit width M (weights are always signed, paper §3).
+    pub m_bits: u32,
+    /// Input bit width N.
+    pub n_bits: u32,
+    /// Whether the input integers are signed.
+    pub x_signed: bool,
+}
+
+fn phi(a: f64) -> f64 {
+    (1.0 + 2f64.powf(-a)).log2()
+}
+
+fn sig(x_signed: bool) -> f64 {
+    if x_signed {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Exact (real-valued) data-type lower bound on P (Eq. 8).
+pub fn data_type_bound_exact(s: DotShape) -> f64 {
+    let alpha =
+        (s.k as f64).log2() + s.n_bits as f64 + s.m_bits as f64 - 1.0 - sig(s.x_signed);
+    alpha + phi(alpha) + 1.0
+}
+
+/// Ceiling with a one-ULP-scale guard: the exact bounds hit integers
+/// *exactly* at their tight points (e.g. the weight bound at the Eq. 15 cap
+/// is exactly P), and f64 round-off must not push those to P + 1.
+fn ceil_bits(x: f64) -> u32 {
+    (x - 1e-9).ceil().max(1.0) as u32
+}
+
+/// Smallest integer accumulator width satisfying the data-type bound.
+pub fn data_type_bound(s: DotShape) -> u32 {
+    ceil_bits(data_type_bound_exact(s))
+}
+
+/// Exact (real-valued) weight-norm lower bound on P (Eq. 12) given the
+/// l1 norm of one output channel's *integer* weights.
+pub fn weight_bound_exact(l1_norm: f64, n_bits: u32, x_signed: bool) -> f64 {
+    if l1_norm <= 0.0 {
+        // An all-zero channel never accumulates anything; one sign bit.
+        return 1.0;
+    }
+    let beta = l1_norm.log2() + n_bits as f64 - sig(x_signed);
+    beta + phi(beta) + 1.0
+}
+
+/// Smallest integer accumulator width satisfying the weight-norm bound.
+pub fn weight_bound(l1_norm: f64, n_bits: u32, x_signed: bool) -> u32 {
+    ceil_bits(weight_bound_exact(l1_norm, n_bits, x_signed))
+}
+
+/// Worst-case input magnitude `2^(N - 1_signed)` (paper §3.1; the unsigned
+/// case uses the paper's 2^N simplification, which keeps the guarantee).
+pub fn max_input_mag(n_bits: u32, x_signed: bool) -> i64 {
+    1i64 << (n_bits as i64 - if x_signed { 1 } else { 0 })
+}
+
+/// Largest value a signed P-bit accumulator holds: `2^(P-1) - 1`.
+pub fn acc_max(p_bits: u32) -> i64 {
+    (1i64 << (p_bits - 1)) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig2_bound_is_19_bits() {
+        // Appendix A: K = 784, M = 8, N = 1 unsigned -> P lower bound 19.
+        let s = DotShape { k: 784, m_bits: 8, n_bits: 1, x_signed: false };
+        assert_eq!(data_type_bound(s), 19);
+    }
+
+    #[test]
+    fn bound_monotone_in_k_m_n() {
+        let base = DotShape { k: 128, m_bits: 6, n_bits: 6, x_signed: false };
+        let b = data_type_bound_exact(base);
+        assert!(data_type_bound_exact(DotShape { k: 256, ..base }) > b);
+        assert!(data_type_bound_exact(DotShape { m_bits: 7, ..base }) > b);
+        assert!(data_type_bound_exact(DotShape { n_bits: 7, ..base }) > b);
+    }
+
+    #[test]
+    fn signed_input_saves_one_bit() {
+        let u = DotShape { k: 512, m_bits: 8, n_bits: 8, x_signed: false };
+        let s = DotShape { x_signed: true, ..u };
+        let du = data_type_bound_exact(u);
+        let ds = data_type_bound_exact(s);
+        assert!((du - ds - 1.0).abs() < 1e-6, "{du} vs {ds}");
+    }
+
+    #[test]
+    fn weight_bound_no_looser_than_data_type_bound() {
+        // The worst admissible l1 norm K * 2^(M-1) recovers the data-type case.
+        let s = DotShape { k: 300, m_bits: 7, n_bits: 5, x_signed: false };
+        let worst_l1 = s.k as f64 * 2f64.powi(s.m_bits as i32 - 1);
+        let wb = weight_bound_exact(worst_l1, s.n_bits, s.x_signed);
+        let db = data_type_bound_exact(s);
+        assert!((wb - db).abs() < 1e-9, "{wb} vs {db}");
+        // and any real weight draw is strictly tighter
+        assert!(weight_bound_exact(worst_l1 / 4.0, s.n_bits, s.x_signed) < db);
+    }
+
+    #[test]
+    fn zero_norm_channel() {
+        assert_eq!(weight_bound(0.0, 8, false), 1);
+    }
+
+    #[test]
+    fn acc_max_values() {
+        assert_eq!(acc_max(8), 127);
+        assert_eq!(acc_max(16), 32767);
+        assert_eq!(acc_max(32), 2147483647);
+    }
+}

@@ -1,0 +1,11 @@
+//! Quantization math on the Rust side: the paper's accumulator bit-width
+//! bounds (§3), a bit-exact mirror of the A2Q quantizer used for verifying
+//! exported artifacts, and integer-tensor helpers.
+
+pub mod a2q;
+pub mod bounds;
+pub mod qtensor;
+
+pub use a2q::{a2q_quantize_row, l1_cap};
+pub use bounds::{data_type_bound, weight_bound, DotShape};
+pub use qtensor::QTensor;

@@ -1,0 +1,101 @@
+//! Integer tensors at the deployment boundary: exported weights arrive as
+//! f32 literals carrying exact small integers (the artifact interface is
+//! all-f32); `QTensor` re-types them as i64 with their scales so the accsim
+//! and FINN substrates work in the true integer domain.
+
+use crate::tensor::Tensor;
+
+/// A per-channel-quantized 2-D integer tensor `[c_out, k]` with scales.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    /// Integer codes, row-major `[c_out, k]`.
+    pub codes: Vec<i64>,
+    /// Per-output-channel scale factors, length `c_out`.
+    pub scales: Vec<f32>,
+    /// Per-output-channel float biases, length `c_out` (applied post-dequant).
+    pub bias: Vec<f32>,
+    pub c_out: usize,
+    pub k: usize,
+}
+
+impl QTensor {
+    /// Assemble from the export-artifact triple (w_int [C,K], s [C,1], b [C]).
+    pub fn from_export(w_int: &Tensor, s: &Tensor, b: &Tensor) -> Self {
+        let c_out = w_int.shape()[0];
+        let k = w_int.shape()[1];
+        assert_eq!(s.len(), c_out, "scale count mismatch");
+        assert_eq!(b.len(), c_out, "bias count mismatch");
+        QTensor {
+            codes: w_int.to_i64(),
+            scales: s.data().to_vec(),
+            bias: b.data().to_vec(),
+            c_out,
+            k,
+        }
+    }
+
+    /// Row `c` of integer codes.
+    pub fn row(&self, c: usize) -> &[i64] {
+        &self.codes[c * self.k..(c + 1) * self.k]
+    }
+
+    /// Per-channel l1 norms of the integer codes (`||w||_1`, Eq. 13).
+    pub fn row_l1(&self) -> Vec<i64> {
+        (0..self.c_out)
+            .map(|c| self.row(c).iter().map(|w| w.abs()).sum())
+            .collect()
+    }
+
+    /// Largest per-channel l1 norm (sets the layer's weight-norm bound).
+    pub fn max_l1(&self) -> i64 {
+        self.row_l1().into_iter().max().unwrap_or(0)
+    }
+
+    /// Fraction of zero codes (unstructured sparsity, paper §5.2.1).
+    pub fn sparsity(&self) -> f64 {
+        if self.codes.is_empty() {
+            return 0.0;
+        }
+        let z = self.codes.iter().filter(|w| **w == 0).count();
+        z as f64 / self.codes.len() as f64
+    }
+
+    /// Maximum absolute code (how much of the M-bit range is used).
+    pub fn max_abs_code(&self) -> i64 {
+        self.codes.iter().map(|w| w.abs()).max().unwrap_or(0)
+    }
+
+    /// Dequantize row `c` to f32 (codes * scale).
+    pub fn dequant_row(&self, c: usize) -> Vec<f32> {
+        let s = self.scales[c];
+        self.row(c).iter().map(|w| *w as f32 * s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> QTensor {
+        let w = Tensor::new(vec![2, 3], vec![1.0, -2.0, 0.0, 3.0, 0.0, 0.0]);
+        let s = Tensor::new(vec![2, 1], vec![0.5, 0.25]);
+        let b = Tensor::from_vec(vec![0.1, -0.1]);
+        QTensor::from_export(&w, &s, &b)
+    }
+
+    #[test]
+    fn l1_and_sparsity() {
+        let q = sample();
+        assert_eq!(q.row_l1(), vec![3, 3]);
+        assert_eq!(q.max_l1(), 3);
+        assert_eq!(q.sparsity(), 0.5);
+        assert_eq!(q.max_abs_code(), 3);
+    }
+
+    #[test]
+    fn dequant() {
+        let q = sample();
+        assert_eq!(q.dequant_row(0), vec![0.5, -1.0, 0.0]);
+        assert_eq!(q.dequant_row(1), vec![0.75, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Fig. 2 / Appendix A: the impact of overflow on the 1-layer binary-MNIST
+//! QNN (K = 784, M = 8, N = 1, data-type bound P = 19).
+//!
+//! Pipeline (all from Rust against the AOT artifacts):
+//! 1. train the `mlp` with baseline QAT (32-bit assumption);
+//! 2. export its integer weights; for each P below the bound, run *bit-exact*
+//!    integer inference over the test set under wraparound and saturating
+//!    accumulators ([`crate::accsim`]), recording overflow rate, MAE on the
+//!    logits vs the wide register, and top-1 accuracy;
+//! 3. re-train the same model from the same seed with A2Q at each target P
+//!    and record its accuracy (overflow-free by construction — asserted).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::accsim::{qlinear_forward, AccMode};
+use crate::accsim::matmul::quantize_inputs;
+use crate::config::RunConfig;
+use crate::coordinator::Trainer;
+use crate::datasets::Split;
+use crate::metrics;
+use crate::runtime::Engine;
+
+use super::render::{f, write_csv, write_markdown};
+
+/// One row of the figure: behaviour of each scheme at accumulator width P.
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    pub p_bits: u32,
+    pub overflow_rate_wrap: f64,
+    pub mae_wrap: f64,
+    pub acc_wrap: f64,
+    pub mae_sat: f64,
+    pub acc_sat: f64,
+    pub acc_a2q: f64,
+    pub a2q_overflows: u64,
+}
+
+pub struct Fig2Report {
+    pub acc_wide: f64,
+    pub rows: Vec<Fig2Row>,
+}
+
+/// Run the experiment. `p_values` defaults to 10..=20 (the paper sweeps
+/// below the 19-bit bound); `steps` sizes each training run.
+pub fn run(
+    engine: &Engine,
+    p_values: &[u32],
+    steps: u64,
+    eval_samples: usize,
+    seed: u64,
+) -> Result<Fig2Report> {
+    // --- 1. baseline QAT training (accumulator-oblivious) -------------------
+    let mut qat_cfg = RunConfig::new("mlp", "qat", 8, 1, 32, steps);
+    qat_cfg.seed = seed;
+    let trainer = Trainer::new(engine, &qat_cfg)?;
+    let qat = trainer.run(&qat_cfg)?;
+    let layer = qat.exported.as_ref().unwrap()[0].to_qtensor();
+
+    // Integer test inputs: binary pixels are exactly the 1-bit codes.
+    let n_eval = eval_samples.min(trainer.dataset.len(Split::Test));
+    let idx: Vec<usize> = (0..n_eval).collect();
+    let batch = trainer.dataset.gather(Split::Test, &idx);
+    let x_int = quantize_inputs(&batch.x, 1.0, 1, false);
+    let labels = batch.y.data();
+
+    let wide = qlinear_forward(&x_int, 1.0, &layer, AccMode::Wide);
+    let (c, n) = metrics::top1_accuracy(&wide.out, labels, n_eval);
+    let acc_wide = c as f64 / n as f64;
+
+    let mut rows = Vec::new();
+    for &p in p_values {
+        // --- 2. simulate P-bit deployment of the QAT model ------------------
+        let wrap = qlinear_forward(&x_int, 1.0, &layer, AccMode::Wrap { p_bits: p });
+        let sat = qlinear_forward(&x_int, 1.0, &layer, AccMode::Saturate { p_bits: p });
+        let (cw, _) = metrics::top1_accuracy(&wrap.out, labels, n_eval);
+        let (cs, _) = metrics::top1_accuracy(&sat.out, labels, n_eval);
+
+        // --- 3. A2Q re-trained at target P, same seed ------------------------
+        let mut a2q_cfg = RunConfig::new("mlp", "a2q", 8, 1, p, steps);
+        a2q_cfg.seed = seed;
+        let a2q = trainer.run(&a2q_cfg)?;
+        anyhow::ensure!(a2q.guarantee_ok, "A2Q Eq. 15 audit failed at P={p}");
+        let a2q_layer = a2q.exported.as_ref().unwrap()[0].to_qtensor();
+        let a2q_sim = qlinear_forward(&x_int, 1.0, &a2q_layer, AccMode::Wrap { p_bits: p });
+        // The theorem in action: wraparound at P bits must be a no-op.
+        anyhow::ensure!(
+            a2q_sim.stats.overflow_events == 0,
+            "A2Q overflowed at P={p}: {} events",
+            a2q_sim.stats.overflow_events
+        );
+        let (ca, _) = metrics::top1_accuracy(&a2q_sim.out, labels, n_eval);
+
+        rows.push(Fig2Row {
+            p_bits: p,
+            overflow_rate_wrap: wrap.stats.overflow_rate(),
+            mae_wrap: metrics::logit_mae(&wrap.out, &wrap.out_wide),
+            acc_wrap: cw as f64 / n_eval as f64,
+            mae_sat: metrics::logit_mae(&sat.out, &sat.out_wide),
+            acc_sat: cs as f64 / n_eval as f64,
+            acc_a2q: ca as f64 / n_eval as f64,
+            a2q_overflows: a2q_sim.stats.overflow_events,
+        });
+    }
+    Ok(Fig2Report { acc_wide, rows })
+}
+
+/// Emit `results/fig2.csv` + `results/fig2.md`.
+pub fn emit(report: &Fig2Report, out_dir: &Path) -> Result<()> {
+    let header = [
+        "P",
+        "overflow_rate",
+        "mae_wrap",
+        "acc_wrap",
+        "mae_sat",
+        "acc_sat",
+        "acc_a2q",
+        "a2q_overflow_events",
+    ];
+    let rows: Vec<Vec<String>> = report
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.p_bits.to_string(),
+                f(r.overflow_rate_wrap, 4),
+                f(r.mae_wrap, 4),
+                f(r.acc_wrap, 4),
+                f(r.mae_sat, 4),
+                f(r.acc_sat, 4),
+                f(r.acc_a2q, 4),
+                r.a2q_overflows.to_string(),
+            ]
+        })
+        .collect();
+    write_csv(&out_dir.join("fig2.csv"), &header, &rows)?;
+    write_markdown(
+        &out_dir.join("fig2.md"),
+        &format!(
+            "Fig. 2 — overflow impact on the 1-layer binary-MNIST QNN (32-bit acc reference accuracy {:.4})",
+            report.acc_wide
+        ),
+        &header,
+        &rows,
+    )?;
+    Ok(())
+}

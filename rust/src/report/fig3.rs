@@ -1,0 +1,123 @@
+//! Fig. 3: accumulator bit-width bounds — data-type bound (Eq. 8) versus the
+//! weight-norm bound (Eq. 12) over dot-product size K and data bit width,
+//! with the weight bound sampled over 1000 discrete-Gaussian weight draws
+//! (median / min / max), exactly as the paper's plot.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::quant::bounds::{data_type_bound_exact, weight_bound_exact, DotShape};
+use crate::rng::Rng;
+
+use super::render::{f, write_csv, write_markdown};
+
+#[derive(Clone, Debug)]
+pub struct Fig3Row {
+    pub k: usize,
+    pub bits: u32, // M = N ("data bit width")
+    pub data_type_bound: f64,
+    pub weight_bound_median: f64,
+    pub weight_bound_min: f64,
+    pub weight_bound_max: f64,
+}
+
+/// Sample one K-dim weight vector from a discrete Gaussian quantized to
+/// signed M bits (the paper's sampling) and return its l1 norm.
+fn sample_l1(rng: &mut Rng, k: usize, m_bits: u32) -> f64 {
+    let max = 2f64.powi(m_bits as i32 - 1) - 1.0;
+    let sigma = max / 3.0; // 3-sigma fills the code range
+    let mut l1 = 0.0;
+    for _ in 0..k {
+        let w = (rng.normal() * sigma).round().clamp(-max - 1.0, max);
+        l1 += w.abs();
+    }
+    l1
+}
+
+/// Compute the figure across `ks` x `bit_values` (x is unsigned, as plotted).
+pub fn run(ks: &[usize], bit_values: &[u32], n_draws: usize, seed: u64) -> Vec<Fig3Row> {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    for &bits in bit_values {
+        for &k in ks {
+            let dt = data_type_bound_exact(DotShape {
+                k,
+                m_bits: bits,
+                n_bits: bits,
+                x_signed: false,
+            });
+            let mut wbs: Vec<f64> = (0..n_draws)
+                .map(|_| {
+                    let l1 = sample_l1(&mut rng, k, bits);
+                    weight_bound_exact(l1, bits, false)
+                })
+                .collect();
+            wbs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            rows.push(Fig3Row {
+                k,
+                bits,
+                data_type_bound: dt,
+                weight_bound_median: wbs[wbs.len() / 2],
+                weight_bound_min: wbs[0],
+                weight_bound_max: *wbs.last().unwrap(),
+            });
+        }
+    }
+    rows
+}
+
+/// Emit `results/fig3.csv` + `.md`.
+pub fn emit(rows: &[Fig3Row], out_dir: &Path) -> Result<()> {
+    let header = ["K", "data_bits", "data_type_bound", "wb_median", "wb_min", "wb_max"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.k.to_string(),
+                r.bits.to_string(),
+                f(r.data_type_bound, 3),
+                f(r.weight_bound_median, 3),
+                f(r.weight_bound_min, 3),
+                f(r.weight_bound_max, 3),
+            ]
+        })
+        .collect();
+    write_csv(&out_dir.join("fig3.csv"), &header, &table)?;
+    write_markdown(
+        &out_dir.join("fig3.md"),
+        "Fig. 3 — accumulator bound comparison (1000 discrete-Gaussian draws)",
+        &header,
+        &table,
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_bound_tighter_than_data_type_bound() {
+        let rows = run(&[64, 256, 1024], &[4, 8], 200, 0);
+        for r in &rows {
+            assert!(
+                r.weight_bound_max <= r.data_type_bound + 1e-9,
+                "K={} bits={}: wb_max {} > dt {}",
+                r.k,
+                r.bits,
+                r.weight_bound_max,
+                r.data_type_bound
+            );
+            assert!(r.weight_bound_min <= r.weight_bound_median);
+            assert!(r.weight_bound_median <= r.weight_bound_max);
+        }
+    }
+
+    #[test]
+    fn bounds_grow_with_k() {
+        let rows = run(&[32, 1024], &[6], 50, 1);
+        assert!(rows[1].data_type_bound > rows[0].data_type_bound);
+        assert!(rows[1].weight_bound_median > rows[0].weight_bound_median);
+    }
+}

@@ -1,0 +1,245 @@
+//! Figs. 4 and 5: consume grid-search [`RunRecord`]s.
+//!
+//! * **Fig. 4** — Pareto frontier of task performance vs target accumulator
+//!   width P, A2Q against the baseline-QAT heuristic. A2Q exposes P as a free
+//!   variable (its records carry their trained P); the QAT heuristic can only
+//!   reach the data-type bound implied by its (M, N) choice (paper §5.2), so
+//!   its points sit at `P = data_type_bound(K*, M, N)`.
+//! * **Fig. 5** — mean ± std of exported-weight sparsity and of task
+//!   performance relative to the float baseline, as functions of P (M = N
+//!   configs, averaged across models, paper §5.2.1).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::RunRecord;
+use crate::pareto::{frontier, Point};
+use crate::quant::bounds::{data_type_bound, DotShape};
+
+use super::render::{f, write_csv};
+
+/// Fig. 4 data for one model: per-algorithm Pareto frontiers over (P, perf).
+#[derive(Clone, Debug)]
+pub struct Fig4Model {
+    pub model: String,
+    pub float_perf: Option<f64>,
+    /// (alg, frontier of (P, perf))
+    pub frontiers: Vec<(String, Vec<Point<(u32, u32)>>)>,
+}
+
+/// Effective accumulator width of a record under its algorithm's semantics.
+fn effective_p(rec: &RunRecord, largest_k: usize) -> u32 {
+    if rec.config.alg == "a2q" {
+        rec.config.p
+    } else {
+        // heuristic baseline: the guaranteed-safe P for its data types
+        data_type_bound(DotShape {
+            k: largest_k,
+            m_bits: rec.config.m,
+            n_bits: rec.config.n,
+            x_signed: false,
+        })
+        .min(32)
+    }
+}
+
+/// Build Fig. 4 for every model present in the records.
+pub fn fig4(records: &[RunRecord], largest_k: &BTreeMap<String, usize>) -> Vec<Fig4Model> {
+    let mut models: Vec<String> = records.iter().map(|r| r.config.model.clone()).collect();
+    models.sort();
+    models.dedup();
+
+    models
+        .into_iter()
+        .map(|model| {
+            let k = *largest_k.get(&model).unwrap_or(&1);
+            let float_perf = records
+                .iter()
+                .filter(|r| r.config.model == model && r.config.alg == "float")
+                .map(|r| r.perf)
+                .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))));
+            let mut frontiers = Vec::new();
+            for alg in ["a2q", "qat"] {
+                let pts: Vec<Point<(u32, u32)>> = records
+                    .iter()
+                    .filter(|r| r.config.model == model && r.config.alg == alg)
+                    .map(|r| Point {
+                        cost: effective_p(r, k) as f64,
+                        perf: r.perf,
+                        tag: (r.config.m, r.config.n),
+                    })
+                    .collect();
+                if !pts.is_empty() {
+                    frontiers.push((alg.to_string(), frontier(&pts)));
+                }
+            }
+            Fig4Model { model, float_perf, frontiers }
+        })
+        .collect()
+}
+
+/// Emit `results/fig4_<model>.csv`.
+pub fn emit_fig4(models: &[Fig4Model], out_dir: &Path) -> Result<()> {
+    for m in models {
+        let mut rows = Vec::new();
+        for (alg, front) in &m.frontiers {
+            for p in front {
+                rows.push(vec![
+                    alg.clone(),
+                    f(p.cost, 0),
+                    f(p.perf, 4),
+                    p.tag.0.to_string(),
+                    p.tag.1.to_string(),
+                ]);
+            }
+        }
+        if let Some(fp) = m.float_perf {
+            rows.push(vec!["float".into(), "32".into(), f(fp, 4), "-".into(), "-".into()]);
+        }
+        write_csv(
+            &out_dir.join(format!("fig4_{}.csv", m.model)),
+            &["alg", "P", "perf", "M", "N"],
+            &rows,
+        )?;
+    }
+    Ok(())
+}
+
+/// One Fig. 5 row: stats at accumulator width P.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub p_bits: u32,
+    pub sparsity_mean: f64,
+    pub sparsity_std: f64,
+    pub rel_perf_mean: f64,
+    pub rel_perf_std: f64,
+    pub n: usize,
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+/// Build Fig. 5 from A2Q records with M = N, relative to each model's float
+/// reference.
+pub fn fig5(records: &[RunRecord]) -> Vec<Fig5Row> {
+    let float_ref: BTreeMap<String, f64> = records
+        .iter()
+        .filter(|r| r.config.alg == "float")
+        .map(|r| (r.config.model.clone(), r.perf))
+        .collect();
+
+    let mut by_p: BTreeMap<u32, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for r in records {
+        if r.config.alg != "a2q" || r.config.m != r.config.n {
+            continue;
+        }
+        let Some(&fp) = float_ref.get(&r.config.model) else { continue };
+        if fp <= 0.0 {
+            continue;
+        }
+        let e = by_p.entry(r.config.p).or_default();
+        e.0.push(r.sparsity);
+        e.1.push(r.perf / fp);
+    }
+    by_p.into_iter()
+        .map(|(p, (sp, rp))| {
+            let (sm, ss) = mean_std(&sp);
+            let (rm, rs) = mean_std(&rp);
+            Fig5Row {
+                p_bits: p,
+                sparsity_mean: sm,
+                sparsity_std: ss,
+                rel_perf_mean: rm,
+                rel_perf_std: rs,
+                n: sp.len(),
+            }
+        })
+        .collect()
+}
+
+/// Emit `results/fig5.csv`.
+pub fn emit_fig5(rows: &[Fig5Row], out_dir: &Path) -> Result<()> {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.p_bits.to_string(),
+                f(r.sparsity_mean, 4),
+                f(r.sparsity_std, 4),
+                f(r.rel_perf_mean, 4),
+                f(r.rel_perf_std, 4),
+                r.n.to_string(),
+            ]
+        })
+        .collect();
+    write_csv(
+        &out_dir.join("fig5.csv"),
+        &["P", "sparsity_mean", "sparsity_std", "rel_perf_mean", "rel_perf_std", "n"],
+        &table,
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn rec(model: &str, alg: &str, mn: u32, p: u32, perf: f64, sparsity: f64) -> RunRecord {
+        RunRecord {
+            config: RunConfig::new(model, alg, mn, mn, p, 10),
+            perf,
+            sparsity,
+            l1_norms: vec![10.0],
+            guarantee_ok: true,
+            final_loss: 0.1,
+            first_loss: 1.0,
+            train_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn fig4_qat_sits_at_its_bound() {
+        let recs = vec![
+            rec("mlp", "a2q", 8, 12, 0.9, 0.5),
+            rec("mlp", "qat", 8, 12, 0.95, 0.1), // p ignored for qat
+            rec("mlp", "float", 8, 32, 0.97, 0.0),
+        ];
+        let mut lk = BTreeMap::new();
+        lk.insert("mlp".to_string(), 784usize);
+        let out = fig4(&recs, &lk);
+        assert_eq!(out.len(), 1);
+        let qat_front = &out[0].frontiers.iter().find(|(a, _)| a == "qat").unwrap().1;
+        // data-type bound for K=784, M=N=8 unsigned
+        let dt = data_type_bound(DotShape { k: 784, m_bits: 8, n_bits: 8, x_signed: false });
+        assert_eq!(qat_front[0].cost, dt as f64);
+        let a2q_front = &out[0].frontiers.iter().find(|(a, _)| a == "a2q").unwrap().1;
+        assert_eq!(a2q_front[0].cost, 12.0);
+        assert_eq!(out[0].float_perf, Some(0.97));
+    }
+
+    #[test]
+    fn fig5_aggregates_by_p() {
+        let recs = vec![
+            rec("mlp", "float", 8, 32, 1.0, 0.0),
+            rec("cnn", "float", 8, 32, 0.8, 0.0),
+            rec("mlp", "a2q", 6, 12, 0.9, 0.6),
+            rec("cnn", "a2q", 6, 12, 0.4, 0.8),
+            rec("mlp", "a2q", 6, 16, 0.99, 0.3),
+        ];
+        let rows = fig5(&recs);
+        assert_eq!(rows.len(), 2);
+        let r12 = rows.iter().find(|r| r.p_bits == 12).unwrap();
+        assert_eq!(r12.n, 2);
+        assert!((r12.sparsity_mean - 0.7).abs() < 1e-9);
+        assert!((r12.rel_perf_mean - (0.9 / 1.0 + 0.4 / 0.8) / 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,245 @@
+//! Figs. 6 and 7: HW-SW co-design — LUT utilization vs task performance
+//! under the four accumulator policies (paper §5.3), plus the compute/memory
+//! breakdown of the A2Q Pareto-optimal points (§5.3.1) and the abstract's
+//! headline "up to 2.3x LUT reduction at 99.2% of float accuracy".
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::RunRecord;
+use crate::finn::estimate::{estimate_network, AccumulatorPolicy, DEFAULT_CYCLES_BUDGET};
+use crate::finn::LayerGeom;
+use crate::pareto::{frontier, Point};
+
+use super::render::{f, write_csv};
+
+/// Tag carried on each Fig. 6 point: the grid config it came from.
+#[derive(Clone, Debug)]
+pub struct CfgTag {
+    pub m: u32,
+    pub n: u32,
+    pub p: u32,
+    pub compute: f64,
+    pub memory: f64,
+}
+
+/// Fig. 6 for one model: four (setting -> frontier) curves.
+#[derive(Clone, Debug)]
+pub struct Fig6Model {
+    pub model: String,
+    pub float_perf: Option<f64>,
+    pub settings: Vec<(String, Vec<Point<CfgTag>>)>,
+}
+
+/// The four co-design settings of paper §5.3.
+pub fn settings() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("qat_fixed32", "qat"),
+        ("qat_datatype", "qat"),
+        ("qat_ptm", "qat"),
+        ("a2q", "a2q"),
+    ]
+}
+
+fn policy_for(setting: &str, p: u32) -> AccumulatorPolicy {
+    match setting {
+        "qat_fixed32" => AccumulatorPolicy::Fixed32,
+        "qat_datatype" => AccumulatorPolicy::DataTypeBound,
+        "qat_ptm" => AccumulatorPolicy::WeightNorm,
+        "a2q" => AccumulatorPolicy::A2qTarget(p),
+        other => unreachable!("unknown setting {other}"),
+    }
+}
+
+/// Build Fig. 6 from grid records + per-model layer geometry.
+pub fn fig6(
+    records: &[RunRecord],
+    geoms: &BTreeMap<String, Vec<LayerGeom>>,
+) -> Vec<Fig6Model> {
+    let mut models: Vec<String> = records.iter().map(|r| r.config.model.clone()).collect();
+    models.sort();
+    models.dedup();
+
+    models
+        .into_iter()
+        .filter(|m| geoms.contains_key(m))
+        .map(|model| {
+            let g = &geoms[&model];
+            let float_perf = records
+                .iter()
+                .filter(|r| r.config.model == model && r.config.alg == "float")
+                .map(|r| r.perf)
+                .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))));
+
+            let mut out_settings = Vec::new();
+            for (setting, alg) in settings() {
+                let pts: Vec<Point<CfgTag>> = records
+                    .iter()
+                    .filter(|r| r.config.model == model && r.config.alg == alg)
+                    .map(|r| {
+                        let bits = (r.config.m, r.config.n, r.config.p);
+                        let est = estimate_network(
+                            g,
+                            bits,
+                            policy_for(setting, r.config.p),
+                            Some(&r.l1_norms),
+                            DEFAULT_CYCLES_BUDGET,
+                        );
+                        Point {
+                            cost: est.total_luts(),
+                            perf: r.perf,
+                            tag: CfgTag {
+                                m: r.config.m,
+                                n: r.config.n,
+                                p: r.config.p,
+                                compute: est.total.compute,
+                                memory: est.total.memory,
+                            },
+                        }
+                    })
+                    .collect();
+                if !pts.is_empty() {
+                    out_settings.push((setting.to_string(), frontier(&pts)));
+                }
+            }
+            Fig6Model { model, float_perf, settings: out_settings }
+        })
+        .collect()
+}
+
+/// Emit `results/fig6_<model>.csv` and `results/fig7_<model>.csv`.
+pub fn emit(models: &[Fig6Model], out_dir: &Path) -> Result<()> {
+    for m in models {
+        let mut rows6 = Vec::new();
+        for (setting, front) in &m.settings {
+            for p in front {
+                rows6.push(vec![
+                    setting.clone(),
+                    f(p.cost, 0),
+                    f(p.perf, 4),
+                    p.tag.m.to_string(),
+                    p.tag.n.to_string(),
+                    p.tag.p.to_string(),
+                ]);
+            }
+        }
+        if let Some(fp) = m.float_perf {
+            rows6.push(vec!["float".into(), "-".into(), f(fp, 4), "-".into(), "-".into(), "-".into()]);
+        }
+        write_csv(
+            &out_dir.join(format!("fig6_{}.csv", m.model)),
+            &["setting", "luts", "perf", "M", "N", "P"],
+            &rows6,
+        )?;
+
+        // Fig. 7: breakdown of the A2Q frontier points.
+        if let Some((_, front)) = m.settings.iter().find(|(s, _)| s == "a2q") {
+            let rows7: Vec<Vec<String>> = front
+                .iter()
+                .map(|p| {
+                    vec![
+                        p.tag.m.to_string(),
+                        p.tag.n.to_string(),
+                        p.tag.p.to_string(),
+                        f(p.tag.compute, 0),
+                        f(p.tag.memory, 0),
+                        f(p.perf, 4),
+                    ]
+                })
+                .collect();
+            write_csv(
+                &out_dir.join(format!("fig7_{}.csv", m.model)),
+                &["M", "N", "P", "lut_compute", "lut_memory", "perf"],
+                &rows7,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// The abstract's headline: best LUT reduction of A2Q vs the fixed-32-bit
+/// baseline among A2Q points retaining >= `rel_floor` of float performance.
+/// Returns (reduction_factor, rel_perf_at_that_point).
+pub fn headline_reduction(m: &Fig6Model, rel_floor: f64) -> Option<(f64, f64)> {
+    let float = m.float_perf?;
+    let fixed = m.settings.iter().find(|(s, _)| s == "qat_fixed32")?;
+    let a2q = m.settings.iter().find(|(s, _)| s == "a2q")?;
+    // baseline cost: cheapest fixed-32 point retaining rel_floor
+    let base = fixed
+        .1
+        .iter()
+        .filter(|p| p.perf / float >= rel_floor)
+        .map(|p| p.cost)
+        .fold(f64::INFINITY, f64::min);
+    let mut best: Option<(f64, f64)> = None;
+    for p in &a2q.1 {
+        let rel = p.perf / float;
+        if rel >= rel_floor && base.is_finite() && p.cost > 0.0 {
+            let red = base / p.cost;
+            if best.map_or(true, |(b, _)| red > b) {
+                best = Some((red, rel));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::finn::estimate::BitSpec;
+
+    fn geoms() -> Vec<LayerGeom> {
+        vec![LayerGeom {
+            name: "l".into(),
+            kind: "conv".into(),
+            c_out: 32,
+            k: 288,
+            m_spec: BitSpec::M,
+            n_spec: BitSpec::N,
+            p_spec: BitSpec::P,
+            x_signed: false,
+            out_h: 8,
+            out_w: 8,
+            kh: 3,
+            c_in: 32,
+            stride: 1,
+        }]
+    }
+
+    fn rec(alg: &str, mn: u32, p: u32, perf: f64) -> RunRecord {
+        RunRecord {
+            config: RunConfig::new("m", alg, mn, mn, p, 10),
+            perf,
+            sparsity: 0.4,
+            l1_norms: vec![100.0],
+            guarantee_ok: true,
+            final_loss: 0.0,
+            first_loss: 1.0,
+            train_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn a2q_frontier_cheaper_than_fixed32() {
+        let recs = vec![
+            rec("qat", 8, 32, 0.95),
+            rec("a2q", 8, 14, 0.94),
+            rec("float", 8, 32, 0.96),
+        ];
+        let mut g = BTreeMap::new();
+        g.insert("m".to_string(), geoms());
+        let out = fig6(&recs, &g);
+        assert_eq!(out.len(), 1);
+        let fixed = &out[0].settings.iter().find(|(s, _)| s == "qat_fixed32").unwrap().1;
+        let a2q = &out[0].settings.iter().find(|(s, _)| s == "a2q").unwrap().1;
+        assert!(a2q[0].cost < fixed[0].cost);
+        // headline exists and exceeds 1x
+        let (red, rel) = headline_reduction(&out[0], 0.9).unwrap();
+        assert!(red > 1.0);
+        assert!(rel >= 0.9);
+    }
+}

@@ -1,0 +1,154 @@
+//! Fig. 8 / Appendix A.1: breaking associativity. Randomly re-order the MACs
+//! of the trained 1-layer model's dot products under inner-loop saturating
+//! accumulation, and compare against modelling overflow only at the final
+//! result (outer loop) — which is what prior work does and which misses the
+//! intermediate partial sums entirely.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::accsim::dot::{dot_accumulate, AccMode};
+use crate::accsim::matmul::quantize_inputs;
+use crate::config::RunConfig;
+use crate::coordinator::Trainer;
+use crate::datasets::Split;
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::metrics;
+
+use super::render::{f, write_csv, write_markdown};
+
+/// Distribution of MAE / accuracy across random MAC orderings.
+#[derive(Clone, Debug)]
+pub struct Fig8Report {
+    pub p_bits: u32,
+    pub n_perms: usize,
+    /// Per-permutation (MAE on logits vs wide, top-1 accuracy): inner-loop
+    /// saturation model.
+    pub inner: Vec<(f64, f64)>,
+    /// Outer-loop (final-only) model: order-invariant single point.
+    pub outer_mae: f64,
+    pub outer_acc: f64,
+    /// Wide-register baseline accuracy.
+    pub acc_wide: f64,
+}
+
+impl Fig8Report {
+    pub fn inner_mae_mean(&self) -> f64 {
+        self.inner.iter().map(|(m, _)| m).sum::<f64>() / self.inner.len().max(1) as f64
+    }
+
+    pub fn inner_acc_spread(&self) -> (f64, f64) {
+        let lo = self.inner.iter().map(|(_, a)| *a).fold(f64::INFINITY, f64::min);
+        let hi = self.inner.iter().map(|(_, a)| *a).fold(f64::NEG_INFINITY, f64::max);
+        (lo, hi)
+    }
+
+    pub fn distinct_inner_maes(&self) -> usize {
+        let mut v: Vec<u64> = self.inner.iter().map(|(m, _)| m.to_bits()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+}
+
+/// Train the mlp with baseline QAT, then run the re-ordering study at P.
+pub fn run(
+    engine: &Engine,
+    p_bits: u32,
+    n_perms: usize,
+    steps: u64,
+    eval_samples: usize,
+    seed: u64,
+) -> Result<Fig8Report> {
+    let mut cfg = RunConfig::new("mlp", "qat", 8, 1, 32, steps);
+    cfg.seed = seed;
+    let trainer = Trainer::new(engine, &cfg)?;
+    let outcome = trainer.run(&cfg)?;
+    let layer = outcome.exported.as_ref().unwrap()[0].to_qtensor();
+
+    let n_eval = eval_samples.min(trainer.dataset.len(Split::Test));
+    let idx: Vec<usize> = (0..n_eval).collect();
+    let batch = trainer.dataset.gather(Split::Test, &idx);
+    let x_int = quantize_inputs(&batch.x, 1.0, 1, false);
+    let labels = batch.y.data();
+    let k = layer.k;
+
+    // Reference logits under the wide register / outer-loop model.
+    let logits = |mode: AccMode, perm: Option<&[usize]>| -> Tensor {
+        let mut out = Tensor::zeros(vec![n_eval, layer.c_out]);
+        let mut xp = vec![0i64; k];
+        let mut wp = vec![0i64; k];
+        for (bi, xb) in x_int.iter().enumerate() {
+            for c in 0..layer.c_out {
+                let row = layer.row(c);
+                let value = match perm {
+                    None => dot_accumulate(xb, row, mode).value,
+                    Some(p) => {
+                        for (j, &i) in p.iter().enumerate() {
+                            xp[j] = xb[i];
+                            wp[j] = row[i];
+                        }
+                        dot_accumulate(&xp, &wp, mode).value
+                    }
+                };
+                out.data_mut()[bi * layer.c_out + c] =
+                    value as f32 * layer.scales[c] + layer.bias[c];
+            }
+        }
+        out
+    };
+
+    let wide = logits(AccMode::Wide, None);
+    let (cw, nw) = metrics::top1_accuracy(&wide, labels, n_eval);
+    let acc_wide = cw as f64 / nw as f64;
+
+    let outer = logits(AccMode::SaturateFinal { p_bits }, None);
+    let (co, _) = metrics::top1_accuracy(&outer, labels, n_eval);
+    let outer_mae = metrics::logit_mae(&outer, &wide);
+    let outer_acc = co as f64 / n_eval as f64;
+
+    let mut rng = Rng::new(seed ^ 0xf18_8);
+    let mut perm: Vec<usize> = (0..k).collect();
+    let mut inner = Vec::with_capacity(n_perms);
+    for _ in 0..n_perms {
+        rng.shuffle(&mut perm);
+        let l = logits(AccMode::Saturate { p_bits }, Some(&perm));
+        let (ci, _) = metrics::top1_accuracy(&l, labels, n_eval);
+        inner.push((metrics::logit_mae(&l, &wide), ci as f64 / n_eval as f64));
+    }
+
+    Ok(Fig8Report { p_bits, n_perms, inner, outer_mae, outer_acc, acc_wide })
+}
+
+/// Emit `results/fig8.csv` (per-permutation) + `results/fig8.md` (summary).
+pub fn emit(report: &Fig8Report, out_dir: &Path) -> Result<()> {
+    let rows: Vec<Vec<String>> = report
+        .inner
+        .iter()
+        .enumerate()
+        .map(|(i, (mae, acc))| vec![i.to_string(), f(*mae, 5), f(*acc, 4)])
+        .collect();
+    write_csv(&out_dir.join("fig8.csv"), &["perm", "mae_inner", "acc_inner"], &rows)?;
+    let (lo, hi) = report.inner_acc_spread();
+    write_markdown(
+        &out_dir.join("fig8.md"),
+        &format!("Fig. 8 — re-ordering under saturation at P = {}", report.p_bits),
+        &["quantity", "value"],
+        &[
+            vec!["wide-register accuracy".into(), f(report.acc_wide, 4)],
+            vec!["outer-loop (final-only) MAE".into(), f(report.outer_mae, 5)],
+            vec!["outer-loop accuracy".into(), f(report.outer_acc, 4)],
+            vec!["inner-loop MAE mean".into(), f(report.inner_mae_mean(), 5)],
+            vec!["inner-loop acc min".into(), f(lo, 4)],
+            vec!["inner-loop acc max".into(), f(hi, 4)],
+            vec![
+                "distinct inner MAEs".into(),
+                report.distinct_inner_maes().to_string(),
+            ],
+        ],
+    )?;
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Per-figure report generators: each paper figure/table has a function that
+//! runs (or consumes) the relevant experiments and emits CSV + markdown into
+//! a results directory. The CLI (`a2q figure <id>`) and the criterion
+//! benches both drive these.
+//!
+//! | paper artifact | module | output |
+//! |---|---|---|
+//! | Fig. 2 (overflow impact, 1-layer bMNIST) | [`fig2`] | `results/fig2.csv` |
+//! | Fig. 3 (bound comparison)               | [`fig3`] | `results/fig3.csv` |
+//! | Fig. 4 (perf vs P Pareto)               | [`fig45`] | `results/fig4_<model>.csv` |
+//! | Fig. 5 (sparsity vs P)                  | [`fig45`] | `results/fig5.csv` |
+//! | Fig. 6 (LUTs vs perf Pareto)            | [`fig67`] | `results/fig6_<model>.csv` |
+//! | Fig. 7 (LUT breakdown)                  | [`fig67`] | `results/fig7_<model>.csv` |
+//! | Fig. 8 (re-ordering under saturation)   | [`fig8`] | `results/fig8.csv` |
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig45;
+pub mod fig67;
+pub mod fig8;
+pub mod render;
+
+pub use render::{write_csv, write_markdown};

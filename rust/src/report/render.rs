@@ -1,0 +1,62 @@
+//! Tiny CSV / markdown emitters for the figure reports.
+
+use std::path::Path;
+
+/// Write rows as CSV (first row = header). Creates parent dirs.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Write a markdown table with a title. Creates parent dirs.
+pub fn write_markdown(
+    path: &Path,
+    title: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = format!("# {title}\n\n");
+    out.push_str(&format!("| {} |\n", header.join(" | ")));
+    out.push_str(&format!("|{}|\n", header.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Format a float with fixed precision for tables.
+pub fn f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_md() {
+        let dir = crate::testutil::TempDir::new().unwrap();
+        let rows = vec![vec!["1".to_string(), "2.5".to_string()]];
+        let csv = dir.path().join("x/t.csv");
+        write_csv(&csv, &["a", "b"], &rows).unwrap();
+        assert!(std::fs::read_to_string(&csv).unwrap().contains("1,2.5"));
+        let md = dir.path().join("t.md");
+        write_markdown(&md, "T", &["a", "b"], &rows).unwrap();
+        let text = std::fs::read_to_string(&md).unwrap();
+        assert!(text.contains("| 1 | 2.5 |"));
+    }
+}

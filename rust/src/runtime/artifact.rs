@@ -1,0 +1,321 @@
+//! Artifact manifests: the JSON contract `python/compile/aot.py` writes and
+//! the Rust coordinator trusts (shapes, layer geometry, file names).
+//! Parsed with the in-tree [`crate::json`] module.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::finn::estimate::{BitSpec, LayerGeom};
+use crate::json::Json;
+
+/// `"M"`/`"N"`/`"P"` (runtime grid variable) or a fixed integer width.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BitsSpecJson {
+    Fixed(u32),
+    Var(String),
+}
+
+impl BitsSpecJson {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v {
+            Json::Num(_) => Ok(BitsSpecJson::Fixed(v.as_u32()?)),
+            Json::Str(s) => Ok(BitsSpecJson::Var(s.clone())),
+            other => anyhow::bail!("bad bit spec {other:?}"),
+        }
+    }
+
+    pub fn to_bitspec(&self) -> Result<BitSpec> {
+        Ok(match self {
+            BitsSpecJson::Fixed(v) => BitSpec::Fixed(*v),
+            BitsSpecJson::Var(s) => match s.as_str() {
+                "M" => BitSpec::M,
+                "N" => BitSpec::N,
+                "P" => BitSpec::P,
+                other => anyhow::bail!("unknown bit spec {other:?}"),
+            },
+        })
+    }
+}
+
+/// One quantized layer's geometry (mirrors `models/common.py::QLayer`).
+#[derive(Clone, Debug)]
+pub struct QLayerMeta {
+    pub name: String,
+    pub kind: String,
+    pub c_out: usize,
+    pub k: usize,
+    pub m_bits: BitsSpecJson,
+    pub n_bits: BitsSpecJson,
+    pub p_bits: BitsSpecJson,
+    pub x_signed: bool,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub c_in: usize,
+    pub stride: usize,
+    pub groups: usize,
+}
+
+impl QLayerMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(QLayerMeta {
+            name: v.get("name")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            c_out: v.get("c_out")?.as_usize()?,
+            k: v.get("k")?.as_usize()?,
+            m_bits: BitsSpecJson::from_json(v.get("m_bits")?)?,
+            n_bits: BitsSpecJson::from_json(v.get("n_bits")?)?,
+            p_bits: BitsSpecJson::from_json(v.get("p_bits")?)?,
+            x_signed: v.get("x_signed")?.as_bool()?,
+            out_h: v.get("out_h")?.as_usize()?,
+            out_w: v.get("out_w")?.as_usize()?,
+            kh: v.get("kh")?.as_usize()?,
+            kw: v.get("kw")?.as_usize()?,
+            c_in: v.get("c_in")?.as_usize()?,
+            stride: v.get("stride")?.as_usize()?,
+            groups: v.get("groups")?.as_usize()?,
+        })
+    }
+
+    pub fn to_geom(&self) -> Result<LayerGeom> {
+        Ok(LayerGeom {
+            name: self.name.clone(),
+            kind: self.kind.clone(),
+            c_out: self.c_out,
+            k: self.k,
+            m_spec: self.m_bits.to_bitspec()?,
+            n_spec: self.n_bits.to_bitspec()?,
+            p_spec: self.p_bits.to_bitspec()?,
+            x_signed: self.x_signed,
+            out_h: self.out_h,
+            out_w: self.out_w,
+            kh: self.kh,
+            c_in: self.c_in,
+            stride: self.stride,
+        })
+    }
+}
+
+/// Artifact file names for one algorithm.
+#[derive(Clone, Debug)]
+pub struct AlgArtifacts {
+    pub train: String,
+    pub infer: String,
+    pub export: Option<String>,
+}
+
+/// One entry of the flattened state/params layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateEntry {
+    pub path: String,
+    pub shape: Vec<usize>,
+}
+
+impl StateEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(StateEntry {
+            path: v.get("path")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_usize_vec()?,
+        })
+    }
+}
+
+/// One output of the export artifact.
+#[derive(Clone, Debug)]
+pub struct ExportEntry {
+    pub layer: String,
+    pub tensor: String,
+    pub shape: Vec<usize>,
+}
+
+/// Static train-step input shapes.
+#[derive(Clone, Debug)]
+pub struct TrainInputs {
+    pub x: Vec<usize>,
+    pub y: Vec<usize>,
+    pub bits: Vec<usize>,
+}
+
+/// Full manifest for one model (`artifacts/<model>.json`).
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub batch_size: usize,
+    pub task: String,
+    pub n_classes: usize,
+    pub sr_factor: usize,
+    pub optimizer: String,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub largest_k: usize,
+    pub qlayers: Vec<QLayerMeta>,
+    pub init: String,
+    pub algs: BTreeMap<String, AlgArtifacts>,
+    pub state: Vec<StateEntry>,
+    pub params: Vec<StateEntry>,
+    pub export_outputs: Vec<ExportEntry>,
+    pub train_inputs: TrainInputs,
+}
+
+impl ModelManifest {
+    /// Load `artifacts/<model>.json`.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        let path = artifacts_dir.join(format!("{model}.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}. Run `make artifacts` first."))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let m = Self::from_json(&v).map_err(|e| anyhow::anyhow!("decoding {path:?}: {e}"))?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let qlayers = v
+            .get("qlayers")?
+            .as_arr()?
+            .iter()
+            .map(QLayerMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut algs = BTreeMap::new();
+        for (alg, entry) in v.get("algs")?.as_obj()? {
+            algs.insert(
+                alg.clone(),
+                AlgArtifacts {
+                    train: entry.get("train")?.as_str()?.to_string(),
+                    infer: entry.get("infer")?.as_str()?.to_string(),
+                    export: entry
+                        .opt("export")
+                        .map(|e| e.as_str().map(str::to_string))
+                        .transpose()?,
+                },
+            );
+        }
+        let parse_entries = |key: &str| -> Result<Vec<StateEntry>> {
+            v.get(key)?.as_arr()?.iter().map(StateEntry::from_json).collect()
+        };
+        let export_outputs = v
+            .get("export_outputs")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(ExportEntry {
+                    layer: e.get("layer")?.as_str()?.to_string(),
+                    tensor: e.get("tensor")?.as_str()?.to_string(),
+                    shape: e.get("shape")?.as_usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let ti = v.get("train_inputs")?;
+        Ok(ModelManifest {
+            name: v.get("name")?.as_str()?.to_string(),
+            input_shape: v.get("input_shape")?.as_usize_vec()?,
+            batch_size: v.get("batch_size")?.as_usize()?,
+            task: v.get("task")?.as_str()?.to_string(),
+            n_classes: v.get("n_classes")?.as_usize()?,
+            sr_factor: v.get("sr_factor")?.as_usize()?,
+            optimizer: v.get("optimizer")?.as_str()?.to_string(),
+            lr: v.get("lr")?.as_f64()?,
+            weight_decay: v.get("weight_decay")?.as_f64()?,
+            largest_k: v.get("largest_k")?.as_usize()?,
+            qlayers,
+            init: v.get("init")?.as_str()?.to_string(),
+            algs,
+            state: parse_entries("state")?,
+            params: parse_entries("params")?,
+            export_outputs,
+            train_inputs: TrainInputs {
+                x: ti.get("x")?.as_usize_vec()?,
+                y: ti.get("y")?.as_usize_vec()?,
+                bits: ti.get("bits")?.as_usize_vec()?,
+            },
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(!self.qlayers.is_empty(), "no qlayers in manifest {}", self.name);
+        ensure!(!self.state.is_empty(), "empty state layout");
+        ensure!(
+            self.export_outputs.len() == 3 * self.qlayers.len(),
+            "export outputs {} != 3 * {} layers",
+            self.export_outputs.len(),
+            self.qlayers.len()
+        );
+        ensure!(
+            self.largest_k == self.qlayers.iter().map(|q| q.k).max().unwrap_or(0),
+            "largest_k inconsistent"
+        );
+        // params layout must be a subsequence of state (params/ prefix)
+        for p in &self.params {
+            ensure!(
+                self.state.iter().any(|s| s.path == format!("params/{}", p.path)),
+                "param {} missing from state layout",
+                p.path
+            );
+        }
+        Ok(())
+    }
+
+    pub fn alg(&self, alg: &str) -> Result<&AlgArtifacts> {
+        self.algs
+            .get(alg)
+            .ok_or_else(|| anyhow::anyhow!("model {} has no algorithm {alg:?}", self.name))
+    }
+
+    /// Geometry for the FINN estimator.
+    pub fn geoms(&self) -> Result<Vec<LayerGeom>> {
+        self.qlayers.iter().map(|q| q.to_geom()).collect()
+    }
+
+    /// Indices (into the flattened state) of the parameter leaves, in the
+    /// same order as the `params` layout — used to slice params out of a
+    /// train state for infer/export calls.
+    pub fn param_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .map(|p| {
+                let full = format!("params/{}", p.path);
+                self.state
+                    .iter()
+                    .position(|s| s.path == full)
+                    .expect("validated above")
+            })
+            .collect()
+    }
+}
+
+/// List models available in an artifacts directory.
+pub fn discover_models(artifacts_dir: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(artifacts_dir)? {
+        let p: PathBuf = entry?.path();
+        if p.extension().is_some_and(|e| e == "json") {
+            if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                if stem != "index" {
+                    out.push(stem.to_string());
+                }
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_spec_parsing() {
+        let f = BitsSpecJson::from_json(&Json::parse("8").unwrap()).unwrap();
+        assert_eq!(f, BitsSpecJson::Fixed(8));
+        let v = BitsSpecJson::from_json(&Json::parse("\"P\"").unwrap()).unwrap();
+        assert_eq!(v, BitsSpecJson::Var("P".into()));
+        assert!(v.to_bitspec().is_ok());
+        let bad = BitsSpecJson::from_json(&Json::parse("\"Q\"").unwrap()).unwrap();
+        assert!(bad.to_bitspec().is_err());
+    }
+}

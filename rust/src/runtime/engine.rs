@@ -1,0 +1,240 @@
+//! The PJRT execution engine: one CPU client, a compile cache keyed by
+//! artifact file, and typed entry points for the four artifact kinds.
+//!
+//! Hot-path design: training state lives as [`xla::Literal`]s and flows
+//! straight from one `train_step` execution into the next — the only
+//! per-step host conversions are the batch upload and the scalar loss
+//! download (see EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::artifact::ModelManifest;
+use super::literal::{literal_to_tensor, tensor_to_literal};
+use crate::quant::QTensor;
+use crate::tensor::Tensor;
+
+/// Training state: the flattened (params, optimizer, step) leaves, resident
+/// as literals between steps.
+pub struct TrainState {
+    pub leaves: Vec<xla::Literal>,
+}
+
+impl TrainState {
+    /// Slice out the parameter leaves (for infer/export calls).
+    pub fn params<'a>(&'a self, manifest: &ModelManifest) -> Vec<&'a xla::Literal> {
+        manifest
+            .param_indices()
+            .into_iter()
+            .map(|i| &self.leaves[i])
+            .collect()
+    }
+
+    /// Download every leaf to a host tensor (checkpointing).
+    pub fn to_tensors(&self) -> Result<Vec<Tensor>> {
+        self.leaves.iter().map(literal_to_tensor).collect()
+    }
+
+    /// Rebuild device state from host tensors (checkpoint restore).
+    pub fn from_tensors(tensors: &[Tensor]) -> Result<Self> {
+        let leaves = tensors
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { leaves })
+    }
+}
+
+/// One quantized layer as exported for deployment.
+#[derive(Clone, Debug)]
+pub struct ExportedLayer {
+    pub name: String,
+    /// Integer codes `[c_out, k]` (exact integers carried in f32).
+    pub w_int: Tensor,
+    /// Per-channel scales `[c_out, 1]`.
+    pub s: Tensor,
+    /// Float bias `[c_out]`.
+    pub b: Tensor,
+}
+
+impl ExportedLayer {
+    pub fn to_qtensor(&self) -> QTensor {
+        QTensor::from_export(&self.w_int, &self.s, &self.b)
+    }
+}
+
+/// PJRT engine with a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self, model: &str) -> Result<ModelManifest> {
+        ModelManifest::load(&self.dir, model)
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {file}: {e}"))?,
+        );
+        self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute an artifact; outputs are the decomposed result tuple
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        file: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(file)?;
+        let result = exe
+            .execute(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {file}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("downloading result of {file}: {e}"))?;
+        Ok(lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {file}: {e}"))?)
+    }
+
+    /// Run the init artifact: fresh training state from a seed.
+    pub fn init(&self, manifest: &ModelManifest, seed: f32) -> Result<TrainState> {
+        let leaves = self.run(&manifest.init, &[tensor_to_literal(&Tensor::scalar(seed))?])?;
+        anyhow::ensure!(
+            leaves.len() == manifest.state.len(),
+            "init returned {} leaves, manifest says {}",
+            leaves.len(),
+            manifest.state.len()
+        );
+        Ok(TrainState { leaves })
+    }
+
+    /// One SGD/Adam step; state advances in place, returns the loss.
+    pub fn train_step(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &mut TrainState,
+        x: &Tensor,
+        y: &Tensor,
+        bits: (u32, u32, u32),
+        lr: f32,
+    ) -> Result<f32> {
+        let file = manifest.alg(alg)?.train.clone();
+        let bits_t = Tensor::from_vec(vec![bits.0 as f32, bits.1 as f32, bits.2 as f32]);
+        let extra = [
+            tensor_to_literal(x)?,
+            tensor_to_literal(y)?,
+            tensor_to_literal(&bits_t)?,
+            tensor_to_literal(&Tensor::scalar(lr))?,
+        ];
+        let inputs: Vec<&xla::Literal> =
+            state.leaves.iter().chain(extra.iter()).collect();
+        let mut out = self.run(&file, &inputs)?;
+        anyhow::ensure!(
+            out.len() == state.leaves.len() + 1,
+            "train step returned {} outputs, expected {}",
+            out.len(),
+            state.leaves.len() + 1
+        );
+        let loss = literal_to_tensor(&out.pop().unwrap())?.item();
+        state.leaves = out;
+        Ok(loss)
+    }
+
+    /// Forward pass at the given bit widths.
+    pub fn infer(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &TrainState,
+        x: &Tensor,
+        bits: (u32, u32, u32),
+    ) -> Result<Tensor> {
+        let file = manifest.alg(alg)?.infer.clone();
+        let bits_t = Tensor::from_vec(vec![bits.0 as f32, bits.1 as f32, bits.2 as f32]);
+        let extra = [tensor_to_literal(x)?, tensor_to_literal(&bits_t)?];
+        let inputs: Vec<&xla::Literal> = state
+            .params(manifest)
+            .into_iter()
+            .chain(extra.iter())
+            .collect();
+        let out = self.run(&file, &inputs)?;
+        anyhow::ensure!(out.len() == 1, "infer returned {} outputs", out.len());
+        literal_to_tensor(&out[0])
+    }
+
+    /// Export integer weights + scales + biases for deployment analysis.
+    pub fn export(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &TrainState,
+        bits: (u32, u32, u32),
+    ) -> Result<Vec<ExportedLayer>> {
+        let file = manifest
+            .alg(alg)?
+            .export
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("{alg} has no export artifact"))?;
+        let bits_t = Tensor::from_vec(vec![bits.0 as f32, bits.1 as f32, bits.2 as f32]);
+        let extra = [tensor_to_literal(&bits_t)?];
+        let inputs: Vec<&xla::Literal> = state
+            .params(manifest)
+            .into_iter()
+            .chain(extra.iter())
+            .collect();
+        let out = self.run(&file, &inputs)?;
+        anyhow::ensure!(
+            out.len() == 3 * manifest.qlayers.len(),
+            "export returned {} tensors, expected {}",
+            out.len(),
+            3 * manifest.qlayers.len()
+        );
+        let mut layers = Vec::with_capacity(manifest.qlayers.len());
+        for (i, q) in manifest.qlayers.iter().enumerate() {
+            layers.push(ExportedLayer {
+                name: q.name.clone(),
+                w_int: literal_to_tensor(&out[3 * i])?,
+                s: literal_to_tensor(&out[3 * i + 1])?,
+                b: literal_to_tensor(&out[3 * i + 2])?,
+            });
+        }
+        Ok(layers)
+    }
+}

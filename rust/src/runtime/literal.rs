@@ -1,0 +1,56 @@
+//! Transport between host [`Tensor`]s and PJRT [`xla::Literal`]s.
+//!
+//! The artifact interface is all-f32 (labels ride as f32, integer codes ride
+//! as exact small integers in f32), so only f32 conversions are needed.
+
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Host tensor -> device literal (f32, row-major).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // rank-0: reshape the 1-element vector to a scalar
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Device literal -> host tensor (must be a dense f32 array).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_2d() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn round_trip_scalar() {
+        let t = Tensor::scalar(7.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back.shape(), &[] as &[usize]);
+        assert_eq!(back.item(), 7.5);
+    }
+
+    #[test]
+    fn round_trip_4d() {
+        let t = Tensor::new(vec![2, 2, 2, 1], (0..8).map(|v| v as f32).collect());
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+}

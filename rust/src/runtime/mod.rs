@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! * [`artifact`] — serde types for the artifact manifests (`<model>.json`)
+//!   plus artifact discovery;
+//! * [`literal`]  — [`crate::tensor::Tensor`] <-> [`xla::Literal`] transport;
+//! * [`engine`]   — the PJRT CPU client with a compile cache, and the typed
+//!   entry points (`init` / `train_step` / `infer` / `export`) the
+//!   coordinator drives.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod artifact;
+pub mod engine;
+pub mod literal;
+
+pub use artifact::{AlgArtifacts, ModelManifest, QLayerMeta};
+pub use engine::{Engine, ExportedLayer, TrainState};
+pub use literal::{literal_to_tensor, tensor_to_literal};

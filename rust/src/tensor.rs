@@ -1,0 +1,153 @@
+//! A minimal dense f32 tensor: the host-side currency between the runtime
+//! (PJRT literals), the datasets, the simulators and the estimators.
+//!
+//! Deliberately tiny — row-major `Vec<f32>` plus a shape. Anything heavier
+//! (views, broadcasting, autodiff) lives in XLA on the other side of the
+//! artifact boundary.
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape and data; panics if the element count mismatches.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} vs {} elements", data.len());
+        Self { shape, data }
+    }
+
+    /// All-zero tensor of the given shape.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    /// Scalar tensor (shape `[]`).
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// 1-D tensor.
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows for a 2-D view `[rows, cols]`; panics on other ranks.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() needs a 2-D tensor");
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() needs a 2-D tensor");
+        self.shape[1]
+    }
+
+    /// Borrow row `r` of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Scalar value of a 0-D/1-element tensor.
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() needs exactly one element");
+        self.data[0]
+    }
+
+    /// Fraction of exactly-zero elements (unstructured sparsity, paper §5.2.1).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|v| **v == 0.0).count();
+        z as f64 / self.data.len() as f64
+    }
+
+    /// l1 norm of row `r` of a 2-D tensor (per-channel `||w||_1`, Eq. 13).
+    pub fn row_l1(&self, r: usize) -> f64 {
+        self.row(r).iter().map(|v| v.abs() as f64).sum()
+    }
+
+    /// Round every element to the nearest integer and return as i64
+    /// (used on exported integer-code tensors, which carry ints in f32).
+    pub fn to_i64(&self) -> Vec<i64> {
+        self.data.iter().map(|v| v.round() as i64).collect()
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{}, {}, ... x{}]", self.data[0], self.data[1], self.data.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_access() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn sparsity_counts_exact_zeros() {
+        let t = Tensor::from_vec(vec![0.0, 1.0, 0.0, -2.0]);
+        assert_eq!(t.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn row_l1() {
+        let t = Tensor::new(vec![1, 3], vec![-1.0, 2.0, -3.0]);
+        assert_eq!(t.row_l1(0), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

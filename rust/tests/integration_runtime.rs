@@ -1,0 +1,200 @@
+//! Integration tests over the real AOT artifacts: the Rust <-> HLO contract.
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use a2q::config::RunConfig;
+use a2q::coordinator::checkpoint::Checkpoint;
+use a2q::coordinator::Trainer;
+use a2q::datasets::{self, Split};
+use a2q::quant::a2q::l1_cap;
+use a2q::runtime::{Engine, ModelManifest};
+
+fn artifacts() -> Option<&'static std::path::Path> {
+    let p = std::path::Path::new("artifacts");
+    if p.join("mlp.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts/ missing; run `make artifacts` (test skipped)");
+        None
+    }
+}
+
+#[test]
+fn manifests_parse_and_validate_for_all_models() {
+    let Some(dir) = artifacts() else { return };
+    let models = a2q::runtime::artifact::discover_models(dir).unwrap();
+    assert!(models.len() >= 5, "expected 5 models, got {models:?}");
+    for m in &models {
+        let manifest = ModelManifest::load(dir, m).unwrap();
+        assert!(manifest.algs.contains_key("a2q"), "{m} missing a2q");
+        assert!(manifest.algs.contains_key("qat"), "{m} missing qat");
+        assert!(manifest.algs.contains_key("float"), "{m} missing float");
+        assert!(manifest.geoms().is_ok());
+        assert!(!manifest.param_indices().is_empty());
+    }
+}
+
+#[test]
+fn init_matches_manifest_layout_and_is_seed_dependent() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    let manifest = engine.manifest("mlp").unwrap();
+    let s0 = engine.init(&manifest, 0.0).unwrap();
+    let s1 = engine.init(&manifest, 1.0).unwrap();
+    let t0 = s0.to_tensors().unwrap();
+    let t1 = s1.to_tensors().unwrap();
+    assert_eq!(t0.len(), manifest.state.len());
+    for (t, meta) in t0.iter().zip(&manifest.state) {
+        assert_eq!(t.shape(), &meta.shape[..], "leaf {}", meta.path);
+    }
+    // different seeds must give different weights (find the v leaf)
+    let vi = manifest
+        .state
+        .iter()
+        .position(|e| e.path == "params/fc/v")
+        .unwrap();
+    assert_ne!(t0[vi].data(), t1[vi].data(), "seed must matter");
+    // same seed bit-identical
+    let s0b = engine.init(&manifest, 0.0).unwrap();
+    assert_eq!(t0[vi].data(), s0b.to_tensors().unwrap()[vi].data());
+}
+
+#[test]
+fn train_step_decreases_loss_on_repeated_batch() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    let manifest = engine.manifest("mlp").unwrap();
+    let ds = datasets::by_name("synth_mnist", 512, 64, 0).unwrap();
+    let idx: Vec<usize> = (0..manifest.batch_size).collect();
+    let batch = ds.gather(Split::Train, &idx);
+    for alg in ["a2q", "qat", "float"] {
+        let mut state = engine.init(&manifest, 0.0).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..12 {
+            let l = engine
+                .train_step(&manifest, alg, &mut state, &batch.x, &batch.y, (8, 1, 16), 0.05)
+                .unwrap();
+            assert!(l.is_finite());
+            losses.push(l);
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "{alg}: {losses:?}"
+        );
+    }
+}
+
+#[test]
+fn infer_output_shape_and_determinism() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    let manifest = engine.manifest("mlp").unwrap();
+    let ds = datasets::by_name("synth_mnist", 256, 256, 0).unwrap();
+    let idx: Vec<usize> = (0..manifest.batch_size).collect();
+    let batch = ds.gather(Split::Test, &idx);
+    let state = engine.init(&manifest, 0.0).unwrap();
+    let a = engine.infer(&manifest, "a2q", &state, &batch.x, (8, 1, 14)).unwrap();
+    let b = engine.infer(&manifest, "a2q", &state, &batch.x, (8, 1, 14)).unwrap();
+    assert_eq!(a.shape(), &[manifest.batch_size, manifest.n_classes]);
+    assert_eq!(a.data(), b.data(), "inference must be deterministic");
+    // bits actually matter: an extreme accumulator cap changes the output
+    let tight = engine.infer(&manifest, "a2q", &state, &batch.x, (8, 1, 6)).unwrap();
+    assert_ne!(a.data(), tight.data(), "P must influence the a2q graph");
+}
+
+#[test]
+fn export_satisfies_l1_cap_after_training_every_model() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    // mlp is cheap; cnn covers conv + depthwise geometry.
+    for (model, bits) in [("mlp", (8u32, 1u32, 12u32)), ("cnn", (6, 6, 14))] {
+        let mut cfg = RunConfig::new(model, "a2q", bits.0, bits.1, bits.2, 25);
+        cfg.n_train = 256;
+        cfg.n_test = 64;
+        let trainer = Trainer::new(&engine, &cfg).unwrap();
+        let out = trainer.run(&cfg).unwrap();
+        assert!(out.guarantee_ok, "{model}: Eq. 15 audit failed");
+        for (layer, meta) in out.exported.as_ref().unwrap().iter().zip(&trainer.manifest.qlayers)
+        {
+            let q = layer.to_qtensor();
+            // Only runtime-P layers carry the user constraint.
+            if format!("{:?}", meta.p_bits).contains("Var(\"P\")") {
+                let cap = l1_cap(bits.2, bits.1, false);
+                assert!(
+                    q.max_l1() as f64 <= cap + 1e-6,
+                    "{model}/{}: {} > {cap}",
+                    layer.name,
+                    q.max_l1()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_round_trip_preserves_eval() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    let mut cfg = RunConfig::new("mlp", "a2q", 8, 1, 16, 15);
+    cfg.n_train = 256;
+    cfg.n_test = 128;
+    let trainer = Trainer::new(&engine, &cfg).unwrap();
+    let out = trainer.run(&cfg).unwrap();
+    let ckpt = Checkpoint::capture(&trainer.manifest, "a2q", 15, &out.state).unwrap();
+    let tmp = a2q::testutil::TempDir::new().unwrap();
+    let path = tmp.path().join("state.json");
+    ckpt.save(&path).unwrap();
+    let restored = Checkpoint::load(&path).unwrap().restore(&trainer.manifest).unwrap();
+    let p1 = trainer.evaluate(&out.state, "a2q", cfg.bits()).unwrap();
+    let p2 = trainer.evaluate(&restored, "a2q", cfg.bits()).unwrap();
+    assert_eq!(p1, p2, "restore must be bit-exact");
+}
+
+#[test]
+fn engine_compile_cache_reuses_executables() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    let manifest = engine.manifest("mlp").unwrap();
+    assert_eq!(engine.cached(), 0);
+    let _ = engine.init(&manifest, 0.0).unwrap();
+    assert_eq!(engine.cached(), 1);
+    let _ = engine.init(&manifest, 1.0).unwrap();
+    assert_eq!(engine.cached(), 1, "same artifact must not recompile");
+}
+
+#[test]
+fn a2q_integer_weights_match_rust_mirror() {
+    // Cross-implementation check: the Pallas export kernel (through the
+    // artifact) and the Rust mirror must agree on the integer codes given
+    // the same parameters.
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).unwrap();
+    let manifest = engine.manifest("mlp").unwrap();
+    let state = engine.init(&manifest, 3.0).unwrap();
+    let bits = (8u32, 1u32, 14u32);
+    let exported = engine.export(&manifest, "a2q", &state, bits).unwrap();
+    let q = exported[0].to_qtensor();
+
+    // pull v, d, t out of the state
+    let tensors = state.to_tensors().unwrap();
+    let find = |name: &str| {
+        let i = manifest.state.iter().position(|e| e.path == name).unwrap();
+        tensors[i].clone()
+    };
+    let v = find("params/fc/v");
+    let d = find("params/fc/d");
+    let t = find("params/fc/t");
+    for c in 0..q.c_out {
+        let (w_int, _) = a2q::quant::a2q_quantize_row(
+            v.row(c),
+            d.data()[c],
+            t.data()[c],
+            bits.0,
+            bits.1,
+            bits.2,
+            false,
+        );
+        let got: Vec<i64> = q.row(c).to_vec();
+        let want: Vec<i64> = w_int.iter().map(|x| *x as i64).collect();
+        assert_eq!(got, want, "channel {c} mismatch between Pallas and Rust");
+    }
+}

@@ -1,0 +1,226 @@
+//! Randomized property tests over the coordinator-side invariants (offline
+//! replacement for proptest, driven by the deterministic in-tree RNG).
+//!
+//! Each property runs a few hundred random cases; failures print the seed so
+//! the case is exactly reproducible.
+
+use a2q::accsim::{dot_accumulate, AccMode};
+use a2q::accsim::dot::wrap_to;
+use a2q::config::SweepConfig;
+use a2q::json::Json;
+use a2q::pareto::{dominates, frontier, Point};
+use a2q::quant::a2q::{a2q_quantize_row, l1_cap, row_satisfies_cap};
+use a2q::quant::bounds::{data_type_bound, weight_bound_exact, DotShape};
+use a2q::rng::Rng;
+
+const CASES: usize = 300;
+
+/// THE theorem (paper Eq. 5 + Eq. 15): if every channel's integer l1 norm
+/// satisfies the cap, then NO input — and no intermediate partial sum — can
+/// overflow a P-bit register, under any MAC ordering.
+#[test]
+fn prop_cap_implies_no_overflow_any_input_any_order() {
+    let mut rng = Rng::new(0xA2);
+    for case in 0..CASES {
+        let k = 1 + rng.below(300);
+        let n_bits = 1 + rng.below(8) as u32;
+        let p_bits = 8 + rng.below(16) as u32;
+        let signed = rng.below(2) == 1;
+        // random A2Q-quantized weights (the quantizer enforces the cap)
+        let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 3.0).collect();
+        let d = -6.0 + rng.uniform() as f32 * 3.0;
+        let t = rng.uniform() as f32 * 16.0;
+        let (w_int, _) = a2q_quantize_row(&v, d, t, 8, n_bits, p_bits, signed);
+        assert!(row_satisfies_cap(&w_int, p_bits, n_bits, signed), "case {case}");
+        let w: Vec<i64> = w_int.iter().map(|x| *x as i64).collect();
+
+        // adversarial worst-case input: sign-matched max-magnitude values
+        let xmax: i64 = 1 << (n_bits - if signed { 1 } else { 0 });
+        let mut x: Vec<i64> = w
+            .iter()
+            .map(|wi| if *wi >= 0 { xmax } else if signed { -xmax } else { xmax })
+            .collect();
+        // random order
+        let mut idx: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut idx);
+        let xp: Vec<i64> = idx.iter().map(|&i| x[i]).collect();
+        let wp: Vec<i64> = idx.iter().map(|&i| w[i]).collect();
+        let r = dot_accumulate(&xp, &wp, AccMode::Wrap { p_bits });
+        assert_eq!(r.overflows, 0, "case {case}: k={k} n={n_bits} p={p_bits}");
+        // and the wrap result equals the wide result
+        let wide = dot_accumulate(&xp, &wp, AccMode::Wide);
+        assert_eq!(r.value, wide.value, "case {case}");
+        // negate some inputs (still within range): still safe
+        for xi in x.iter_mut() {
+            if rng.below(2) == 0 {
+                *xi = if signed { -*xi } else { 0 };
+            }
+        }
+        let r2 = dot_accumulate(&x, &w, AccMode::Wrap { p_bits });
+        assert_eq!(r2.overflows, 0, "case {case} (perturbed inputs)");
+    }
+}
+
+/// Wraparound and saturation agree with the wide register exactly when no
+/// overflow occurs, and wrap_to is an involution-compatible 2^P modulus.
+#[test]
+fn prop_modes_agree_without_overflow() {
+    let mut rng = Rng::new(0xB3);
+    for case in 0..CASES {
+        let k = 1 + rng.below(200);
+        let p_bits = 10 + rng.below(20) as u32;
+        // keep sum(|x||w|) well inside the register
+        let cap = ((1i64 << (p_bits - 1)) - 1) / k as i64;
+        let lim = (cap as f64).sqrt().max(1.0) as i64;
+        let x: Vec<i64> = (0..k).map(|_| rng.below((2 * lim + 1) as usize) as i64 - lim).collect();
+        let w: Vec<i64> = (0..k).map(|_| rng.below((2 * lim + 1) as usize) as i64 - lim).collect();
+        let wide = dot_accumulate(&x, &w, AccMode::Wide);
+        for mode in [
+            AccMode::Wrap { p_bits },
+            AccMode::Saturate { p_bits },
+            AccMode::SaturateFinal { p_bits },
+        ] {
+            let r = dot_accumulate(&x, &w, mode);
+            assert_eq!(r.value, wide.value, "case {case} {mode:?}");
+            assert_eq!(r.overflows, 0, "case {case} {mode:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_wrap_to_is_modular() {
+    let mut rng = Rng::new(0xC4);
+    for _ in 0..CASES {
+        let p = 2 + rng.below(40) as u32;
+        let v = rng.next_u64() as i64 >> rng.below(30);
+        let m = 1i128 << p;
+        let r = wrap_to(v, p) as i128;
+        assert!((-(m / 2)..m / 2).contains(&r));
+        assert_eq!((r - v as i128).rem_euclid(m), 0, "p={p} v={v}");
+    }
+}
+
+/// The weight-norm bound is never looser than the data-type bound, and the
+/// bound is monotone in the l1 norm.
+#[test]
+fn prop_weight_bound_tighter_and_monotone() {
+    let mut rng = Rng::new(0xD5);
+    for case in 0..CASES {
+        let k = 1 + rng.below(4096);
+        let m_bits = 2 + rng.below(7) as u32;
+        let n_bits = 1 + rng.below(8) as u32;
+        let signed = rng.below(2) == 1;
+        let worst = k as f64 * (2f64.powi(m_bits as i32 - 1));
+        let l1 = rng.uniform() * worst;
+        let dt = data_type_bound(DotShape { k, m_bits, n_bits, x_signed: signed });
+        let wb = weight_bound_exact(l1, n_bits, signed);
+        assert!(wb <= dt as f64 + 1.0, "case {case}: wb {wb} vs dt {dt}");
+        let wb2 = weight_bound_exact(l1 * 0.5, n_bits, signed);
+        assert!(wb2 <= wb, "case {case}: monotonicity");
+    }
+}
+
+/// l1_cap round trip: a norm exactly at the cap needs exactly P bits by the
+/// weight bound (up to ceiling).
+#[test]
+fn prop_cap_and_bound_are_inverse() {
+    for p in 8..28u32 {
+        for n in 1..8u32 {
+            for signed in [false, true] {
+                let cap = l1_cap(p, n, signed);
+                let need = a2q::quant::bounds::weight_bound(cap, n, signed);
+                assert!(need <= p, "P={p} N={n} signed={signed}: need {need}");
+                // just above the cap must need more than P bits
+                let need2 = a2q::quant::bounds::weight_bound(cap * 1.01 + 1.0, n, signed);
+                assert!(need2 > p, "P={p} N={n}: need2 {need2}");
+            }
+        }
+    }
+}
+
+/// Pareto frontier properties: every frontier point is undominated, every
+/// non-frontier point is dominated by some frontier point.
+#[test]
+fn prop_frontier_correctness() {
+    let mut rng = Rng::new(0xE6);
+    for case in 0..100 {
+        let n = 2 + rng.below(80);
+        let pts: Vec<Point<usize>> = (0..n)
+            .map(|i| Point {
+                cost: (rng.below(20) as f64) + 1.0,
+                perf: rng.uniform(),
+                tag: i,
+            })
+            .collect();
+        let front = frontier(&pts);
+        assert!(!front.is_empty());
+        for fp in &front {
+            assert!(
+                !pts.iter().any(|p| dominates(p, fp)),
+                "case {case}: frontier point dominated"
+            );
+        }
+        for p in &pts {
+            let on_front = front.iter().any(|fp| fp.cost == p.cost && fp.perf == p.perf);
+            if !on_front {
+                assert!(
+                    front.iter().any(|fp| dominates(fp, p) || (fp.cost == p.cost && fp.perf >= p.perf)),
+                    "case {case}: non-frontier point not covered"
+                );
+            }
+        }
+    }
+}
+
+/// JSON fuzz: serialize(parse(serialize(v))) is a fixed point for random
+/// nested values.
+#[test]
+fn prop_json_round_trip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect::<Vec<_>>()
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(0xF7);
+    for case in 0..CASES {
+        let v = random_json(&mut rng, 3);
+        let s1 = v.to_string();
+        let v2 = Json::parse(&s1).unwrap_or_else(|e| panic!("case {case}: {e}\n{s1}"));
+        assert_eq!(v, v2, "case {case}");
+        assert_eq!(s1, v2.to_string(), "case {case}");
+    }
+}
+
+/// Sweep expansion invariants: every expanded config validates, P never
+/// exceeds the data-type bound anchor, and expansion is deterministic.
+#[test]
+fn prop_sweep_expansion() {
+    let mut rng = Rng::new(0x17);
+    for case in 0..100 {
+        let k = 8 + rng.below(4000);
+        let mut sweep = SweepConfig::default_grid(vec!["m".into()], 1 + rng.below(100) as u64);
+        sweep.mn_values = vec![5 + rng.below(4) as u32];
+        sweep.p_offsets = (0..1 + rng.below(10)).map(|_| rng.below(12) as u32).collect();
+        let runs = sweep.expand_for_model("m", k);
+        assert!(!runs.is_empty(), "case {case}");
+        for r in &runs {
+            r.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        }
+        assert_eq!(runs, sweep.expand_for_model("m", k), "case {case}: determinism");
+        // qat appears exactly once per mn value
+        let qats = runs.iter().filter(|r| r.alg == "qat").count();
+        assert_eq!(qats, sweep.mn_values.len(), "case {case}");
+    }
+}
