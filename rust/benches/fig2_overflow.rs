@@ -1,18 +1,18 @@
 //! Bench + regeneration of paper Fig. 2: overflow impact on the 1-layer
 //! binary-MNIST QNN. Times the accsim hot loop (the bit-exact P-bit
-//! register simulation) and regenerates a reduced fig2.csv end to end
-//! (training included) when artifacts are present.
+//! register simulation) on the Fig. 2 shape — per-mode single calls plus
+//! the fused all-widths sweep — and regenerates a reduced fig2.csv end to
+//! end (training included) when built with the `xla` feature and artifacts
+//! are present.
 
 #[path = "harness.rs"]
 mod harness;
 
 use a2q::accsim::matmul::quantize_inputs;
-use a2q::accsim::{qlinear_forward, AccMode};
+use a2q::accsim::{qlinear_forward, qlinear_forward_multi, qlinear_forward_ref, AccMode};
 use a2q::datasets::{synth_mnist, Split};
 use a2q::quant::QTensor;
-use a2q::report::fig2;
 use a2q::rng::Rng;
-use a2q::runtime::Engine;
 use a2q::tensor::Tensor;
 
 fn synthetic_layer(k: usize, c_out: usize, seed: u64) -> QTensor {
@@ -28,13 +28,15 @@ fn synthetic_layer(k: usize, c_out: usize, seed: u64) -> QTensor {
 }
 
 fn main() {
+    let mut journal = harness::Journal::new();
+
     // --- microbench: the accsim inner loop over the Fig. 2 shape ------------
     let ds = synth_mnist::generate(0, 256, 0);
     let idx: Vec<usize> = (0..256).collect();
     let batch = ds.gather(Split::Test, &idx);
     let x_int = quantize_inputs(&batch.x, 1.0, 1, false);
     let layer = synthetic_layer(synth_mnist::DIM, 2, 1);
-    let macs = (x_int.len() * layer.c_out * layer.k) as u64;
+    let macs = (x_int.rows() * layer.c_out * layer.k) as u64;
 
     for (name, mode) in [
         ("wide", AccMode::Wide),
@@ -45,9 +47,51 @@ fn main() {
             qlinear_forward(&x_int, 1.0, &layer, mode)
         });
         println!("  ({:.1} M MAC/s)", harness::throughput(&r, macs) / 1e6);
+        journal.add(&r, Some(macs));
     }
 
-    // --- end-to-end figure regeneration (needs artifacts) -------------------
+    // --- microbench: the Fig. 2 P-sweep, scalar-per-P vs fused -------------
+    let p_values: Vec<u32> = (10..=20).collect();
+    let modes: Vec<AccMode> = p_values
+        .iter()
+        .flat_map(|&p| [AccMode::Wrap { p_bits: p }, AccMode::Saturate { p_bits: p }])
+        .collect();
+    let sweep_macs = macs * modes.len() as u64;
+    let rb = harness::bench("fig2/psweep_scalar_baseline", 1, 5, || {
+        modes
+            .iter()
+            .map(|m| qlinear_forward_ref(&x_int, 1.0, &layer, *m).stats.overflow_events)
+            .sum::<u64>()
+    });
+    println!("  ({:.1} M MAC/s)", harness::throughput(&rb, sweep_macs) / 1e6);
+    journal.add(&rb, Some(sweep_macs));
+    let rf = harness::bench("fig2/psweep_fused_engine", 1, 5, || {
+        qlinear_forward_multi(&x_int, 1.0, &layer, &modes)
+            .iter()
+            .map(|s| s.stats.overflow_events)
+            .sum::<u64>()
+    });
+    println!("  ({:.1} M MAC/s)", harness::throughput(&rf, sweep_macs) / 1e6);
+    journal.add(&rf, Some(sweep_macs));
+    println!(
+        "fig2 sweep: fused {:.1}x over per-P scalar ({} modes)",
+        rb.median.as_secs_f64() / rf.median.as_secs_f64(),
+        modes.len()
+    );
+    journal.flush();
+
+    // --- end-to-end figure regeneration (xla feature + artifacts) -----------
+    #[cfg(feature = "xla")]
+    end_to_end();
+    #[cfg(not(feature = "xla"))]
+    println!("built without the `xla` feature; skipping end-to-end fig2 regeneration");
+}
+
+#[cfg(feature = "xla")]
+fn end_to_end() {
+    use a2q::report::fig2;
+    use a2q::runtime::Engine;
+
     if !std::path::Path::new("artifacts/mlp.json").exists() {
         println!("artifacts missing; skipping end-to-end fig2 regeneration");
         return;

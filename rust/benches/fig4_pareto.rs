@@ -7,29 +7,49 @@
 mod harness;
 
 use std::collections::BTreeMap;
+#[cfg(feature = "xla")]
 use std::path::PathBuf;
 
-use a2q::config::SweepConfig;
-use a2q::coordinator::{run_sweep, MetricsSink};
+use a2q::coordinator::MetricsSink;
 use a2q::pareto::frontier_dominates;
 use a2q::report::fig45;
 use a2q::runtime::ModelManifest;
 
-fn main() {
-    let sink = MetricsSink::new("results/runs.jsonl");
-    let mut records = sink.load().expect("sink parse");
-    if records.is_empty() {
-        println!("no sweep records; running a reduced inline mlp sweep");
-        let mut cfg = SweepConfig::default_grid(vec!["mlp".into()], if harness::quick() { 40 } else { 200 });
-        cfg.algs.push("float".into());
-        cfg.mn_values = vec![8];
-        records = run_sweep(
+/// Fall back to a reduced inline sweep when no records exist (needs the
+/// PJRT engine, so `xla` builds only).
+#[cfg(feature = "xla")]
+fn inline_sweep() -> Option<Vec<a2q::coordinator::RunRecord>> {
+    use a2q::config::SweepConfig;
+    println!("no sweep records; running a reduced inline mlp sweep");
+    let mut cfg =
+        SweepConfig::default_grid(vec!["mlp".into()], if harness::quick() { 40 } else { 200 });
+    cfg.algs.push("float".into());
+    cfg.mn_values = vec![8];
+    Some(
+        a2q::coordinator::run_sweep(
             cfg,
             PathBuf::from("artifacts"),
             PathBuf::from("results/runs.jsonl"),
             false,
         )
-        .expect("inline sweep");
+        .expect("inline sweep"),
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+fn inline_sweep() -> Option<Vec<a2q::coordinator::RunRecord>> {
+    println!("no sweep records and no `xla` feature; run `a2q sweep` first");
+    None
+}
+
+fn main() {
+    let sink = MetricsSink::new("results/runs.jsonl");
+    let mut records = sink.load().expect("sink parse");
+    if records.is_empty() {
+        match inline_sweep() {
+            Some(r) => records = r,
+            None => return,
+        }
     }
 
     let mut largest_k = BTreeMap::new();

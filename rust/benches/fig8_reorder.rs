@@ -1,16 +1,17 @@
 //! Bench + regeneration of paper Fig. 8: associativity breaking under
-//! saturating accumulation. Times the permutation study core and, with
+//! saturating accumulation. Times the permutation study core (scratch
+//! buffers reused across permutations) and, with the `xla` feature and
 //! artifacts present, regenerates results/fig8.csv end to end.
 
 #[path = "harness.rs"]
 mod harness;
 
-use a2q::accsim::reorder_study;
-use a2q::report::fig8;
+use a2q::accsim::ReorderScratch;
 use a2q::rng::Rng;
-use a2q::runtime::Engine;
 
 fn main() {
+    let mut journal = harness::Journal::new();
+
     // --- microbench: 100-permutation study on a K=784 dot product -----------
     let mut rng = Rng::new(5);
     let x: Vec<i64> = (0..784).map(|_| (rng.uniform() > 0.7) as i64).collect();
@@ -18,15 +19,30 @@ fn main() {
         .map(|_| (rng.normal() * 40.0).round().clamp(-128.0, 127.0) as i64)
         .collect();
     let perms = if harness::quick() { 20 } else { 100 };
+    let mut scratch = ReorderScratch::new();
     let r = harness::bench(&format!("fig8/reorder_{perms}perm_k784"), 2, 10, || {
-        reorder_study(&x, &w, 12, perms, 9)
+        scratch.study(&x, &w, 12, perms, 9)
     });
+    let macs = (perms * 784) as u64;
     println!(
         "  ({:.1} M MAC/s through the saturating register)",
-        harness::throughput(&r, (perms * 784) as u64) / 1e6
+        harness::throughput(&r, macs) / 1e6
     );
+    journal.add(&r, Some(macs));
+    journal.flush();
 
     // --- end-to-end regeneration --------------------------------------------
+    #[cfg(feature = "xla")]
+    end_to_end();
+    #[cfg(not(feature = "xla"))]
+    println!("built without the `xla` feature; skipping end-to-end fig8 regeneration");
+}
+
+#[cfg(feature = "xla")]
+fn end_to_end() {
+    use a2q::report::fig8;
+    use a2q::runtime::Engine;
+
     if !std::path::Path::new("artifacts/mlp.json").exists() {
         println!("artifacts missing; skipping end-to-end fig8 regeneration");
         return;

@@ -55,10 +55,12 @@ pub fn sink<T>(v: T) {
     drop(boxed);
 }
 
-/// Throughput helper: ops/sec at a given per-iteration op count.
+/// Throughput helper: ops/sec at a given per-iteration op count (a 0ns
+/// median — possible for trivial bodies on coarse clocks — must not
+/// produce an infinite rate).
 #[allow(dead_code)]
 pub fn throughput(r: &BenchResult, ops_per_iter: u64) -> f64 {
-    ops_per_iter as f64 / r.median.as_secs_f64()
+    ops_per_iter as f64 / r.median.as_secs_f64().max(1e-12)
 }
 
 /// Scale benchmark sizes down when A2Q_BENCH_QUICK=1 (used by `make test`
@@ -66,4 +68,40 @@ pub fn throughput(r: &BenchResult, ops_per_iter: u64) -> f64 {
 #[allow(dead_code)]
 pub fn quick() -> bool {
     std::env::var("A2Q_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Machine-readable journal: collects results during a bench run, then
+/// merges them into `BENCH_accsim.json` at the repo root (name, ns/iter,
+/// MAC/s) so the perf trajectory is tracked across PRs alongside stdout.
+#[allow(dead_code)]
+#[derive(Default)]
+pub struct Journal {
+    records: Vec<a2q::perf::BenchRecord>,
+}
+
+#[allow(dead_code)]
+impl Journal {
+    pub fn new() -> Journal {
+        Journal::default()
+    }
+
+    /// Record a result; pass the per-iteration MAC count for MAC/s.
+    pub fn add(&mut self, r: &BenchResult, macs_per_iter: Option<u64>) {
+        self.records.push(a2q::perf::BenchRecord {
+            name: r.name.clone(),
+            ns_per_iter: r.median.as_nanos() as f64,
+            mac_per_s: macs_per_iter.map(|m| throughput(r, m)),
+        });
+    }
+
+    /// Merge into BENCH_accsim.json; prints where the journal went.
+    pub fn flush(&self) {
+        if self.records.is_empty() {
+            return;
+        }
+        match a2q::perf::record_benches(&self.records) {
+            Ok(path) => println!("perf journal: {} entries -> {}", self.records.len(), path.display()),
+            Err(e) => eprintln!("perf journal write failed: {e}"),
+        }
+    }
 }

@@ -1,22 +1,32 @@
 //! Runtime hot-path microbenchmarks (the EXPERIMENTS.md §Perf instrument):
 //!
-//! * `train_step` latency per model/alg — the end-to-end request-path unit;
-//! * dispatch overhead: literal upload + tuple decomposition vs pure
-//!   executable time, measured by replaying the same step;
+//! * accsim MAC throughput (the figure substrate): single-dot register
+//!   models, plus the headline 25-width P-sweep — per-P scalar baseline vs
+//!   the fused multi-P kernel engine (bound-gated + scoped threads);
 //! * dataset batch materialization;
-//! * accsim MAC throughput (the figure substrate).
+//! * `train_step` latency per model/alg and the PJRT dispatch path (needs
+//!   the `xla` feature + AOT artifacts).
+//!
+//! Results are journaled to BENCH_accsim.json and the auto-recorded block
+//! of EXPERIMENTS.md §Perf via `a2q::perf`.
 
 #[path = "harness.rs"]
 mod harness;
 
-use a2q::accsim::{dot_accumulate, AccMode};
-use a2q::config::RunConfig;
+use a2q::accsim::{
+    dot_accumulate, qlinear_forward_multi, qlinear_forward_ref, AccMode, IntMatrix,
+};
 use a2q::datasets::{self, Split};
 use a2q::rng::Rng;
-use a2q::runtime::Engine;
+use a2q::testutil::psweep_layer;
+
+/// The P-sweep every figure replays: 25 accumulator widths.
+const P_SWEEP: std::ops::RangeInclusive<u32> = 8..=32;
 
 fn main() {
-    // --- accsim throughput ---------------------------------------------------
+    let mut journal = harness::Journal::new();
+
+    // --- accsim dot throughput ----------------------------------------------
     let mut rng = Rng::new(1);
     let k = 4096;
     let x: Vec<i64> = (0..k).map(|_| rng.below(256) as i64).collect();
@@ -33,7 +43,72 @@ fn main() {
             }
             acc
         });
-        println!("  ({:.0} M MAC/s)", harness::throughput(&r, 1000 * k as u64) / 1e6);
+        let macs = 1000 * k as u64;
+        println!("  ({:.0} M MAC/s)", harness::throughput(&r, macs) / 1e6);
+        journal.add(&r, Some(macs));
+    }
+
+    // --- accsim P-sweep: per-P scalar baseline vs fused engine ---------------
+    // The shape every sweep figure hits: a quantized layer forwarded under
+    // all 25 accumulator widths. Baseline walks the MACs once per width;
+    // the engine walks them once total.
+    let (batch, c_out, kk) = if harness::quick() { (16, 16, 512) } else { (64, 64, 1024) };
+    let layer = psweep_layer(c_out, kk, 7);
+    let mut xrng = Rng::new(8);
+    let xm = IntMatrix::from_flat(
+        batch,
+        kk,
+        (0..batch * kk).map(|_| xrng.below(256) as i64).collect(),
+    );
+    let modes: Vec<AccMode> = P_SWEEP.map(|p| AccMode::Wrap { p_bits: p }).collect();
+    let sweep_macs = (modes.len() * batch * c_out * kk) as u64;
+    let iters = if harness::quick() { 3 } else { 10 };
+
+    let rb = harness::bench("accsim/psweep25_scalar_baseline", 1, iters, || {
+        let mut events = 0u64;
+        for mode in &modes {
+            events += qlinear_forward_ref(&xm, 1.0, &layer, *mode).stats.overflow_events;
+        }
+        events
+    });
+    println!("  ({:.0} M MAC/s)", harness::throughput(&rb, sweep_macs) / 1e6);
+    journal.add(&rb, Some(sweep_macs));
+
+    let rf = harness::bench("accsim/psweep25_fused_engine", 1, iters, || {
+        qlinear_forward_multi(&xm, 1.0, &layer, &modes)
+            .iter()
+            .map(|s| s.stats.overflow_events)
+            .sum::<u64>()
+    });
+    println!("  ({:.0} M MAC/s)", harness::throughput(&rf, sweep_macs) / 1e6);
+    journal.add(&rf, Some(sweep_macs));
+
+    let speedup = rb.median.as_secs_f64() / rf.median.as_secs_f64();
+    println!(
+        "accsim P-sweep ({} widths, batch {batch} x c_out {c_out} x k {kk}): fused engine {speedup:.1}x over per-P scalar",
+        modes.len()
+    );
+    journal.flush();
+
+    // Refresh the auto-recorded §Perf block of EXPERIMENTS.md.
+    let to_record = |r: &harness::BenchResult| a2q::perf::BenchRecord {
+        name: r.name.clone(),
+        ns_per_iter: r.median.as_nanos() as f64,
+        mac_per_s: Some(harness::throughput(r, sweep_macs)),
+    };
+    let block = a2q::perf::render_psweep_block(
+        &format!(
+            "`cargo bench --bench runtime_hotpath`{}",
+            if harness::quick() { " (quick mode)" } else { "" }
+        ),
+        &to_record(&rb),
+        &to_record(&rf),
+        &format!("{} widths, batch {batch} x c_out {c_out} x k {kk}", modes.len()),
+    );
+    match a2q::perf::update_experiments_block(&block) {
+        Ok(true) => println!("EXPERIMENTS.md §Perf block updated"),
+        Ok(false) => println!("EXPERIMENTS.md markers absent; skipped §Perf update"),
+        Err(e) => eprintln!("EXPERIMENTS.md update failed: {e}"),
     }
 
     // --- dataset batch materialization --------------------------------------
@@ -45,7 +120,18 @@ fn main() {
     });
     let _ = r;
 
-    // --- PJRT request path ---------------------------------------------------
+    // --- PJRT request path (xla feature + artifacts only) --------------------
+    #[cfg(feature = "xla")]
+    pjrt_benches();
+    #[cfg(not(feature = "xla"))]
+    println!("built without the `xla` feature; skipping PJRT hot-path benches");
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_benches() {
+    use a2q::config::RunConfig;
+    use a2q::runtime::Engine;
+
     if !std::path::Path::new("artifacts/mlp.json").exists() {
         println!("artifacts missing; skipping PJRT hot-path benches");
         return;
@@ -68,8 +154,6 @@ fn main() {
                 .train_step(&manifest, alg, &mut state, &batch.x, &batch.y, cfg.bits(), 0.01)
                 .expect("step")
         });
-        // dispatch overhead estimate: time infer on the same params (smaller
-        // graph) and a no-op-sized literal upload
         let _ = r;
     }
 

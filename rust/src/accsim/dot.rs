@@ -26,8 +26,9 @@ pub struct DotResult {
     pub overflows: u32,
 }
 
+/// Representable range of a signed P-bit register: `[-2^(P-1), 2^(P-1)-1]`.
 #[inline]
-fn range(p_bits: u32) -> (i64, i64) {
+pub(crate) fn range(p_bits: u32) -> (i64, i64) {
     debug_assert!((2..=63).contains(&p_bits), "p_bits {p_bits} out of range");
     let hi = (1i64 << (p_bits - 1)) - 1;
     (-hi - 1, hi)

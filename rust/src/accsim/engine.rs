@@ -1,0 +1,519 @@
+//! The fused multi-P kernel engine: one traversal of the MACs simulates
+//! *every* requested accumulator width at once, provably-safe channels skip
+//! register simulation entirely, and the batch grid fans out across scoped
+//! threads. This is the hot path behind every P-sweep figure (Fig. 2/4/8);
+//! before/after throughput is tracked in EXPERIMENTS.md §Perf and
+//! BENCH_accsim.json.
+//!
+//! Three stacked optimizations over the per-P scalar walk
+//! ([`super::matmul::qlinear_forward_ref`]):
+//!
+//! 1. **Multi-P fusion** — the dominant cost of the scalar path is streaming
+//!    `x` and `w` through memory once *per width*; a 25-width sweep reads the
+//!    same bytes 25 times. The fused kernel carries one register per
+//!    requested width, so K extra widths cost a few ALU ops each (wrap is a
+//!    shift/sign-extend pair, saturate a compare/clamp) instead of a full
+//!    memory pass.
+//! 2. **Bound-gated fast paths** — the paper's own overflow bound (Eq. 4-5;
+//!    also arXiv:2301.13376 §3): every intermediate partial sum of `x . w`
+//!    is bounded by `Σ|w_i| * max|x_i|`, so a channel whose bound fits in
+//!    `2^(P-1) - 1` can *never* overflow a P-bit register, under any input
+//!    and any MAC ordering. The planner precomputes per-channel `Σ|w_int|`;
+//!    at execution each (row, channel) pair derives the smallest safe width
+//!    and registers at or above it bypass simulation — when every width is
+//!    safe the whole dot product collapses to a plain autovectorizable wide
+//!    dot over the flat slices.
+//! 3. **Scoped-thread parallelism** — rows of the `batch x c_out` grid are
+//!    chunked across `std::thread::scope` workers (dot products are
+//!    independent; no new dependencies). Per-worker [`OverflowStats`] are
+//!    merged in chunk order: outputs and the integer counters are
+//!    bit-identical to the sequential walk regardless of thread count, and
+//!    `abs_err_sum` — a sum of integer-valued f64 terms — is exact (hence
+//!    also order-independent) while the total stays below 2^53; past that
+//!    the chunked merge may round differently from a sequential walk.
+//!
+//! All kernels are property-tested bit-exact against the per-P reference
+//! (`rust/tests/property_invariants.rs`).
+
+use super::dot::{range, AccMode, DotResult};
+use super::intmat::{abs_max_of, IntMatrix};
+use super::matmul::MatmulStats;
+use super::stats::OverflowStats;
+use crate::quant::QTensor;
+use crate::tensor::Tensor;
+
+/// One per-MAC simulated register of the fused plan.
+#[derive(Clone, Copy, Debug)]
+struct Reg {
+    /// Index into the caller's `modes` array.
+    slot: usize,
+    p_bits: u32,
+    /// Shift for the wrap family: `64 - p_bits`.
+    sh: u32,
+    /// Clamp rails for the saturate family.
+    lo: i64,
+    hi: i64,
+}
+
+/// A mode list partitioned into register families, sorted so the bound gate
+/// can activate a prefix (narrower widths overflow first).
+#[derive(Clone, Debug)]
+pub struct ModePlan {
+    modes: Vec<AccMode>,
+    /// Wraparound registers, ascending `p_bits`.
+    wrap: Vec<Reg>,
+    /// Inner-loop saturating registers, ascending `p_bits`.
+    sat: Vec<Reg>,
+    /// Modes resolved from the exact sum after the traversal: `Wide` and
+    /// `SaturateFinal` never need a per-MAC register.
+    finals: Vec<(usize, AccMode)>,
+}
+
+impl ModePlan {
+    pub fn new(modes: &[AccMode]) -> ModePlan {
+        let mut wrap = Vec::new();
+        let mut sat = Vec::new();
+        let mut finals = Vec::new();
+        for (slot, mode) in modes.iter().enumerate() {
+            match *mode {
+                AccMode::Wide | AccMode::SaturateFinal { .. } => finals.push((slot, *mode)),
+                AccMode::Wrap { p_bits } => {
+                    debug_assert!((1..=64).contains(&p_bits), "wrap p_bits {p_bits}");
+                    wrap.push(Reg { slot, p_bits, sh: 64 - p_bits, lo: 0, hi: 0 });
+                }
+                AccMode::Saturate { p_bits } => {
+                    let (lo, hi) = range(p_bits);
+                    sat.push(Reg { slot, p_bits, sh: 0, lo, hi });
+                }
+            }
+        }
+        wrap.sort_by_key(|r| r.p_bits);
+        sat.sort_by_key(|r| r.p_bits);
+        ModePlan { modes: modes.to_vec(), wrap, sat, finals }
+    }
+
+    pub fn modes(&self) -> &[AccMode] {
+        &self.modes
+    }
+
+    /// Number of per-MAC registers a scratch buffer must hold.
+    fn scratch_len(&self) -> usize {
+        self.wrap.len().max(self.sat.len())
+    }
+}
+
+/// Per-worker register scratch (reused across every dot product).
+struct Scratch {
+    wrap_acc: Vec<i64>,
+    wrap_ovf: Vec<u32>,
+    sat_acc: Vec<i64>,
+    sat_ovf: Vec<u32>,
+}
+
+impl Scratch {
+    fn for_plan(plan: &ModePlan) -> Scratch {
+        let n = plan.scratch_len();
+        Scratch {
+            wrap_acc: vec![0; n],
+            wrap_ovf: vec![0; n],
+            sat_acc: vec![0; n],
+            sat_ovf: vec![0; n],
+        }
+    }
+}
+
+/// Smallest accumulator width that provably cannot overflow given the
+/// channel's `Σ|w_int|` and the row's `max|x|`: every intermediate partial
+/// sum satisfies `|s| <= l1 * xmax`, so width P is safe iff
+/// `l1 * xmax <= 2^(P-1) - 1`. Returns 64 (wider than any simulated
+/// register) when no width up to 63 is safe.
+#[inline]
+pub fn min_safe_p(l1: i128, xmax: i64) -> u32 {
+    debug_assert!(l1 >= 0 && xmax >= 0);
+    let worst = l1 * xmax as i128;
+    if worst == 0 {
+        return 1;
+    }
+    let bits = 128 - (worst as u128).leading_zeros();
+    (bits + 1).min(64)
+}
+
+/// One traversal of the MACs of `x . w`, updating every register whose
+/// width is below `p_safe`; registers at or above `p_safe` (and the
+/// `Wide`/`SaturateFinal` modes) are resolved from the exact sum. Writes one
+/// [`DotResult`] per plan mode into `out` and returns the wide value.
+fn fused_dot(
+    plan: &ModePlan,
+    x: &[i64],
+    w: &[i64],
+    p_safe: u32,
+    scratch: &mut Scratch,
+    out: &mut [DotResult],
+) -> i64 {
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert_eq!(out.len(), plan.modes.len());
+    let nw = plan.wrap.partition_point(|r| r.p_bits < p_safe);
+    let ns = plan.sat.partition_point(|r| r.p_bits < p_safe);
+
+    let mut wide = 0i64;
+    if nw == 0 && ns == 0 {
+        // Bound-gated fast path: nothing can overflow, so the whole dot
+        // product is a plain wide dot the compiler can vectorize.
+        for (xi, wi) in x.iter().zip(w) {
+            wide += xi * wi;
+        }
+    } else {
+        let wrap_active = &plan.wrap[..nw];
+        let sat_active = &plan.sat[..ns];
+        let wrap_acc = &mut scratch.wrap_acc[..nw];
+        let wrap_ovf = &mut scratch.wrap_ovf[..nw];
+        let sat_acc = &mut scratch.sat_acc[..ns];
+        let sat_ovf = &mut scratch.sat_ovf[..ns];
+        wrap_acc.fill(0);
+        wrap_ovf.fill(0);
+        sat_acc.fill(0);
+        sat_ovf.fill(0);
+
+        for (xi, wi) in x.iter().zip(w) {
+            let prod = xi * wi; // exact: multiplier output is full-width
+            wide += prod;
+            // Wraparound family: shift/sign-extend per width (~2 ops + an
+            // overflow compare), no branches.
+            for (j, r) in wrap_active.iter().enumerate() {
+                let t = wrap_acc[j] + prod;
+                let v = t.wrapping_shl(r.sh) >> r.sh;
+                wrap_ovf[j] += (v != t) as u32;
+                wrap_acc[j] = v;
+            }
+            // Saturating family: clamp per width.
+            for (j, r) in sat_active.iter().enumerate() {
+                let t = sat_acc[j] + prod;
+                sat_ovf[j] += ((t < r.lo) | (t > r.hi)) as u32;
+                sat_acc[j] = t.clamp(r.lo, r.hi);
+            }
+        }
+
+        for (j, r) in wrap_active.iter().enumerate() {
+            out[r.slot] = DotResult { value: scratch.wrap_acc[j], overflows: scratch.wrap_ovf[j] };
+        }
+        for (j, r) in sat_active.iter().enumerate() {
+            out[r.slot] = DotResult { value: scratch.sat_acc[j], overflows: scratch.sat_ovf[j] };
+        }
+    }
+
+    // Bound-safe registers: the register model is the identity, so the
+    // simulated value IS the wide value with zero overflow events.
+    for r in &plan.wrap[nw..] {
+        out[r.slot] = DotResult { value: wide, overflows: 0 };
+    }
+    for r in &plan.sat[ns..] {
+        out[r.slot] = DotResult { value: wide, overflows: 0 };
+    }
+    for (slot, mode) in &plan.finals {
+        out[*slot] = match *mode {
+            AccMode::Wide => DotResult { value: wide, overflows: 0 },
+            AccMode::SaturateFinal { p_bits } => {
+                let (lo, hi) = range(p_bits);
+                let clipped = wide.clamp(lo, hi);
+                DotResult { value: clipped, overflows: u32::from(clipped != wide) }
+            }
+            _ => unreachable!("finals only hold Wide/SaturateFinal"),
+        };
+    }
+    wide
+}
+
+/// Fused multi-width dot-product simulation: one traversal of the MACs,
+/// one [`DotResult`] per requested mode. Bit-exact against calling
+/// [`super::dot::dot_accumulate`] once per mode.
+pub fn dot_accumulate_multi(x: &[i64], w: &[i64], modes: &[AccMode]) -> Vec<DotResult> {
+    let plan = ModePlan::new(modes);
+    let mut scratch = Scratch::for_plan(&plan);
+    let mut out = vec![DotResult { value: 0, overflows: 0 }; modes.len()];
+    let l1: i128 = w.iter().map(|v| v.unsigned_abs() as i128).sum();
+    let p_safe = min_safe_p(l1, abs_max_of(x));
+    fused_dot(&plan, x, w, p_safe, &mut scratch, &mut out);
+    out
+}
+
+/// Results a worker produces for its row chunk.
+struct Chunk {
+    /// Per-mode dequantized outputs, `rows_in_chunk * c_out` each.
+    out: Vec<Vec<f32>>,
+    /// Wide-register dequantized outputs for the chunk.
+    out_wide: Vec<f32>,
+    /// Per-mode overflow statistics for the chunk.
+    stats: Vec<OverflowStats>,
+}
+
+/// Bounds-aware execution plan for one quantized layer: the mode partition
+/// plus per-channel `Σ|w_int|` norms that drive the overflow gate.
+pub struct LayerPlan<'w> {
+    w: &'w QTensor,
+    plan: ModePlan,
+    /// Per-output-channel l1 norm of the integer codes (i128: overflow-proof
+    /// for any K at any weight width).
+    row_l1: Vec<i128>,
+}
+
+impl<'w> LayerPlan<'w> {
+    pub fn new(w: &'w QTensor, modes: &[AccMode]) -> LayerPlan<'w> {
+        // One source of truth for the per-channel norm: QTensor::row_l1
+        // (Eq. 13), widened to i128 for the overflow-proof bound products.
+        let row_l1 = w.row_l1().into_iter().map(|v| v as i128).collect();
+        LayerPlan { w, plan: ModePlan::new(modes), row_l1 }
+    }
+
+    pub fn modes(&self) -> &[AccMode] {
+        self.plan.modes()
+    }
+
+    /// Simulate rows `r0..r1` of the batch; the single-threaded kernel core.
+    fn simulate_rows(&self, x: &IntMatrix, x_scale: f32, r0: usize, r1: usize) -> Chunk {
+        let c_out = self.w.c_out;
+        let k = self.w.k;
+        let n_modes = self.plan.modes.len();
+        let rows = r1 - r0;
+        let mut out = vec![vec![0f32; rows * c_out]; n_modes];
+        let mut out_wide = vec![0f32; rows * c_out];
+        let mut stats = vec![OverflowStats::default(); n_modes];
+        let mut scratch = Scratch::for_plan(&self.plan);
+        let mut dots = vec![DotResult { value: 0, overflows: 0 }; n_modes];
+
+        for (ri, bi) in (r0..r1).enumerate() {
+            let xb = x.row(bi);
+            let xmax = abs_max_of(xb);
+            for c in 0..c_out {
+                let p_safe = min_safe_p(self.row_l1[c], xmax);
+                let wide = fused_dot(&self.plan, xb, self.w.row(c), p_safe, &mut scratch, &mut dots);
+                let scale = self.w.scales[c] * x_scale;
+                let idx = ri * c_out + c;
+                out_wide[idx] = wide as f32 * scale + self.w.bias[c];
+                for (mi, d) in dots.iter().enumerate() {
+                    stats[mi].record(k, d.overflows, d.value, wide);
+                    out[mi][idx] = d.value as f32 * scale + self.w.bias[c];
+                }
+            }
+        }
+        Chunk { out, out_wide, stats }
+    }
+
+    /// Execute over a batch with an explicit worker count (tests use this to
+    /// pin thread counts; [`Self::execute`] picks one automatically).
+    pub fn execute_threads(&self, x: &IntMatrix, x_scale: f32, threads: usize) -> Vec<MatmulStats> {
+        let batch = x.rows();
+        assert_eq!(x.cols(), self.w.k, "input cols {} vs layer k {}", x.cols(), self.w.k);
+        let c_out = self.w.c_out;
+        let n_modes = self.plan.modes.len();
+
+        let chunks: Vec<Chunk> = if threads <= 1 || batch <= 1 {
+            vec![self.simulate_rows(x, x_scale, 0, batch)]
+        } else {
+            let t = threads.min(batch);
+            let per = batch.div_euclid(t) + usize::from(batch % t != 0);
+            let bounds: Vec<(usize, usize)> = (0..batch)
+                .step_by(per.max(1))
+                .map(|r0| (r0, (r0 + per).min(batch)))
+                .collect();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = bounds
+                    .iter()
+                    .map(|&(r0, r1)| s.spawn(move || self.simulate_rows(x, x_scale, r0, r1)))
+                    .collect();
+                // Join in chunk (= row) order so the stats merge is
+                // deterministic for a given thread count (and exact vs the
+                // sequential walk while abs_err_sum stays below 2^53).
+                handles.into_iter().map(|h| h.join().expect("accsim worker panicked")).collect()
+            })
+        };
+
+        // Stitch chunk outputs back into [batch, c_out] tensors per mode.
+        let mut out_wide = Vec::with_capacity(batch * c_out);
+        for ch in &chunks {
+            out_wide.extend_from_slice(&ch.out_wide);
+        }
+        let out_wide = Tensor::new(vec![batch, c_out], out_wide);
+
+        (0..n_modes)
+            .map(|mi| {
+                let mut data = Vec::with_capacity(batch * c_out);
+                let mut stats = OverflowStats::default();
+                for ch in &chunks {
+                    data.extend_from_slice(&ch.out[mi]);
+                    stats.merge(&ch.stats[mi]);
+                }
+                MatmulStats {
+                    out: Tensor::new(vec![batch, c_out], data),
+                    out_wide: out_wide.clone(),
+                    stats,
+                }
+            })
+            .collect()
+    }
+
+    /// Execute over a batch, choosing the worker count from the grid size
+    /// (small grids run inline — thread spawn would dominate).
+    pub fn execute(&self, x: &IntMatrix, x_scale: f32) -> Vec<MatmulStats> {
+        self.execute_threads(x, x_scale, worker_count(x.rows(), self.w.c_out, self.w.k))
+    }
+}
+
+/// Pick a worker count for a `batch x c_out x k` MAC grid. Honors the
+/// `A2Q_ACCSIM_THREADS` environment variable when set.
+fn worker_count(batch: usize, c_out: usize, k: usize) -> usize {
+    if let Ok(v) = std::env::var("A2Q_ACCSIM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    // Below ~1M MACs the sim finishes in well under a millisecond; spawning
+    // threads would cost more than it saves.
+    if batch.saturating_mul(c_out).saturating_mul(k) < 1_000_000 {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Forward one integer batch through a quantized linear layer under *all*
+/// requested accumulator models in a single fused pass, returning one
+/// [`MatmulStats`] per mode (same order). The per-P loop of the scalar era:
+///
+/// ```ignore
+/// for p in 8..=32 { results.push(qlinear_forward(&x, s, &w, Wrap { p })); }
+/// ```
+///
+/// collapses into one call:
+///
+/// ```ignore
+/// let modes: Vec<_> = (8..=32).map(|p| AccMode::Wrap { p_bits: p }).collect();
+/// let results = qlinear_forward_multi(&x, s, &w, &modes);
+/// ```
+pub fn qlinear_forward_multi(
+    x: &IntMatrix,
+    x_scale: f32,
+    w: &QTensor,
+    modes: &[AccMode],
+) -> Vec<MatmulStats> {
+    LayerPlan::new(w, modes).execute(x, x_scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::dot::dot_accumulate;
+    use super::super::matmul::qlinear_forward_ref;
+    use crate::rng::Rng;
+
+    fn all_modes(p: u32) -> Vec<AccMode> {
+        vec![
+            AccMode::Wide,
+            AccMode::Wrap { p_bits: p },
+            AccMode::Saturate { p_bits: p },
+            AccMode::SaturateFinal { p_bits: p },
+        ]
+    }
+
+    #[test]
+    fn min_safe_p_matches_acc_max() {
+        use crate::quant::bounds::acc_max;
+        for l1 in [0i128, 1, 7, 127, 128, 1000, 1 << 20] {
+            for xmax in [0i64, 1, 3, 255] {
+                let p = min_safe_p(l1, xmax);
+                let worst = l1 * xmax as i128;
+                if p <= 63 {
+                    assert!(worst <= acc_max(p) as i128, "l1={l1} xmax={xmax} p={p}");
+                }
+                if p > 2 && worst > 0 {
+                    assert!(
+                        worst > acc_max(p - 1) as i128,
+                        "p not minimal: l1={l1} xmax={xmax} p={p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_sequential_per_mode() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let k = 1 + rng.below(100);
+            let x: Vec<i64> = (0..k).map(|_| rng.below(256) as i64).collect();
+            let w: Vec<i64> = (0..k).map(|_| rng.below(255) as i64 - 127).collect();
+            let mut modes = Vec::new();
+            for p in [4, 8, 12, 16, 24, 32] {
+                modes.extend(all_modes(p));
+            }
+            let fused = dot_accumulate_multi(&x, &w, &modes);
+            for (mi, mode) in modes.iter().enumerate() {
+                let seq = dot_accumulate(&x, &w, *mode);
+                assert_eq!(fused[mi], seq, "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_and_unsorted_modes_keep_slots() {
+        let x = vec![100i64; 8];
+        let w = vec![1i64; 8];
+        let modes = [
+            AccMode::Wrap { p_bits: 16 },
+            AccMode::Wrap { p_bits: 8 },
+            AccMode::Wrap { p_bits: 8 },
+            AccMode::Wide,
+        ];
+        let r = dot_accumulate_multi(&x, &w, &modes);
+        assert_eq!(r[0], dot_accumulate(&x, &w, modes[0]));
+        assert_eq!(r[1], dot_accumulate(&x, &w, modes[1]));
+        assert_eq!(r[1], r[2]);
+        assert_eq!(r[3].value, 800);
+    }
+
+    fn toy_layer() -> QTensor {
+        // channel 0: tiny weights (safe at 8 bits for binary inputs);
+        // channel 1: huge weights (overflow at 8 bits).
+        let w = Tensor::new(vec![2, 4], vec![1.0, -1.0, 2.0, 1.0, 100.0, 100.0, 100.0, 100.0]);
+        let s = Tensor::new(vec![2, 1], vec![0.5, 0.25]);
+        let b = Tensor::from_vec(vec![0.1, -0.2]);
+        QTensor::from_export(&w, &s, &b)
+    }
+
+    #[test]
+    fn layer_multi_matches_reference_with_gating_and_threads() {
+        let w = toy_layer();
+        let x = IntMatrix::from_rows(&[vec![1, 0, 1, 1], vec![1, 1, 1, 1], vec![0, 0, 0, 0]]);
+        let modes: Vec<AccMode> = (4..=20)
+            .flat_map(|p| [AccMode::Wrap { p_bits: p }, AccMode::Saturate { p_bits: p }])
+            .collect();
+        let plan = LayerPlan::new(&w, &modes);
+        for threads in [1, 2, 7] {
+            let multi = plan.execute_threads(&x, 0.5, threads);
+            for (mi, mode) in modes.iter().enumerate() {
+                let r = qlinear_forward_ref(&x, 0.5, &w, *mode);
+                assert_eq!(multi[mi].out.data(), r.out.data(), "{mode:?} t={threads}");
+                assert_eq!(multi[mi].out_wide.data(), r.out_wide.data(), "{mode:?}");
+                assert_eq!(multi[mi].stats.overflow_events, r.stats.overflow_events, "{mode:?}");
+                assert_eq!(multi[mi].stats.dots_overflowed, r.stats.dots_overflowed, "{mode:?}");
+                assert_eq!(multi[mi].stats.abs_err_sum, r.stats.abs_err_sum, "{mode:?}");
+                assert_eq!(multi[mi].stats.dots, r.stats.dots);
+                assert_eq!(multi[mi].stats.macs, r.stats.macs);
+            }
+        }
+    }
+
+    #[test]
+    fn safe_channels_report_zero_overflow() {
+        // Σ|w| * max|x| = 5 * 1 = 5 <= acc_max(4) = 7: safe at every P >= 4.
+        let w = QTensor::from_export(
+            &Tensor::new(vec![1, 4], vec![1.0, -2.0, 1.0, 1.0]),
+            &Tensor::new(vec![1, 1], vec![1.0]),
+            &Tensor::from_vec(vec![0.0]),
+        );
+        let x = IntMatrix::from_rows(&[vec![1, 1, 1, 1]]);
+        let modes = [AccMode::Wrap { p_bits: 4 }, AccMode::Saturate { p_bits: 5 }];
+        for st in qlinear_forward_multi(&x, 1.0, &w, &modes) {
+            assert_eq!(st.stats.overflow_events, 0);
+            assert_eq!(st.out.data(), st.out_wide.data());
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Flat row-major integer matrix: the batch currency of the accsim kernel
+//! engine.
+//!
+//! The original simulator passed inputs as `Vec<Vec<i64>>`, which scatters
+//! rows across the heap and defeats both prefetching and autovectorization
+//! of the bound-gated wide-dot fast path. `IntMatrix` is a single
+//! contiguous `Vec<i64>` plus a shape, so every kernel works on flat
+//! `&[i64]` slices (see EXPERIMENTS.md §Perf).
+
+/// Row-major dense i64 matrix `[rows, cols]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IntMatrix {
+    data: Vec<i64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl IntMatrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        IntMatrix { data: vec![0; rows * cols], rows, cols }
+    }
+
+    /// Build from a flat row-major buffer; panics on element-count mismatch.
+    pub fn from_flat(rows: usize, cols: usize, data: Vec<i64>) -> Self {
+        assert_eq!(
+            rows * cols,
+            data.len(),
+            "shape [{rows}, {cols}] vs {} elements",
+            data.len()
+        );
+        IntMatrix { data, rows, cols }
+    }
+
+    /// Gather nested rows into flat storage (migration helper; every row
+    /// must have the same length).
+    pub fn from_rows(rows: &[Vec<i64>]) -> Self {
+        let cols = rows.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows: {} vs {cols}", r.len());
+            data.extend_from_slice(r);
+        }
+        IntMatrix { data, rows: rows.len(), cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Flat row-major storage.
+    pub fn data(&self) -> &[i64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i64] {
+        &mut self.data
+    }
+
+    /// Row `r` as a flat slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [i64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Iterate rows as flat slices (handles `cols == 0` gracefully).
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[i64]> + '_ {
+        let cols = self.cols;
+        (0..self.rows).map(move |r| &self.data[r * cols..(r + 1) * cols])
+    }
+
+    /// Largest |element| in row `r` (0 for an empty row) — the `max|x|`
+    /// factor of the per-channel overflow bound. Saturates at `i64::MAX`
+    /// (only reachable for `i64::MIN` entries, far outside any N-bit grid).
+    #[inline]
+    pub fn row_abs_max(&self, r: usize) -> i64 {
+        abs_max_of(self.row(r))
+    }
+
+    /// Largest |element| in the whole matrix.
+    pub fn abs_max(&self) -> i64 {
+        abs_max_of(&self.data)
+    }
+}
+
+/// Saturating max-|v| of a slice.
+#[inline]
+pub(crate) fn abs_max_of(v: &[i64]) -> i64 {
+    v.iter()
+        .map(|x| x.unsigned_abs())
+        .max()
+        .unwrap_or(0)
+        .min(i64::MAX as u64) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rows_round_trip() {
+        let m = IntMatrix::from_rows(&[vec![1, 2, 3], vec![-4, 5, -6]]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(0), &[1, 2, 3]);
+        assert_eq!(m.row(1), &[-4, 5, -6]);
+        assert_eq!(m.data(), &[1, 2, 3, -4, 5, -6]);
+        let collected: Vec<&[i64]> = m.iter_rows().collect();
+        assert_eq!(collected.len(), 2);
+        assert_eq!(collected[1], &[-4, 5, -6]);
+    }
+
+    #[test]
+    fn abs_max_handles_i64_min() {
+        // unsigned_abs avoids the i64::MIN negation overflow; the result
+        // saturates instead of wrapping negative.
+        let m = IntMatrix::from_flat(1, 2, vec![i64::MIN, 3]);
+        assert_eq!(m.row_abs_max(0), i64::MAX);
+        let small = IntMatrix::from_flat(1, 3, vec![-7, 2, 5]);
+        assert_eq!(small.row_abs_max(0), 7);
+        assert_eq!(small.abs_max(), 7);
+    }
+
+    #[test]
+    fn empty_shapes() {
+        let m = IntMatrix::zeros(3, 0);
+        assert_eq!(m.iter_rows().count(), 3);
+        assert_eq!(m.row(1), &[] as &[i64]);
+        assert_eq!(m.row_abs_max(0), 0);
+        let e = IntMatrix::zeros(0, 4);
+        assert!(e.is_empty());
+        assert_eq!(e.abs_max(), 0);
+    }
+}

@@ -1,8 +1,15 @@
 //! Batched integer linear-layer simulation: the deployment-side forward pass
 //! of a quantized dense layer under a P-bit accumulator, used to measure the
 //! *actual* numerical error wraparound/saturation would inflict (Fig. 2).
+//!
+//! Inputs are a flat row-major [`IntMatrix`] `[batch, k]`. The fused
+//! multi-width engine ([`super::engine`]) does the heavy lifting;
+//! [`qlinear_forward_ref`] keeps the original MAC-by-MAC per-P walk as the
+//! bit-exactness reference and the perf baseline (EXPERIMENTS.md §Perf).
 
 use super::dot::{dot_accumulate, AccMode};
+use super::engine::qlinear_forward_multi;
+use super::intmat::IntMatrix;
 use super::stats::OverflowStats;
 use crate::quant::QTensor;
 use crate::tensor::Tensor;
@@ -24,19 +31,39 @@ pub struct MatmulStats {
 /// `x_scale` is the (per-tensor) input scale so outputs dequantize to
 /// `acc * s_w[c] * s_x + bias[c]` — the requantization step of Fig. 1 with
 /// the bias applied in float, as FINN's threshold stage does.
+///
+/// Single-mode convenience over [`qlinear_forward_multi`]; sweeping several
+/// accumulator widths should use the multi call directly so the MACs are
+/// traversed once instead of once per width.
 pub fn qlinear_forward(
-    x_int: &[Vec<i64>],
+    x_int: &IntMatrix,
     x_scale: f32,
     w: &QTensor,
     mode: AccMode,
 ) -> MatmulStats {
-    let batch = x_int.len();
+    qlinear_forward_multi(x_int, x_scale, w, std::slice::from_ref(&mode))
+        .pop()
+        .expect("one mode in, one result out")
+}
+
+/// The pre-engine scalar kernel: simulate one register model by walking
+/// every MAC, one full traversal per call (so a P-sweep re-reads the
+/// weights once per width). Kept verbatim as (a) the ground truth the fused
+/// engine is property-tested against and (b) the baseline the speedup in
+/// EXPERIMENTS.md §Perf is measured from.
+pub fn qlinear_forward_ref(
+    x_int: &IntMatrix,
+    x_scale: f32,
+    w: &QTensor,
+    mode: AccMode,
+) -> MatmulStats {
+    let batch = x_int.rows();
+    assert_eq!(x_int.cols(), w.k, "input cols {} vs k {}", x_int.cols(), w.k);
     let mut out = Tensor::zeros(vec![batch, w.c_out]);
     let mut out_wide = Tensor::zeros(vec![batch, w.c_out]);
     let mut stats = OverflowStats::default();
 
-    for (bi, xb) in x_int.iter().enumerate() {
-        assert_eq!(xb.len(), w.k, "input length {} vs k {}", xb.len(), w.k);
+    for (bi, xb) in x_int.iter_rows().enumerate() {
         for c in 0..w.c_out {
             let row = w.row(c);
             let sim = dot_accumulate(xb, row, mode);
@@ -52,21 +79,20 @@ pub fn qlinear_forward(
 }
 
 /// Quantize a float input batch to integers on an N-bit unsigned grid with
-/// the given scale (the standard activation quantizer of paper Eq. 1, z=0).
-pub fn quantize_inputs(x: &Tensor, scale: f32, n_bits: u32, x_signed: bool) -> Vec<Vec<i64>> {
+/// the given scale (the standard activation quantizer of paper Eq. 1, z=0),
+/// producing the flat [`IntMatrix`] the kernel engine consumes.
+pub fn quantize_inputs(x: &Tensor, scale: f32, n_bits: u32, x_signed: bool) -> IntMatrix {
     let (lo, hi) = if x_signed {
         (-(1i64 << (n_bits - 1)), (1i64 << (n_bits - 1)) - 1)
     } else {
         (0, (1i64 << n_bits) - 1)
     };
-    (0..x.rows())
-        .map(|r| {
-            x.row(r)
-                .iter()
-                .map(|v| ((v / scale).round() as i64).clamp(lo, hi))
-                .collect()
-        })
-        .collect()
+    let data = x
+        .data()
+        .iter()
+        .map(|v| ((v / scale).round() as i64).clamp(lo, hi))
+        .collect();
+    IntMatrix::from_flat(x.rows(), x.cols(), data)
 }
 
 #[cfg(test)]
@@ -84,7 +110,7 @@ mod tests {
     #[test]
     fn wide_equals_float_matmul() {
         let w = layer();
-        let x = vec![vec![1i64, 2, 3]];
+        let x = IntMatrix::from_rows(&[vec![1i64, 2, 3]]);
         let r = qlinear_forward(&x, 1.0, &w, AccMode::Wide);
         assert_eq!(r.out.data(), &[6.0, 600.0]);
         assert_eq!(r.stats.overflow_events, 0);
@@ -93,7 +119,7 @@ mod tests {
     #[test]
     fn overflow_only_on_big_channel() {
         let w = layer();
-        let x = vec![vec![1i64, 1, 1]];
+        let x = IntMatrix::from_rows(&[vec![1i64, 1, 1]]);
         // 8-bit register: channel 0 sums to 3 (fine); channel 1 partials
         // 100, 200, 300 overflow.
         let r = qlinear_forward(&x, 1.0, &w, AccMode::Wrap { p_bits: 8 });
@@ -105,10 +131,28 @@ mod tests {
     }
 
     #[test]
+    fn fused_wrapper_matches_reference() {
+        let w = layer();
+        let x = IntMatrix::from_rows(&[vec![1i64, 1, 1], vec![0, 1, 0]]);
+        for mode in [
+            AccMode::Wide,
+            AccMode::Wrap { p_bits: 8 },
+            AccMode::Saturate { p_bits: 8 },
+            AccMode::SaturateFinal { p_bits: 8 },
+        ] {
+            let a = qlinear_forward(&x, 1.0, &w, mode);
+            let b = qlinear_forward_ref(&x, 1.0, &w, mode);
+            assert_eq!(a.out.data(), b.out.data(), "{mode:?}");
+            assert_eq!(a.out_wide.data(), b.out_wide.data(), "{mode:?}");
+            assert_eq!(a.stats.overflow_events, b.stats.overflow_events, "{mode:?}");
+        }
+    }
+
+    #[test]
     fn input_quantization_clamps() {
         let x = Tensor::new(vec![1, 4], vec![0.0, 0.4, 0.9, 5.0]);
         let q = quantize_inputs(&x, 1.0, 1, false); // 1-bit unsigned: {0, 1}
-        assert_eq!(q[0], vec![0, 0, 1, 1]);
+        assert_eq!(q.row(0), &[0, 0, 1, 1]);
     }
 
     #[test]
@@ -117,7 +161,8 @@ mod tests {
         let s = Tensor::new(vec![1, 1], vec![0.5]);
         let b = Tensor::from_vec(vec![1.0]);
         let q = QTensor::from_export(&w, &s, &b);
-        let r = qlinear_forward(&[vec![3, 1]], 0.25, &q, AccMode::Wide);
+        let x = IntMatrix::from_rows(&[vec![3, 1]]);
+        let r = qlinear_forward(&x, 0.25, &q, AccMode::Wide);
         // acc = 2*3 - 1 = 5; out = 5 * 0.5 * 0.25 + 1.0 = 1.625
         assert_eq!(r.out.data(), &[1.625]);
     }

@@ -1,5 +1,5 @@
-//! Exact integer accumulation simulator (the substrate behind paper Fig. 2,
-//! Fig. 8 and Appendix A).
+//! Exact integer accumulation simulation (the substrate behind paper Fig. 2,
+//! Fig. 8 and Appendix A), built as a batched kernel engine.
 //!
 //! Simulates the MAC-by-MAC behaviour of a P-bit accumulator register at the
 //! *inner-most loop* — i.e. every intermediate partial sum passes through the
@@ -14,13 +14,26 @@
 //!
 //! All simulation is in i64 with explicit wrapping/clamping, so results are
 //! bit-exact and platform-independent.
+//!
+//! Layout: [`dot`] holds the scalar single-register walk (the reference
+//! semantics); [`engine`] is the fused multi-width kernel engine — one MAC
+//! traversal simulates every requested P, channels proven safe by the
+//! paper's `Σ|w| * max|x|` bound skip register simulation, and batches fan
+//! out over scoped threads. Batched inputs travel as a flat row-major
+//! [`IntMatrix`]. P-sweeps should call [`qlinear_forward_multi`] /
+//! [`dot_accumulate_multi`]; throughput history lives in EXPERIMENTS.md
+//! §Perf and BENCH_accsim.json.
 
 pub mod dot;
+pub mod engine;
+pub mod intmat;
 pub mod matmul;
 pub mod reorder;
 pub mod stats;
 
 pub use dot::{dot_accumulate, AccMode, DotResult};
-pub use matmul::{qlinear_forward, MatmulStats};
-pub use reorder::reorder_study;
+pub use engine::{dot_accumulate_multi, min_safe_p, qlinear_forward_multi, LayerPlan, ModePlan};
+pub use intmat::IntMatrix;
+pub use matmul::{qlinear_forward, qlinear_forward_ref, quantize_inputs, MatmulStats};
+pub use reorder::{reorder_study, ReorderScratch, ReorderStudy};
 pub use stats::OverflowStats;

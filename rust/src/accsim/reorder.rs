@@ -41,8 +41,92 @@ impl ReorderStudy {
     }
 }
 
+/// Reusable permutation/gather scratch for re-ordering studies.
+///
+/// A study over many dot products (e.g. every `batch x c_out` pair of a
+/// layer, as Fig. 8 does) previously re-allocated the index and gather
+/// buffers per dot product; one scratch now serves the whole sweep, resized
+/// only when the dot length grows.
+#[derive(Clone, Debug, Default)]
+pub struct ReorderScratch {
+    idx: Vec<usize>,
+    xp: Vec<i64>,
+    wp: Vec<i64>,
+}
+
+impl ReorderScratch {
+    pub fn new() -> ReorderScratch {
+        ReorderScratch::default()
+    }
+
+    /// Size the buffers for dot length `k` and reset the permutation to the
+    /// identity, so studies are deterministic regardless of what the scratch
+    /// was used for before.
+    pub fn reset(&mut self, k: usize) {
+        self.idx.clear();
+        self.idx.extend(0..k);
+        self.xp.resize(k, 0);
+        self.wp.resize(k, 0);
+    }
+
+    /// Shuffle the current permutation in place (cumulative, matching the
+    /// original study's sampling sequence for a given RNG stream).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        rng.shuffle(&mut self.idx);
+    }
+
+    /// The current permutation.
+    pub fn perm(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Gather `x`/`w` through the current permutation into the reused flat
+    /// buffers and return them.
+    pub fn gathered(&mut self, x: &[i64], w: &[i64]) -> (&[i64], &[i64]) {
+        debug_assert_eq!(x.len(), self.idx.len());
+        debug_assert_eq!(w.len(), self.idx.len());
+        for (j, &i) in self.idx.iter().enumerate() {
+            self.xp[j] = x[i];
+            self.wp[j] = w[i];
+        }
+        (&self.xp, &self.wp)
+    }
+
+    /// Run `n_perms` random re-orderings of the MACs of `x . w` under an
+    /// inner-loop saturating P-bit register, plus the outer-loop / wide
+    /// models, reusing this scratch across permutations (and across calls).
+    pub fn study(
+        &mut self,
+        x: &[i64],
+        w: &[i64],
+        p_bits: u32,
+        n_perms: usize,
+        seed: u64,
+    ) -> ReorderStudy {
+        assert_eq!(x.len(), w.len());
+        let wide = dot_accumulate(x, w, AccMode::Wide).value;
+        let outer = dot_accumulate(x, w, AccMode::SaturateFinal { p_bits }).value;
+
+        let mut rng = Rng::new(seed);
+        self.reset(x.len());
+        let mut inner_values = Vec::with_capacity(n_perms);
+        for _ in 0..n_perms {
+            self.shuffle(&mut rng);
+            let (xp, wp) = self.gathered(x, w);
+            let DotResult { value, .. } =
+                dot_accumulate(xp, wp, AccMode::Saturate { p_bits });
+            inner_values.push(value);
+        }
+
+        ReorderStudy { inner_values, outer_value: outer, wide_value: wide }
+    }
+}
+
 /// Run `n_perms` random re-orderings of the MACs of `x . w` under an
 /// inner-loop saturating P-bit register, plus the outer-loop / wide models.
+///
+/// Convenience wrapper allocating a one-shot [`ReorderScratch`]; sweeps over
+/// many dot products should hold a scratch and call [`ReorderScratch::study`].
 pub fn reorder_study(
     x: &[i64],
     w: &[i64],
@@ -50,28 +134,7 @@ pub fn reorder_study(
     n_perms: usize,
     seed: u64,
 ) -> ReorderStudy {
-    assert_eq!(x.len(), w.len());
-    let wide = dot_accumulate(x, w, AccMode::Wide).value;
-    let outer = dot_accumulate(x, w, AccMode::SaturateFinal { p_bits }).value;
-
-    let mut rng = Rng::new(seed);
-    let mut idx: Vec<usize> = (0..x.len()).collect();
-    let mut xp = vec![0i64; x.len()];
-    let mut wp = vec![0i64; w.len()];
-    let inner_values = (0..n_perms)
-        .map(|_| {
-            rng.shuffle(&mut idx);
-            for (j, &i) in idx.iter().enumerate() {
-                xp[j] = x[i];
-                wp[j] = w[i];
-            }
-            let DotResult { value, .. } =
-                dot_accumulate(&xp, &wp, AccMode::Saturate { p_bits });
-            value
-        })
-        .collect();
-
-    ReorderStudy { inner_values, outer_value: outer, wide_value: wide }
+    ReorderScratch::new().study(x, w, p_bits, n_perms, seed)
 }
 
 #[cfg(test)]
@@ -100,6 +163,18 @@ mod tests {
         assert!(s.mean_abs_err_inner() > 0.0);
         // outer-loop model sees a zero final sum -> no clipping at all
         assert_eq!(s.abs_err_outer(), 0.0);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let x: Vec<i64> = (0..48).map(|i| (i * 29 % 160) - 80).collect();
+        let w: Vec<i64> = (0..48).map(|i| (i * 11 % 9) - 4).collect();
+        let mut scratch = ReorderScratch::new();
+        let a = scratch.study(&x, &w, 9, 30, 3);
+        let b = scratch.study(&x, &w, 9, 30, 3); // dirty scratch, same seed
+        let fresh = reorder_study(&x, &w, 9, 30, 3);
+        assert_eq!(a.inner_values, fresh.inner_values);
+        assert_eq!(b.inner_values, fresh.inner_values);
     }
 
     #[test]

@@ -25,7 +25,10 @@ impl OverflowStats {
         if overflows > 0 {
             self.dots_overflowed += 1;
         }
-        self.abs_err_sum += (sim - wide).abs() as f64;
+        // Difference in i128: a wrapped value near -2^62 against a large wide
+        // value can push the i64 subtraction past i64::MIN (panic in debug,
+        // wrong sum in release).
+        self.abs_err_sum += (sim as i128 - wide as i128).unsigned_abs() as f64;
         self.outputs += 1;
     }
 
@@ -80,6 +83,14 @@ mod tests {
         assert_eq!(s.overflow_rate(), 1.5);
         assert_eq!(s.dot_overflow_fraction(), 0.5);
         assert_eq!(s.mean_abs_err(), 3.5);
+    }
+
+    #[test]
+    fn record_survives_extreme_sim_wide_gap() {
+        // |sim - wide| > i64::MAX: must not overflow the subtraction.
+        let mut s = OverflowStats::default();
+        s.record(1, 1, i64::MIN + 10, i64::MAX - 10);
+        assert!(s.abs_err_sum > 1.8e19);
     }
 
     #[test]

@@ -9,11 +9,19 @@
 //! backend parallelizes *inside* each executable, so a single worker already
 //! saturates the machine for our workloads.
 
+// The training/sweep drivers execute PJRT artifacts and are gated behind
+// the `xla` feature; the metrics sink (JSONL records the figure generators
+// consume) is pure host code and always available.
+#[cfg(feature = "xla")]
 pub mod checkpoint;
 pub mod sink;
+#[cfg(feature = "xla")]
 pub mod sweep;
+#[cfg(feature = "xla")]
 pub mod trainer;
 
 pub use sink::{MetricsSink, RunRecord};
+#[cfg(feature = "xla")]
 pub use sweep::run_sweep;
+#[cfg(feature = "xla")]
 pub use trainer::{TrainOutcome, Trainer};

@@ -8,8 +8,6 @@ use anyhow::Result;
 use crate::config::RunConfig;
 use crate::json::Json;
 
-use super::trainer::TrainOutcome;
-
 /// The durable record of one grid-search run.
 #[derive(Clone, Debug)]
 pub struct RunRecord {
@@ -28,7 +26,8 @@ pub struct RunRecord {
 }
 
 impl RunRecord {
-    pub fn from_outcome(o: &TrainOutcome) -> Self {
+    #[cfg(feature = "xla")]
+    pub fn from_outcome(o: &super::trainer::TrainOutcome) -> Self {
         RunRecord {
             config: o.config.clone(),
             perf: o.perf,

@@ -20,6 +20,13 @@
 //!
 //! Python never runs on the request path: after `make artifacts` the `a2q`
 //! binary trains, evaluates, sweeps and reports entirely from Rust.
+//!
+//! The PJRT-backed layers (the [`runtime`] engine, the [`coordinator`]
+//! training/sweep drivers, and the end-to-end fig2/fig8 generators) are
+//! gated behind the `xla` cargo feature; the default build is fully offline
+//! and carries the simulators, bounds, estimators and record-driven figure
+//! generation. Bench throughput history is journaled to BENCH_accsim.json
+//! via [`perf`] (see EXPERIMENTS.md §Perf).
 
 pub mod accsim;
 pub mod cli;
@@ -30,6 +37,7 @@ pub mod finn;
 pub mod json;
 pub mod metrics;
 pub mod pareto;
+pub mod perf;
 pub mod quant;
 pub mod report;
 pub mod rng;

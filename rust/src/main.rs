@@ -10,16 +10,19 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use a2q::accsim::{dot_accumulate, AccMode};
+use a2q::accsim::{dot_accumulate_multi, AccMode};
 use a2q::cli::Args;
-use a2q::config::{RunConfig, SweepConfig};
-use a2q::coordinator::{run_sweep, sweep::run_single, MetricsSink};
+use a2q::coordinator::MetricsSink;
 use a2q::datasets;
 use a2q::finn::estimate::{estimate_network, AccumulatorPolicy, DEFAULT_CYCLES_BUDGET};
 use a2q::quant::bounds::{data_type_bound, weight_bound, DotShape};
 use a2q::report;
 use a2q::rng::Rng;
-use a2q::runtime::{artifact::discover_models, Engine, ModelManifest};
+use a2q::runtime::{artifact::discover_models, ModelManifest};
+
+#[cfg(not(feature = "xla"))]
+const NO_XLA: &str = "this build has no PJRT backend; rebuild with `cargo build --features xla` \
+                      (and the real xla bindings in place of rust/vendor/xla)";
 
 const USAGE: &str = "\
 a2q — accumulator-aware quantization (A2Q) reproduction
@@ -36,7 +39,8 @@ COMMANDS:
              [--sink runs.jsonl] [--steps 200] [--seed 0]
   estimate   --model M --m 6 --n 6 --p 16
   bounds     --k 784 --m 8 --n 1 [--signed] [--l1 NORM]
-  accsim     --k 784 --p 16 --m 8 --n 1 --seed 0
+  accsim     --k 784 --p 16 --m 8 --n 1 --seed 0 [--psweep 8:32]
+             (all register models simulated in one fused MAC traversal)
   models     (list models available in the artifacts dir)
 ";
 
@@ -67,7 +71,11 @@ fn main() -> Result<()> {
     }
 }
 
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    use a2q::config::RunConfig;
+    use a2q::coordinator::sweep::run_single;
+
     args.check_known(&[
         "artifacts", "results", "model", "alg", "m", "n", "p", "steps", "seed", "config",
         "lr", "n-train", "n-test",
@@ -97,7 +105,16 @@ fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &Args, _artifacts: &PathBuf) -> Result<()> {
+    anyhow::bail!("train: {NO_XLA}")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_sweep(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()> {
+    use a2q::config::SweepConfig;
+    use a2q::coordinator::run_sweep;
+
     args.check_known(&[
         "artifacts", "results", "models", "steps", "mn", "offsets", "float-ref", "config",
         "sink", "seed", "n-train", "n-test",
@@ -127,6 +144,11 @@ fn cmd_sweep(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()> 
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_sweep(_args: &Args, _artifacts: &PathBuf, _results: &PathBuf) -> Result<()> {
+    anyhow::bail!("sweep: {NO_XLA}")
+}
+
 fn cmd_figure(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()> {
     args.check_known(&["artifacts", "results", "sink", "steps", "seed"])?;
     let id = args
@@ -141,11 +163,16 @@ fn cmd_figure(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()>
 
     if want("fig2") {
         matched = true;
-        let engine = Engine::new(artifacts)?;
-        let p_values: Vec<u32> = (10..=20).collect();
-        let rep = report::fig2::run(&engine, &p_values, steps, 256, seed)?;
-        report::fig2::emit(&rep, results)?;
-        println!("[fig2] wide acc {:.4}; wrote {}/fig2.csv", rep.acc_wide, results.display());
+        #[cfg(feature = "xla")]
+        {
+            let engine = a2q::runtime::Engine::new(artifacts)?;
+            let p_values: Vec<u32> = (10..=20).collect();
+            let rep = report::fig2::run(&engine, &p_values, steps, 256, seed)?;
+            report::fig2::emit(&rep, results)?;
+            println!("[fig2] wide acc {:.4}; wrote {}/fig2.csv", rep.acc_wide, results.display());
+        }
+        #[cfg(not(feature = "xla"))]
+        skip_or_bail(&id, "fig2")?;
     }
     if want("fig3") {
         matched = true;
@@ -197,17 +224,35 @@ fn cmd_figure(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()>
     }
     if want("fig8") {
         matched = true;
-        let engine = Engine::new(artifacts)?;
-        let rep = report::fig8::run(&engine, 12, 200, steps, 128, seed)?;
-        report::fig8::emit(&rep, results)?;
-        let (lo, hi) = rep.inner_acc_spread();
-        println!(
-            "[fig8] inner acc spread [{lo:.4}, {hi:.4}], outer acc {:.4}, wide {:.4}",
-            rep.outer_acc, rep.acc_wide
-        );
+        #[cfg(feature = "xla")]
+        {
+            let engine = a2q::runtime::Engine::new(artifacts)?;
+            let rep = report::fig8::run(&engine, 12, 200, steps, 128, seed)?;
+            report::fig8::emit(&rep, results)?;
+            let (lo, hi) = rep.inner_acc_spread();
+            println!(
+                "[fig8] inner acc spread [{lo:.4}, {hi:.4}], outer acc {:.4}, wide {:.4}",
+                rep.outer_acc, rep.acc_wide
+            );
+        }
+        #[cfg(not(feature = "xla"))]
+        skip_or_bail(&id, "fig8")?;
     }
     anyhow::ensure!(matched, "unknown figure {id:?} (fig2..fig8 or all)");
+    let _ = (steps, seed); // consumed only by the xla-gated figures
     Ok(())
+}
+
+/// Without the PJRT backend, `figure all` skips the training-backed figures
+/// with a note while an explicit `figure fig2`/`fig8` request fails loudly.
+#[cfg(not(feature = "xla"))]
+fn skip_or_bail(id: &str, fig: &str) -> Result<()> {
+    if id == "all" {
+        println!("[{fig}] skipped: {NO_XLA}");
+        Ok(())
+    } else {
+        anyhow::bail!("{fig}: {NO_XLA}")
+    }
 }
 
 fn cmd_estimate(args: &Args, artifacts: &PathBuf) -> Result<()> {
@@ -256,7 +301,7 @@ fn cmd_bounds(args: &Args) -> Result<()> {
 }
 
 fn cmd_accsim(args: &Args) -> Result<()> {
-    args.check_known(&["artifacts", "results", "k", "p", "m", "n", "seed"])?;
+    args.check_known(&["artifacts", "results", "k", "p", "m", "n", "seed", "psweep"])?;
     let k = args.num_or("k", 784usize)?;
     let p = args.num_or("p", 16u32)?;
     let m = args.num_or("m", 8u32)?;
@@ -268,8 +313,21 @@ fn cmd_accsim(args: &Args) -> Result<()> {
     let w: Vec<i64> = (0..k)
         .map(|_| rng.below((2 * wmax + 1) as usize) as i64 - wmax)
         .collect();
-    for mode in [AccMode::Wide, AccMode::Wrap { p_bits: p }, AccMode::Saturate { p_bits: p }] {
-        let r = dot_accumulate(&x, &w, mode);
+
+    // All requested register models run in ONE traversal of the MACs via the
+    // fused engine; `--psweep LO:HI` adds a whole wraparound width sweep.
+    let mut modes =
+        vec![AccMode::Wide, AccMode::Wrap { p_bits: p }, AccMode::Saturate { p_bits: p }];
+    if let Some(spec) = args.opt_str("psweep") {
+        let (lo, hi) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--psweep expects LO:HI, got {spec:?}"))?;
+        let (lo, hi) = (lo.trim().parse::<u32>()?, hi.trim().parse::<u32>()?);
+        anyhow::ensure!((2..=63).contains(&lo) && lo <= hi && hi <= 63, "--psweep range {spec:?}");
+        modes.extend((lo..=hi).map(|pb| AccMode::Wrap { p_bits: pb }));
+    }
+    let results = dot_accumulate_multi(&x, &w, &modes);
+    for (mode, r) in modes.iter().zip(&results) {
         println!("{mode:?}: value={} overflows={}", r.value, r.overflows);
     }
     println!(

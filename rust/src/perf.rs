@@ -1,0 +1,256 @@
+//! Perf journaling: machine-readable benchmark records tracked across PRs.
+//!
+//! The bench harness (`rust/benches/harness.rs`) and the `bench_smoke` test
+//! funnel their measurements through this module, which maintains
+//! `BENCH_accsim.json` at the repo root (one `{name, ns_per_iter, mac_per_s}`
+//! object per bench, merged by name so independent bench binaries don't
+//! clobber each other) and refreshes the auto-recorded block of
+//! EXPERIMENTS.md §Perf between its `PERF:BEGIN`/`PERF:END` markers.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::json::Json;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Stable bench name, e.g. `accsim/psweep25_fused`.
+    pub name: String,
+    /// Median wall time per iteration in nanoseconds.
+    pub ns_per_iter: f64,
+    /// Throughput in MACs per second, when the bench has a MAC count.
+    pub mac_per_s: Option<f64>,
+}
+
+/// Repository root (the workspace directory holding EXPERIMENTS.md).
+///
+/// Resolved at *runtime* by walking up from the current directory, so a
+/// binary built in one checkout and run from another writes the running
+/// checkout's journal; the compile-time CARGO_MANIFEST_DIR is only the
+/// fallback when no workspace marker is found above the CWD.
+pub fn repo_root() -> PathBuf {
+    if let Ok(mut dir) = std::env::current_dir() {
+        loop {
+            if dir.join("EXPERIMENTS.md").exists()
+                || (dir.join("Cargo.toml").exists() && dir.join("rust").is_dir())
+            {
+                return dir;
+            }
+            if !dir.pop() {
+                break;
+            }
+        }
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Default journal path: `<repo>/BENCH_accsim.json`.
+pub fn bench_json_path() -> PathBuf {
+    repo_root().join("BENCH_accsim.json")
+}
+
+/// Default experiments log path: `<repo>/EXPERIMENTS.md`.
+pub fn experiments_path() -> PathBuf {
+    repo_root().join("EXPERIMENTS.md")
+}
+
+fn record_to_json(r: &BenchRecord) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("ns_per_iter", Json::Num(r.ns_per_iter)),
+        (
+            "mac_per_s",
+            // A non-finite rate (e.g. a 0ns median divided through) would
+            // serialize as invalid JSON and poison the whole journal; drop
+            // the rate, keep the record.
+            match r.mac_per_s {
+                Some(v) if v.is_finite() => Json::Num(v),
+                _ => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn record_from_json(v: &Json) -> Result<BenchRecord> {
+    Ok(BenchRecord {
+        name: v.get("name")?.as_str()?.to_string(),
+        ns_per_iter: v.get("ns_per_iter")?.as_f64()?,
+        mac_per_s: match v.opt("mac_per_s") {
+            None | Some(Json::Null) => None,
+            Some(other) => Some(other.as_f64()?),
+        },
+    })
+}
+
+/// Parse a journal file's contents.
+pub fn parse_journal(text: &str) -> Result<Vec<BenchRecord>> {
+    match Json::parse(text)? {
+        Json::Arr(items) => items.iter().map(record_from_json).collect(),
+        other => anyhow::bail!("expected a JSON array of bench records, got {other:?}"),
+    }
+}
+
+/// Serialize records one-object-per-line (diff-friendly across PRs).
+pub fn render_journal(records: &[BenchRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&record_to_json(r).to_string());
+        out.push_str(if i + 1 == records.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Merge `records` into the journal at `path` (by name; existing entries
+/// with the same name are replaced, unknown ones preserved) and write it
+/// back sorted by name. A missing or unparseable journal starts fresh.
+pub fn record_benches_at(records: &[BenchRecord], path: &Path) -> Result<()> {
+    let mut merged: Vec<BenchRecord> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| parse_journal(&text).ok())
+        .unwrap_or_default();
+    for r in records {
+        match merged.iter_mut().find(|m| m.name == r.name) {
+            Some(slot) => *slot = r.clone(),
+            None => merged.push(r.clone()),
+        }
+    }
+    merged.sort_by(|a, b| a.name.cmp(&b.name));
+    ensure!(
+        merged.iter().all(|r| r.ns_per_iter.is_finite()),
+        "non-finite ns_per_iter in bench records"
+    );
+    std::fs::write(path, render_journal(&merged))?;
+    Ok(())
+}
+
+/// Merge into the default `BENCH_accsim.json`; returns the path written.
+pub fn record_benches(records: &[BenchRecord]) -> Result<PathBuf> {
+    let path = bench_json_path();
+    record_benches_at(records, &path)?;
+    Ok(path)
+}
+
+/// Markers of the release-bench §Perf block (`cargo bench`).
+pub const PERF_BEGIN: &str = "<!-- PERF:BEGIN (auto-recorded; do not edit by hand) -->";
+pub const PERF_END: &str = "<!-- PERF:END -->";
+/// Markers of the smoke block (`cargo test`, debug profile).
+pub const SMOKE_BEGIN: &str = "<!-- PERF-SMOKE:BEGIN (auto-recorded; do not edit by hand) -->";
+pub const SMOKE_END: &str = "<!-- PERF-SMOKE:END -->";
+
+/// Replace whatever sits between `begin` and `end` markers in EXPERIMENTS.md
+/// with `block`. Returns false (and leaves the file alone) when the file or
+/// its markers are absent.
+pub fn update_marked_block(begin: &str, end: &str, block: &str) -> Result<bool> {
+    let path = experiments_path();
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(false),
+        Err(e) => return Err(e.into()),
+    };
+    let (Some(b), Some(e)) = (text.find(begin), text.find(end)) else {
+        return Ok(false);
+    };
+    ensure!(b < e, "EXPERIMENTS.md markers out of order");
+    let mut out = String::with_capacity(text.len() + block.len());
+    out.push_str(&text[..b + begin.len()]);
+    out.push('\n');
+    out.push_str(block.trim_end());
+    out.push('\n');
+    out.push_str(&text[e..]);
+    std::fs::write(&path, out)?;
+    Ok(true)
+}
+
+/// Render the standard baseline-vs-fused P-sweep comparison block both
+/// perf instruments write into EXPERIMENTS.md, so the table format lives
+/// in exactly one place. `recorded_by` names the instrument (and profile),
+/// `shape` the swept grid.
+pub fn render_psweep_block(
+    recorded_by: &str,
+    baseline: &BenchRecord,
+    fused: &BenchRecord,
+    shape: &str,
+) -> String {
+    let speedup = baseline.ns_per_iter / fused.ns_per_iter.max(1.0);
+    format!(
+        "Last recorded by {recorded_by}:\n\n\
+         | bench | ns/iter (median) | M MAC/s |\n|---|---:|---:|\n\
+         | {} | {:.0} | {:.0} |\n\
+         | {} | {:.0} | {:.0} |\n\n\
+         **Fused engine speedup over the per-P scalar baseline: {speedup:.1}x** ({shape}).",
+        baseline.name,
+        baseline.ns_per_iter,
+        baseline.mac_per_s.unwrap_or(0.0) / 1e6,
+        fused.name,
+        fused.ns_per_iter,
+        fused.mac_per_s.unwrap_or(0.0) / 1e6,
+    )
+}
+
+/// Replace the release-bench block of EXPERIMENTS.md §Perf.
+pub fn update_experiments_block(block: &str) -> Result<bool> {
+    update_marked_block(PERF_BEGIN, PERF_END, block)
+}
+
+/// Replace the smoke (cargo test) block of EXPERIMENTS.md §Perf.
+pub fn update_experiments_smoke_block(block: &str) -> Result<bool> {
+    update_marked_block(SMOKE_BEGIN, SMOKE_END, block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    fn rec(name: &str, ns: f64, macs: Option<f64>) -> BenchRecord {
+        BenchRecord { name: name.into(), ns_per_iter: ns, mac_per_s: macs }
+    }
+
+    #[test]
+    fn journal_round_trip_and_merge() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("BENCH_accsim.json");
+        record_benches_at(&[rec("b", 200.0, None), rec("a", 100.0, Some(1e9))], &path).unwrap();
+        let loaded = parse_journal(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].name, "a"); // sorted
+        assert_eq!(loaded[0].mac_per_s, Some(1e9));
+        assert_eq!(loaded[1].mac_per_s, None);
+
+        // merge: replace `a`, keep `b`, add `c`
+        record_benches_at(&[rec("a", 50.0, Some(2e9)), rec("c", 1.0, None)], &path).unwrap();
+        let loaded = parse_journal(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0].ns_per_iter, 50.0);
+        assert_eq!(loaded[1].name, "b");
+        assert_eq!(loaded[2].name, "c");
+    }
+
+    #[test]
+    fn non_finite_rate_is_dropped_not_corrupting() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("j.json");
+        record_benches_at(&[rec("inf", 1.0, Some(f64::INFINITY)), rec("ok", 2.0, Some(5.0))], &path)
+            .unwrap();
+        // the journal must stay parseable and keep the record minus the rate
+        let loaded = parse_journal(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(loaded[0].name, "inf");
+        assert_eq!(loaded[0].mac_per_s, None);
+        assert_eq!(loaded[1].mac_per_s, Some(5.0));
+    }
+
+    #[test]
+    fn journal_text_is_stable_json() {
+        let text = render_journal(&[rec("x", 1.5, Some(3.0))]);
+        assert!(text.starts_with("[\n  {"));
+        let back = parse_journal(&text).unwrap();
+        assert_eq!(back, vec![rec("x", 1.5, Some(3.0))]);
+    }
+}

@@ -14,7 +14,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::accsim::{qlinear_forward, AccMode};
+use crate::accsim::{qlinear_forward, qlinear_forward_multi, AccMode};
 use crate::accsim::matmul::quantize_inputs;
 use crate::config::RunConfig;
 use crate::coordinator::Trainer;
@@ -65,15 +65,24 @@ pub fn run(
     let x_int = quantize_inputs(&batch.x, 1.0, 1, false);
     let labels = batch.y.data();
 
-    let wide = qlinear_forward(&x_int, 1.0, &layer, AccMode::Wide);
-    let (c, n) = metrics::top1_accuracy(&wide.out, labels, n_eval);
+    // --- 2. simulate P-bit deployment of the QAT model -----------------------
+    // One fused pass over the MACs simulates the wide reference AND
+    // wraparound AND saturation at every requested width (the old code
+    // re-walked the weights once for wide plus 2x per P).
+    let modes: Vec<AccMode> = std::iter::once(AccMode::Wide)
+        .chain(p_values.iter().flat_map(|&p| {
+            [AccMode::Wrap { p_bits: p }, AccMode::Saturate { p_bits: p }]
+        }))
+        .collect();
+    let sims = qlinear_forward_multi(&x_int, 1.0, &layer, &modes);
+
+    let (c, n) = metrics::top1_accuracy(&sims[0].out, labels, n_eval);
     let acc_wide = c as f64 / n as f64;
 
     let mut rows = Vec::new();
-    for &p in p_values {
-        // --- 2. simulate P-bit deployment of the QAT model ------------------
-        let wrap = qlinear_forward(&x_int, 1.0, &layer, AccMode::Wrap { p_bits: p });
-        let sat = qlinear_forward(&x_int, 1.0, &layer, AccMode::Saturate { p_bits: p });
+    for (pi, &p) in p_values.iter().enumerate() {
+        let wrap = &sims[1 + 2 * pi];
+        let sat = &sims[2 + 2 * pi];
         let (cw, _) = metrics::top1_accuracy(&wrap.out, labels, n_eval);
         let (cs, _) = metrics::top1_accuracy(&sat.out, labels, n_eval);
 

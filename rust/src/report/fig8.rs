@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::accsim::dot::{dot_accumulate, AccMode};
 use crate::accsim::matmul::quantize_inputs;
+use crate::accsim::ReorderScratch;
 use crate::config::RunConfig;
 use crate::coordinator::Trainer;
 use crate::datasets::Split;
@@ -76,24 +77,13 @@ pub fn run(
     let labels = batch.y.data();
     let k = layer.k;
 
-    // Reference logits under the wide register / outer-loop model.
-    let logits = |mode: AccMode, perm: Option<&[usize]>| -> Tensor {
+    // Reference logits under the wide register / outer-loop model (flat
+    // IntMatrix rows, no permutation).
+    let logits_plain = |mode: AccMode| -> Tensor {
         let mut out = Tensor::zeros(vec![n_eval, layer.c_out]);
-        let mut xp = vec![0i64; k];
-        let mut wp = vec![0i64; k];
-        for (bi, xb) in x_int.iter().enumerate() {
+        for (bi, xb) in x_int.iter_rows().enumerate() {
             for c in 0..layer.c_out {
-                let row = layer.row(c);
-                let value = match perm {
-                    None => dot_accumulate(xb, row, mode).value,
-                    Some(p) => {
-                        for (j, &i) in p.iter().enumerate() {
-                            xp[j] = xb[i];
-                            wp[j] = row[i];
-                        }
-                        dot_accumulate(&xp, &wp, mode).value
-                    }
-                };
+                let value = dot_accumulate(xb, layer.row(c), mode).value;
                 out.data_mut()[bi * layer.c_out + c] =
                     value as f32 * layer.scales[c] + layer.bias[c];
             }
@@ -101,21 +91,32 @@ pub fn run(
         out
     };
 
-    let wide = logits(AccMode::Wide, None);
+    let wide = logits_plain(AccMode::Wide);
     let (cw, nw) = metrics::top1_accuracy(&wide, labels, n_eval);
     let acc_wide = cw as f64 / nw as f64;
 
-    let outer = logits(AccMode::SaturateFinal { p_bits }, None);
+    let outer = logits_plain(AccMode::SaturateFinal { p_bits });
     let (co, _) = metrics::top1_accuracy(&outer, labels, n_eval);
     let outer_mae = metrics::logit_mae(&outer, &wide);
     let outer_acc = co as f64 / n_eval as f64;
 
+    // Permutation study: one scratch serves every (permutation, sample,
+    // channel) gather — no per-dot allocation.
     let mut rng = Rng::new(seed ^ 0xf18_8);
-    let mut perm: Vec<usize> = (0..k).collect();
+    let mut scratch = ReorderScratch::new();
+    scratch.reset(k);
     let mut inner = Vec::with_capacity(n_perms);
     for _ in 0..n_perms {
-        rng.shuffle(&mut perm);
-        let l = logits(AccMode::Saturate { p_bits }, Some(&perm));
+        scratch.shuffle(&mut rng);
+        let mut l = Tensor::zeros(vec![n_eval, layer.c_out]);
+        for (bi, xb) in x_int.iter_rows().enumerate() {
+            for c in 0..layer.c_out {
+                let (xp, wp) = scratch.gathered(xb, layer.row(c));
+                let value = dot_accumulate(xp, wp, AccMode::Saturate { p_bits }).value;
+                l.data_mut()[bi * layer.c_out + c] =
+                    value as f32 * layer.scales[c] + layer.bias[c];
+            }
+        }
         let (ci, _) = metrics::top1_accuracy(&l, labels, n_eval);
         inner.push((metrics::logit_mae(&l, &wide), ci as f64 / n_eval as f64));
     }

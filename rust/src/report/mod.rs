@@ -13,10 +13,15 @@
 //! | Fig. 7 (LUT breakdown)                  | [`fig67`] | `results/fig7_<model>.csv` |
 //! | Fig. 8 (re-ordering under saturation)   | [`fig8`] | `results/fig8.csv` |
 
+// fig2/fig8 train models end to end and therefore need the PJRT engine
+// (`xla` feature); the record-driven figures (fig3/fig45/fig67) are pure
+// host code and always available.
+#[cfg(feature = "xla")]
 pub mod fig2;
 pub mod fig3;
 pub mod fig45;
 pub mod fig67;
+#[cfg(feature = "xla")]
 pub mod fig8;
 pub mod render;
 

@@ -11,11 +11,19 @@
 //! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! The PJRT-backed pieces ([`engine`], [`literal`]) are gated behind the
+//! `xla` cargo feature so the default build needs no XLA toolchain;
+//! [`artifact`] (manifest parsing, model discovery) is always available.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod literal;
 
 pub use artifact::{AlgArtifacts, ModelManifest, QLayerMeta};
+#[cfg(feature = "xla")]
 pub use engine::{Engine, ExportedLayer, TrainState};
+#[cfg(feature = "xla")]
 pub use literal::{literal_to_tensor, tensor_to_literal};

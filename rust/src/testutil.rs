@@ -1,8 +1,28 @@
 //! Test support: a tiny self-cleaning temporary directory (offline
-//! replacement for the `tempfile` crate).
+//! replacement for the `tempfile` crate) and shared bench fixtures.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::quant::QTensor;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Deterministic quantized-layer fixture for the accsim P-sweep perf
+/// instruments. The release bench (`benches/runtime_hotpath.rs`) and the
+/// test-suite smoke (`tests/bench_smoke.rs`) both build their workload from
+/// this one function so their journal entries measure the same distribution.
+pub fn psweep_layer(c_out: usize, k: usize, seed: u64) -> QTensor {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..c_out * k)
+        .map(|_| (rng.normal() * 30.0).round().clamp(-128.0, 127.0) as f32)
+        .collect();
+    QTensor::from_export(
+        &Tensor::new(vec![c_out, k], w),
+        &Tensor::new(vec![c_out, 1], vec![0.01; c_out]),
+        &Tensor::from_vec(vec![0.0; c_out]),
+    )
+}
 
 static COUNTER: AtomicU64 = AtomicU64::new(0);
 

@@ -1,0 +1,96 @@
+//! Smoke-scale perf run wired into `cargo test`: exercises the full bench
+//! pipeline (per-P scalar baseline vs the fused multi-P engine, journal
+//! write, EXPERIMENTS.md block refresh) at a size that finishes in well
+//! under a second.
+//!
+//! Respects `A2Q_BENCH_QUICK`: quick by default under the test harness; set
+//! `A2Q_BENCH_QUICK=0` for the bench-scale shape. Timing numbers recorded
+//! here come from the *debug* profile and land in the separate
+//! `accsim_smoke/*` journal entries and PERF-SMOKE block — the authoritative
+//! release numbers come from `cargo bench --bench runtime_hotpath`.
+
+use std::time::Instant;
+
+use a2q::accsim::{qlinear_forward_multi, qlinear_forward_ref, AccMode, IntMatrix};
+use a2q::perf::{self, BenchRecord};
+use a2q::rng::Rng;
+use a2q::testutil::psweep_layer;
+
+#[test]
+fn bench_smoke_psweep_records_journal() {
+    let quick = std::env::var("A2Q_BENCH_QUICK").map(|v| v != "0").unwrap_or(true);
+    let (batch, c_out, k, reps) = if quick { (8, 16, 256, 2) } else { (64, 64, 1024, 5) };
+
+    let layer = psweep_layer(c_out, k, 7);
+    let mut rng = Rng::new(8);
+    let x = IntMatrix::from_flat(batch, k, (0..batch * k).map(|_| rng.below(256) as i64).collect());
+    let modes: Vec<AccMode> = (8..=32).map(|p| AccMode::Wrap { p_bits: p }).collect();
+    let macs = (reps * modes.len() * batch * c_out * k) as u64;
+
+    // Correctness at smoke scale (the property test covers this broadly;
+    // here it guards the exact bench configuration).
+    let fused_once = qlinear_forward_multi(&x, 1.0, &layer, &modes);
+    for (mi, mode) in modes.iter().enumerate() {
+        let r = qlinear_forward_ref(&x, 1.0, &layer, *mode);
+        assert_eq!(fused_once[mi].out.data(), r.out.data(), "{mode:?}");
+        assert_eq!(fused_once[mi].stats.overflow_events, r.stats.overflow_events, "{mode:?}");
+    }
+
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..reps {
+        for mode in &modes {
+            sink ^= qlinear_forward_ref(&x, 1.0, &layer, *mode).stats.overflow_events;
+        }
+    }
+    let t_ref = t0.elapsed();
+
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        sink ^= qlinear_forward_multi(&x, 1.0, &layer, &modes)
+            .iter()
+            .map(|s| s.stats.overflow_events)
+            .sum::<u64>();
+    }
+    let t_fused = t1.elapsed();
+    std::hint::black_box(sink);
+
+    let speedup = t_ref.as_secs_f64() / t_fused.as_secs_f64().max(1e-12);
+    let per_iter = |t: std::time::Duration| t.as_nanos() as f64 / reps as f64;
+    let mac_rate = |t: std::time::Duration| macs as f64 / t.as_secs_f64().max(1e-12);
+    println!(
+        "smoke psweep ({} widths, {batch}x{c_out}x{k}, debug profile): fused {speedup:.1}x over per-P scalar",
+        modes.len()
+    );
+
+    // Journal under smoke-specific names so release bench entries survive.
+    // Recording degrades gracefully (like the bench harness) so `cargo test`
+    // still passes from a read-only or relocated checkout.
+    let baseline = BenchRecord {
+        name: "accsim_smoke/psweep25_scalar_baseline".into(),
+        ns_per_iter: per_iter(t_ref),
+        mac_per_s: Some(mac_rate(t_ref)),
+    };
+    let fused = BenchRecord {
+        name: "accsim_smoke/psweep25_fused_engine".into(),
+        ns_per_iter: per_iter(t_fused),
+        mac_per_s: Some(mac_rate(t_fused)),
+    };
+    match perf::record_benches(&[baseline.clone(), fused.clone()]) {
+        Ok(path) => {
+            let journal = perf::parse_journal(&std::fs::read_to_string(path).unwrap()).unwrap();
+            assert!(journal.iter().any(|r| r.name == "accsim_smoke/psweep25_fused_engine"));
+        }
+        Err(e) => eprintln!("perf journal not writable here ({e}); measurements printed only"),
+    }
+
+    let block = perf::render_psweep_block(
+        &format!("`cargo test` (debug profile{})", if quick { ", quick" } else { "" }),
+        &baseline,
+        &fused,
+        &format!("{} widths, batch {batch} x c_out {c_out} x k {k}", modes.len()),
+    );
+    if let Err(e) = perf::update_experiments_smoke_block(&block) {
+        eprintln!("EXPERIMENTS.md not writable here ({e}); smoke block not updated");
+    }
+}

@@ -1,5 +1,8 @@
 //! Integration tests over the real AOT artifacts: the Rust <-> HLO contract.
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires the `xla` feature (PJRT engine) and `make artifacts` (skipped
+//! with a message otherwise).
+
+#![cfg(feature = "xla")]
 
 use a2q::config::RunConfig;
 use a2q::coordinator::checkpoint::Checkpoint;

@@ -4,8 +4,12 @@
 //! Each property runs a few hundred random cases; failures print the seed so
 //! the case is exactly reproducible.
 
-use a2q::accsim::{dot_accumulate, AccMode};
+use a2q::accsim::{
+    dot_accumulate, dot_accumulate_multi, qlinear_forward_ref, AccMode, IntMatrix, LayerPlan,
+};
 use a2q::accsim::dot::wrap_to;
+use a2q::quant::QTensor;
+use a2q::tensor::Tensor;
 use a2q::config::SweepConfig;
 use a2q::json::Json;
 use a2q::pareto::{dominates, frontier, Point};
@@ -83,6 +87,107 @@ fn prop_modes_agree_without_overflow() {
             let r = dot_accumulate(&x, &w, mode);
             assert_eq!(r.value, wide.value, "case {case} {mode:?}");
             assert_eq!(r.overflows, 0, "case {case} {mode:?}");
+        }
+    }
+}
+
+/// The fused multi-P kernel engine is bit-identical, per mode, to running
+/// the scalar per-P reference once per mode — outputs, wide outputs and
+/// every statistics field — across random shapes and bit widths, for all
+/// four `AccMode`s, including channels the `Σ|w| * max|x|` bound gates onto
+/// the no-simulation fast path, at several worker counts.
+#[test]
+fn prop_fused_multi_p_bit_exact() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..60 {
+        let batch = 1 + rng.below(6);
+        let c_out = 1 + rng.below(5);
+        let k = 1 + rng.below(64);
+        let n_bits = 1 + rng.below(6) as u32;
+        let signed = rng.below(2) == 1;
+        let x_scale = 0.25 + rng.uniform() as f32;
+
+        // Weight rows in three magnitude classes so the sweep hits all-zero
+        // channels, bound-safe channels AND register-overflow channels.
+        let mut wdata = Vec::with_capacity(c_out * k);
+        for c in 0..c_out {
+            let amp: i64 = match (c + case) % 3 {
+                0 => 0,
+                1 => 2,
+                _ => 3000,
+            };
+            for _ in 0..k {
+                wdata.push(if amp == 0 {
+                    0.0
+                } else {
+                    (rng.below((2 * amp + 1) as usize) as i64 - amp) as f32
+                });
+            }
+        }
+        let w = QTensor::from_export(
+            &Tensor::new(vec![c_out, k], wdata),
+            &Tensor::new(vec![c_out, 1], (0..c_out).map(|_| 0.1 + rng.uniform() as f32).collect()),
+            &Tensor::from_vec((0..c_out).map(|_| rng.normal() as f32).collect()),
+        );
+
+        let xmax: i64 = 1 << (n_bits - u32::from(signed));
+        let xdata: Vec<i64> = (0..batch * k)
+            .map(|_| {
+                let lo = if signed { -xmax } else { 0 };
+                lo + rng.below((xmax - lo + 1) as usize) as i64
+            })
+            .collect();
+        let x = IntMatrix::from_flat(batch, k, xdata);
+
+        // Random mode multiset over all four register models, mixed widths
+        // (duplicates and unsorted orders allowed).
+        let n_modes = 1 + rng.below(12);
+        let modes: Vec<AccMode> = (0..n_modes)
+            .map(|_| {
+                let p_bits = 2 + rng.below(47) as u32;
+                match rng.below(4) {
+                    0 => AccMode::Wide,
+                    1 => AccMode::Wrap { p_bits },
+                    2 => AccMode::Saturate { p_bits },
+                    _ => AccMode::SaturateFinal { p_bits },
+                }
+            })
+            .collect();
+
+        let refs: Vec<_> =
+            modes.iter().map(|m| qlinear_forward_ref(&x, x_scale, &w, *m)).collect();
+        let plan = LayerPlan::new(&w, &modes);
+        for threads in [1usize, 2, 5] {
+            let multi = plan.execute_threads(&x, x_scale, threads);
+            assert_eq!(multi.len(), modes.len(), "case {case}");
+            for (mi, mode) in modes.iter().enumerate() {
+                let (a, b) = (&multi[mi], &refs[mi]);
+                assert_eq!(a.out.data(), b.out.data(), "case {case} {mode:?} t={threads}");
+                assert_eq!(a.out_wide.data(), b.out_wide.data(), "case {case} {mode:?}");
+                assert_eq!(a.stats.dots, b.stats.dots, "case {case} {mode:?}");
+                assert_eq!(a.stats.macs, b.stats.macs, "case {case} {mode:?}");
+                assert_eq!(
+                    a.stats.overflow_events, b.stats.overflow_events,
+                    "case {case} {mode:?} t={threads}"
+                );
+                assert_eq!(
+                    a.stats.dots_overflowed, b.stats.dots_overflowed,
+                    "case {case} {mode:?}"
+                );
+                assert_eq!(a.stats.abs_err_sum, b.stats.abs_err_sum, "case {case} {mode:?}");
+                assert_eq!(a.stats.outputs, b.stats.outputs, "case {case} {mode:?}");
+            }
+        }
+
+        // Dot-level fusion agrees with the scalar walk too.
+        let row0 = x.row(0).to_vec();
+        let fused = dot_accumulate_multi(&row0, w.row(0), &modes);
+        for (mi, mode) in modes.iter().enumerate() {
+            assert_eq!(
+                fused[mi],
+                dot_accumulate(&row0, w.row(0), *mode),
+                "case {case} dot {mode:?}"
+            );
         }
     }
 }

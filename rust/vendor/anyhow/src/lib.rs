@@ -1,0 +1,176 @@
+//! Offline, dependency-free subset of the `anyhow` crate API.
+//!
+//! The a2q build must work with no network and no registry cache, so the
+//! workspace vendors this drop-in shim instead of depending on crates.io.
+//! It covers exactly the surface the codebase uses:
+//!
+//! * [`Error`] / [`Result`] — a single-string error that captures the
+//!   `Display` chain of whatever it was built from;
+//! * `From<E: std::error::Error>` so `?` works on io/parse/etc. errors;
+//! * the [`Context`] extension trait (`.context(...)` / `.with_context(...)`)
+//!   on both `Result` and `Option`;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Differences from the real crate: no backtraces, no downcasting, and the
+//! source chain is flattened into the message at construction time. None of
+//! those are used here.
+
+use std::fmt;
+
+/// A flattened error message (optionally with the source chain appended).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (the `anyhow!` macro core).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Construct from a std error, appending its source chain.
+    pub fn new<E: std::error::Error>(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+
+    /// Prepend a context line, matching anyhow's `{context}: {cause}` shape
+    /// when rendered on one line.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `Result::unwrap` and `fn main() -> Result<()>` render via Debug;
+        // show the human message, as real anyhow does.
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket From possible.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Create an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i64> {
+        Ok(s.parse::<i64>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_num("42").unwrap(), 42);
+        let e = parse_num("nope").unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: Result<()> = Err(anyhow!("inner")).context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: inner");
+        let o: Result<i32> = None.with_context(|| format!("missing {}", 7));
+        assert_eq!(o.unwrap_err().to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+}

@@ -1,0 +1,189 @@
+//! Stub of the xla-rs PJRT binding surface the a2q runtime layer uses.
+//!
+//! The real bindings need the XLA extension shared library, which is not
+//! present in offline build environments. This stub keeps the `--features
+//! xla` configuration *compiling* everywhere:
+//!
+//! * [`Literal`] is fully functional (host-side f32 buffer + dims), so the
+//!   tensor <-> literal transport and its tests work;
+//! * everything that would actually touch PJRT ([`PjRtClient::cpu`],
+//!   [`HloModuleProto::from_text_file`], executions) returns a descriptive
+//!   [`Error`] at runtime.
+//!
+//! Deploying for real means replacing this path dependency with the actual
+//! xla-rs bindings (identical API subset) via `[patch]` or by editing
+//! `rust/Cargo.toml`; no a2q source changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+const STUB_MSG: &str =
+    "XLA/PJRT backend unavailable: built against the vendored stub (see rust/vendor/xla)";
+
+/// Error type mirroring xla-rs: displayable and usable with `?`/anyhow.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>(what: &str) -> Result<T> {
+    Err(Error(format!("{what}: {STUB_MSG}")))
+}
+
+/// Element types the host transport understands (the artifact interface is
+/// all-f32, so only f32 is implemented).
+pub trait NativeType: Sized + Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// Dense array shape (dims in elements, row-major).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host literal: f32 buffer + dims. Functional in the stub so the
+/// Tensor <-> Literal round trip (and its tests) work without PJRT.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch ({} vs {n})",
+                self.dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|v| T::from_f32(*v)).collect())
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they only
+    /// come back from executions), so this always errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub_err("Literal::to_tuple")
+    }
+}
+
+/// Device buffer handle returned by executions (never constructible here).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        stub_err(&format!("parsing HLO text {:?}", path.as_ref()))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        // Unreachable in practice: an HloModuleProto cannot be constructed
+        // from the stub. Kept total so call sites compile unchanged.
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client. `cpu()` fails in the stub with a clear message.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_fail_loudly() {
+        let e = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(e.contains("vendored stub"), "{e}");
+    }
+}
