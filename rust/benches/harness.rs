@@ -70,6 +70,18 @@ pub fn quick() -> bool {
     std::env::var("A2Q_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Convert a timed result into the journal record shape (`{name, median
+/// ns/iter, MAC/s}`) — the single definition the journal and the
+/// EXPERIMENTS.md block renderers all go through.
+#[allow(dead_code)]
+pub fn to_record(r: &BenchResult, macs_per_iter: Option<u64>) -> a2q::perf::BenchRecord {
+    a2q::perf::BenchRecord {
+        name: r.name.clone(),
+        ns_per_iter: r.median.as_nanos() as f64,
+        mac_per_s: macs_per_iter.map(|m| throughput(r, m)),
+    }
+}
+
 /// Machine-readable journal: collects results during a bench run, then
 /// merges them into `BENCH_accsim.json` at the repo root (name, ns/iter,
 /// MAC/s) so the perf trajectory is tracked across PRs alongside stdout.
@@ -87,11 +99,7 @@ impl Journal {
 
     /// Record a result; pass the per-iteration MAC count for MAC/s.
     pub fn add(&mut self, r: &BenchResult, macs_per_iter: Option<u64>) {
-        self.records.push(a2q::perf::BenchRecord {
-            name: r.name.clone(),
-            ns_per_iter: r.median.as_nanos() as f64,
-            mac_per_s: macs_per_iter.map(|m| throughput(r, m)),
-        });
+        self.records.push(to_record(r, macs_per_iter));
     }
 
     /// Merge into BENCH_accsim.json; prints where the journal went.

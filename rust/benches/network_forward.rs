@@ -1,0 +1,83 @@
+//! Multi-layer network-forward microbenchmark (EXPERIMENTS.md §Perf):
+//! the 26-mode accumulator sweep (wide + wraparound P in 8..=32) over a
+//! 3-layer calibrated A2Q QNetwork, run two ways:
+//!
+//! 1. *per-mode scalar composition* (`network_forward_ref`): one full MAC
+//!    traversal of every layer per mode — the reference semantics;
+//! 2. *fused network engine* (`network_forward_multi` / `NetworkPlan`): one
+//!    thread-scoped batch pass through all layers, modes sharing traversals
+//!    until their register models actually diverge.
+//!
+//! Results are journaled to BENCH_accsim.json and the PERF-NET block of
+//! EXPERIMENTS.md §Perf via `a2q::perf`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use a2q::accsim::{network_forward_multi, AccMode};
+use a2q::model::network_forward_ref;
+use a2q::testutil::psweep_network;
+
+/// The wraparound width sweep every figure replays.
+const P_SWEEP: std::ops::RangeInclusive<u32> = 8..=32;
+
+fn main() {
+    let mut journal = harness::Journal::new();
+    let (widths, batch): (Vec<usize>, usize) = if harness::quick() {
+        (vec![256, 128, 64, 10], 16)
+    } else {
+        (vec![784, 256, 128, 10], 64)
+    };
+    let (net, x) = psweep_network(&widths, batch, 7);
+    let modes: Vec<AccMode> = std::iter::once(AccMode::Wide)
+        .chain(P_SWEEP.map(|p| AccMode::Wrap { p_bits: p }))
+        .collect();
+    let macs = (modes.len() * batch * net.macs_per_row()) as u64;
+    let iters = if harness::quick() { 2 } else { 5 };
+
+    let rb = harness::bench("accsim/netfwd_scalar_composed", 1, iters, || {
+        let mut events = 0u64;
+        for mode in &modes {
+            let r = network_forward_ref(&net, &x, *mode);
+            events += r.layer_stats.iter().map(|s| s.overflow_events).sum::<u64>();
+        }
+        events
+    });
+    println!("  ({:.0} M MAC/s)", harness::throughput(&rb, macs) / 1e6);
+    journal.add(&rb, Some(macs));
+
+    let rf = harness::bench("accsim/netfwd_fused_network", 1, iters, || {
+        network_forward_multi(&net, &x, &modes)
+            .iter()
+            .flat_map(|r| r.layer_stats.iter())
+            .map(|s| s.overflow_events)
+            .sum::<u64>()
+    });
+    println!("  ({:.0} M MAC/s)", harness::throughput(&rf, macs) / 1e6);
+    journal.add(&rf, Some(macs));
+
+    let speedup = rb.median.as_secs_f64() / rf.median.as_secs_f64().max(1e-12);
+    println!(
+        "network forward ({} modes, {} layers {:?}, batch {batch}): fused engine {speedup:.1}x \
+         over per-mode scalar composition",
+        modes.len(),
+        net.depth(),
+        widths,
+    );
+    journal.flush();
+
+    let block = a2q::perf::render_psweep_block(
+        &format!(
+            "`cargo bench --bench network_forward`{}",
+            if harness::quick() { " (quick mode)" } else { "" }
+        ),
+        &harness::to_record(&rb, Some(macs)),
+        &harness::to_record(&rf, Some(macs)),
+        &format!("{} modes, {} layers {widths:?}, batch {batch}", modes.len(), net.depth()),
+    );
+    match a2q::perf::update_experiments_net_block(&block) {
+        Ok(true) => println!("EXPERIMENTS.md §Perf PERF-NET block updated"),
+        Ok(false) => println!("EXPERIMENTS.md markers absent; skipped PERF-NET update"),
+        Err(e) => eprintln!("EXPERIMENTS.md update failed: {e}"),
+    }
+}

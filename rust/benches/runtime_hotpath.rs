@@ -91,18 +91,13 @@ fn main() {
     journal.flush();
 
     // Refresh the auto-recorded §Perf block of EXPERIMENTS.md.
-    let to_record = |r: &harness::BenchResult| a2q::perf::BenchRecord {
-        name: r.name.clone(),
-        ns_per_iter: r.median.as_nanos() as f64,
-        mac_per_s: Some(harness::throughput(r, sweep_macs)),
-    };
     let block = a2q::perf::render_psweep_block(
         &format!(
             "`cargo bench --bench runtime_hotpath`{}",
             if harness::quick() { " (quick mode)" } else { "" }
         ),
-        &to_record(&rb),
-        &to_record(&rf),
+        &harness::to_record(&rb, Some(sweep_macs)),
+        &harness::to_record(&rf, Some(sweep_macs)),
         &format!("{} widths, batch {batch} x c_out {c_out} x k {kk}", modes.len()),
     );
     match a2q::perf::update_experiments_block(&block) {

@@ -34,11 +34,26 @@
 //!
 //! All kernels are property-tested bit-exact against the per-P reference
 //! (`rust/tests/property_invariants.rs`).
+//!
+//! On top of the single-layer [`LayerPlan`], the [`NetworkPlan`] streams a
+//! batch through a whole [`crate::model::QNetwork`] in one pass: rows are
+//! chunked across scoped threads *once* and each worker carries its chunk
+//! through every layer (simulate -> requantize -> next layer), so there is
+//! no per-layer barrier. Within a chunk, modes whose propagated activations
+//! are still byte-identical (no register has diverged from the wide result
+//! yet — always true at layer 0, and at depth for every provably-safe or
+//! wide-enough register) share a single fused MAC traversal; a mode only
+//! pays for its own traversal after its register model has actually
+//! corrupted an activation. The safe-channel bound gate is applied per
+//! layer from the *propagated* per-row activation max — not a global
+//! worst case — so deeper layers whose activations shrink under
+//! requantization gate more channels onto the wide fast path.
 
 use super::dot::{range, AccMode, DotResult};
 use super::intmat::{abs_max_of, IntMatrix};
 use super::matmul::MatmulStats;
 use super::stats::OverflowStats;
+use crate::model::QNetwork;
 use crate::quant::QTensor;
 use crate::tensor::Tensor;
 
@@ -246,6 +261,75 @@ struct Chunk {
     stats: Vec<OverflowStats>,
 }
 
+/// The single-threaded kernel core shared by [`LayerPlan`] workers and the
+/// per-layer steps of [`NetworkPlan`] workers: simulate rows `r0..r1` of
+/// `x . w^T` under every mode of `plan`, gating each (row, channel) pair on
+/// `row_l1[c] * max|x_row|`.
+fn simulate_chunk(
+    w: &QTensor,
+    row_l1: &[i128],
+    plan: &ModePlan,
+    x: &IntMatrix,
+    x_scale: f32,
+    r0: usize,
+    r1: usize,
+) -> Chunk {
+    let c_out = w.c_out;
+    let k = w.k;
+    let n_modes = plan.modes.len();
+    let rows = r1 - r0;
+    let mut out = vec![vec![0f32; rows * c_out]; n_modes];
+    let mut out_wide = vec![0f32; rows * c_out];
+    let mut stats = vec![OverflowStats::default(); n_modes];
+    let mut scratch = Scratch::for_plan(plan);
+    let mut dots = vec![DotResult { value: 0, overflows: 0 }; n_modes];
+
+    for (ri, bi) in (r0..r1).enumerate() {
+        let xb = x.row(bi);
+        let xmax = abs_max_of(xb);
+        for c in 0..c_out {
+            let p_safe = min_safe_p(row_l1[c], xmax);
+            let wide = fused_dot(plan, xb, w.row(c), p_safe, &mut scratch, &mut dots);
+            let scale = w.scales[c] * x_scale;
+            let idx = ri * c_out + c;
+            out_wide[idx] = wide as f32 * scale + w.bias[c];
+            for (mi, d) in dots.iter().enumerate() {
+                stats[mi].record(k, d.overflows, d.value, wide);
+                out[mi][idx] = d.value as f32 * scale + w.bias[c];
+            }
+        }
+    }
+    Chunk { out, out_wide, stats }
+}
+
+/// Chunk `batch` rows across up to `threads` scoped workers and collect
+/// each worker's result **in row order**, so every stats merge downstream is
+/// deterministic for a given thread count (and exact vs the sequential walk
+/// while `abs_err_sum` stays below 2^53). Shared by [`LayerPlan`] and
+/// [`NetworkPlan`] so the ceil-div chunk sizing and join-order contract live
+/// in exactly one place.
+fn par_row_chunks<C: Send>(
+    batch: usize,
+    threads: usize,
+    run: impl Fn(usize, usize) -> C + Sync,
+) -> Vec<C> {
+    if threads <= 1 || batch <= 1 {
+        return vec![run(0, batch)];
+    }
+    let t = threads.min(batch);
+    let per = batch.div_euclid(t) + usize::from(batch % t != 0);
+    let bounds: Vec<(usize, usize)> = (0..batch)
+        .step_by(per.max(1))
+        .map(|r0| (r0, (r0 + per).min(batch)))
+        .collect();
+    let run = &run;
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            bounds.iter().map(|&(r0, r1)| s.spawn(move || run(r0, r1))).collect();
+        handles.into_iter().map(|h| h.join().expect("accsim worker panicked")).collect()
+    })
+}
+
 /// Bounds-aware execution plan for one quantized layer: the mode partition
 /// plus per-channel `Σ|w_int|` norms that drive the overflow gate.
 pub struct LayerPlan<'w> {
@@ -270,32 +354,7 @@ impl<'w> LayerPlan<'w> {
 
     /// Simulate rows `r0..r1` of the batch; the single-threaded kernel core.
     fn simulate_rows(&self, x: &IntMatrix, x_scale: f32, r0: usize, r1: usize) -> Chunk {
-        let c_out = self.w.c_out;
-        let k = self.w.k;
-        let n_modes = self.plan.modes.len();
-        let rows = r1 - r0;
-        let mut out = vec![vec![0f32; rows * c_out]; n_modes];
-        let mut out_wide = vec![0f32; rows * c_out];
-        let mut stats = vec![OverflowStats::default(); n_modes];
-        let mut scratch = Scratch::for_plan(&self.plan);
-        let mut dots = vec![DotResult { value: 0, overflows: 0 }; n_modes];
-
-        for (ri, bi) in (r0..r1).enumerate() {
-            let xb = x.row(bi);
-            let xmax = abs_max_of(xb);
-            for c in 0..c_out {
-                let p_safe = min_safe_p(self.row_l1[c], xmax);
-                let wide = fused_dot(&self.plan, xb, self.w.row(c), p_safe, &mut scratch, &mut dots);
-                let scale = self.w.scales[c] * x_scale;
-                let idx = ri * c_out + c;
-                out_wide[idx] = wide as f32 * scale + self.w.bias[c];
-                for (mi, d) in dots.iter().enumerate() {
-                    stats[mi].record(k, d.overflows, d.value, wide);
-                    out[mi][idx] = d.value as f32 * scale + self.w.bias[c];
-                }
-            }
-        }
-        Chunk { out, out_wide, stats }
+        simulate_chunk(self.w, &self.row_l1, &self.plan, x, x_scale, r0, r1)
     }
 
     /// Execute over a batch with an explicit worker count (tests use this to
@@ -306,26 +365,8 @@ impl<'w> LayerPlan<'w> {
         let c_out = self.w.c_out;
         let n_modes = self.plan.modes.len();
 
-        let chunks: Vec<Chunk> = if threads <= 1 || batch <= 1 {
-            vec![self.simulate_rows(x, x_scale, 0, batch)]
-        } else {
-            let t = threads.min(batch);
-            let per = batch.div_euclid(t) + usize::from(batch % t != 0);
-            let bounds: Vec<(usize, usize)> = (0..batch)
-                .step_by(per.max(1))
-                .map(|r0| (r0, (r0 + per).min(batch)))
-                .collect();
-            std::thread::scope(|s| {
-                let handles: Vec<_> = bounds
-                    .iter()
-                    .map(|&(r0, r1)| s.spawn(move || self.simulate_rows(x, x_scale, r0, r1)))
-                    .collect();
-                // Join in chunk (= row) order so the stats merge is
-                // deterministic for a given thread count (and exact vs the
-                // sequential walk while abs_err_sum stays below 2^53).
-                handles.into_iter().map(|h| h.join().expect("accsim worker panicked")).collect()
-            })
-        };
+        let chunks: Vec<Chunk> =
+            par_row_chunks(batch, threads, |r0, r1| self.simulate_rows(x, x_scale, r0, r1));
 
         // Stitch chunk outputs back into [batch, c_out] tensors per mode.
         let mut out_wide = Vec::with_capacity(batch * c_out);
@@ -395,6 +436,189 @@ pub fn qlinear_forward_multi(
     modes: &[AccMode],
 ) -> Vec<MatmulStats> {
     LayerPlan::new(w, modes).execute(x, x_scale)
+}
+
+/// Result of one network forward under one register model.
+#[derive(Clone, Debug)]
+pub struct NetworkStats {
+    /// Final-layer dequantized outputs `[batch, c_out_last]` with this
+    /// mode's activations propagated through every boundary.
+    pub out: Tensor,
+    /// Final-layer outputs under a wide last-layer register fed the same
+    /// propagated activations (the per-mode "local" reference, exactly what
+    /// composing [`super::matmul::qlinear_forward_ref`] produces).
+    pub out_wide: Tensor,
+    /// One [`OverflowStats`] per layer, in depth order.
+    pub layer_stats: Vec<OverflowStats>,
+}
+
+/// Per-worker results for one row chunk of a network forward.
+struct NetChunk {
+    /// Per-mode final-layer outputs, `rows_in_chunk * c_out_last` each.
+    out: Vec<Vec<f32>>,
+    /// Per-mode wide final-layer outputs.
+    out_wide: Vec<Vec<f32>>,
+    /// `[layer][mode]` overflow statistics for the chunk.
+    layer_stats: Vec<Vec<OverflowStats>>,
+}
+
+/// Bounds-aware execution plan for a whole [`QNetwork`]: the multi-layer
+/// generalization of [`LayerPlan`]. One batch pass simulates every requested
+/// register model through every layer, with inter-layer requantization
+/// (each boundary's [`crate::model::ActQuant`]) applied per mode so the
+/// next layer sees exactly the activations its register model produced.
+///
+/// Fusion across modes survives layer boundaries as long as the modes'
+/// activations remain byte-identical: all modes start fused at layer 0, and
+/// a mode only splits off into its own MAC traversal once its register has
+/// actually corrupted an activation somewhere in the chunk. Bit-exact
+/// against composing the scalar reference per mode
+/// ([`crate::model::network_forward_ref`]).
+pub struct NetworkPlan<'n> {
+    net: &'n QNetwork,
+    modes: Vec<AccMode>,
+    /// Per-layer per-channel `Σ|w_int|` norms driving the bound gate.
+    layer_l1: Vec<Vec<i128>>,
+}
+
+impl<'n> NetworkPlan<'n> {
+    pub fn new(net: &'n QNetwork, modes: &[AccMode]) -> NetworkPlan<'n> {
+        let layer_l1 = net
+            .layers
+            .iter()
+            .map(|l| l.weights.row_l1().into_iter().map(|v| v as i128).collect())
+            .collect();
+        NetworkPlan { net, modes: modes.to_vec(), layer_l1 }
+    }
+
+    pub fn modes(&self) -> &[AccMode] {
+        &self.modes
+    }
+
+    pub fn depth(&self) -> usize {
+        self.net.layers.len()
+    }
+
+    /// Stream rows `r0..r1` through every layer; the single-threaded core.
+    fn forward_chunk(&self, x: &IntMatrix, r0: usize, r1: usize) -> NetChunk {
+        let n_modes = self.modes.len();
+        let depth = self.net.layers.len();
+        let rows = r1 - r0;
+        let cols = x.cols();
+        let chunk = IntMatrix::from_flat(rows, cols, x.data()[r0 * cols..r1 * cols].to_vec());
+        // Mode groups: slots whose propagated activations are still
+        // byte-identical share one fused traversal per layer.
+        let mut groups: Vec<(Vec<usize>, IntMatrix)> = vec![((0..n_modes).collect(), chunk)];
+        let mut layer_stats = vec![vec![OverflowStats::default(); n_modes]; depth];
+        let mut out = vec![Vec::new(); n_modes];
+        let mut out_wide = vec![Vec::new(); n_modes];
+
+        for (li, layer) in self.net.layers.iter().enumerate() {
+            let last = li + 1 == depth;
+            let mut next: Vec<(Vec<usize>, IntMatrix)> = Vec::new();
+            for (slots, gx) in groups {
+                let gmodes: Vec<AccMode> = slots.iter().map(|&s| self.modes[s]).collect();
+                let plan = ModePlan::new(&gmodes);
+                let ch = simulate_chunk(
+                    &layer.weights,
+                    &self.layer_l1[li],
+                    &plan,
+                    &gx,
+                    layer.in_quant.scale,
+                    0,
+                    rows,
+                );
+                for (gi, &slot) in slots.iter().enumerate() {
+                    layer_stats[li][slot].merge(&ch.stats[gi]);
+                }
+                if last {
+                    for (gi, &slot) in slots.iter().enumerate() {
+                        out[slot] = ch.out[gi].clone();
+                        out_wide[slot] = ch.out_wide.clone();
+                    }
+                } else {
+                    // Requantize each mode's activations onto the next
+                    // boundary's grid, then regroup: modes whose register
+                    // models produced identical activations stay fused.
+                    let nq = &self.net.layers[li + 1].in_quant;
+                    for (gi, &slot) in slots.iter().enumerate() {
+                        let t = Tensor::new(vec![rows, layer.weights.c_out], ch.out[gi].clone());
+                        let q = nq.quantize(&t);
+                        match next.iter().position(|(_, m)| *m == q) {
+                            Some(g) => next[g].0.push(slot),
+                            None => next.push((vec![slot], q)),
+                        }
+                    }
+                }
+            }
+            groups = next;
+        }
+        NetChunk { out, out_wide, layer_stats }
+    }
+
+    /// Execute over a batch with an explicit worker count (tests pin thread
+    /// counts; [`Self::execute`] picks one from the network's MAC grid).
+    pub fn execute_threads(&self, x: &IntMatrix, threads: usize) -> Vec<NetworkStats> {
+        let batch = x.rows();
+        assert_eq!(
+            x.cols(),
+            self.net.input_dim(),
+            "input cols {} vs network input dim {}",
+            x.cols(),
+            self.net.input_dim()
+        );
+        let n_modes = self.modes.len();
+        let depth = self.net.layers.len();
+        let c_last = self.net.output_dim();
+
+        let chunks: Vec<NetChunk> =
+            par_row_chunks(batch, threads, |r0, r1| self.forward_chunk(x, r0, r1));
+
+        (0..n_modes)
+            .map(|mi| {
+                let mut data = Vec::with_capacity(batch * c_last);
+                let mut wide = Vec::with_capacity(batch * c_last);
+                let mut stats = vec![OverflowStats::default(); depth];
+                for ch in &chunks {
+                    data.extend_from_slice(&ch.out[mi]);
+                    wide.extend_from_slice(&ch.out_wide[mi]);
+                    for (li, s) in stats.iter_mut().enumerate() {
+                        s.merge(&ch.layer_stats[li][mi]);
+                    }
+                }
+                NetworkStats {
+                    out: Tensor::new(vec![batch, c_last], data),
+                    out_wide: Tensor::new(vec![batch, c_last], wide),
+                    layer_stats: stats,
+                }
+            })
+            .collect()
+    }
+
+    /// Execute over a batch, choosing the worker count from the whole
+    /// network's MAC grid (small networks run inline).
+    pub fn execute(&self, x: &IntMatrix) -> Vec<NetworkStats> {
+        self.execute_threads(x, worker_count(x.rows(), self.net.macs_per_row(), 1))
+    }
+}
+
+/// Forward one integer batch through a whole quantized network under *all*
+/// requested accumulator models, returning one [`NetworkStats`] per mode
+/// (same order). The network-level analogue of [`qlinear_forward_multi`]:
+///
+/// ```ignore
+/// let modes: Vec<_> = (8..=32).map(|p| AccMode::Wrap { p_bits: p }).collect();
+/// let per_mode = network_forward_multi(&net, &x_int, &modes);
+/// for (mode, r) in modes.iter().zip(&per_mode) {
+///     for (depth, s) in r.layer_stats.iter().enumerate() { /* per-layer rates */ }
+/// }
+/// ```
+pub fn network_forward_multi(
+    net: &QNetwork,
+    x: &IntMatrix,
+    modes: &[AccMode],
+) -> Vec<NetworkStats> {
+    NetworkPlan::new(net, modes).execute(x)
 }
 
 #[cfg(test)]
@@ -499,6 +723,85 @@ mod tests {
                 assert_eq!(multi[mi].stats.macs, r.stats.macs);
             }
         }
+    }
+
+    #[test]
+    fn network_plan_matches_composed_reference() {
+        use crate::model::{network_forward_ref, NetSpec, QNetwork};
+        // Unconstrained weights at low P: overflow actually happens, so
+        // per-mode activation streams genuinely diverge before the last
+        // layer and the group-splitting path is exercised.
+        let spec = NetSpec {
+            widths: vec![12, 9, 6, 4],
+            m_bits: 5,
+            n_bits: 4,
+            p_bits: 10,
+            x_signed: false,
+            constrained: false,
+        };
+        let mut net = QNetwork::synthesize(&spec, 21).unwrap();
+        let sample =
+            Tensor::new(vec![7, 12], (0..84).map(|i| ((i * 13) % 11) as f32 * 0.09).collect());
+        net.calibrate(&sample);
+        let x = net.layers[0].in_quant.quantize(&sample);
+
+        let modes: Vec<AccMode> = vec![
+            AccMode::Wide,
+            AccMode::Wrap { p_bits: 8 },
+            AccMode::Wrap { p_bits: 12 },
+            AccMode::Saturate { p_bits: 8 },
+            AccMode::SaturateFinal { p_bits: 8 },
+            AccMode::Wrap { p_bits: 8 }, // duplicate keeps its own slot
+        ];
+        let plan = NetworkPlan::new(&net, &modes);
+        for threads in [1, 2, 5] {
+            let multi = plan.execute_threads(&x, threads);
+            assert_eq!(multi.len(), modes.len());
+            for (mi, mode) in modes.iter().enumerate() {
+                let r = network_forward_ref(&net, &x, *mode);
+                assert_eq!(multi[mi].out.data(), r.out.data(), "{mode:?} t={threads}");
+                assert_eq!(multi[mi].out_wide.data(), r.out_wide.data(), "{mode:?}");
+                assert_eq!(multi[mi].layer_stats.len(), r.layer_stats.len());
+                for (li, (a, b)) in
+                    multi[mi].layer_stats.iter().zip(&r.layer_stats).enumerate()
+                {
+                    assert_eq!(a.overflow_events, b.overflow_events, "{mode:?} layer {li}");
+                    assert_eq!(a.dots_overflowed, b.dots_overflowed, "{mode:?} layer {li}");
+                    assert_eq!(a.abs_err_sum, b.abs_err_sum, "{mode:?} layer {li}");
+                    assert_eq!(a.dots, b.dots, "{mode:?} layer {li}");
+                    assert_eq!(a.macs, b.macs, "{mode:?} layer {li}");
+                }
+            }
+            // duplicate modes resolve to identical results
+            assert_eq!(multi[1].out.data(), multi[5].out.data());
+        }
+    }
+
+    #[test]
+    fn network_plan_a2q_net_never_splits_from_wide() {
+        use crate::model::{NetSpec, QNetwork};
+        let spec = NetSpec {
+            widths: vec![10, 8, 3],
+            m_bits: 4,
+            n_bits: 3,
+            p_bits: 12,
+            x_signed: false,
+            constrained: true,
+        };
+        let mut net = QNetwork::synthesize(&spec, 2).unwrap();
+        let sample =
+            Tensor::new(vec![4, 10], (0..40).map(|i| (i % 6) as f32 * 0.15).collect());
+        net.calibrate(&sample);
+        let x = net.layers[0].in_quant.quantize(&sample);
+        // At the A2Q target width the theorem holds per layer: zero overflow
+        // events anywhere, and the wrap output equals the wide output.
+        let modes = [AccMode::Wide, AccMode::Wrap { p_bits: 12 }];
+        let r = network_forward_multi(&net, &x, &modes);
+        for s in &r[1].layer_stats {
+            assert_eq!(s.overflow_events, 0);
+        }
+        assert_eq!(r[0].out.data(), r[1].out.data());
+        assert_eq!(r[1].out.data(), r[1].out_wide.data());
     }
 
     #[test]

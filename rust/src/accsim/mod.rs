@@ -21,8 +21,11 @@
 //! paper's `Σ|w| * max|x|` bound skip register simulation, and batches fan
 //! out over scoped threads. Batched inputs travel as a flat row-major
 //! [`IntMatrix`]. P-sweeps should call [`qlinear_forward_multi`] /
-//! [`dot_accumulate_multi`]; throughput history lives in EXPERIMENTS.md
-//! §Perf and BENCH_accsim.json.
+//! [`dot_accumulate_multi`]; whole-network sweeps go through
+//! [`NetworkPlan`] / [`network_forward_multi`], which stream a batch
+//! through every layer of a [`crate::model::QNetwork`] (with inter-layer
+//! requantization) in one thread-scoped pass. Throughput history lives in
+//! EXPERIMENTS.md §Perf and BENCH_accsim.json.
 
 pub mod dot;
 pub mod engine;
@@ -32,7 +35,10 @@ pub mod reorder;
 pub mod stats;
 
 pub use dot::{dot_accumulate, AccMode, DotResult};
-pub use engine::{dot_accumulate_multi, min_safe_p, qlinear_forward_multi, LayerPlan, ModePlan};
+pub use engine::{
+    dot_accumulate_multi, min_safe_p, network_forward_multi, qlinear_forward_multi, LayerPlan,
+    ModePlan, NetworkPlan, NetworkStats,
+};
 pub use intmat::IntMatrix;
 pub use matmul::{qlinear_forward, qlinear_forward_ref, quantize_inputs, MatmulStats};
 pub use reorder::{reorder_study, ReorderScratch, ReorderStudy};

@@ -22,6 +22,10 @@ pub struct RunConfig {
     pub n: u32,
     /// Target accumulator bits P for hidden layers.
     pub p: u32,
+    /// Whether the model's hidden-layer activations are signed integers
+    /// (drives the `1_signed(x)` term of every accumulator bound; the
+    /// standard zoo uses unsigned post-activation grids, hence false).
+    pub x_signed: bool,
     /// Optimizer steps.
     pub steps: u64,
     /// Dataset + init seed.
@@ -52,6 +56,7 @@ impl RunConfig {
             m,
             n,
             p,
+            x_signed: false,
             steps,
             seed: 0,
             lr: None,
@@ -100,6 +105,7 @@ impl RunConfig {
             ("m", Json::num(self.m as f64)),
             ("n", Json::num(self.n as f64)),
             ("p", Json::num(self.p as f64)),
+            ("x_signed", Json::Bool(self.x_signed)),
             ("steps", Json::num(self.steps as f64)),
             ("seed", Json::num(self.seed as f64)),
             (
@@ -125,6 +131,10 @@ impl RunConfig {
         );
         if let Some(s) = v.opt("seed") {
             cfg.seed = s.as_u64()?;
+        }
+        // Absent in pre-QNetwork records: defaults to the zoo's unsigned grids.
+        if let Some(s) = v.opt("x_signed") {
+            cfg.x_signed = s.as_bool()?;
         }
         if let Some(lr) = v.opt("lr") {
             cfg.lr = match lr {
@@ -309,6 +319,7 @@ mod tests {
         let mut c = RunConfig::new("espcn", "qat", 5, 5, 14, 50);
         c.lr = Some(2e-3);
         c.seed = 7;
+        c.x_signed = true;
         let back = RunConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back, c);
     }

@@ -7,7 +7,7 @@
 //! jobs in, streams [`RunRecord`]s out to the JSONL sink as they finish, and
 //! skips configs already completed on disk (resume).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 
 use anyhow::Result;
@@ -19,7 +19,7 @@ use super::sink::{MetricsSink, RunRecord};
 use super::trainer::Trainer;
 
 /// Expand a sweep against the manifests on disk (needs K* per model).
-pub fn expand_sweep(cfg: &SweepConfig, artifacts_dir: &PathBuf) -> Result<Vec<RunConfig>> {
+pub fn expand_sweep(cfg: &SweepConfig, artifacts_dir: &Path) -> Result<Vec<RunConfig>> {
     let mut runs = Vec::new();
     for model in &cfg.models {
         let manifest = ModelManifest::load(artifacts_dir, model)?;
@@ -105,7 +105,7 @@ pub fn run_sweep(
 }
 
 /// Synchronous single-run helper used by the CLI `train` command and tests.
-pub fn run_single(artifacts_dir: &PathBuf, rc: &RunConfig) -> Result<RunRecord> {
+pub fn run_single(artifacts_dir: &Path, rc: &RunConfig) -> Result<RunRecord> {
     let engine = Engine::new(artifacts_dir)?;
     let trainer = Trainer::new(&engine, rc)?;
     let outcome = trainer.run(rc)?;

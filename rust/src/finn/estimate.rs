@@ -118,7 +118,12 @@ pub fn select_p(
 ) -> u32 {
     let (m, n, p) = bits;
     let n_in = geom.n_spec.resolve(m, n, p);
-    let shape = DotShape { k: geom.k, m_bits: geom.m_spec.resolve(m, n, p), n_bits: n_in, x_signed: geom.x_signed };
+    let shape = DotShape {
+        k: geom.k,
+        m_bits: geom.m_spec.resolve(m, n, p),
+        n_bits: n_in,
+        x_signed: geom.x_signed,
+    };
     let dt = bounds::data_type_bound(shape).min(32);
     let wn = l1_norm
         .map(|l1| bounds::weight_bound(l1, n_in, geom.x_signed).min(32))
@@ -178,12 +183,31 @@ pub fn estimate_network(
             .get(i + 1)
             .map(|nx| nx.n_spec.resolve(m, n, p))
             .unwrap_or(8);
-        let lb = LayerBits { m: g.m_spec.resolve(m, n, p), n_in: g.n_spec.resolve(m, n, p), n_out, p: p_used };
+        let lb = LayerBits {
+            m: g.m_spec.resolve(m, n, p),
+            n_in: g.n_spec.resolve(m, n, p),
+            n_out,
+            p: p_used,
+        };
         let est = estimate_layer(g, lb, cycles_budget);
         total.add(est.luts);
         layers.push(est);
     }
     NetworkEstimate { layers, total }
+}
+
+/// Estimate a simulated [`crate::model::QNetwork`] directly: geometry, per
+/// layer bit widths and max per-channel integer l1 norms all come from the
+/// network itself ([`crate::model::QNetwork::geoms`]) instead of hand-built
+/// [`LayerGeom`] lists, so `a2q netsim` and the network figures price
+/// exactly the network they simulated.
+pub fn estimate_qnetwork(
+    net: &crate::model::QNetwork,
+    policy: AccumulatorPolicy,
+    cycles_budget: usize,
+) -> NetworkEstimate {
+    let l1 = net.layer_l1_norms();
+    estimate_network(&net.geoms(), net.grid_bits(), policy, Some(&l1), cycles_budget)
 }
 
 #[cfg(test)]
@@ -259,7 +283,8 @@ mod tests {
     fn a2q_target_only_touches_runtime_p_layers() {
         let net = toy_net();
         let l1 = vec![300.0, 900.0, 90.0];
-        let est = estimate_network(&net, (6, 6, 10), AccumulatorPolicy::A2qTarget(10), Some(&l1), 4096);
+        let est =
+            estimate_network(&net, (6, 6, 10), AccumulatorPolicy::A2qTarget(10), Some(&l1), 4096);
         assert_eq!(est.layers[1].p_used, 10); // hidden layer takes the target
         assert_ne!(est.layers[0].p_used, 10); // boundary layers use their bound
     }
@@ -269,9 +294,47 @@ mod tests {
         let net = toy_net();
         for p in [8u32, 12, 16, 24, 32] {
             let sel = select_p(&net[1], (8, 8, p), AccumulatorPolicy::A2qTarget(p), Some(1e9));
-            let dt = bounds::data_type_bound(DotShape { k: 288, m_bits: 8, n_bits: 8, x_signed: false });
+            let dt = bounds::data_type_bound(DotShape {
+                k: 288,
+                m_bits: 8,
+                n_bits: 8,
+                x_signed: false,
+            });
             assert!(sel <= dt.min(32));
         }
+    }
+
+    #[test]
+    fn qnetwork_estimates_keep_policy_ordering() {
+        use crate::model::{NetSpec, QNetwork};
+        // Unconstrained (QAT-like) weights: their l1 norms are large, so
+        // the policy ordering Fixed32 > DataType >= WeightNorm >= A2Q holds.
+        let spec = NetSpec {
+            widths: vec![64, 32, 10],
+            m_bits: 5,
+            n_bits: 4,
+            p_bits: 12,
+            x_signed: false,
+            constrained: false,
+        };
+        let net = QNetwork::synthesize(&spec, 13).unwrap();
+        let f32_ = estimate_qnetwork(&net, AccumulatorPolicy::Fixed32, 4096);
+        let dt = estimate_qnetwork(&net, AccumulatorPolicy::DataTypeBound, 4096);
+        let wn = estimate_qnetwork(&net, AccumulatorPolicy::WeightNorm, 4096);
+        let a2q = estimate_qnetwork(&net, AccumulatorPolicy::A2qTarget(12), 4096);
+        assert_eq!(f32_.layers.len(), 2);
+        assert!(f32_.total_luts() > dt.total_luts());
+        assert!(dt.total_luts() >= wn.total_luts());
+        assert!(wn.total_luts() >= a2q.total_luts());
+        // every synthesized layer carries runtime P, so the target applies
+        assert!(a2q.layers.iter().all(|l| l.p_used <= 12));
+
+        // An A2Q-*constrained* net's trained weight norms certify its target
+        // (or tighter): the weight-norm estimate never exceeds the target's.
+        let trained = QNetwork::synthesize(&NetSpec { constrained: true, ..spec }, 13).unwrap();
+        let wn_t = estimate_qnetwork(&trained, AccumulatorPolicy::WeightNorm, 4096);
+        let a2q_t = estimate_qnetwork(&trained, AccumulatorPolicy::A2qTarget(12), 4096);
+        assert!(wn_t.total_luts() <= a2q_t.total_luts());
     }
 
     #[test]

@@ -25,5 +25,7 @@ pub mod estimate;
 pub mod mvau;
 pub mod thresholds;
 
-pub use estimate::{estimate_network, AccumulatorPolicy, LayerBits, LayerGeom, NetworkEstimate};
+pub use estimate::{
+    estimate_network, estimate_qnetwork, AccumulatorPolicy, LayerBits, LayerGeom, NetworkEstimate,
+};
 pub use mvau::{fold, LutBreakdown, MvauConfig};

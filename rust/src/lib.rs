@@ -12,8 +12,9 @@
 //! * **L3 (this crate, run time)** — everything else: the PJRT [`runtime`]
 //!   that executes the artifacts, the [`coordinator`] that runs training
 //!   loops and the (M, N, P) grid search, and the substrates the paper's
-//!   evaluation needs: exact integer accumulation simulation ([`accsim`]),
-//!   accumulator bit-width bounds ([`quant`]), synthetic datasets
+//!   evaluation needs: exact integer accumulation simulation ([`accsim`],
+//!   single layers and whole [`model::QNetwork`] stacks with inter-layer
+//!   requantization), accumulator bit-width bounds ([`quant`]), synthetic datasets
 //!   ([`datasets`]), a FINN-style FPGA LUT cost model ([`finn`]), Pareto
 //!   frontiers ([`pareto`]), task metrics ([`metrics`]) and per-figure report
 //!   generation ([`report`]).
@@ -36,6 +37,7 @@ pub mod datasets;
 pub mod finn;
 pub mod json;
 pub mod metrics;
+pub mod model;
 pub mod pareto;
 pub mod perf;
 pub mod quant;

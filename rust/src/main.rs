@@ -6,7 +6,7 @@
 //! (`make artifacts`) through PJRT.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
@@ -41,6 +41,11 @@ COMMANDS:
   bounds     --k 784 --m 8 --n 1 [--signed] [--l1 NORM]
   accsim     --k 784 --p 16 --m 8 --n 1 --seed 0 [--psweep 8:32]
              (all register models simulated in one fused MAC traversal)
+  netsim     --layers 784,64,16,2 --m 4 --n 4 --p 16 [--psweep 8:20]
+             [--samples 256] [--seed 0] [--threads T] [--unconstrained]
+             [--dataset synth_mnist]
+             (whole QNetwork under every width in one threaded pass: per-layer
+              overflow/sparsity, fig2/fig3 network CSVs, FINN LUT estimate)
   models     (list models available in the artifacts dir)
 ";
 
@@ -50,7 +55,7 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(raw, &["signed", "float-ref"])?;
+    let args = Args::parse(raw, &["signed", "float-ref", "unconstrained"])?;
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let results = PathBuf::from(args.str_or("results", "results"));
     let cmd = args
@@ -66,13 +71,14 @@ fn main() -> Result<()> {
         "estimate" => cmd_estimate(&args, &artifacts),
         "bounds" => cmd_bounds(&args),
         "accsim" => cmd_accsim(&args),
+        "netsim" => cmd_netsim(&args, &results),
         "models" => cmd_models(&artifacts),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
     }
 }
 
 #[cfg(feature = "xla")]
-fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     use a2q::config::RunConfig;
     use a2q::coordinator::sweep::run_single;
 
@@ -106,12 +112,12 @@ fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn cmd_train(_args: &Args, _artifacts: &PathBuf) -> Result<()> {
+fn cmd_train(_args: &Args, _artifacts: &Path) -> Result<()> {
     anyhow::bail!("train: {NO_XLA}")
 }
 
 #[cfg(feature = "xla")]
-fn cmd_sweep(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()> {
+fn cmd_sweep(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
     use a2q::config::SweepConfig;
     use a2q::coordinator::run_sweep;
 
@@ -139,17 +145,17 @@ fn cmd_sweep(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()> 
         cfg.algs.push("float".into());
     }
     let sink_path = results.join(args.str_or("sink", "runs.jsonl"));
-    let records = run_sweep(cfg, artifacts.clone(), sink_path, true)?;
+    let records = run_sweep(cfg, artifacts.to_path_buf(), sink_path, true)?;
     println!("[sweep] {} total records", records.len());
     Ok(())
 }
 
 #[cfg(not(feature = "xla"))]
-fn cmd_sweep(_args: &Args, _artifacts: &PathBuf, _results: &PathBuf) -> Result<()> {
+fn cmd_sweep(_args: &Args, _artifacts: &Path, _results: &Path) -> Result<()> {
     anyhow::bail!("sweep: {NO_XLA}")
 }
 
-fn cmd_figure(args: &Args, artifacts: &PathBuf, results: &PathBuf) -> Result<()> {
+fn cmd_figure(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
     args.check_known(&["artifacts", "results", "sink", "steps", "seed"])?;
     let id = args
         .positional
@@ -255,7 +261,7 @@ fn skip_or_bail(id: &str, fig: &str) -> Result<()> {
     }
 }
 
-fn cmd_estimate(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn cmd_estimate(args: &Args, artifacts: &Path) -> Result<()> {
     args.check_known(&["artifacts", "results", "model", "m", "n", "p"])?;
     let model = args.str_or("model", "cnn");
     let (m, n, p) = (
@@ -337,7 +343,133 @@ fn cmd_accsim(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_models(artifacts: &PathBuf) -> Result<()> {
+/// End-to-end multi-layer simulation in the default (no-XLA) build: a
+/// synthesized + calibrated [`a2q::model::QNetwork`] forwarded under every
+/// requested accumulator width in one fused threaded pass
+/// ([`a2q::accsim::NetworkPlan`]), with per-layer overflow/sparsity tables,
+/// the fig2/fig3 network CSVs, and a FINN LUT estimate fed directly from
+/// the network.
+fn cmd_netsim(args: &Args, results: &Path) -> Result<()> {
+    use a2q::datasets::Split;
+    use a2q::finn::estimate_qnetwork;
+    use a2q::model::{NetSpec, QNetwork};
+    use a2q::Tensor;
+
+    args.check_known(&[
+        "artifacts", "results", "layers", "m", "n", "p", "psweep", "samples", "seed", "threads",
+        "unconstrained", "dataset",
+    ])?;
+    let widths: Vec<usize> = args.list_or("layers", "784,64,16,2")?;
+    let m = args.num_or("m", 4u32)?;
+    let n = args.num_or("n", 4u32)?;
+    let p = args.num_or("p", 16u32)?;
+    let samples = args.num_or("samples", 256usize)?.max(1);
+    let seed = args.num_or("seed", 0u64)?;
+    let constrained = !args.bool_or("unconstrained", false)?;
+    let spec =
+        NetSpec { widths, m_bits: m, n_bits: n, p_bits: p, x_signed: false, constrained };
+    let mut net = QNetwork::synthesize(&spec, seed)?;
+
+    // Calibration + eval inputs: the synthetic dataset's test split when the
+    // network's input width matches its sample size, uniform noise otherwise.
+    let ds_name = args.str_or("dataset", "synth_mnist");
+    let ds = datasets::by_name(&ds_name, 64, samples, seed)?;
+    let xd: usize = ds.x_shape.iter().product();
+    let (x_float, labels) = if xd == net.input_dim() {
+        let n_eval = samples.min(ds.len(Split::Test));
+        let idx: Vec<usize> = (0..n_eval).collect();
+        let b = ds.gather(Split::Test, &idx);
+        (b.x, Some(b.y.data().to_vec()))
+    } else {
+        println!(
+            "[netsim] {ds_name} samples are {xd}-dim, network wants {}: using uniform noise",
+            net.input_dim()
+        );
+        let mut rng = Rng::new(seed ^ 0x6E75);
+        let dim = net.input_dim();
+        let data: Vec<f32> = (0..samples * dim).map(|_| rng.uniform() as f32).collect();
+        (Tensor::new(vec![samples, dim], data), None)
+    };
+    net.calibrate(&x_float);
+    let x_int = net.layers[0].in_quant.quantize(&x_float);
+
+    let (lo, hi) = match args.opt_str("psweep") {
+        Some(s) => {
+            let (lo, hi) = s
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--psweep expects LO:HI, got {s:?}"))?;
+            (lo.trim().parse::<u32>()?, hi.trim().parse::<u32>()?)
+        }
+        // Default: a window around the target (registers from 2 to 63 bits
+        // are simulable, so every valid target yields a range containing it).
+        None => (p.saturating_sub(6).max(2), (p + 2).min(63)),
+    };
+    anyhow::ensure!((2..=63).contains(&lo) && lo <= hi && hi <= 63, "psweep range {lo}:{hi}");
+    let p_values: Vec<u32> = (lo..=hi).collect();
+    let threads = args.opt_str("threads").map(|t| t.parse::<usize>()).transpose()?;
+
+    let rep = report::fig2::run_network(&net, &x_int, labels.as_deref(), &p_values, threads);
+    report::fig2::emit_network(&rep, results)?;
+    let bounds_rows = report::fig3::run_network(&net);
+    report::fig3::emit_network(&bounds_rows, results)?;
+
+    println!(
+        "[netsim] {} layers {:?}, M={m} N={n} target P={p}, {} samples, {} modes{}",
+        net.depth(),
+        spec.widths,
+        x_int.rows(),
+        1 + 2 * p_values.len(),
+        if constrained { " (A2Q-constrained)" } else { " (unconstrained QAT)" },
+    );
+    for r in &bounds_rows {
+        println!(
+            "  {:<8} K={:<5} ||w||1={:<9.0} sparsity={:.3} dt-bound P>={:<2} wn-bound P>={:<2}",
+            r.name, r.k, r.l1_max, r.sparsity, r.data_type_bound, r.weight_bound
+        );
+    }
+    if let Some(aw) = rep.acc_wide {
+        println!("  wide-register accuracy: {aw:.4}");
+    }
+    println!("  per-layer wraparound overflow rate by P:");
+    for &pb in &p_values {
+        let per_layer: Vec<String> = rep
+            .rows
+            .iter()
+            .filter(|r| r.p_bits == pb)
+            .map(|r| format!("L{}={:.4}", r.layer, r.overflow_rate_wrap))
+            .collect();
+        let acc = rep
+            .rows
+            .iter()
+            .find(|r| r.p_bits == pb)
+            .and_then(|r| r.acc_wrap)
+            .map(|a| format!(" acc={a:.4}"))
+            .unwrap_or_default();
+        println!("    P={pb:<2} {}{acc}", per_layer.join(" "));
+    }
+    println!("  wrote {}/fig2_network.csv and fig3_network.csv", results.display());
+
+    println!("  FINN LUT estimate (cycles budget {DEFAULT_CYCLES_BUDGET}):");
+    println!("  {:<10} {:>12} {:>12} {:>12}", "policy", "compute", "memory", "total");
+    for (name, policy) in [
+        ("fixed32", AccumulatorPolicy::Fixed32),
+        ("datatype", AccumulatorPolicy::DataTypeBound),
+        ("weightnorm", AccumulatorPolicy::WeightNorm),
+        ("a2q", AccumulatorPolicy::A2qTarget(p)),
+    ] {
+        let est = estimate_qnetwork(&net, policy, DEFAULT_CYCLES_BUDGET);
+        println!(
+            "  {:<10} {:>12.0} {:>12.0} {:>12.0}",
+            name,
+            est.total.compute,
+            est.total.memory,
+            est.total_luts()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_models(artifacts: &Path) -> Result<()> {
     for m in discover_models(artifacts)? {
         let manifest = ModelManifest::load(artifacts, &m)?;
         println!(

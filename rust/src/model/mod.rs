@@ -1,0 +1,36 @@
+//! Multi-layer quantized network abstraction: the model-level substrate the
+//! network-scale experiments run on.
+//!
+//! Every headline result of the paper is *network*-level — accuracy,
+//! sparsity and FPGA resources are reported for whole MLPs/CNNs/ResNets —
+//! and accumulator constraints compound across layers through the
+//! inter-layer requantization step (De Bruin et al., "Quantization of DNNs
+//! for Accumulator-constrained Processors"). This module supplies the
+//! missing abstraction:
+//!
+//! * [`ActQuant`] — one activation-boundary quantizer (N bits, signedness,
+//!   scale): the `x_signed` / `n_bits` contract every layer's input obeys.
+//! * [`QLayer`] — a quantized dense layer: integer weights
+//!   ([`crate::quant::QTensor`]) plus the quantizer its inputs arrive on.
+//! * [`QNetwork`] — a stack of chained [`QLayer`]s, built either from
+//!   exported runtime artifacts ([`QNetwork::new`] over `to_qtensor()`
+//!   triples) or synthesized directly via
+//!   [`crate::quant::a2q::a2q_quantize_row`] ([`QNetwork::synthesize`]) and
+//!   calibrated over the synthetic datasets ([`QNetwork::calibrate`]).
+//! * [`network_forward_ref`] — the *reference semantics* of a network
+//!   forward pass: the scalar per-layer walk
+//!   ([`crate::accsim::qlinear_forward_ref`]) composed layer by layer with
+//!   explicit requantization. The fused engine
+//!   ([`crate::accsim::NetworkPlan`]) is property-tested bit-identical to
+//!   this composition.
+//!
+//! The requantization contract between layers `l` and `l+1`:
+//! dequantize layer `l`'s accumulator (`acc * s_w[c] * s_x + bias[c]`),
+//! rescale onto layer `l+1`'s activation grid (`/ scale`), round to nearest,
+//! then clamp into the N-bit signed/unsigned integer range — so the next
+//! layer's `x_signed` / `n_bits` contract is enforced at the boundary no
+//! matter what the register model upstream produced.
+
+pub mod qnetwork;
+
+pub use qnetwork::{network_forward_ref, ActQuant, NetSpec, QLayer, QNetwork};

@@ -1,0 +1,394 @@
+//! `QNetwork`: stacked A2Q-quantized dense layers with explicit inter-layer
+//! requantization, plus the scalar reference forward the fused
+//! [`crate::accsim::NetworkPlan`] is property-tested against.
+
+use anyhow::Result;
+
+use crate::accsim::{
+    qlinear_forward, qlinear_forward_ref, quantize_inputs, AccMode, IntMatrix, NetworkStats,
+};
+use crate::finn::estimate::{BitSpec, LayerGeom};
+use crate::quant::a2q::a2q_quantize_row;
+use crate::quant::QTensor;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// One activation-boundary quantizer: the integer grid a layer's inputs
+/// arrive on. `quantize` is the requantization step of the inter-layer
+/// contract: rescale -> round -> clamp to the N-bit (un)signed range.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActQuant {
+    /// Activation bit width N.
+    pub n_bits: u32,
+    /// Whether the grid is signed (hidden boundaries) or unsigned (e.g.
+    /// binary/image inputs).
+    pub signed: bool,
+    /// Grid step: float value = code * scale.
+    pub scale: f32,
+}
+
+impl ActQuant {
+    pub fn new(n_bits: u32, signed: bool, scale: f32) -> ActQuant {
+        assert!((1..=32).contains(&n_bits), "activation bits {n_bits} outside 1..=32");
+        assert!(scale > 0.0, "activation scale must be positive, got {scale}");
+        ActQuant { n_bits, signed, scale }
+    }
+
+    /// Representable code range: `[-2^(N-1), 2^(N-1)-1]` signed,
+    /// `[0, 2^N - 1]` unsigned.
+    pub fn int_range(&self) -> (i64, i64) {
+        if self.signed {
+            (-(1i64 << (self.n_bits - 1)), (1i64 << (self.n_bits - 1)) - 1)
+        } else {
+            (0, (1i64 << self.n_bits) - 1)
+        }
+    }
+
+    /// Quantize a float batch `[batch, k]` onto this grid (the standard
+    /// activation quantizer, zero-point 0): rescale, round to nearest, clamp
+    /// into the integer range — shared by the fused network engine and the
+    /// scalar reference so requantization is bit-identical in both.
+    pub fn quantize(&self, x: &Tensor) -> IntMatrix {
+        quantize_inputs(x, self.scale, self.n_bits, self.signed)
+    }
+}
+
+/// A quantized dense layer: integer weights plus the quantizer its inputs
+/// obey, and the bit-width metadata the bounds/FINN substrates consume.
+#[derive(Clone, Debug)]
+pub struct QLayer {
+    pub name: String,
+    /// Integer weight codes with per-channel scales and float biases.
+    pub weights: QTensor,
+    /// The grid this layer's *inputs* arrive on.
+    pub in_quant: ActQuant,
+    /// Weight bit width M the codes were quantized to.
+    pub m_bits: u32,
+    /// Target accumulator width P the layer was trained/synthesized for.
+    pub p_bits: u32,
+}
+
+/// Shape and bit-width specification for [`QNetwork::synthesize`].
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    /// Layer widths including the input: `[k_in, h_1, ..., c_out]`.
+    pub widths: Vec<usize>,
+    /// Weight bits M.
+    pub m_bits: u32,
+    /// Activation bits N (all boundaries).
+    pub n_bits: u32,
+    /// Target accumulator width P.
+    pub p_bits: u32,
+    /// Whether the *network input* grid is signed (hidden boundaries are
+    /// always signed: pre-activations carry both signs).
+    pub x_signed: bool,
+    /// `true`: weights via [`a2q_quantize_row`], so every channel satisfies
+    /// the Eq. 15 cap and P-bit accumulation is overflow-free by
+    /// construction. `false`: plain per-channel affine quantization with no
+    /// accumulator cap — the baseline-QAT regime where narrow registers
+    /// actually overflow.
+    pub constrained: bool,
+}
+
+/// A stack of chained quantized layers: layer `i+1`'s input dimension is
+/// layer `i`'s output channel count, and its [`ActQuant`] defines the
+/// requantization applied between them.
+#[derive(Clone, Debug)]
+pub struct QNetwork {
+    pub name: String,
+    pub layers: Vec<QLayer>,
+}
+
+impl QNetwork {
+    /// Assemble from explicit layers (e.g. export-artifact `to_qtensor()`
+    /// triples), validating the chain.
+    pub fn new(name: impl Into<String>, layers: Vec<QLayer>) -> Result<QNetwork> {
+        anyhow::ensure!(!layers.is_empty(), "QNetwork needs at least one layer");
+        for i in 1..layers.len() {
+            anyhow::ensure!(
+                layers[i].weights.k == layers[i - 1].weights.c_out,
+                "layer {} ({}) input dim {} does not chain to previous c_out {}",
+                i,
+                layers[i].name,
+                layers[i].weights.k,
+                layers[i - 1].weights.c_out
+            );
+        }
+        Ok(QNetwork { name: name.into(), layers })
+    }
+
+    /// Synthesize a network directly from the A2Q weight quantizer: each
+    /// channel is a Gaussian direction vector pushed through
+    /// [`a2q_quantize_row`] (constrained) or a plain affine quantizer
+    /// (unconstrained). Activation scales start at 1.0 — run
+    /// [`Self::calibrate`] over a sample batch before simulating.
+    pub fn synthesize(spec: &NetSpec, seed: u64) -> Result<QNetwork> {
+        anyhow::ensure!(spec.widths.len() >= 2, "NetSpec needs >= 2 widths (input + 1 layer)");
+        anyhow::ensure!(spec.widths.iter().all(|w| *w > 0), "zero width in {:?}", spec.widths);
+        anyhow::ensure!((2..=8).contains(&spec.m_bits), "M={} outside 2..=8", spec.m_bits);
+        anyhow::ensure!((1..=8).contains(&spec.n_bits), "N={} outside 1..=8", spec.n_bits);
+        anyhow::ensure!((2..=48).contains(&spec.p_bits), "P={} outside 2..=48", spec.p_bits);
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(spec.widths.len() - 1);
+        for li in 0..spec.widths.len() - 1 {
+            let (k, c_out) = (spec.widths[li], spec.widths[li + 1]);
+            let in_signed = if li == 0 { spec.x_signed } else { true };
+            let in_quant = ActQuant::new(spec.n_bits, in_signed, 1.0);
+            let mut codes = Vec::with_capacity(c_out * k);
+            let mut scales = Vec::with_capacity(c_out);
+            for _ in 0..c_out {
+                let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+                if spec.constrained {
+                    // Cap target far above the Eq. 23 ceiling so the
+                    // accumulator constraint (not t) binds.
+                    let (w_int, s) = a2q_quantize_row(
+                        &v,
+                        -6.0,
+                        30.0,
+                        spec.m_bits,
+                        spec.n_bits,
+                        spec.p_bits,
+                        in_signed,
+                    );
+                    codes.extend(w_int.iter().map(|w| *w as i64));
+                    scales.push(s);
+                } else {
+                    let hi = (2f32.powi(spec.m_bits as i32 - 1) - 1.0).max(1.0);
+                    let vmax = v.iter().fold(0f32, |a, x| a.max(x.abs())).max(1e-6);
+                    let s = vmax / hi;
+                    codes.extend(v.iter().map(|x| (x / s).round().clamp(-hi - 1.0, hi) as i64));
+                    scales.push(s);
+                }
+            }
+            layers.push(QLayer {
+                name: format!("dense{li}"),
+                weights: QTensor { codes, scales, bias: vec![0.0; c_out], c_out, k },
+                in_quant,
+                m_bits: spec.m_bits,
+                p_bits: spec.p_bits,
+            });
+        }
+        QNetwork::new("qnet", layers)
+    }
+
+    /// Set every boundary's activation scale from a wide-register forward
+    /// over a float sample batch `[batch, input_dim]`, so requantized
+    /// activations span their N-bit grids instead of clamping degenerately.
+    /// Deterministic: same sample, same scales.
+    pub fn calibrate(&mut self, sample: &Tensor) {
+        assert_eq!(sample.cols(), self.input_dim(), "calibration batch width");
+        let absmax = |d: &[f32]| d.iter().fold(0f32, |a, v| a.max(v.abs()));
+        let grid_hi = |q: &ActQuant| q.int_range().1.max(1) as f32;
+        let m0 = absmax(sample.data());
+        self.layers[0].in_quant.scale =
+            if m0 > 0.0 { m0 / grid_hi(&self.layers[0].in_quant) } else { 1.0 };
+        let mut x = self.layers[0].in_quant.quantize(sample);
+        for li in 0..self.layers.len() - 1 {
+            let out = {
+                let layer = &self.layers[li];
+                qlinear_forward(&x, layer.in_quant.scale, &layer.weights, AccMode::Wide).out
+            };
+            let m = absmax(out.data());
+            self.layers[li + 1].in_quant.scale =
+                if m > 0.0 { m / grid_hi(&self.layers[li + 1].in_quant) } else { 1.0 };
+            x = self.layers[li + 1].in_quant.quantize(&out);
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Input dimension of the first layer.
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].weights.k
+    }
+
+    /// Output channel count of the last layer.
+    pub fn output_dim(&self) -> usize {
+        self.layers[self.layers.len() - 1].weights.c_out
+    }
+
+    /// Total MACs one batch row costs across all layers (sizing heuristic
+    /// for the engine's worker count).
+    pub fn macs_per_row(&self) -> usize {
+        self.layers.iter().map(|l| l.weights.c_out.saturating_mul(l.weights.k)).sum()
+    }
+
+    /// Per-layer max per-channel integer-weight l1 norms (the weight-norm
+    /// bound inputs, Eq. 13).
+    pub fn layer_l1_norms(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.weights.max_l1() as f64).collect()
+    }
+
+    /// Per-layer unstructured weight sparsity (paper §5.2.1).
+    pub fn layer_sparsity(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.weights.sparsity()).collect()
+    }
+
+    /// FINN-estimator geometry: one dense MVAU per layer with the layer's
+    /// actual M/N widths fixed and the accumulator exposed as the runtime P
+    /// variable, so [`crate::finn::estimate_network`] consumes a simulated
+    /// network exactly like a manifest-backed one.
+    pub fn geoms(&self) -> Vec<LayerGeom> {
+        self.layers
+            .iter()
+            .map(|l| LayerGeom {
+                name: l.name.clone(),
+                kind: "dense".into(),
+                c_out: l.weights.c_out,
+                k: l.weights.k,
+                m_spec: BitSpec::Fixed(l.m_bits),
+                n_spec: BitSpec::Fixed(l.in_quant.n_bits),
+                p_spec: BitSpec::P,
+                x_signed: l.in_quant.signed,
+                out_h: 1,
+                out_w: 1,
+                kh: 1,
+                c_in: l.weights.k,
+                stride: 1,
+            })
+            .collect()
+    }
+
+    /// `(M, N, P)` grid point for [`crate::finn::estimate_qnetwork`]: the
+    /// geometry fixes M/N per layer, so only P (the largest layer target)
+    /// is ever consulted.
+    pub fn grid_bits(&self) -> (u32, u32, u32) {
+        let p = self.layers.iter().map(|l| l.p_bits).max().unwrap_or(32);
+        (self.layers[0].m_bits, self.layers[0].in_quant.n_bits, p)
+    }
+}
+
+/// Reference semantics of a network forward under one register model: the
+/// scalar per-layer walk composed layer by layer, requantizing through each
+/// boundary's [`ActQuant`]. One full MAC traversal per layer per call — the
+/// ground truth [`crate::accsim::NetworkPlan`] is property-tested against,
+/// and the baseline the `network_forward` bench measures speedups from.
+pub fn network_forward_ref(net: &QNetwork, x: &IntMatrix, mode: AccMode) -> NetworkStats {
+    let depth = net.depth();
+    let mut layer_stats = Vec::with_capacity(depth);
+    let mut cur = x.clone();
+    let mut last = None;
+    for (li, layer) in net.layers.iter().enumerate() {
+        let r = qlinear_forward_ref(&cur, layer.in_quant.scale, &layer.weights, mode);
+        layer_stats.push(r.stats.clone());
+        if li + 1 < depth {
+            cur = net.layers[li + 1].in_quant.quantize(&r.out);
+        }
+        last = Some(r);
+    }
+    let last = last.expect("QNetwork::new guarantees >= 1 layer");
+    NetworkStats { out: last.out, out_wide: last.out_wide, layer_stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::a2q::row_satisfies_cap;
+
+    fn spec(widths: Vec<usize>, constrained: bool) -> NetSpec {
+        NetSpec { widths, m_bits: 4, n_bits: 3, p_bits: 12, x_signed: false, constrained }
+    }
+
+    #[test]
+    fn synthesize_chains_and_caps() {
+        let net = QNetwork::synthesize(&spec(vec![12, 8, 5], true), 3).unwrap();
+        assert_eq!(net.depth(), 2);
+        assert_eq!(net.input_dim(), 12);
+        assert_eq!(net.output_dim(), 5);
+        assert_eq!(net.macs_per_row(), 12 * 8 + 8 * 5);
+        // every synthesized channel satisfies the Eq. 15 cap
+        for layer in &net.layers {
+            for c in 0..layer.weights.c_out {
+                let row: Vec<f32> = layer.weights.row(c).iter().map(|w| *w as f32).collect();
+                let ok = row_satisfies_cap(&row, 12, 3, layer.in_quant.signed);
+                assert!(ok, "{}/{c} violates the cap", layer.name);
+            }
+        }
+        // hidden boundary is signed, input unsigned
+        assert!(!net.layers[0].in_quant.signed);
+        assert!(net.layers[1].in_quant.signed);
+    }
+
+    #[test]
+    fn unconstrained_uses_full_code_range() {
+        let net = QNetwork::synthesize(&spec(vec![64, 16], false), 1).unwrap();
+        // affine quantization to 4 bits hits the +/-7 rails
+        assert_eq!(net.layers[0].weights.max_abs_code(), 7);
+    }
+
+    #[test]
+    fn chain_mismatch_rejected() {
+        let a = QNetwork::synthesize(&spec(vec![6, 4], true), 0).unwrap();
+        let b = QNetwork::synthesize(&spec(vec![5, 3], true), 0).unwrap();
+        let err = QNetwork::new("bad", vec![a.layers[0].clone(), b.layers[0].clone()]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn calibrate_sets_positive_scales_and_fills_grid() {
+        let mut net = QNetwork::synthesize(&spec(vec![10, 7, 4], true), 9).unwrap();
+        let sample = Tensor::new(vec![3, 10], (0..30).map(|i| (i % 5) as f32 * 0.2).collect());
+        net.calibrate(&sample);
+        for layer in &net.layers {
+            assert!(layer.in_quant.scale > 0.0);
+        }
+        // the input grid now spans the sample: max value maps to the top code
+        let x = net.layers[0].in_quant.quantize(&sample);
+        let (_, hi) = net.layers[0].in_quant.int_range();
+        assert_eq!(x.abs_max(), hi);
+    }
+
+    #[test]
+    fn act_quant_clamps_and_resigns() {
+        let q = ActQuant::new(3, true, 0.5);
+        assert_eq!(q.int_range(), (-4, 3));
+        let x = Tensor::new(vec![1, 4], vec![10.0, -10.0, 0.6, -0.24]);
+        let m = q.quantize(&x);
+        assert_eq!(m.row(0), &[3, -4, 1, 0]);
+        let u = ActQuant::new(2, false, 1.0);
+        assert_eq!(u.int_range(), (0, 3));
+        assert_eq!(u.quantize(&x).row(0), &[3, 0, 1, 0]);
+    }
+
+    #[test]
+    fn geoms_expose_runtime_p_and_chain() {
+        let net = QNetwork::synthesize(&spec(vec![12, 8, 5], true), 3).unwrap();
+        let geoms = net.geoms();
+        assert_eq!(geoms.len(), 2);
+        assert!(geoms.iter().all(|g| g.p_spec == BitSpec::P && g.kind == "dense"));
+        assert_eq!(geoms[1].k, 8);
+        assert_eq!(net.grid_bits(), (4, 3, 12));
+        assert_eq!(net.layer_l1_norms().len(), 2);
+    }
+
+    #[test]
+    fn reference_forward_propagates_and_records_stats() {
+        let mut net = QNetwork::synthesize(&spec(vec![9, 6, 3], true), 5).unwrap();
+        let sample = Tensor::new(vec![4, 9], (0..36).map(|i| (i % 7) as f32 * 0.1).collect());
+        net.calibrate(&sample);
+        let x = net.layers[0].in_quant.quantize(&sample);
+        let r = network_forward_ref(&net, &x, AccMode::Wide);
+        assert_eq!(r.out.shape(), &[4, 3]);
+        assert_eq!(r.layer_stats.len(), 2);
+        assert_eq!(r.layer_stats[0].dots, 4 * 6);
+        assert_eq!(r.layer_stats[1].dots, 4 * 3);
+        // wide register never overflows and equals the reference output
+        assert_eq!(r.out.data(), r.out_wide.data());
+        assert_eq!(r.layer_stats.iter().map(|s| s.overflow_events).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn constrained_network_is_overflow_free_at_target_p() {
+        let mut net = QNetwork::synthesize(&spec(vec![16, 10, 4], true), 11).unwrap();
+        let sample = Tensor::new(vec![5, 16], (0..80).map(|i| (i % 9) as f32 * 0.11).collect());
+        net.calibrate(&sample);
+        let x = net.layers[0].in_quant.quantize(&sample);
+        let r = network_forward_ref(&net, &x, AccMode::Wrap { p_bits: 12 });
+        for (li, s) in r.layer_stats.iter().enumerate() {
+            assert_eq!(s.overflow_events, 0, "layer {li} overflowed at the A2Q target");
+        }
+        assert_eq!(r.out.data(), r.out_wide.data());
+    }
+}

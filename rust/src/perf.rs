@@ -143,6 +143,14 @@ pub const PERF_END: &str = "<!-- PERF:END -->";
 /// Markers of the smoke block (`cargo test`, debug profile).
 pub const SMOKE_BEGIN: &str = "<!-- PERF-SMOKE:BEGIN (auto-recorded; do not edit by hand) -->";
 pub const SMOKE_END: &str = "<!-- PERF-SMOKE:END -->";
+/// Markers of the network-forward release block (`cargo bench --bench
+/// network_forward`).
+pub const NET_BEGIN: &str = "<!-- PERF-NET:BEGIN (auto-recorded; do not edit by hand) -->";
+pub const NET_END: &str = "<!-- PERF-NET:END -->";
+/// Markers of the network-forward smoke block (`cargo test`, debug profile).
+pub const NET_SMOKE_BEGIN: &str =
+    "<!-- PERF-NET-SMOKE:BEGIN (auto-recorded; do not edit by hand) -->";
+pub const NET_SMOKE_END: &str = "<!-- PERF-NET-SMOKE:END -->";
 
 /// Replace whatever sits between `begin` and `end` markers in EXPERIMENTS.md
 /// with `block`. Returns false (and leaves the file alone) when the file or
@@ -202,6 +210,16 @@ pub fn update_experiments_block(block: &str) -> Result<bool> {
 /// Replace the smoke (cargo test) block of EXPERIMENTS.md §Perf.
 pub fn update_experiments_smoke_block(block: &str) -> Result<bool> {
     update_marked_block(SMOKE_BEGIN, SMOKE_END, block)
+}
+
+/// Replace the network-forward release block of EXPERIMENTS.md §Perf.
+pub fn update_experiments_net_block(block: &str) -> Result<bool> {
+    update_marked_block(NET_BEGIN, NET_END, block)
+}
+
+/// Replace the network-forward smoke block of EXPERIMENTS.md §Perf.
+pub fn update_experiments_net_smoke_block(block: &str) -> Result<bool> {
+    update_marked_block(NET_SMOKE_BEGIN, NET_SMOKE_END, block)
 }
 
 #[cfg(test)]

@@ -48,14 +48,26 @@ pub fn a2q_quantize_row(
 
 /// Check Eq. 15 on a row of integer codes: the guaranteed-overflow-avoidance
 /// invariant every exported A2Q layer must satisfy.
+///
+/// Exact integer arithmetic: the codes are integers stored in f32, so their
+/// l1 norm is summed in i128 and compared against the cap
+/// `(2^(P-1) - 1) * 2^(1_signed(x) - N)` by the equivalent integer test
+/// `l1 <= floor((2^(P-1) - 1) / 2^(N - 1_signed(x)))` — true iff
+/// `l1 * 2^(N - sig) <= 2^(P-1) - 1` since `l1` is an integer. No float
+/// round-off, no epsilon fudge: a row exactly at the cap passes, one code
+/// step above it fails.
 pub fn row_satisfies_cap(
     w_int: &[f32],
     p_bits: u32,
     n_bits: u32,
     x_signed: bool,
 ) -> bool {
-    let l1: f64 = w_int.iter().map(|x| x.abs() as f64).sum();
-    l1 <= l1_cap(p_bits, n_bits, x_signed) + 1e-6
+    debug_assert!((1..=64).contains(&p_bits), "p_bits {p_bits}");
+    debug_assert!(n_bits >= u32::from(x_signed), "n_bits {n_bits} signed {x_signed}");
+    let l1: i128 = w_int.iter().map(|x| x.abs() as i128).sum();
+    let shift = n_bits - u32::from(x_signed);
+    let acc_max = (1i128 << (p_bits - 1)) - 1;
+    l1 <= acc_max >> shift.min(127)
 }
 
 #[cfg(test)]
@@ -70,6 +82,22 @@ mod tests {
         assert!((c - 32767.0 / 256.0).abs() < 1e-9);
         // signed input doubles the cap
         assert_eq!(l1_cap(16, 8, true), 2.0 * l1_cap(16, 8, false));
+    }
+
+    #[test]
+    fn cap_check_is_exact_at_the_boundary() {
+        // P=16, N=8 unsigned: cap = 32767/256 = 127.996...; integer l1 127
+        // passes and 128 fails, with no epsilon fudge either way.
+        assert!(row_satisfies_cap(&[127.0], 16, 8, false));
+        assert!(!row_satisfies_cap(&[128.0], 16, 8, false));
+        // N - 1_signed = 0: the cap equals 2^(P-1) - 1 exactly, and a row
+        // exactly at it passes.
+        assert!(row_satisfies_cap(&[127.0], 8, 1, true));
+        assert!(!row_satisfies_cap(&[128.0], 8, 1, true));
+        // Large codes sum exactly in i128 (an f32 sum would lose low bits).
+        let big = [16_777_216.0f32; 4]; // 2^24 each, l1 = 2^26
+        assert!(row_satisfies_cap(&big, 28, 1, true));
+        assert!(!row_satisfies_cap(&big, 27, 1, true));
     }
 
     #[test]

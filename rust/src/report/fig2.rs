@@ -9,18 +9,34 @@
 //!    logits vs the wide register, and top-1 accuracy;
 //! 3. re-train the same model from the same seed with A2Q at each target P
 //!    and record its accuracy (overflow-free by construction — asserted).
+//!
+//! The training-backed pipeline ([`run`]) needs the PJRT engine (`xla`
+//! feature). The **network variant** ([`run_network`] / [`emit_network`])
+//! is XLA-free: it forwards a whole [`QNetwork`] under every width in one
+//! fused [`NetworkPlan`] pass and reports overflow rate *per layer depth* —
+//! the axis the single-layer figure cannot show, and where accumulator
+//! constraints visibly compound through inter-layer requantization.
 
 use std::path::Path;
 
 use anyhow::Result;
 
-use crate::accsim::{qlinear_forward, qlinear_forward_multi, AccMode};
+#[cfg(feature = "xla")]
 use crate::accsim::matmul::quantize_inputs;
+#[cfg(feature = "xla")]
+use crate::accsim::{qlinear_forward, qlinear_forward_multi};
+use crate::accsim::{AccMode, IntMatrix, NetworkPlan};
+#[cfg(feature = "xla")]
 use crate::config::RunConfig;
+#[cfg(feature = "xla")]
 use crate::coordinator::Trainer;
+#[cfg(feature = "xla")]
 use crate::datasets::Split;
 use crate::metrics;
+use crate::model::QNetwork;
+#[cfg(feature = "xla")]
 use crate::runtime::Engine;
+use crate::tensor::Tensor;
 
 use super::render::{f, write_csv, write_markdown};
 
@@ -44,6 +60,7 @@ pub struct Fig2Report {
 
 /// Run the experiment. `p_values` defaults to 10..=20 (the paper sweeps
 /// below the 19-bit bound); `steps` sizes each training run.
+#[cfg(feature = "xla")]
 pub fn run(
     engine: &Engine,
     p_values: &[u32],
@@ -154,4 +171,176 @@ pub fn emit(report: &Fig2Report, out_dir: &Path) -> Result<()> {
         &rows,
     )?;
     Ok(())
+}
+
+/// One row of the network variant: behaviour of layer `layer` at width P
+/// (network-level MAE/accuracy repeated on every layer row of that P).
+#[derive(Clone, Debug)]
+pub struct Fig2NetRow {
+    pub p_bits: u32,
+    pub layer: usize,
+    /// MAC-level overflow rate of this layer under wraparound.
+    pub overflow_rate_wrap: f64,
+    /// Fraction of this layer's dot products that overflowed at least once.
+    pub dot_frac_wrap: f64,
+    /// MAC-level overflow rate under inner-loop saturation.
+    pub overflow_rate_sat: f64,
+    /// Network-level MAE of the wraparound final logits vs the *all-wide*
+    /// forward (every layer wide), so corruption compounded through earlier
+    /// layers is measured — not just the last layer's register error.
+    pub mae_wrap: f64,
+    /// Top-1 accuracy under wraparound (None without labels).
+    pub acc_wrap: Option<f64>,
+    pub acc_sat: Option<f64>,
+}
+
+/// The network variant of Fig. 2.
+#[derive(Clone, Debug)]
+pub struct Fig2NetReport {
+    /// Wide-register top-1 accuracy (None without labels).
+    pub acc_wide: Option<f64>,
+    pub depth: usize,
+    /// One row per (P, layer), P-major.
+    pub rows: Vec<Fig2NetRow>,
+}
+
+/// XLA-free network variant: forward `x_int` through the whole network
+/// under the wide reference plus wraparound and saturation at every width
+/// in `p_values` — one fused [`NetworkPlan`] pass — and report per-layer
+/// overflow alongside network-level error/accuracy. `threads` pins the
+/// worker count (None = auto).
+pub fn run_network(
+    net: &QNetwork,
+    x_int: &IntMatrix,
+    labels: Option<&[f32]>,
+    p_values: &[u32],
+    threads: Option<usize>,
+) -> Fig2NetReport {
+    let modes: Vec<AccMode> = std::iter::once(AccMode::Wide)
+        .chain(
+            p_values
+                .iter()
+                .flat_map(|&p| [AccMode::Wrap { p_bits: p }, AccMode::Saturate { p_bits: p }]),
+        )
+        .collect();
+    let plan = NetworkPlan::new(net, &modes);
+    let sims = match threads {
+        Some(t) => plan.execute_threads(x_int, t),
+        None => plan.execute(x_int),
+    };
+    let n_eval = x_int.rows();
+    let acc = |out: &Tensor| {
+        labels.map(|l| {
+            let (c, n) = metrics::top1_accuracy(out, l, n_eval);
+            c as f64 / n.max(1) as f64
+        })
+    };
+    let acc_wide = acc(&sims[0].out);
+    let mut rows = Vec::with_capacity(p_values.len() * net.depth());
+    for (pi, &p) in p_values.iter().enumerate() {
+        let wrap = &sims[1 + 2 * pi];
+        let sat = &sims[2 + 2 * pi];
+        // Baseline = the all-wide forward (sims[0]), NOT wrap.out_wide: the
+        // per-mode local wide shares wrap's corrupted upstream activations,
+        // which would cancel exactly the compounding this figure exists to
+        // show.
+        let mae_wrap = metrics::logit_mae(&wrap.out, &sims[0].out);
+        let acc_wrap = acc(&wrap.out);
+        let acc_sat = acc(&sat.out);
+        for layer in 0..net.depth() {
+            rows.push(Fig2NetRow {
+                p_bits: p,
+                layer,
+                overflow_rate_wrap: wrap.layer_stats[layer].overflow_rate(),
+                dot_frac_wrap: wrap.layer_stats[layer].dot_overflow_fraction(),
+                overflow_rate_sat: sat.layer_stats[layer].overflow_rate(),
+                mae_wrap,
+                acc_wrap,
+                acc_sat,
+            });
+        }
+    }
+    Fig2NetReport { acc_wide, depth: net.depth(), rows }
+}
+
+/// Emit `results/fig2_network.csv` + `.md`.
+pub fn emit_network(report: &Fig2NetReport, out_dir: &Path) -> Result<()> {
+    let header = [
+        "P",
+        "layer",
+        "overflow_rate_wrap",
+        "dot_frac_wrap",
+        "overflow_rate_sat",
+        "mae_wrap",
+        "acc_wrap",
+        "acc_sat",
+    ];
+    let opt = |v: Option<f64>| v.map(|a| f(a, 4)).unwrap_or_else(|| "-".into());
+    let rows: Vec<Vec<String>> = report
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.p_bits.to_string(),
+                r.layer.to_string(),
+                f(r.overflow_rate_wrap, 4),
+                f(r.dot_frac_wrap, 4),
+                f(r.overflow_rate_sat, 4),
+                f(r.mae_wrap, 4),
+                opt(r.acc_wrap),
+                opt(r.acc_sat),
+            ]
+        })
+        .collect();
+    write_csv(&out_dir.join("fig2_network.csv"), &header, &rows)?;
+    let acc = report.acc_wide.map(|a| format!("{a:.4}")).unwrap_or_else(|| "n/a".into());
+    write_markdown(
+        &out_dir.join("fig2_network.md"),
+        &format!(
+            "Fig. 2 (network variant) — per-layer overflow over a {}-layer QNetwork \
+             (wide-register accuracy {acc})",
+            report.depth
+        ),
+        &header,
+        &rows,
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::NetSpec;
+
+    #[test]
+    fn network_variant_reports_per_layer_rows() {
+        let spec = NetSpec {
+            widths: vec![8, 6, 3],
+            m_bits: 5,
+            n_bits: 4,
+            p_bits: 10,
+            x_signed: false,
+            constrained: false,
+        };
+        let mut net = QNetwork::synthesize(&spec, 4).unwrap();
+        let sample =
+            Tensor::new(vec![6, 8], (0..48).map(|i| (i % 5) as f32 * 0.21).collect());
+        net.calibrate(&sample);
+        let x = net.layers[0].in_quant.quantize(&sample);
+        let labels = vec![0.0f32; 6];
+        let rep = run_network(&net, &x, Some(&labels), &[6, 20], Some(2));
+        assert_eq!(rep.depth, 2);
+        assert_eq!(rep.rows.len(), 4); // 2 widths x 2 layers
+        assert!(rep.acc_wide.is_some());
+        // a 20-bit register is above this net's data-type bound: no overflow
+        let wide_enough: Vec<_> = rep.rows.iter().filter(|r| r.p_bits == 20).collect();
+        assert!(wide_enough.iter().all(|r| r.overflow_rate_wrap == 0.0));
+        // without labels the accuracy columns are empty, not fabricated
+        let unlabeled = run_network(&net, &x, None, &[6], None);
+        assert!(unlabeled.acc_wide.is_none());
+        assert!(unlabeled.rows.iter().all(|r| r.acc_wrap.is_none()));
+        let dir = crate::testutil::TempDir::new().unwrap();
+        emit_network(&rep, dir.path()).unwrap();
+        assert!(dir.path().join("fig2_network.csv").exists());
+    }
 }

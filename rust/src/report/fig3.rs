@@ -7,7 +7,10 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::quant::bounds::{data_type_bound_exact, weight_bound_exact, DotShape};
+use crate::model::QNetwork;
+use crate::quant::bounds::{
+    data_type_bound, data_type_bound_exact, weight_bound, weight_bound_exact, DotShape,
+};
 use crate::rng::Rng;
 
 use super::render::{f, write_csv, write_markdown};
@@ -67,6 +70,90 @@ pub fn run(ks: &[usize], bit_values: &[u32], n_draws: usize, seed: u64) -> Vec<F
     rows
 }
 
+/// One layer of the network variant: the bound comparison taken down the
+/// *depth* of an actual [`QNetwork`] — each layer's data-type bound against
+/// the weight-norm bound its real (synthesized or exported) integer weights
+/// achieve, plus the weight sparsity at that depth (paper §5.2.1).
+#[derive(Clone, Debug)]
+pub struct Fig3NetRow {
+    pub layer: usize,
+    pub name: String,
+    pub k: usize,
+    pub m_bits: u32,
+    pub n_bits: u32,
+    pub x_signed: bool,
+    /// Max per-channel integer-weight l1 norm.
+    pub l1_max: f64,
+    /// Data-type lower bound on P (Eq. 8).
+    pub data_type_bound: u32,
+    /// Weight-norm lower bound on P from the actual l1 (Eq. 12), never
+    /// reported looser than the data-type bound.
+    pub weight_bound: u32,
+    pub sparsity: f64,
+}
+
+/// Network variant: per-layer bounds and sparsity by depth.
+pub fn run_network(net: &QNetwork) -> Vec<Fig3NetRow> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(layer, l)| {
+            let shape = DotShape {
+                k: l.weights.k,
+                m_bits: l.m_bits,
+                n_bits: l.in_quant.n_bits,
+                x_signed: l.in_quant.signed,
+            };
+            let dt = data_type_bound(shape);
+            let l1_max = l.weights.max_l1() as f64;
+            let wb = weight_bound(l1_max, l.in_quant.n_bits, l.in_quant.signed);
+            Fig3NetRow {
+                layer,
+                name: l.name.clone(),
+                k: l.weights.k,
+                m_bits: l.m_bits,
+                n_bits: l.in_quant.n_bits,
+                x_signed: l.in_quant.signed,
+                l1_max,
+                data_type_bound: dt,
+                weight_bound: wb.min(dt),
+                sparsity: l.weights.sparsity(),
+            }
+        })
+        .collect()
+}
+
+/// Emit `results/fig3_network.csv` + `.md`.
+pub fn emit_network(rows: &[Fig3NetRow], out_dir: &Path) -> Result<()> {
+    let header =
+        ["layer", "name", "K", "M", "N", "x_signed", "l1_max", "dt_bound", "wn_bound", "sparsity"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.layer.to_string(),
+                r.name.clone(),
+                r.k.to_string(),
+                r.m_bits.to_string(),
+                r.n_bits.to_string(),
+                r.x_signed.to_string(),
+                f(r.l1_max, 1),
+                r.data_type_bound.to_string(),
+                r.weight_bound.to_string(),
+                f(r.sparsity, 4),
+            ]
+        })
+        .collect();
+    write_csv(&out_dir.join("fig3_network.csv"), &header, &table)?;
+    write_markdown(
+        &out_dir.join("fig3_network.md"),
+        "Fig. 3 (network variant) — per-layer accumulator bounds and sparsity by depth",
+        &header,
+        &table,
+    )?;
+    Ok(())
+}
+
 /// Emit `results/fig3.csv` + `.md`.
 pub fn emit(rows: &[Fig3Row], out_dir: &Path) -> Result<()> {
     let header = ["K", "data_bits", "data_type_bound", "wb_median", "wb_min", "wb_max"];
@@ -112,6 +199,33 @@ mod tests {
             assert!(r.weight_bound_min <= r.weight_bound_median);
             assert!(r.weight_bound_median <= r.weight_bound_max);
         }
+    }
+
+    #[test]
+    fn network_variant_bounds_are_consistent() {
+        use crate::model::{NetSpec, QNetwork};
+        let spec = NetSpec {
+            widths: vec![32, 16, 8],
+            m_bits: 4,
+            n_bits: 3,
+            p_bits: 10,
+            x_signed: false,
+            constrained: true,
+        };
+        let net = QNetwork::synthesize(&spec, 7).unwrap();
+        let rows = run_network(&net);
+        assert_eq!(rows.len(), 2);
+        for (li, r) in rows.iter().enumerate() {
+            assert_eq!(r.layer, li);
+            assert!(r.weight_bound <= r.data_type_bound, "{}", r.name);
+            // A2Q-constrained weights: the weight-norm bound certifies the
+            // synthesis target (or better).
+            assert!(r.weight_bound <= 10, "{} bound {}", r.name, r.weight_bound);
+            assert!((0.0..=1.0).contains(&r.sparsity));
+        }
+        // hidden boundary is signed, input unsigned
+        assert!(!rows[0].x_signed);
+        assert!(rows[1].x_signed);
     }
 
     #[test]

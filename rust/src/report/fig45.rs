@@ -34,12 +34,14 @@ fn effective_p(rec: &RunRecord, largest_k: usize) -> u32 {
     if rec.config.alg == "a2q" {
         rec.config.p
     } else {
-        // heuristic baseline: the guaranteed-safe P for its data types
+        // heuristic baseline: the guaranteed-safe P for its data types,
+        // with the activation signedness taken from the record's config (a
+        // signed-input model's bound is one bit tighter, Eq. 8).
         data_type_bound(DotShape {
             k: largest_k,
             m_bits: rec.config.m,
             n_bits: rec.config.n,
-            x_signed: false,
+            x_signed: rec.config.x_signed,
         })
         .min(32)
     }
@@ -224,6 +226,22 @@ mod tests {
         let a2q_front = &out[0].frontiers.iter().find(|(a, _)| a == "a2q").unwrap().1;
         assert_eq!(a2q_front[0].cost, 12.0);
         assert_eq!(out[0].float_perf, Some(0.97));
+    }
+
+    #[test]
+    fn fig4_signed_inputs_tighten_the_qat_bound() {
+        let mut signed = rec("mlp", "qat", 8, 12, 0.95, 0.1);
+        signed.config.x_signed = true;
+        let mut lk = BTreeMap::new();
+        lk.insert("mlp".to_string(), 784usize);
+        let out = fig4(&[signed], &lk);
+        let qat_front = &out[0].frontiers.iter().find(|(a, _)| a == "qat").unwrap().1;
+        let dt_signed =
+            data_type_bound(DotShape { k: 784, m_bits: 8, n_bits: 8, x_signed: true });
+        let dt_unsigned =
+            data_type_bound(DotShape { k: 784, m_bits: 8, n_bits: 8, x_signed: false });
+        assert_eq!(qat_front[0].cost, dt_signed as f64);
+        assert_eq!(dt_signed + 1, dt_unsigned); // one bit saved, actually used
     }
 
     #[test]

@@ -12,11 +12,14 @@
 //! | Fig. 6 (LUTs vs perf Pareto)            | [`fig67`] | `results/fig6_<model>.csv` |
 //! | Fig. 7 (LUT breakdown)                  | [`fig67`] | `results/fig7_<model>.csv` |
 //! | Fig. 8 (re-ordering under saturation)   | [`fig8`] | `results/fig8.csv` |
+//! | Fig. 2 network variant (overflow by depth) | [`fig2`] | `results/fig2_network.csv` |
+//! | Fig. 3 network variant (bounds/sparsity by depth) | [`fig3`] | `results/fig3_network.csv` |
 
-// fig2/fig8 train models end to end and therefore need the PJRT engine
-// (`xla` feature); the record-driven figures (fig3/fig45/fig67) are pure
+// fig8 (and fig2's training-backed pipeline) train models end to end and
+// therefore need the PJRT engine (`xla` feature); the record-driven figures
+// (fig3/fig45/fig67) and the QNetwork-driven network variants
+// (fig2::run_network / fig3::run_network, fed by `a2q netsim`) are pure
 // host code and always available.
-#[cfg(feature = "xla")]
 pub mod fig2;
 pub mod fig3;
 pub mod fig45;

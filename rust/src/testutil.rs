@@ -4,6 +4,8 @@
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::accsim::IntMatrix;
+use crate::model::{NetSpec, QNetwork};
 use crate::quant::QTensor;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -22,6 +24,31 @@ pub fn psweep_layer(c_out: usize, k: usize, seed: u64) -> QTensor {
         &Tensor::new(vec![c_out, 1], vec![0.01; c_out]),
         &Tensor::from_vec(vec![0.0; c_out]),
     )
+}
+
+/// Deterministic calibrated A2Q-constrained network fixture (target P = 16)
+/// plus a quantized input batch, shared by the network-forward perf
+/// instruments (`benches/network_forward.rs` and `tests/network_smoke.rs`)
+/// so their journal entries measure the same distribution. Sweeping below
+/// 16 bits overflows (mode groups split); at or above it the bound gate
+/// keeps every mode fused with the wide path.
+pub fn psweep_network(widths: &[usize], batch: usize, seed: u64) -> (QNetwork, IntMatrix) {
+    let spec = NetSpec {
+        widths: widths.to_vec(),
+        m_bits: 6,
+        n_bits: 4,
+        p_bits: 16,
+        x_signed: false,
+        constrained: true,
+    };
+    let mut net = QNetwork::synthesize(&spec, seed).expect("valid bench spec");
+    let mut rng = Rng::new(seed ^ 0xCAFE);
+    let dim = widths[0];
+    let sample =
+        Tensor::new(vec![batch, dim], (0..batch * dim).map(|_| rng.uniform() as f32).collect());
+    net.calibrate(&sample);
+    let x = net.layers[0].in_quant.quantize(&sample);
+    (net, x)
 }
 
 static COUNTER: AtomicU64 = AtomicU64::new(0);

@@ -1,0 +1,99 @@
+//! Smoke-scale network-forward perf run wired into `cargo test`: exercises
+//! the multi-layer bench pipeline (per-mode scalar composition vs the fused
+//! `NetworkPlan`, journal write, EXPERIMENTS.md PERF-NET-SMOKE refresh) at a
+//! size that finishes in well under a second. Lives in its own test binary
+//! so its journal read-modify-write cannot race `tests/bench_smoke.rs`
+//! (cargo runs test binaries sequentially).
+//!
+//! Timing numbers here come from the *debug* profile and land in the
+//! `accsim_smoke/netfwd_*` journal entries; the authoritative release
+//! numbers come from `cargo bench --bench network_forward`.
+
+use std::time::Instant;
+
+use a2q::accsim::{network_forward_multi, AccMode};
+use a2q::model::network_forward_ref;
+use a2q::perf::{self, BenchRecord};
+use a2q::testutil::psweep_network;
+
+#[test]
+fn network_smoke_records_journal() {
+    let quick = std::env::var("A2Q_BENCH_QUICK").map(|v| v != "0").unwrap_or(true);
+    let (widths, batch, reps): (Vec<usize>, usize, usize) =
+        if quick { (vec![64, 32, 16, 4], 8, 2) } else { (vec![256, 128, 64, 10], 32, 4) };
+    let (net, x) = psweep_network(&widths, batch, 7);
+    let modes: Vec<AccMode> = std::iter::once(AccMode::Wide)
+        .chain((8..=32).map(|p| AccMode::Wrap { p_bits: p }))
+        .collect();
+    let macs = (reps * modes.len() * batch * net.macs_per_row()) as u64;
+
+    // Correctness at smoke scale: the fused network pass is bit-identical
+    // to the per-mode scalar composition on the exact bench configuration
+    // (the property test covers this broadly; this guards the fixture).
+    let fused_once = network_forward_multi(&net, &x, &modes);
+    for (mi, mode) in modes.iter().enumerate() {
+        let r = network_forward_ref(&net, &x, *mode);
+        assert_eq!(fused_once[mi].out.data(), r.out.data(), "{mode:?}");
+        for (li, (a, b)) in fused_once[mi].layer_stats.iter().zip(&r.layer_stats).enumerate() {
+            assert_eq!(a.overflow_events, b.overflow_events, "{mode:?} layer {li}");
+        }
+    }
+
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..reps {
+        for mode in &modes {
+            let r = network_forward_ref(&net, &x, *mode);
+            sink ^= r.layer_stats.iter().map(|s| s.overflow_events).sum::<u64>();
+        }
+    }
+    let t_ref = t0.elapsed();
+
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        sink ^= network_forward_multi(&net, &x, &modes)
+            .iter()
+            .flat_map(|r| r.layer_stats.iter())
+            .map(|s| s.overflow_events)
+            .sum::<u64>();
+    }
+    let t_fused = t1.elapsed();
+    std::hint::black_box(sink);
+
+    let speedup = t_ref.as_secs_f64() / t_fused.as_secs_f64().max(1e-12);
+    let per_iter = |t: std::time::Duration| t.as_nanos() as f64 / reps as f64;
+    let mac_rate = |t: std::time::Duration| macs as f64 / t.as_secs_f64().max(1e-12);
+    println!(
+        "smoke network forward ({} modes, layers {widths:?}, batch {batch}, debug profile): \
+         fused {speedup:.1}x over per-mode scalar composition",
+        modes.len()
+    );
+
+    let baseline = BenchRecord {
+        name: "accsim_smoke/netfwd_scalar_composed".into(),
+        ns_per_iter: per_iter(t_ref),
+        mac_per_s: Some(mac_rate(t_ref)),
+    };
+    let fused = BenchRecord {
+        name: "accsim_smoke/netfwd_fused_network".into(),
+        ns_per_iter: per_iter(t_fused),
+        mac_per_s: Some(mac_rate(t_fused)),
+    };
+    match perf::record_benches(&[baseline.clone(), fused.clone()]) {
+        Ok(path) => {
+            let journal = perf::parse_journal(&std::fs::read_to_string(path).unwrap()).unwrap();
+            assert!(journal.iter().any(|r| r.name == "accsim_smoke/netfwd_fused_network"));
+        }
+        Err(e) => eprintln!("perf journal not writable here ({e}); measurements printed only"),
+    }
+
+    let block = perf::render_psweep_block(
+        &format!("`cargo test` (debug profile{})", if quick { ", quick" } else { "" }),
+        &baseline,
+        &fused,
+        &format!("{} modes, layers {widths:?}, batch {batch}", modes.len()),
+    );
+    if let Err(e) = perf::update_experiments_net_smoke_block(&block) {
+        eprintln!("EXPERIMENTS.md not writable here ({e}); net smoke block not updated");
+    }
+}

@@ -6,8 +6,10 @@
 
 use a2q::accsim::{
     dot_accumulate, dot_accumulate_multi, qlinear_forward_ref, AccMode, IntMatrix, LayerPlan,
+    NetworkPlan,
 };
 use a2q::accsim::dot::wrap_to;
+use a2q::model::{network_forward_ref, NetSpec, QNetwork};
 use a2q::quant::QTensor;
 use a2q::tensor::Tensor;
 use a2q::config::SweepConfig;
@@ -192,6 +194,92 @@ fn prop_fused_multi_p_bit_exact() {
     }
 }
 
+/// The fused multi-layer [`NetworkPlan`] is bit-identical, per mode, to
+/// composing the scalar per-layer reference with explicit requantization
+/// ([`network_forward_ref`]) — final outputs, final wide outputs and every
+/// per-layer statistics field — across random depths/widths/bit-widths,
+/// all four `AccMode`s, A2Q-constrained (bound-gated) and unconstrained
+/// (actually-overflowing, group-splitting) weights, and thread counts.
+#[test]
+fn prop_network_fused_bit_exact() {
+    let mut rng = Rng::new(0x9E7);
+    for case in 0..30 {
+        let depth = 2 + rng.below(3);
+        let mut widths = vec![1 + rng.below(20)];
+        for _ in 0..depth {
+            widths.push(1 + rng.below(12));
+        }
+        let spec = NetSpec {
+            widths,
+            m_bits: 3 + rng.below(5) as u32,
+            n_bits: 1 + rng.below(5) as u32,
+            p_bits: 6 + rng.below(12) as u32,
+            x_signed: rng.below(2) == 1,
+            constrained: case % 2 == 0,
+        };
+        let mut net = QNetwork::synthesize(&spec, 0x5EED ^ case as u64).unwrap();
+
+        let batch = 1 + rng.below(6);
+        let dim = spec.widths[0];
+        let sample = Tensor::new(
+            vec![batch, dim],
+            (0..batch * dim)
+                .map(|_| {
+                    let v = rng.normal() as f32;
+                    if spec.x_signed { v } else { v.abs() }
+                })
+                .collect(),
+        );
+        net.calibrate(&sample);
+        let x = net.layers[0].in_quant.quantize(&sample);
+
+        // Random mode multiset over all four register models, mixed widths.
+        let n_modes = 1 + rng.below(8);
+        let modes: Vec<AccMode> = (0..n_modes)
+            .map(|_| {
+                let p_bits = 2 + rng.below(40) as u32;
+                match rng.below(4) {
+                    0 => AccMode::Wide,
+                    1 => AccMode::Wrap { p_bits },
+                    2 => AccMode::Saturate { p_bits },
+                    _ => AccMode::SaturateFinal { p_bits },
+                }
+            })
+            .collect();
+
+        let refs: Vec<_> = modes.iter().map(|m| network_forward_ref(&net, &x, *m)).collect();
+        let plan = NetworkPlan::new(&net, &modes);
+        for threads in [1usize, 2, 5] {
+            let multi = plan.execute_threads(&x, threads);
+            assert_eq!(multi.len(), modes.len(), "case {case}");
+            for (mi, mode) in modes.iter().enumerate() {
+                let (a, b) = (&multi[mi], &refs[mi]);
+                assert_eq!(a.out.data(), b.out.data(), "case {case} {mode:?} t={threads}");
+                assert_eq!(a.out_wide.data(), b.out_wide.data(), "case {case} {mode:?}");
+                assert_eq!(a.layer_stats.len(), b.layer_stats.len(), "case {case}");
+                for (li, (sa, sb)) in a.layer_stats.iter().zip(&b.layer_stats).enumerate() {
+                    let ctx = format!("case {case} {mode:?} layer {li} t={threads}");
+                    assert_eq!(sa.dots, sb.dots, "{ctx}");
+                    assert_eq!(sa.macs, sb.macs, "{ctx}");
+                    assert_eq!(sa.overflow_events, sb.overflow_events, "{ctx}");
+                    assert_eq!(sa.dots_overflowed, sb.dots_overflowed, "{ctx}");
+                    assert_eq!(sa.abs_err_sum, sb.abs_err_sum, "{ctx}");
+                    assert_eq!(sa.outputs, sb.outputs, "{ctx}");
+                }
+            }
+        }
+
+        // Constrained nets are the theorem at network scale: no overflow at
+        // or above the synthesis target, at any depth.
+        if spec.constrained {
+            let r = network_forward_ref(&net, &x, AccMode::Wrap { p_bits: spec.p_bits });
+            for (li, s) in r.layer_stats.iter().enumerate() {
+                assert_eq!(s.overflow_events, 0, "case {case} layer {li} overflowed at target");
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_wrap_to_is_modular() {
     let mut rng = Rng::new(0xC4);
@@ -269,7 +357,9 @@ fn prop_frontier_correctness() {
             let on_front = front.iter().any(|fp| fp.cost == p.cost && fp.perf == p.perf);
             if !on_front {
                 assert!(
-                    front.iter().any(|fp| dominates(fp, p) || (fp.cost == p.cost && fp.perf >= p.perf)),
+                    front
+                        .iter()
+                        .any(|fp| dominates(fp, p) || (fp.cost == p.cost && fp.perf >= p.perf)),
                     "case {case}: non-frontier point not covered"
                 );
             }
