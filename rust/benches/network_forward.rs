@@ -80,4 +80,44 @@ fn main() {
         Ok(false) => println!("EXPERIMENTS.md markers absent; skipped PERF-NET update"),
         Err(e) => eprintln!("EXPERIMENTS.md update failed: {e}"),
     }
+
+    // --- the headline A2Q scenario: sweep at/above the net's target width ---
+    // Every layer of the fixture satisfies the Eq. 15 cap at P = 16, so a
+    // wide + 16..=40 sweep is provably overflow-free at every depth: the
+    // partitioned engine keeps all modes fused and runs every layer through
+    // the safe-span GEMM.
+    let tmodes: Vec<AccMode> = std::iter::once(AccMode::Wide)
+        .chain((16..=40).map(|p| AccMode::Wrap { p_bits: p }))
+        .collect();
+    let tmacs = (tmodes.len() * batch * net.macs_per_row()) as u64;
+
+    let rtb = harness::bench("accsim/netfwd_target_scalar", 1, iters, || {
+        let mut events = 0u64;
+        for mode in &tmodes {
+            let r = network_forward_ref(&net, &x, *mode);
+            events += r.layer_stats.iter().map(|s| s.overflow_events).sum::<u64>();
+        }
+        events
+    });
+    println!("  ({:.0} M MAC/s)", harness::throughput(&rtb, tmacs) / 1e6);
+    journal.add(&rtb, Some(tmacs));
+
+    let rtf = harness::bench("accsim/netfwd_target_gemm", 1, iters, || {
+        network_forward_multi(&net, &x, &tmodes)
+            .iter()
+            .flat_map(|r| r.layer_stats.iter())
+            .map(|s| s.overflow_events)
+            .sum::<u64>()
+    });
+    println!("  ({:.0} M MAC/s)", harness::throughput(&rtf, tmacs) / 1e6);
+    journal.add(&rtf, Some(tmacs));
+    println!(
+        "network target-width sweep ({} modes, {} layers {:?}, batch {batch}): \
+         safe-span GEMM engine {:.1}x over per-mode scalar composition",
+        tmodes.len(),
+        net.depth(),
+        widths,
+        rtb.median.as_secs_f64() / rtf.median.as_secs_f64().max(1e-12)
+    );
+    journal.flush();
 }

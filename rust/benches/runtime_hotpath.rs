@@ -18,7 +18,7 @@ use a2q::accsim::{
 };
 use a2q::datasets::{self, Split};
 use a2q::rng::Rng;
-use a2q::testutil::psweep_layer;
+use a2q::testutil::{psweep_constrained_layer, psweep_layer};
 
 /// The P-sweep every figure replays: 25 accumulator widths.
 const P_SWEEP: std::ops::RangeInclusive<u32> = 8..=32;
@@ -105,6 +105,41 @@ fn main() {
         Ok(false) => println!("EXPERIMENTS.md markers absent; skipped §Perf update"),
         Err(e) => eprintln!("EXPERIMENTS.md update failed: {e}"),
     }
+
+    // --- accsim P-sweep on the A2Q-constrained shape: the headline case ------
+    // A layer quantized at target P = 16 swept at/above its target: the
+    // Eq. 15 cap makes every channel provably safe, so the partitioned
+    // engine drives the whole grid through the packed blocked GEMM with
+    // zero register simulation.
+    let clayer = psweep_constrained_layer(c_out, kk, 16, 8, 7);
+    let cmodes: Vec<AccMode> = (16..=40).map(|p| AccMode::Wrap { p_bits: p }).collect();
+    let cmacs = (cmodes.len() * batch * c_out * kk) as u64;
+
+    let rcb = harness::bench("accsim/psweep25_constrained_scalar", 1, iters, || {
+        let mut events = 0u64;
+        for mode in &cmodes {
+            events += qlinear_forward_ref(&xm, 1.0, &clayer, *mode).stats.overflow_events;
+        }
+        events
+    });
+    println!("  ({:.0} M MAC/s)", harness::throughput(&rcb, cmacs) / 1e6);
+    journal.add(&rcb, Some(cmacs));
+
+    let rcf = harness::bench("accsim/psweep25_constrained_gemm", 1, iters, || {
+        qlinear_forward_multi(&xm, 1.0, &clayer, &cmodes)
+            .iter()
+            .map(|s| s.stats.overflow_events)
+            .sum::<u64>()
+    });
+    println!("  ({:.0} M MAC/s)", harness::throughput(&rcf, cmacs) / 1e6);
+    journal.add(&rcf, Some(cmacs));
+    println!(
+        "accsim constrained P-sweep ({} widths at/above target, batch {batch} x c_out {c_out} x k {kk}): \
+         safe-span GEMM engine {:.1}x over per-P scalar",
+        cmodes.len(),
+        rcb.median.as_secs_f64() / rcf.median.as_secs_f64().max(1e-12)
+    );
+    journal.flush();
 
     // --- dataset batch materialization --------------------------------------
     let ds = datasets::by_name("synth_cifar", 2048, 512, 0).unwrap();

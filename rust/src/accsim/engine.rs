@@ -1,55 +1,75 @@
-//! The fused multi-P kernel engine: one traversal of the MACs simulates
-//! *every* requested accumulator width at once, provably-safe channels skip
-//! register simulation entirely, and the batch grid fans out across scoped
-//! threads. This is the hot path behind every P-sweep figure (Fig. 2/4/8);
-//! before/after throughput is tracked in EXPERIMENTS.md §Perf and
-//! BENCH_accsim.json.
+//! The safety-partitioned kernel engine: every P-sweep forward runs as a
+//! four-stage pipeline that spends register-simulation work only where the
+//! paper's overflow bound cannot prove it away.
 //!
-//! Three stacked optimizations over the per-P scalar walk
-//! ([`super::matmul::qlinear_forward_ref`]):
+//! 1. **Plan-time channel ordering** — each layer's channels are sorted once
+//!    (per [`LayerPlan`] / [`NetworkPlan`]) by their integer l1 norm
+//!    `Σ|w_int|`, and the weight matrix is packed into GEMM panels in that
+//!    order ([`super::gemm`]). At execution one `partition_point` per *row*
+//!    over `l1_sorted[c] * max|x_row|` splits the whole channel set into a
+//!    provably-safe prefix and a must-simulate tail — the bound test is the
+//!    per-(row, channel) gate of the previous engine (Eq. 4-5, also
+//!    arXiv:2301.13376 §3) hoisted out of the inner loop: a channel is safe
+//!    when even the narrowest simulated register cannot overflow on it.
+//! 2. **Packed blocked GEMM for the safe span** — safe channels need only
+//!    the wide (exact) dot product, so they run through a cache-blocked
+//!    integer GEMM over weights packed once per plan into k-major,
+//!    NR-channel panels of `i16`/`i32` codes, with MR-row tiling over the
+//!    batch ([`super::gemm::PackedWeights`]). For an A2Q-constrained layer
+//!    swept at or above its target width — the paper's headline scenario —
+//!    this stage covers *every* channel and the simulator degenerates to a
+//!    plain integer matmul. Exact i64 accumulation keeps the GEMM output
+//!    bit-identical to the scalar walk.
+//! 3. **Register simulation for the remainder** — channels the bound cannot
+//!    clear take the fused multi-width traversal ([`fused_dot`]): one pass
+//!    over the MACs carries a register per simulated width (wrap is a
+//!    shift/sign-extend pair, saturate a compare/clamp), and the
+//!    per-channel `min_safe_p` still lets every register at or above the
+//!    channel's safe width resolve from the exact sum.
+//! 4. **Arena + dynamic scheduling** — rows are split into fixed blocks and
+//!    fanned over `std::thread::scope` workers through an atomic-counter
+//!    queue, so blocks heavy in must-simulate channels do not straggle
+//!    behind a static partition. Each worker owns a scratch arena
+//!    ([`SimScratch`] / [`NetWorker`]) reused across blocks, layers and
+//!    mode groups, so every batch-sized buffer (activations, outputs,
+//!    registers, requantization codes) recycles; only small per-group
+//!    bookkeeping (a [`ModePlan`], slot lists) still allocates. Workers
+//!    write into
+//!    disjoint preallocated output slices and per-block [`OverflowStats`]
+//!    slots that merge in block order after the join, so outputs and every
+//!    statistics counter are bit-identical to the sequential walk for any
+//!    thread count (`abs_err_sum` — a sum of integer-valued f64 terms — is
+//!    exact, hence order-independent, while the total stays below 2^53).
 //!
-//! 1. **Multi-P fusion** — the dominant cost of the scalar path is streaming
-//!    `x` and `w` through memory once *per width*; a 25-width sweep reads the
-//!    same bytes 25 times. The fused kernel carries one register per
-//!    requested width, so K extra widths cost a few ALU ops each (wrap is a
-//!    shift/sign-extend pair, saturate a compare/clamp) instead of a full
-//!    memory pass.
-//! 2. **Bound-gated fast paths** — the paper's own overflow bound (Eq. 4-5;
-//!    also arXiv:2301.13376 §3): every intermediate partial sum of `x . w`
-//!    is bounded by `Σ|w_i| * max|x_i|`, so a channel whose bound fits in
-//!    `2^(P-1) - 1` can *never* overflow a P-bit register, under any input
-//!    and any MAC ordering. The planner precomputes per-channel `Σ|w_int|`;
-//!    at execution each (row, channel) pair derives the smallest safe width
-//!    and registers at or above it bypass simulation — when every width is
-//!    safe the whole dot product collapses to a plain autovectorizable wide
-//!    dot over the flat slices.
-//! 3. **Scoped-thread parallelism** — rows of the `batch x c_out` grid are
-//!    chunked across `std::thread::scope` workers (dot products are
-//!    independent; no new dependencies). Per-worker [`OverflowStats`] are
-//!    merged in chunk order: outputs and the integer counters are
-//!    bit-identical to the sequential walk regardless of thread count, and
-//!    `abs_err_sum` — a sum of integer-valued f64 terms — is exact (hence
-//!    also order-independent) while the total stays below 2^53; past that
-//!    the chunked merge may round differently from a sequential walk.
+//! Stage skipping: rows with `max|x| = 0` (and layers with `k = 0`) gate
+//! every channel into stage 2; a plan whose narrowest simulated register
+//! still clears a channel set entirely skips stage 3; a plan with *no*
+//! per-MAC register (only `Wide`/`SaturateFinal` modes) never simulates at
+//! all; single-block batches skip the queue and run inline on the caller's
+//! thread.
 //!
-//! All kernels are property-tested bit-exact against the per-P reference
-//! (`rust/tests/property_invariants.rs`).
+//! On top of the single-layer [`LayerPlan`], the [`NetworkPlan`] streams
+//! row blocks through a whole [`crate::model::QNetwork`]: within a block,
+//! modes whose propagated activations are still byte-identical share one
+//! fused traversal per layer (all modes start fused at layer 0) and only
+//! split after a register has actually corrupted an activation;
+//! requantization between layers runs buffer-to-buffer through the worker
+//! arena (no `Tensor` round trip), and the last layer's wide output is
+//! computed once per mode group and shared across its slots.
 //!
-//! On top of the single-layer [`LayerPlan`], the [`NetworkPlan`] streams a
-//! batch through a whole [`crate::model::QNetwork`] in one pass: rows are
-//! chunked across scoped threads *once* and each worker carries its chunk
-//! through every layer (simulate -> requantize -> next layer), so there is
-//! no per-layer barrier. Within a chunk, modes whose propagated activations
-//! are still byte-identical (no register has diverged from the wide result
-//! yet — always true at layer 0, and at depth for every provably-safe or
-//! wide-enough register) share a single fused MAC traversal; a mode only
-//! pays for its own traversal after its register model has actually
-//! corrupted an activation. The safe-channel bound gate is applied per
-//! layer from the *propagated* per-row activation max — not a global
-//! worst case — so deeper layers whose activations shrink under
-//! requantization gate more channels onto the wide fast path.
+//! All kernels are property-tested bit-exact against the per-P scalar
+//! references ([`super::matmul::qlinear_forward_ref`] /
+//! [`crate::model::network_forward_ref`]) in
+//! `rust/tests/property_invariants.rs`, including degenerate shapes (empty
+//! batch, `k = 0`, all-zero rows, fully-safe and fully-unsafe layers) at
+//! thread counts {1, 2, 7}. Throughput history lives in EXPERIMENTS.md
+//! §Perf and BENCH_accsim.json.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::dot::{range, AccMode, DotResult};
+use super::gemm::PackedWeights;
 use super::intmat::{abs_max_of, IntMatrix};
 use super::matmul::MatmulStats;
 use super::stats::OverflowStats;
@@ -115,9 +135,20 @@ impl ModePlan {
     fn scratch_len(&self) -> usize {
         self.wrap.len().max(self.sat.len())
     }
+
+    /// Narrowest per-MAC register width in the plan, `None` when no mode
+    /// needs per-MAC simulation (only `Wide`/`SaturateFinal` modes): the
+    /// width the stage-1 row partition tests channels against.
+    fn min_sim_p(&self) -> Option<u32> {
+        match (self.wrap.first().map(|r| r.p_bits), self.sat.first().map(|r| r.p_bits)) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
 }
 
 /// Per-worker register scratch (reused across every dot product).
+#[derive(Default)]
 struct Scratch {
     wrap_acc: Vec<i64>,
     wrap_ovf: Vec<u32>,
@@ -127,12 +158,19 @@ struct Scratch {
 
 impl Scratch {
     fn for_plan(plan: &ModePlan) -> Scratch {
-        let n = plan.scratch_len();
-        Scratch {
-            wrap_acc: vec![0; n],
-            wrap_ovf: vec![0; n],
-            sat_acc: vec![0; n],
-            sat_ovf: vec![0; n],
+        let mut s = Scratch::default();
+        s.ensure(plan.scratch_len());
+        s
+    }
+
+    /// Grow (never shrink) to hold `n` registers, so one arena serves every
+    /// mode group it meets.
+    fn ensure(&mut self, n: usize) {
+        if self.wrap_acc.len() < n {
+            self.wrap_acc.resize(n, 0);
+            self.wrap_ovf.resize(n, 0);
+            self.sat_acc.resize(n, 0);
+            self.sat_ovf.resize(n, 0);
         }
     }
 }
@@ -151,6 +189,17 @@ pub fn min_safe_p(l1: i128, xmax: i64) -> u32 {
     }
     let bits = 128 - (worst as u128).leading_zeros();
     (bits + 1).min(64)
+}
+
+/// Plain exact dot product: the only arithmetic a provably-safe channel
+/// needs (kept branch-free so the compiler can vectorize it).
+#[inline]
+fn wide_dot(x: &[i64], w: &[i64]) -> i64 {
+    let mut acc = 0i64;
+    for (xi, wi) in x.iter().zip(w) {
+        acc += xi * wi;
+    }
+    acc
 }
 
 /// One traversal of the MACs of `x . w`, updating every register whose
@@ -174,9 +223,7 @@ fn fused_dot(
     if nw == 0 && ns == 0 {
         // Bound-gated fast path: nothing can overflow, so the whole dot
         // product is a plain wide dot the compiler can vectorize.
-        for (xi, wi) in x.iter().zip(w) {
-            wide += xi * wi;
-        }
+        wide = wide_dot(x, w);
     } else {
         let wrap_active = &plan.wrap[..nw];
         let sat_active = &plan.sat[..ns];
@@ -251,165 +298,430 @@ pub fn dot_accumulate_multi(x: &[i64], w: &[i64], modes: &[AccMode]) -> Vec<DotR
     out
 }
 
-/// Results a worker produces for its row chunk.
-struct Chunk {
-    /// Per-mode dequantized outputs, `rows_in_chunk * c_out` each.
-    out: Vec<Vec<f32>>,
-    /// Wide-register dequantized outputs for the chunk.
-    out_wide: Vec<f32>,
-    /// Per-mode overflow statistics for the chunk.
-    stats: Vec<OverflowStats>,
+/// Per-layer kernel context built once per plan: the l1-sorted channel
+/// order that turns the per-(row, channel) bound gate into one
+/// `partition_point` per row, plus the weight panels the safe-span GEMM
+/// streams.
+struct LayerKernel<'w> {
+    w: &'w QTensor,
+    /// Channel ids sorted ascending by integer l1 norm (stable, so the
+    /// order — and every downstream result — is deterministic).
+    order: Vec<usize>,
+    /// `row_l1[order[i]]`, ascending: the partition_point axis.
+    l1_sorted: Vec<i128>,
+    /// Per-channel l1 norms by original channel id (the per-channel
+    /// `min_safe_p` gate inside the simulated span).
+    row_l1: Vec<i128>,
+    /// Weight codes packed for the safe-span GEMM in `order` (None when
+    /// some code exceeds i32; the engine then falls back to unpacked wide
+    /// dots for safe channels).
+    packed: Option<PackedWeights>,
 }
 
-/// The single-threaded kernel core shared by [`LayerPlan`] workers and the
-/// per-layer steps of [`NetworkPlan`] workers: simulate rows `r0..r1` of
-/// `x . w^T` under every mode of `plan`, gating each (row, channel) pair on
-/// `row_l1[c] * max|x_row|`.
-fn simulate_chunk(
-    w: &QTensor,
-    row_l1: &[i128],
+impl<'w> LayerKernel<'w> {
+    fn new(w: &'w QTensor) -> LayerKernel<'w> {
+        // One source of truth for the per-channel norm: QTensor::row_l1
+        // (Eq. 13), widened to i128 for the overflow-proof bound products.
+        let row_l1: Vec<i128> = w.row_l1().into_iter().map(|v| v as i128).collect();
+        let mut order: Vec<usize> = (0..w.c_out).collect();
+        order.sort_by_key(|&c| row_l1[c]);
+        let l1_sorted: Vec<i128> = order.iter().map(|&c| row_l1[c]).collect();
+        let packed = PackedWeights::pack(w, &order);
+        LayerKernel { w, order, l1_sorted, row_l1, packed }
+    }
+
+    /// Length of the provably-safe prefix of `order` for a row with
+    /// `max|x| = xmax`: every simulated register is at least `min_p` bits
+    /// wide, so a channel is fully safe iff `l1 * xmax <= 2^(min_p-1) - 1`
+    /// — the same test as `min_safe_p(l1, xmax) <= min_p`, hoisted to one
+    /// `partition_point` over the sorted norms.
+    fn safe_prefix(&self, xmax: i64, min_p: Option<u32>) -> usize {
+        // No per-MAC registers: every mode resolves from the exact sum.
+        let Some(p) = min_p else { return self.order.len() };
+        if p >= 64 {
+            // min_safe_p never reports more than 64 bits.
+            return self.order.len();
+        }
+        let cap = (1i128 << (p - 1)) - 1;
+        let xm = xmax as i128;
+        self.l1_sorted.partition_point(|&l1| l1 * xm <= cap)
+    }
+}
+
+/// Per-worker scratch arena for the block kernel, reused across row blocks
+/// (and, inside [`NetWorker`], across layers and mode groups): the block
+/// kernel itself allocates nothing once these buffers are warm.
+#[derive(Default)]
+struct SimScratch {
+    reg: Scratch,
+    dots: Vec<DotResult>,
+    /// Safe-span GEMM output, `rows * n_common`.
+    gemm: Vec<i64>,
+    /// Wide values of the current row, by original channel id.
+    wide_int: Vec<i64>,
+    /// Simulated-span per-slot values: `[unsafe_idx * n_modes + slot]`.
+    sim_vals: Vec<i64>,
+    /// Per-channel `w_scale * x_scale`.
+    scale: Vec<f32>,
+    /// Per-row `max|x|` over the block.
+    xmax: Vec<i64>,
+    /// Per-row safe-prefix length over the block.
+    n_safe: Vec<usize>,
+}
+
+/// The single-threaded four-stage block kernel shared by [`LayerPlan`]
+/// workers and the per-layer steps of [`NetworkPlan`] workers: simulate
+/// `rows` rows of `x . w^T` (flat row-major `x`, `rows * k` long) under
+/// every mode of `plan`, writing dequantized per-mode outputs into
+/// `mode_out[slot]` and the wide outputs into `wide_out` (each
+/// `rows * c_out`), and accumulating per-mode stats into `stats`.
+#[allow(clippy::too_many_arguments)]
+fn simulate_block(
+    kern: &LayerKernel,
     plan: &ModePlan,
-    x: &IntMatrix,
+    x: &[i64],
+    rows: usize,
     x_scale: f32,
-    r0: usize,
-    r1: usize,
-) -> Chunk {
+    ws: &mut SimScratch,
+    mode_out: &mut [&mut [f32]],
+    wide_out: &mut [f32],
+    stats: &mut [OverflowStats],
+) {
+    let w = kern.w;
     let c_out = w.c_out;
     let k = w.k;
     let n_modes = plan.modes.len();
-    let rows = r1 - r0;
-    let mut out = vec![vec![0f32; rows * c_out]; n_modes];
-    let mut out_wide = vec![0f32; rows * c_out];
-    let mut stats = vec![OverflowStats::default(); n_modes];
-    let mut scratch = Scratch::for_plan(plan);
-    let mut dots = vec![DotResult { value: 0, overflows: 0 }; n_modes];
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(wide_out.len(), rows * c_out);
+    debug_assert_eq!(mode_out.len(), n_modes);
+    debug_assert_eq!(stats.len(), n_modes);
+    if rows == 0 || c_out == 0 {
+        return;
+    }
+    let min_p = plan.min_sim_p();
 
-    for (ri, bi) in (r0..r1).enumerate() {
-        let xb = x.row(bi);
-        let xmax = abs_max_of(xb);
-        for c in 0..c_out {
-            let p_safe = min_safe_p(row_l1[c], xmax);
-            let wide = fused_dot(plan, xb, w.row(c), p_safe, &mut scratch, &mut dots);
-            let scale = w.scales[c] * x_scale;
-            let idx = ri * c_out + c;
-            out_wide[idx] = wide as f32 * scale + w.bias[c];
-            for (mi, d) in dots.iter().enumerate() {
-                stats[mi].record(k, d.overflows, d.value, wide);
-                out[mi][idx] = d.value as f32 * scale + w.bias[c];
+    // Stage 1: per-row safe/unsafe partition, plus the block-wide common
+    // prefix the multi-row GEMM covers.
+    ws.xmax.clear();
+    ws.n_safe.clear();
+    let mut n_common = c_out;
+    for ri in 0..rows {
+        let xm = abs_max_of(&x[ri * k..(ri + 1) * k]);
+        let ns = kern.safe_prefix(xm, min_p);
+        n_common = n_common.min(ns);
+        ws.xmax.push(xm);
+        ws.n_safe.push(ns);
+    }
+
+    // Stage 2: packed blocked GEMM over the common safe prefix.
+    ws.gemm.clear();
+    if n_common > 0 {
+        match &kern.packed {
+            Some(packed) => {
+                ws.gemm.resize(rows * n_common, 0);
+                packed.gemm_into(x, rows, n_common, &mut ws.gemm);
+            }
+            None => {
+                // Codes beyond i32: keep exactness on the unpacked rows.
+                ws.gemm.reserve(rows * n_common);
+                for ri in 0..rows {
+                    let xrow = &x[ri * k..(ri + 1) * k];
+                    for &c in &kern.order[..n_common] {
+                        ws.gemm.push(wide_dot(xrow, w.row(c)));
+                    }
+                }
             }
         }
     }
-    Chunk { out, out_wide, stats }
+
+    ws.scale.clear();
+    ws.scale.extend(w.scales.iter().map(|s| s * x_scale));
+    ws.wide_int.resize(c_out, 0);
+    ws.sim_vals.resize(c_out * n_modes, 0);
+    ws.dots.resize(n_modes, DotResult { value: 0, overflows: 0 });
+    ws.reg.ensure(plan.scratch_len());
+
+    for ri in 0..rows {
+        let xrow = &x[ri * k..(ri + 1) * k];
+        let row_off = ri * c_out;
+        let xmax = ws.xmax[ri];
+        let n_safe = ws.n_safe[ri];
+
+        // Safe-span wides: the GEMM prefix plus the per-row remainder the
+        // block-wide tile could not cover.
+        for (ci, &c) in kern.order[..n_common].iter().enumerate() {
+            ws.wide_int[c] = ws.gemm[ri * n_common + ci];
+        }
+        for &c in &kern.order[n_common..n_safe] {
+            ws.wide_int[c] = wide_dot(xrow, w.row(c));
+        }
+
+        // Stage 3: register simulation only for the channels the bound
+        // cannot clear; per-slot values stashed for the overwrite below.
+        for (ui, &c) in kern.order[n_safe..].iter().enumerate() {
+            let p_safe = min_safe_p(kern.row_l1[c], xmax);
+            let wide = fused_dot(plan, xrow, w.row(c), p_safe, &mut ws.reg, &mut ws.dots);
+            ws.wide_int[c] = wide;
+            for (slot, d) in ws.dots.iter().enumerate() {
+                stats[slot].record(k, d.overflows, d.value, wide);
+                ws.sim_vals[ui * n_modes + slot] = d.value;
+            }
+        }
+
+        // Dequantized wide row (every safe channel's value under every
+        // register model).
+        for c in 0..c_out {
+            wide_out[row_off + c] = ws.wide_int[c] as f32 * ws.scale[c] + w.bias[c];
+        }
+
+        // Safe-span stats in bulk: each safe channel would `record(k, 0,
+        // wide, wide)` for every wrap/sat register and every Wide mode —
+        // dots/macs/outputs bumps with exactly-zero error terms.
+        let ns64 = n_safe as u64;
+        for r in plan.wrap.iter().chain(plan.sat.iter()) {
+            let s = &mut stats[r.slot];
+            s.dots += ns64;
+            s.macs += ns64 * k as u64;
+            s.outputs += ns64;
+        }
+
+        // Per-mode rows: the wide row everywhere, then overwrite the
+        // simulated span with each register's own values.
+        for r in plan.wrap.iter().chain(plan.sat.iter()) {
+            let dst = &mut mode_out[r.slot][row_off..row_off + c_out];
+            dst.copy_from_slice(&wide_out[row_off..row_off + c_out]);
+            for (ui, &c) in kern.order[n_safe..].iter().enumerate() {
+                dst[c] = ws.sim_vals[ui * n_modes + r.slot] as f32 * ws.scale[c] + w.bias[c];
+            }
+        }
+        for (slot, mode) in &plan.finals {
+            match *mode {
+                AccMode::Wide => {
+                    let s = &mut stats[*slot];
+                    s.dots += ns64;
+                    s.macs += ns64 * k as u64;
+                    s.outputs += ns64;
+                    mode_out[*slot][row_off..row_off + c_out]
+                        .copy_from_slice(&wide_out[row_off..row_off + c_out]);
+                }
+                AccMode::SaturateFinal { p_bits } => {
+                    let (lo, hi) = range(p_bits);
+                    // Safe-span stats (the simulated span was recorded
+                    // through the dots loop above; the clip test still
+                    // applies to safe channels).
+                    for &c in &kern.order[..n_safe] {
+                        let wide = ws.wide_int[c];
+                        let clipped = wide.clamp(lo, hi);
+                        stats[*slot].record(k, u32::from(clipped != wide), clipped, wide);
+                    }
+                    let dst = &mut mode_out[*slot][row_off..row_off + c_out];
+                    for c in 0..c_out {
+                        let clipped = ws.wide_int[c].clamp(lo, hi);
+                        dst[c] = clipped as f32 * ws.scale[c] + w.bias[c];
+                    }
+                }
+                _ => unreachable!("finals only hold Wide/SaturateFinal"),
+            }
+        }
+    }
 }
 
-/// Chunk `batch` rows across up to `threads` scoped workers and collect
-/// each worker's result **in row order**, so every stats merge downstream is
-/// deterministic for a given thread count (and exact vs the sequential walk
-/// while `abs_err_sum` stays below 2^53). Shared by [`LayerPlan`] and
-/// [`NetworkPlan`] so the ceil-div chunk sizing and join-order contract live
-/// in exactly one place.
-fn par_row_chunks<C: Send>(
-    batch: usize,
-    threads: usize,
-    run: impl Fn(usize, usize) -> C + Sync,
-) -> Vec<C> {
-    if threads <= 1 || batch <= 1 {
-        return vec![run(0, batch)];
+/// Rows per scheduler block: small enough that the atomic queue can
+/// rebalance simulation-heavy blocks across workers, large enough to
+/// amortize a queue grab and feed the GEMM's row tile.
+fn row_block_size(batch: usize, threads: usize) -> usize {
+    if threads <= 1 {
+        return batch.max(1);
     }
-    let t = threads.min(batch);
-    let per = batch.div_euclid(t) + usize::from(batch % t != 0);
-    let bounds: Vec<(usize, usize)> = (0..batch)
-        .step_by(per.max(1))
-        .map(|r0| (r0, (r0 + per).min(batch)))
-        .collect();
-    let run = &run;
+    batch.div_ceil(threads * 8).max(1)
+}
+
+/// Drain `tasks` across up to `threads` scoped workers through an
+/// atomic-counter queue (dynamic scheduling: a worker grabs the next block
+/// the moment it finishes its last one). Each worker builds its own scratch
+/// via `mk_worker` and `work` consumes each task exactly once; because
+/// every task owns disjoint output slices and its own stats slot, results
+/// are bit-identical for any thread count.
+fn run_queue<T: Send, W>(
+    tasks: Vec<Mutex<Option<T>>>,
+    threads: usize,
+    mk_worker: impl Fn() -> W + Sync,
+    work: impl Fn(&mut W, T) + Sync,
+) {
+    let n = tasks.len();
+    if n == 0 {
+        return;
+    }
+    let t = threads.max(1).min(n);
+    if t == 1 {
+        let mut w = mk_worker();
+        for cell in tasks {
+            if let Some(task) = cell.into_inner().expect("accsim task mutex poisoned") {
+                work(&mut w, task);
+            }
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let tasks = &tasks;
+    let next = &next;
+    let mk_worker = &mk_worker;
+    let work = &work;
     std::thread::scope(|s| {
-        let handles: Vec<_> =
-            bounds.iter().map(|&(r0, r1)| s.spawn(move || run(r0, r1))).collect();
-        handles.into_iter().map(|h| h.join().expect("accsim worker panicked")).collect()
-    })
+        for _ in 0..t {
+            s.spawn(move || {
+                let mut w = mk_worker();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let task = tasks[i]
+                        .lock()
+                        .expect("accsim task mutex poisoned")
+                        .take()
+                        .expect("row block claimed twice");
+                    work(&mut w, task);
+                }
+            });
+        }
+    });
+}
+
+/// One row block's disjoint output slices plus its stats slot (merged in
+/// block order after the join, so totals are thread-count independent).
+struct LayerTask<'a> {
+    r0: usize,
+    r1: usize,
+    mode_out: Vec<&'a mut [f32]>,
+    wide_out: &'a mut [f32],
+    stats: &'a mut [OverflowStats],
 }
 
 /// Bounds-aware execution plan for one quantized layer: the mode partition
-/// plus per-channel `Σ|w_int|` norms that drive the overflow gate.
+/// plus the l1-sorted channel order and packed weight panels that drive the
+/// safety-partitioned kernel.
 pub struct LayerPlan<'w> {
-    w: &'w QTensor,
+    kern: LayerKernel<'w>,
     plan: ModePlan,
-    /// Per-output-channel l1 norm of the integer codes (i128: overflow-proof
-    /// for any K at any weight width).
-    row_l1: Vec<i128>,
 }
 
 impl<'w> LayerPlan<'w> {
     pub fn new(w: &'w QTensor, modes: &[AccMode]) -> LayerPlan<'w> {
-        // One source of truth for the per-channel norm: QTensor::row_l1
-        // (Eq. 13), widened to i128 for the overflow-proof bound products.
-        let row_l1 = w.row_l1().into_iter().map(|v| v as i128).collect();
-        LayerPlan { w, plan: ModePlan::new(modes), row_l1 }
+        LayerPlan { kern: LayerKernel::new(w), plan: ModePlan::new(modes) }
     }
 
     pub fn modes(&self) -> &[AccMode] {
         self.plan.modes()
     }
 
-    /// Simulate rows `r0..r1` of the batch; the single-threaded kernel core.
-    fn simulate_rows(&self, x: &IntMatrix, x_scale: f32, r0: usize, r1: usize) -> Chunk {
-        simulate_chunk(self.w, &self.row_l1, &self.plan, x, x_scale, r0, r1)
-    }
-
     /// Execute over a batch with an explicit worker count (tests use this to
     /// pin thread counts; [`Self::execute`] picks one automatically).
     pub fn execute_threads(&self, x: &IntMatrix, x_scale: f32, threads: usize) -> Vec<MatmulStats> {
         let batch = x.rows();
-        assert_eq!(x.cols(), self.w.k, "input cols {} vs layer k {}", x.cols(), self.w.k);
-        let c_out = self.w.c_out;
+        let w = self.kern.w;
+        assert_eq!(x.cols(), w.k, "input cols {} vs layer k {}", x.cols(), w.k);
+        let c_out = w.c_out;
         let n_modes = self.plan.modes.len();
-
-        let chunks: Vec<Chunk> =
-            par_row_chunks(batch, threads, |r0, r1| self.simulate_rows(x, x_scale, r0, r1));
-
-        // Stitch chunk outputs back into [batch, c_out] tensors per mode.
-        let mut out_wide = Vec::with_capacity(batch * c_out);
-        for ch in &chunks {
-            out_wide.extend_from_slice(&ch.out_wide);
+        if n_modes == 0 {
+            return Vec::new();
         }
-        let out_wide = Tensor::new(vec![batch, c_out], out_wide);
 
-        (0..n_modes)
-            .map(|mi| {
-                let mut data = Vec::with_capacity(batch * c_out);
-                let mut stats = OverflowStats::default();
-                for ch in &chunks {
-                    data.extend_from_slice(&ch.out[mi]);
-                    stats.merge(&ch.stats[mi]);
-                }
-                MatmulStats {
-                    out: Tensor::new(vec![batch, c_out], data),
-                    out_wide: out_wide.clone(),
+        let mut mode_bufs: Vec<Vec<f32>> =
+            (0..n_modes).map(|_| vec![0f32; batch * c_out]).collect();
+        let mut wide_buf = vec![0f32; batch * c_out];
+        let mut merged = vec![OverflowStats::default(); n_modes];
+
+        if batch > 0 && c_out > 0 {
+            let t = threads.max(1).min(batch);
+            let block_rows = row_block_size(batch, t);
+            let n_blocks = batch.div_ceil(block_rows);
+            let elems = block_rows * c_out;
+            let mut block_stats = vec![OverflowStats::default(); n_blocks * n_modes];
+            let tasks: Vec<Mutex<Option<LayerTask>>> = {
+                let mut mode_iters: Vec<_> =
+                    mode_bufs.iter_mut().map(|b| b.chunks_mut(elems)).collect();
+                let mut wide_iter = wide_buf.chunks_mut(elems);
+                let mut stats_iter = block_stats.chunks_mut(n_modes);
+                (0..n_blocks)
+                    .map(|bi| {
+                        let r0 = bi * block_rows;
+                        let r1 = (r0 + block_rows).min(batch);
+                        Mutex::new(Some(LayerTask {
+                            r0,
+                            r1,
+                            mode_out: mode_iters
+                                .iter_mut()
+                                .map(|it| it.next().expect("mode block slice"))
+                                .collect(),
+                            wide_out: wide_iter.next().expect("wide block slice"),
+                            stats: stats_iter.next().expect("stats block slice"),
+                        }))
+                    })
+                    .collect()
+            };
+            run_queue(tasks, t, SimScratch::default, |ws, task| {
+                let LayerTask { r0, r1, mut mode_out, wide_out, stats } = task;
+                simulate_block(
+                    &self.kern,
+                    &self.plan,
+                    x.rows_slice(r0, r1),
+                    r1 - r0,
+                    x_scale,
+                    ws,
+                    &mut mode_out,
+                    wide_out,
                     stats,
+                );
+            });
+            for bi in 0..n_blocks {
+                for (mi, m) in merged.iter_mut().enumerate() {
+                    m.merge(&block_stats[bi * n_modes + mi]);
                 }
+            }
+        }
+
+        let out_wide = Tensor::new(vec![batch, c_out], wide_buf);
+        mode_bufs
+            .into_iter()
+            .zip(merged)
+            .map(|(data, stats)| MatmulStats {
+                out: Tensor::new(vec![batch, c_out], data),
+                out_wide: out_wide.clone(),
+                stats,
             })
             .collect()
     }
 
-    /// Execute over a batch, choosing the worker count from the grid size
-    /// (small grids run inline — thread spawn would dominate).
+    /// Execute over a batch, choosing the worker count from the simulated
+    /// grid size (small grids run inline — thread spawn would dominate).
     pub fn execute(&self, x: &IntMatrix, x_scale: f32) -> Vec<MatmulStats> {
-        self.execute_threads(x, x_scale, worker_count(x.rows(), self.w.c_out, self.w.k))
+        let w = self.kern.w;
+        self.execute_threads(
+            x,
+            x_scale,
+            worker_count(x.rows(), w.c_out, w.k, self.plan.modes.len()),
+        )
     }
 }
 
-/// Pick a worker count for a `batch x c_out x k` MAC grid. Honors the
-/// `A2Q_ACCSIM_THREADS` environment variable when set.
-fn worker_count(batch: usize, c_out: usize, k: usize) -> usize {
+/// Pick a worker count for a `batch x c_out x k` MAC grid simulated under
+/// `n_modes` register models. Honors the `A2Q_ACCSIM_THREADS` environment
+/// variable when set.
+fn worker_count(batch: usize, c_out: usize, k: usize, n_modes: usize) -> usize {
     if let Ok(v) = std::env::var("A2Q_ACCSIM_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
         }
     }
-    // Below ~1M MACs the sim finishes in well under a millisecond; spawning
-    // threads would cost more than it saves.
-    if batch.saturating_mul(c_out).saturating_mul(k) < 1_000_000 {
+    // Below ~1M simulated MACs the pass finishes in well under a
+    // millisecond; spawning threads would cost more than it saves. The mode
+    // count scales the work exactly like the grid does — a 25-width sweep
+    // runs 25x the register updates of a single-mode call — so it is part
+    // of the product (the previous heuristic ignored it and under-counted
+    // sweeps by the mode factor).
+    let grid = batch.saturating_mul(c_out).saturating_mul(k);
+    if grid.saturating_mul(n_modes.max(1)) < 1_000_000 {
         return 1;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -452,14 +764,48 @@ pub struct NetworkStats {
     pub layer_stats: Vec<OverflowStats>,
 }
 
-/// Per-worker results for one row chunk of a network forward.
-struct NetChunk {
-    /// Per-mode final-layer outputs, `rows_in_chunk * c_out_last` each.
-    out: Vec<Vec<f32>>,
-    /// Per-mode wide final-layer outputs.
-    out_wide: Vec<Vec<f32>>,
-    /// `[layer][mode]` overflow statistics for the chunk.
-    layer_stats: Vec<Vec<OverflowStats>>,
+/// A mode group mid-flight: the slots whose propagated activations are
+/// still byte-identical, plus those activations as integer codes.
+struct Group {
+    slots: Vec<usize>,
+    codes: Vec<i64>,
+}
+
+/// Per-worker arena for the network engine: group activations, group
+/// outputs, register scratch and requantization buffers — every
+/// batch-sized allocation — recycle across blocks, layers and mode groups
+/// (the previous engine cloned per-slot output vectors and round-tripped
+/// every requantization through a `Tensor`). Small per-group bookkeeping
+/// (the group's [`ModePlan`] and slice-ref list) is still built per
+/// traversal; group counts are bounded by the mode count, so it stays off
+/// the MAC-dominated path.
+#[derive(Default)]
+struct NetWorker {
+    sim: SimScratch,
+    /// Groups entering the current layer / being assembled for the next.
+    cur: Vec<Group>,
+    next: Vec<Group>,
+    /// Per-group-slot dequantized outputs of the current layer.
+    outs: Vec<Vec<f32>>,
+    /// The group's shared wide output (computed once per group).
+    wide: Vec<f32>,
+    /// Per-group-slot stats staging, merged into the task's layer slots.
+    gstats: Vec<OverflowStats>,
+    /// Requantized-codes staging for the regroup-by-equality step.
+    qbuf: Vec<i64>,
+    /// Spare buffers recycled between groups.
+    code_pool: Vec<Vec<i64>>,
+    slot_pool: Vec<Vec<usize>>,
+}
+
+/// One row block of a network forward: per-mode final-layer output slices
+/// (simulated and wide) plus the block's `[layer][mode]` stats slots.
+struct NetTask<'a> {
+    r0: usize,
+    r1: usize,
+    out: Vec<&'a mut [f32]>,
+    out_wide: Vec<&'a mut [f32]>,
+    stats: &'a mut [OverflowStats],
 }
 
 /// Bounds-aware execution plan for a whole [`QNetwork`]: the multi-layer
@@ -470,25 +816,24 @@ struct NetChunk {
 ///
 /// Fusion across modes survives layer boundaries as long as the modes'
 /// activations remain byte-identical: all modes start fused at layer 0, and
-/// a mode only splits off into its own MAC traversal once its register has
-/// actually corrupted an activation somewhere in the chunk. Bit-exact
-/// against composing the scalar reference per mode
+/// a mode only splits off into its own traversal once its register has
+/// actually corrupted an activation somewhere in the block. The safe-span
+/// partition is applied per layer from the *propagated* per-row activation
+/// max — not a global worst case — so deeper layers whose activations
+/// shrink under requantization push more channels onto the GEMM path.
+/// Bit-exact against composing the scalar reference per mode
 /// ([`crate::model::network_forward_ref`]).
 pub struct NetworkPlan<'n> {
     net: &'n QNetwork,
     modes: Vec<AccMode>,
-    /// Per-layer per-channel `Σ|w_int|` norms driving the bound gate.
-    layer_l1: Vec<Vec<i128>>,
+    /// One kernel context (sorted order + packed panels) per layer.
+    kernels: Vec<LayerKernel<'n>>,
 }
 
 impl<'n> NetworkPlan<'n> {
     pub fn new(net: &'n QNetwork, modes: &[AccMode]) -> NetworkPlan<'n> {
-        let layer_l1 = net
-            .layers
-            .iter()
-            .map(|l| l.weights.row_l1().into_iter().map(|v| v as i128).collect())
-            .collect();
-        NetworkPlan { net, modes: modes.to_vec(), layer_l1 }
+        let kernels = net.layers.iter().map(|l| LayerKernel::new(&l.weights)).collect();
+        NetworkPlan { net, modes: modes.to_vec(), kernels }
     }
 
     pub fn modes(&self) -> &[AccMode] {
@@ -499,61 +844,108 @@ impl<'n> NetworkPlan<'n> {
         self.net.layers.len()
     }
 
-    /// Stream rows `r0..r1` through every layer; the single-threaded core.
-    fn forward_chunk(&self, x: &IntMatrix, r0: usize, r1: usize) -> NetChunk {
+    /// Stream rows `r0..r1` through every layer, writing the final layer's
+    /// outputs straight into the task's slices; the single-threaded core.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_block(
+        &self,
+        x: &IntMatrix,
+        r0: usize,
+        r1: usize,
+        ws: &mut NetWorker,
+        out: &mut [&mut [f32]],
+        out_wide: &mut [&mut [f32]],
+        stats: &mut [OverflowStats],
+    ) {
         let n_modes = self.modes.len();
         let depth = self.net.layers.len();
         let rows = r1 - r0;
-        let cols = x.cols();
-        let chunk = IntMatrix::from_flat(rows, cols, x.data()[r0 * cols..r1 * cols].to_vec());
-        // Mode groups: slots whose propagated activations are still
-        // byte-identical share one fused traversal per layer.
-        let mut groups: Vec<(Vec<usize>, IntMatrix)> = vec![((0..n_modes).collect(), chunk)];
-        let mut layer_stats = vec![vec![OverflowStats::default(); n_modes]; depth];
-        let mut out = vec![Vec::new(); n_modes];
-        let mut out_wide = vec![Vec::new(); n_modes];
+        let NetWorker { sim, cur, next, outs, wide, gstats, qbuf, code_pool, slot_pool } = ws;
+        debug_assert!(cur.is_empty() && next.is_empty());
+
+        // Layer 0 input: one group holding every mode over the block's rows.
+        {
+            let mut codes = code_pool.pop().unwrap_or_default();
+            codes.clear();
+            codes.extend_from_slice(x.rows_slice(r0, r1));
+            let mut slots = slot_pool.pop().unwrap_or_default();
+            slots.clear();
+            slots.extend(0..n_modes);
+            cur.push(Group { slots, codes });
+        }
 
         for (li, layer) in self.net.layers.iter().enumerate() {
+            let kern = &self.kernels[li];
+            let c_out = layer.weights.c_out;
             let last = li + 1 == depth;
-            let mut next: Vec<(Vec<usize>, IntMatrix)> = Vec::new();
-            for (slots, gx) in groups {
-                let gmodes: Vec<AccMode> = slots.iter().map(|&s| self.modes[s]).collect();
+            for g in cur.iter() {
+                let gmodes: Vec<AccMode> = g.slots.iter().map(|&s| self.modes[s]).collect();
                 let plan = ModePlan::new(&gmodes);
-                let ch = simulate_chunk(
-                    &layer.weights,
-                    &self.layer_l1[li],
-                    &plan,
-                    &gx,
-                    layer.in_quant.scale,
-                    0,
-                    rows,
-                );
-                for (gi, &slot) in slots.iter().enumerate() {
-                    layer_stats[li][slot].merge(&ch.stats[gi]);
+                let gn = g.slots.len();
+                while outs.len() < gn {
+                    outs.push(Vec::new());
+                }
+                for o in outs[..gn].iter_mut() {
+                    o.clear();
+                    o.resize(rows * c_out, 0.0);
+                }
+                wide.clear();
+                wide.resize(rows * c_out, 0.0);
+                gstats.clear();
+                gstats.resize(gn, OverflowStats::default());
+                {
+                    let mut refs: Vec<&mut [f32]> =
+                        outs[..gn].iter_mut().map(|v| v.as_mut_slice()).collect();
+                    simulate_block(
+                        kern,
+                        &plan,
+                        &g.codes,
+                        rows,
+                        layer.in_quant.scale,
+                        sim,
+                        &mut refs,
+                        wide,
+                        gstats,
+                    );
+                }
+                for (gi, &slot) in g.slots.iter().enumerate() {
+                    stats[li * n_modes + slot].merge(&gstats[gi]);
                 }
                 if last {
-                    for (gi, &slot) in slots.iter().enumerate() {
-                        out[slot] = ch.out[gi].clone();
-                        out_wide[slot] = ch.out_wide.clone();
+                    // The wide output is shared by the whole group: computed
+                    // once above, copied per slot.
+                    for (gi, &slot) in g.slots.iter().enumerate() {
+                        out[slot].copy_from_slice(&outs[gi]);
+                        out_wide[slot].copy_from_slice(wide);
                     }
                 } else {
-                    // Requantize each mode's activations onto the next
-                    // boundary's grid, then regroup: modes whose register
-                    // models produced identical activations stay fused.
+                    // Requantize each slot onto the next boundary's grid
+                    // (buffer to buffer, no Tensor round trip) and regroup:
+                    // slots whose register models produced identical
+                    // activations stay fused.
                     let nq = &self.net.layers[li + 1].in_quant;
-                    for (gi, &slot) in slots.iter().enumerate() {
-                        let t = Tensor::new(vec![rows, layer.weights.c_out], ch.out[gi].clone());
-                        let q = nq.quantize(&t);
-                        match next.iter().position(|(_, m)| *m == q) {
-                            Some(g) => next[g].0.push(slot),
-                            None => next.push((vec![slot], q)),
+                    for (gi, &slot) in g.slots.iter().enumerate() {
+                        nq.quantize_slice_into(&outs[gi], qbuf);
+                        match next.iter().position(|g2| g2.codes == *qbuf) {
+                            Some(gi2) => next[gi2].slots.push(slot),
+                            None => {
+                                let mut codes = code_pool.pop().unwrap_or_default();
+                                std::mem::swap(&mut codes, qbuf);
+                                let mut slots = slot_pool.pop().unwrap_or_default();
+                                slots.clear();
+                                slots.push(slot);
+                                next.push(Group { slots, codes });
+                            }
                         }
                     }
                 }
             }
-            groups = next;
+            for g in cur.drain(..) {
+                code_pool.push(g.codes);
+                slot_pool.push(g.slots);
+            }
+            std::mem::swap(cur, next);
         }
-        NetChunk { out, out_wide, layer_stats }
     }
 
     /// Execute over a batch with an explicit worker count (tests pin thread
@@ -570,35 +962,102 @@ impl<'n> NetworkPlan<'n> {
         let n_modes = self.modes.len();
         let depth = self.net.layers.len();
         let c_last = self.net.output_dim();
+        if n_modes == 0 {
+            return Vec::new();
+        }
 
-        let chunks: Vec<NetChunk> =
-            par_row_chunks(batch, threads, |r0, r1| self.forward_chunk(x, r0, r1));
+        let mut out_bufs: Vec<Vec<f32>> =
+            (0..n_modes).map(|_| vec![0f32; batch * c_last]).collect();
+        let mut wide_bufs: Vec<Vec<f32>> =
+            (0..n_modes).map(|_| vec![0f32; batch * c_last]).collect();
+        let mut merged: Vec<Vec<OverflowStats>> =
+            (0..n_modes).map(|_| vec![OverflowStats::default(); depth]).collect();
 
-        (0..n_modes)
-            .map(|mi| {
-                let mut data = Vec::with_capacity(batch * c_last);
-                let mut wide = Vec::with_capacity(batch * c_last);
-                let mut stats = vec![OverflowStats::default(); depth];
-                for ch in &chunks {
-                    data.extend_from_slice(&ch.out[mi]);
-                    wide.extend_from_slice(&ch.out_wide[mi]);
-                    for (li, s) in stats.iter_mut().enumerate() {
-                        s.merge(&ch.layer_stats[li][mi]);
+        if batch > 0 {
+            let t = threads.max(1).min(batch);
+            let block_rows = row_block_size(batch, t);
+            let n_blocks = batch.div_ceil(block_rows);
+            let elems = block_rows * c_last;
+            let stats_len = depth * n_modes;
+            let mut block_stats = vec![OverflowStats::default(); n_blocks * stats_len];
+            let tasks: Vec<Mutex<Option<NetTask>>> = {
+                let mut out_iters: Vec<_> = if elems > 0 {
+                    out_bufs.iter_mut().map(|b| b.chunks_mut(elems)).collect()
+                } else {
+                    Vec::new()
+                };
+                let mut wide_iters: Vec<_> = if elems > 0 {
+                    wide_bufs.iter_mut().map(|b| b.chunks_mut(elems)).collect()
+                } else {
+                    Vec::new()
+                };
+                let mut stats_iter = block_stats.chunks_mut(stats_len);
+                (0..n_blocks)
+                    .map(|bi| {
+                        let r0 = bi * block_rows;
+                        let r1 = (r0 + block_rows).min(batch);
+                        let (out, out_wide) = if elems > 0 {
+                            (
+                                out_iters
+                                    .iter_mut()
+                                    .map(|it| it.next().expect("out block slice"))
+                                    .collect(),
+                                wide_iters
+                                    .iter_mut()
+                                    .map(|it| it.next().expect("wide block slice"))
+                                    .collect(),
+                            )
+                        } else {
+                            // c_out_last == 0: outputs are empty but layer
+                            // stats still accumulate.
+                            (
+                                (0..n_modes).map(|_| Default::default()).collect(),
+                                (0..n_modes).map(|_| Default::default()).collect(),
+                            )
+                        };
+                        Mutex::new(Some(NetTask {
+                            r0,
+                            r1,
+                            out,
+                            out_wide,
+                            stats: stats_iter.next().expect("stats block slice"),
+                        }))
+                    })
+                    .collect()
+            };
+            run_queue(tasks, t, NetWorker::default, |ws, task| {
+                let NetTask { r0, r1, mut out, mut out_wide, stats } = task;
+                self.forward_block(x, r0, r1, ws, &mut out, &mut out_wide, stats);
+            });
+            for bi in 0..n_blocks {
+                let base = bi * stats_len;
+                for (mi, per_mode) in merged.iter_mut().enumerate() {
+                    for (li, slot) in per_mode.iter_mut().enumerate() {
+                        slot.merge(&block_stats[base + li * n_modes + mi]);
                     }
                 }
-                NetworkStats {
-                    out: Tensor::new(vec![batch, c_last], data),
-                    out_wide: Tensor::new(vec![batch, c_last], wide),
-                    layer_stats: stats,
-                }
+            }
+        }
+
+        out_bufs
+            .into_iter()
+            .zip(wide_bufs)
+            .zip(merged)
+            .map(|((data, wide), layer_stats)| NetworkStats {
+                out: Tensor::new(vec![batch, c_last], data),
+                out_wide: Tensor::new(vec![batch, c_last], wide),
+                layer_stats,
             })
             .collect()
     }
 
     /// Execute over a batch, choosing the worker count from the whole
-    /// network's MAC grid (small networks run inline).
+    /// network's simulated MAC grid (small networks run inline).
     pub fn execute(&self, x: &IntMatrix) -> Vec<NetworkStats> {
-        self.execute_threads(x, worker_count(x.rows(), self.net.macs_per_row(), 1))
+        self.execute_threads(
+            x,
+            worker_count(x.rows(), self.net.macs_per_row(), 1, self.modes.len()),
+        )
     }
 }
 
@@ -623,9 +1082,9 @@ pub fn network_forward_multi(
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use super::super::dot::dot_accumulate;
     use super::super::matmul::qlinear_forward_ref;
+    use super::*;
     use crate::rng::Rng;
 
     fn all_modes(p: u32) -> Vec<AccMode> {
@@ -652,6 +1111,38 @@ mod tests {
                         worst > acc_max(p - 1) as i128,
                         "p not minimal: l1={l1} xmax={xmax} p={p}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn safe_prefix_agrees_with_per_channel_gate() {
+        // The stage-1 partition must be exactly the old per-(row, channel)
+        // test `min_safe_p(l1, xmax) <= min_p` applied along the sorted
+        // order, for every xmax and every plan width.
+        let mut rng = Rng::new(0x51);
+        for _ in 0..200 {
+            let c_out = 1 + rng.below(12);
+            let k = rng.below(20);
+            let w = QTensor {
+                codes: (0..c_out * k).map(|_| rng.below(2001) as i64 - 1000).collect(),
+                scales: vec![1.0; c_out],
+                bias: vec![0.0; c_out],
+                c_out,
+                k,
+            };
+            let kern = LayerKernel::new(&w);
+            for xmax in [0i64, 1, 3, 255, 1 << 20] {
+                for min_p in [None, Some(1), Some(2), Some(8), Some(16), Some(63), Some(64)] {
+                    let n_safe = kern.safe_prefix(xmax, min_p);
+                    for (ci, &c) in kern.order.iter().enumerate() {
+                        let safe = match min_p {
+                            None => true,
+                            Some(p) => min_safe_p(kern.row_l1[c], xmax) <= p,
+                        };
+                        assert_eq!(safe, ci < n_safe, "ci={ci} xmax={xmax} min_p={min_p:?}");
+                    }
                 }
             }
         }
@@ -754,7 +1245,7 @@ mod tests {
             AccMode::Wrap { p_bits: 8 }, // duplicate keeps its own slot
         ];
         let plan = NetworkPlan::new(&net, &modes);
-        for threads in [1, 2, 5] {
+        for threads in [1, 2, 7] {
             let multi = plan.execute_threads(&x, threads);
             assert_eq!(multi.len(), modes.len());
             for (mi, mode) in modes.iter().enumerate() {

@@ -1,0 +1,235 @@
+//! Packed blocked integer GEMM: the fast path for channels the paper's
+//! overflow bound proves safe.
+//!
+//! For an A2Q-constrained layer at (or above) its target accumulator width,
+//! *every* channel is provably overflow-free, so the whole forward collapses
+//! to a plain integer matrix multiply — no register simulation, no per-MAC
+//! bookkeeping. This module supplies that multiply as a cache-blocked kernel
+//! over weights packed once per plan:
+//!
+//! * **Packing** — [`PackedWeights::pack`] lays the weight codes out in
+//!   channel-tile panels of [`NR`] channels, k-major within a panel
+//!   (`panel[kk * NR + j]` is MAC step `kk` of packed channel `j`), in the
+//!   caller's channel order (the engine passes its l1-sorted order so a safe
+//!   span is always a packed-channel *prefix*). Codes are narrowed to `i16`
+//!   when they fit (the common case: weights are ≤8-bit codes), else `i32`,
+//!   quartering/halving memory traffic versus the `i64` rows the register
+//!   simulator walks. Packing returns `None` for codes beyond `i32` and the
+//!   engine falls back to unpacked wide dots.
+//! * **Microkernel** — [`PackedWeights::gemm_into`] drives an
+//!   [`MR`]`x`[`NR`] register tile: each panel is streamed once per row
+//!   block, every loaded `x` value feeds [`NR`] channel lanes and every
+//!   loaded weight feeds [`MR`] batch rows. The inner loop is plain
+//!   `i64 += i64 * widen(code)` arithmetic with no branches, so the
+//!   autovectorizer can unroll it; exact integer addition keeps the result
+//!   bit-identical to any other MAC order, which is what lets the engine's
+//!   bit-exactness property tests treat GEMM and scalar paths as one.
+//!
+//! Accumulation stays in `i64` — identical to the wide reference register —
+//! so the GEMM output *is* the `AccMode::Wide` result for those channels.
+
+use crate::quant::QTensor;
+
+/// Channel-tile width: packed channels per panel (accumulator lanes of the
+/// microkernel).
+pub const NR: usize = 8;
+/// Row-tile height over the batch: rows sharing one panel traversal.
+pub const MR: usize = 4;
+
+/// Weight codes packed at the narrowest width that holds every code.
+enum Panels {
+    I16(Vec<i16>),
+    I32(Vec<i32>),
+}
+
+/// Weight codes packed once per plan into NR-channel, k-major panels.
+pub struct PackedWeights {
+    panels: Panels,
+    /// Number of packed channels (panels are zero-padded past it).
+    n_ch: usize,
+    /// MAC depth shared by every channel.
+    k: usize,
+}
+
+impl PackedWeights {
+    /// Pack rows of `w` in `order` (a permutation of `0..w.c_out`). Returns
+    /// `None` when some code exceeds `i32` — callers then keep the unpacked
+    /// `i64` path.
+    pub fn pack(w: &QTensor, order: &[usize]) -> Option<PackedWeights> {
+        debug_assert_eq!(order.len(), w.c_out);
+        let lo = w.codes.iter().copied().min().unwrap_or(0);
+        let hi = w.codes.iter().copied().max().unwrap_or(0);
+        let panels = if lo >= i16::MIN as i64 && hi <= i16::MAX as i64 {
+            Panels::I16(pack_panels(w, order, |v| v as i16))
+        } else if lo >= i32::MIN as i64 && hi <= i32::MAX as i64 {
+            Panels::I32(pack_panels(w, order, |v| v as i32))
+        } else {
+            return None;
+        };
+        Some(PackedWeights { panels, n_ch: order.len(), k: w.k })
+    }
+
+    /// Number of packed channels.
+    pub fn channels(&self) -> usize {
+        self.n_ch
+    }
+
+    /// Wide (i64) dot products of `rows` batch rows (`x`, flat row-major,
+    /// `rows * k` long) against the packed-channel prefix `0..n_pref`,
+    /// written to `out[ri * n_pref + ci]` (`ci` in packed order). Bit-exact
+    /// against summing `x[ri] . w[order[ci]]` in any order.
+    pub fn gemm_into(&self, x: &[i64], rows: usize, n_pref: usize, out: &mut [i64]) {
+        debug_assert!(n_pref <= self.n_ch);
+        debug_assert_eq!(x.len(), rows * self.k);
+        debug_assert_eq!(out.len(), rows * n_pref);
+        match &self.panels {
+            Panels::I16(p) => gemm_span(p, self.k, x, rows, n_pref, out),
+            Panels::I32(p) => gemm_span(p, self.k, x, rows, n_pref, out),
+        }
+    }
+}
+
+/// Lay `w`'s rows out in `order` as NR-channel k-major panels, zero-padding
+/// the tail panel (zero weights contribute nothing and are never read back).
+fn pack_panels<T: Copy + Default>(
+    w: &QTensor,
+    order: &[usize],
+    cast: impl Fn(i64) -> T,
+) -> Vec<T> {
+    let k = w.k;
+    let n_panels = order.len().div_ceil(NR);
+    let mut data = vec![T::default(); n_panels * k * NR];
+    for (ci, &c) in order.iter().enumerate() {
+        let (pi, j) = (ci / NR, ci % NR);
+        let base = pi * k * NR;
+        for (kk, &code) in w.row(c).iter().enumerate() {
+            data[base + kk * NR + j] = cast(code);
+        }
+    }
+    data
+}
+
+/// The blocked kernel over one packed element type: MR x NR register tiles,
+/// panels streamed once per row block.
+fn gemm_span<T: Copy + Into<i64>>(
+    panels: &[T],
+    k: usize,
+    x: &[i64],
+    rows: usize,
+    n_pref: usize,
+    out: &mut [i64],
+) {
+    if rows == 0 || n_pref == 0 {
+        return;
+    }
+    let n_panels = n_pref.div_ceil(NR);
+    for pi in 0..n_panels {
+        let c0 = pi * NR;
+        let nc = NR.min(n_pref - c0);
+        let panel = &panels[pi * k * NR..(pi + 1) * k * NR];
+        let mut r0 = 0;
+        while r0 < rows {
+            let mr = MR.min(rows - r0);
+            let mut acc = [0i64; MR * NR];
+            for kk in 0..k {
+                let wrow = &panel[kk * NR..kk * NR + NR];
+                for mi in 0..mr {
+                    let xv = x[(r0 + mi) * k + kk];
+                    let lane = &mut acc[mi * NR..mi * NR + NR];
+                    for j in 0..NR {
+                        let wv: i64 = wrow[j].into();
+                        lane[j] += xv * wv;
+                    }
+                }
+            }
+            for mi in 0..mr {
+                for j in 0..nc {
+                    out[(r0 + mi) * n_pref + c0 + j] = acc[mi * NR + j];
+                }
+            }
+            r0 += mr;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    fn naive_dot(x: &[i64], w: &[i64]) -> i64 {
+        x.iter().zip(w).map(|(a, b)| a * b).sum()
+    }
+
+    fn random_layer(c_out: usize, k: usize, amp: i64, rng: &mut Rng) -> QTensor {
+        let w: Vec<f32> = (0..c_out * k)
+            .map(|_| (rng.below((2 * amp + 1) as usize) as i64 - amp) as f32)
+            .collect();
+        QTensor::from_export(
+            &Tensor::new(vec![c_out, k], w),
+            &Tensor::new(vec![c_out, 1], vec![1.0; c_out]),
+            &Tensor::from_vec(vec![0.0; c_out]),
+        )
+    }
+
+    #[test]
+    fn gemm_matches_naive_dots_over_random_shapes_and_prefixes() {
+        let mut rng = Rng::new(0x6E);
+        for case in 0..40 {
+            let c_out = 1 + rng.below(20);
+            let k = rng.below(70);
+            // amp 3000 forces the i16 packing on some cases and i32 on others
+            let amp = if case % 2 == 0 { 7 } else { 40_000 };
+            let w = random_layer(c_out, k, amp, &mut rng);
+            let order: Vec<usize> = {
+                let mut o: Vec<usize> = (0..c_out).collect();
+                rng.shuffle(&mut o);
+                o
+            };
+            let packed = PackedWeights::pack(&w, &order).expect("codes fit i32");
+            assert_eq!(packed.channels(), c_out);
+
+            let rows = rng.below(7);
+            let x: Vec<i64> =
+                (0..rows * k).map(|_| rng.below(511) as i64 - 255).collect();
+            for n_pref in [0, 1, c_out / 2, c_out] {
+                let mut out = vec![0i64; rows * n_pref];
+                packed.gemm_into(&x, rows, n_pref, &mut out);
+                for ri in 0..rows {
+                    for ci in 0..n_pref {
+                        let expect = naive_dot(&x[ri * k..(ri + 1) * k], w.row(order[ci]));
+                        assert_eq!(
+                            out[ri * n_pref + ci],
+                            expect,
+                            "case {case} row {ri} packed-ch {ci}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_rejects_codes_beyond_i32() {
+        let w = QTensor {
+            codes: vec![1, i32::MAX as i64 + 1],
+            scales: vec![1.0],
+            bias: vec![0.0],
+            c_out: 1,
+            k: 2,
+        };
+        assert!(PackedWeights::pack(&w, &[0]).is_none());
+    }
+
+    #[test]
+    fn k_zero_and_empty_rows_are_fine() {
+        let w = QTensor { codes: vec![], scales: vec![1.0; 3], bias: vec![0.0; 3], c_out: 3, k: 0 };
+        let packed = PackedWeights::pack(&w, &[2, 0, 1]).unwrap();
+        let mut out = vec![7i64; 2 * 3];
+        packed.gemm_into(&[], 2, 3, &mut out);
+        assert_eq!(out, vec![0i64; 6]);
+        let mut empty: Vec<i64> = vec![];
+        packed.gemm_into(&[], 0, 3, &mut empty);
+    }
+}

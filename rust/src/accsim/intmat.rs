@@ -71,6 +71,15 @@ impl IntMatrix {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Rows `r0..r1` as one contiguous flat slice (`(r1 - r0) * cols`
+    /// long): the zero-copy row-block view the blocked kernel engine
+    /// tiles over.
+    #[inline]
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> &[i64] {
+        debug_assert!(r0 <= r1 && r1 <= self.rows, "rows {r0}..{r1} of {}", self.rows);
+        &self.data[r0 * self.cols..r1 * self.cols]
+    }
+
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [i64] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
@@ -132,6 +141,16 @@ mod tests {
         let small = IntMatrix::from_flat(1, 3, vec![-7, 2, 5]);
         assert_eq!(small.row_abs_max(0), 7);
         assert_eq!(small.abs_max(), 7);
+    }
+
+    #[test]
+    fn rows_slice_views_contiguous_blocks() {
+        let m = IntMatrix::from_rows(&[vec![1, 2], vec![3, 4], vec![5, 6]]);
+        assert_eq!(m.rows_slice(0, 3), m.data());
+        assert_eq!(m.rows_slice(1, 3), &[3, 4, 5, 6]);
+        assert_eq!(m.rows_slice(2, 2), &[] as &[i64]);
+        let z = IntMatrix::zeros(2, 0);
+        assert_eq!(z.rows_slice(0, 2), &[] as &[i64]);
     }
 
     #[test]

@@ -78,6 +78,17 @@ pub fn qlinear_forward_ref(
     MatmulStats { out, out_wide, stats }
 }
 
+/// The scalar requantization step every quantizer entry point shares:
+/// rescale -> round to nearest -> clamp into the integer grid. One
+/// definition, so the batch quantizer ([`quantize_inputs`]) and the
+/// engine's buffer-to-buffer requantization
+/// ([`crate::model::ActQuant::quantize_slice_into`]) are bit-identical by
+/// construction.
+#[inline]
+pub fn quantize_code(v: f32, scale: f32, lo: i64, hi: i64) -> i64 {
+    ((v / scale).round() as i64).clamp(lo, hi)
+}
+
 /// Quantize a float input batch to integers on an N-bit unsigned grid with
 /// the given scale (the standard activation quantizer of paper Eq. 1, z=0),
 /// producing the flat [`IntMatrix`] the kernel engine consumes.
@@ -87,11 +98,7 @@ pub fn quantize_inputs(x: &Tensor, scale: f32, n_bits: u32, x_signed: bool) -> I
     } else {
         (0, (1i64 << n_bits) - 1)
     };
-    let data = x
-        .data()
-        .iter()
-        .map(|v| ((v / scale).round() as i64).clamp(lo, hi))
-        .collect();
+    let data = x.data().iter().map(|v| quantize_code(*v, scale, lo, hi)).collect();
     IntMatrix::from_flat(x.rows(), x.cols(), data)
 }
 

@@ -16,10 +16,13 @@
 //! bit-exact and platform-independent.
 //!
 //! Layout: [`dot`] holds the scalar single-register walk (the reference
-//! semantics); [`engine`] is the fused multi-width kernel engine — one MAC
-//! traversal simulates every requested P, channels proven safe by the
-//! paper's `Σ|w| * max|x|` bound skip register simulation, and batches fan
-//! out over scoped threads. Batched inputs travel as a flat row-major
+//! semantics); [`engine`] is the safety-partitioned kernel engine — each
+//! layer's channels are l1-sorted once per plan so one `partition_point`
+//! per row splits them into a provably-safe span (driven through the
+//! packed blocked integer GEMM in [`gemm`]) and a must-simulate remainder
+//! (one fused MAC traversal carrying every requested width), with row
+//! blocks fanned over scoped threads through an atomic work queue and
+//! per-worker scratch arenas. Batched inputs travel as a flat row-major
 //! [`IntMatrix`]. P-sweeps should call [`qlinear_forward_multi`] /
 //! [`dot_accumulate_multi`]; whole-network sweeps go through
 //! [`NetworkPlan`] / [`network_forward_multi`], which stream a batch
@@ -29,6 +32,7 @@
 
 pub mod dot;
 pub mod engine;
+pub mod gemm;
 pub mod intmat;
 pub mod matmul;
 pub mod reorder;
@@ -39,7 +43,10 @@ pub use engine::{
     dot_accumulate_multi, min_safe_p, network_forward_multi, qlinear_forward_multi, LayerPlan,
     ModePlan, NetworkPlan, NetworkStats,
 };
+pub use gemm::PackedWeights;
 pub use intmat::IntMatrix;
-pub use matmul::{qlinear_forward, qlinear_forward_ref, quantize_inputs, MatmulStats};
+pub use matmul::{
+    qlinear_forward, qlinear_forward_ref, quantize_code, quantize_inputs, MatmulStats,
+};
 pub use reorder::{reorder_study, ReorderScratch, ReorderStudy};
 pub use stats::OverflowStats;

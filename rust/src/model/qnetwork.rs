@@ -51,6 +51,19 @@ impl ActQuant {
     pub fn quantize(&self, x: &Tensor) -> IntMatrix {
         quantize_inputs(x, self.scale, self.n_bits, self.signed)
     }
+
+    /// The allocation-free core of [`Self::quantize`]: requantize a flat
+    /// dequantized-activation buffer into the caller's code buffer
+    /// (cleared, then filled). This is the inter-layer path of the fused
+    /// network engine — same [`crate::accsim::quantize_code`] step per
+    /// element as [`Self::quantize`], so the two are bit-identical, minus
+    /// the `Tensor`/[`IntMatrix`] round trip.
+    pub fn quantize_slice_into(&self, data: &[f32], out: &mut Vec<i64>) {
+        let (lo, hi) = self.int_range();
+        out.clear();
+        out.reserve(data.len());
+        out.extend(data.iter().map(|v| crate::accsim::quantize_code(*v, self.scale, lo, hi)));
+    }
 }
 
 /// A quantized dense layer: integer weights plus the quantizer its inputs
@@ -350,6 +363,16 @@ mod tests {
         let u = ActQuant::new(2, false, 1.0);
         assert_eq!(u.int_range(), (0, 3));
         assert_eq!(u.quantize(&x).row(0), &[3, 0, 1, 0]);
+    }
+
+    #[test]
+    fn quantize_slice_into_matches_quantize() {
+        let q = ActQuant::new(3, true, 0.37);
+        let x = Tensor::new(vec![2, 3], vec![10.0, -10.0, 0.61, -0.24, 1.11, -0.9]);
+        let m = q.quantize(&x);
+        let mut buf = vec![42i64; 1]; // stale contents must be cleared
+        q.quantize_slice_into(x.data(), &mut buf);
+        assert_eq!(buf.as_slice(), m.data());
     }
 
     #[test]

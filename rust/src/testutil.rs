@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::accsim::IntMatrix;
 use crate::model::{NetSpec, QNetwork};
+use crate::quant::a2q::a2q_quantize_row;
 use crate::quant::QTensor;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -24,6 +25,34 @@ pub fn psweep_layer(c_out: usize, k: usize, seed: u64) -> QTensor {
         &Tensor::new(vec![c_out, 1], vec![0.01; c_out]),
         &Tensor::from_vec(vec![0.0; c_out]),
     )
+}
+
+/// Deterministic A2Q-constrained layer fixture: every channel is pushed
+/// through the paper's weight quantizer at target accumulator width
+/// `p_bits` for `n_bits`-bit unsigned inputs, so the Eq. 15 cap holds and a
+/// sweep at or above `p_bits` is provably overflow-free on every channel —
+/// the scenario the safe-span GEMM engine collapses to a plain integer
+/// matmul. Shared by the release bench (`benches/runtime_hotpath.rs`) and
+/// the test-suite smoke (`tests/bench_smoke.rs`).
+pub fn psweep_constrained_layer(
+    c_out: usize,
+    k: usize,
+    p_bits: u32,
+    n_bits: u32,
+    seed: u64,
+) -> QTensor {
+    let mut rng = Rng::new(seed);
+    let mut codes = Vec::with_capacity(c_out * k);
+    let mut scales = Vec::with_capacity(c_out);
+    for _ in 0..c_out {
+        let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        // Cap target far above the Eq. 23 ceiling so the accumulator
+        // constraint (not t) binds — same regime as QNetwork::synthesize.
+        let (w_int, s) = a2q_quantize_row(&v, -6.0, 30.0, 8, n_bits, p_bits, false);
+        codes.extend(w_int.iter().map(|w| *w as i64));
+        scales.push(s);
+    }
+    QTensor { codes, scales, bias: vec![0.0; c_out], c_out, k }
 }
 
 /// Deterministic calibrated A2Q-constrained network fixture (target P = 16)

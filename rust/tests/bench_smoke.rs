@@ -14,7 +14,7 @@ use std::time::Instant;
 use a2q::accsim::{qlinear_forward_multi, qlinear_forward_ref, AccMode, IntMatrix};
 use a2q::perf::{self, BenchRecord};
 use a2q::rng::Rng;
-use a2q::testutil::psweep_layer;
+use a2q::testutil::{psweep_constrained_layer, psweep_layer};
 
 #[test]
 fn bench_smoke_psweep_records_journal() {
@@ -53,6 +53,34 @@ fn bench_smoke_psweep_records_journal() {
             .sum::<u64>();
     }
     let t_fused = t1.elapsed();
+
+    // The headline A2Q scenario at smoke scale: a constrained layer swept
+    // at/above its target width, where the Eq. 15 cap proves every channel
+    // safe and the partitioned engine rides the packed GEMM end to end.
+    let clayer = psweep_constrained_layer(c_out, k, 16, 8, 7);
+    let cmodes: Vec<AccMode> = (16..=40).map(|p| AccMode::Wrap { p_bits: p }).collect();
+    let cmacs = (reps * cmodes.len() * batch * c_out * k) as u64;
+    let c_once = qlinear_forward_multi(&x, 1.0, &clayer, &cmodes);
+    for (mi, mode) in cmodes.iter().enumerate() {
+        let r = qlinear_forward_ref(&x, 1.0, &clayer, *mode);
+        assert_eq!(c_once[mi].out.data(), r.out.data(), "{mode:?}");
+        assert_eq!(c_once[mi].stats.overflow_events, 0, "{mode:?} overflowed at/above target");
+    }
+    let t2 = Instant::now();
+    for _ in 0..reps {
+        for mode in &cmodes {
+            sink ^= qlinear_forward_ref(&x, 1.0, &clayer, *mode).stats.overflow_events;
+        }
+    }
+    let t_cref = t2.elapsed();
+    let t3 = Instant::now();
+    for _ in 0..reps {
+        sink ^= qlinear_forward_multi(&x, 1.0, &clayer, &cmodes)
+            .iter()
+            .map(|s| s.stats.overflow_events)
+            .sum::<u64>();
+    }
+    let t_cgemm = t3.elapsed();
     std::hint::black_box(sink);
 
     let speedup = t_ref.as_secs_f64() / t_fused.as_secs_f64().max(1e-12);
@@ -76,10 +104,28 @@ fn bench_smoke_psweep_records_journal() {
         ns_per_iter: per_iter(t_fused),
         mac_per_s: Some(mac_rate(t_fused)),
     };
-    match perf::record_benches(&[baseline.clone(), fused.clone()]) {
+    let cmac_rate = |t: std::time::Duration| cmacs as f64 / t.as_secs_f64().max(1e-12);
+    let cbaseline = BenchRecord {
+        name: "accsim_smoke/psweep25_constrained_scalar".into(),
+        ns_per_iter: per_iter(t_cref),
+        mac_per_s: Some(cmac_rate(t_cref)),
+    };
+    let cgemm = BenchRecord {
+        name: "accsim_smoke/psweep25_constrained_gemm".into(),
+        ns_per_iter: per_iter(t_cgemm),
+        mac_per_s: Some(cmac_rate(t_cgemm)),
+    };
+    println!(
+        "smoke constrained psweep ({} widths at/above target, {batch}x{c_out}x{k}, debug \
+         profile): safe-span GEMM {:.1}x over per-P scalar",
+        cmodes.len(),
+        t_cref.as_secs_f64() / t_cgemm.as_secs_f64().max(1e-12)
+    );
+    match perf::record_benches(&[baseline.clone(), fused.clone(), cbaseline, cgemm]) {
         Ok(path) => {
             let journal = perf::parse_journal(&std::fs::read_to_string(path).unwrap()).unwrap();
             assert!(journal.iter().any(|r| r.name == "accsim_smoke/psweep25_fused_engine"));
+            assert!(journal.iter().any(|r| r.name == "accsim_smoke/psweep25_constrained_gemm"));
         }
         Err(e) => eprintln!("perf journal not writable here ({e}); measurements printed only"),
     }

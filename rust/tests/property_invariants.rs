@@ -159,7 +159,7 @@ fn prop_fused_multi_p_bit_exact() {
         let refs: Vec<_> =
             modes.iter().map(|m| qlinear_forward_ref(&x, x_scale, &w, *m)).collect();
         let plan = LayerPlan::new(&w, &modes);
-        for threads in [1usize, 2, 5] {
+        for threads in [1usize, 2, 7] {
             let multi = plan.execute_threads(&x, x_scale, threads);
             assert_eq!(multi.len(), modes.len(), "case {case}");
             for (mi, mode) in modes.iter().enumerate() {
@@ -249,7 +249,7 @@ fn prop_network_fused_bit_exact() {
 
         let refs: Vec<_> = modes.iter().map(|m| network_forward_ref(&net, &x, *m)).collect();
         let plan = NetworkPlan::new(&net, &modes);
-        for threads in [1usize, 2, 5] {
+        for threads in [1usize, 2, 7] {
             let multi = plan.execute_threads(&x, threads);
             assert_eq!(multi.len(), modes.len(), "case {case}");
             for (mi, mode) in modes.iter().enumerate() {
@@ -278,6 +278,234 @@ fn prop_network_fused_bit_exact() {
             }
         }
     }
+}
+
+/// A register-model multiset built to stress the safety partition: every
+/// family, extreme widths (Wrap can go down to 1 bit, where *no* nonzero
+/// channel is ever fully safe), and duplicates that must keep their slots.
+fn adversarial_modes() -> Vec<AccMode> {
+    vec![
+        AccMode::Wide,
+        AccMode::Wrap { p_bits: 4 },
+        AccMode::Wrap { p_bits: 4 }, // duplicate keeps its own slot
+        AccMode::Saturate { p_bits: 5 },
+        AccMode::SaturateFinal { p_bits: 6 },
+        AccMode::Wrap { p_bits: 63 },
+        AccMode::Saturate { p_bits: 2 },
+        AccMode::Wrap { p_bits: 1 },
+        AccMode::Wide, // duplicate Wide
+    ]
+}
+
+/// Pin the partitioned layer engine bit-exact against the scalar reference
+/// — outputs, wide outputs and every [`OverflowStats`] counter — for one
+/// fixture, at thread counts {1, 2, 7}.
+fn assert_layer_bit_exact(w: &QTensor, x: &IntMatrix, x_scale: f32, modes: &[AccMode], ctx: &str) {
+    let refs: Vec<_> = modes.iter().map(|m| qlinear_forward_ref(x, x_scale, w, *m)).collect();
+    let plan = LayerPlan::new(w, modes);
+    for threads in [1usize, 2, 7] {
+        let multi = plan.execute_threads(x, x_scale, threads);
+        assert_eq!(multi.len(), modes.len(), "{ctx}");
+        for (mi, mode) in modes.iter().enumerate() {
+            let (a, b) = (&multi[mi], &refs[mi]);
+            let tag = format!("{ctx} {mode:?} t={threads}");
+            assert_eq!(a.out.shape(), b.out.shape(), "{tag}");
+            assert_eq!(a.out.data(), b.out.data(), "{tag}");
+            assert_eq!(a.out_wide.data(), b.out_wide.data(), "{tag}");
+            assert_eq!(a.stats.dots, b.stats.dots, "{tag}");
+            assert_eq!(a.stats.macs, b.stats.macs, "{tag}");
+            assert_eq!(a.stats.overflow_events, b.stats.overflow_events, "{tag}");
+            assert_eq!(a.stats.dots_overflowed, b.stats.dots_overflowed, "{tag}");
+            assert_eq!(a.stats.abs_err_sum, b.stats.abs_err_sum, "{tag}");
+            assert_eq!(a.stats.outputs, b.stats.outputs, "{tag}");
+        }
+    }
+}
+
+/// Degenerate and adversarial shapes for the safety-partitioned layer
+/// kernel: k = 0, empty batch, single-row batch, all-zero rows (xmax = 0
+/// gates everything onto the GEMM), all-channels-safe and no-channels-safe
+/// layers, mixed spans that split mid-set, i32-packed and pack-rejected
+/// code magnitudes — each pinned bit-exact against the scalar reference.
+#[test]
+fn prop_partitioned_layer_degenerate_shapes() {
+    let layer = |c_out: usize, k: usize, codes: Vec<i64>| QTensor {
+        codes,
+        scales: (0..c_out).map(|c| 0.25 + c as f32 * 0.5).collect(),
+        bias: (0..c_out).map(|c| c as f32 - 0.75).collect(),
+        c_out,
+        k,
+    };
+
+    // k = 0: every channel is trivially safe; outputs are pure bias.
+    assert_layer_bit_exact(
+        &layer(3, 0, vec![]),
+        &IntMatrix::zeros(4, 0),
+        0.5,
+        &adversarial_modes(),
+        "k=0",
+    );
+
+    let mixed = layer(
+        4,
+        3,
+        vec![
+            0, 0, 0, // all-zero channel: safe at any width
+            1, -1, 1, // tiny channel: safe for every width >= 3
+            30, -20, 25, // mid channel
+            3000, 3000, -3000, // huge channel: unsafe at narrow widths
+        ],
+    );
+    // Empty batch.
+    assert_layer_bit_exact(&mixed, &IntMatrix::zeros(0, 3), 1.0, &adversarial_modes(), "batch=0");
+    // Single-row batch.
+    assert_layer_bit_exact(
+        &mixed,
+        &IntMatrix::from_rows(&[vec![7, -3, 2]]),
+        1.0,
+        &adversarial_modes(),
+        "batch=1",
+    );
+    // All-zero rows: xmax = 0, the whole grid is provably safe.
+    assert_layer_bit_exact(&mixed, &IntMatrix::zeros(5, 3), 1.0, &adversarial_modes(), "x=0");
+    // Mixed rows: zero, small and max-magnitude rows give different per-row
+    // safe prefixes, so the block-common GEMM span and the per-row safe
+    // remainder both run.
+    assert_layer_bit_exact(
+        &mixed,
+        &IntMatrix::from_rows(&[
+            vec![0, 0, 0],
+            vec![1, 1, -1],
+            vec![127, -127, 127],
+            vec![0, 1, 0],
+            vec![-128, 127, -128],
+        ]),
+        0.125,
+        &adversarial_modes(),
+        "mixed-rows",
+    );
+
+    // All channels safe: tiny norms under generous widths only.
+    let wide_modes = [
+        AccMode::Wide,
+        AccMode::Wrap { p_bits: 40 },
+        AccMode::Saturate { p_bits: 40 },
+        AccMode::SaturateFinal { p_bits: 8 },
+    ];
+    assert_layer_bit_exact(
+        &layer(2, 4, vec![1, -1, 2, 1, 0, 1, -1, 0]),
+        &IntMatrix::from_rows(&[vec![3, 1, -2, 0], vec![1, 1, 1, 1]]),
+        1.0,
+        &wide_modes,
+        "all-safe",
+    );
+    // No channel safe: huge norms under a 4-bit register.
+    assert_layer_bit_exact(
+        &layer(2, 4, vec![3000, -3000, 3000, 3000, 2000, 2000, -2000, 2000]),
+        &IntMatrix::from_rows(&[vec![255, 255, 255, 255], vec![1, -1, 1, -1]]),
+        1.0,
+        &[AccMode::Wrap { p_bits: 4 }, AccMode::Saturate { p_bits: 4 }],
+        "no-safe",
+    );
+    // Codes beyond i16 force the i32 panels; beyond i32 the pack is
+    // rejected and the engine falls back to unpacked wide dots.
+    assert_layer_bit_exact(
+        &layer(2, 2, vec![100_000, -70_000, 1, 2]),
+        &IntMatrix::from_rows(&[vec![5, -9], vec![0, 3]]),
+        1.0,
+        &adversarial_modes(),
+        "i32-packed",
+    );
+    assert_layer_bit_exact(
+        &layer(2, 2, vec![3_000_000_000, 1, -2, 4]),
+        &IntMatrix::from_rows(&[vec![2, -3], vec![1, 0]]),
+        1.0,
+        &adversarial_modes(),
+        "pack-rejected",
+    );
+}
+
+/// Pin the partitioned network engine bit-exact against the composed
+/// scalar reference for one fixture, at thread counts {1, 2, 7}.
+fn assert_network_bit_exact(net: &QNetwork, x: &IntMatrix, modes: &[AccMode], ctx: &str) {
+    let refs: Vec<_> = modes.iter().map(|m| network_forward_ref(net, x, *m)).collect();
+    let plan = NetworkPlan::new(net, modes);
+    for threads in [1usize, 2, 7] {
+        let multi = plan.execute_threads(x, threads);
+        assert_eq!(multi.len(), modes.len(), "{ctx}");
+        for (mi, mode) in modes.iter().enumerate() {
+            let (a, b) = (&multi[mi], &refs[mi]);
+            let tag = format!("{ctx} {mode:?} t={threads}");
+            assert_eq!(a.out.shape(), b.out.shape(), "{tag}");
+            assert_eq!(a.out.data(), b.out.data(), "{tag}");
+            assert_eq!(a.out_wide.data(), b.out_wide.data(), "{tag}");
+            assert_eq!(a.layer_stats.len(), b.layer_stats.len(), "{tag}");
+            for (li, (sa, sb)) in a.layer_stats.iter().zip(&b.layer_stats).enumerate() {
+                assert_eq!(sa.dots, sb.dots, "{tag} layer {li}");
+                assert_eq!(sa.macs, sb.macs, "{tag} layer {li}");
+                assert_eq!(sa.overflow_events, sb.overflow_events, "{tag} layer {li}");
+                assert_eq!(sa.dots_overflowed, sb.dots_overflowed, "{tag} layer {li}");
+                assert_eq!(sa.abs_err_sum, sb.abs_err_sum, "{tag} layer {li}");
+                assert_eq!(sa.outputs, sb.outputs, "{tag} layer {li}");
+            }
+        }
+    }
+}
+
+/// Degenerate and adversarial shapes for the partitioned *network* engine:
+/// a k = 0 first layer, empty and single-row batches, all-zero inputs, and
+/// duplicate modes — each pinned bit-exact (final outputs, wide outputs,
+/// every per-layer stats counter) against the composed scalar reference.
+#[test]
+fn prop_partitioned_network_degenerate_shapes() {
+    use a2q::model::{ActQuant, QLayer};
+
+    let qlayer = |name: &str, c_out: usize, k: usize, codes: Vec<i64>, signed: bool| QLayer {
+        name: name.into(),
+        weights: QTensor {
+            codes,
+            scales: vec![0.5; c_out],
+            bias: (0..c_out).map(|c| 0.1 * c as f32).collect(),
+            c_out,
+            k,
+        },
+        in_quant: ActQuant::new(3, signed, 0.75),
+        m_bits: 4,
+        p_bits: 8,
+    };
+
+    // Layer 0 has k = 0 (pure-bias layer feeding a real layer).
+    let net = QNetwork::new(
+        "degenerate",
+        vec![
+            qlayer("k0", 3, 0, vec![], false),
+            qlayer("dense", 2, 3, vec![9, -2, 4, 3000, -3000, 3000], true),
+        ],
+    )
+    .unwrap();
+    let modes = adversarial_modes();
+    assert_network_bit_exact(&net, &IntMatrix::zeros(0, 0), &modes, "net batch=0");
+    assert_network_bit_exact(&net, &IntMatrix::zeros(1, 0), &modes, "net batch=1 k=0");
+    assert_network_bit_exact(&net, &IntMatrix::zeros(5, 0), &modes, "net k=0");
+
+    // A calibrated synthesized net on zero and mixed inputs (zero rows gate
+    // whole layers onto the GEMM span; nonzero rows split mode groups).
+    let spec = NetSpec {
+        widths: vec![6, 5, 4, 3],
+        m_bits: 5,
+        n_bits: 4,
+        p_bits: 8,
+        x_signed: false,
+        constrained: false,
+    };
+    let mut net = QNetwork::synthesize(&spec, 0xD6).unwrap();
+    let sample = Tensor::new(vec![4, 6], (0..24).map(|i| (i % 5) as f32 * 0.21).collect());
+    net.calibrate(&sample);
+    assert_network_bit_exact(&net, &IntMatrix::zeros(3, 6), &modes, "net x=0");
+    let x = net.layers[0].in_quant.quantize(&sample);
+    assert_network_bit_exact(&net, &x, &modes, "net mixed");
+    let one = IntMatrix::from_flat(1, 6, x.rows_slice(0, 1).to_vec());
+    assert_network_bit_exact(&net, &one, &modes, "net batch=1");
 }
 
 #[test]
