@@ -16,7 +16,7 @@ use a2q::coordinator::checkpoint::Checkpoint;
 use a2q::coordinator::Trainer;
 use a2q::quant::a2q::l1_cap;
 use a2q::report::write_csv;
-use a2q::runtime::Engine;
+use a2q::runtime::{Engine, TrainBackend};
 
 fn main() -> anyhow::Result<()> {
     let steps: u64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(400);

@@ -2,8 +2,8 @@
 //! binary-MNIST QNN. Times the accsim hot loop (the bit-exact P-bit
 //! register simulation) on the Fig. 2 shape — per-mode single calls plus
 //! the fused all-widths sweep — and regenerates a reduced fig2.csv end to
-//! end (training included) when built with the `xla` feature and artifacts
-//! are present.
+//! end (training included) through the native backend, no artifacts or XLA
+//! toolchain required.
 
 #[path = "harness.rs"]
 mod harness;
@@ -80,27 +80,19 @@ fn main() {
     );
     journal.flush();
 
-    // --- end-to-end figure regeneration (xla feature + artifacts) -----------
-    #[cfg(feature = "xla")]
+    // --- end-to-end figure regeneration (native backend by default) ---------
     end_to_end();
-    #[cfg(not(feature = "xla"))]
-    println!("built without the `xla` feature; skipping end-to-end fig2 regeneration");
 }
 
-#[cfg(feature = "xla")]
 fn end_to_end() {
     use a2q::report::fig2;
-    use a2q::runtime::Engine;
+    use a2q::runtime::{make_backend, BackendKind};
 
-    if !std::path::Path::new("artifacts/mlp.json").exists() {
-        println!("artifacts missing; skipping end-to-end fig2 regeneration");
-        return;
-    }
     let steps = if harness::quick() { 60 } else { 250 };
-    let engine = Engine::new("artifacts").expect("engine");
+    let backend = make_backend(BackendKind::Native, "artifacts".as_ref()).expect("backend");
     let p_values: Vec<u32> = vec![10, 12, 14, 16, 18, 20];
     let t0 = std::time::Instant::now();
-    let rep = fig2::run(&engine, &p_values, steps, 256, 0).expect("fig2 run");
+    let rep = fig2::run(backend.as_ref(), &p_values, steps, 256, 0).expect("fig2 run");
     fig2::emit(&rep, std::path::Path::new("results")).expect("emit");
     println!(
         "fig2 end-to-end ({} trainings + sims) in {:.1}s; wide acc {:.4}",

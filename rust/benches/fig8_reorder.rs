@@ -1,7 +1,7 @@
 //! Bench + regeneration of paper Fig. 8: associativity breaking under
 //! saturating accumulation. Times the permutation study core (scratch
-//! buffers reused across permutations) and, with the `xla` feature and
-//! artifacts present, regenerates results/fig8.csv end to end.
+//! buffers reused across permutations) and regenerates results/fig8.csv end
+//! to end through the native training backend.
 
 #[path = "harness.rs"]
 mod harness;
@@ -31,26 +31,18 @@ fn main() {
     journal.add(&r, Some(macs));
     journal.flush();
 
-    // --- end-to-end regeneration --------------------------------------------
-    #[cfg(feature = "xla")]
+    // --- end-to-end regeneration (native backend) ----------------------------
     end_to_end();
-    #[cfg(not(feature = "xla"))]
-    println!("built without the `xla` feature; skipping end-to-end fig8 regeneration");
 }
 
-#[cfg(feature = "xla")]
 fn end_to_end() {
     use a2q::report::fig8;
-    use a2q::runtime::Engine;
+    use a2q::runtime::{make_backend, BackendKind};
 
-    if !std::path::Path::new("artifacts/mlp.json").exists() {
-        println!("artifacts missing; skipping end-to-end fig8 regeneration");
-        return;
-    }
     let steps = if harness::quick() { 60 } else { 250 };
-    let engine = Engine::new("artifacts").expect("engine");
+    let backend = make_backend(BackendKind::Native, "artifacts".as_ref()).expect("backend");
     let t0 = std::time::Instant::now();
-    let rep = fig8::run(&engine, 12, 100, steps, 128, 0).expect("fig8");
+    let rep = fig8::run(backend.as_ref(), 12, 100, steps, 128, 0).expect("fig8");
     fig8::emit(&rep, std::path::Path::new("results")).expect("emit");
     let (lo, hi) = rep.inner_acc_spread();
     println!(

@@ -160,7 +160,7 @@ fn main() {
 #[cfg(feature = "xla")]
 fn pjrt_benches() {
     use a2q::config::RunConfig;
-    use a2q::runtime::Engine;
+    use a2q::runtime::{Engine, TrainBackend};
 
     if !std::path::Path::new("artifacts/mlp.json").exists() {
         println!("artifacts missing; skipping PJRT hot-path benches");

@@ -1,0 +1,53 @@
+//! Native `train_step` throughput (EXPERIMENTS.md §Perf): rows/s through
+//! the pure-Rust backend's forward + STE backward + SGD update on the
+//! default multi-layer MLP manifest (`mlp3`, 784 -> 64 -> 16 -> 2), at the
+//! M4N4 and M8N8 grid points.
+//!
+//! Results are journaled to BENCH_accsim.json (`native/trainstep_*`) via
+//! `a2q::perf`; MAC/s counts forward + both backward GEMM passes (3x the
+//! forward MACs), rows/s is printed alongside.
+
+#[path = "harness.rs"]
+mod harness;
+
+use a2q::datasets::{self, Split};
+use a2q::runtime::{NativeBackend, TrainBackend};
+
+fn main() {
+    let mut journal = harness::Journal::new();
+    let backend = NativeBackend::new("artifacts");
+    let manifest = backend.manifest("mlp3").expect("native registry manifest");
+    let bs = manifest.batch_size;
+    let ds = datasets::by_name("synth_mnist", 512, 64, 0).unwrap();
+    let idx: Vec<usize> = (0..bs).collect();
+    let batch = ds.gather(Split::Train, &idx);
+    let macs_fwd: usize = manifest.qlayers.iter().map(|q| q.c_out * q.k).sum();
+    let iters = if harness::quick() { 5 } else { 20 };
+    let steps_per_iter = if harness::quick() { 2 } else { 5 };
+
+    for (label, bits) in [("m4n4", (4u32, 4u32, 14u32)), ("m8n8", (8u32, 8u32, 20u32))] {
+        let mut state = backend.init(&manifest, 0.0).expect("init");
+        // warm + sanity: the loop must stay finite at this grid point
+        let warm = backend
+            .train_step(&manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
+            .expect("warm step");
+        assert!(warm.is_finite());
+        let r = harness::bench(&format!("native/trainstep_{label}"), 1, iters, || {
+            let mut last = 0.0f32;
+            for _ in 0..steps_per_iter {
+                last = backend
+                    .train_step(&manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
+                    .expect("train step");
+            }
+            last
+        });
+        let macs = (steps_per_iter * bs * macs_fwd * 3) as u64;
+        let rows_per_s = (steps_per_iter * bs) as f64 / r.median.as_secs_f64().max(1e-12);
+        println!(
+            "  ({rows_per_s:.0} rows/s, {:.1} M MAC/s incl. backward)",
+            harness::throughput(&r, macs) / 1e6
+        );
+        journal.add(&r, Some(macs));
+    }
+    journal.flush();
+}

@@ -1218,7 +1218,7 @@ mod tests {
 
     #[test]
     fn network_plan_matches_composed_reference() {
-        use crate::model::{network_forward_ref, NetSpec, QNetwork};
+        use crate::model::{network_forward_ref, NetSpec, QNetwork, SynthQuant};
         // Unconstrained weights at low P: overflow actually happens, so
         // per-mode activation streams genuinely diverge before the last
         // layer and the group-splitting path is exercised.
@@ -1228,7 +1228,7 @@ mod tests {
             n_bits: 4,
             p_bits: 10,
             x_signed: false,
-            constrained: false,
+            quant: SynthQuant::Affine,
         };
         let mut net = QNetwork::synthesize(&spec, 21).unwrap();
         let sample =
@@ -1270,14 +1270,14 @@ mod tests {
 
     #[test]
     fn network_plan_a2q_net_never_splits_from_wide() {
-        use crate::model::{NetSpec, QNetwork};
+        use crate::model::{NetSpec, QNetwork, SynthQuant};
         let spec = NetSpec {
             widths: vec![10, 8, 3],
             m_bits: 4,
             n_bits: 3,
             p_bits: 12,
             x_signed: false,
-            constrained: true,
+            quant: SynthQuant::A2q,
         };
         let mut net = QNetwork::synthesize(&spec, 2).unwrap();
         let sample =

@@ -74,7 +74,7 @@ impl RunConfig {
 
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
-            matches!(self.alg.as_str(), "a2q" | "qat" | "float"),
+            matches!(self.alg.as_str(), "a2q" | "a2q_plus" | "qat" | "float"),
             "unknown algorithm {:?}",
             self.alg
         );
@@ -251,13 +251,16 @@ impl SweepConfig {
             .min(32);
             for &off in &self.p_offsets {
                 let p = dt.saturating_sub(off).max(4);
-                // A2Q treats P as a free design variable (one run per P).
-                if self.algs.iter().any(|a| a == "a2q") {
-                    let mut rc = RunConfig::new(model, "a2q", mn, mn, p, self.steps);
-                    rc.seed = self.seed;
-                    rc.n_train = self.n_train;
-                    rc.n_test = self.n_test;
-                    out.push(rc);
+                // The accumulator-aware algorithms treat P as a free design
+                // variable (one run per P, per quantizer).
+                for alg in ["a2q", "a2q_plus"] {
+                    if self.algs.iter().any(|a| a == alg) {
+                        let mut rc = RunConfig::new(model, alg, mn, mn, p, self.steps);
+                        rc.seed = self.seed;
+                        rc.n_train = self.n_train;
+                        rc.n_test = self.n_test;
+                        out.push(rc);
+                    }
                 }
             }
             // The QAT baseline is accumulator-oblivious: its training is
@@ -345,6 +348,19 @@ mod tests {
         for r in &runs {
             r.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn a2q_plus_validates_and_expands_per_p() {
+        let c = RunConfig::new("mlp", "a2q_plus", 6, 6, 16, 100);
+        assert!(c.validate().is_ok());
+        let mut sweep = SweepConfig::default_grid(vec!["mlp".into()], 10);
+        sweep.algs = vec!["a2q".into(), "a2q_plus".into()];
+        sweep.mn_values = vec![6];
+        sweep.p_offsets = vec![0, 4];
+        let runs = sweep.expand_for_model("mlp", 784);
+        assert_eq!(runs.iter().filter(|r| r.alg == "a2q_plus").count(), 2);
+        assert_eq!(runs.len(), 4);
     }
 
     #[test]

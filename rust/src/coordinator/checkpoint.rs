@@ -136,3 +136,30 @@ impl Checkpoint {
         TrainState::from_tensors(&tensors)
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{NativeBackend, TrainBackend};
+    use crate::testutil::TempDir;
+
+    #[test]
+    fn native_round_trip_is_bit_exact() {
+        let be = NativeBackend::new("artifacts");
+        let manifest = be.manifest("mlp3").unwrap();
+        let state = be.init(&manifest, 5.0).unwrap();
+        let ckpt = Checkpoint::capture(&manifest, "a2q", 7, &state).unwrap();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        ckpt.save(&path).unwrap();
+        let restored = Checkpoint::load(&path).unwrap().restore(&manifest).unwrap();
+        assert_eq!(restored.leaves.len(), state.leaves.len());
+        for (a, b) in restored.leaves.iter().zip(&state.leaves) {
+            assert_eq!(a.shape(), b.shape());
+            assert_eq!(a.data(), b.data(), "restore must be bit-exact");
+        }
+        // drift detection: a different model's manifest is rejected
+        let other = be.manifest("mlp").unwrap();
+        assert!(ckpt.restore(&other).is_err());
+    }
+}

@@ -1,27 +1,20 @@
 //! The L3 coordinator: the training loop, the (M, N, P) grid-search
-//! scheduler, checkpointing and the metrics sink.
+//! scheduler, checkpointing and the metrics sink — all generic over the
+//! [`crate::runtime::TrainBackend`], so the default build trains natively
+//! and the `xla` build drives PJRT artifacts through the same drivers.
 //!
-//! Threading model: PJRT handles (`xla::PjRtClient` and friends) hold raw
-//! pointers and are not `Send`, so all executions happen on one dedicated
-//! worker thread that owns the [`crate::runtime::Engine`]; the tokio side
-//! ([`sweep`]) feeds it jobs over a channel, streams results to the JSONL
-//! sink, and supports resume by skipping configs already on disk. XLA's CPU
-//! backend parallelizes *inside* each executable, so a single worker already
-//! saturates the machine for our workloads.
+//! Threading model: the sweep worker thread *constructs* its backend from a
+//! `Send + Copy` [`crate::runtime::BackendKind`] (PJRT handles hold raw
+//! pointers and are not `Send`); the scheduler feeds it jobs over a
+//! channel, streams results to the JSONL sink, and supports resume by
+//! skipping configs already on disk.
 
-// The training/sweep drivers execute PJRT artifacts and are gated behind
-// the `xla` feature; the metrics sink (JSONL records the figure generators
-// consume) is pure host code and always available.
-#[cfg(feature = "xla")]
 pub mod checkpoint;
 pub mod sink;
-#[cfg(feature = "xla")]
 pub mod sweep;
-#[cfg(feature = "xla")]
 pub mod trainer;
 
+pub use checkpoint::Checkpoint;
 pub use sink::{MetricsSink, RunRecord};
-#[cfg(feature = "xla")]
-pub use sweep::run_sweep;
-#[cfg(feature = "xla")]
+pub use sweep::{run_single, run_sweep};
 pub use trainer::{TrainOutcome, Trainer};

@@ -26,7 +26,6 @@ pub struct RunRecord {
 }
 
 impl RunRecord {
-    #[cfg(feature = "xla")]
     pub fn from_outcome(o: &super::trainer::TrainOutcome) -> Self {
         RunRecord {
             config: o.config.clone(),

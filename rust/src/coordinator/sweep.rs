@@ -1,11 +1,11 @@
-//! Grid-search scheduler: a dedicated PJRT worker thread plus a streaming
-//! result channel.
+//! Grid-search scheduler: a dedicated backend worker thread plus a
+//! streaming result channel.
 //!
-//! PJRT handles are not `Send`, so one OS thread owns the
-//! [`Engine`](crate::runtime::Engine) and executes jobs sequentially (XLA's
-//! CPU backend parallelizes inside each executable); the scheduler streams
-//! jobs in, streams [`RunRecord`]s out to the JSONL sink as they finish, and
-//! skips configs already completed on disk (resume).
+//! PJRT handles are not `Send`, so the worker thread *constructs* its
+//! backend from a [`BackendKind`] (which is `Send + Copy`) and executes
+//! jobs sequentially; the native backend rides the same protocol so one
+//! scheduler serves both. Results stream out to the JSONL sink as they
+//! finish, and configs already completed on disk are skipped (resume).
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -13,16 +13,21 @@ use std::sync::mpsc;
 use anyhow::Result;
 
 use crate::config::{RunConfig, SweepConfig};
-use crate::runtime::{artifact::ModelManifest, Engine};
+use crate::runtime::{make_backend, BackendKind};
 
 use super::sink::{MetricsSink, RunRecord};
 use super::trainer::Trainer;
 
-/// Expand a sweep against the manifests on disk (needs K* per model).
-pub fn expand_sweep(cfg: &SweepConfig, artifacts_dir: &Path) -> Result<Vec<RunConfig>> {
+/// Expand a sweep against the manifests the chosen backend would resolve
+/// (needs K* per model; native-registry models need no artifacts on disk).
+pub fn expand_sweep(
+    cfg: &SweepConfig,
+    kind: BackendKind,
+    artifacts_dir: &Path,
+) -> Result<Vec<RunConfig>> {
     let mut runs = Vec::new();
     for model in &cfg.models {
-        let manifest = ModelManifest::load(artifacts_dir, model)?;
+        let manifest = kind.load_manifest(artifacts_dir, model)?;
         runs.extend(cfg.expand_for_model(model, manifest.largest_k));
     }
     Ok(runs)
@@ -32,13 +37,14 @@ pub fn expand_sweep(cfg: &SweepConfig, artifacts_dir: &Path) -> Result<Vec<RunCo
 /// complete. Returns all records (existing + new) at the end.
 pub fn run_sweep(
     cfg: SweepConfig,
+    kind: BackendKind,
     artifacts_dir: PathBuf,
     sink_path: PathBuf,
     verbose: bool,
 ) -> Result<Vec<RunRecord>> {
     let sink = MetricsSink::new(&sink_path);
     let done = sink.completed_keys()?;
-    let all = expand_sweep(&cfg, &artifacts_dir)?;
+    let all = expand_sweep(&cfg, kind, &artifacts_dir)?;
     let todo: Vec<RunConfig> = all
         .into_iter()
         .filter(|r| !done.contains(&RunRecord::key(r)))
@@ -55,13 +61,13 @@ pub fn run_sweep(
 
     let (tx, rx) = mpsc::channel::<Result<RunRecord>>();
 
-    // Dedicated PJRT worker thread: owns the Engine, runs jobs in order.
-    // Trainers (and their compiled executables) are cached per model by the
-    // Engine's compile cache, so consecutive configs of the same model reuse
-    // compilation.
+    // Dedicated worker thread: owns the backend, runs jobs in order. The
+    // PJRT engine caches compiled executables per model, so consecutive
+    // configs of the same model reuse compilation; the native backend is
+    // stateless between runs.
     let worker = std::thread::spawn(move || {
-        let engine = match Engine::new(&artifacts_dir) {
-            Ok(e) => e,
+        let backend = match make_backend(kind, &artifacts_dir) {
+            Ok(b) => b,
             Err(e) => {
                 let _ = tx.send(Err(e));
                 return;
@@ -69,7 +75,7 @@ pub fn run_sweep(
         };
         for rc in todo {
             let result = (|| {
-                let trainer = Trainer::new(&engine, &rc)?;
+                let trainer = Trainer::new(backend.as_ref(), &rc)?;
                 let outcome = trainer.run(&rc)?;
                 Ok(RunRecord::from_outcome(&outcome))
             })();
@@ -105,9 +111,52 @@ pub fn run_sweep(
 }
 
 /// Synchronous single-run helper used by the CLI `train` command and tests.
-pub fn run_single(artifacts_dir: &Path, rc: &RunConfig) -> Result<RunRecord> {
-    let engine = Engine::new(artifacts_dir)?;
-    let trainer = Trainer::new(&engine, rc)?;
+pub fn run_single(kind: BackendKind, artifacts_dir: &Path, rc: &RunConfig) -> Result<RunRecord> {
+    let backend = make_backend(kind, artifacts_dir)?;
+    let trainer = Trainer::new(backend.as_ref(), rc)?;
     let outcome = trainer.run(rc)?;
     Ok(RunRecord::from_outcome(&outcome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    #[test]
+    fn native_sweep_runs_and_resumes_without_artifacts() {
+        let dir = TempDir::new().unwrap();
+        let mut cfg = SweepConfig::default_grid(vec!["mlp".into()], 6);
+        cfg.mn_values = vec![8];
+        cfg.p_offsets = vec![8];
+        cfg.algs = vec!["a2q".into()];
+        cfg.n_train = 96;
+        cfg.n_test = 32;
+        let sink = dir.path().join("runs.jsonl");
+        let recs = run_sweep(
+            cfg.clone(),
+            BackendKind::Native,
+            dir.path().to_path_buf(),
+            sink.clone(),
+            false,
+        )
+        .unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].guarantee_ok, "native sweep must keep the guarantee");
+        // resume: nothing left to do, records preserved
+        let again =
+            run_sweep(cfg, BackendKind::Native, dir.path().to_path_buf(), sink, false).unwrap();
+        assert_eq!(again.len(), 1);
+    }
+
+    #[test]
+    fn run_single_native_mlp3() {
+        let dir = TempDir::new().unwrap();
+        let mut rc = RunConfig::new("mlp3", "a2q", 4, 4, 14, 10);
+        rc.n_train = 96;
+        rc.n_test = 32;
+        let record = run_single(BackendKind::Native, dir.path(), &rc).unwrap();
+        assert!(record.guarantee_ok);
+        assert_eq!(record.l1_norms.len(), 3);
+    }
 }

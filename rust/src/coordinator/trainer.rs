@@ -1,5 +1,9 @@
 //! Single-run training driver: epochs over a synthetic dataset, LR schedule,
 //! evaluation, deployment export and the overflow-guarantee audit.
+//!
+//! Generic over the [`TrainBackend`] — the same loop drives the native
+//! pure-Rust backend (default build) and the PJRT artifact executor
+//! (`xla` feature).
 
 use std::time::Instant;
 
@@ -11,7 +15,7 @@ use crate::finn::estimate::BitSpec;
 use crate::metrics::{self, LossTracker};
 use crate::quant::a2q::row_satisfies_cap;
 use crate::rng::Rng;
-use crate::runtime::{Engine, ExportedLayer, ModelManifest, TrainState};
+use crate::runtime::{ExportedLayer, ModelManifest, TrainBackend, TrainState};
 use crate::tensor::Tensor;
 
 /// Everything a finished run produces.
@@ -35,26 +39,26 @@ pub struct TrainOutcome {
     pub train_secs: f64,
 }
 
-/// Drives one model's artifacts against one dataset.
-pub struct Trainer<'e> {
-    engine: &'e Engine,
+/// Drives one model against one dataset on any [`TrainBackend`].
+pub struct Trainer<'e, B: TrainBackend + ?Sized> {
+    backend: &'e B,
     pub manifest: ModelManifest,
     pub dataset: Dataset,
 }
 
-impl<'e> Trainer<'e> {
+impl<'e, B: TrainBackend + ?Sized> Trainer<'e, B> {
     /// Set up for `cfg.model`, generating its default synthetic dataset.
-    pub fn new(engine: &'e Engine, cfg: &RunConfig) -> Result<Self> {
-        let manifest = engine.manifest(&cfg.model)?;
+    pub fn new(backend: &'e B, cfg: &RunConfig) -> Result<Self> {
+        let manifest = backend.manifest(&cfg.model)?;
         let ds_name = datasets::default_for_model(&cfg.model);
         let dataset = datasets::by_name(ds_name, cfg.n_train, cfg.n_test, cfg.seed)?;
-        Ok(Trainer { engine, manifest, dataset })
+        Ok(Trainer { backend, manifest, dataset })
     }
 
     /// With an explicit dataset (tests, custom workloads).
-    pub fn with_dataset(engine: &'e Engine, model: &str, dataset: Dataset) -> Result<Self> {
-        let manifest = engine.manifest(model)?;
-        Ok(Trainer { engine, manifest, dataset })
+    pub fn with_dataset(backend: &'e B, model: &str, dataset: Dataset) -> Result<Self> {
+        let manifest = backend.manifest(model)?;
+        Ok(Trainer { backend, manifest, dataset })
     }
 
     /// Run the full training loop + evaluation + export for one config.
@@ -64,7 +68,7 @@ impl<'e> Trainer<'e> {
         let base_lr = cfg.lr.unwrap_or(self.manifest.lr);
         let bs = self.manifest.batch_size;
 
-        let mut state = self.engine.init(&self.manifest, cfg.seed as f32)?;
+        let mut state = self.backend.init(&self.manifest, cfg.seed as f32)?;
         let mut rng = Rng::new(cfg.seed ^ 0x7a31_9e55);
         let mut tracker = LossTracker::new(0.05);
         let mut step = 0u64;
@@ -95,7 +99,7 @@ impl<'e> Trainer<'e> {
                     self.recalibrate_quantizers(&mut state, cfg)?;
                 }
                 let alg = if step < warmup { "float" } else { cfg.alg.as_str() };
-                let loss = self.engine.train_step(
+                let loss = self.backend.train_step(
                     &self.manifest,
                     alg,
                     &mut state,
@@ -118,8 +122,8 @@ impl<'e> Trainer<'e> {
         let (exported, sparsity, l1_norms, guarantee_ok) = if cfg.alg == "float" {
             (None, 0.0, Vec::new(), true)
         } else {
-            let layers = self.engine.export(&self.manifest, &cfg.alg, &state, bits)?;
-            let (sp, l1s, ok) = self.audit(&layers, bits, &cfg.alg);
+            let layers = self.backend.export(&self.manifest, &cfg.alg, &state, bits)?;
+            let (sp, l1s, ok) = self.audit(&layers, bits);
             (Some(layers), sp, l1s, ok)
         };
 
@@ -142,43 +146,35 @@ impl<'e> Trainer<'e> {
     /// their momentum/Adam slots so the optimizer does not drag them back
     /// toward the stale values.
     fn recalibrate_quantizers(&self, state: &mut TrainState, cfg: &RunConfig) -> Result<()> {
-        let mut tensors = state.to_tensors()?;
         let find = |path: &str| self.manifest.state.iter().position(|e| e.path == path);
         for q in &self.manifest.qlayers {
             let m_bits = match q.m_bits.to_bitspec()? {
-                crate::finn::estimate::BitSpec::Fixed(v) => v,
+                BitSpec::Fixed(v) => v,
                 _ => cfg.m,
             };
-            let vmax = (2f32.powi(m_bits as i32 - 1) - 1.0).max(1.0);
             let vi = find(&format!("params/{}/v", q.name))
                 .ok_or_else(|| anyhow::anyhow!("missing v for {}", q.name))?;
-            let v = tensors[vi].clone();
-            for (name, f) in [
-                ("d", true),  // log2(max_abs / (2^(M-1)-1))
-                ("t", false), // log2(l1)
-            ] {
+            // Borrow the weight rows once, derive both parameter vectors,
+            // then write — no tensor clone.
+            let (d_vals, t_vals): (Vec<f32>, Vec<f32>) = {
+                let v = &state.leaves[vi];
+                (0..v.rows())
+                    .map(|c| crate::quant::quantizer::init_qparams_row(v.row(c), m_bits))
+                    .unzip()
+            };
+            for (name, vals) in [("d", &d_vals), ("t", &t_vals)] {
                 let Some(pi) = find(&format!("params/{}/{}", q.name, name)) else {
                     continue;
                 };
-                for c in 0..v.rows() {
-                    let row = v.row(c);
-                    let val = if f {
-                        let max_abs = row.iter().fold(0f32, |a, x| a.max(x.abs())).max(1e-8);
-                        (max_abs / vmax).log2()
-                    } else {
-                        row.iter().map(|x| x.abs()).sum::<f32>().max(1e-8).log2()
-                    };
-                    tensors[pi].data_mut()[c] = val;
-                }
+                state.leaves[pi].data_mut().copy_from_slice(vals);
                 // zero the optimizer slots for this leaf (mom / m / v trees)
                 for prefix in ["mom", "m", "v"] {
                     if let Some(oi) = find(&format!("{prefix}/{}/{}", q.name, name)) {
-                        tensors[oi].data_mut().fill(0.0);
+                        state.leaves[oi].data_mut().fill(0.0);
                     }
                 }
             }
         }
-        *state = TrainState::from_tensors(&tensors)?;
         Ok(())
     }
 
@@ -189,7 +185,7 @@ impl<'e> Trainer<'e> {
             let (mut correct, mut total) = (0u64, 0u64);
             for (idx, n_valid) in self.dataset.eval_batches(Split::Test, bs) {
                 let b = self.dataset.gather(Split::Test, &idx);
-                let logits = self.engine.infer(&self.manifest, alg, state, &b.x, bits)?;
+                let logits = self.backend.infer(&self.manifest, alg, state, &b.x, bits)?;
                 let (c, n) = metrics::top1_accuracy(&logits, b.y.data(), n_valid);
                 correct += c;
                 total += n;
@@ -199,7 +195,7 @@ impl<'e> Trainer<'e> {
             let (mut sse_acc, mut count) = (0.0f64, 0u64);
             for (idx, n_valid) in self.dataset.eval_batches(Split::Test, bs) {
                 let b = self.dataset.gather(Split::Test, &idx);
-                let pred = self.engine.infer(&self.manifest, alg, state, &b.x, bits)?;
+                let pred = self.backend.infer(&self.manifest, alg, state, &b.x, bits)?;
                 let (s, n) = metrics::sse(&pred, &b.y, n_valid);
                 sse_acc += s;
                 count += n;
@@ -210,15 +206,11 @@ impl<'e> Trainer<'e> {
 
     /// Sparsity / l1 norms / Eq. 15 audit over exported hidden layers.
     ///
-    /// For A2Q the guarantee must hold on *every* layer at its resolved
-    /// (N, P); QAT has no guarantee and is audited informationally only
-    /// (its `guarantee_ok` reports whether it happened to satisfy Eq. 15).
-    fn audit(
-        &self,
-        layers: &[ExportedLayer],
-        bits: (u32, u32, u32),
-        _alg: &str,
-    ) -> (f64, Vec<f64>, bool) {
+    /// Algorithm-independent: for A2Q/A2Q+ the guarantee holds on *every*
+    /// layer at its resolved (N, P) by construction; QAT has no guarantee
+    /// and is audited informationally (its `guarantee_ok` reports whether
+    /// it happened to satisfy Eq. 15).
+    fn audit(&self, layers: &[ExportedLayer], bits: (u32, u32, u32)) -> (f64, Vec<f64>, bool) {
         let (m, n, p) = bits;
         let mut zeros = 0usize;
         let mut total = 0usize;
@@ -268,9 +260,75 @@ impl<'e> Trainer<'e> {
         let mut out = Vec::new();
         for (idx, n_valid) in self.dataset.eval_batches(Split::Test, bs).into_iter().take(max_batches) {
             let b = self.dataset.gather(Split::Test, &idx);
-            let pred = self.engine.infer(&self.manifest, alg, state, &b.x, bits)?;
+            let pred = self.backend.infer(&self.manifest, alg, state, &b.x, bits)?;
             out.push((pred, b.y, n_valid));
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn native_run_trains_audits_and_guarantees() {
+        let be = NativeBackend::new("artifacts");
+        for alg in ["a2q", "a2q_plus"] {
+            let mut cfg = RunConfig::new("mlp", alg, 8, 1, 12, 30);
+            cfg.n_train = 256;
+            cfg.n_test = 64;
+            let trainer = Trainer::new(&be, &cfg).unwrap();
+            let out = trainer.run(&cfg).unwrap();
+            assert!(out.guarantee_ok, "{alg}: Eq. 15 audit failed");
+            assert_eq!(out.loss_history.len(), 30);
+            assert!(out.perf.is_finite());
+            assert!(!out.l1_norms.is_empty());
+            let layers = out.exported.as_ref().unwrap();
+            assert_eq!(layers.len(), trainer.manifest.qlayers.len());
+            // the cap at (N=1, P=12) actually binds the exported codes
+            let cap = crate::quant::a2q::l1_cap(12, 1, false);
+            assert!(out.l1_norms.iter().all(|l| *l <= cap + 1e-6), "{alg}: {:?}", out.l1_norms);
+        }
+    }
+
+    #[test]
+    fn native_float_baseline_skips_export() {
+        let be = NativeBackend::new("artifacts");
+        let mut cfg = RunConfig::new("mlp", "float", 8, 1, 16, 10);
+        cfg.n_train = 128;
+        cfg.n_test = 32;
+        let trainer = Trainer::new(&be, &cfg).unwrap();
+        let out = trainer.run(&cfg).unwrap();
+        assert!(out.exported.is_none());
+        assert!(out.guarantee_ok);
+        assert_eq!(out.sparsity, 0.0);
+    }
+
+    #[test]
+    fn warmup_recalibration_keeps_training_stable() {
+        let be = NativeBackend::new("artifacts");
+        let mut cfg = RunConfig::new("mlp3", "a2q", 4, 4, 14, 20);
+        cfg.n_train = 128;
+        cfg.n_test = 32;
+        cfg.float_warmup_frac = 0.5; // force the float -> a2q switch mid-run
+        let trainer = Trainer::new(&be, &cfg).unwrap();
+        let out = trainer.run(&cfg).unwrap();
+        assert!(out.guarantee_ok);
+        assert!(out.loss_history.iter().all(|(_, l)| l.is_finite()));
+    }
+
+    #[test]
+    fn dyn_backend_works_through_the_trait_object() {
+        let be: Box<dyn TrainBackend> =
+            crate::runtime::make_backend(crate::runtime::BackendKind::Native, "artifacts".as_ref())
+                .unwrap();
+        let mut cfg = RunConfig::new("mlp", "qat", 8, 1, 20, 8);
+        cfg.n_train = 128;
+        cfg.n_test = 32;
+        let trainer = Trainer::new(be.as_ref(), &cfg).unwrap();
+        let out = trainer.run(&cfg).unwrap();
+        assert!(out.exported.is_some());
     }
 }

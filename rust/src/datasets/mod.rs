@@ -41,10 +41,11 @@ pub fn by_name(name: &str, n_train: usize, n_test: usize, seed: u64) -> anyhow::
     }
 }
 
-/// Default dataset for each model in the zoo.
+/// Default dataset for each model in the zoo (native registry MLPs all ride
+/// the binary-MNIST substrate).
 pub fn default_for_model(model: &str) -> &'static str {
     match model {
-        "mlp" => "synth_mnist",
+        m if m.starts_with("mlp") => "synth_mnist",
         "cnn" | "resnet" => "synth_cifar",
         _ => "synth_bsd",
     }

@@ -306,7 +306,7 @@ mod tests {
 
     #[test]
     fn qnetwork_estimates_keep_policy_ordering() {
-        use crate::model::{NetSpec, QNetwork};
+        use crate::model::{NetSpec, QNetwork, SynthQuant};
         // Unconstrained (QAT-like) weights: their l1 norms are large, so
         // the policy ordering Fixed32 > DataType >= WeightNorm >= A2Q holds.
         let spec = NetSpec {
@@ -315,7 +315,7 @@ mod tests {
             n_bits: 4,
             p_bits: 12,
             x_signed: false,
-            constrained: false,
+            quant: SynthQuant::Affine,
         };
         let net = QNetwork::synthesize(&spec, 13).unwrap();
         let f32_ = estimate_qnetwork(&net, AccumulatorPolicy::Fixed32, 4096);
@@ -331,7 +331,7 @@ mod tests {
 
         // An A2Q-*constrained* net's trained weight norms certify its target
         // (or tighter): the weight-norm estimate never exceeds the target's.
-        let trained = QNetwork::synthesize(&NetSpec { constrained: true, ..spec }, 13).unwrap();
+        let trained = QNetwork::synthesize(&NetSpec { quant: SynthQuant::A2q, ..spec }, 13).unwrap();
         let wn_t = estimate_qnetwork(&trained, AccumulatorPolicy::WeightNorm, 4096);
         let a2q_t = estimate_qnetwork(&trained, AccumulatorPolicy::A2qTarget(12), 4096);
         assert!(wn_t.total_luts() <= a2q_t.total_luts());

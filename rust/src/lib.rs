@@ -22,12 +22,15 @@
 //! Python never runs on the request path: after `make artifacts` the `a2q`
 //! binary trains, evaluates, sweeps and reports entirely from Rust.
 //!
-//! The PJRT-backed layers (the [`runtime`] engine, the [`coordinator`]
-//! training/sweep drivers, and the end-to-end fig2/fig8 generators) are
-//! gated behind the `xla` cargo feature; the default build is fully offline
-//! and carries the simulators, bounds, estimators and record-driven figure
-//! generation. Bench throughput history is journaled to BENCH_accsim.json
-//! via [`perf`] (see EXPERIMENTS.md §Perf).
+//! Training is abstracted behind [`runtime::TrainBackend`]
+//! (`init / train_step / infer / export` over host-tensor state leaves):
+//! the default build trains through the pure-Rust
+//! [`runtime::NativeBackend`] (manual forward/backward for MLP manifests,
+//! STE through the [`quant::WeightQuantizer`] — paper A2Q and A2Q+), so
+//! `a2q train` / `a2q sweep` and every training-backed figure run fully
+//! offline; the PJRT executor for the AOT artifacts is the same trait
+//! behind the `xla` cargo feature. Bench throughput history is journaled
+//! to BENCH_accsim.json via [`perf`] (see EXPERIMENTS.md §Perf).
 
 pub mod accsim;
 pub mod cli;

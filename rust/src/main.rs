@@ -2,27 +2,31 @@
 //! sweep the (M, N, P) design space, estimate FPGA resources, simulate
 //! overflow, and regenerate every figure of the paper.
 //!
-//! Python never runs here: all compute executes AOT-compiled HLO artifacts
-//! (`make artifacts`) through PJRT.
+//! Training runs on a [`a2q::runtime::TrainBackend`]: the pure-Rust native
+//! backend by default (no artifacts, no XLA toolchain), or the PJRT
+//! executor for AOT-compiled HLO artifacts (`make artifacts` + `--features
+//! xla`, `--backend xla`).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use a2q::accsim::{dot_accumulate_multi, AccMode};
+use a2q::accsim::{dot_accumulate_multi, AccMode, NetworkPlan};
 use a2q::cli::Args;
-use a2q::coordinator::MetricsSink;
+use a2q::config::RunConfig;
+use a2q::coordinator::{MetricsSink, RunRecord, Trainer};
 use a2q::datasets;
 use a2q::finn::estimate::{estimate_network, AccumulatorPolicy, DEFAULT_CYCLES_BUDGET};
+use a2q::finn::estimate_qnetwork;
+use a2q::model::{QNetwork, SynthQuant};
 use a2q::quant::bounds::{data_type_bound, weight_bound, DotShape};
 use a2q::report;
 use a2q::rng::Rng;
-use a2q::runtime::{artifact::discover_models, ModelManifest};
-
-#[cfg(not(feature = "xla"))]
-const NO_XLA: &str = "this build has no PJRT backend; rebuild with `cargo build --features xla` \
-                      (and the real xla bindings in place of rust/vendor/xla)";
+use a2q::runtime::{
+    artifact::discover_models, make_backend, native::native_models, BackendKind, ModelManifest,
+};
+use a2q::Tensor;
 
 const USAGE: &str = "\
 a2q — accumulator-aware quantization (A2Q) reproduction
@@ -30,23 +34,26 @@ a2q — accumulator-aware quantization (A2Q) reproduction
 USAGE: a2q [--artifacts DIR] [--results DIR] <command> [flags]
 
 COMMANDS:
-  train      --model M --alg a2q|qat|float --m 6 --n 6 --p 16 --steps 300
-             --seed 0 [--config run.json]
-  sweep      --models cnn,resnet [--steps 200] [--mn 6,8]
+  train      --model mlp|mlp3|... --alg a2q|a2q_plus|qat|float --m 6 --n 6
+             --p 16 --steps 300 --seed 0 [--backend native|xla]
+             [--config run.json] (native backend trains registry MLPs with
+             no artifacts; exports chain into the accsim + FINN substrates)
+  sweep      --models mlp,mlp3 [--steps 200] [--mn 6,8]
              [--offsets 0,2,4,6,8,10] [--float-ref true] [--sink runs.jsonl]
-             [--config sweep.json]
+             [--backend native|xla] [--config sweep.json]
   figure     <fig2|fig3|fig4|fig5|fig6|fig7|fig8|all>
              [--sink runs.jsonl] [--steps 200] [--seed 0]
+             [--backend native|xla]
   estimate   --model M --m 6 --n 6 --p 16
   bounds     --k 784 --m 8 --n 1 [--signed] [--l1 NORM]
   accsim     --k 784 --p 16 --m 8 --n 1 --seed 0 [--psweep 8:32]
              (all register models simulated in one fused MAC traversal)
   netsim     --layers 784,64,16,2 --m 4 --n 4 --p 16 [--psweep 8:20]
              [--samples 256] [--seed 0] [--threads T] [--unconstrained]
-             [--dataset synth_mnist]
+             [--quantizer a2q|a2q_plus] [--dataset synth_mnist]
              (whole QNetwork under every width in one threaded pass: per-layer
               overflow/sparsity, fig2/fig3 network CSVs, FINN LUT estimate)
-  models     (list models available in the artifacts dir)
+  models     (list native registry + artifacts-dir models)
 ";
 
 fn main() -> Result<()> {
@@ -77,20 +84,23 @@ fn main() -> Result<()> {
     }
 }
 
-#[cfg(feature = "xla")]
-fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
-    use a2q::config::RunConfig;
-    use a2q::coordinator::sweep::run_single;
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    match args.opt_str("backend") {
+        Some(s) => s.parse(),
+        None => Ok(BackendKind::default_kind()),
+    }
+}
 
+fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     args.check_known(&[
         "artifacts", "results", "model", "alg", "m", "n", "p", "steps", "seed", "config",
-        "lr", "n-train", "n-test",
+        "lr", "n-train", "n-test", "backend",
     ])?;
     let rc = match args.opt_str("config") {
         Some(path) => RunConfig::load(&PathBuf::from(path))?,
         None => {
             let mut rc = RunConfig::new(
-                &args.str_or("model", "cnn"),
+                &args.str_or("model", "mlp"),
                 &args.str_or("alg", "a2q"),
                 args.num_or("m", 6u32)?,
                 args.num_or("n", 6u32)?,
@@ -106,31 +116,70 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
             rc
         }
     };
-    let record = run_single(artifacts, &rc)?;
+    let backend = make_backend(backend_kind(args)?, artifacts)?;
+    let trainer = Trainer::new(backend.as_ref(), &rc)?;
+    let outcome = trainer.run(&rc)?;
+    let record = RunRecord::from_outcome(&outcome);
     println!("{}", record.to_json().to_string());
+
+    // Exported dense networks flow straight into the accsim + FINN
+    // substrates: simulate the target width and price the deployment.
+    if let Some(exported) = &outcome.exported {
+        match QNetwork::from_exported(&rc.model, exported, &trainer.manifest, rc.bits()) {
+            Ok(mut net) => {
+                let n_eval = trainer.dataset.len(datasets::Split::Test).min(128);
+                let idx: Vec<usize> = (0..n_eval).collect();
+                let b = trainer.dataset.gather(datasets::Split::Test, &idx);
+                net.calibrate(&b.x);
+                let x = net.layers[0].in_quant.quantize(&b.x);
+                let plan =
+                    NetworkPlan::new(&net, &[AccMode::Wide, AccMode::Wrap { p_bits: rc.p }]);
+                let sims = plan.execute(&x);
+                let events: u64 = sims[1].layer_stats.iter().map(|s| s.overflow_events).sum();
+                println!(
+                    "[train] accsim wraparound at target P={}: {events} overflow events over \
+                     {n_eval} test rows ({})",
+                    rc.p,
+                    if events == 0 { "guarantee holds in simulation" } else { "OVERFLOWING" },
+                );
+                let policy = AccumulatorPolicy::A2qTarget(rc.p);
+                let est = estimate_qnetwork(&net, policy, DEFAULT_CYCLES_BUDGET);
+                println!(
+                    "[train] FINN LUT estimate at A2Q target P: compute {:.0} memory {:.0} \
+                     total {:.0}",
+                    est.total.compute,
+                    est.total.memory,
+                    est.total_luts()
+                );
+            }
+            Err(e) => println!("[train] export does not chain into a QNetwork: {e}"),
+        }
+    }
     Ok(())
 }
 
-#[cfg(not(feature = "xla"))]
-fn cmd_train(_args: &Args, _artifacts: &Path) -> Result<()> {
-    anyhow::bail!("train: {NO_XLA}")
-}
-
-#[cfg(feature = "xla")]
 fn cmd_sweep(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
     use a2q::config::SweepConfig;
     use a2q::coordinator::run_sweep;
 
     args.check_known(&[
         "artifacts", "results", "models", "steps", "mn", "offsets", "float-ref", "config",
-        "sink", "seed", "n-train", "n-test",
+        "sink", "seed", "n-train", "n-test", "backend",
     ])?;
+    let kind = backend_kind(args)?;
     let mut cfg = match args.opt_str("config") {
         Some(path) => SweepConfig::load(&PathBuf::from(path))?,
         None => {
             let models = match args.opt_str("models") {
                 Some(s) => s.split(',').map(|m| m.trim().to_string()).collect(),
-                None => discover_models(artifacts)?,
+                None => match kind {
+                    // native default: the in-process registry; xla default:
+                    // whatever artifacts exist on disk
+                    BackendKind::Native => {
+                        native_models().iter().map(|m| m.to_string()).collect()
+                    }
+                    BackendKind::Pjrt => discover_models(artifacts)?,
+                },
             };
             let mut c = SweepConfig::default_grid(models, args.num_or("steps", 200u64)?);
             c.mn_values = args.list_or("mn", "6,8")?;
@@ -145,18 +194,13 @@ fn cmd_sweep(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
         cfg.algs.push("float".into());
     }
     let sink_path = results.join(args.str_or("sink", "runs.jsonl"));
-    let records = run_sweep(cfg, artifacts.to_path_buf(), sink_path, true)?;
+    let records = run_sweep(cfg, kind, artifacts.to_path_buf(), sink_path, true)?;
     println!("[sweep] {} total records", records.len());
     Ok(())
 }
 
-#[cfg(not(feature = "xla"))]
-fn cmd_sweep(_args: &Args, _artifacts: &Path, _results: &Path) -> Result<()> {
-    anyhow::bail!("sweep: {NO_XLA}")
-}
-
 fn cmd_figure(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
-    args.check_known(&["artifacts", "results", "sink", "steps", "seed"])?;
+    args.check_known(&["artifacts", "results", "sink", "steps", "seed", "backend"])?;
     let id = args
         .positional
         .get(1)
@@ -169,16 +213,11 @@ fn cmd_figure(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
 
     if want("fig2") {
         matched = true;
-        #[cfg(feature = "xla")]
-        {
-            let engine = a2q::runtime::Engine::new(artifacts)?;
-            let p_values: Vec<u32> = (10..=20).collect();
-            let rep = report::fig2::run(&engine, &p_values, steps, 256, seed)?;
-            report::fig2::emit(&rep, results)?;
-            println!("[fig2] wide acc {:.4}; wrote {}/fig2.csv", rep.acc_wide, results.display());
-        }
-        #[cfg(not(feature = "xla"))]
-        skip_or_bail(&id, "fig2")?;
+        let backend = make_backend(backend_kind(args)?, artifacts)?;
+        let p_values: Vec<u32> = (10..=20).collect();
+        let rep = report::fig2::run(backend.as_ref(), &p_values, steps, 256, seed)?;
+        report::fig2::emit(&rep, results)?;
+        println!("[fig2] wide acc {:.4}; wrote {}/fig2.csv", rep.acc_wide, results.display());
     }
     if want("fig3") {
         matched = true;
@@ -196,13 +235,14 @@ fn cmd_figure(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
             "no sweep records at {:?}; run `a2q sweep` first",
             sink.path()
         );
+        let kind = backend_kind(args)?;
         let mut largest_k = BTreeMap::new();
         let mut geoms = BTreeMap::new();
         let mut models: Vec<String> = records.iter().map(|r| r.config.model.clone()).collect();
         models.sort();
         models.dedup();
         for m in &models {
-            let manifest = ModelManifest::load(artifacts, m)?;
+            let manifest = kind.load_manifest(artifacts, m)?;
             largest_k.insert(m.clone(), manifest.largest_k);
             geoms.insert(m.clone(), manifest.geoms()?);
         }
@@ -230,35 +270,17 @@ fn cmd_figure(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
     }
     if want("fig8") {
         matched = true;
-        #[cfg(feature = "xla")]
-        {
-            let engine = a2q::runtime::Engine::new(artifacts)?;
-            let rep = report::fig8::run(&engine, 12, 200, steps, 128, seed)?;
-            report::fig8::emit(&rep, results)?;
-            let (lo, hi) = rep.inner_acc_spread();
-            println!(
-                "[fig8] inner acc spread [{lo:.4}, {hi:.4}], outer acc {:.4}, wide {:.4}",
-                rep.outer_acc, rep.acc_wide
-            );
-        }
-        #[cfg(not(feature = "xla"))]
-        skip_or_bail(&id, "fig8")?;
+        let backend = make_backend(backend_kind(args)?, artifacts)?;
+        let rep = report::fig8::run(backend.as_ref(), 12, 200, steps, 128, seed)?;
+        report::fig8::emit(&rep, results)?;
+        let (lo, hi) = rep.inner_acc_spread();
+        println!(
+            "[fig8] inner acc spread [{lo:.4}, {hi:.4}], outer acc {:.4}, wide {:.4}",
+            rep.outer_acc, rep.acc_wide
+        );
     }
     anyhow::ensure!(matched, "unknown figure {id:?} (fig2..fig8 or all)");
-    let _ = (steps, seed); // consumed only by the xla-gated figures
     Ok(())
-}
-
-/// Without the PJRT backend, `figure all` skips the training-backed figures
-/// with a note while an explicit `figure fig2`/`fig8` request fails loudly.
-#[cfg(not(feature = "xla"))]
-fn skip_or_bail(id: &str, fig: &str) -> Result<()> {
-    if id == "all" {
-        println!("[{fig}] skipped: {NO_XLA}");
-        Ok(())
-    } else {
-        anyhow::bail!("{fig}: {NO_XLA}")
-    }
 }
 
 fn cmd_estimate(args: &Args, artifacts: &Path) -> Result<()> {
@@ -269,7 +291,8 @@ fn cmd_estimate(args: &Args, artifacts: &Path) -> Result<()> {
         args.num_or("n", 6u32)?,
         args.num_or("p", 16u32)?,
     );
-    let manifest = ModelManifest::load(artifacts, &model)?;
+    let manifest = ModelManifest::load(artifacts, &model)
+        .or_else(|e| a2q::runtime::native::native_manifest(&model).ok_or(e))?;
     let geoms = manifest.geoms()?;
     println!("{model} at M={m} N={n} P={p} (cycles budget {DEFAULT_CYCLES_BUDGET}):");
     println!("{:<10} {:>12} {:>12} {:>12}", "policy", "compute", "memory", "total");
@@ -351,13 +374,11 @@ fn cmd_accsim(args: &Args) -> Result<()> {
 /// the network.
 fn cmd_netsim(args: &Args, results: &Path) -> Result<()> {
     use a2q::datasets::Split;
-    use a2q::finn::estimate_qnetwork;
-    use a2q::model::{NetSpec, QNetwork};
-    use a2q::Tensor;
+    use a2q::model::NetSpec;
 
     args.check_known(&[
         "artifacts", "results", "layers", "m", "n", "p", "psweep", "samples", "seed", "threads",
-        "unconstrained", "dataset",
+        "unconstrained", "quantizer", "dataset",
     ])?;
     let widths: Vec<usize> = args.list_or("layers", "784,64,16,2")?;
     let m = args.num_or("m", 4u32)?;
@@ -365,9 +386,16 @@ fn cmd_netsim(args: &Args, results: &Path) -> Result<()> {
     let p = args.num_or("p", 16u32)?;
     let samples = args.num_or("samples", 256usize)?.max(1);
     let seed = args.num_or("seed", 0u64)?;
-    let constrained = !args.bool_or("unconstrained", false)?;
-    let spec =
-        NetSpec { widths, m_bits: m, n_bits: n, p_bits: p, x_signed: false, constrained };
+    let quant = if args.bool_or("unconstrained", false)? {
+        SynthQuant::Affine
+    } else {
+        match args.str_or("quantizer", "a2q").as_str() {
+            "a2q" => SynthQuant::A2q,
+            "a2q_plus" => SynthQuant::A2qPlus,
+            other => anyhow::bail!("--quantizer expects a2q|a2q_plus, got {other:?}"),
+        }
+    };
+    let spec = NetSpec { widths, m_bits: m, n_bits: n, p_bits: p, x_signed: false, quant };
     let mut net = QNetwork::synthesize(&spec, seed)?;
 
     // Calibration + eval inputs: the synthetic dataset's test split when the
@@ -419,7 +447,11 @@ fn cmd_netsim(args: &Args, results: &Path) -> Result<()> {
         spec.widths,
         x_int.rows(),
         1 + 2 * p_values.len(),
-        if constrained { " (A2Q-constrained)" } else { " (unconstrained QAT)" },
+        match quant {
+            SynthQuant::A2q => " (A2Q-constrained)",
+            SynthQuant::A2qPlus => " (A2Q+-constrained, zero-centered)",
+            SynthQuant::Affine => " (unconstrained QAT)",
+        },
     );
     for r in &bounds_rows {
         println!(
@@ -470,8 +502,21 @@ fn cmd_netsim(args: &Args, results: &Path) -> Result<()> {
 }
 
 fn cmd_models(artifacts: &Path) -> Result<()> {
-    for m in discover_models(artifacts)? {
-        let manifest = ModelManifest::load(artifacts, &m)?;
+    let mut names: Vec<String> = native_models().iter().map(|m| m.to_string()).collect();
+    if let Ok(found) = discover_models(artifacts) {
+        for m in found {
+            if !names.contains(&m) {
+                names.push(m);
+            }
+        }
+    }
+    names.sort();
+    for m in names {
+        // Artifact manifests take precedence over the registry (matching
+        // cmd_estimate), so the listing describes what an xla backend would
+        // actually train; registry-only models resolve natively.
+        let manifest = ModelManifest::load(artifacts, &m)
+            .or_else(|e| a2q::runtime::native::native_manifest(&m).ok_or(e))?;
         println!(
             "{:<8} task={:<9} bs={:<4} K*={:<5} layers={} dataset={}",
             m,

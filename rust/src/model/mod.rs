@@ -33,4 +33,4 @@
 
 pub mod qnetwork;
 
-pub use qnetwork::{network_forward_ref, ActQuant, NetSpec, QLayer, QNetwork};
+pub use qnetwork::{network_forward_ref, ActQuant, NetSpec, QLayer, QNetwork, SynthQuant};

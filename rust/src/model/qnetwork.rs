@@ -8,9 +8,10 @@ use crate::accsim::{
     qlinear_forward, qlinear_forward_ref, quantize_inputs, AccMode, IntMatrix, NetworkStats,
 };
 use crate::finn::estimate::{BitSpec, LayerGeom};
-use crate::quant::a2q::a2q_quantize_row;
+use crate::quant::quantizer::{A2qPlusQuantizer, A2qQuantizer, WeightQuantizer};
 use crate::quant::QTensor;
 use crate::rng::Rng;
+use crate::runtime::{ExportedLayer, ModelManifest};
 use crate::tensor::Tensor;
 
 /// One activation-boundary quantizer: the integer grid a layer's inputs
@@ -81,6 +82,36 @@ pub struct QLayer {
     pub p_bits: u32,
 }
 
+/// Which weight quantizer [`QNetwork::synthesize`] pushes channels through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SynthQuant {
+    /// Paper A2Q ([`A2qQuantizer`]): every channel satisfies the Eq. 15 cap,
+    /// so P-bit accumulation is overflow-free by construction.
+    A2q,
+    /// A2Q+ ([`A2qPlusQuantizer`]): zero-centered channels, same guarantee,
+    /// never more integer norm than plain A2Q on the same draws.
+    A2qPlus,
+    /// Plain per-channel affine quantization with no accumulator cap — the
+    /// baseline-QAT regime where narrow registers actually overflow.
+    Affine,
+}
+
+impl SynthQuant {
+    /// The accumulator-aware quantizer behind this mode (None for Affine).
+    pub fn quantizer(self) -> Option<&'static dyn WeightQuantizer> {
+        match self {
+            SynthQuant::A2q => Some(&A2qQuantizer),
+            SynthQuant::A2qPlus => Some(&A2qPlusQuantizer),
+            SynthQuant::Affine => None,
+        }
+    }
+
+    /// Whether synthesized channels carry the Eq. 15 guarantee.
+    pub fn constrained(self) -> bool {
+        self != SynthQuant::Affine
+    }
+}
+
 /// Shape and bit-width specification for [`QNetwork::synthesize`].
 #[derive(Clone, Debug)]
 pub struct NetSpec {
@@ -95,12 +126,9 @@ pub struct NetSpec {
     /// Whether the *network input* grid is signed (hidden boundaries are
     /// always signed: pre-activations carry both signs).
     pub x_signed: bool,
-    /// `true`: weights via [`a2q_quantize_row`], so every channel satisfies
-    /// the Eq. 15 cap and P-bit accumulation is overflow-free by
-    /// construction. `false`: plain per-channel affine quantization with no
-    /// accumulator cap — the baseline-QAT regime where narrow registers
-    /// actually overflow.
-    pub constrained: bool,
+    /// The weight quantizer: accumulator-constrained (A2Q / A2Q+) or the
+    /// unconstrained affine baseline.
+    pub quant: SynthQuant,
 }
 
 /// A stack of chained quantized layers: layer `i+1`'s input dimension is
@@ -130,6 +158,49 @@ impl QNetwork {
         Ok(QNetwork { name: name.into(), layers })
     }
 
+    /// Assemble a network straight from a training backend's export — the
+    /// train -> export -> accsim/FINN bridge. Layer metadata (input bit
+    /// widths, signedness, target P) comes from the manifest's qlayers
+    /// resolved at the run's `(M, N, P)`; activation scales start at 1.0,
+    /// so run [`Self::calibrate`] over a sample batch before simulating.
+    ///
+    /// Fails for non-dense layer kinds (conv exports don't map onto the
+    /// dense accsim substrate).
+    pub fn from_exported(
+        name: impl Into<String>,
+        exported: &[ExportedLayer],
+        manifest: &ModelManifest,
+        bits: (u32, u32, u32),
+    ) -> Result<QNetwork> {
+        anyhow::ensure!(
+            exported.len() == manifest.qlayers.len(),
+            "{} exported layers vs {} manifest qlayers",
+            exported.len(),
+            manifest.qlayers.len()
+        );
+        let (m, n, p) = bits;
+        let mut layers = Vec::with_capacity(exported.len());
+        for (layer, meta) in exported.iter().zip(&manifest.qlayers) {
+            anyhow::ensure!(
+                meta.kind == "dense",
+                "layer {} is {:?}; only dense exports chain into a QNetwork",
+                meta.name,
+                meta.kind
+            );
+            let n_res = meta.n_bits.to_bitspec()?.resolve(m, n, p);
+            let p_res = meta.p_bits.to_bitspec()?.resolve(m, n, p);
+            let m_res = meta.m_bits.to_bitspec()?.resolve(m, n, p);
+            layers.push(QLayer {
+                name: meta.name.clone(),
+                weights: layer.to_qtensor(),
+                in_quant: ActQuant::new(n_res.clamp(1, 32), meta.x_signed, 1.0),
+                m_bits: m_res,
+                p_bits: p_res,
+            });
+        }
+        QNetwork::new(name, layers)
+    }
+
     /// Synthesize a network directly from the A2Q weight quantizer: each
     /// channel is a Gaussian direction vector pushed through
     /// [`a2q_quantize_row`] (constrained) or a plain affine quantizer
@@ -151,10 +222,10 @@ impl QNetwork {
             let mut scales = Vec::with_capacity(c_out);
             for _ in 0..c_out {
                 let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
-                if spec.constrained {
+                if let Some(q) = spec.quant.quantizer() {
                     // Cap target far above the Eq. 23 ceiling so the
                     // accumulator constraint (not t) binds.
-                    let (w_int, s) = a2q_quantize_row(
+                    let (w_int, s) = q.quantize_row(
                         &v,
                         -6.0,
                         30.0,
@@ -300,13 +371,13 @@ mod tests {
     use super::*;
     use crate::quant::a2q::row_satisfies_cap;
 
-    fn spec(widths: Vec<usize>, constrained: bool) -> NetSpec {
-        NetSpec { widths, m_bits: 4, n_bits: 3, p_bits: 12, x_signed: false, constrained }
+    fn spec(widths: Vec<usize>, quant: SynthQuant) -> NetSpec {
+        NetSpec { widths, m_bits: 4, n_bits: 3, p_bits: 12, x_signed: false, quant }
     }
 
     #[test]
     fn synthesize_chains_and_caps() {
-        let net = QNetwork::synthesize(&spec(vec![12, 8, 5], true), 3).unwrap();
+        let net = QNetwork::synthesize(&spec(vec![12, 8, 5], SynthQuant::A2q), 3).unwrap();
         assert_eq!(net.depth(), 2);
         assert_eq!(net.input_dim(), 12);
         assert_eq!(net.output_dim(), 5);
@@ -326,22 +397,22 @@ mod tests {
 
     #[test]
     fn unconstrained_uses_full_code_range() {
-        let net = QNetwork::synthesize(&spec(vec![64, 16], false), 1).unwrap();
+        let net = QNetwork::synthesize(&spec(vec![64, 16], SynthQuant::Affine), 1).unwrap();
         // affine quantization to 4 bits hits the +/-7 rails
         assert_eq!(net.layers[0].weights.max_abs_code(), 7);
     }
 
     #[test]
     fn chain_mismatch_rejected() {
-        let a = QNetwork::synthesize(&spec(vec![6, 4], true), 0).unwrap();
-        let b = QNetwork::synthesize(&spec(vec![5, 3], true), 0).unwrap();
+        let a = QNetwork::synthesize(&spec(vec![6, 4], SynthQuant::A2q), 0).unwrap();
+        let b = QNetwork::synthesize(&spec(vec![5, 3], SynthQuant::A2q), 0).unwrap();
         let err = QNetwork::new("bad", vec![a.layers[0].clone(), b.layers[0].clone()]);
         assert!(err.is_err());
     }
 
     #[test]
     fn calibrate_sets_positive_scales_and_fills_grid() {
-        let mut net = QNetwork::synthesize(&spec(vec![10, 7, 4], true), 9).unwrap();
+        let mut net = QNetwork::synthesize(&spec(vec![10, 7, 4], SynthQuant::A2q), 9).unwrap();
         let sample = Tensor::new(vec![3, 10], (0..30).map(|i| (i % 5) as f32 * 0.2).collect());
         net.calibrate(&sample);
         for layer in &net.layers {
@@ -377,7 +448,7 @@ mod tests {
 
     #[test]
     fn geoms_expose_runtime_p_and_chain() {
-        let net = QNetwork::synthesize(&spec(vec![12, 8, 5], true), 3).unwrap();
+        let net = QNetwork::synthesize(&spec(vec![12, 8, 5], SynthQuant::A2q), 3).unwrap();
         let geoms = net.geoms();
         assert_eq!(geoms.len(), 2);
         assert!(geoms.iter().all(|g| g.p_spec == BitSpec::P && g.kind == "dense"));
@@ -388,7 +459,7 @@ mod tests {
 
     #[test]
     fn reference_forward_propagates_and_records_stats() {
-        let mut net = QNetwork::synthesize(&spec(vec![9, 6, 3], true), 5).unwrap();
+        let mut net = QNetwork::synthesize(&spec(vec![9, 6, 3], SynthQuant::A2q), 5).unwrap();
         let sample = Tensor::new(vec![4, 9], (0..36).map(|i| (i % 7) as f32 * 0.1).collect());
         net.calibrate(&sample);
         let x = net.layers[0].in_quant.quantize(&sample);
@@ -403,8 +474,64 @@ mod tests {
     }
 
     #[test]
+    fn a2q_plus_synthesis_keeps_cap_with_no_more_norm() {
+        let a = QNetwork::synthesize(&spec(vec![20, 10, 4], SynthQuant::A2q), 13).unwrap();
+        let p = QNetwork::synthesize(&spec(vec![20, 10, 4], SynthQuant::A2qPlus), 13).unwrap();
+        for (la, lp) in a.layers.iter().zip(&p.layers) {
+            for c in 0..lp.weights.c_out {
+                let row: Vec<f32> = lp.weights.row(c).iter().map(|w| *w as f32).collect();
+                assert!(row_satisfies_cap(&row, 12, 3, lp.in_quant.signed), "{}/{c}", lp.name);
+            }
+            // same seed => same Gaussian draws: the centered quantizer never
+            // spends more integer norm than plain A2Q, channel by channel
+            for (np, na) in lp.weights.row_l1().iter().zip(la.weights.row_l1()) {
+                assert!(*np <= na, "{}: {np} > {na}", lp.name);
+            }
+        }
+    }
+
+    #[test]
+    fn from_exported_chains_native_training_into_the_simulators() {
+        use crate::datasets::{self, Split};
+        use crate::runtime::{NativeBackend, TrainBackend};
+
+        let be = NativeBackend::new("artifacts");
+        let manifest = be.manifest("mlp3").unwrap();
+        let bits = (4u32, 4u32, 14u32);
+        let ds = datasets::by_name("synth_mnist", 128, 64, 0).unwrap();
+        let idx: Vec<usize> = (0..manifest.batch_size).collect();
+        let b = ds.gather(Split::Train, &idx);
+        let mut state = be.init(&manifest, 1.0).unwrap();
+        for _ in 0..4 {
+            be.train_step(&manifest, "a2q", &mut state, &b.x, &b.y, bits, 0.05).unwrap();
+        }
+        let exported = be.export(&manifest, "a2q", &state, bits).unwrap();
+        let mut net = QNetwork::from_exported("mlp3", &exported, &manifest, bits).unwrap();
+        assert_eq!(net.depth(), 3);
+        assert_eq!(net.input_dim(), 784);
+        // layer-0 inputs are the 1-bit binary grid, hidden boundaries N-bit
+        assert_eq!(net.layers[0].in_quant.n_bits, 1);
+        assert_eq!(net.layers[1].in_quant.n_bits, 4);
+        let eval = ds.gather(Split::Test, &(0..32).collect::<Vec<_>>());
+        net.calibrate(&eval.x);
+        let x = net.layers[0].in_quant.quantize(&eval.x);
+        // the trained network is overflow-free at its target width
+        let r = network_forward_ref(&net, &x, AccMode::Wrap { p_bits: bits.2 });
+        for (li, s) in r.layer_stats.iter().enumerate() {
+            assert_eq!(s.overflow_events, 0, "layer {li} overflowed at the A2Q target");
+        }
+        // and prices straight through the FINN estimator
+        let est = crate::finn::estimate_qnetwork(
+            &net,
+            crate::finn::estimate::AccumulatorPolicy::A2qTarget(bits.2),
+            crate::finn::estimate::DEFAULT_CYCLES_BUDGET,
+        );
+        assert!(est.total_luts() > 0.0);
+    }
+
+    #[test]
     fn constrained_network_is_overflow_free_at_target_p() {
-        let mut net = QNetwork::synthesize(&spec(vec![16, 10, 4], true), 11).unwrap();
+        let mut net = QNetwork::synthesize(&spec(vec![16, 10, 4], SynthQuant::A2q), 11).unwrap();
         let sample = Tensor::new(vec![5, 16], (0..80).map(|i| (i % 9) as f32 * 0.11).collect());
         net.calibrate(&sample);
         let x = net.layers[0].in_quant.quantize(&sample);

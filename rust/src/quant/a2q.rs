@@ -14,6 +14,24 @@ pub fn l1_cap(p_bits: u32, n_bits: u32, x_signed: bool) -> f64 {
     (2f64.powi(p_bits as i32 - 1) - 1.0) * 2f64.powf(sig - n_bits as f64)
 }
 
+/// A2Q+ (arXiv 2401.10432) improved l1 cap for **zero-centered** weight
+/// rows. Centering makes the worst-case accumulation range symmetric —
+/// positive and negative code mass each carry half the norm — so a signed
+/// P-bit register affords `(2^P - 2) / (2^N - 1)` for unsigned N-bit inputs
+/// (and `(2^P - 2) / 2^(N-1)` signed): slightly more than double the Eq. 15
+/// budget at the same P. This is the *reporting/bounds* cap; the
+/// [`crate::quant::quantizer::A2qPlusQuantizer`] deliberately keeps the
+/// conservative Eq. 15 budget so every exported row still passes
+/// [`row_satisfies_cap`] and the audit stays quantizer-independent.
+pub fn l1_cap_plus(p_bits: u32, n_bits: u32, x_signed: bool) -> f64 {
+    let num = 2f64.powi(p_bits as i32) - 2.0;
+    if x_signed {
+        num / 2f64.powi(n_bits as i32 - 1)
+    } else {
+        num / (2f64.powi(n_bits as i32) - 1.0)
+    }
+}
+
 /// Quantize one output channel's direction vector `v` with per-channel
 /// log2-scale `d` and log2-norm `t` (Eq. 20-23). Returns (w_int, s).
 ///
@@ -82,6 +100,23 @@ mod tests {
         assert!((c - 32767.0 / 256.0).abs() < 1e-9);
         // signed input doubles the cap
         assert_eq!(l1_cap(16, 8, true), 2.0 * l1_cap(16, 8, false));
+    }
+
+    #[test]
+    fn plus_cap_improves_on_eq15() {
+        // unsigned: (2^16 - 2)/(2^8 - 1) = 257.003... > 2x the Eq. 15 cap
+        assert!(l1_cap_plus(16, 8, false) > 2.0 * l1_cap(16, 8, false));
+        // signed: exactly the factor-2 improvement
+        let plus = l1_cap_plus(16, 8, true);
+        assert!((plus - 2.0 * l1_cap(16, 8, true)).abs() < 1e-9, "{plus}");
+        // the improved cap always dominates the conservative one
+        for p in [8u32, 12, 16, 24] {
+            for n in [1u32, 4, 8] {
+                for signed in [false, true] {
+                    assert!(l1_cap_plus(p, n, signed) > l1_cap(p, n, signed));
+                }
+            }
+        }
     }
 
     #[test]

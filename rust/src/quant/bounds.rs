@@ -75,8 +75,23 @@ pub fn weight_bound(l1_norm: f64, n_bits: u32, x_signed: bool) -> u32 {
 
 /// Worst-case input magnitude `2^(N - 1_signed)` (paper §3.1; the unsigned
 /// case uses the paper's 2^N simplification, which keeps the guarantee).
+///
+/// Domain: `0 <= N - 1_signed <= 62` (an i64 holds shifts up to 62 without
+/// hitting the sign bit). Out-of-domain widths saturate to `i64::MAX` — a
+/// magnitude that keeps every `l1 * max|x|` safety gate conservative — with
+/// a `debug_assert` so misuse is loud in debug builds instead of UB-shaped
+/// (`1i64 << 63` flips the sign, silently passing gates it should fail).
 pub fn max_input_mag(n_bits: u32, x_signed: bool) -> i64 {
-    1i64 << (n_bits as i64 - if x_signed { 1 } else { 0 })
+    let shift = n_bits as i64 - i64::from(x_signed);
+    debug_assert!(
+        (0..=62).contains(&shift),
+        "max_input_mag: N - 1_signed = {shift} outside 0..=62 (n_bits {n_bits}, signed {x_signed})"
+    );
+    if (0..=62).contains(&shift) {
+        1i64 << shift
+    } else {
+        i64::MAX
+    }
 }
 
 /// Largest value a signed P-bit accumulator holds: `2^(P-1) - 1`.
@@ -128,6 +143,23 @@ mod tests {
     #[test]
     fn zero_norm_channel() {
         assert_eq!(weight_bound(0.0, 8, false), 1);
+    }
+
+    #[test]
+    fn max_input_mag_in_domain_and_saturating() {
+        assert_eq!(max_input_mag(1, false), 2);
+        assert_eq!(max_input_mag(8, false), 256);
+        assert_eq!(max_input_mag(8, true), 128);
+        // the widest legal shifts
+        assert_eq!(max_input_mag(62, false), 1i64 << 62);
+        assert_eq!(max_input_mag(63, true), 1i64 << 62);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "max_input_mag")]
+    fn max_input_mag_out_of_domain_is_loud_in_debug() {
+        let _ = max_input_mag(64, false);
     }
 
     #[test]

@@ -1,11 +1,15 @@
 //! Quantization math on the Rust side: the paper's accumulator bit-width
 //! bounds (§3), a bit-exact mirror of the A2Q quantizer used for verifying
-//! exported artifacts, and integer-tensor helpers.
+//! exported artifacts, the [`quantizer::WeightQuantizer`] abstraction (paper
+//! A2Q and A2Q+ behind one trait, with STE backward halves for the native
+//! training backend), and integer-tensor helpers.
 
 pub mod a2q;
 pub mod bounds;
 pub mod qtensor;
+pub mod quantizer;
 
-pub use a2q::{a2q_quantize_row, l1_cap};
+pub use a2q::{a2q_quantize_row, l1_cap, l1_cap_plus};
 pub use bounds::{data_type_bound, weight_bound, DotShape};
 pub use qtensor::QTensor;
+pub use quantizer::{quantizer_for_alg, A2qPlusQuantizer, A2qQuantizer, WeightQuantizer};

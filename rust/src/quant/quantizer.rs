@@ -1,0 +1,451 @@
+//! The weight-quantizer abstraction: paper A2Q (Eq. 20-23) and A2Q+
+//! (arXiv 2401.10432, zero-centered weights) behind one trait, shared by
+//! [`crate::model::QNetwork`] synthesis, the native training backend
+//! (forward *and* STE backward) and the export/audit path.
+//!
+//! Contract every impl must keep:
+//!
+//! * **Guarantee** — every quantized row satisfies Eq. 15
+//!   ([`crate::quant::a2q::row_satisfies_cap`]) at its (N, P), so exported
+//!   layers pass the coordinator audit unchanged no matter which quantizer
+//!   trained them.
+//! * **Bit-exactness** — [`A2qQuantizer`] *is* the paper quantizer: its
+//!   forward delegates to [`a2q_quantize_row`], and a property test in
+//!   `tests/property_invariants.rs` pins the two together across random
+//!   shapes and bit widths.
+//! * **Norm monotonicity** — [`A2qPlusQuantizer`] never spends more integer
+//!   l1 norm than plain A2Q does on the same `(v, d, t)` leaves: its norm
+//!   budget is the minimum of the Eq. 23 ceiling and the plain-A2Q achieved
+//!   norm, so sparsity/l1 comparisons between the two are monotone by
+//!   construction. The *improved* zero-centered cap of the A2Q+ paper is
+//!   exposed separately as [`crate::quant::a2q::l1_cap_plus`] for the
+//!   bounds/report path; the quantizer itself keeps the conservative Eq. 15
+//!   budget so the unchanged audit stays meaningful.
+//!
+//! The backward halves implement the straight-through estimator the L2 JAX
+//! models use: round-toward-zero is treated as identity inside the M-bit
+//! rails and zero outside, while the weight-norm parametrization
+//! `w = g * v / ||v||_1` (and the `g = 2^min(T, t)` budget) is
+//! differentiated exactly, so the per-channel `d`/`t` leaves train by
+//! gradient in the native backend.
+
+use super::a2q::a2q_quantize_row;
+
+const LN2: f32 = std::f32::consts::LN_2;
+
+/// One weight quantizer: forward (codes + scale) and STE backward.
+pub trait WeightQuantizer: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Quantize one output channel's direction vector `v` with per-channel
+    /// log2-scale `d` and log2-norm target `t` into M-bit integer codes
+    /// (carried in f32) plus the channel scale.
+    #[allow(clippy::too_many_arguments)]
+    fn quantize_row(
+        &self,
+        v: &[f32],
+        d: f32,
+        t: f32,
+        m_bits: u32,
+        n_bits: u32,
+        p_bits: u32,
+        x_signed: bool,
+    ) -> (Vec<f32>, f32);
+
+    /// STE backward through [`Self::quantize_row`]: given `dL/d(wq)` for the
+    /// dequantized weights `wq = w_int * s`, write `dL/dv` into `grad_v`
+    /// (overwritten, same length as `v`) and return `(dL/dd, dL/dt)`.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_row(
+        &self,
+        v: &[f32],
+        d: f32,
+        t: f32,
+        m_bits: u32,
+        n_bits: u32,
+        p_bits: u32,
+        x_signed: bool,
+        g_wq: &[f32],
+        grad_v: &mut [f32],
+    ) -> (f32, f32);
+}
+
+/// Paper A2Q (Eq. 20-23): forward delegates to [`a2q_quantize_row`].
+pub struct A2qQuantizer;
+
+/// A2Q+ (arXiv 2401.10432): zero-center the direction vector before the
+/// same Eq. 20-23 transform, with the norm budget additionally capped at
+/// the plain-A2Q achieved integer norm (see module docs).
+pub struct A2qPlusQuantizer;
+
+/// Resolve the quantizer for a training-algorithm name (`"a2q"` /
+/// `"a2q_plus"`); `"qat"`/`"float"` have no accumulator-aware quantizer.
+pub fn quantizer_for_alg(alg: &str) -> Option<&'static dyn WeightQuantizer> {
+    match alg {
+        "a2q" => Some(&A2qQuantizer),
+        "a2q_plus" => Some(&A2qPlusQuantizer),
+        _ => None,
+    }
+}
+
+/// The per-channel quantizer-parameter initialization rules (the same ones
+/// `layers._with_qparams` applies at model build): given one channel's
+/// float weights, `d = log2(max|v| / (2^(M-1)-1))` puts the largest weight
+/// at the top of the M-bit grid and `t = log2(||v||_1)` starts the norm
+/// target at the current norm. Shared by native-backend init and the
+/// float-warmup recalibration so the two can never drift apart.
+pub fn init_qparams_row(row: &[f32], m_bits: u32) -> (f32, f32) {
+    let vmax = (2f32.powi(m_bits as i32 - 1) - 1.0).max(1.0);
+    let max_abs = row.iter().fold(0f32, |a, x| a.max(x.abs())).max(1e-8);
+    let l1 = row.iter().map(|x| x.abs()).sum::<f32>().max(1e-8);
+    ((max_abs / vmax).log2(), l1.log2())
+}
+
+/// The shared Eq. 20-23 geometry of one channel: scale, the Eq. 23
+/// accumulator ceiling `T`, the norm budget `g = 2^min(T, t)` and the M-bit
+/// code rails. Arithmetic mirrors [`a2q_quantize_row`] exactly.
+struct Geom {
+    s: f32,
+    t_cap: f32,
+    g: f32,
+    lo: f32,
+    hi: f32,
+}
+
+fn geom(d: f32, t: f32, m_bits: u32, n_bits: u32, p_bits: u32, x_signed: bool) -> Geom {
+    let s = 2f32.powf(d);
+    let sig: f32 = if x_signed { 1.0 } else { 0.0 };
+    let t_cap = sig + (2f32.powf(p_bits as f32 - 1.0) - 1.0).log2() + d - n_bits as f32;
+    let g = 2f32.powf(t_cap.min(t));
+    let hi = 2f32.powf(m_bits as f32 - 1.0) - 1.0;
+    let lo = -(2f32.powf(m_bits as f32 - 1.0));
+    Geom { s, t_cap, g, lo, hi }
+}
+
+/// `sign(x)` with `sign(0) = 0` (f32's `signum` maps +0 to +1).
+fn sign0(x: f32) -> f32 {
+    if x == 0.0 {
+        0.0
+    } else {
+        x.signum()
+    }
+}
+
+/// The masked STE gradient core over one (possibly centered) direction row:
+/// elements whose truncated code lands inside the rails pass gradient
+/// straight through to `w_cont = g * v / ||v||_1` (differentiated exactly
+/// through the norm), clamped elements route gradient to the scale (`d`).
+///
+/// Writes `dL/dv` and returns `(dot_gw, gd_clamp)` where `dot_gw` is
+/// `sum_unclamped g_wq_i * w_cont_i` (so `dL/dg = dot_gw / g`) and
+/// `gd_clamp` the clamped elements' `dL/dd` contribution.
+fn masked_ste_grads(
+    vrow: &[f32],
+    g: f32,
+    s: f32,
+    lo: f32,
+    hi: f32,
+    g_wq: &[f32],
+    grad_v: &mut [f32],
+) -> (f32, f32) {
+    let l1: f32 = vrow.iter().map(|x| x.abs()).sum();
+    let l1 = if l1 == 0.0 { 1.0 } else { l1 };
+    let mut dot_gw = 0.0f32;
+    let mut gd_clamp = 0.0f32;
+    for i in 0..vrow.len() {
+        let w_cont = g * vrow[i] / l1;
+        let u = (w_cont / s).trunc();
+        if u < lo || u > hi {
+            // clamped to a rail: w_q = s * rail, so d/dd = ln2 * w_q
+            gd_clamp += g_wq[i] * u.clamp(lo, hi) * s * LN2;
+        } else {
+            dot_gw += g_wq[i] * w_cont;
+        }
+    }
+    // d w_cont_i / d v_j = g (delta_ij / l1 - v_i sign(v_j) / l1^2)
+    for j in 0..vrow.len() {
+        let w_cont = g * vrow[j] / l1;
+        let u = (w_cont / s).trunc();
+        let direct = if u >= lo && u <= hi { g_wq[j] * g / l1 } else { 0.0 };
+        grad_v[j] = direct - sign0(vrow[j]) * dot_gw / l1;
+    }
+    (dot_gw, gd_clamp)
+}
+
+impl WeightQuantizer for A2qQuantizer {
+    fn name(&self) -> &'static str {
+        "a2q"
+    }
+
+    fn quantize_row(
+        &self,
+        v: &[f32],
+        d: f32,
+        t: f32,
+        m_bits: u32,
+        n_bits: u32,
+        p_bits: u32,
+        x_signed: bool,
+    ) -> (Vec<f32>, f32) {
+        a2q_quantize_row(v, d, t, m_bits, n_bits, p_bits, x_signed)
+    }
+
+    fn grad_row(
+        &self,
+        v: &[f32],
+        d: f32,
+        t: f32,
+        m_bits: u32,
+        n_bits: u32,
+        p_bits: u32,
+        x_signed: bool,
+        g_wq: &[f32],
+        grad_v: &mut [f32],
+    ) -> (f32, f32) {
+        let gm = geom(d, t, m_bits, n_bits, p_bits, x_signed);
+        if !gm.g.is_finite() || gm.g <= 0.0 || !gm.s.is_finite() || gm.s <= 0.0 {
+            grad_v.fill(0.0);
+            return (0.0, 0.0);
+        }
+        let (dot_gw, mut gd) = masked_ste_grads(v, gm.g, gm.s, gm.lo, gm.hi, g_wq, grad_v);
+        // dL/dg * dg/d{t,d}: g = 2^t when t binds, 2^(const + d) otherwise,
+        // so the contribution is dot_gw * ln2 on whichever leaf binds.
+        let mut gt = 0.0;
+        if t <= gm.t_cap {
+            gt = dot_gw * LN2;
+        } else {
+            gd += dot_gw * LN2;
+        }
+        (gd, gt)
+    }
+}
+
+impl WeightQuantizer for A2qPlusQuantizer {
+    fn name(&self) -> &'static str {
+        "a2q_plus"
+    }
+
+    fn quantize_row(
+        &self,
+        v: &[f32],
+        d: f32,
+        t: f32,
+        m_bits: u32,
+        n_bits: u32,
+        p_bits: u32,
+        x_signed: bool,
+    ) -> (Vec<f32>, f32) {
+        let (w_base, s) = a2q_quantize_row(v, d, t, m_bits, n_bits, p_bits, x_signed);
+        let k = v.len();
+        if k == 0 {
+            return (w_base, s);
+        }
+        let l1_base: f32 = w_base.iter().map(|w| w.abs()).sum();
+        let mu = v.iter().sum::<f32>() / k as f32;
+        let vc: Vec<f32> = v.iter().map(|x| x - mu).collect();
+        let gm = geom(d, t, m_bits, n_bits, p_bits, x_signed);
+        // Budget: the Eq. 23 ceiling, additionally capped at the plain-A2Q
+        // achieved integer norm (in weight units), so the centered row can
+        // never spend more norm than the baseline it improves on.
+        let g = gm.g.min(l1_base * gm.s);
+        let l1c: f32 = vc.iter().map(|x| x.abs()).sum();
+        let l1c = if l1c == 0.0 { 1.0 } else { l1c };
+        let mut w: Vec<f32> = vc
+            .iter()
+            .map(|&x| ((g * x / l1c) / gm.s).trunc().clamp(gm.lo, gm.hi))
+            .collect();
+        // Exact-integer insurance against f32 round-off at the budget edge:
+        // trim the largest-magnitude code (first index on ties) until the
+        // integer norm is within the baseline. Rarely (if ever) more than
+        // one step.
+        let mut tot: f32 = w.iter().map(|x| x.abs()).sum();
+        while tot > l1_base {
+            let mut bi = 0usize;
+            let mut bv = 0f32;
+            for (i, x) in w.iter().enumerate() {
+                if x.abs() > bv {
+                    bv = x.abs();
+                    bi = i;
+                }
+            }
+            if bv == 0.0 {
+                break;
+            }
+            w[bi] -= w[bi].signum();
+            tot -= 1.0;
+        }
+        (w, s)
+    }
+
+    fn grad_row(
+        &self,
+        v: &[f32],
+        d: f32,
+        t: f32,
+        m_bits: u32,
+        n_bits: u32,
+        p_bits: u32,
+        x_signed: bool,
+        g_wq: &[f32],
+        grad_v: &mut [f32],
+    ) -> (f32, f32) {
+        let k = v.len();
+        if k == 0 {
+            return (0.0, 0.0);
+        }
+        let (w_base, _) = a2q_quantize_row(v, d, t, m_bits, n_bits, p_bits, x_signed);
+        let l1_base: f32 = w_base.iter().map(|w| w.abs()).sum();
+        let mu = v.iter().sum::<f32>() / k as f32;
+        let vc: Vec<f32> = v.iter().map(|x| x - mu).collect();
+        let gm = geom(d, t, m_bits, n_bits, p_bits, x_signed);
+        let base_budget = l1_base * gm.s;
+        let base_binds = base_budget < gm.g;
+        let g = gm.g.min(base_budget);
+        if !g.is_finite() || g <= 0.0 || !gm.s.is_finite() || gm.s <= 0.0 {
+            grad_v.fill(0.0);
+            return (0.0, 0.0);
+        }
+        let (dot_gw, mut gd) = masked_ste_grads(&vc, g, gm.s, gm.lo, gm.hi, g_wq, grad_v);
+        // g = l1_base * 2^d (base binds) and g = 2^(const + d) (cap binds)
+        // both differentiate to ln2 * g on d; only g = 2^t reaches t.
+        let mut gt = 0.0;
+        if !base_binds && t <= gm.t_cap {
+            gt = dot_gw * LN2;
+        } else {
+            gd += dot_gw * LN2;
+        }
+        // Zero-centering Jacobian: v' = v - mean(v) => subtract the mean
+        // gradient (gradients through the baseline's norm budget are STE'd
+        // as constant, like every other integer-valued intermediate).
+        let gmean = grad_v.iter().sum::<f32>() / k as f32;
+        for gj in grad_v.iter_mut() {
+            *gj -= gmean;
+        }
+        (gd, gt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::a2q::row_satisfies_cap;
+    use crate::rng::Rng;
+
+    #[test]
+    fn a2q_impl_delegates_bit_exact() {
+        let mut rng = Rng::new(41);
+        let v: Vec<f32> = (0..97).map(|_| rng.normal() as f32).collect();
+        let (a, sa) = A2qQuantizer.quantize_row(&v, -5.0, 9.0, 5, 4, 14, false);
+        let (b, sb) = a2q_quantize_row(&v, -5.0, 9.0, 5, 4, 14, false);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn plus_rows_satisfy_cap_and_never_exceed_base_norm() {
+        let mut rng = Rng::new(7);
+        for trial in 0..200 {
+            let k = 1 + rng.below(300);
+            let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 2.0).collect();
+            let d = -7.0 + rng.uniform() as f32 * 5.0;
+            let t = -2.0 + rng.uniform() as f32 * 14.0;
+            let m = 3 + (trial % 6) as u32;
+            let n = 1 + (trial % 8) as u32;
+            let p = 6 + (trial % 18) as u32;
+            let signed = trial % 2 == 0;
+            let (wb, _) = A2qQuantizer.quantize_row(&v, d, t, m, n, p, signed);
+            let (wp, _) = A2qPlusQuantizer.quantize_row(&v, d, t, m, n, p, signed);
+            assert!(row_satisfies_cap(&wp, p, n, signed), "trial {trial}");
+            let l1b: f32 = wb.iter().map(|x| x.abs()).sum();
+            let l1p: f32 = wp.iter().map(|x| x.abs()).sum();
+            assert!(l1p <= l1b, "trial {trial}: plus {l1p} > base {l1b}");
+            // codes stay inside the M-bit rails
+            let hi = 2f32.powi(m as i32 - 1) - 1.0;
+            assert!(wp.iter().all(|w| *w >= -hi - 1.0 && *w <= hi), "trial {trial}");
+        }
+    }
+
+    /// Central-difference check of the STE surrogate the backward claims to
+    /// differentiate: `f(v, d, t) = sum_i gw_i * wq_ste_i`, where `wq_ste`
+    /// is `w_cont` inside the rails and `s * rail` outside. Parameters are
+    /// chosen away from branch boundaries so the surrogate is smooth at the
+    /// probe scale.
+    #[test]
+    fn a2q_grad_matches_numeric_surrogate() {
+        let v = vec![0.9f32, -0.55, 0.3, -0.15, 0.7, 0.05];
+        let gw = vec![0.3f32, -0.8, 0.5, 0.2, -0.1, 0.4];
+        let (m, n, p, signed) = (6u32, 4u32, 12u32, false);
+
+        let surrogate = |v: &[f32], d: f32, t: f32| -> f64 {
+            let gm = geom(d, t, m, n, p, signed);
+            let l1: f32 = v.iter().map(|x| x.abs()).sum();
+            let l1 = if l1 == 0.0 { 1.0 } else { l1 };
+            let mut acc = 0.0f64;
+            for i in 0..v.len() {
+                let w_cont = gm.g * v[i] / l1;
+                let u = (w_cont / gm.s).trunc();
+                let wq_ste =
+                    if u < gm.lo || u > gm.hi { u.clamp(gm.lo, gm.hi) * gm.s } else { w_cont };
+                acc += (gw[i] * wq_ste) as f64;
+            }
+            acc
+        };
+
+        // one t-binding and one cap-binding configuration
+        for (d, t) in [(-4.0f32, 1.5f32), (-4.0, 30.0)] {
+            let mut gv = vec![0.0f32; v.len()];
+            let (gd, gt) = A2qQuantizer.grad_row(&v, d, t, m, n, p, signed, &gw, &mut gv);
+            let h = 1e-3f32;
+            let nd = (surrogate(&v, d + h, t) - surrogate(&v, d - h, t)) / (2.0 * h as f64);
+            let nt = (surrogate(&v, d, t + h) - surrogate(&v, d, t - h)) / (2.0 * h as f64);
+            assert!((gd as f64 - nd).abs() < 2e-2, "d={d} t={t}: gd {gd} vs {nd}");
+            assert!((gt as f64 - nt).abs() < 2e-2, "d={d} t={t}: gt {gt} vs {nt}");
+            for j in 0..v.len() {
+                let mut vp = v.clone();
+                let mut vm = v.clone();
+                vp[j] += h;
+                vm[j] -= h;
+                let nv = (surrogate(&vp, d, t) - surrogate(&vm, d, t)) / (2.0 * h as f64);
+                assert!(
+                    (gv[j] as f64 - nv).abs() < 2e-2,
+                    "d={d} t={t} v[{j}]: {} vs {nv}",
+                    gv[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plus_grads_are_mean_free_over_v() {
+        let mut rng = Rng::new(99);
+        let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let gw: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let mut gv = vec![0.0f32; 64];
+        let (gd, gt) = A2qPlusQuantizer.grad_row(&v, -5.0, 8.0, 4, 4, 16, false, &gw, &mut gv);
+        assert!(gd.is_finite() && gt.is_finite());
+        let mean: f32 = gv.iter().sum::<f32>() / 64.0;
+        assert!(mean.abs() < 1e-5, "centered quantizer gradient must be mean-free: {mean}");
+    }
+
+    #[test]
+    fn quantizer_lookup_by_alg() {
+        assert_eq!(quantizer_for_alg("a2q").unwrap().name(), "a2q");
+        assert_eq!(quantizer_for_alg("a2q_plus").unwrap().name(), "a2q_plus");
+        assert!(quantizer_for_alg("qat").is_none());
+        assert!(quantizer_for_alg("float").is_none());
+    }
+
+    #[test]
+    fn zero_vector_rows_are_stable() {
+        let v = vec![0.0f32; 16];
+        let gw = vec![1.0f32; 16];
+        for q in [&A2qQuantizer as &dyn WeightQuantizer, &A2qPlusQuantizer] {
+            let (w, _) = q.quantize_row(&v, -4.0, 2.0, 8, 8, 16, false);
+            assert!(w.iter().all(|x| *x == 0.0), "{}", q.name());
+            let mut gv = vec![0.0f32; 16];
+            let (gd, gt) = q.grad_row(&v, -4.0, 2.0, 8, 8, 16, false, &gw, &mut gv);
+            assert!(gd.is_finite() && gt.is_finite(), "{}", q.name());
+            assert!(gv.iter().all(|x| x.is_finite()), "{}", q.name());
+        }
+    }
+}

@@ -10,32 +10,29 @@
 //! 3. re-train the same model from the same seed with A2Q at each target P
 //!    and record its accuracy (overflow-free by construction — asserted).
 //!
-//! The training-backed pipeline ([`run`]) needs the PJRT engine (`xla`
-//! feature). The **network variant** ([`run_network`] / [`emit_network`])
-//! is XLA-free: it forwards a whole [`QNetwork`] under every width in one
-//! fused [`NetworkPlan`] pass and reports overflow rate *per layer depth* —
-//! the axis the single-layer figure cannot show, and where accumulator
-//! constraints visibly compound through inter-layer requantization.
+//! The training-backed pipeline ([`run`]) is generic over the
+//! [`TrainBackend`], so the default build regenerates it through the native
+//! pure-Rust trainer (the PJRT engine serves it under the `xla` feature).
+//! The **network variant** ([`run_network`] / [`emit_network`]) needs no
+//! training at all: it forwards a whole [`QNetwork`] under every width in
+//! one fused [`NetworkPlan`] pass and reports overflow rate *per layer
+//! depth* — the axis the single-layer figure cannot show, and where
+//! accumulator constraints visibly compound through inter-layer
+//! requantization.
 
 use std::path::Path;
 
 use anyhow::Result;
 
-#[cfg(feature = "xla")]
 use crate::accsim::matmul::quantize_inputs;
-#[cfg(feature = "xla")]
 use crate::accsim::{qlinear_forward, qlinear_forward_multi};
 use crate::accsim::{AccMode, IntMatrix, NetworkPlan};
-#[cfg(feature = "xla")]
 use crate::config::RunConfig;
-#[cfg(feature = "xla")]
 use crate::coordinator::Trainer;
-#[cfg(feature = "xla")]
 use crate::datasets::Split;
 use crate::metrics;
 use crate::model::QNetwork;
-#[cfg(feature = "xla")]
-use crate::runtime::Engine;
+use crate::runtime::TrainBackend;
 use crate::tensor::Tensor;
 
 use super::render::{f, write_csv, write_markdown};
@@ -60,9 +57,8 @@ pub struct Fig2Report {
 
 /// Run the experiment. `p_values` defaults to 10..=20 (the paper sweeps
 /// below the 19-bit bound); `steps` sizes each training run.
-#[cfg(feature = "xla")]
-pub fn run(
-    engine: &Engine,
+pub fn run<B: TrainBackend + ?Sized>(
+    backend: &B,
     p_values: &[u32],
     steps: u64,
     eval_samples: usize,
@@ -71,7 +67,7 @@ pub fn run(
     // --- 1. baseline QAT training (accumulator-oblivious) -------------------
     let mut qat_cfg = RunConfig::new("mlp", "qat", 8, 1, 32, steps);
     qat_cfg.seed = seed;
-    let trainer = Trainer::new(engine, &qat_cfg)?;
+    let trainer = Trainer::new(backend, &qat_cfg)?;
     let qat = trainer.run(&qat_cfg)?;
     let layer = qat.exported.as_ref().unwrap()[0].to_qtensor();
 
@@ -310,7 +306,7 @@ pub fn emit_network(report: &Fig2NetReport, out_dir: &Path) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::NetSpec;
+    use crate::model::{NetSpec, SynthQuant};
 
     #[test]
     fn network_variant_reports_per_layer_rows() {
@@ -320,7 +316,7 @@ mod tests {
             n_bits: 4,
             p_bits: 10,
             x_signed: false,
-            constrained: false,
+            quant: SynthQuant::Affine,
         };
         let mut net = QNetwork::synthesize(&spec, 4).unwrap();
         let sample =

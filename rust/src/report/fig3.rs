@@ -203,14 +203,14 @@ mod tests {
 
     #[test]
     fn network_variant_bounds_are_consistent() {
-        use crate::model::{NetSpec, QNetwork};
+        use crate::model::{NetSpec, QNetwork, SynthQuant};
         let spec = NetSpec {
             widths: vec![32, 16, 8],
             m_bits: 4,
             n_bits: 3,
             p_bits: 10,
             x_signed: false,
-            constrained: true,
+            quant: SynthQuant::A2q,
         };
         let net = QNetwork::synthesize(&spec, 7).unwrap();
         let rows = run_network(&net);

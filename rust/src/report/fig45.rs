@@ -31,7 +31,7 @@ pub struct Fig4Model {
 
 /// Effective accumulator width of a record under its algorithm's semantics.
 fn effective_p(rec: &RunRecord, largest_k: usize) -> u32 {
-    if rec.config.alg == "a2q" {
+    if matches!(rec.config.alg.as_str(), "a2q" | "a2q_plus") {
         rec.config.p
     } else {
         // heuristic baseline: the guaranteed-safe P for its data types,
@@ -63,7 +63,7 @@ pub fn fig4(records: &[RunRecord], largest_k: &BTreeMap<String, usize>) -> Vec<F
                 .map(|r| r.perf)
                 .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))));
             let mut frontiers = Vec::new();
-            for alg in ["a2q", "qat"] {
+            for alg in ["a2q", "a2q_plus", "qat"] {
                 let pts: Vec<Point<(u32, u32)>> = records
                     .iter()
                     .filter(|r| r.config.model == model && r.config.alg == alg)
@@ -140,7 +140,7 @@ pub fn fig5(records: &[RunRecord]) -> Vec<Fig5Row> {
 
     let mut by_p: BTreeMap<u32, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
     for r in records {
-        if r.config.alg != "a2q" || r.config.m != r.config.n {
+        if !matches!(r.config.alg.as_str(), "a2q" | "a2q_plus") || r.config.m != r.config.n {
             continue;
         }
         let Some(&fp) = float_ref.get(&r.config.model) else { continue };

@@ -33,13 +33,15 @@ pub struct Fig6Model {
     pub settings: Vec<(String, Vec<Point<CfgTag>>)>,
 }
 
-/// The four co-design settings of paper §5.3.
+/// The co-design settings of paper §5.3, plus the A2Q+ quantizer at the
+/// same target-P policy.
 pub fn settings() -> Vec<(&'static str, &'static str)> {
     vec![
         ("qat_fixed32", "qat"),
         ("qat_datatype", "qat"),
         ("qat_ptm", "qat"),
         ("a2q", "a2q"),
+        ("a2q_plus", "a2q_plus"),
     ]
 }
 
@@ -48,7 +50,7 @@ fn policy_for(setting: &str, p: u32) -> AccumulatorPolicy {
         "qat_fixed32" => AccumulatorPolicy::Fixed32,
         "qat_datatype" => AccumulatorPolicy::DataTypeBound,
         "qat_ptm" => AccumulatorPolicy::WeightNorm,
-        "a2q" => AccumulatorPolicy::A2qTarget(p),
+        "a2q" | "a2q_plus" => AccumulatorPolicy::A2qTarget(p),
         other => unreachable!("unknown setting {other}"),
     }
 }

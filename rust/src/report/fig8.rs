@@ -14,10 +14,10 @@ use crate::accsim::ReorderScratch;
 use crate::config::RunConfig;
 use crate::coordinator::Trainer;
 use crate::datasets::Split;
-use crate::rng::Rng;
-use crate::runtime::Engine;
-use crate::tensor::Tensor;
 use crate::metrics;
+use crate::rng::Rng;
+use crate::runtime::TrainBackend;
+use crate::tensor::Tensor;
 
 use super::render::{f, write_csv, write_markdown};
 
@@ -56,8 +56,8 @@ impl Fig8Report {
 }
 
 /// Train the mlp with baseline QAT, then run the re-ordering study at P.
-pub fn run(
-    engine: &Engine,
+pub fn run<B: TrainBackend + ?Sized>(
+    backend: &B,
     p_bits: u32,
     n_perms: usize,
     steps: u64,
@@ -66,7 +66,7 @@ pub fn run(
 ) -> Result<Fig8Report> {
     let mut cfg = RunConfig::new("mlp", "qat", 8, 1, 32, steps);
     cfg.seed = seed;
-    let trainer = Trainer::new(engine, &cfg)?;
+    let trainer = Trainer::new(backend, &cfg)?;
     let outcome = trainer.run(&cfg)?;
     let layer = outcome.exported.as_ref().unwrap()[0].to_qtensor();
 

@@ -15,16 +15,16 @@
 //! | Fig. 2 network variant (overflow by depth) | [`fig2`] | `results/fig2_network.csv` |
 //! | Fig. 3 network variant (bounds/sparsity by depth) | [`fig3`] | `results/fig3_network.csv` |
 
-// fig8 (and fig2's training-backed pipeline) train models end to end and
-// therefore need the PJRT engine (`xla` feature); the record-driven figures
-// (fig3/fig45/fig67) and the QNetwork-driven network variants
-// (fig2::run_network / fig3::run_network, fed by `a2q netsim`) are pure
-// host code and always available.
+// Every figure generator is available in the default build: fig8 and
+// fig2's training-backed pipeline are generic over the
+// [`crate::runtime::TrainBackend`] (native trainer by default, PJRT under
+// the `xla` feature); the record-driven figures (fig3/fig45/fig67) and the
+// QNetwork-driven network variants (fig2::run_network / fig3::run_network,
+// fed by `a2q netsim`) are pure host code.
 pub mod fig2;
 pub mod fig3;
 pub mod fig45;
 pub mod fig67;
-#[cfg(feature = "xla")]
 pub mod fig8;
 pub mod render;
 

@@ -235,7 +235,7 @@ impl ModelManifest {
         })
     }
 
-    fn validate(&self) -> Result<()> {
+    pub(crate) fn validate(&self) -> Result<()> {
         ensure!(!self.qlayers.is_empty(), "no qlayers in manifest {}", self.name);
         ensure!(!self.state.is_empty(), "empty state layout");
         ensure!(

@@ -1,0 +1,153 @@
+//! The training-backend abstraction: `init / train_step / infer / export`
+//! over host-tensor [`TrainState`] leaves, with two implementations —
+//!
+//! * [`super::native::NativeBackend`] — pure-Rust manual forward/backward
+//!   for dense (MLP) manifests; always available, the default build's
+//!   training engine;
+//! * [`super::engine::Engine`] (`xla` feature) — the PJRT executor for the
+//!   AOT-compiled HLO artifacts, converting leaves to literals at its
+//!   boundary.
+//!
+//! The coordinator ([`crate::coordinator::Trainer`], sweeps) and the
+//! training-backed figure drivers are generic over this trait, so
+//! `a2q train` / `a2q sweep` work in the default build and trained networks
+//! flow straight into [`crate::accsim::NetworkPlan`] /
+//! [`crate::finn::estimate_qnetwork`].
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::artifact::ModelManifest;
+use super::state::{ExportedLayer, TrainState};
+use crate::tensor::Tensor;
+
+/// One training backend. Object-safe: the coordinator holds `&dyn
+/// TrainBackend` so sweep workers can construct whichever backend the run
+/// asks for behind one channel protocol.
+pub trait TrainBackend {
+    /// Short backend identifier ("native" / "pjrt") for logs.
+    fn name(&self) -> &'static str;
+
+    /// Resolve a model manifest (artifact file or native registry).
+    fn manifest(&self, model: &str) -> Result<ModelManifest>;
+
+    /// Fresh training state from a seed.
+    fn init(&self, manifest: &ModelManifest, seed: f32) -> Result<TrainState>;
+
+    /// One optimizer step; state advances in place, returns the loss.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &mut TrainState,
+        x: &Tensor,
+        y: &Tensor,
+        bits: (u32, u32, u32),
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Forward pass at the given bit widths.
+    fn infer(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &TrainState,
+        x: &Tensor,
+        bits: (u32, u32, u32),
+    ) -> Result<Tensor>;
+
+    /// Export integer weights + scales + biases for deployment analysis.
+    fn export(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &TrainState,
+        bits: (u32, u32, u32),
+    ) -> Result<Vec<ExportedLayer>>;
+}
+
+/// Which backend a run executes on. `Send + Copy` so sweep scheduler
+/// threads can carry it into the worker that actually constructs the
+/// backend (PJRT handles are not `Send`; the kind is).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust manual forward/backward (default build).
+    Native,
+    /// PJRT execution of AOT HLO artifacts (`xla` feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// The default for this build: PJRT when compiled with the `xla`
+    /// feature (previous behaviour), native otherwise.
+    pub fn default_kind() -> BackendKind {
+        if cfg!(feature = "xla") {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Native
+        }
+    }
+
+    /// Resolve a manifest the way this backend would: the native registry
+    /// first for native runs (deterministic regardless of artifacts on
+    /// disk), the artifact file for PJRT.
+    pub fn load_manifest(self, artifacts_dir: &Path, model: &str) -> Result<ModelManifest> {
+        match self {
+            BackendKind::Native => match super::native::native_manifest(model) {
+                Some(m) => Ok(m),
+                None => ModelManifest::load(artifacts_dir, model),
+            },
+            BackendKind::Pjrt => ModelManifest::load(artifacts_dir, model),
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" | "pjrt" => Ok(BackendKind::Pjrt),
+            other => anyhow::bail!("unknown backend {other:?} (native | xla)"),
+        }
+    }
+}
+
+/// Construct a backend of the given kind rooted at an artifacts directory.
+pub fn make_backend(kind: BackendKind, artifacts_dir: &Path) -> Result<Box<dyn TrainBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(super::native::NativeBackend::new(artifacts_dir))),
+        #[cfg(feature = "xla")]
+        BackendKind::Pjrt => Ok(Box::new(super::engine::Engine::new(artifacts_dir)?)),
+        #[cfg(not(feature = "xla"))]
+        BackendKind::Pjrt => anyhow::bail!(
+            "the xla backend needs a build with `cargo build --features xla` (and the real \
+             xla bindings in place of rust/vendor/xla); use `--backend native` here"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_defaults() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("magic".parse::<BackendKind>().is_err());
+        #[cfg(not(feature = "xla"))]
+        assert_eq!(BackendKind::default_kind(), BackendKind::Native);
+    }
+
+    #[test]
+    fn native_kind_resolves_registry_manifests_without_artifacts() {
+        let dir = crate::testutil::TempDir::new().unwrap();
+        let m = BackendKind::Native.load_manifest(dir.path(), "mlp").unwrap();
+        assert_eq!(m.name, "mlp");
+        assert!(BackendKind::Native.load_manifest(dir.path(), "no_such_model").is_err());
+    }
+}

@@ -1,10 +1,13 @@
 //! The PJRT execution engine: one CPU client, a compile cache keyed by
-//! artifact file, and typed entry points for the four artifact kinds.
+//! artifact file, and the [`TrainBackend`] implementation that executes the
+//! four artifact kinds.
 //!
-//! Hot-path design: training state lives as [`xla::Literal`]s and flows
-//! straight from one `train_step` execution into the next — the only
-//! per-step host conversions are the batch upload and the scalar loss
-//! download (see EXPERIMENTS.md §Perf).
+//! Since the backend refactor, training state lives as *host tensors*
+//! ([`TrainState`]) — the common currency every backend shares — and this
+//! engine converts leaves to [`xla::Literal`]s at its boundary on every
+//! call. That trades the old literal-resident hot path for backend
+//! uniformity; the conversion is an O(state) memcpy per step, small next to
+//! artifact execution (see EXPERIMENTS.md §Perf history).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -13,58 +16,10 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use super::artifact::ModelManifest;
+use super::backend::TrainBackend;
 use super::literal::{literal_to_tensor, tensor_to_literal};
-use crate::quant::QTensor;
+use super::state::{ExportedLayer, TrainState};
 use crate::tensor::Tensor;
-
-/// Training state: the flattened (params, optimizer, step) leaves, resident
-/// as literals between steps.
-pub struct TrainState {
-    pub leaves: Vec<xla::Literal>,
-}
-
-impl TrainState {
-    /// Slice out the parameter leaves (for infer/export calls).
-    pub fn params<'a>(&'a self, manifest: &ModelManifest) -> Vec<&'a xla::Literal> {
-        manifest
-            .param_indices()
-            .into_iter()
-            .map(|i| &self.leaves[i])
-            .collect()
-    }
-
-    /// Download every leaf to a host tensor (checkpointing).
-    pub fn to_tensors(&self) -> Result<Vec<Tensor>> {
-        self.leaves.iter().map(literal_to_tensor).collect()
-    }
-
-    /// Rebuild device state from host tensors (checkpoint restore).
-    pub fn from_tensors(tensors: &[Tensor]) -> Result<Self> {
-        let leaves = tensors
-            .iter()
-            .map(tensor_to_literal)
-            .collect::<Result<Vec<_>>>()?;
-        Ok(TrainState { leaves })
-    }
-}
-
-/// One quantized layer as exported for deployment.
-#[derive(Clone, Debug)]
-pub struct ExportedLayer {
-    pub name: String,
-    /// Integer codes `[c_out, k]` (exact integers carried in f32).
-    pub w_int: Tensor,
-    /// Per-channel scales `[c_out, 1]`.
-    pub s: Tensor,
-    /// Float bias `[c_out]`.
-    pub b: Tensor,
-}
-
-impl ExportedLayer {
-    pub fn to_qtensor(&self) -> QTensor {
-        QTensor::from_export(&self.w_int, &self.s, &self.b)
-    }
-}
 
 /// PJRT engine with a compile cache.
 pub struct Engine {
@@ -86,10 +41,6 @@ impl Engine {
 
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
-    }
-
-    pub fn manifest(&self, model: &str) -> Result<ModelManifest> {
-        ModelManifest::load(&self.dir, model)
     }
 
     /// Load + compile an HLO-text artifact (cached).
@@ -132,20 +83,41 @@ impl Engine {
         Ok(lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {file}: {e}"))?)
     }
 
+    /// Upload the state leaves plus trailing host tensors as one literal
+    /// input list.
+    fn upload(state_leaves: &[&Tensor], extra: &[&Tensor]) -> Result<Vec<xla::Literal>> {
+        state_leaves
+            .iter()
+            .chain(extra.iter())
+            .map(|t| tensor_to_literal(t))
+            .collect()
+    }
+}
+
+impl TrainBackend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self, model: &str) -> Result<ModelManifest> {
+        ModelManifest::load(&self.dir, model)
+    }
+
     /// Run the init artifact: fresh training state from a seed.
-    pub fn init(&self, manifest: &ModelManifest, seed: f32) -> Result<TrainState> {
-        let leaves = self.run(&manifest.init, &[tensor_to_literal(&Tensor::scalar(seed))?])?;
+    fn init(&self, manifest: &ModelManifest, seed: f32) -> Result<TrainState> {
+        let out = self.run(&manifest.init, &[tensor_to_literal(&Tensor::scalar(seed))?])?;
         anyhow::ensure!(
-            leaves.len() == manifest.state.len(),
+            out.len() == manifest.state.len(),
             "init returned {} leaves, manifest says {}",
-            leaves.len(),
+            out.len(),
             manifest.state.len()
         );
+        let leaves = out.iter().map(literal_to_tensor).collect::<Result<Vec<_>>>()?;
         Ok(TrainState { leaves })
     }
 
     /// One SGD/Adam step; state advances in place, returns the loss.
-    pub fn train_step(
+    fn train_step(
         &self,
         manifest: &ModelManifest,
         alg: &str,
@@ -157,14 +129,9 @@ impl Engine {
     ) -> Result<f32> {
         let file = manifest.alg(alg)?.train.clone();
         let bits_t = Tensor::from_vec(vec![bits.0 as f32, bits.1 as f32, bits.2 as f32]);
-        let extra = [
-            tensor_to_literal(x)?,
-            tensor_to_literal(y)?,
-            tensor_to_literal(&bits_t)?,
-            tensor_to_literal(&Tensor::scalar(lr))?,
-        ];
-        let inputs: Vec<&xla::Literal> =
-            state.leaves.iter().chain(extra.iter()).collect();
+        let lr_t = Tensor::scalar(lr);
+        let leaves: Vec<&Tensor> = state.leaves.iter().collect();
+        let inputs = Self::upload(&leaves, &[x, y, &bits_t, &lr_t])?;
         let mut out = self.run(&file, &inputs)?;
         anyhow::ensure!(
             out.len() == state.leaves.len() + 1,
@@ -173,12 +140,12 @@ impl Engine {
             state.leaves.len() + 1
         );
         let loss = literal_to_tensor(&out.pop().unwrap())?.item();
-        state.leaves = out;
+        state.leaves = out.iter().map(literal_to_tensor).collect::<Result<Vec<_>>>()?;
         Ok(loss)
     }
 
     /// Forward pass at the given bit widths.
-    pub fn infer(
+    fn infer(
         &self,
         manifest: &ModelManifest,
         alg: &str,
@@ -188,19 +155,14 @@ impl Engine {
     ) -> Result<Tensor> {
         let file = manifest.alg(alg)?.infer.clone();
         let bits_t = Tensor::from_vec(vec![bits.0 as f32, bits.1 as f32, bits.2 as f32]);
-        let extra = [tensor_to_literal(x)?, tensor_to_literal(&bits_t)?];
-        let inputs: Vec<&xla::Literal> = state
-            .params(manifest)
-            .into_iter()
-            .chain(extra.iter())
-            .collect();
+        let inputs = Self::upload(&state.params(manifest), &[x, &bits_t])?;
         let out = self.run(&file, &inputs)?;
         anyhow::ensure!(out.len() == 1, "infer returned {} outputs", out.len());
         literal_to_tensor(&out[0])
     }
 
     /// Export integer weights + scales + biases for deployment analysis.
-    pub fn export(
+    fn export(
         &self,
         manifest: &ModelManifest,
         alg: &str,
@@ -213,12 +175,7 @@ impl Engine {
             .clone()
             .ok_or_else(|| anyhow::anyhow!("{alg} has no export artifact"))?;
         let bits_t = Tensor::from_vec(vec![bits.0 as f32, bits.1 as f32, bits.2 as f32]);
-        let extra = [tensor_to_literal(&bits_t)?];
-        let inputs: Vec<&xla::Literal> = state
-            .params(manifest)
-            .into_iter()
-            .chain(extra.iter())
-            .collect();
+        let inputs = Self::upload(&state.params(manifest), &[&bits_t])?;
         let out = self.run(&file, &inputs)?;
         anyhow::ensure!(
             out.len() == 3 * manifest.qlayers.len(),

@@ -1,29 +1,39 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust request path.
+//! The training runtime: one [`TrainBackend`] abstraction
+//! (`init / train_step / infer / export` over host-tensor [`TrainState`]
+//! leaves) with two implementations, plus the artifact manifests both
+//! consume.
 //!
-//! * [`artifact`] — serde types for the artifact manifests (`<model>.json`)
-//!   plus artifact discovery;
-//! * [`literal`]  — [`crate::tensor::Tensor`] <-> [`xla::Literal`] transport;
-//! * [`engine`]   — the PJRT CPU client with a compile cache, and the typed
-//!   entry points (`init` / `train_step` / `infer` / `export`) the
-//!   coordinator drives.
-//!
-//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
-//!
-//! The PJRT-backed pieces ([`engine`], [`literal`]) are gated behind the
-//! `xla` cargo feature so the default build needs no XLA toolchain;
-//! [`artifact`] (manifest parsing, model discovery) is always available.
+//! * [`artifact`] — serde types for the manifests (`<model>.json`) plus
+//!   artifact/model discovery; always available.
+//! * [`state`]    — [`TrainState`] (host-tensor leaves, the inter-backend
+//!   currency) and [`ExportedLayer`] (deployment export triple).
+//! * [`backend`]  — the [`TrainBackend`] trait, [`BackendKind`] selection
+//!   and [`make_backend`] construction.
+//! * [`native`]   — the pure-Rust backend: manual forward/backward for
+//!   dense (MLP) manifests with STE through the
+//!   [`crate::quant::WeightQuantizer`], in-process model registry
+//!   ([`native::native_manifest`]); the default build's training engine.
+//! * [`engine`] / [`literal`] (`xla` feature) — the PJRT CPU client with a
+//!   compile cache, executing the AOT-compiled HLO-text artifacts produced
+//!   by `python/compile/aot.py`. Interchange is HLO *text*: jax >= 0.5
+//!   serializes HloModuleProto with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md and DESIGN.md).
 
 pub mod artifact;
+pub mod backend;
 #[cfg(feature = "xla")]
 pub mod engine;
 #[cfg(feature = "xla")]
 pub mod literal;
+pub mod native;
+pub mod state;
 
 pub use artifact::{AlgArtifacts, ModelManifest, QLayerMeta};
+pub use backend::{make_backend, BackendKind, TrainBackend};
+pub use native::NativeBackend;
+pub use state::{ExportedLayer, TrainState};
 #[cfg(feature = "xla")]
-pub use engine::{Engine, ExportedLayer, TrainState};
+pub use engine::Engine;
 #[cfg(feature = "xla")]
 pub use literal::{literal_to_tensor, tensor_to_literal};

@@ -1,0 +1,786 @@
+//! The native pure-Rust training backend: manual forward/backward for dense
+//! (MLP) manifests with STE through the weight quantizer, so the default
+//! (no-XLA) build trains A2Q/A2Q+/QAT/float end to end.
+//!
+//! Semantics (mirroring the L2 JAX models at MLP scale):
+//!
+//! * **Weights** — per-channel direction `v` with log2-scale `d` and
+//!   log2-norm `t` leaves. `a2q`/`a2q_plus` quantize through the
+//!   [`WeightQuantizer`] trait (forward bit-exact against
+//!   [`crate::quant::a2q::a2q_quantize_row`] for `a2q`); `qat` uses the
+//!   per-channel affine quantizer with no accumulator cap; `float` uses `v`
+//!   raw. Backward is the clipped straight-through estimator with the
+//!   weight-norm parametrization differentiated exactly
+//!   ([`crate::quant::quantizer`]), so `d` and `t` train by gradient.
+//! * **Activations** — hidden boundaries are quantized ReLUs on the layer's
+//!   unsigned N-bit grid with a *dynamic* per-batch scale
+//!   (`s_a = max(relu(z)) / (2^N - 1)`, treated as a constant by the
+//!   backward pass); the float algorithm uses plain ReLU.
+//! * **Loss/optimizer** — softmax cross-entropy over the manifest's
+//!   classify head; SGD with 0.9 momentum or Adam, per the manifest, with
+//!   momentum/moment slots living in the manifest state layout
+//!   (`mom/...`, `m/...`, `v/...`) exactly like the artifact models, so
+//!   warmup recalibration and checkpointing are backend-agnostic.
+//!   Quantizer log-parameters (`d`, `t`) step at [`QPARAM_LR_MULT`] times
+//!   the weight LR with elementwise gradient clipping — the native stand-in
+//!   for the scale-free treatment the artifact models give them.
+//!
+//! Models come from the in-process registry ([`native_manifest`]: `mlp`,
+//! `mlp3`) or from any artifact manifest whose quantized layers are all
+//! dense.
+
+pub mod models;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+pub use models::{native_manifest, native_models};
+
+use super::artifact::ModelManifest;
+use super::backend::TrainBackend;
+use super::state::{ExportedLayer, TrainState};
+use crate::quant::quantizer::{quantizer_for_alg, WeightQuantizer};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+const LN2: f32 = std::f32::consts::LN_2;
+/// LR multiplier for the per-channel quantizer log-parameters `d`/`t`.
+pub const QPARAM_LR_MULT: f32 = 0.1;
+/// Elementwise gradient clip for `d`/`t` (log2-domain parameters).
+const QPARAM_GRAD_CLIP: f32 = 10.0;
+const SGD_MOMENTUM: f32 = 0.9;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Pure-Rust training backend over host-tensor state leaves.
+pub struct NativeBackend {
+    dir: PathBuf,
+}
+
+impl NativeBackend {
+    /// Create a backend; `artifacts_dir` is only consulted for models not
+    /// in the native registry.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Self {
+        NativeBackend { dir: artifacts_dir.as_ref().to_path_buf() }
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// One dense layer's resolved view of the manifest: state-leaf indices plus
+/// the bit widths at the current (M, N, P) grid point.
+struct LayerRef {
+    v: usize,
+    d: usize,
+    t: usize,
+    b: usize,
+    c_out: usize,
+    k: usize,
+    m: u32,
+    n_in: u32,
+    p: u32,
+    x_signed: bool,
+}
+
+fn find_leaf(manifest: &ModelManifest, path: &str) -> Result<usize> {
+    manifest
+        .state
+        .iter()
+        .position(|e| e.path == path)
+        .ok_or_else(|| anyhow::anyhow!("manifest {} has no state leaf {path}", manifest.name))
+}
+
+fn resolve(spec: &super::artifact::BitsSpecJson, bits: (u32, u32, u32)) -> Result<u32> {
+    Ok(spec.to_bitspec()?.resolve(bits.0, bits.1, bits.2))
+}
+
+/// Resolve every quantized layer of a manifest the native backend can
+/// train: all-dense, chained, with the standard `params/<name>/{v,d,t,b}`
+/// leaves.
+fn layer_refs(manifest: &ModelManifest, bits: (u32, u32, u32)) -> Result<Vec<LayerRef>> {
+    ensure!(!manifest.qlayers.is_empty(), "manifest {} has no layers", manifest.name);
+    let mut out = Vec::with_capacity(manifest.qlayers.len());
+    for (i, q) in manifest.qlayers.iter().enumerate() {
+        ensure!(
+            q.kind == "dense",
+            "native backend trains dense (MLP) manifests only; layer {} of {} is {:?} — \
+             use the xla backend for conv models",
+            q.name,
+            manifest.name,
+            q.kind
+        );
+        if i > 0 {
+            ensure!(
+                q.k == manifest.qlayers[i - 1].c_out,
+                "layer {} input dim {} does not chain to previous c_out {}",
+                q.name,
+                q.k,
+                manifest.qlayers[i - 1].c_out
+            );
+        }
+        out.push(LayerRef {
+            v: find_leaf(manifest, &format!("params/{}/v", q.name))?,
+            d: find_leaf(manifest, &format!("params/{}/d", q.name))?,
+            t: find_leaf(manifest, &format!("params/{}/t", q.name))?,
+            b: find_leaf(manifest, &format!("params/{}/b", q.name))?,
+            c_out: q.c_out,
+            k: q.k,
+            m: resolve(&q.m_bits, bits)?,
+            n_in: resolve(&q.n_bits, bits)?,
+            p: resolve(&q.p_bits, bits)?,
+            x_signed: q.x_signed,
+        });
+    }
+    Ok(out)
+}
+
+/// Dequantized weights of one layer under one algorithm.
+struct LayerWeights {
+    /// Integer codes `[c_out, k]` (f32 carrying exact integers; raw float
+    /// weights for the float algorithm).
+    w_int: Vec<f32>,
+    /// Per-channel scales.
+    s: Vec<f32>,
+    /// Dequantized weights `[c_out, k]` the forward multiplies with.
+    wq: Vec<f32>,
+}
+
+/// Everything the backward pass needs from one forward.
+struct Forward {
+    batch: usize,
+    /// `acts[l]` is the input to layer `l` (`acts[0]` = the raw batch);
+    /// length = depth (the logits are `zs[depth - 1]`).
+    acts: Vec<Vec<f32>>,
+    /// Pre-activations per layer. With the dynamic per-batch activation
+    /// scale the top of the N-bit grid coincides with `max(relu(z))`, so
+    /// the upper rail never clips and the STE gate through a hidden
+    /// boundary is exactly the ReLU mask `z > 0`.
+    zs: Vec<Vec<f32>>,
+    weights: Vec<LayerWeights>,
+}
+
+fn quantize_layer(
+    alg: &str,
+    v: &Tensor,
+    d: &Tensor,
+    t: &Tensor,
+    lr_ref: &LayerRef,
+) -> Result<LayerWeights> {
+    let (c_out, k) = (lr_ref.c_out, lr_ref.k);
+    match alg {
+        "float" => Ok(LayerWeights {
+            w_int: v.data().to_vec(),
+            s: vec![1.0; c_out],
+            wq: v.data().to_vec(),
+        }),
+        "qat" => {
+            let hi = 2f32.powi(lr_ref.m as i32 - 1) - 1.0;
+            let lo = -(2f32.powi(lr_ref.m as i32 - 1));
+            let mut w_int = Vec::with_capacity(c_out * k);
+            let mut s = Vec::with_capacity(c_out);
+            let mut wq = Vec::with_capacity(c_out * k);
+            for c in 0..c_out {
+                let sc = 2f32.powf(d.data()[c]);
+                for &x in v.row(c) {
+                    let u = (x / sc).round().clamp(lo, hi);
+                    w_int.push(u);
+                    wq.push(u * sc);
+                }
+                s.push(sc);
+            }
+            Ok(LayerWeights { w_int, s, wq })
+        }
+        _ => {
+            let q = quantizer_for_alg(alg)
+                .ok_or_else(|| anyhow::anyhow!("unknown training algorithm {alg:?}"))?;
+            let mut w_int = Vec::with_capacity(c_out * k);
+            let mut s = Vec::with_capacity(c_out);
+            let mut wq = Vec::with_capacity(c_out * k);
+            for c in 0..c_out {
+                let (codes, sc) = q.quantize_row(
+                    v.row(c),
+                    d.data()[c],
+                    t.data()[c],
+                    lr_ref.m,
+                    lr_ref.n_in,
+                    lr_ref.p,
+                    lr_ref.x_signed,
+                );
+                wq.extend(codes.iter().map(|w| w * sc));
+                w_int.extend(codes);
+                s.push(sc);
+            }
+            Ok(LayerWeights { w_int, s, wq })
+        }
+    }
+}
+
+/// `z[B, c_out] = a[B, k] @ w[c_out, k]^T + bias`.
+fn dense_forward(
+    a: &[f32],
+    batch: usize,
+    k: usize,
+    w: &[f32],
+    c_out: usize,
+    bias: &[f32],
+) -> Vec<f32> {
+    let mut z = vec![0.0f32; batch * c_out];
+    for r in 0..batch {
+        let ar = &a[r * k..(r + 1) * k];
+        let zr = &mut z[r * c_out..(r + 1) * c_out];
+        for c in 0..c_out {
+            let wr = &w[c * k..(c + 1) * k];
+            let mut acc = 0.0f32;
+            for (ai, wi) in ar.iter().zip(wr) {
+                acc += ai * wi;
+            }
+            zr[c] = acc + bias[c];
+        }
+    }
+    z
+}
+
+/// Stable softmax cross-entropy: returns (mean loss, dL/dlogits).
+fn softmax_ce(logits: &[f32], batch: usize, classes: usize, labels: &[f32]) -> (f32, Vec<f32>) {
+    let mut dz = vec![0.0f32; batch * classes];
+    let mut loss = 0.0f64;
+    for r in 0..batch {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, x| a.max(*x));
+        let exps: Vec<f32> = row.iter().map(|x| (x - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let label = (labels[r] as usize).min(classes - 1);
+        loss -= ((exps[label] / sum).max(1e-30) as f64).ln();
+        let dr = &mut dz[r * classes..(r + 1) * classes];
+        for c in 0..classes {
+            dr[c] = (exps[c] / sum - if c == label { 1.0 } else { 0.0 }) / batch as f32;
+        }
+    }
+    ((loss / batch as f64) as f32, dz)
+}
+
+/// Two disjoint mutable leaves out of the state vector.
+fn two_mut(leaves: &mut [Tensor], i: usize, j: usize) -> (&mut Tensor, &mut Tensor) {
+    assert_ne!(i, j);
+    if i < j {
+        let (a, b) = leaves.split_at_mut(j);
+        (&mut a[i], &mut b[0])
+    } else {
+        let (a, b) = leaves.split_at_mut(i);
+        (&mut b[0], &mut a[j])
+    }
+}
+
+impl NativeBackend {
+    /// Flatten a batch tensor to `[B, k]`, validating against the first
+    /// layer's input dimension.
+    fn flatten_batch<'a>(x: &'a Tensor, k0: usize) -> Result<(&'a [f32], usize)> {
+        ensure!(!x.shape().is_empty() && !x.is_empty(), "empty input batch");
+        let batch = x.shape()[0];
+        ensure!(
+            batch > 0 && x.len() == batch * k0,
+            "batch of {} elements does not flatten to [{batch}, {k0}]",
+            x.len()
+        );
+        Ok((x.data(), batch))
+    }
+
+    fn forward(
+        &self,
+        manifest: &ModelManifest,
+        layers: &[LayerRef],
+        alg: &str,
+        leaves: &[Tensor],
+        x: &Tensor,
+    ) -> Result<Forward> {
+        ensure!(
+            manifest.task == "classify",
+            "native backend supports classify manifests; {} is {:?}",
+            manifest.name,
+            manifest.task
+        );
+        let (xdata, batch) = Self::flatten_batch(x, layers[0].k)?;
+        let depth = layers.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(depth);
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(depth);
+        let mut weights: Vec<LayerWeights> = Vec::with_capacity(depth);
+        acts.push(xdata.to_vec());
+        for (l, lref) in layers.iter().enumerate() {
+            let lw = quantize_layer(alg, &leaves[lref.v], &leaves[lref.d], &leaves[lref.t], lref)?;
+            let z =
+                dense_forward(&acts[l], batch, lref.k, &lw.wq, lref.c_out, leaves[lref.b].data());
+            weights.push(lw);
+            if l + 1 < depth {
+                let m = z.iter().fold(0.0f32, |a, v| a.max(*v));
+                let a = if alg == "float" {
+                    z.iter().map(|v| v.max(0.0)).collect()
+                } else {
+                    // quantized ReLU on the next layer's unsigned N-bit grid,
+                    // dynamic per-batch scale (constant to the backward pass)
+                    let n_next = layers[l + 1].n_in.min(31);
+                    let qmax = ((1u64 << n_next) - 1) as f32;
+                    let s_a = if m > 0.0 { m / qmax } else { 1.0 };
+                    z.iter().map(|v| (v / s_a).round().clamp(0.0, qmax) * s_a).collect()
+                };
+                acts.push(a);
+            }
+            zs.push(z);
+        }
+        Ok(Forward { batch, acts, zs, weights })
+    }
+
+    /// Apply one optimizer step to the leaf at `idx` with gradient `grad`.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_update(
+        &self,
+        manifest: &ModelManifest,
+        leaves: &mut [Tensor],
+        idx: usize,
+        suffix: &str,
+        grad: &[f32],
+        lr: f32,
+        step: f32,
+    ) -> Result<()> {
+        match manifest.optimizer.as_str() {
+            "adam" => {
+                let mi = find_leaf(manifest, &format!("m/{suffix}"));
+                let vi = find_leaf(manifest, &format!("v/{suffix}"));
+                match (mi, vi) {
+                    (Ok(mi), Ok(vi)) => {
+                        let t = step.max(1.0);
+                        let upd: Vec<f32> = {
+                            let (m, vv) = two_mut(leaves, mi, vi);
+                            let (md, vd) = (m.data_mut(), vv.data_mut());
+                            let mut upd = Vec::with_capacity(grad.len());
+                            for i in 0..grad.len() {
+                                md[i] = ADAM_B1 * md[i] + (1.0 - ADAM_B1) * grad[i];
+                                vd[i] = ADAM_B2 * vd[i] + (1.0 - ADAM_B2) * grad[i] * grad[i];
+                                let mhat = md[i] / (1.0 - ADAM_B1.powf(t));
+                                let vhat = vd[i] / (1.0 - ADAM_B2.powf(t));
+                                upd.push(lr * mhat / (vhat.sqrt() + ADAM_EPS));
+                            }
+                            upd
+                        };
+                        let p = leaves[idx].data_mut();
+                        for (pi, ui) in p.iter_mut().zip(&upd) {
+                            *pi -= ui;
+                        }
+                    }
+                    _ => {
+                        // no moment slots in the layout: plain SGD
+                        let p = leaves[idx].data_mut();
+                        for (pi, gi) in p.iter_mut().zip(grad) {
+                            *pi -= lr * gi;
+                        }
+                    }
+                }
+            }
+            _ => {
+                // SGD (with momentum when the layout carries a slot)
+                if let Ok(momi) = find_leaf(manifest, &format!("mom/{suffix}")) {
+                    let (p, mom) = two_mut(leaves, idx, momi);
+                    let (pd, md) = (p.data_mut(), mom.data_mut());
+                    for i in 0..grad.len() {
+                        md[i] = SGD_MOMENTUM * md[i] + grad[i];
+                        pd[i] -= lr * md[i];
+                    }
+                } else {
+                    let p = leaves[idx].data_mut();
+                    for (pi, gi) in p.iter_mut().zip(grad) {
+                        *pi -= lr * gi;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl TrainBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self, model: &str) -> Result<ModelManifest> {
+        match native_manifest(model) {
+            Some(m) => Ok(m),
+            None => ModelManifest::load(&self.dir, model),
+        }
+    }
+
+    fn init(&self, manifest: &ModelManifest, seed: f32) -> Result<TrainState> {
+        // Structural validation at default widths; init itself is grid-free.
+        let layers = layer_refs(manifest, (8, 8, 32))?;
+        let mut leaves: Vec<Tensor> =
+            manifest.state.iter().map(|e| Tensor::zeros(e.shape.clone())).collect();
+        let mut rng = Rng::new((seed.to_bits() as u64) ^ 0xA201_57A7);
+        for lref in &layers {
+            let std = (2.0 / lref.k as f64).sqrt();
+            let vdata: Vec<f32> =
+                (0..lref.c_out * lref.k).map(|_| (rng.normal() * std) as f32).collect();
+            // d/t from the shared init rules (the same helper warmup
+            // recalibration uses), at the widest weight grid (M = 8); both
+            // train by gradient afterwards.
+            let mut dv = Vec::with_capacity(lref.c_out);
+            let mut tv = Vec::with_capacity(lref.c_out);
+            for c in 0..lref.c_out {
+                let row = &vdata[c * lref.k..(c + 1) * lref.k];
+                let (d0, t0) = crate::quant::quantizer::init_qparams_row(row, 8);
+                dv.push(d0);
+                tv.push(t0);
+            }
+            leaves[lref.v].data_mut().copy_from_slice(&vdata);
+            leaves[lref.d].data_mut().copy_from_slice(&dv);
+            leaves[lref.t].data_mut().copy_from_slice(&tv);
+        }
+        Ok(TrainState { leaves })
+    }
+
+    fn train_step(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &mut TrainState,
+        x: &Tensor,
+        y: &Tensor,
+        bits: (u32, u32, u32),
+        lr: f32,
+    ) -> Result<f32> {
+        let layers = layer_refs(manifest, bits)?;
+        let fwd = self.forward(manifest, &layers, alg, &state.leaves, x)?;
+        let depth = layers.len();
+        let classes = layers[depth - 1].c_out;
+        ensure!(y.len() >= fwd.batch, "labels shorter than batch");
+        let (loss, dlogits) = softmax_ce(&fwd.zs[depth - 1], fwd.batch, classes, y.data());
+
+        // advance the step counter first (Adam bias correction uses it)
+        let step = match find_leaf(manifest, "step") {
+            Ok(si) => {
+                let s = state.leaves[si].data_mut();
+                s[0] += 1.0;
+                s[0]
+            }
+            Err(_) => 1.0,
+        };
+
+        let wd = manifest.weight_decay as f32;
+        let mut d_act = dlogits; // dL/dz of the current layer
+        for l in (0..depth).rev() {
+            let lref = &layers[l];
+            let (c_out, k, batch) = (lref.c_out, lref.k, fwd.batch);
+            let a_in = &fwd.acts[l];
+            let lw = &fwd.weights[l];
+
+            // bias + weight gradients
+            let mut g_b = vec![0.0f32; c_out];
+            let mut g_w = vec![0.0f32; c_out * k];
+            for r in 0..batch {
+                let dzr = &d_act[r * c_out..(r + 1) * c_out];
+                let ar = &a_in[r * k..(r + 1) * k];
+                for c in 0..c_out {
+                    let g = dzr[c];
+                    if g != 0.0 {
+                        g_b[c] += g;
+                        let row = &mut g_w[c * k..(c + 1) * k];
+                        for (ri, ai) in row.iter_mut().zip(ar) {
+                            *ri += g * ai;
+                        }
+                    }
+                }
+            }
+
+            // input gradient (before this layer's weights move)
+            let d_a_in = if l > 0 {
+                let mut d_in = vec![0.0f32; batch * k];
+                for r in 0..batch {
+                    let dzr = &d_act[r * c_out..(r + 1) * c_out];
+                    let dr = &mut d_in[r * k..(r + 1) * k];
+                    for c in 0..c_out {
+                        let g = dzr[c];
+                        if g != 0.0 {
+                            let wr = &lw.wq[c * k..(c + 1) * k];
+                            for (di, wi) in dr.iter_mut().zip(wr) {
+                                *di += g * wi;
+                            }
+                        }
+                    }
+                }
+                Some(d_in)
+            } else {
+                None
+            };
+
+            // route dL/dwq through the weight quantizer (STE)
+            let mut g_v = vec![0.0f32; c_out * k];
+            let mut g_d = vec![0.0f32; c_out];
+            let mut g_t = vec![0.0f32; c_out];
+            match alg {
+                "float" => g_v.copy_from_slice(&g_w),
+                "qat" => {
+                    let hi = 2f32.powi(lref.m as i32 - 1) - 1.0;
+                    let lo = -(2f32.powi(lref.m as i32 - 1));
+                    let v = &state.leaves[lref.v];
+                    for c in 0..c_out {
+                        let sc = lw.s[c];
+                        for (i, &x) in v.row(c).iter().enumerate() {
+                            let u = (x / sc).round();
+                            let gi = g_w[c * k + i];
+                            if u < lo || u > hi {
+                                g_d[c] += gi * u.clamp(lo, hi) * sc * LN2;
+                            } else {
+                                g_v[c * k + i] = gi;
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    let q: &dyn WeightQuantizer = quantizer_for_alg(alg)
+                        .ok_or_else(|| anyhow::anyhow!("unknown training algorithm {alg:?}"))?;
+                    let v = &state.leaves[lref.v];
+                    let dt = &state.leaves[lref.d];
+                    let tt = &state.leaves[lref.t];
+                    for c in 0..c_out {
+                        let (gd, gt) = q.grad_row(
+                            v.row(c),
+                            dt.data()[c],
+                            tt.data()[c],
+                            lref.m,
+                            lref.n_in,
+                            lref.p,
+                            lref.x_signed,
+                            &g_w[c * k..(c + 1) * k],
+                            &mut g_v[c * k..(c + 1) * k],
+                        );
+                        g_d[c] = gd;
+                        g_t[c] = gt;
+                    }
+                }
+            }
+            if wd > 0.0 {
+                for (gi, vi) in g_v.iter_mut().zip(state.leaves[lref.v].data()) {
+                    *gi += wd * vi;
+                }
+            }
+            for g in g_d.iter_mut().chain(g_t.iter_mut()) {
+                *g = g.clamp(-QPARAM_GRAD_CLIP, QPARAM_GRAD_CLIP);
+            }
+
+            let qname = &manifest.qlayers[l].name;
+            let qlr = lr * QPARAM_LR_MULT;
+            self.apply_update(
+                manifest,
+                &mut state.leaves,
+                lref.v,
+                &format!("{qname}/v"),
+                &g_v,
+                lr,
+                step,
+            )?;
+            self.apply_update(
+                manifest,
+                &mut state.leaves,
+                lref.d,
+                &format!("{qname}/d"),
+                &g_d,
+                qlr,
+                step,
+            )?;
+            self.apply_update(
+                manifest,
+                &mut state.leaves,
+                lref.t,
+                &format!("{qname}/t"),
+                &g_t,
+                qlr,
+                step,
+            )?;
+            self.apply_update(
+                manifest,
+                &mut state.leaves,
+                lref.b,
+                &format!("{qname}/b"),
+                &g_b,
+                lr,
+                step,
+            )?;
+
+            // through the hidden activation into the previous layer: the
+            // STE gate is the ReLU mask (see Forward::zs — with dynamic
+            // scaling the upper rail never clips)
+            if let Some(mut d_prev) = d_a_in {
+                let z_prev = &fwd.zs[l - 1];
+                for (di, zi) in d_prev.iter_mut().zip(z_prev) {
+                    if *zi <= 0.0 {
+                        *di = 0.0;
+                    }
+                }
+                d_act = d_prev;
+            }
+        }
+        Ok(loss)
+    }
+
+    fn infer(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &TrainState,
+        x: &Tensor,
+        bits: (u32, u32, u32),
+    ) -> Result<Tensor> {
+        let layers = layer_refs(manifest, bits)?;
+        let fwd = self.forward(manifest, &layers, alg, &state.leaves, x)?;
+        let classes = layers[layers.len() - 1].c_out;
+        Ok(Tensor::new(vec![fwd.batch, classes], fwd.zs[layers.len() - 1].clone()))
+    }
+
+    fn export(
+        &self,
+        manifest: &ModelManifest,
+        alg: &str,
+        state: &TrainState,
+        bits: (u32, u32, u32),
+    ) -> Result<Vec<ExportedLayer>> {
+        ensure!(alg != "float", "the float baseline has no integer export");
+        let layers = layer_refs(manifest, bits)?;
+        let mut out = Vec::with_capacity(layers.len());
+        for (lref, q) in layers.iter().zip(&manifest.qlayers) {
+            let lw = quantize_layer(
+                alg,
+                &state.leaves[lref.v],
+                &state.leaves[lref.d],
+                &state.leaves[lref.t],
+                lref,
+            )?;
+            out.push(ExportedLayer {
+                name: q.name.clone(),
+                w_int: Tensor::new(vec![lref.c_out, lref.k], lw.w_int),
+                s: Tensor::new(vec![lref.c_out, 1], lw.s),
+                b: Tensor::new(vec![lref.c_out], state.leaves[lref.b].data().to_vec()),
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, Split};
+    use crate::finn::estimate::BitSpec;
+    use crate::quant::a2q::row_satisfies_cap;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new("artifacts")
+    }
+
+    fn batch(n: usize) -> (Tensor, Tensor) {
+        let ds = datasets::by_name("synth_mnist", 256, 64, 0).unwrap();
+        let idx: Vec<usize> = (0..n).collect();
+        let b = ds.gather(Split::Train, &idx);
+        (b.x, b.y)
+    }
+
+    #[test]
+    fn init_matches_layout_and_is_seed_dependent() {
+        let be = backend();
+        let manifest = be.manifest("mlp3").unwrap();
+        let s0 = be.init(&manifest, 0.0).unwrap();
+        let s1 = be.init(&manifest, 1.0).unwrap();
+        assert_eq!(s0.leaves.len(), manifest.state.len());
+        for (t, meta) in s0.leaves.iter().zip(&manifest.state) {
+            assert_eq!(t.shape(), &meta.shape[..], "leaf {}", meta.path);
+        }
+        let vi = manifest.state.iter().position(|e| e.path == "params/fc0/v").unwrap();
+        assert_ne!(s0.leaves[vi].data(), s1.leaves[vi].data(), "seed must matter");
+        let s0b = be.init(&manifest, 0.0).unwrap();
+        assert_eq!(s0.leaves[vi].data(), s0b.leaves[vi].data(), "same seed bit-identical");
+    }
+
+    #[test]
+    fn train_step_decreases_loss_on_repeated_batch_all_algs() {
+        let be = backend();
+        let manifest = be.manifest("mlp").unwrap();
+        let (x, y) = batch(manifest.batch_size);
+        for alg in ["a2q", "a2q_plus", "qat", "float"] {
+            let mut state = be.init(&manifest, 0.0).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..12 {
+                let l = be
+                    .train_step(&manifest, alg, &mut state, &x, &y, (8, 1, 16), 0.05)
+                    .unwrap();
+                assert!(l.is_finite(), "{alg}");
+                losses.push(l);
+            }
+            assert!(
+                losses.last().unwrap() < losses.first().unwrap(),
+                "{alg}: {losses:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn multilayer_training_learns_and_stays_finite() {
+        let be = backend();
+        let manifest = be.manifest("mlp3").unwrap();
+        let (x, y) = batch(manifest.batch_size);
+        let mut state = be.init(&manifest, 3.0).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..20 {
+            let l = be.train_step(&manifest, "a2q", &mut state, &x, &y, (4, 4, 14), 0.05).unwrap();
+            assert!(l.is_finite());
+            losses.push(l);
+        }
+        assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
+    }
+
+    #[test]
+    fn infer_is_deterministic_and_bits_matter() {
+        let be = backend();
+        let manifest = be.manifest("mlp").unwrap();
+        let (x, _) = batch(manifest.batch_size);
+        let state = be.init(&manifest, 0.0).unwrap();
+        let a = be.infer(&manifest, "a2q", &state, &x, (8, 1, 14)).unwrap();
+        let b = be.infer(&manifest, "a2q", &state, &x, (8, 1, 14)).unwrap();
+        assert_eq!(a.shape(), &[manifest.batch_size, manifest.n_classes]);
+        assert_eq!(a.data(), b.data(), "inference must be deterministic");
+        let tight = be.infer(&manifest, "a2q", &state, &x, (8, 1, 6)).unwrap();
+        assert_ne!(a.data(), tight.data(), "P must influence the a2q forward");
+    }
+
+    #[test]
+    fn export_satisfies_cap_for_both_quantizers() {
+        let be = backend();
+        let manifest = be.manifest("mlp3").unwrap();
+        let (x, y) = batch(manifest.batch_size);
+        let bits = (4u32, 4u32, 14u32);
+        for alg in ["a2q", "a2q_plus"] {
+            let mut state = be.init(&manifest, 7.0).unwrap();
+            for _ in 0..5 {
+                be.train_step(&manifest, alg, &mut state, &x, &y, bits, 0.05).unwrap();
+            }
+            let layers = be.export(&manifest, alg, &state, bits).unwrap();
+            assert_eq!(layers.len(), manifest.qlayers.len());
+            for (layer, meta) in layers.iter().zip(&manifest.qlayers) {
+                let q = layer.to_qtensor();
+                let n = match meta.n_bits.to_bitspec().unwrap() {
+                    BitSpec::Fixed(v) => v,
+                    _ => bits.1,
+                };
+                for c in 0..q.c_out {
+                    let row: Vec<f32> = q.row(c).iter().map(|w| *w as f32).collect();
+                    assert!(
+                        row_satisfies_cap(&row, bits.2, n, meta.x_signed),
+                        "{alg}/{}/{c}",
+                        layer.name
+                    );
+                }
+            }
+        }
+        assert!(be.export(&manifest, "float", &be.init(&manifest, 0.0).unwrap(), bits).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! The native model registry: MLP manifests synthesized in-process, so the
+//! default (no-XLA) build can train without `make artifacts`.
+//!
+//! Every native manifest follows the artifact conventions exactly — state
+//! leaves at `params/<layer>/{v,d,t,b}` with SGD momentum slots at
+//! `mom/<layer>/<leaf>` and a trailing `step` scalar, `params` as the
+//! `params/`-stripped subsequence, and three export outputs per layer — so
+//! the coordinator (recalibration, checkpointing, audit) treats native and
+//! artifact-backed models identically.
+
+use std::collections::BTreeMap;
+
+use super::super::artifact::{
+    AlgArtifacts, BitsSpecJson, ExportEntry, ModelManifest, QLayerMeta, StateEntry, TrainInputs,
+};
+
+/// Models the native backend can synthesize without artifacts.
+pub fn native_models() -> &'static [&'static str] {
+    &["mlp", "mlp3"]
+}
+
+/// Build the native manifest for a registry model, or `None` if unknown.
+///
+/// * `mlp`  — the paper's Fig. 2 model: one dense layer `fc` 784 -> 2 over
+///   binary (1-bit) synth-MNIST pixels.
+/// * `mlp3` — a 3-layer stack 784 -> 64 -> 16 -> 2 with N-bit hidden
+///   boundaries, exercising inter-layer requantization end to end.
+pub fn native_manifest(model: &str) -> Option<ModelManifest> {
+    let (widths, names, lr): (&[usize], &[&str], f64) = match model {
+        "mlp" => (&[784, 2], &["fc"], 0.1),
+        "mlp3" => (&[784, 64, 16, 2], &["fc0", "fc1", "fc2"], 0.1),
+        _ => return None,
+    };
+    Some(build_mlp_manifest(model, widths, names, lr))
+}
+
+fn build_mlp_manifest(model: &str, widths: &[usize], names: &[&str], lr: f64) -> ModelManifest {
+    assert_eq!(widths.len(), names.len() + 1, "one name per layer");
+    let batch_size = 32usize;
+    let mut qlayers = Vec::new();
+    let mut state = Vec::new();
+    let mut params = Vec::new();
+    let mut export_outputs = Vec::new();
+
+    for (li, name) in names.iter().enumerate() {
+        let (k, c_out) = (widths[li], widths[li + 1]);
+        qlayers.push(QLayerMeta {
+            name: name.to_string(),
+            kind: "dense".into(),
+            c_out,
+            k,
+            m_bits: BitsSpecJson::Var("M".into()),
+            // The network input is the dataset's 1-bit binary grid; hidden
+            // boundaries ride the runtime N (unsigned post-ReLU grids).
+            n_bits: if li == 0 {
+                BitsSpecJson::Fixed(1)
+            } else {
+                BitsSpecJson::Var("N".into())
+            },
+            p_bits: BitsSpecJson::Var("P".into()),
+            x_signed: false,
+            out_h: 1,
+            out_w: 1,
+            kh: 1,
+            kw: 1,
+            c_in: k,
+            stride: 1,
+            groups: 1,
+        });
+        for (leaf, shape) in [
+            ("v", vec![c_out, k]),
+            ("d", vec![c_out]),
+            ("t", vec![c_out]),
+            ("b", vec![c_out]),
+        ] {
+            state.push(StateEntry { path: format!("params/{name}/{leaf}"), shape: shape.clone() });
+            params.push(StateEntry { path: format!("{name}/{leaf}"), shape });
+        }
+        export_outputs.push(ExportEntry {
+            layer: name.to_string(),
+            tensor: "w_int".into(),
+            shape: vec![c_out, k],
+        });
+        export_outputs.push(ExportEntry {
+            layer: name.to_string(),
+            tensor: "s".into(),
+            shape: vec![c_out, 1],
+        });
+        export_outputs.push(ExportEntry {
+            layer: name.to_string(),
+            tensor: "b".into(),
+            shape: vec![c_out],
+        });
+    }
+    // optimizer slots mirror the param subtree, then the step counter
+    for p in params.clone() {
+        state.push(StateEntry { path: format!("mom/{}", p.path), shape: p.shape });
+    }
+    state.push(StateEntry { path: "step".into(), shape: vec![] });
+
+    let mut algs = BTreeMap::new();
+    for alg in ["a2q", "a2q_plus", "qat"] {
+        algs.insert(
+            alg.to_string(),
+            AlgArtifacts {
+                train: "native".into(),
+                infer: "native".into(),
+                export: Some("native".into()),
+            },
+        );
+    }
+    algs.insert(
+        "float".into(),
+        AlgArtifacts { train: "native".into(), infer: "native".into(), export: None },
+    );
+
+    let m = ModelManifest {
+        name: model.to_string(),
+        input_shape: vec![widths[0]],
+        batch_size,
+        task: "classify".into(),
+        n_classes: *widths.last().unwrap(),
+        sr_factor: 1,
+        optimizer: "sgd".into(),
+        lr,
+        weight_decay: 0.0,
+        largest_k: widths[..widths.len() - 1].iter().copied().max().unwrap(),
+        qlayers,
+        init: "native".into(),
+        algs,
+        state,
+        params,
+        export_outputs,
+        train_inputs: TrainInputs {
+            x: vec![batch_size, widths[0]],
+            y: vec![batch_size],
+            bits: vec![3],
+        },
+    };
+    m.validate().expect("native manifests satisfy the artifact invariants");
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::finn::estimate::BitSpec;
+
+    #[test]
+    fn registry_manifests_validate_and_chain() {
+        for model in native_models() {
+            let m = native_manifest(model).unwrap();
+            assert_eq!(m.name, *model);
+            assert!(m.algs.contains_key("a2q"));
+            assert!(m.algs.contains_key("a2q_plus"));
+            assert!(m.algs.contains_key("qat"));
+            assert!(m.algs["float"].export.is_none());
+            assert!(!m.param_indices().is_empty());
+            for w in m.qlayers.windows(2) {
+                assert_eq!(w[1].k, w[0].c_out, "{model} layers must chain");
+            }
+            // every layer carries the runtime accumulator constraint
+            for q in &m.qlayers {
+                assert_eq!(q.to_geom().unwrap().p_spec, BitSpec::P);
+            }
+        }
+        assert!(native_manifest("resnet").is_none());
+    }
+
+    #[test]
+    fn mlp_matches_the_fig2_geometry() {
+        let m = native_manifest("mlp").unwrap();
+        assert_eq!(m.qlayers.len(), 1);
+        assert_eq!(m.qlayers[0].name, "fc");
+        assert_eq!(m.qlayers[0].k, 784);
+        assert_eq!(m.qlayers[0].n_bits, BitsSpecJson::Fixed(1));
+        assert_eq!(m.largest_k, 784);
+        assert_eq!(m.n_classes, 2);
+    }
+}

@@ -1,0 +1,56 @@
+//! Host-side training-state currency shared by every [`super::TrainBackend`].
+//!
+//! `TrainState` is a flat list of host [`Tensor`] leaves in the manifest's
+//! `state` layout order — the common interchange every backend consumes and
+//! produces. The PJRT engine uploads/downloads literals at its boundary; the
+//! native backend operates on the leaves directly.
+
+use anyhow::Result;
+
+use super::artifact::ModelManifest;
+use crate::quant::QTensor;
+use crate::tensor::Tensor;
+
+/// Training state: the flattened (params, optimizer, step) leaves as host
+/// tensors, in the manifest `state` layout order.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub leaves: Vec<Tensor>,
+}
+
+impl TrainState {
+    /// Slice out the parameter leaves (for infer/export calls), in the
+    /// manifest `params` layout order.
+    pub fn params<'a>(&'a self, manifest: &ModelManifest) -> Vec<&'a Tensor> {
+        manifest.param_indices().into_iter().map(|i| &self.leaves[i]).collect()
+    }
+
+    /// Every leaf as a host tensor (checkpointing). Kept for API continuity
+    /// with the literal-resident era; the leaves already *are* host tensors.
+    pub fn to_tensors(&self) -> Result<Vec<Tensor>> {
+        Ok(self.leaves.clone())
+    }
+
+    /// Rebuild from host tensors (checkpoint restore).
+    pub fn from_tensors(tensors: &[Tensor]) -> Result<Self> {
+        Ok(TrainState { leaves: tensors.to_vec() })
+    }
+}
+
+/// One quantized layer as exported for deployment.
+#[derive(Clone, Debug)]
+pub struct ExportedLayer {
+    pub name: String,
+    /// Integer codes `[c_out, k]` (exact integers carried in f32).
+    pub w_int: Tensor,
+    /// Per-channel scales `[c_out, 1]`.
+    pub s: Tensor,
+    /// Float bias `[c_out]`.
+    pub b: Tensor,
+}
+
+impl ExportedLayer {
+    pub fn to_qtensor(&self) -> QTensor {
+        QTensor::from_export(&self.w_int, &self.s, &self.b)
+    }
+}

@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::accsim::IntMatrix;
-use crate::model::{NetSpec, QNetwork};
+use crate::model::{NetSpec, QNetwork, SynthQuant};
 use crate::quant::a2q::a2q_quantize_row;
 use crate::quant::QTensor;
 use crate::rng::Rng;
@@ -68,7 +68,7 @@ pub fn psweep_network(widths: &[usize], batch: usize, seed: u64) -> (QNetwork, I
         n_bits: 4,
         p_bits: 16,
         x_signed: false,
-        constrained: true,
+        quant: SynthQuant::A2q,
     };
     let mut net = QNetwork::synthesize(&spec, seed).expect("valid bench spec");
     let mut rng = Rng::new(seed ^ 0xCAFE);

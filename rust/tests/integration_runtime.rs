@@ -9,7 +9,7 @@ use a2q::coordinator::checkpoint::Checkpoint;
 use a2q::coordinator::Trainer;
 use a2q::datasets::{self, Split};
 use a2q::quant::a2q::l1_cap;
-use a2q::runtime::{Engine, ModelManifest};
+use a2q::runtime::{Engine, ModelManifest, TrainBackend};
 
 fn artifacts() -> Option<&'static std::path::Path> {
     let p = std::path::Path::new("artifacts");

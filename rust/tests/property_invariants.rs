@@ -9,7 +9,7 @@ use a2q::accsim::{
     NetworkPlan,
 };
 use a2q::accsim::dot::wrap_to;
-use a2q::model::{network_forward_ref, NetSpec, QNetwork};
+use a2q::model::{network_forward_ref, NetSpec, QNetwork, SynthQuant};
 use a2q::quant::QTensor;
 use a2q::tensor::Tensor;
 use a2q::config::SweepConfig;
@@ -215,7 +215,7 @@ fn prop_network_fused_bit_exact() {
             n_bits: 1 + rng.below(5) as u32,
             p_bits: 6 + rng.below(12) as u32,
             x_signed: rng.below(2) == 1,
-            constrained: case % 2 == 0,
+            quant: if case % 2 == 0 { SynthQuant::A2q } else { SynthQuant::Affine },
         };
         let mut net = QNetwork::synthesize(&spec, 0x5EED ^ case as u64).unwrap();
 
@@ -271,7 +271,7 @@ fn prop_network_fused_bit_exact() {
 
         // Constrained nets are the theorem at network scale: no overflow at
         // or above the synthesis target, at any depth.
-        if spec.constrained {
+        if spec.quant.constrained() {
             let r = network_forward_ref(&net, &x, AccMode::Wrap { p_bits: spec.p_bits });
             for (li, s) in r.layer_stats.iter().enumerate() {
                 assert_eq!(s.overflow_events, 0, "case {case} layer {li} overflowed at target");
@@ -496,7 +496,7 @@ fn prop_partitioned_network_degenerate_shapes() {
         n_bits: 4,
         p_bits: 8,
         x_signed: false,
-        constrained: false,
+        quant: SynthQuant::Affine,
     };
     let mut net = QNetwork::synthesize(&spec, 0xD6).unwrap();
     let sample = Tensor::new(vec![4, 6], (0..24).map(|i| (i % 5) as f32 * 0.21).collect());
@@ -645,5 +645,68 @@ fn prop_sweep_expansion() {
         // qat appears exactly once per mn value
         let qats = runs.iter().filter(|r| r.alg == "qat").count();
         assert_eq!(qats, sweep.mn_values.len(), "case {case}");
+    }
+}
+
+/// The `WeightQuantizer` A2Q impl is THE paper quantizer: bit-exact against
+/// `a2q_quantize_row` across random shapes, parameters and bit widths
+/// (codes AND scales), so the native training backend's forward is pinned
+/// to the audited reference.
+#[test]
+fn prop_weight_quantizer_a2q_bit_exact() {
+    use a2q::quant::quantizer::{A2qQuantizer, WeightQuantizer};
+
+    let mut rng = Rng::new(0xB17);
+    for case in 0..CASES {
+        let k = 1 + rng.below(500);
+        let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 3.0).collect();
+        let d = -10.0 + rng.uniform() as f32 * 10.0;
+        let t = -4.0 + rng.uniform() as f32 * 20.0;
+        let m = 2 + rng.below(7) as u32;
+        let n = 1 + rng.below(8) as u32;
+        let p = 4 + rng.below(28) as u32;
+        let signed = rng.below(2) == 1;
+        let (wq, sq) = A2qQuantizer.quantize_row(&v, d, t, m, n, p, signed);
+        let (wr, sr) = a2q_quantize_row(&v, d, t, m, n, p, signed);
+        assert_eq!(sq.to_bits(), sr.to_bits(), "case {case}: scale drift");
+        assert_eq!(wq.len(), wr.len(), "case {case}");
+        for (i, (a, b)) in wq.iter().zip(&wr).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} code {i}: {a} vs {b}");
+        }
+    }
+}
+
+/// A2Q+ invariants on the same random family: every zero-centered row still
+/// passes the Eq. 15 audit at its (N, P), and never spends more integer l1
+/// norm than the plain-A2Q row quantized from the same inputs.
+#[test]
+fn prop_a2q_plus_capped_and_norm_monotone() {
+    use a2q::quant::quantizer::{A2qPlusQuantizer, A2qQuantizer, WeightQuantizer};
+
+    let mut rng = Rng::new(0xB18);
+    for case in 0..CASES {
+        let k = 1 + rng.below(500);
+        let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 2.0).collect();
+        let d = -8.0 + rng.uniform() as f32 * 6.0;
+        let t = -2.0 + rng.uniform() as f32 * 16.0;
+        let m = 2 + rng.below(7) as u32;
+        let n = 1 + rng.below(8) as u32;
+        let p = 6 + rng.below(20) as u32;
+        let signed = rng.below(2) == 1;
+        let (wp, _) = A2qPlusQuantizer.quantize_row(&v, d, t, m, n, p, signed);
+        assert!(
+            row_satisfies_cap(&wp, p, n, signed),
+            "case {case}: A2Q+ row violates Eq. 15 at N={n} P={p}"
+        );
+        let (wb, _) = A2qQuantizer.quantize_row(&v, d, t, m, n, p, signed);
+        let l1p: i64 = wp.iter().map(|x| x.abs() as i64).sum();
+        let l1b: i64 = wb.iter().map(|x| x.abs() as i64).sum();
+        assert!(l1p <= l1b, "case {case}: A2Q+ l1 {l1p} exceeds plain-A2Q l1 {l1b}");
+        // codes stay inside the M-bit signed range
+        let hi = (1i64 << (m - 1)) - 1;
+        assert!(
+            wp.iter().all(|w| (*w as i64) >= -hi - 1 && (*w as i64) <= hi),
+            "case {case}: code outside {m}-bit range"
+        );
     }
 }

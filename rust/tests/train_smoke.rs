@@ -1,0 +1,77 @@
+//! Smoke-scale native-training perf + e2e run wired into `cargo test`:
+//! exercises the default build's full train -> export -> audit pipeline on
+//! a tiny config and journals debug-profile `native_smoke/trainstep_*`
+//! rows into BENCH_accsim.json (asserted by CI, mirroring the accsim smoke
+//! entries). Lives in its own test binary so its journal read-modify-write
+//! cannot race the other smoke tests (cargo runs test binaries
+//! sequentially).
+//!
+//! The authoritative release numbers come from
+//! `cargo bench --bench train_step`.
+
+use std::time::Instant;
+
+use a2q::config::RunConfig;
+use a2q::coordinator::Trainer;
+use a2q::datasets::{self, Split};
+use a2q::perf::{self, BenchRecord};
+use a2q::runtime::{NativeBackend, TrainBackend};
+
+#[test]
+fn native_train_e2e_guarantee_and_journal() {
+    let quick = std::env::var("A2Q_BENCH_QUICK").map(|v| v != "0").unwrap_or(true);
+    let backend = NativeBackend::new("artifacts");
+
+    // --- e2e: full tiny-config loop, export audited against Eq. 15 ----------
+    let mut cfg = RunConfig::new("mlp3", "a2q", 4, 4, 14, if quick { 24 } else { 120 });
+    cfg.n_train = if quick { 192 } else { 1024 };
+    cfg.n_test = 64;
+    let trainer = Trainer::new(&backend, &cfg).unwrap();
+    let out = trainer.run(&cfg).unwrap();
+    assert!(out.guarantee_ok, "native e2e: exported layers must satisfy Eq. 15");
+    assert!(out.perf.is_finite());
+    assert!(out.loss_history.iter().all(|(_, l)| l.is_finite()));
+
+    // --- smoke-scale train_step timing at the two bench grid points ---------
+    let manifest = &trainer.manifest;
+    let bs = manifest.batch_size;
+    let ds = datasets::by_name("synth_mnist", 256, 64, 0).unwrap();
+    let idx: Vec<usize> = (0..bs).collect();
+    let batch = ds.gather(Split::Train, &idx);
+    let macs_fwd: usize = manifest.qlayers.iter().map(|q| q.c_out * q.k).sum();
+    let reps = if quick { 4 } else { 16 };
+
+    let mut records = Vec::new();
+    for (label, bits) in [("m4n4", (4u32, 4u32, 14u32)), ("m8n8", (8u32, 8u32, 20u32))] {
+        let mut state = backend.init(manifest, 0.0).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let loss = backend
+                .train_step(manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
+                .unwrap();
+            assert!(loss.is_finite(), "{label}");
+        }
+        let dt = t0.elapsed();
+        let macs = (reps * bs * macs_fwd * 3) as u64;
+        println!(
+            "smoke native train_step {label} (debug profile): {:.0} rows/s",
+            (reps * bs) as f64 / dt.as_secs_f64().max(1e-12)
+        );
+        records.push(BenchRecord {
+            name: format!("native_smoke/trainstep_{label}"),
+            ns_per_iter: dt.as_nanos() as f64 / reps as f64,
+            mac_per_s: Some(macs as f64 / dt.as_secs_f64().max(1e-12)),
+        });
+    }
+
+    // Journal under smoke-specific names; degrade gracefully from read-only
+    // checkouts like the other perf instruments.
+    match perf::record_benches(&records) {
+        Ok(path) => {
+            let journal = perf::parse_journal(&std::fs::read_to_string(path).unwrap()).unwrap();
+            assert!(journal.iter().any(|r| r.name == "native_smoke/trainstep_m4n4"));
+            assert!(journal.iter().any(|r| r.name == "native_smoke/trainstep_m8n8"));
+        }
+        Err(e) => eprintln!("perf journal not writable here ({e}); measurements printed only"),
+    }
+}
