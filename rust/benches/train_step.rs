@@ -1,53 +1,97 @@
-//! Native `train_step` throughput (EXPERIMENTS.md §Perf): rows/s through
-//! the pure-Rust backend's forward + STE backward + SGD update on the
-//! default multi-layer MLP manifest (`mlp3`, 784 -> 64 -> 16 -> 2), at the
-//! M4N4 and M8N8 grid points.
+//! Native `train_step` throughput (EXPERIMENTS.md §Perf-Train): rows/s
+//! through the pure-Rust backend's forward + STE backward + optimizer
+//! update, measured at all three compute paths so the speedup of the
+//! blocked GEMM core over the scalar reference is a tracked number:
 //!
-//! Results are journaled to BENCH_accsim.json (`native/trainstep_*`) via
-//! `a2q::perf`; MAC/s counts forward + both backward GEMM passes (3x the
-//! forward MACs), rows/s is printed alongside.
+//! * `*_scalar`  — the scalar triple-loop reference (`ComputePath::Scalar`);
+//! * `*_blocked` — the packed blocked GEMM core pinned to one thread;
+//! * `*_threads` — the blocked core with the batch fanned over the default
+//!   worker heuristic.
+//!
+//! Runs both registry shapes: `mlp` (the Fig. 2 single layer, 784 -> 2 at
+//! M8N1P16) and `mlp3` (784 -> 64 -> 16 -> 2 at M4N4P14). Results are
+//! journaled to BENCH_accsim.json (`native/trainstep_*`) via `a2q::perf`;
+//! CI seeds the journal with this bench and asserts blocked >= scalar
+//! through `a2q perfcheck`. MAC/s counts forward + both backward GEMM
+//! passes (3x the forward MACs).
 
 #[path = "harness.rs"]
 mod harness;
 
 use a2q::datasets::{self, Split};
-use a2q::runtime::{NativeBackend, TrainBackend};
+use a2q::perf::TrainRow;
+use a2q::runtime::{ComputePath, NativeBackend, TrainBackend};
 
 fn main() {
     let mut journal = harness::Journal::new();
-    let backend = NativeBackend::new("artifacts");
-    let manifest = backend.manifest("mlp3").expect("native registry manifest");
-    let bs = manifest.batch_size;
-    let ds = datasets::by_name("synth_mnist", 512, 64, 0).unwrap();
-    let idx: Vec<usize> = (0..bs).collect();
-    let batch = ds.gather(Split::Train, &idx);
-    let macs_fwd: usize = manifest.qlayers.iter().map(|q| q.c_out * q.k).sum();
     let iters = if harness::quick() { 5 } else { 20 };
     let steps_per_iter = if harness::quick() { 2 } else { 5 };
+    let mut groups: Vec<(&str, Vec<TrainRow>)> = Vec::new();
 
-    for (label, bits) in [("m4n4", (4u32, 4u32, 14u32)), ("m8n8", (8u32, 8u32, 20u32))] {
-        let mut state = backend.init(&manifest, 0.0).expect("init");
-        // warm + sanity: the loop must stay finite at this grid point
-        let warm = backend
-            .train_step(&manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
-            .expect("warm step");
-        assert!(warm.is_finite());
-        let r = harness::bench(&format!("native/trainstep_{label}"), 1, iters, || {
-            let mut last = 0.0f32;
-            for _ in 0..steps_per_iter {
-                last = backend
-                    .train_step(&manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
-                    .expect("train step");
-            }
-            last
-        });
+    for (model, shape, bits) in [
+        ("mlp", "mlp 784->2 @ M8N1P16", (8u32, 1u32, 16u32)),
+        ("mlp3", "mlp3 784->64->16->2 @ M4N4P14", (4u32, 4u32, 14u32)),
+    ] {
+        let manifest = NativeBackend::new("artifacts")
+            .manifest(model)
+            .expect("native registry manifest");
+        let bs = manifest.batch_size;
+        let ds = datasets::by_name("synth_mnist", 512, 64, 0).unwrap();
+        let idx: Vec<usize> = (0..bs).collect();
+        let batch = ds.gather(Split::Train, &idx);
+        let macs_fwd: usize = manifest.qlayers.iter().map(|q| q.c_out * q.k).sum();
         let macs = (steps_per_iter * bs * macs_fwd * 3) as u64;
-        let rows_per_s = (steps_per_iter * bs) as f64 / r.median.as_secs_f64().max(1e-12);
-        println!(
-            "  ({rows_per_s:.0} rows/s, {:.1} M MAC/s incl. backward)",
-            harness::throughput(&r, macs) / 1e6
-        );
-        journal.add(&r, Some(macs));
+        let mut rows = Vec::new();
+
+        for (path_label, backend) in [
+            ("scalar", NativeBackend::new("artifacts").with_compute(ComputePath::Scalar)),
+            ("blocked", NativeBackend::new("artifacts").with_threads(1)),
+            ("threads", NativeBackend::new("artifacts")),
+        ] {
+            let mut state = backend.init(&manifest, 0.0).expect("init");
+            // warm + sanity: the loop must stay finite at this grid point
+            let warm = backend
+                .train_step(&manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
+                .expect("warm step");
+            assert!(warm.is_finite());
+            let name = format!("native/trainstep_{model}_{path_label}");
+            let r = harness::bench(&name, 1, iters, || {
+                let mut last = 0.0f32;
+                for _ in 0..steps_per_iter {
+                    last = backend
+                        .train_step(&manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
+                        .expect("train step");
+                }
+                last
+            });
+            let rows_per_s = (steps_per_iter * bs) as f64 / r.median.as_secs_f64().max(1e-12);
+            println!(
+                "  ({rows_per_s:.0} rows/s, {:.1} M MAC/s incl. backward)",
+                harness::throughput(&r, macs) / 1e6
+            );
+            journal.add(&r, Some(macs));
+            rows.push(TrainRow { name, ns_per_iter: r.median.as_nanos() as f64, rows_per_s });
+        }
+        if let (Some(s), Some(b)) = (rows.first(), rows.get(1)) {
+            println!(
+                "  blocked speedup over scalar: {:.2}x",
+                s.ns_per_iter / b.ns_per_iter.max(1.0)
+            );
+        }
+        groups.push((shape, rows));
     }
+
     journal.flush();
+    let block = a2q::perf::render_train_block(
+        &format!(
+            "`cargo bench --bench train_step` (release{})",
+            if harness::quick() { ", quick" } else { "" }
+        ),
+        &groups,
+    );
+    match a2q::perf::update_experiments_train_block(&block) {
+        Ok(true) => println!("EXPERIMENTS.md §Perf-Train block updated"),
+        Ok(false) => println!("EXPERIMENTS.md markers not found; train block not updated"),
+        Err(e) => eprintln!("EXPERIMENTS.md not writable here ({e}); train block not updated"),
+    }
 }

@@ -709,10 +709,8 @@ impl<'w> LayerPlan<'w> {
 /// `n_modes` register models. Honors the `A2Q_ACCSIM_THREADS` environment
 /// variable when set.
 fn worker_count(batch: usize, c_out: usize, k: usize, n_modes: usize) -> usize {
-    if let Ok(v) = std::env::var("A2Q_ACCSIM_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    if let Some(n) = crate::linalg::env_threads("A2Q_ACCSIM_THREADS") {
+        return n;
     }
     // Below ~1M simulated MACs the pass finishes in well under a
     // millisecond; spawning threads would cost more than it saves. The mode
@@ -724,7 +722,7 @@ fn worker_count(batch: usize, c_out: usize, k: usize, n_modes: usize) -> usize {
     if grid.saturating_mul(n_modes.max(1)) < 1_000_000 {
         return 1;
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    crate::linalg::hardware_workers()
 }
 
 /// Forward one integer batch through a quantized linear layer under *all*

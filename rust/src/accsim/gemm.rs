@@ -30,11 +30,10 @@
 
 use crate::quant::QTensor;
 
-/// Channel-tile width: packed channels per panel (accumulator lanes of the
-/// microkernel).
-pub const NR: usize = 8;
-/// Row-tile height over the batch: rows sharing one panel traversal.
-pub const MR: usize = 4;
+// The MR×NR register tile is shared with the blocked *float* GEMM core in
+// `crate::linalg` (the native training backend's engine): one tiling
+// geometry, two element domains.
+pub use crate::linalg::{MR, NR};
 
 /// Weight codes packed at the narrowest width that holds every code.
 enum Panels {

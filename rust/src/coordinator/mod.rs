@@ -3,11 +3,13 @@
 //! [`crate::runtime::TrainBackend`], so the default build trains natively
 //! and the `xla` build drives PJRT artifacts through the same drivers.
 //!
-//! Threading model: the sweep worker thread *constructs* its backend from a
-//! `Send + Copy` [`crate::runtime::BackendKind`] (PJRT handles hold raw
-//! pointers and are not `Send`); the scheduler feeds it jobs over a
-//! channel, streams results to the JSONL sink, and supports resume by
-//! skipping configs already on disk.
+//! Threading model: each sweep worker thread *constructs* its backend from
+//! a `Send + Copy` [`crate::runtime::BackendKind`] (PJRT handles hold raw
+//! pointers and are not `Send`); the scheduler fans jobs over a pool of
+//! such workers (native backends — one per worker; PJRT pinned to a single
+//! worker), streams results to the JSONL sink, and supports resume by
+//! skipping configs already on disk. Job panics are caught per-job and
+//! reported with the failing config.
 
 pub mod checkpoint;
 pub mod sink;
@@ -16,5 +18,5 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use sink::{MetricsSink, RunRecord};
-pub use sweep::{run_single, run_sweep};
+pub use sweep::{run_single, run_sweep, run_sweep_with_workers, sweep_workers};
 pub use trainer::{TrainOutcome, Trainer};

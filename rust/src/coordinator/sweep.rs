@@ -1,19 +1,28 @@
-//! Grid-search scheduler: a dedicated backend worker thread plus a
-//! streaming result channel.
+//! Grid-search scheduler: a pool of backend worker threads plus a streaming
+//! result channel.
 //!
-//! PJRT handles are not `Send`, so the worker thread *constructs* its
-//! backend from a [`BackendKind`] (which is `Send + Copy`) and executes
-//! jobs sequentially; the native backend rides the same protocol so one
-//! scheduler serves both. Results stream out to the JSONL sink as they
-//! finish, and configs already completed on disk are skipped (resume).
+//! PJRT handles are not `Send`, so each worker thread *constructs* its
+//! backend from a [`BackendKind`] (which is `Send + Copy`) and pulls jobs
+//! from an atomic-counter queue; the native backend rides the same protocol,
+//! so one scheduler serves both. Native sweeps fan out over
+//! [`sweep_workers`] threads (each job is deterministic given its config,
+//! so any worker count produces the identical record set); PJRT stays
+//! pinned to a single worker, which also preserves its per-model compiled-
+//! executable cache. Results stream out to the JSONL sink as they finish,
+//! and configs already completed on disk are skipped (resume).
+//!
+//! A job that panics is caught per-job ([`std::panic::catch_unwind`]) and
+//! surfaces as an error naming the failing config, not a bare "worker
+//! panicked".
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use anyhow::Result;
 
 use crate::config::{RunConfig, SweepConfig};
-use crate::runtime::{make_backend, BackendKind};
+use crate::runtime::{make_backend, BackendKind, NativeBackend, TrainBackend};
 
 use super::sink::{MetricsSink, RunRecord};
 use super::trainer::Trainer;
@@ -33,14 +42,63 @@ pub fn expand_sweep(
     Ok(runs)
 }
 
-/// Run every config in the sweep, appending records to `sink_path` as they
-/// complete. Returns all records (existing + new) at the end.
-pub fn run_sweep(
+/// Default worker-pool size for a sweep of `jobs` configs: native jobs fan
+/// out to the hardware (override with `A2Q_SWEEP_WORKERS`); PJRT is pinned
+/// to one worker (its handles are not `Send`, and one worker keeps the
+/// compiled-executable cache warm).
+pub fn sweep_workers(kind: BackendKind, jobs: usize) -> usize {
+    let cap = match kind {
+        BackendKind::Pjrt => 1,
+        BackendKind::Native => crate::linalg::env_threads("A2Q_SWEEP_WORKERS")
+            .unwrap_or_else(crate::linalg::hardware_workers),
+    };
+    cap.min(jobs).max(1)
+}
+
+fn job_label(rc: &RunConfig) -> String {
+    format!("{} {} M={} N={} P={} seed={}", rc.model, rc.alg, rc.m, rc.n, rc.p, rc.seed)
+}
+
+fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Run one job, converting a panic into an error that names the config.
+fn run_job(backend: &dyn TrainBackend, rc: &RunConfig) -> Result<RunRecord> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let trainer = Trainer::new(backend, rc)?;
+        let outcome = trainer.run(rc)?;
+        Ok(RunRecord::from_outcome(&outcome))
+    }))
+    .unwrap_or_else(|payload| {
+        Err(anyhow::anyhow!(
+            "sweep worker panicked on config [{}]: {}",
+            job_label(rc),
+            panic_msg(payload)
+        ))
+    })
+    .map_err(|e: anyhow::Error| e.context(format!("sweep job [{}] failed", job_label(rc))))
+}
+
+/// Run every config in the sweep over an explicit worker-pool size,
+/// appending records to `sink_path` as they complete. Returns all records
+/// (existing + new) at the end. `workers` is clamped to 1 for PJRT; any
+/// native worker count yields the identical record set (each job is
+/// deterministic given its config, and the native backend itself is
+/// bit-identical at any thread count).
+pub fn run_sweep_with_workers(
     cfg: SweepConfig,
     kind: BackendKind,
     artifacts_dir: PathBuf,
     sink_path: PathBuf,
     verbose: bool,
+    workers: usize,
 ) -> Result<Vec<RunRecord>> {
     let sink = MetricsSink::new(&sink_path);
     let done = sink.completed_keys()?;
@@ -50,64 +108,117 @@ pub fn run_sweep(
         .filter(|r| !done.contains(&RunRecord::key(r)))
         .collect();
     let total = todo.len();
+    let workers = match kind {
+        BackendKind::Pjrt => 1,
+        BackendKind::Native => workers.max(1).min(total.max(1)),
+    };
     if verbose {
         println!(
-            "[sweep] {} configs to run ({} already complete in {:?})",
+            "[sweep] {} configs to run on {} {:?} worker(s) ({} already complete in {:?})",
             total,
+            workers,
+            kind,
             done.len(),
             sink_path
         );
     }
 
     let (tx, rx) = mpsc::channel::<Result<RunRecord>>();
-
-    // Dedicated worker thread: owns the backend, runs jobs in order. The
-    // PJRT engine caches compiled executables per model, so consecutive
-    // configs of the same model reuse compilation; the native backend is
-    // stateless between runs.
-    let worker = std::thread::spawn(move || {
-        let backend = match make_backend(kind, &artifacts_dir) {
-            Ok(b) => b,
-            Err(e) => {
-                let _ = tx.send(Err(e));
-                return;
-            }
-        };
-        for rc in todo {
-            let result = (|| {
-                let trainer = Trainer::new(backend.as_ref(), &rc)?;
-                let outcome = trainer.run(&rc)?;
-                Ok(RunRecord::from_outcome(&outcome))
-            })();
-            if tx.send(result).is_err() {
-                break; // scheduler gone
-            }
-        }
-    });
-
+    let next = AtomicUsize::new(0);
     let mut finished = 0usize;
-    for result in rx {
-        let record = result?;
-        sink.append(&record)?;
-        finished += 1;
-        if verbose {
-            println!(
-                "[sweep] {}/{} {} {} M={} N={} P={} -> perf {:.4} sparsity {:.3} ({:.1}s)",
-                finished,
-                total,
-                record.config.model,
-                record.config.alg,
-                record.config.m,
-                record.config.n,
-                record.config.p,
-                record.perf,
-                record.sparsity,
-                record.train_secs,
-            );
-        }
+    let mut first_err: Option<anyhow::Error> = None;
+
+    {
+        let todo = &todo;
+        let next = &next;
+        let artifacts_dir = &artifacts_dir;
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    // Each worker owns its backend. When the pool is wider
+                    // than one, native backends pin their internal GEMM
+                    // fan-out to one thread — the parallelism budget is
+                    // spent across jobs, not inside each one.
+                    let backend: Box<dyn TrainBackend> = match kind {
+                        BackendKind::Native if workers > 1 => {
+                            Box::new(NativeBackend::new(artifacts_dir).with_threads(1))
+                        }
+                        _ => match make_backend(kind, artifacts_dir) {
+                            Ok(b) => b,
+                            Err(e) => {
+                                let _ = tx.send(Err(e));
+                                return;
+                            }
+                        },
+                    };
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= todo.len() {
+                            break;
+                        }
+                        if tx.send(run_job(backend.as_ref(), &todo[i])).is_err() {
+                            break; // scheduler gone
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for result in rx {
+                match result {
+                    Ok(record) => {
+                        if let Err(e) = sink.append(&record) {
+                            first_err = Some(e);
+                            break;
+                        }
+                        finished += 1;
+                        if verbose {
+                            println!(
+                                "[sweep] {}/{} {} {} M={} N={} P={} -> perf {:.4} sparsity {:.3} ({:.1}s)",
+                                finished,
+                                total,
+                                record.config.model,
+                                record.config.alg,
+                                record.config.m,
+                                record.config.n,
+                                record.config.p,
+                                record.perf,
+                                record.sparsity,
+                                record.train_secs,
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        first_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            // Dropping the receiver makes the workers' next send fail, so
+            // they drain out and the scope join returns promptly.
+        });
     }
-    worker.join().map_err(|_| anyhow::anyhow!("sweep worker panicked"))?;
+    if let Some(e) = first_err {
+        return Err(e);
+    }
     sink.load()
+}
+
+/// Run every config in the sweep with the default worker-pool size
+/// ([`sweep_workers`]), appending records to `sink_path` as they complete.
+pub fn run_sweep(
+    cfg: SweepConfig,
+    kind: BackendKind,
+    artifacts_dir: PathBuf,
+    sink_path: PathBuf,
+    verbose: bool,
+) -> Result<Vec<RunRecord>> {
+    // Size the pool from the *expanded* job count so one-job sweeps stay
+    // inline; the heavy expansion is re-done inside (it is cheap — manifest
+    // resolution only).
+    let jobs = expand_sweep(&cfg, kind, &artifacts_dir)?.len();
+    let workers = sweep_workers(kind, jobs);
+    run_sweep_with_workers(cfg, kind, artifacts_dir, sink_path, verbose, workers)
 }
 
 /// Synchronous single-run helper used by the CLI `train` command and tests.
@@ -121,6 +232,8 @@ pub fn run_single(kind: BackendKind, artifacts_dir: &Path, rc: &RunConfig) -> Re
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{ExportedLayer, ModelManifest, TrainState};
+    use crate::tensor::Tensor;
     use crate::testutil::TempDir;
 
     #[test]
@@ -150,6 +263,119 @@ mod tests {
     }
 
     #[test]
+    fn multi_worker_sweep_matches_the_single_worker_scheduler() {
+        let dir = TempDir::new().unwrap();
+        let mut cfg = SweepConfig::default_grid(vec!["mlp".into(), "mlp3".into()], 4);
+        cfg.mn_values = vec![6];
+        cfg.p_offsets = vec![0, 4];
+        cfg.algs = vec!["a2q".into(), "qat".into()];
+        cfg.n_train = 96;
+        cfg.n_test = 32;
+        let run = |workers: usize, sink: &str| {
+            run_sweep_with_workers(
+                cfg.clone(),
+                BackendKind::Native,
+                dir.path().to_path_buf(),
+                dir.path().join(sink),
+                false,
+                workers,
+            )
+            .unwrap()
+        };
+        let mut one = run(1, "one.jsonl");
+        let mut many = run(3, "many.jsonl");
+        assert!(one.len() > 2, "expected a multi-job sweep, got {}", one.len());
+        let key = |r: &RunRecord| RunRecord::key(&r.config);
+        one.sort_by_key(key);
+        many.sort_by_key(key);
+        assert_eq!(one.len(), many.len());
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!(key(a), key(b));
+            assert_eq!(a.perf, b.perf, "{}", key(a));
+            assert_eq!(a.sparsity, b.sparsity, "{}", key(a));
+            assert_eq!(a.l1_norms, b.l1_norms, "{}", key(a));
+            assert_eq!(a.guarantee_ok, b.guarantee_ok, "{}", key(a));
+            assert_eq!(a.final_loss, b.final_loss, "{}", key(a));
+        }
+    }
+
+    #[test]
+    fn job_errors_name_the_failing_config() {
+        let dir = TempDir::new().unwrap();
+        // steps = 0 fails RunConfig validation inside the job
+        let cfg = SweepConfig::default_grid(vec!["mlp".into()], 0);
+        let err = run_sweep(
+            cfg,
+            BackendKind::Native,
+            dir.path().to_path_buf(),
+            dir.path().join("runs.jsonl"),
+            false,
+        )
+        .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("sweep job [mlp"), "error must name the config: {text}");
+    }
+
+    /// A backend whose `init` panics: drives the catch_unwind path.
+    struct PanickyBackend;
+
+    impl TrainBackend for PanickyBackend {
+        fn name(&self) -> &'static str {
+            "panicky"
+        }
+        fn manifest(&self, model: &str) -> Result<ModelManifest> {
+            crate::runtime::native::native_manifest(model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))
+        }
+        fn init(&self, _m: &ModelManifest, _seed: f32) -> Result<TrainState> {
+            panic!("synthetic backend panic");
+        }
+        fn train_step(
+            &self,
+            _m: &ModelManifest,
+            _alg: &str,
+            _state: &mut TrainState,
+            _x: &Tensor,
+            _y: &Tensor,
+            _bits: (u32, u32, u32),
+            _lr: f32,
+        ) -> Result<f32> {
+            unreachable!()
+        }
+        fn infer(
+            &self,
+            _m: &ModelManifest,
+            _alg: &str,
+            _state: &TrainState,
+            _x: &Tensor,
+            _bits: (u32, u32, u32),
+        ) -> Result<Tensor> {
+            unreachable!()
+        }
+        fn export(
+            &self,
+            _m: &ModelManifest,
+            _alg: &str,
+            _state: &TrainState,
+            _bits: (u32, u32, u32),
+        ) -> Result<Vec<ExportedLayer>> {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    fn a_panicking_job_surfaces_its_config_not_a_bare_panic() {
+        let mut rc = RunConfig::new("mlp", "a2q", 8, 1, 12, 5);
+        rc.n_train = 64;
+        rc.n_test = 32;
+        let err = run_job(&PanickyBackend, &rc).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("panicked"), "{text}");
+        assert!(text.contains("mlp a2q M=8 N=1 P=12"), "{text}");
+        assert!(text.contains("synthetic backend panic"), "{text}");
+    }
+
+    #[test]
     fn run_single_native_mlp3() {
         let dir = TempDir::new().unwrap();
         let mut rc = RunConfig::new("mlp3", "a2q", 4, 4, 14, 10);
@@ -158,5 +384,12 @@ mod tests {
         let record = run_single(BackendKind::Native, dir.path(), &rc).unwrap();
         assert!(record.guarantee_ok);
         assert_eq!(record.l1_norms.len(), 3);
+    }
+
+    #[test]
+    fn sweep_workers_pins_pjrt_and_caps_by_jobs() {
+        assert_eq!(sweep_workers(BackendKind::Pjrt, 64), 1);
+        assert_eq!(sweep_workers(BackendKind::Native, 1), 1);
+        assert!(sweep_workers(BackendKind::Native, 64) >= 1);
     }
 }

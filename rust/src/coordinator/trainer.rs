@@ -294,6 +294,28 @@ mod tests {
     }
 
     #[test]
+    fn native_adam_manifest_trains_and_exercises_moment_slots() {
+        let be = NativeBackend::new("artifacts");
+        let mut cfg = RunConfig::new("mlp3_adam", "a2q", 4, 4, 14, 20);
+        cfg.n_train = 128;
+        cfg.n_test = 32;
+        let trainer = Trainer::new(&be, &cfg).unwrap();
+        assert_eq!(trainer.manifest.optimizer, "adam");
+        let out = trainer.run(&cfg).unwrap();
+        assert!(out.guarantee_ok, "adam: Eq. 15 audit failed");
+        assert!(out.perf.is_finite());
+        assert!(out.loss_history.iter().all(|(_, l)| l.is_finite()));
+        // the Adam slots in the state layout actually moved
+        for slot in ["m/fc0/v", "v/fc0/v", "m/fc2/b", "v/fc2/b"] {
+            let i = trainer.manifest.state.iter().position(|e| e.path == slot).unwrap();
+            assert!(
+                out.state.leaves[i].data().iter().any(|v| *v != 0.0),
+                "adam moment slot {slot} never updated"
+            );
+        }
+    }
+
+    #[test]
     fn native_float_baseline_skips_export() {
         let be = NativeBackend::new("artifacts");
         let mut cfg = RunConfig::new("mlp", "float", 8, 1, 16, 10);

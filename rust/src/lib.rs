@@ -25,8 +25,10 @@
 //! Training is abstracted behind [`runtime::TrainBackend`]
 //! (`init / train_step / infer / export` over host-tensor state leaves):
 //! the default build trains through the pure-Rust
-//! [`runtime::NativeBackend`] (manual forward/backward for MLP manifests,
-//! STE through the [`quant::WeightQuantizer`] — paper A2Q and A2Q+), so
+//! [`runtime::NativeBackend`] (forward/backward for MLP manifests over the
+//! shared blocked f32 GEMM core in [`linalg`], batch fan-out across scoped
+//! threads, STE through the [`quant::WeightQuantizer`] — paper A2Q and
+//! A2Q+), so
 //! `a2q train` / `a2q sweep` and every training-backed figure run fully
 //! offline; the PJRT executor for the AOT artifacts is the same trait
 //! behind the `xla` cargo feature. Bench throughput history is journaled
@@ -39,6 +41,7 @@ pub mod coordinator;
 pub mod datasets;
 pub mod finn;
 pub mod json;
+pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod pareto;

@@ -40,7 +40,9 @@ COMMANDS:
              no artifacts; exports chain into the accsim + FINN substrates)
   sweep      --models mlp,mlp3 [--steps 200] [--mn 6,8]
              [--offsets 0,2,4,6,8,10] [--float-ref true] [--sink runs.jsonl]
-             [--backend native|xla] [--config sweep.json]
+             [--backend native|xla] [--config sweep.json] [--workers N]
+             (native sweeps fan configs over a worker pool — results are
+              identical at any worker count; xla pins one worker)
   figure     <fig2|fig3|fig4|fig5|fig6|fig7|fig8|all>
              [--sink runs.jsonl] [--steps 200] [--seed 0]
              [--backend native|xla]
@@ -54,6 +56,10 @@ COMMANDS:
              (whole QNetwork under every width in one threaded pass: per-layer
               overflow/sparsity, fig2/fig3 network CSVs, FINN LUT estimate)
   models     (list native registry + artifacts-dir models)
+  perfcheck  --require FAST:SLOW[,FAST:SLOW...] [--journal BENCH_accsim.json]
+             (assert journaled bench FAST is at least as fast as SLOW; CI
+              uses this to pin the blocked train path ahead of the scalar
+              reference)
 ";
 
 fn main() -> Result<()> {
@@ -80,6 +86,7 @@ fn main() -> Result<()> {
         "accsim" => cmd_accsim(&args),
         "netsim" => cmd_netsim(&args, &results),
         "models" => cmd_models(&artifacts),
+        "perfcheck" => cmd_perfcheck(&args),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
     }
 }
@@ -160,11 +167,11 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
 
 fn cmd_sweep(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
     use a2q::config::SweepConfig;
-    use a2q::coordinator::run_sweep;
+    use a2q::coordinator::{run_sweep, run_sweep_with_workers};
 
     args.check_known(&[
         "artifacts", "results", "models", "steps", "mn", "offsets", "float-ref", "config",
-        "sink", "seed", "n-train", "n-test", "backend",
+        "sink", "seed", "n-train", "n-test", "backend", "workers",
     ])?;
     let kind = backend_kind(args)?;
     let mut cfg = match args.opt_str("config") {
@@ -194,8 +201,62 @@ fn cmd_sweep(args: &Args, artifacts: &Path, results: &Path) -> Result<()> {
         cfg.algs.push("float".into());
     }
     let sink_path = results.join(args.str_or("sink", "runs.jsonl"));
-    let records = run_sweep(cfg, kind, artifacts.to_path_buf(), sink_path, true)?;
+    let records = match args.opt_str("workers") {
+        Some(w) => {
+            let workers: usize = w.parse().map_err(|e| anyhow::anyhow!("--workers {w:?}: {e}"))?;
+            anyhow::ensure!(workers > 0, "--workers must be positive");
+            run_sweep_with_workers(cfg, kind, artifacts.to_path_buf(), sink_path, true, workers)?
+        }
+        None => run_sweep(cfg, kind, artifacts.to_path_buf(), sink_path, true)?,
+    };
     println!("[sweep] {} total records", records.len());
+    Ok(())
+}
+
+/// Assert ordering constraints between journaled bench records: every
+/// `FAST:SLOW` pair requires `FAST`'s median ns/iter to be at most
+/// `SLOW`'s. CI runs this after seeding the journal so a perf regression
+/// (e.g. the blocked train path losing to the scalar reference) fails the
+/// build with a precise message.
+fn cmd_perfcheck(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "results", "journal", "require"])?;
+    let path = args
+        .opt_str("journal")
+        .map(PathBuf::from)
+        .unwrap_or_else(a2q::perf::bench_json_path);
+    let journal = a2q::perf::parse_journal(&std::fs::read_to_string(&path)?)?;
+    let spec = args
+        .opt_str("require")
+        .ok_or_else(|| anyhow::anyhow!("perfcheck needs --require FAST:SLOW[,FAST:SLOW...]"))?;
+    let find = |name: &str| {
+        journal
+            .iter()
+            .find(|r| r.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no bench record {name:?} in {}", path.display()))
+    };
+    for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (fast, slow) = pair
+            .trim()
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--require pair {pair:?} is not FAST:SLOW"))?;
+        let (f, s) = (find(fast.trim())?, find(slow.trim())?);
+        anyhow::ensure!(
+            f.ns_per_iter <= s.ns_per_iter,
+            "{} ({:.0} ns/iter) is slower than {} ({:.0} ns/iter)",
+            f.name,
+            f.ns_per_iter,
+            s.name,
+            s.ns_per_iter
+        );
+        println!(
+            "[perfcheck] ok: {} {:.0} ns/iter <= {} {:.0} ns/iter ({:.2}x)",
+            f.name,
+            f.ns_per_iter,
+            s.name,
+            s.ns_per_iter,
+            s.ns_per_iter / f.ns_per_iter.max(1.0)
+        );
+    }
     Ok(())
 }
 

@@ -151,6 +151,10 @@ pub const NET_END: &str = "<!-- PERF-NET:END -->";
 pub const NET_SMOKE_BEGIN: &str =
     "<!-- PERF-NET-SMOKE:BEGIN (auto-recorded; do not edit by hand) -->";
 pub const NET_SMOKE_END: &str = "<!-- PERF-NET-SMOKE:END -->";
+/// Markers of the native train-step release block (`cargo bench --bench
+/// train_step`).
+pub const TRAIN_BEGIN: &str = "<!-- PERF-TRAIN:BEGIN (auto-recorded; do not edit by hand) -->";
+pub const TRAIN_END: &str = "<!-- PERF-TRAIN:END -->";
 
 /// Replace whatever sits between `begin` and `end` markers in EXPERIMENTS.md
 /// with `block`. Returns false (and leaves the file alone) when the file or
@@ -222,6 +226,43 @@ pub fn update_experiments_net_smoke_block(block: &str) -> Result<bool> {
     update_marked_block(NET_SMOKE_BEGIN, NET_SMOKE_END, block)
 }
 
+/// One measured compute path of the native `train_step` bench.
+pub struct TrainRow {
+    /// Journal name, e.g. `native/trainstep_mlp3_blocked`.
+    pub name: String,
+    pub ns_per_iter: f64,
+    pub rows_per_s: f64,
+}
+
+/// Render the scalar-reference vs blocked vs batch-parallel comparison the
+/// `train_step` bench writes into EXPERIMENTS.md §Perf-Train. Rows must
+/// come in groups sharing an iteration shape; speedups are reported
+/// against each group's first (scalar) row.
+pub fn render_train_block(recorded_by: &str, groups: &[(&str, Vec<TrainRow>)]) -> String {
+    let mut out = format!("Last recorded by {recorded_by}:\n");
+    for (shape, rows) in groups {
+        out.push_str(&format!(
+            "\n**{shape}**\n\n| path | ns/iter (median) | rows/s | vs scalar |\n|---|---:|---:|---:|\n"
+        ));
+        let base = rows.first().map(|r| r.ns_per_iter).unwrap_or(0.0);
+        for r in rows {
+            out.push_str(&format!(
+                "| {} | {:.0} | {:.0} | {:.2}x |\n",
+                r.name,
+                r.ns_per_iter,
+                r.rows_per_s,
+                base / r.ns_per_iter.max(1.0)
+            ));
+        }
+    }
+    out
+}
+
+/// Replace the native train-step release block of EXPERIMENTS.md.
+pub fn update_experiments_train_block(block: &str) -> Result<bool> {
+    update_marked_block(TRAIN_BEGIN, TRAIN_END, block)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +303,26 @@ mod tests {
         assert_eq!(loaded[0].name, "inf");
         assert_eq!(loaded[0].mac_per_s, None);
         assert_eq!(loaded[1].mac_per_s, Some(5.0));
+    }
+
+    #[test]
+    fn train_block_renders_groups_and_speedups() {
+        let rows = vec![
+            TrainRow {
+                name: "native/trainstep_mlp3_scalar".into(),
+                ns_per_iter: 1000.0,
+                rows_per_s: 10.0,
+            },
+            TrainRow {
+                name: "native/trainstep_mlp3_blocked".into(),
+                ns_per_iter: 250.0,
+                rows_per_s: 40.0,
+            },
+        ];
+        let block = render_train_block("test", &[("mlp3 @ M4N4P14", rows)]);
+        assert!(block.contains("**mlp3 @ M4N4P14**"), "{block}");
+        assert!(block.contains("| native/trainstep_mlp3_scalar | 1000 | 10 | 1.00x |"), "{block}");
+        assert!(block.contains("| native/trainstep_mlp3_blocked | 250 | 40 | 4.00x |"), "{block}");
     }
 
     #[test]

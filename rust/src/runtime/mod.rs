@@ -31,7 +31,7 @@ pub mod state;
 
 pub use artifact::{AlgArtifacts, ModelManifest, QLayerMeta};
 pub use backend::{make_backend, BackendKind, TrainBackend};
-pub use native::NativeBackend;
+pub use native::{ComputePath, NativeBackend};
 pub use state::{ExportedLayer, TrainState};
 #[cfg(feature = "xla")]
 pub use engine::Engine;

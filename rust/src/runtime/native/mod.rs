@@ -25,13 +25,27 @@
 //!   the weight LR with elementwise gradient clipping — the native stand-in
 //!   for the scale-free treatment the artifact models give them.
 //!
+//! **Compute paths** — the hot path runs the three per-layer GEMM shapes
+//! (forward `A·Wᵀ`, input-grad `dZ·W`, weight-grad `dZᵀ·A`) through the
+//! shared blocked f32 core in [`crate::linalg`]: quantized weights are
+//! packed once per `train_step` into register-tile panels, per-layer
+//! activations/gradients live in flat scratch matrices reused across steps
+//! (a [`Workspace`] behind a mutex), and the batch dimension fans out over
+//! `std::thread::scope` workers. Forward/input-grad rows are independent
+//! and weight-grad reduction uses a fixed block order
+//! ([`crate::linalg::grad_reduce`]), so training is **bit-identical at any
+//! thread count**. The original scalar triple loop survives as
+//! [`ComputePath::Scalar`] — the reference the property tests and the
+//! `train_step` bench compare the blocked engine against.
+//!
 //! Models come from the in-process registry ([`native_manifest`]: `mlp`,
-//! `mlp3`) or from any artifact manifest whose quantized layers are all
-//! dense.
+//! `mlp3`, `mlp3_adam`) or from any artifact manifest whose quantized
+//! layers are all dense.
 
 pub mod models;
 
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use anyhow::{ensure, Result};
 
@@ -40,6 +54,7 @@ pub use models::{native_manifest, native_models};
 use super::artifact::ModelManifest;
 use super::backend::TrainBackend;
 use super::state::{ExportedLayer, TrainState};
+use crate::linalg::{self, GradScratch, PackedB};
 use crate::quant::quantizer::{quantizer_for_alg, WeightQuantizer};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -54,20 +69,93 @@ const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
 
+/// Which compute engine drives the dense forward/backward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputePath {
+    /// The original single-threaded scalar triple loop. Retained as the
+    /// reference the blocked engine is property-tested (and benchmarked)
+    /// against; not the path production runs take.
+    Scalar,
+    /// Packed blocked GEMM through [`crate::linalg`] with the batch fanned
+    /// over scoped worker threads. The default.
+    Blocked,
+}
+
+/// Reusable per-backend scratch: flat per-layer activation/pre-activation
+/// matrices, packed weight panels and gradient buffers, grown on demand and
+/// reused across `train_step`/`infer` calls. Lives behind a mutex because
+/// the [`TrainBackend`] API takes `&self`.
+#[derive(Default)]
+struct Workspace {
+    /// `acts[l]`: input to layer `l`, flat `[batch, k_l]` (`acts[0]` = batch).
+    acts: Vec<Vec<f32>>,
+    /// `zs[l]`: pre-activations of layer `l`, flat `[batch, c_out_l]`.
+    zs: Vec<Vec<f32>>,
+    /// Forward-packed quantized weights per layer (NT panels: `z = a·Wᵀ`).
+    fwd_packs: Vec<PackedB>,
+    /// Input-grad pack of the current layer (NN panels: `dA = dZ·W`).
+    grad_pack: PackedB,
+    /// dL/dz of the current layer / of the previous layer (ping-pong).
+    d_act: Vec<f32>,
+    d_prev: Vec<f32>,
+    /// Per-layer gradient staging: wrt quantized weights, bias, and the
+    /// quantizer leaves.
+    g_w: Vec<f32>,
+    g_b: Vec<f32>,
+    g_v: Vec<f32>,
+    g_d: Vec<f32>,
+    g_t: Vec<f32>,
+    /// Softmax row scratch.
+    exps: Vec<f32>,
+    /// Block partials for the fixed-order weight-grad reduction.
+    grad_scratch: GradScratch,
+}
+
 /// Pure-Rust training backend over host-tensor state leaves.
 pub struct NativeBackend {
     dir: PathBuf,
+    path: ComputePath,
+    /// Explicit worker-thread pin for the blocked path (`None` = pick from
+    /// the job size, `A2Q_NATIVE_THREADS` overrides).
+    threads: Option<usize>,
+    ws: Mutex<Workspace>,
 }
 
 impl NativeBackend {
-    /// Create a backend; `artifacts_dir` is only consulted for models not
-    /// in the native registry.
+    /// Create a backend on the blocked+threaded path; `artifacts_dir` is
+    /// only consulted for models not in the native registry.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Self {
-        NativeBackend { dir: artifacts_dir.as_ref().to_path_buf() }
+        NativeBackend {
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            path: ComputePath::Blocked,
+            threads: None,
+            ws: Mutex::new(Workspace::default()),
+        }
+    }
+
+    /// Select the compute path (tests and the `train_step` bench use
+    /// [`ComputePath::Scalar`] as the reference).
+    pub fn with_compute(mut self, path: ComputePath) -> Self {
+        self.path = path;
+        self
+    }
+
+    /// Pin the blocked path's worker-thread count (results are
+    /// bit-identical for any pin; this only moves wall-clock).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
+        self
     }
 
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
+    }
+
+    fn workers(&self, rows: usize, flops_per_row: usize) -> usize {
+        match self.threads {
+            Some(n) => n,
+            None => linalg::gemm_workers(rows.saturating_mul(flops_per_row)),
+        }
     }
 }
 
@@ -149,17 +237,10 @@ struct LayerWeights {
     wq: Vec<f32>,
 }
 
-/// Everything the backward pass needs from one forward.
-struct Forward {
+/// What the backward pass needs from one forward, beyond the staged
+/// activations in the [`Workspace`].
+struct ForwardInfo {
     batch: usize,
-    /// `acts[l]` is the input to layer `l` (`acts[0]` = the raw batch);
-    /// length = depth (the logits are `zs[depth - 1]`).
-    acts: Vec<Vec<f32>>,
-    /// Pre-activations per layer. With the dynamic per-batch activation
-    /// scale the top of the N-bit grid coincides with `max(relu(z))`, so
-    /// the upper rail never clips and the STE gate through a hidden
-    /// boundary is exactly the ReLU mask `z > 0`.
-    zs: Vec<Vec<f32>>,
     weights: Vec<LayerWeights>,
 }
 
@@ -219,16 +300,19 @@ fn quantize_layer(
     }
 }
 
-/// `z[B, c_out] = a[B, k] @ w[c_out, k]^T + bias`.
-fn dense_forward(
+/// Scalar reference forward: `z[B, c_out] = a[B, k] @ w[c_out, k]^T + bias`.
+/// The [`ComputePath::Scalar`] twin of the packed blocked kernel — kept
+/// bit-stable so property tests can anchor on it.
+fn dense_forward_ref(
     a: &[f32],
     batch: usize,
     k: usize,
     w: &[f32],
     c_out: usize,
     bias: &[f32],
-) -> Vec<f32> {
-    let mut z = vec![0.0f32; batch * c_out];
+    z: &mut [f32],
+) {
+    debug_assert_eq!(z.len(), batch * c_out);
     for r in 0..batch {
         let ar = &a[r * k..(r + 1) * k];
         let zr = &mut z[r * c_out..(r + 1) * c_out];
@@ -241,17 +325,26 @@ fn dense_forward(
             zr[c] = acc + bias[c];
         }
     }
-    z
 }
 
-/// Stable softmax cross-entropy: returns (mean loss, dL/dlogits).
-fn softmax_ce(logits: &[f32], batch: usize, classes: usize, labels: &[f32]) -> (f32, Vec<f32>) {
-    let mut dz = vec![0.0f32; batch * classes];
+/// Stable softmax cross-entropy into reusable buffers: returns the mean
+/// loss, leaves dL/dlogits in `dz`.
+fn softmax_ce(
+    logits: &[f32],
+    batch: usize,
+    classes: usize,
+    labels: &[f32],
+    dz: &mut Vec<f32>,
+    exps: &mut Vec<f32>,
+) -> f32 {
+    dz.clear();
+    dz.resize(batch * classes, 0.0);
     let mut loss = 0.0f64;
     for r in 0..batch {
         let row = &logits[r * classes..(r + 1) * classes];
         let max = row.iter().fold(f32::NEG_INFINITY, |a, x| a.max(*x));
-        let exps: Vec<f32> = row.iter().map(|x| (x - max).exp()).collect();
+        exps.clear();
+        exps.extend(row.iter().map(|x| (x - max).exp()));
         let sum: f32 = exps.iter().sum();
         let label = (labels[r] as usize).min(classes - 1);
         loss -= ((exps[label] / sum).max(1e-30) as f64).ln();
@@ -260,7 +353,7 @@ fn softmax_ce(logits: &[f32], batch: usize, classes: usize, labels: &[f32]) -> (
             dr[c] = (exps[c] / sum - if c == label { 1.0 } else { 0.0 }) / batch as f32;
         }
     }
-    ((loss / batch as f64) as f32, dz)
+    (loss / batch as f64) as f32
 }
 
 /// Two disjoint mutable leaves out of the state vector.
@@ -289,6 +382,9 @@ impl NativeBackend {
         Ok((x.data(), batch))
     }
 
+    /// Forward the batch through every layer, staging activations and
+    /// pre-activations in the workspace. Quantized weights are packed once
+    /// here and reused by the whole step.
     fn forward(
         &self,
         manifest: &ModelManifest,
@@ -296,7 +392,8 @@ impl NativeBackend {
         alg: &str,
         leaves: &[Tensor],
         x: &Tensor,
-    ) -> Result<Forward> {
+        ws: &mut Workspace,
+    ) -> Result<ForwardInfo> {
         ensure!(
             manifest.task == "classify",
             "native backend supports classify manifests; {} is {:?}",
@@ -305,32 +402,50 @@ impl NativeBackend {
         );
         let (xdata, batch) = Self::flatten_batch(x, layers[0].k)?;
         let depth = layers.len();
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(depth);
-        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(depth);
+        ws.acts.resize_with(depth, Vec::new);
+        ws.zs.resize_with(depth, Vec::new);
+        ws.fwd_packs.resize_with(depth, PackedB::new);
+        ws.acts[0].clear();
+        ws.acts[0].extend_from_slice(xdata);
         let mut weights: Vec<LayerWeights> = Vec::with_capacity(depth);
-        acts.push(xdata.to_vec());
         for (l, lref) in layers.iter().enumerate() {
             let lw = quantize_layer(alg, &leaves[lref.v], &leaves[lref.d], &leaves[lref.t], lref)?;
-            let z =
-                dense_forward(&acts[l], batch, lref.k, &lw.wq, lref.c_out, leaves[lref.b].data());
+            let (c_out, k) = (lref.c_out, lref.k);
+            let bias = leaves[lref.b].data();
+            {
+                let a = &ws.acts[l];
+                let z = &mut ws.zs[l];
+                z.clear();
+                z.resize(batch * c_out, 0.0);
+                match self.path {
+                    ComputePath::Scalar => dense_forward_ref(a, batch, k, &lw.wq, c_out, bias, z),
+                    ComputePath::Blocked => {
+                        let pack = &mut ws.fwd_packs[l];
+                        pack.pack_t(&lw.wq, c_out, k);
+                        linalg::matmul_par(pack, a, batch, z, self.workers(batch, c_out * k));
+                        linalg::add_bias(z, batch, c_out, bias);
+                    }
+                }
+            }
             weights.push(lw);
             if l + 1 < depth {
-                let m = z.iter().fold(0.0f32, |a, v| a.max(*v));
-                let a = if alg == "float" {
-                    z.iter().map(|v| v.max(0.0)).collect()
+                let m = ws.zs[l].iter().fold(0.0f32, |a, v| a.max(*v));
+                let z = &ws.zs[l];
+                let a_next = &mut ws.acts[l + 1];
+                a_next.clear();
+                if alg == "float" {
+                    a_next.extend(z.iter().map(|v| v.max(0.0)));
                 } else {
                     // quantized ReLU on the next layer's unsigned N-bit grid,
                     // dynamic per-batch scale (constant to the backward pass)
                     let n_next = layers[l + 1].n_in.min(31);
                     let qmax = ((1u64 << n_next) - 1) as f32;
                     let s_a = if m > 0.0 { m / qmax } else { 1.0 };
-                    z.iter().map(|v| (v / s_a).round().clamp(0.0, qmax) * s_a).collect()
-                };
-                acts.push(a);
+                    a_next.extend(z.iter().map(|v| (v / s_a).round().clamp(0.0, qmax) * s_a));
+                }
             }
-            zs.push(z);
         }
-        Ok(Forward { batch, acts, zs, weights })
+        Ok(ForwardInfo { batch, weights })
     }
 
     /// Apply one optimizer step to the leaf at `idx` with gradient `grad`.
@@ -451,11 +566,20 @@ impl TrainBackend for NativeBackend {
         lr: f32,
     ) -> Result<f32> {
         let layers = layer_refs(manifest, bits)?;
-        let fwd = self.forward(manifest, &layers, alg, &state.leaves, x)?;
+        let mut ws_guard = self.ws.lock().unwrap_or_else(|p| p.into_inner());
+        let ws = &mut *ws_guard;
+        let fwd = self.forward(manifest, &layers, alg, &state.leaves, x, ws)?;
         let depth = layers.len();
         let classes = layers[depth - 1].c_out;
         ensure!(y.len() >= fwd.batch, "labels shorter than batch");
-        let (loss, dlogits) = softmax_ce(&fwd.zs[depth - 1], fwd.batch, classes, y.data());
+        let loss = softmax_ce(
+            &ws.zs[depth - 1],
+            fwd.batch,
+            classes,
+            y.data(),
+            &mut ws.d_act,
+            &mut ws.exps,
+        );
 
         // advance the step counter first (Adam bias correction uses it)
         let step = match find_leaf(manifest, "step") {
@@ -468,58 +592,91 @@ impl TrainBackend for NativeBackend {
         };
 
         let wd = manifest.weight_decay as f32;
-        let mut d_act = dlogits; // dL/dz of the current layer
         for l in (0..depth).rev() {
             let lref = &layers[l];
             let (c_out, k, batch) = (lref.c_out, lref.k, fwd.batch);
-            let a_in = &fwd.acts[l];
             let lw = &fwd.weights[l];
 
-            // bias + weight gradients
-            let mut g_b = vec![0.0f32; c_out];
-            let mut g_w = vec![0.0f32; c_out * k];
-            for r in 0..batch {
-                let dzr = &d_act[r * c_out..(r + 1) * c_out];
-                let ar = &a_in[r * k..(r + 1) * k];
-                for c in 0..c_out {
-                    let g = dzr[c];
-                    if g != 0.0 {
-                        g_b[c] += g;
-                        let row = &mut g_w[c * k..(c + 1) * k];
-                        for (ri, ai) in row.iter_mut().zip(ar) {
-                            *ri += g * ai;
-                        }
-                    }
-                }
-            }
-
-            // input gradient (before this layer's weights move)
-            let d_a_in = if l > 0 {
-                let mut d_in = vec![0.0f32; batch * k];
-                for r in 0..batch {
-                    let dzr = &d_act[r * c_out..(r + 1) * c_out];
-                    let dr = &mut d_in[r * k..(r + 1) * k];
-                    for c in 0..c_out {
-                        let g = dzr[c];
-                        if g != 0.0 {
-                            let wr = &lw.wq[c * k..(c + 1) * k];
-                            for (di, wi) in dr.iter_mut().zip(wr) {
-                                *di += g * wi;
+            // bias + weight gradients (wrt the *quantized* weights)
+            ws.g_b.clear();
+            ws.g_b.resize(c_out, 0.0);
+            ws.g_w.clear();
+            ws.g_w.resize(c_out * k, 0.0);
+            match self.path {
+                ComputePath::Scalar => {
+                    let a_in = &ws.acts[l];
+                    for r in 0..batch {
+                        let dzr = &ws.d_act[r * c_out..(r + 1) * c_out];
+                        let ar = &a_in[r * k..(r + 1) * k];
+                        for c in 0..c_out {
+                            let g = dzr[c];
+                            if g != 0.0 {
+                                ws.g_b[c] += g;
+                                let row = &mut ws.g_w[c * k..(c + 1) * k];
+                                for (ri, ai) in row.iter_mut().zip(ar) {
+                                    *ri += g * ai;
+                                }
                             }
                         }
                     }
                 }
-                Some(d_in)
-            } else {
-                None
-            };
+                ComputePath::Blocked => linalg::grad_reduce(
+                    &ws.d_act,
+                    &ws.acts[l],
+                    batch,
+                    c_out,
+                    k,
+                    self.workers(batch, c_out * k),
+                    &mut ws.g_w,
+                    &mut ws.g_b,
+                    &mut ws.grad_scratch,
+                ),
+            }
+
+            // input gradient (before this layer's weights move)
+            let has_d_prev = l > 0;
+            if has_d_prev {
+                ws.d_prev.clear();
+                ws.d_prev.resize(batch * k, 0.0);
+                match self.path {
+                    ComputePath::Scalar => {
+                        for r in 0..batch {
+                            let dzr = &ws.d_act[r * c_out..(r + 1) * c_out];
+                            let dr = &mut ws.d_prev[r * k..(r + 1) * k];
+                            for c in 0..c_out {
+                                let g = dzr[c];
+                                if g != 0.0 {
+                                    let wr = &lw.wq[c * k..(c + 1) * k];
+                                    for (di, wi) in dr.iter_mut().zip(wr) {
+                                        *di += g * wi;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    ComputePath::Blocked => {
+                        // NN pack: W as a [K = c_out, N = k] operand
+                        ws.grad_pack.pack_nn(&lw.wq, c_out, k);
+                        linalg::matmul_par(
+                            &ws.grad_pack,
+                            &ws.d_act,
+                            batch,
+                            &mut ws.d_prev,
+                            self.workers(batch, c_out * k),
+                        );
+                    }
+                }
+            }
 
             // route dL/dwq through the weight quantizer (STE)
-            let mut g_v = vec![0.0f32; c_out * k];
-            let mut g_d = vec![0.0f32; c_out];
-            let mut g_t = vec![0.0f32; c_out];
+            ws.g_v.clear();
+            ws.g_v.resize(c_out * k, 0.0);
+            ws.g_d.clear();
+            ws.g_d.resize(c_out, 0.0);
+            ws.g_t.clear();
+            ws.g_t.resize(c_out, 0.0);
             match alg {
-                "float" => g_v.copy_from_slice(&g_w),
+                "float" => ws.g_v.copy_from_slice(&ws.g_w),
                 "qat" => {
                     let hi = 2f32.powi(lref.m as i32 - 1) - 1.0;
                     let lo = -(2f32.powi(lref.m as i32 - 1));
@@ -528,11 +685,11 @@ impl TrainBackend for NativeBackend {
                         let sc = lw.s[c];
                         for (i, &x) in v.row(c).iter().enumerate() {
                             let u = (x / sc).round();
-                            let gi = g_w[c * k + i];
+                            let gi = ws.g_w[c * k + i];
                             if u < lo || u > hi {
-                                g_d[c] += gi * u.clamp(lo, hi) * sc * LN2;
+                                ws.g_d[c] += gi * u.clamp(lo, hi) * sc * LN2;
                             } else {
-                                g_v[c * k + i] = gi;
+                                ws.g_v[c * k + i] = gi;
                             }
                         }
                     }
@@ -552,20 +709,20 @@ impl TrainBackend for NativeBackend {
                             lref.n_in,
                             lref.p,
                             lref.x_signed,
-                            &g_w[c * k..(c + 1) * k],
-                            &mut g_v[c * k..(c + 1) * k],
+                            &ws.g_w[c * k..(c + 1) * k],
+                            &mut ws.g_v[c * k..(c + 1) * k],
                         );
-                        g_d[c] = gd;
-                        g_t[c] = gt;
+                        ws.g_d[c] = gd;
+                        ws.g_t[c] = gt;
                     }
                 }
             }
             if wd > 0.0 {
-                for (gi, vi) in g_v.iter_mut().zip(state.leaves[lref.v].data()) {
+                for (gi, vi) in ws.g_v.iter_mut().zip(state.leaves[lref.v].data()) {
                     *gi += wd * vi;
                 }
             }
-            for g in g_d.iter_mut().chain(g_t.iter_mut()) {
+            for g in ws.g_d.iter_mut().chain(ws.g_t.iter_mut()) {
                 *g = g.clamp(-QPARAM_GRAD_CLIP, QPARAM_GRAD_CLIP);
             }
 
@@ -576,7 +733,7 @@ impl TrainBackend for NativeBackend {
                 &mut state.leaves,
                 lref.v,
                 &format!("{qname}/v"),
-                &g_v,
+                &ws.g_v,
                 lr,
                 step,
             )?;
@@ -585,7 +742,7 @@ impl TrainBackend for NativeBackend {
                 &mut state.leaves,
                 lref.d,
                 &format!("{qname}/d"),
-                &g_d,
+                &ws.g_d,
                 qlr,
                 step,
             )?;
@@ -594,7 +751,7 @@ impl TrainBackend for NativeBackend {
                 &mut state.leaves,
                 lref.t,
                 &format!("{qname}/t"),
-                &g_t,
+                &ws.g_t,
                 qlr,
                 step,
             )?;
@@ -603,22 +760,22 @@ impl TrainBackend for NativeBackend {
                 &mut state.leaves,
                 lref.b,
                 &format!("{qname}/b"),
-                &g_b,
+                &ws.g_b,
                 lr,
                 step,
             )?;
 
             // through the hidden activation into the previous layer: the
-            // STE gate is the ReLU mask (see Forward::zs — with dynamic
+            // STE gate is the ReLU mask (see the forward doc — with dynamic
             // scaling the upper rail never clips)
-            if let Some(mut d_prev) = d_a_in {
-                let z_prev = &fwd.zs[l - 1];
-                for (di, zi) in d_prev.iter_mut().zip(z_prev) {
+            if has_d_prev {
+                let z_prev = &ws.zs[l - 1];
+                for (di, zi) in ws.d_prev.iter_mut().zip(z_prev) {
                     if *zi <= 0.0 {
                         *di = 0.0;
                     }
                 }
-                d_act = d_prev;
+                std::mem::swap(&mut ws.d_act, &mut ws.d_prev);
             }
         }
         Ok(loss)
@@ -633,9 +790,11 @@ impl TrainBackend for NativeBackend {
         bits: (u32, u32, u32),
     ) -> Result<Tensor> {
         let layers = layer_refs(manifest, bits)?;
-        let fwd = self.forward(manifest, &layers, alg, &state.leaves, x)?;
+        let mut ws_guard = self.ws.lock().unwrap_or_else(|p| p.into_inner());
+        let ws = &mut *ws_guard;
+        let fwd = self.forward(manifest, &layers, alg, &state.leaves, x, ws)?;
         let classes = layers[layers.len() - 1].c_out;
-        Ok(Tensor::new(vec![fwd.batch, classes], fwd.zs[layers.len() - 1].clone()))
+        Ok(Tensor::new(vec![fwd.batch, classes], ws.zs[layers.len() - 1].clone()))
     }
 
     fn export(
@@ -750,6 +909,45 @@ mod tests {
         assert_eq!(a.data(), b.data(), "inference must be deterministic");
         let tight = be.infer(&manifest, "a2q", &state, &x, (8, 1, 6)).unwrap();
         assert_ne!(a.data(), tight.data(), "P must influence the a2q forward");
+    }
+
+    #[test]
+    fn blocked_infer_tracks_the_scalar_reference() {
+        let scalar = backend().with_compute(ComputePath::Scalar);
+        let blocked = backend();
+        let manifest = scalar.manifest("mlp3").unwrap();
+        let (x, _) = batch(manifest.batch_size);
+        let state = scalar.init(&manifest, 11.0).unwrap();
+        let a = scalar.infer(&manifest, "a2q", &state, &x, (4, 4, 14)).unwrap();
+        let b = blocked.infer(&manifest, "a2q", &state, &x, (4, 4, 14)).unwrap();
+        assert_eq!(a.shape(), b.shape());
+        for (s, bl) in a.data().iter().zip(b.data()) {
+            let tol = 1e-4 * (1.0 + s.abs());
+            assert!((s - bl).abs() <= tol, "scalar {s} vs blocked {bl}");
+        }
+    }
+
+    #[test]
+    fn blocked_train_step_is_thread_count_invariant() {
+        let manifest = backend().manifest("mlp3").unwrap();
+        let (x, y) = batch(manifest.batch_size);
+        let run = |threads: usize| {
+            let be = backend().with_threads(threads);
+            let mut state = be.init(&manifest, 2.0).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(
+                    be.train_step(&manifest, "a2q", &mut state, &x, &y, (4, 4, 14), 0.05).unwrap(),
+                );
+            }
+            (losses, state)
+        };
+        let (l1, s1) = run(1);
+        let (l3, s3) = run(3);
+        assert_eq!(l1, l3, "losses must be bit-identical across thread counts");
+        for (a, b) in s1.leaves.iter().zip(&s3.leaves) {
+            assert_eq!(a.data(), b.data(), "leaves must be bit-identical across thread counts");
+        }
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //! default (no-XLA) build can train without `make artifacts`.
 //!
 //! Every native manifest follows the artifact conventions exactly — state
-//! leaves at `params/<layer>/{v,d,t,b}` with SGD momentum slots at
-//! `mom/<layer>/<leaf>` and a trailing `step` scalar, `params` as the
+//! leaves at `params/<layer>/{v,d,t,b}` with optimizer slots at
+//! `mom/<layer>/<leaf>` (SGD momentum) or `m/`+`v/<layer>/<leaf>` (Adam
+//! moments) and a trailing `step` scalar, `params` as the
 //! `params/`-stripped subsequence, and three export outputs per layer — so
 //! the coordinator (recalibration, checkpointing, audit) treats native and
 //! artifact-backed models identically.
@@ -16,7 +17,7 @@ use super::super::artifact::{
 
 /// Models the native backend can synthesize without artifacts.
 pub fn native_models() -> &'static [&'static str] {
-    &["mlp", "mlp3"]
+    &["mlp", "mlp3", "mlp3_adam"]
 }
 
 /// Build the native manifest for a registry model, or `None` if unknown.
@@ -25,16 +26,28 @@ pub fn native_models() -> &'static [&'static str] {
 ///   binary (1-bit) synth-MNIST pixels.
 /// * `mlp3` — a 3-layer stack 784 -> 64 -> 16 -> 2 with N-bit hidden
 ///   boundaries, exercising inter-layer requantization end to end.
+/// * `mlp3_adam` — the `mlp3` geometry trained with Adam (`m/`, `v/`
+///   moment slots in the state layout instead of `mom/`), exercising the
+///   native backend's Adam update path.
 pub fn native_manifest(model: &str) -> Option<ModelManifest> {
-    let (widths, names, lr): (&[usize], &[&str], f64) = match model {
-        "mlp" => (&[784, 2], &["fc"], 0.1),
-        "mlp3" => (&[784, 64, 16, 2], &["fc0", "fc1", "fc2"], 0.1),
+    let (widths, names, lr, optimizer): (&[usize], &[&str], f64, &str) = match model {
+        "mlp" => (&[784, 2], &["fc"], 0.1, "sgd"),
+        "mlp3" => (&[784, 64, 16, 2], &["fc0", "fc1", "fc2"], 0.1, "sgd"),
+        // Adam's effective step is ~lr, so it wants a much smaller one than
+        // the momentum-SGD models.
+        "mlp3_adam" => (&[784, 64, 16, 2], &["fc0", "fc1", "fc2"], 0.005, "adam"),
         _ => return None,
     };
-    Some(build_mlp_manifest(model, widths, names, lr))
+    Some(build_mlp_manifest(model, widths, names, lr, optimizer))
 }
 
-fn build_mlp_manifest(model: &str, widths: &[usize], names: &[&str], lr: f64) -> ModelManifest {
+fn build_mlp_manifest(
+    model: &str,
+    widths: &[usize],
+    names: &[&str],
+    lr: f64,
+    optimizer: &str,
+) -> ModelManifest {
     assert_eq!(widths.len(), names.len() + 1, "one name per layer");
     let batch_size = 32usize;
     let mut qlayers = Vec::new();
@@ -92,9 +105,13 @@ fn build_mlp_manifest(model: &str, widths: &[usize], names: &[&str], lr: f64) ->
             shape: vec![c_out],
         });
     }
-    // optimizer slots mirror the param subtree, then the step counter
-    for p in params.clone() {
-        state.push(StateEntry { path: format!("mom/{}", p.path), shape: p.shape });
+    // optimizer slots mirror the param subtree (momentum for SGD, first and
+    // second moments for Adam), then the step counter
+    let slot_prefixes: &[&str] = if optimizer == "adam" { &["m", "v"] } else { &["mom"] };
+    for prefix in slot_prefixes {
+        for p in params.clone() {
+            state.push(StateEntry { path: format!("{prefix}/{}", p.path), shape: p.shape });
+        }
     }
     state.push(StateEntry { path: "step".into(), shape: vec![] });
 
@@ -121,7 +138,7 @@ fn build_mlp_manifest(model: &str, widths: &[usize], names: &[&str], lr: f64) ->
         task: "classify".into(),
         n_classes: *widths.last().unwrap(),
         sr_factor: 1,
-        optimizer: "sgd".into(),
+        optimizer: optimizer.into(),
         lr,
         weight_decay: 0.0,
         largest_k: widths[..widths.len() - 1].iter().copied().max().unwrap(),
@@ -165,6 +182,22 @@ mod tests {
             }
         }
         assert!(native_manifest("resnet").is_none());
+    }
+
+    #[test]
+    fn mlp3_adam_carries_adam_moment_slots() {
+        let m = native_manifest("mlp3_adam").unwrap();
+        assert_eq!(m.optimizer, "adam");
+        for leaf in ["v", "d", "t", "b"] {
+            assert!(m.state.iter().any(|e| e.path == format!("m/fc0/{leaf}")), "m/fc0/{leaf}");
+            assert!(m.state.iter().any(|e| e.path == format!("v/fc0/{leaf}")), "v/fc0/{leaf}");
+        }
+        assert!(m.state.iter().all(|e| !e.path.starts_with("mom/")), "no SGD slots under adam");
+        assert_eq!(m.qlayers.len(), 3);
+        // the SGD models keep the momentum layout
+        let sgd = native_manifest("mlp3").unwrap();
+        assert!(sgd.state.iter().any(|e| e.path == "mom/fc0/v"));
+        assert!(sgd.state.iter().all(|e| !e.path.starts_with("m/")));
     }
 
     #[test]

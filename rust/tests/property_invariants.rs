@@ -710,3 +710,72 @@ fn prop_a2q_plus_capped_and_norm_monotone() {
         );
     }
 }
+
+/// The blocked+threaded native train path tracks the scalar reference
+/// within tight f32 tolerance, and is *bit-identical* across thread counts
+/// {1, 2, 7} — forward/input-grad rows never reassociate a dot product,
+/// and the weight-grad reduction sums fixed-size blocks in block order.
+#[test]
+fn prop_native_blocked_train_matches_scalar_and_is_thread_invariant() {
+    use a2q::datasets::{self, Split};
+    use a2q::runtime::{ComputePath, NativeBackend, TrainBackend};
+
+    for (model, bits, alg) in [
+        ("mlp3", (4u32, 4u32, 14u32), "a2q"),
+        ("mlp3_adam", (4u32, 4u32, 14u32), "a2q_plus"),
+        ("mlp", (8u32, 1u32, 16u32), "qat"),
+    ] {
+        let run = |be: NativeBackend| {
+            let manifest = be.manifest(model).unwrap();
+            let ds = datasets::by_name("synth_mnist", 256, 64, 0).unwrap();
+            let idx: Vec<usize> = (0..manifest.batch_size).collect();
+            let b = ds.gather(Split::Train, &idx);
+            let mut state = be.init(&manifest, 9.0).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..4 {
+                losses.push(
+                    be.train_step(&manifest, alg, &mut state, &b.x, &b.y, bits, 0.05).unwrap(),
+                );
+            }
+            (losses, state)
+        };
+
+        let (loss_ref, state_ref) =
+            run(NativeBackend::new("artifacts").with_compute(ComputePath::Scalar));
+        let (loss_t1, state_t1) = run(NativeBackend::new("artifacts").with_threads(1));
+
+        // scalar vs blocked: different summation order, same training run.
+        // Tolerances are loose enough to absorb a quantization-grid code
+        // flip from an ulp-level pre-activation difference, tight enough
+        // to catch any transposed/garbled GEMM immediately.
+        for ((i, a), b) in loss_ref.iter().enumerate().zip(&loss_t1) {
+            assert!(
+                (a - b).abs() <= 0.05 * (1.0 + a.abs()),
+                "{model}: loss[{i}] scalar {a} vs blocked {b}"
+            );
+        }
+        for (i, (a, b)) in state_ref.leaves.iter().zip(&state_t1.leaves).enumerate() {
+            let max_ref = a.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let tol = 0.05 * (1.0 + max_ref);
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!(
+                    (x - y).abs() <= tol,
+                    "{model}: leaf {i} scalar {x} vs blocked {y} (tol {tol})"
+                );
+            }
+        }
+
+        // blocked path: bit-identical at every thread count
+        for threads in [2usize, 7] {
+            let (loss_t, state_t) = run(NativeBackend::new("artifacts").with_threads(threads));
+            assert_eq!(loss_t1, loss_t, "{model}: losses differ at {threads} threads");
+            for (i, (a, b)) in state_t1.leaves.iter().zip(&state_t.leaves).enumerate() {
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{model}: leaf {i} differs between 1 and {threads} threads"
+                );
+            }
+        }
+    }
+}

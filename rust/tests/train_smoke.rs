@@ -1,13 +1,14 @@
 //! Smoke-scale native-training perf + e2e run wired into `cargo test`:
 //! exercises the default build's full train -> export -> audit pipeline on
-//! a tiny config and journals debug-profile `native_smoke/trainstep_*`
-//! rows into BENCH_accsim.json (asserted by CI, mirroring the accsim smoke
-//! entries). Lives in its own test binary so its journal read-modify-write
-//! cannot race the other smoke tests (cargo runs test binaries
-//! sequentially).
+//! a tiny config (riding the default blocked GEMM + threaded compute path)
+//! and journals debug-profile `native_smoke/trainstep_*` rows into
+//! BENCH_accsim.json (asserted by CI, mirroring the accsim smoke entries).
+//! Lives in its own test binary so its journal read-modify-write cannot
+//! race the other smoke tests (cargo runs test binaries sequentially).
 //!
-//! The authoritative release numbers come from
-//! `cargo bench --bench train_step`.
+//! The authoritative release numbers — including the scalar-reference vs
+//! blocked vs batch-parallel comparison — come from
+//! `cargo bench --bench train_step` (EXPERIMENTS.md §Perf-Train).
 
 use std::time::Instant;
 
