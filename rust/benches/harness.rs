@@ -75,10 +75,23 @@ pub fn quick() -> bool {
 /// EXPERIMENTS.md block renderers all go through.
 #[allow(dead_code)]
 pub fn to_record(r: &BenchResult, macs_per_iter: Option<u64>) -> a2q::perf::BenchRecord {
+    to_record_sparse(r, macs_per_iter, None)
+}
+
+/// Like [`to_record`] but stamps the measured weight sparsity of the bench's
+/// layer — kernel-dispatch benches use this so the journal shows what
+/// density each scalar/SIMD/sparse row ran against.
+#[allow(dead_code)]
+pub fn to_record_sparse(
+    r: &BenchResult,
+    macs_per_iter: Option<u64>,
+    sparsity: Option<f64>,
+) -> a2q::perf::BenchRecord {
     a2q::perf::BenchRecord {
         name: r.name.clone(),
         ns_per_iter: r.median.as_nanos() as f64,
         mac_per_s: macs_per_iter.map(|m| throughput(r, m)),
+        sparsity,
     }
 }
 
@@ -100,6 +113,16 @@ impl Journal {
     /// Record a result; pass the per-iteration MAC count for MAC/s.
     pub fn add(&mut self, r: &BenchResult, macs_per_iter: Option<u64>) {
         self.records.push(to_record(r, macs_per_iter));
+    }
+
+    /// Record a result with the layer's measured weight sparsity attached.
+    pub fn add_sparse(
+        &mut self,
+        r: &BenchResult,
+        macs_per_iter: Option<u64>,
+        sparsity: Option<f64>,
+    ) {
+        self.records.push(to_record_sparse(r, macs_per_iter, sparsity));
     }
 
     /// Merge into BENCH_accsim.json; prints where the journal went.

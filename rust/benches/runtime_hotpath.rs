@@ -141,6 +141,37 @@ fn main() {
     );
     journal.flush();
 
+    // --- kernel dispatch on a tightly-constrained (sparse) layer -------------
+    // P = 14 with 8-bit inputs squeezes each row's l1 budget to ≈32 codes,
+    // so the A2Q quantizer leaves most weights at zero — the regime where
+    // the sparse packed panels should beat the dense blocked kernel. Same
+    // plan run under each forced path, threads pinned to 1 so the journal
+    // compares kernels, not scheduling.
+    let tlayer = psweep_constrained_layer(c_out, kk, 14, 8, 7);
+    let tsparsity = tlayer.sparsity();
+    assert!(tsparsity >= 0.70, "tight fixture must be mostly zeros, got {tsparsity:.3}");
+    let tmodes: Vec<AccMode> = (14..=38).map(|p| AccMode::Wrap { p_bits: p }).collect();
+    let tmacs = (tmodes.len() * batch * c_out * kk) as u64;
+    for (label, path) in [
+        ("scalar", a2q::accsim::KernelPath::Scalar),
+        ("simd", a2q::accsim::KernelPath::Simd),
+        ("sparse", a2q::accsim::KernelPath::SparseSimd),
+    ] {
+        let plan = a2q::accsim::LayerPlan::new_with_path(&tlayer, &tmodes, Some(path));
+        let rt = harness::bench(&format!("accsim/kpath_tight_{label}"), 1, iters, || {
+            plan.execute_threads(&xm, 1.0, 1)
+                .iter()
+                .map(|s| s.stats.overflow_events)
+                .sum::<u64>()
+        });
+        println!(
+            "  ({:.0} M MAC/s, weight sparsity {tsparsity:.3})",
+            harness::throughput(&rt, tmacs) / 1e6
+        );
+        journal.add_sparse(&rt, Some(tmacs), Some(tsparsity));
+    }
+    journal.flush();
+
     // --- dataset batch materialization --------------------------------------
     let ds = datasets::by_name("synth_cifar", 2048, 512, 0).unwrap();
     let mut drng = Rng::new(2);

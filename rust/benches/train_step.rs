@@ -19,6 +19,7 @@
 mod harness;
 
 use a2q::datasets::{self, Split};
+use a2q::linalg::KernelPath;
 use a2q::perf::TrainRow;
 use a2q::runtime::{ComputePath, NativeBackend, TrainBackend};
 
@@ -79,6 +80,72 @@ fn main() {
             );
         }
         groups.push((shape, rows));
+    }
+
+    // --- mlp3 under each forced GEMM kernel path -----------------------------
+    // Same step as the blocked row above, threads pinned to 1 and the
+    // kernel dispatch forced, so the three rows isolate the microkernel
+    // (scalar vs SIMD vs sparse panels). The journal rows carry the
+    // trained model's measured weight sparsity — the A2Q l1 budget is what
+    // makes the sparse path worth having.
+    {
+        let (model, bits) = ("mlp3", (4u32, 4u32, 14u32));
+        let manifest = NativeBackend::new("artifacts").manifest(model).expect("manifest");
+        let bs = manifest.batch_size;
+        let ds = datasets::by_name("synth_mnist", 512, 64, 0).unwrap();
+        let idx: Vec<usize> = (0..bs).collect();
+        let batch = ds.gather(Split::Train, &idx);
+        let macs_fwd: usize = manifest.qlayers.iter().map(|q| q.c_out * q.k).sum();
+        let macs = (steps_per_iter * bs * macs_fwd * 3) as u64;
+
+        // measure the sparsity the quantizer settles into after a few steps
+        let probe = NativeBackend::new("artifacts").with_threads(1);
+        let mut pstate = probe.init(&manifest, 0.0).expect("init");
+        for _ in 0..5 {
+            probe
+                .train_step(&manifest, "a2q", &mut pstate, &batch.x, &batch.y, bits, 0.05)
+                .expect("probe step");
+        }
+        let (mut zeros, mut total) = (0.0f64, 0.0f64);
+        for layer in probe.export(&manifest, "a2q", &pstate, bits).expect("export") {
+            let q = layer.to_qtensor();
+            let n = (q.c_out * q.k) as f64;
+            zeros += q.sparsity() * n;
+            total += n;
+        }
+        let sparsity = if total > 0.0 { zeros / total } else { 0.0 };
+
+        let mut rows = Vec::new();
+        for (label, path) in [
+            ("kscalar", KernelPath::Scalar),
+            ("ksimd", KernelPath::Simd),
+            ("ksparse", KernelPath::SparseSimd),
+        ] {
+            let backend = NativeBackend::new("artifacts").with_threads(1).with_kernel(path);
+            let mut state = backend.init(&manifest, 0.0).expect("init");
+            let warm = backend
+                .train_step(&manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
+                .expect("warm step");
+            assert!(warm.is_finite());
+            let name = format!("native/trainstep_{model}_{label}");
+            let r = harness::bench(&name, 1, iters, || {
+                let mut last = 0.0f32;
+                for _ in 0..steps_per_iter {
+                    last = backend
+                        .train_step(&manifest, "a2q", &mut state, &batch.x, &batch.y, bits, 0.05)
+                        .expect("train step");
+                }
+                last
+            });
+            let rows_per_s = (steps_per_iter * bs) as f64 / r.median.as_secs_f64().max(1e-12);
+            println!(
+                "  ({rows_per_s:.0} rows/s, {:.1} M MAC/s incl. backward, weight sparsity {sparsity:.3})",
+                harness::throughput(&r, macs) / 1e6
+            );
+            journal.add_sparse(&r, Some(macs), Some(sparsity));
+            rows.push(TrainRow { name, ns_per_iter: r.median.as_nanos() as f64, rows_per_s });
+        }
+        groups.push(("mlp3 forced kernel @ M4N4P14, 1 thread", rows));
     }
 
     journal.flush();

@@ -73,9 +73,27 @@ use super::gemm::PackedWeights;
 use super::intmat::{abs_max_of, IntMatrix};
 use super::matmul::MatmulStats;
 use super::stats::OverflowStats;
+use crate::linalg::KernelPath;
 use crate::model::QNetwork;
 use crate::quant::QTensor;
 use crate::tensor::Tensor;
+
+/// The kernel-dispatch decision made for one layer at plan time, exposed so
+/// dispatch is observable instead of silent: which [`KernelPath`] the
+/// packed GEMM runs, the layer's measured weight sparsity (the input to the
+/// density heuristic, and the quantity the sparse path converts into
+/// throughput), and whether packing fell back to the unpacked i64 wide-dot
+/// path (codes beyond i32).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelChoice {
+    /// Path the safe-span GEMM dispatches through.
+    pub path: KernelPath,
+    /// Zero fraction of the layer's weight codes (`QTensor::sparsity`).
+    pub sparsity: f64,
+    /// True when `PackedWeights::pack` rejected the codes and safe channels
+    /// run unpacked wide dots instead of the GEMM.
+    pub pack_fallback: bool,
+}
 
 /// One per-MAC simulated register of the fused plan.
 #[derive(Clone, Copy, Debug)]
@@ -316,18 +334,34 @@ struct LayerKernel<'w> {
     /// some code exceeds i32; the engine then falls back to unpacked wide
     /// dots for safe channels).
     packed: Option<PackedWeights>,
+    /// The plan-time dispatch decision, for observability.
+    choice: KernelChoice,
 }
 
 impl<'w> LayerKernel<'w> {
     fn new(w: &'w QTensor) -> LayerKernel<'w> {
+        LayerKernel::new_with(w, None)
+    }
+
+    /// Build the kernel context, optionally pinning the GEMM dispatch
+    /// (`None` = auto: `A2Q_KERNEL` override, then density heuristic).
+    fn new_with(w: &'w QTensor, forced: Option<KernelPath>) -> LayerKernel<'w> {
         // One source of truth for the per-channel norm: QTensor::row_l1
         // (Eq. 13), widened to i128 for the overflow-proof bound products.
         let row_l1: Vec<i128> = w.row_l1().into_iter().map(|v| v as i128).collect();
         let mut order: Vec<usize> = (0..w.c_out).collect();
         order.sort_by_key(|&c| row_l1[c]);
         let l1_sorted: Vec<i128> = order.iter().map(|&c| row_l1[c]).collect();
-        let packed = PackedWeights::pack(w, &order);
-        LayerKernel { w, order, l1_sorted, row_l1, packed }
+        let packed = match forced {
+            Some(path) => PackedWeights::pack_with(w, &order, path),
+            None => PackedWeights::pack(w, &order),
+        };
+        let choice = KernelChoice {
+            path: packed.as_ref().map(|p| p.path()).unwrap_or(KernelPath::Scalar),
+            sparsity: w.sparsity(),
+            pack_fallback: packed.is_none(),
+        };
+        LayerKernel { w, order, l1_sorted, row_l1, packed, choice }
     }
 
     /// Length of the provably-safe prefix of `order` for a row with
@@ -608,11 +642,27 @@ pub struct LayerPlan<'w> {
 
 impl<'w> LayerPlan<'w> {
     pub fn new(w: &'w QTensor, modes: &[AccMode]) -> LayerPlan<'w> {
-        LayerPlan { kern: LayerKernel::new(w), plan: ModePlan::new(modes) }
+        LayerPlan::new_with_path(w, modes, None)
+    }
+
+    /// [`LayerPlan::new`] with the GEMM kernel dispatch pinned (`None` =
+    /// auto). Benches and the kernel-path property tests use this to force
+    /// each path through the same plan.
+    pub fn new_with_path(
+        w: &'w QTensor,
+        modes: &[AccMode],
+        path: Option<KernelPath>,
+    ) -> LayerPlan<'w> {
+        LayerPlan { kern: LayerKernel::new_with(w, path), plan: ModePlan::new(modes) }
     }
 
     pub fn modes(&self) -> &[AccMode] {
         self.plan.modes()
+    }
+
+    /// The plan-time kernel dispatch decision for this layer.
+    pub fn kernel_choice(&self) -> KernelChoice {
+        self.kern.choice
     }
 
     /// Execute over a batch with an explicit worker count (tests use this to
@@ -830,12 +880,28 @@ pub struct NetworkPlan<'n> {
 
 impl<'n> NetworkPlan<'n> {
     pub fn new(net: &'n QNetwork, modes: &[AccMode]) -> NetworkPlan<'n> {
-        let kernels = net.layers.iter().map(|l| LayerKernel::new(&l.weights)).collect();
+        NetworkPlan::new_with_path(net, modes, None)
+    }
+
+    /// [`NetworkPlan::new`] with every layer's GEMM kernel dispatch pinned
+    /// (`None` = auto per layer).
+    pub fn new_with_path(
+        net: &'n QNetwork,
+        modes: &[AccMode],
+        path: Option<KernelPath>,
+    ) -> NetworkPlan<'n> {
+        let kernels =
+            net.layers.iter().map(|l| LayerKernel::new_with(&l.weights, path)).collect();
         NetworkPlan { net, modes: modes.to_vec(), kernels }
     }
 
     pub fn modes(&self) -> &[AccMode] {
         &self.modes
+    }
+
+    /// Per-layer plan-time kernel dispatch decisions, in layer order.
+    pub fn kernel_choices(&self) -> Vec<KernelChoice> {
+        self.kernels.iter().map(|k| k.choice).collect()
     }
 
     pub fn depth(&self) -> usize {
@@ -1306,6 +1372,72 @@ mod tests {
         for st in qlinear_forward_multi(&x, 1.0, &w, &modes) {
             assert_eq!(st.stats.overflow_events, 0);
             assert_eq!(st.out.data(), st.out_wide.data());
+        }
+    }
+
+    #[test]
+    fn kernel_choice_reports_forced_path_sparsity_and_pack_fallback() {
+        let w = toy_layer(); // dense (no zero codes)
+        let modes = [AccMode::Wide, AccMode::Wrap { p_bits: 16 }];
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            let plan = LayerPlan::new_with_path(&w, &modes, Some(path));
+            let c = plan.kernel_choice();
+            assert_eq!(c.path, path);
+            assert_eq!(c.sparsity, w.sparsity());
+            assert!(!c.pack_fallback);
+        }
+        // Codes beyond i32: pack falls back, and the choice says so.
+        let big = QTensor {
+            codes: vec![1, i32::MAX as i64 + 1],
+            scales: vec![1.0],
+            bias: vec![0.0],
+            c_out: 1,
+            k: 2,
+        };
+        let plan = LayerPlan::new(&big, &modes);
+        let c = plan.kernel_choice();
+        assert!(c.pack_fallback);
+        assert_eq!(c.path, KernelPath::Scalar);
+        assert_eq!(c.sparsity, 0.0);
+    }
+
+    #[test]
+    fn layer_plan_forced_kernel_paths_are_bit_exact_and_thread_invariant() {
+        let mut rng = Rng::new(0xA2B);
+        // ~97% sparse constrained layer plus the dense toy layer: both must
+        // agree with the scalar-forced plan on every path, bitwise,
+        // including all stats, at several thread counts.
+        let tight = crate::testutil::psweep_constrained_layer(16, 96, 14, 8, 3);
+        assert!(tight.sparsity() > 0.5, "fixture should be sparse");
+        let dense = toy_layer();
+        for w in [&tight, &dense] {
+            let x = IntMatrix::from_flat(
+                5,
+                w.k,
+                (0..5 * w.k).map(|_| rng.below(256) as i64).collect(),
+            );
+            let modes: Vec<AccMode> = (8..=24).map(|p| AccMode::Wrap { p_bits: p }).collect();
+            let base = LayerPlan::new_with_path(w, &modes, Some(KernelPath::Scalar))
+                .execute_threads(&x, 1.0, 1);
+            for path in [KernelPath::Simd, KernelPath::SparseSimd] {
+                let plan = LayerPlan::new_with_path(w, &modes, Some(path));
+                for threads in [1, 2, 7] {
+                    let multi = plan.execute_threads(&x, 1.0, threads);
+                    for (mi, mode) in modes.iter().enumerate() {
+                        assert_eq!(
+                            multi[mi].out.data(),
+                            base[mi].out.data(),
+                            "{path:?} {mode:?} t={threads}"
+                        );
+                        assert_eq!(multi[mi].out_wide.data(), base[mi].out_wide.data());
+                        assert_eq!(
+                            multi[mi].stats.overflow_events,
+                            base[mi].stats.overflow_events
+                        );
+                        assert_eq!(multi[mi].stats.abs_err_sum, base[mi].stats.abs_err_sum);
+                    }
+                }
+            }
         }
     }
 }

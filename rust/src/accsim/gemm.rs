@@ -16,24 +16,45 @@
 //!   quartering/halving memory traffic versus the `i64` rows the register
 //!   simulator walks. Packing returns `None` for codes beyond `i32` and the
 //!   engine falls back to unpacked wide dots.
-//! * **Microkernel** — [`PackedWeights::gemm_into`] drives an
-//!   [`MR`]`x`[`NR`] register tile: each panel is streamed once per row
-//!   block, every loaded `x` value feeds [`NR`] channel lanes and every
-//!   loaded weight feeds [`MR`] batch rows. The inner loop is plain
-//!   `i64 += i64 * widen(code)` arithmetic with no branches, so the
-//!   autovectorizer can unroll it; exact integer addition keeps the result
-//!   bit-identical to any other MAC order, which is what lets the engine's
-//!   bit-exactness property tests treat GEMM and scalar paths as one.
+//! * **Microkernel dispatch** — [`PackedWeights::gemm_into`] drives an
+//!   [`MR`]`x`[`NR`] register tile per panel, routed through the layer's
+//!   [`KernelPath`] (fixed at pack time: explicit force, then the
+//!   `A2Q_KERNEL` env override, then the weight-density heuristic):
+//!   - *Scalar* — the original branch-free `i64 += i64 * widen(code)`
+//!     blocked loop, kept as the portable fallback and property-test
+//!     reference;
+//!   - *Simd* — the explicit i16 pairwise-widening microkernel
+//!     ([`crate::linalg::kernel`]) when runtime detection finds AVX2/NEON,
+//!     the packed codes exclude `-32768` (so `madd` pair sums are exact in
+//!     i32), and every `x` narrows to ±32767 — otherwise the scalar tile
+//!     runs;
+//!   - *SparseSimd* — panels at or below the density threshold traverse a
+//!     compressed k-major nonzero list built at pack time (A2Q's L1 budget
+//!     makes constrained layers mostly zeros), dense panels keep the SIMD
+//!     tile.
 //!
 //! Accumulation stays in `i64` — identical to the wide reference register —
-//! so the GEMM output *is* the `AccMode::Wide` result for those channels.
+//! and every product is exact, so *all* paths are bit-identical to any
+//! other MAC order: the GEMM output *is* the `AccMode::Wide` result for
+//! those channels regardless of dispatch.
 
+use std::cell::RefCell;
+
+use crate::linalg::kernel::{self, build_sparse_panels, PanelKind, SparsePanels};
+use crate::linalg::{simd_available, KernelPath};
 use crate::quant::QTensor;
 
 // The MR×NR register tile is shared with the blocked *float* GEMM core in
 // `crate::linalg` (the native training backend's engine): one tiling
 // geometry, two element domains.
 pub use crate::linalg::{MR, NR};
+
+thread_local! {
+    /// Per-thread scratch for the i16-narrowed `x` operand of the SIMD
+    /// tile, so engine workers never contend and steady-state calls do not
+    /// re-allocate.
+    static X16: RefCell<Vec<i16>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Weight codes packed at the narrowest width that holds every code.
 enum Panels {
@@ -48,24 +69,52 @@ pub struct PackedWeights {
     n_ch: usize,
     /// MAC depth shared by every channel.
     k: usize,
+    /// Kernel path fixed at pack time.
+    path: KernelPath,
+    /// Nonzero fraction of the weight codes (1.0 - `QTensor::sparsity`).
+    density: f64,
+    /// Whether the i16 SIMD tile may run: every code fits i16 *and* no
+    /// code is -32768 (which could overflow the i32 `madd` pair sum).
+    i16_simd_ok: bool,
+    /// Compressed panels (populated only on the `SparseSimd` path), values
+    /// pre-widened to i64.
+    sparse: SparsePanels<i64>,
 }
 
 impl PackedWeights {
-    /// Pack rows of `w` in `order` (a permutation of `0..w.c_out`). Returns
-    /// `None` when some code exceeds `i32` — callers then keep the unpacked
-    /// `i64` path.
+    /// Pack rows of `w` in `order` (a permutation of `0..w.c_out`) with
+    /// auto kernel dispatch (see [`KernelPath::choose`]). Returns `None`
+    /// when some code exceeds `i32` — callers then keep the unpacked `i64`
+    /// path.
     pub fn pack(w: &QTensor, order: &[usize]) -> Option<PackedWeights> {
+        let density = 1.0 - w.sparsity();
+        PackedWeights::pack_with(w, order, KernelPath::choose(density))
+    }
+
+    /// [`PackedWeights::pack`] with the kernel path pinned explicitly
+    /// (plans and benches use this to force a specific dispatch).
+    pub fn pack_with(w: &QTensor, order: &[usize], path: KernelPath) -> Option<PackedWeights> {
         debug_assert_eq!(order.len(), w.c_out);
         let lo = w.codes.iter().copied().min().unwrap_or(0);
         let hi = w.codes.iter().copied().max().unwrap_or(0);
-        let panels = if lo >= i16::MIN as i64 && hi <= i16::MAX as i64 {
-            Panels::I16(pack_panels(w, order, |v| v as i16))
+        let (panels, i16_simd_ok) = if lo >= i16::MIN as i64 && hi <= i16::MAX as i64 {
+            (Panels::I16(pack_panels(w, order, |v| v as i16)), lo > i16::MIN as i64)
         } else if lo >= i32::MIN as i64 && hi <= i32::MAX as i64 {
-            Panels::I32(pack_panels(w, order, |v| v as i32))
+            (Panels::I32(pack_panels(w, order, |v| v as i32)), false)
         } else {
             return None;
         };
-        Some(PackedWeights { panels, n_ch: order.len(), k: w.k })
+        let (n_ch, k) = (order.len(), w.k);
+        let sparse = if path == KernelPath::SparseSimd {
+            match &panels {
+                Panels::I16(p) => widen_sparse(p, k, n_ch),
+                Panels::I32(p) => widen_sparse(p, k, n_ch),
+            }
+        } else {
+            SparsePanels::default()
+        };
+        let density = 1.0 - w.sparsity();
+        Some(PackedWeights { panels, n_ch, k, path, density, i16_simd_ok, sparse })
     }
 
     /// Number of packed channels.
@@ -73,18 +122,127 @@ impl PackedWeights {
         self.n_ch
     }
 
+    /// The kernel path fixed at pack time.
+    pub fn path(&self) -> KernelPath {
+        self.path
+    }
+
+    /// Nonzero fraction of the packed weight codes.
+    pub fn density(&self) -> f64 {
+        self.density
+    }
+
     /// Wide (i64) dot products of `rows` batch rows (`x`, flat row-major,
     /// `rows * k` long) against the packed-channel prefix `0..n_pref`,
     /// written to `out[ri * n_pref + ci]` (`ci` in packed order). Bit-exact
-    /// against summing `x[ri] . w[order[ci]]` in any order.
+    /// against summing `x[ri] . w[order[ci]]` in any order, on every
+    /// kernel path.
     pub fn gemm_into(&self, x: &[i64], rows: usize, n_pref: usize, out: &mut [i64]) {
         debug_assert!(n_pref <= self.n_ch);
         debug_assert_eq!(x.len(), rows * self.k);
         debug_assert_eq!(out.len(), rows * n_pref);
-        match &self.panels {
-            Panels::I16(p) => gemm_span(p, self.k, x, rows, n_pref, out),
-            Panels::I32(p) => gemm_span(p, self.k, x, rows, n_pref, out),
+        if rows == 0 || n_pref == 0 {
+            return;
         }
+        let want_simd = self.path != KernelPath::Scalar
+            && self.i16_simd_ok
+            && matches!(self.panels, Panels::I16(_))
+            && simd_available();
+        X16.with(|cell| {
+            let mut x16 = cell.borrow_mut();
+            let use_simd = want_simd && narrow_i16(x, &mut x16);
+            self.gemm_panels(x, &x16, use_simd, rows, n_pref, out);
+        });
+    }
+
+    /// The per-panel tile loop behind [`PackedWeights::gemm_into`], with
+    /// the narrowed operand and dispatch decision already resolved.
+    fn gemm_panels(
+        &self,
+        x: &[i64],
+        x16: &[i16],
+        use_simd: bool,
+        rows: usize,
+        n_pref: usize,
+        out: &mut [i64],
+    ) {
+        let k = self.k;
+        for pi in 0..n_pref.div_ceil(NR) {
+            let c0 = pi * NR;
+            let nc = NR.min(n_pref - c0);
+            let kind = self.sparse.kind(pi);
+            let mut r0 = 0;
+            while r0 < rows {
+                let mr = MR.min(rows - r0);
+                let mut acc = [0i64; MR * NR];
+                match kind {
+                    PanelKind::Sparse { start, end } => {
+                        for e in start..end {
+                            let kk = self.sparse.k_idx[e] as usize;
+                            let lane = self.sparse.lane[e] as usize;
+                            let wv = self.sparse.val[e];
+                            for mi in 0..mr {
+                                acc[mi * NR + lane] += x[(r0 + mi) * k + kk] * wv;
+                            }
+                        }
+                    }
+                    PanelKind::Dense => match &self.panels {
+                        Panels::I16(p) if use_simd => kernel::dense_tile_i16(
+                            &p[pi * k * NR..(pi + 1) * k * NR],
+                            k,
+                            x16,
+                            r0,
+                            mr,
+                            &mut acc,
+                        ),
+                        Panels::I16(p) => {
+                            scalar_tile(&p[pi * k * NR..(pi + 1) * k * NR], k, x, r0, mr, &mut acc)
+                        }
+                        Panels::I32(p) => {
+                            scalar_tile(&p[pi * k * NR..(pi + 1) * k * NR], k, x, r0, mr, &mut acc)
+                        }
+                    },
+                }
+                for mi in 0..mr {
+                    for j in 0..nc {
+                        out[(r0 + mi) * n_pref + c0 + j] = acc[mi * NR + j];
+                    }
+                }
+                r0 += mr;
+            }
+        }
+    }
+}
+
+/// Narrow the i64 `x` operand to the i16 SIMD range. Values outside
+/// ±32767 (including i16::MIN, excluded for the same `madd` pair-sum
+/// reason as the weights) reject the whole call back to the scalar tile.
+fn narrow_i16(x: &[i64], buf: &mut Vec<i16>) -> bool {
+    buf.clear();
+    buf.reserve(x.len());
+    for &v in x {
+        if !(-(i16::MAX as i64)..=i16::MAX as i64).contains(&v) {
+            return false;
+        }
+        buf.push(v as i16);
+    }
+    true
+}
+
+/// Build the compressed layout over packed panels and widen the stored
+/// values to i64 so the sparse traversal is element-type agnostic.
+fn widen_sparse<T: Copy + Default + PartialEq + Into<i64>>(
+    panels: &[T],
+    k: usize,
+    n: usize,
+) -> SparsePanels<i64> {
+    let mut sp = SparsePanels::<T>::default();
+    build_sparse_panels(&mut sp, panels, k, n);
+    SparsePanels {
+        kinds: sp.kinds,
+        k_idx: sp.k_idx,
+        lane: sp.lane,
+        val: sp.val.into_iter().map(Into::into).collect(),
     }
 }
 
@@ -108,45 +266,25 @@ fn pack_panels<T: Copy + Default>(
     data
 }
 
-/// The blocked kernel over one packed element type: MR x NR register tiles,
-/// panels streamed once per row block.
-fn gemm_span<T: Copy + Into<i64>>(
-    panels: &[T],
+/// The original blocked scalar tile over one packed element type — the
+/// reference every other path is pinned against.
+fn scalar_tile<T: Copy + Into<i64>>(
+    panel: &[T],
     k: usize,
     x: &[i64],
-    rows: usize,
-    n_pref: usize,
-    out: &mut [i64],
+    r0: usize,
+    mr: usize,
+    acc: &mut [i64; MR * NR],
 ) {
-    if rows == 0 || n_pref == 0 {
-        return;
-    }
-    let n_panels = n_pref.div_ceil(NR);
-    for pi in 0..n_panels {
-        let c0 = pi * NR;
-        let nc = NR.min(n_pref - c0);
-        let panel = &panels[pi * k * NR..(pi + 1) * k * NR];
-        let mut r0 = 0;
-        while r0 < rows {
-            let mr = MR.min(rows - r0);
-            let mut acc = [0i64; MR * NR];
-            for kk in 0..k {
-                let wrow = &panel[kk * NR..kk * NR + NR];
-                for mi in 0..mr {
-                    let xv = x[(r0 + mi) * k + kk];
-                    let lane = &mut acc[mi * NR..mi * NR + NR];
-                    for j in 0..NR {
-                        let wv: i64 = wrow[j].into();
-                        lane[j] += xv * wv;
-                    }
-                }
+    for kk in 0..k {
+        let wrow = &panel[kk * NR..kk * NR + NR];
+        for mi in 0..mr {
+            let xv = x[(r0 + mi) * k + kk];
+            let lane = &mut acc[mi * NR..mi * NR + NR];
+            for j in 0..NR {
+                let wv: i64 = wrow[j].into();
+                lane[j] += xv * wv;
             }
-            for mi in 0..mr {
-                for j in 0..nc {
-                    out[(r0 + mi) * n_pref + c0 + j] = acc[mi * NR + j];
-                }
-            }
-            r0 += mr;
         }
     }
 }
@@ -164,6 +302,25 @@ mod tests {
     fn random_layer(c_out: usize, k: usize, amp: i64, rng: &mut Rng) -> QTensor {
         let w: Vec<f32> = (0..c_out * k)
             .map(|_| (rng.below((2 * amp + 1) as usize) as i64 - amp) as f32)
+            .collect();
+        QTensor::from_export(
+            &Tensor::new(vec![c_out, k], w),
+            &Tensor::new(vec![c_out, 1], vec![1.0; c_out]),
+            &Tensor::from_vec(vec![0.0; c_out]),
+        )
+    }
+
+    /// Like [`random_layer`] but keeping only `keep` of the entries
+    /// nonzero, to exercise the sparse panel layout at known densities.
+    fn sparse_layer(c_out: usize, k: usize, amp: i64, keep: f64, rng: &mut Rng) -> QTensor {
+        let w: Vec<f32> = (0..c_out * k)
+            .map(|_| {
+                if rng.uniform() < keep {
+                    (rng.below((2 * amp + 1) as usize) as i64 - amp) as f32
+                } else {
+                    0.0
+                }
+            })
             .collect();
         QTensor::from_export(
             &Tensor::new(vec![c_out, k], w),
@@ -210,7 +367,80 @@ mod tests {
     }
 
     #[test]
-    fn pack_rejects_codes_beyond_i32() {
+    fn forced_paths_are_bit_exact_across_densities_and_shapes() {
+        let mut rng = Rng::new(0x51);
+        for keep in [0.0, 0.5, 1.0] {
+            for case in 0..12 {
+                let c_out = 1 + rng.below(20);
+                let k = rng.below(70);
+                // i32 panels on every third case: SIMD must fall back and
+                // still match.
+                let amp = if case % 3 == 2 { 40_000 } else { 7 };
+                let w = sparse_layer(c_out, k, amp, keep, &mut rng);
+                let order: Vec<usize> = {
+                    let mut o: Vec<usize> = (0..c_out).collect();
+                    rng.shuffle(&mut o);
+                    o
+                };
+                let rows = rng.below(7);
+                let x: Vec<i64> =
+                    (0..rows * k).map(|_| rng.below(511) as i64 - 255).collect();
+                let scalar =
+                    PackedWeights::pack_with(&w, &order, KernelPath::Scalar).expect("fits i32");
+                for path in [KernelPath::Simd, KernelPath::SparseSimd] {
+                    let packed = PackedWeights::pack_with(&w, &order, path).expect("fits i32");
+                    assert_eq!(packed.path(), path);
+                    assert!((packed.density() - (1.0 - w.sparsity())).abs() < 1e-12);
+                    for n_pref in [0, 1, c_out / 2, c_out] {
+                        let mut want = vec![0i64; rows * n_pref];
+                        scalar.gemm_into(&x, rows, n_pref, &mut want);
+                        let mut got = vec![0i64; rows * n_pref];
+                        packed.gemm_into(&x, rows, n_pref, &mut got);
+                        assert_eq!(
+                            got, want,
+                            "{path:?} keep={keep} case {case} n_pref={n_pref}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_falls_back_when_codes_or_inputs_exceed_the_i16_tile_range() {
+        // -32768 fits the i16 *pack* but is excluded from the SIMD tile
+        // (madd pair-sum overflow); oversized x rejects narrowing. Both
+        // must silently ride the scalar tile and stay bit-exact.
+        let k = 11;
+        let mut codes: Vec<i64> = (0..2 * k).map(|i| (i as i64 % 7) - 3).collect();
+        codes[3] = i16::MIN as i64;
+        let w = QTensor { codes, scales: vec![1.0; 2], bias: vec![0.0; 2], c_out: 2, k };
+        let order = [0usize, 1];
+        let scalar = PackedWeights::pack_with(&w, &order, KernelPath::Scalar).unwrap();
+        let simd = PackedWeights::pack_with(&w, &order, KernelPath::Simd).unwrap();
+        let x: Vec<i64> = (0..3 * k).map(|i| i as i64 * 17 - 80).collect();
+        let (mut want, mut got) = (vec![0i64; 3 * 2], vec![0i64; 3 * 2]);
+        scalar.gemm_into(&x, 3, 2, &mut want);
+        simd.gemm_into(&x, 3, 2, &mut got);
+        assert_eq!(got, want, "-32768 weight code");
+
+        let w2 = QTensor {
+            codes: (0..2 * k as i64).map(|i| i % 5 - 2).collect(),
+            scales: vec![1.0; 2],
+            bias: vec![0.0; 2],
+            c_out: 2,
+            k,
+        };
+        let scalar2 = PackedWeights::pack_with(&w2, &order, KernelPath::Scalar).unwrap();
+        let simd2 = PackedWeights::pack_with(&w2, &order, KernelPath::Simd).unwrap();
+        let xb: Vec<i64> = (0..3 * k).map(|i| i as i64 * 10_000).collect();
+        scalar2.gemm_into(&xb, 3, 2, &mut want);
+        simd2.gemm_into(&xb, 3, 2, &mut got);
+        assert_eq!(got, want, "x beyond ±32767");
+    }
+
+    #[test]
+    fn pack_rejects_codes_beyond_i32_on_every_path() {
         let w = QTensor {
             codes: vec![1, i32::MAX as i64 + 1],
             scales: vec![1.0],
@@ -219,16 +449,21 @@ mod tests {
             k: 2,
         };
         assert!(PackedWeights::pack(&w, &[0]).is_none());
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            assert!(PackedWeights::pack_with(&w, &[0], path).is_none(), "{path:?}");
+        }
     }
 
     #[test]
     fn k_zero_and_empty_rows_are_fine() {
         let w = QTensor { codes: vec![], scales: vec![1.0; 3], bias: vec![0.0; 3], c_out: 3, k: 0 };
-        let packed = PackedWeights::pack(&w, &[2, 0, 1]).unwrap();
-        let mut out = vec![7i64; 2 * 3];
-        packed.gemm_into(&[], 2, 3, &mut out);
-        assert_eq!(out, vec![0i64; 6]);
-        let mut empty: Vec<i64> = vec![];
-        packed.gemm_into(&[], 0, 3, &mut empty);
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            let packed = PackedWeights::pack_with(&w, &[2, 0, 1], path).unwrap();
+            let mut out = vec![7i64; 2 * 3];
+            packed.gemm_into(&[], 2, 3, &mut out);
+            assert_eq!(out, vec![0i64; 6], "{path:?}");
+            let mut empty: Vec<i64> = vec![];
+            packed.gemm_into(&[], 0, 3, &mut empty);
+        }
     }
 }

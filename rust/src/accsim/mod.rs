@@ -40,10 +40,14 @@ pub mod stats;
 
 pub use dot::{dot_accumulate, AccMode, DotResult};
 pub use engine::{
-    dot_accumulate_multi, min_safe_p, network_forward_multi, qlinear_forward_multi, LayerPlan,
-    ModePlan, NetworkPlan, NetworkStats,
+    dot_accumulate_multi, min_safe_p, network_forward_multi, qlinear_forward_multi, KernelChoice,
+    LayerPlan, ModePlan, NetworkPlan, NetworkStats,
 };
 pub use gemm::PackedWeights;
+// The GEMM kernel dispatch enum lives with the float core in
+// `crate::linalg::kernel`; re-export it here because the integer engine's
+// plan APIs (`LayerPlan::new_with_path` etc.) take it too.
+pub use crate::linalg::KernelPath;
 pub use intmat::IntMatrix;
 pub use matmul::{
     qlinear_forward, qlinear_forward_ref, quantize_code, quantize_inputs, MatmulStats,

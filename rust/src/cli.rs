@@ -2,7 +2,8 @@
 //!
 //! Grammar: `a2q [--global value]... <subcommand> [--flag value | --flag=value]...`
 //! Unknown flags are an error; every flag takes a value except those
-//! registered as boolean switches.
+//! registered as boolean switches. A flag may repeat; scalar accessors
+//! read the last occurrence, [`Args::all_strs`] returns every one.
 
 use std::collections::BTreeMap;
 
@@ -12,7 +13,7 @@ use anyhow::{bail, Result};
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub positional: Vec<String>,
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
@@ -24,23 +25,23 @@ impl Args {
         while let Some(arg) = iter.next() {
             if let Some(flag) = arg.strip_prefix("--") {
                 if let Some((k, v)) = flag.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    out.push_flag(k, v.to_string());
                 } else if switches.contains(&flag) {
                     // optional explicit value: --flag true/false
                     match iter.peek().map(|s| s.as_str()) {
                         Some("true") | Some("false") => {
                             let v = iter.next().unwrap();
-                            out.flags.insert(flag.to_string(), v);
+                            out.push_flag(flag, v);
                         }
                         _ => {
-                            out.flags.insert(flag.to_string(), "true".to_string());
+                            out.push_flag(flag, "true".to_string());
                         }
                     }
                 } else {
                     let v = iter
                         .next()
                         .ok_or_else(|| anyhow::anyhow!("flag --{flag} needs a value"))?;
-                    out.flags.insert(flag.to_string(), v);
+                    out.push_flag(flag, v);
                 }
             } else {
                 out.positional.push(arg);
@@ -49,19 +50,33 @@ impl Args {
         Ok(out)
     }
 
+    fn push_flag(&mut self, key: &str, value: String) {
+        self.flags.entry(key.to_string()).or_default().push(value);
+    }
+
+    fn last(&self, key: &str) -> Option<&String> {
+        self.flags.get(key).and_then(|vs| vs.last())
+    }
+
     pub fn str_or(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+        self.last(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
     pub fn opt_str(&self, key: &str) -> Option<String> {
-        self.flags.get(key).cloned()
+        self.last(key).cloned()
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order
+    /// (empty when the flag was never given).
+    pub fn all_strs(&self, key: &str) -> Vec<String> {
+        self.flags.get(key).cloned().unwrap_or_default()
     }
 
     pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
     where
         T::Err: std::fmt::Display,
     {
-        match self.flags.get(key) {
+        match self.last(key) {
             None => Ok(default),
             Some(v) => v
                 .parse::<T>()
@@ -70,7 +85,7 @@ impl Args {
     }
 
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
-        match self.flags.get(key).map(|s| s.as_str()) {
+        match self.last(key).map(|s| s.as_str()) {
             None => Ok(default),
             Some("true") | Some("1") => Ok(true),
             Some("false") | Some("0") => Ok(false),
@@ -154,5 +169,14 @@ mod tests {
     fn switch_with_explicit_value() {
         let a = parse(&["x", "--verbose", "false"]);
         assert!(!a.bool_or("verbose", true).unwrap());
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_value_and_scalars_read_the_last() {
+        let a = parse(&["x", "--require", "a:b", "--require=c:d", "--require", "e:f"]);
+        assert_eq!(a.all_strs("require"), vec!["a:b", "c:d", "e:f"]);
+        assert_eq!(a.str_or("require", ""), "e:f", "scalar access is last-wins");
+        assert!(a.all_strs("absent").is_empty());
+        assert!(a.check_known(&["require"]).is_ok());
     }
 }

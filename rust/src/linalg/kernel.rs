@@ -1,0 +1,541 @@
+//! Kernel dispatch layer shared by the two blocked GEMM cores (the f32
+//! core in [`crate::linalg`] and the integer core in
+//! [`crate::accsim::gemm`]).
+//!
+//! Three paths compute the same MR×NR register tile:
+//!
+//! * **Scalar** — the original blocked loops, kept byte-identical as the
+//!   portable fallback and the property-test reference;
+//! * **Simd** — explicit microkernels behind runtime feature detection
+//!   (AVX2+FMA on x86_64, NEON on aarch64): an f32 FMA tile and an i16
+//!   pairwise-widening integer tile (`madd`-style: two adjacent MAC steps
+//!   multiply into exact i32 pair sums, then widen to i64 accumulators);
+//! * **SparseSimd** — the packed operand additionally records, per
+//!   NR-column panel, a compressed k-major nonzero list when the panel's
+//!   density falls at or below [`SPARSE_PANEL_DENSITY`]; the inner loop
+//!   then touches only nonzero weights. Dense panels of the same operand
+//!   still ride the SIMD tile. A2Q's L1 budget (Eq. 15) makes tightly
+//!   constrained layers mostly zeros, so this converts the overflow
+//!   guarantee directly into throughput.
+//!
+//! Dispatch is a plan-time decision per packed operand: an explicit force
+//! (plan/backend API) wins, then the `A2Q_KERNEL` environment variable
+//! (`scalar` | `simd` | `sparse`; read once, invalid values ignored), then
+//! a density heuristic. Exactness contracts: the integer tiles are
+//! bit-identical to the scalar reference (i64 accumulation is exact; the
+//! i16 pair sums cannot overflow i32 because packing excludes the -32768
+//! weight code and the x operand is rejected outside ±32767); the f32 FMA
+//! tile changes rounding versus mul+add but keeps the strict per-element
+//! `kk` order, so results remain bit-identical across row partitionings
+//! (thread counts) *within* a path.
+
+use std::sync::OnceLock;
+
+use super::{MR, NR};
+
+// The microkernels hard-code the tile contract (one __m256 per lane row,
+// 4+4 i64 accumulators); keep the shared constants honest.
+const _: () = assert!(MR == 4 && NR == 8);
+
+/// Per-panel (and whole-operand) density at or below which the sparse
+/// compressed layout is used instead of the dense tile.
+pub const SPARSE_PANEL_DENSITY: f64 = 0.5;
+
+/// Which kernel implementation a packed operand runs through. A plan-time
+/// decision per layer — see the module doc for the precedence chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Portable blocked scalar loops (the reference).
+    Scalar,
+    /// Explicit SIMD microkernel on every panel (falls back to scalar at
+    /// run time when the CPU lacks the features).
+    Simd,
+    /// Compressed nonzero traversal for low-density panels, SIMD tile for
+    /// the dense remainder.
+    SparseSimd,
+}
+
+impl KernelPath {
+    /// Parse an `A2Q_KERNEL`-style name. `sparse` and `sparse_simd` are
+    /// synonyms.
+    pub fn parse(s: &str) -> Option<KernelPath> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelPath::Scalar),
+            "simd" => Some(KernelPath::Simd),
+            "sparse" | "sparse_simd" => Some(KernelPath::SparseSimd),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Simd => "simd",
+            KernelPath::SparseSimd => "sparse",
+        }
+    }
+
+    /// Pick a path for an operand of the given nonzero `density`:
+    /// `A2Q_KERNEL` override first, then sparse below the threshold, then
+    /// SIMD when the CPU supports it.
+    pub fn choose(density: f64) -> KernelPath {
+        if let Some(p) = env_kernel() {
+            return p;
+        }
+        if density <= SPARSE_PANEL_DENSITY {
+            KernelPath::SparseSimd
+        } else if simd_available() {
+            KernelPath::Simd
+        } else {
+            KernelPath::Scalar
+        }
+    }
+}
+
+/// Runtime feature detection for the explicit SIMD tiles: AVX2+FMA on
+/// x86_64, NEON on aarch64, false elsewhere. The result never changes
+/// within a process, and the detection macros cache internally.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// The `A2Q_KERNEL` override, read once per process. Unknown values are
+/// ignored (auto dispatch), so stale scripts cannot break runs.
+fn env_kernel() -> Option<KernelPath> {
+    static CACHE: OnceLock<Option<KernelPath>> = OnceLock::new();
+    *CACHE.get_or_init(|| std::env::var("A2Q_KERNEL").ok().as_deref().and_then(KernelPath::parse))
+}
+
+/// How one NR-column panel of a packed operand is traversed.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum PanelKind {
+    /// Dense k-major tile (scalar or SIMD microkernel).
+    Dense,
+    /// Compressed traversal over `SparsePanels` entries `start..end`.
+    Sparse { start: usize, end: usize },
+}
+
+/// Compressed panel layout built at pack time for the `SparseSimd` path:
+/// per low-density panel, the k-major list of nonzero weights as parallel
+/// `(k index, lane, value)` arrays. Panels above the density threshold stay
+/// [`PanelKind::Dense`] and keep using the dense tile.
+#[derive(Default)]
+pub(crate) struct SparsePanels<T> {
+    pub(crate) kinds: Vec<PanelKind>,
+    pub(crate) k_idx: Vec<u32>,
+    pub(crate) lane: Vec<u8>,
+    pub(crate) val: Vec<T>,
+}
+
+impl<T> SparsePanels<T> {
+    pub(crate) fn clear(&mut self) {
+        self.kinds.clear();
+        self.k_idx.clear();
+        self.lane.clear();
+        self.val.clear();
+    }
+
+    /// Panel kind lookup that degrades to Dense when no sparse layout was
+    /// built (Scalar/Simd paths leave `kinds` empty).
+    pub(crate) fn kind(&self, pi: usize) -> PanelKind {
+        self.kinds.get(pi).copied().unwrap_or(PanelKind::Dense)
+    }
+}
+
+/// Scan dense NR-column panels (layout `panels[pi * k * NR + kk * NR + j]`,
+/// `n` real columns) and build the compressed layout for every panel whose
+/// density is at or below [`SPARSE_PANEL_DENSITY`]. Padding lanes are zero
+/// and never produce entries; density is measured over the `k * nc` real
+/// slots. A free function over the raw buffers so packers can call it while
+/// owning both the panels and the sparse pools.
+pub(crate) fn build_sparse_panels<T: Copy + Default + PartialEq>(
+    out: &mut SparsePanels<T>,
+    panels: &[T],
+    k: usize,
+    n: usize,
+) {
+    out.clear();
+    let zero = T::default();
+    for pi in 0..n.div_ceil(NR) {
+        let panel = &panels[pi * k * NR..(pi + 1) * k * NR];
+        let nc = NR.min(n - pi * NR);
+        let slots = k * nc;
+        if slots == 0 {
+            out.kinds.push(PanelKind::Dense);
+            continue;
+        }
+        let nnz = panel.iter().filter(|v| **v != zero).count();
+        if nnz as f64 / slots as f64 > SPARSE_PANEL_DENSITY {
+            out.kinds.push(PanelKind::Dense);
+            continue;
+        }
+        let start = out.val.len();
+        for kk in 0..k {
+            for (j, &v) in panel[kk * NR..kk * NR + NR].iter().enumerate() {
+                if v != zero {
+                    out.k_idx.push(kk as u32);
+                    out.lane.push(j as u8);
+                    out.val.push(v);
+                }
+            }
+        }
+        out.kinds.push(PanelKind::Sparse { start, end: out.val.len() });
+    }
+}
+
+/// One dense f32 MR×NR tile: accumulate `a[r0..r0+mr, 0..k] · panel` into
+/// `acc` (caller-zeroed). `use_simd` routes to the FMA microkernel when the
+/// caller has confirmed [`simd_available`]; otherwise (and on other
+/// architectures) the scalar loop runs — byte-identical to the original
+/// blocked inner loop.
+#[inline]
+pub(crate) fn dense_tile_f32(
+    panel: &[f32],
+    k: usize,
+    a: &[f32],
+    r0: usize,
+    mr: usize,
+    use_simd: bool,
+    acc: &mut [f32; MR * NR],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if use_simd {
+        // Safety: callers only pass use_simd=true after simd_available().
+        unsafe { x86::tile_f32(panel, k, a, r0, mr, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if use_simd {
+        // Safety: NEON is mandatory on aarch64 and detected by the caller.
+        unsafe { neon::tile_f32(panel, k, a, r0, mr, acc) };
+        return;
+    }
+    let _ = use_simd;
+    for kk in 0..k {
+        let wrow = &panel[kk * NR..kk * NR + NR];
+        for mi in 0..mr {
+            let xv = a[(r0 + mi) * k + kk];
+            let lane = &mut acc[mi * NR..mi * NR + NR];
+            for j in 0..NR {
+                lane[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+/// One dense i16 MR×NR tile into i64 accumulators (caller-zeroed). Only
+/// called when the caller confirmed [`simd_available`] and the operands fit
+/// the overflow-free ranges (weights != -32768, |x| <= 32767); the
+/// non-SIMD-architecture body is a plain widening loop so the crate still
+/// compiles everywhere.
+#[inline]
+pub(crate) fn dense_tile_i16(
+    panel: &[i16],
+    k: usize,
+    x: &[i16],
+    r0: usize,
+    mr: usize,
+    acc: &mut [i64; MR * NR],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Safety: callers gate on simd_available() (AVX2 present).
+        unsafe { x86::tile_i16(panel, k, x, r0, mr, acc) }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // Safety: NEON is mandatory on aarch64 and detected by the caller.
+        unsafe { neon::tile_i16(panel, k, x, r0, mr, acc) }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        for kk in 0..k {
+            let wrow = &panel[kk * NR..kk * NR + NR];
+            for mi in 0..mr {
+                let xv = x[(r0 + mi) * k + kk] as i64;
+                let lane = &mut acc[mi * NR..mi * NR + NR];
+                for (l, &w) in lane.iter_mut().zip(wrow) {
+                    *l += xv * w as i64;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// The f32 FMA tile: one `__m256` per accumulator row (NR = 8), strict
+    /// `kk` order preserved, totals *stored over* the caller-zeroed `acc`.
+    ///
+    /// # Safety
+    /// Requires AVX2 and FMA (callers gate on `simd_available`). Slice
+    /// bounds: `panel` holds `k * NR` values, `a` covers rows
+    /// `r0..r0 + mr` of width `k`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn tile_f32(
+        panel: &[f32],
+        k: usize,
+        a: &[f32],
+        r0: usize,
+        mr: usize,
+        acc: &mut [f32; MR * NR],
+    ) {
+        debug_assert!(panel.len() >= k * NR);
+        debug_assert!(a.len() >= (r0 + mr) * k);
+        let mut vacc = [_mm256_setzero_ps(); MR];
+        for kk in 0..k {
+            let w = _mm256_loadu_ps(panel.as_ptr().add(kk * NR));
+            for (mi, v) in vacc.iter_mut().enumerate().take(mr) {
+                let xv = _mm256_set1_ps(*a.get_unchecked((r0 + mi) * k + kk));
+                *v = _mm256_fmadd_ps(xv, w, *v);
+            }
+        }
+        for (mi, v) in vacc.iter().enumerate().take(mr) {
+            _mm256_storeu_ps(acc.as_mut_ptr().add(mi * NR), *v);
+        }
+    }
+
+    /// The i16 pairwise-widening integer tile: adjacent MAC steps
+    /// `kk, kk+1` interleave into `madd` pair sums (exact in i32 because
+    /// packing excludes -32768 weight codes and x is pre-narrowed to
+    /// ±32767: |pair sum| <= 2 * 32767^2 < 2^31), then sign-extend to the
+    /// four low / four high i64 accumulator lanes every step. Bit-identical
+    /// to the scalar i64 reference. Totals are *stored over* the
+    /// caller-zeroed `acc`.
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers gate on `simd_available`). Slice bounds:
+    /// `panel` holds `k * NR` values, `x` covers rows `r0..r0 + mr` of
+    /// width `k`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn tile_i16(
+        panel: &[i16],
+        k: usize,
+        x: &[i16],
+        r0: usize,
+        mr: usize,
+        acc: &mut [i64; MR * NR],
+    ) {
+        debug_assert!(panel.len() >= k * NR);
+        debug_assert!(x.len() >= (r0 + mr) * k);
+        let mut lo = [_mm256_setzero_si256(); MR];
+        let mut hi = [_mm256_setzero_si256(); MR];
+        let mut kk = 0;
+        while kk < k {
+            let wk = _mm_loadu_si128(panel.as_ptr().add(kk * NR) as *const __m128i);
+            let wk1 = if kk + 1 < k {
+                _mm_loadu_si128(panel.as_ptr().add((kk + 1) * NR) as *const __m128i)
+            } else {
+                _mm_setzero_si128()
+            };
+            // Interleave the two weight rows: lanes 0..3 / 4..7 become
+            // [w[kk][j], w[kk+1][j]] i16 pairs matching madd's operand
+            // layout.
+            let wlo = _mm_unpacklo_epi16(wk, wk1);
+            let whi = _mm_unpackhi_epi16(wk, wk1);
+            for mi in 0..mr {
+                let x0 = *x.get_unchecked((r0 + mi) * k + kk);
+                let x1 =
+                    if kk + 1 < k { *x.get_unchecked((r0 + mi) * k + kk + 1) } else { 0i16 };
+                let xv =
+                    _mm_set1_epi32((x0 as u16 as u32 | ((x1 as u16 as u32) << 16)) as i32);
+                let p0 = _mm_madd_epi16(wlo, xv);
+                let p1 = _mm_madd_epi16(whi, xv);
+                lo[mi] = _mm256_add_epi64(lo[mi], _mm256_cvtepi32_epi64(p0));
+                hi[mi] = _mm256_add_epi64(hi[mi], _mm256_cvtepi32_epi64(p1));
+            }
+            kk += 2;
+        }
+        for mi in 0..mr {
+            _mm256_storeu_si256(acc.as_mut_ptr().add(mi * NR) as *mut __m256i, lo[mi]);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(mi * NR + 4) as *mut __m256i, hi[mi]);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{MR, NR};
+
+    /// NEON-pinned f32 tile: the `target_feature` attribute lets LLVM emit
+    /// vector FMA over the plain loops (accumulating into the caller-zeroed
+    /// `acc`, strict `kk` order per element).
+    ///
+    /// # Safety
+    /// Requires NEON (callers gate on `simd_available`; NEON is mandatory
+    /// on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn tile_f32(
+        panel: &[f32],
+        k: usize,
+        a: &[f32],
+        r0: usize,
+        mr: usize,
+        acc: &mut [f32; MR * NR],
+    ) {
+        for kk in 0..k {
+            let wrow = &panel[kk * NR..kk * NR + NR];
+            for mi in 0..mr {
+                let xv = a[(r0 + mi) * k + kk];
+                let lane = &mut acc[mi * NR..mi * NR + NR];
+                for (l, &w) in lane.iter_mut().zip(wrow) {
+                    *l += xv * w;
+                }
+            }
+        }
+    }
+
+    /// NEON-pinned widening i16 tile (exact i64 accumulation, bit-identical
+    /// to the scalar reference by construction).
+    ///
+    /// # Safety
+    /// Requires NEON (callers gate on `simd_available`; NEON is mandatory
+    /// on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn tile_i16(
+        panel: &[i16],
+        k: usize,
+        x: &[i16],
+        r0: usize,
+        mr: usize,
+        acc: &mut [i64; MR * NR],
+    ) {
+        for kk in 0..k {
+            let wrow = &panel[kk * NR..kk * NR + NR];
+            for mi in 0..mr {
+                let xv = x[(r0 + mi) * k + kk] as i64;
+                let lane = &mut acc[mi * NR..mi * NR + NR];
+                for (l, &w) in lane.iter_mut().zip(wrow) {
+                    *l += xv * w as i64;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_render_round_trip() {
+        for p in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            assert_eq!(KernelPath::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(KernelPath::parse("sparse_simd"), Some(KernelPath::SparseSimd));
+        assert_eq!(KernelPath::parse(" SIMD "), Some(KernelPath::Simd));
+        assert_eq!(KernelPath::parse("avx512"), None);
+        assert_eq!(KernelPath::parse(""), None);
+    }
+
+    #[test]
+    fn sparse_panels_compress_only_low_density_panels() {
+        // Two panels over n=10 (nc = 8 and 2), k = 4: first panel dense
+        // (all ones), second panel one nonzero in 8 real slots.
+        let (k, n) = (4usize, 10usize);
+        let mut panels = vec![0f32; n.div_ceil(NR) * k * NR];
+        for kk in 0..k {
+            for j in 0..NR {
+                panels[kk * NR + j] = 1.0;
+            }
+        }
+        let p1 = k * NR;
+        panels[p1 + 2 * NR] = 3.0; // panel 1, kk=2, lane 0
+        let mut sp = SparsePanels::default();
+        build_sparse_panels(&mut sp, &panels, k, n);
+        assert_eq!(sp.kinds.len(), 2);
+        assert!(matches!(sp.kind(0), PanelKind::Dense));
+        match sp.kind(1) {
+            PanelKind::Sparse { start, end } => {
+                assert_eq!((start, end), (0, 1));
+                assert_eq!((sp.k_idx[0], sp.lane[0], sp.val[0]), (2, 0, 3.0));
+            }
+            PanelKind::Dense => panic!("low-density panel not compressed"),
+        }
+        // Lookup past the built panels degrades to Dense.
+        assert!(matches!(sp.kind(7), PanelKind::Dense));
+    }
+
+    #[test]
+    fn sparse_entries_are_k_major_and_skip_padding() {
+        // n = 3 (one panel, 5 padding lanes), k = 3, half the real slots
+        // nonzero in scattered order.
+        let (k, n) = (3usize, 3usize);
+        let mut panels = vec![0f32; k * NR];
+        panels[NR + 1] = 2.0; // kk=1 lane 1
+        panels[2] = 1.0; // kk=0 lane 2
+        panels[2 * NR] = 4.0; // kk=2 lane 0
+        let mut sp = SparsePanels::default();
+        build_sparse_panels(&mut sp, &panels, k, n);
+        assert!(matches!(sp.kind(0), PanelKind::Sparse { start: 0, end: 3 }));
+        assert_eq!(sp.k_idx, vec![0, 1, 2], "entries must be k-major");
+        assert_eq!(sp.lane, vec![2, 1, 0]);
+        assert_eq!(sp.val, vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_k_panels_stay_dense() {
+        let mut sp = SparsePanels::<f32>::default();
+        build_sparse_panels(&mut sp, &[], 0, 5);
+        assert_eq!(sp.kinds.len(), 1);
+        assert!(matches!(sp.kind(0), PanelKind::Dense));
+        assert!(sp.val.is_empty());
+    }
+
+    #[test]
+    fn simd_tiles_match_the_scalar_tile_when_available() {
+        if !simd_available() {
+            eprintln!("no SIMD on this host; dispatch falls back to scalar (covered elsewhere)");
+            return;
+        }
+        let mut rng = crate::rng::Rng::new(0x51D);
+        for k in [0usize, 1, 2, 5, 8, 33] {
+            for mr in 1..=MR {
+                // f32 on an integer grid: FMA is exact, must match bitwise.
+                let panel: Vec<f32> =
+                    (0..k * NR).map(|_| (rng.below(19) as i64 - 9) as f32).collect();
+                let a: Vec<f32> =
+                    (0..(mr + 1) * k).map(|_| (rng.below(19) as i64 - 9) as f32).collect();
+                let mut want = [0f32; MR * NR];
+                dense_tile_f32(&panel, k, &a, 1, mr, false, &mut want);
+                let mut got = [0f32; MR * NR];
+                dense_tile_f32(&panel, k, &a, 1, mr, true, &mut got);
+                assert_eq!(got[..mr * NR], want[..mr * NR], "f32 k={k} mr={mr}");
+
+                // i16 at the extreme magnitudes the pack/narrow gates admit.
+                let wi: Vec<i16> = (0..k * NR)
+                    .map(|i| if i % 3 == 0 { 32767 } else { -32767 + (i % 7) as i16 })
+                    .collect();
+                let xi: Vec<i16> = (0..(mr + 1) * k)
+                    .map(|i| if i % 2 == 0 { -32767 } else { 32767 - (i % 5) as i16 })
+                    .collect();
+                let mut iwant = [0i64; MR * NR];
+                for kk in 0..k {
+                    for mi in 0..mr {
+                        let xv = xi[(1 + mi) * k + kk] as i64;
+                        for j in 0..NR {
+                            iwant[mi * NR + j] += xv * wi[kk * NR + j] as i64;
+                        }
+                    }
+                }
+                let mut igot = [0i64; MR * NR];
+                dense_tile_i16(&wi, k, &xi, 1, mr, &mut igot);
+                assert_eq!(igot[..mr * NR], iwant[..mr * NR], "i16 k={k} mr={mr}");
+            }
+        }
+    }
+}

@@ -32,6 +32,21 @@
 //! Thread-count policy lives here too ([`env_threads`], [`hardware_workers`],
 //! [`gemm_workers`]) so the accsim engine, the native backend and the sweep
 //! scheduler share one heuristic.
+//!
+//! The inner tile itself is dispatched per packed operand through
+//! [`kernel::KernelPath`]: the original scalar loop (reference + portable
+//! fallback), an explicit AVX2/FMA (or NEON) microkernel behind runtime
+//! feature detection, or a sparse compressed-panel traversal that skips
+//! zero weights entirely — see the [`kernel`] module doc for the layout and
+//! the `A2Q_KERNEL` override. Every path keeps the strict per-element `kk`
+//! order, so the bit-identical-across-thread-counts guarantee holds within
+//! any fixed path.
+
+pub mod kernel;
+
+pub use kernel::{simd_available, KernelPath};
+
+use kernel::{build_sparse_panels, PanelKind, SparsePanels};
 
 /// Row-tile height over the M (batch) dimension: rows sharing one panel
 /// traversal. Shared with the integer GEMM in [`crate::accsim::gemm`].
@@ -75,13 +90,37 @@ pub fn gemm_workers(flops: usize) -> usize {
 /// An f32 B operand packed once into NR-column, k-major panels
 /// (`panel[kk * NR + j]` is MAC step `kk` of packed column `j`), reusable
 /// across calls — repacking into an existing `PackedB` reuses its buffer.
-#[derive(Default)]
+///
+/// Packing also fixes the operand's [`KernelPath`]: an explicit
+/// [`force_path`](PackedB::force_path) wins, then the `A2Q_KERNEL`
+/// environment override, then a density heuristic (see
+/// [`KernelPath::choose`]). On the sparse path, low-density panels get a
+/// compressed nonzero layout built at pack time.
 pub struct PackedB {
     panels: Vec<f32>,
     /// Packed (output) columns.
     n: usize,
     /// MAC depth shared by every column.
     k: usize,
+    /// Explicit dispatch override, surviving repacks.
+    forced: Option<KernelPath>,
+    /// Path chosen by the last pack.
+    path: KernelPath,
+    /// Compressed panels (populated only on the `SparseSimd` path).
+    sparse: SparsePanels<f32>,
+}
+
+impl Default for PackedB {
+    fn default() -> PackedB {
+        PackedB {
+            panels: Vec::new(),
+            n: 0,
+            k: 0,
+            forced: None,
+            path: KernelPath::Scalar,
+            sparse: SparsePanels::default(),
+        }
+    }
 }
 
 impl PackedB {
@@ -99,6 +138,23 @@ impl PackedB {
         self.k
     }
 
+    /// Pin dispatch to `path` (`None` restores auto). Takes effect at the
+    /// next `pack_nn`/`pack_t` call.
+    pub fn force_path(&mut self, path: Option<KernelPath>) {
+        self.forced = path;
+    }
+
+    /// The explicit override, if any (propagated to per-worker packs by
+    /// [`grad_reduce`]).
+    pub fn forced_path(&self) -> Option<KernelPath> {
+        self.forced
+    }
+
+    /// The path chosen by the most recent pack.
+    pub fn path(&self) -> KernelPath {
+        self.path
+    }
+
     fn reset(&mut self, k: usize, n: usize) {
         self.k = k;
         self.n = n;
@@ -107,21 +163,36 @@ impl PackedB {
         self.panels.resize(len, 0.0);
     }
 
+    /// Resolve the kernel path from the source operand's density and build
+    /// the compressed panels when the sparse path is chosen.
+    fn finish_pack(&mut self, b: &[f32]) {
+        let density = if b.is_empty() {
+            1.0
+        } else {
+            b.iter().filter(|v| **v != 0.0).count() as f64 / b.len() as f64
+        };
+        self.path = self.forced.unwrap_or_else(|| KernelPath::choose(density));
+        self.sparse.clear();
+        if self.path == KernelPath::SparseSimd {
+            build_sparse_panels(&mut self.sparse, &self.panels, self.k, self.n);
+        }
+    }
+
     /// Pack a row-major `b[k, n]` operand (the NN layout): packed column
     /// `j` is column `j` of `b`.
     pub fn pack_nn(&mut self, b: &[f32], k: usize, n: usize) {
         debug_assert_eq!(b.len(), k * n);
         self.reset(k, n);
-        if n == 0 {
-            return;
-        }
-        for (ci, chunk) in b.chunks_exact(n).enumerate() {
-            // row ci of b scatters across panels at MAC step ci
-            for (j, &v) in chunk.iter().enumerate() {
-                let (pi, lane) = (j / NR, j % NR);
-                self.panels[pi * self.k * NR + ci * NR + lane] = v;
+        if n != 0 {
+            for (ci, chunk) in b.chunks_exact(n).enumerate() {
+                // row ci of b scatters across panels at MAC step ci
+                for (j, &v) in chunk.iter().enumerate() {
+                    let (pi, lane) = (j / NR, j % NR);
+                    self.panels[pi * self.k * NR + ci * NR + lane] = v;
+                }
             }
         }
+        self.finish_pack(b);
     }
 
     /// Pack a row-major `b[n, k]` operand *transposed* (the NT layout):
@@ -130,21 +201,24 @@ impl PackedB {
     pub fn pack_t(&mut self, b: &[f32], n: usize, k: usize) {
         debug_assert_eq!(b.len(), n * k);
         self.reset(k, n);
-        if k == 0 {
-            return;
-        }
-        for (j, row) in b.chunks_exact(k).enumerate() {
-            let (pi, lane) = (j / NR, j % NR);
-            let base = pi * k * NR + lane;
-            for (kk, &v) in row.iter().enumerate() {
-                self.panels[base + kk * NR] = v;
+        if k != 0 {
+            for (j, row) in b.chunks_exact(k).enumerate() {
+                let (pi, lane) = (j / NR, j % NR);
+                let base = pi * k * NR + lane;
+                for (kk, &v) in row.iter().enumerate() {
+                    self.panels[base + kk * NR] = v;
+                }
             }
         }
+        self.finish_pack(b);
     }
 
     /// `out[m, n] = a[m, k] · B` (overwrites `out`). Each output element is
     /// the in-order sum over `kk = 0..k`, independent of `m` or row-block
-    /// boundaries, so any row partition of the same call is bit-identical.
+    /// boundaries, so any row partition of the same call is bit-identical
+    /// (within the packed operand's kernel path — every path preserves the
+    /// per-element `kk` order; the sparse path visits its nonzero subset in
+    /// the same k-major order).
     pub fn matmul(&self, a: &[f32], m: usize, out: &mut [f32]) {
         debug_assert_eq!(a.len(), m * self.k);
         debug_assert_eq!(out.len(), m * self.n);
@@ -152,22 +226,29 @@ impl PackedB {
         if m == 0 || n == 0 {
             return;
         }
+        let use_simd = self.path != KernelPath::Scalar && simd_available();
         for pi in 0..n.div_ceil(NR) {
             let c0 = pi * NR;
             let nc = NR.min(n - c0);
             let panel = &self.panels[pi * k * NR..(pi + 1) * k * NR];
+            let kind = self.sparse.kind(pi);
             let mut r0 = 0;
             while r0 < m {
                 let mr = MR.min(m - r0);
                 let mut acc = [0f32; MR * NR];
-                for kk in 0..k {
-                    let wrow = &panel[kk * NR..kk * NR + NR];
-                    for mi in 0..mr {
-                        let xv = a[(r0 + mi) * k + kk];
-                        let lane = &mut acc[mi * NR..mi * NR + NR];
-                        for j in 0..NR {
-                            lane[j] += xv * wrow[j];
+                match kind {
+                    PanelKind::Sparse { start, end } => {
+                        for e in start..end {
+                            let kk = self.sparse.k_idx[e] as usize;
+                            let lane = self.sparse.lane[e] as usize;
+                            let wv = self.sparse.val[e];
+                            for mi in 0..mr {
+                                acc[mi * NR + lane] += a[(r0 + mi) * k + kk] * wv;
+                            }
                         }
+                    }
+                    PanelKind::Dense => {
+                        kernel::dense_tile_f32(panel, k, a, r0, mr, use_simd, &mut acc)
                     }
                 }
                 for mi in 0..mr {
@@ -225,6 +306,15 @@ pub struct GradScratch {
     gb_blocks: Vec<f32>,
     dyt: Vec<f32>,
     pack: PackedB,
+}
+
+impl GradScratch {
+    /// Pin the kernel path of every pack [`grad_reduce`] performs with this
+    /// scratch — including the per-worker packs of the parallel fan-out
+    /// (`None` restores auto dispatch).
+    pub fn force_path(&mut self, path: Option<KernelPath>) {
+        self.pack.force_path(path);
+    }
 }
 
 /// The backward reduction of one dense layer: `g_w[n, k] = dyᵀ · a` and
@@ -326,7 +416,10 @@ pub fn grad_reduce(
         scratch.gb_blocks.resize(nblocks * n, 0.0);
         // Static block partition: block work is uniform, and the partials
         // land in block-indexed slots regardless of which worker ran them.
+        // Workers build their own packs; any forced kernel path carries
+        // over so dispatch cannot differ between serial and parallel runs.
         let bpw = nblocks.div_ceil(t);
+        let forced = scratch.pack.forced_path();
         let run_block = &run_block;
         std::thread::scope(|s| {
             let gw_chunks: Vec<Option<&mut [f32]>> = if k == 0 {
@@ -339,6 +432,7 @@ pub fn grad_reduce(
             {
                 s.spawn(move || {
                     let (mut dyt, mut pack) = (Vec::new(), PackedB::new());
+                    pack.force_path(forced);
                     let mut gw_blocks = gw_chunk.map(|c| c.chunks_mut(n * k));
                     for (i, gb_out) in gb_chunk.chunks_mut(n).enumerate() {
                         match &mut gw_blocks {
@@ -545,5 +639,126 @@ mod tests {
         // public worker helpers
         assert!(hardware_workers() >= 1);
         assert_eq!(gemm_workers(10), 1);
+    }
+
+    /// Weight matrix with a prescribed fraction of surviving entries, on an
+    /// integer grid so every kernel path must match the naive loop bitwise.
+    fn sparse_int_mat(rng: &mut Rng, len: usize, amp: usize, keep: f64) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if rng.uniform() < keep {
+                    (rng.below(2 * amp + 1) as i64 - amp as i64) as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_kernel_path_matches_naive_bitwise_on_integer_grids() {
+        let mut rng = Rng::new(0xD15);
+        let paths = [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd];
+        for keep in [0.0, 0.5, 1.0] {
+            for (m, n, k) in [(9, 11, 37), (4, 8, 64), (13, 3, 5), (6, 20, 0), (0, 7, 12)] {
+                let a = int_mat(&mut rng, m * k, 9);
+                let w = sparse_int_mat(&mut rng, n * k, 9, keep);
+                let want = naive_nt(&a, &w, m, n, k);
+                for path in paths {
+                    let mut pack = PackedB::new();
+                    pack.force_path(Some(path));
+                    pack.pack_t(&w, n, k);
+                    assert_eq!(pack.path(), path);
+                    let mut out = vec![0f32; m * n];
+                    pack.matmul(&a, m, &mut out);
+                    assert_eq!(out, want, "{path:?} keep={keep} {m}x{n}x{k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_kernel_path_is_thread_invariant_on_real_floats() {
+        let mut rng = Rng::new(0x7A7);
+        let (m, n, k) = (61, 21, 97);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        for keep in [0.5, 1.0] {
+            let w: Vec<f32> = (0..n * k)
+                .map(|_| if rng.uniform() < keep { rng.normal() as f32 } else { 0.0 })
+                .collect();
+            for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+                let mut pack = PackedB::new();
+                pack.force_path(Some(path));
+                pack.pack_t(&w, n, k);
+                let mut base = vec![0f32; m * n];
+                pack.matmul(&a, m, &mut base);
+                for t in [1, 2, 7] {
+                    let mut out = vec![0f32; m * n];
+                    matmul_par(&pack, &a, m, &mut out, t);
+                    assert_eq!(out, base, "{path:?} keep={keep} threads={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_path_agrees_with_scalar_within_tolerance_on_real_floats() {
+        // Real (non-grid) values: FMA and zero-skipping may round
+        // differently from the scalar loop, but only within f32 epsilon
+        // scale — the paths must stay numerically interchangeable.
+        let mut rng = Rng::new(0x10E);
+        let (m, n, k) = (23, 14, 61);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..n * k)
+            .map(|_| if rng.uniform() < 0.3 { rng.normal() as f32 } else { 0.0 })
+            .collect();
+        let mut outs = Vec::new();
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            let mut pack = PackedB::new();
+            pack.force_path(Some(path));
+            pack.pack_t(&w, n, k);
+            let mut out = vec![0f32; m * n];
+            pack.matmul(&a, m, &mut out);
+            outs.push(out);
+        }
+        for alt in &outs[1..] {
+            for (i, (x, y)) in outs[0].iter().zip(alt).enumerate() {
+                assert!((x - y).abs() <= 1e-4 * (1.0 + x.abs()), "elem {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_reduce_paths_match_and_stay_thread_invariant() {
+        let mut rng = Rng::new(0x96D);
+        let (m, n, k) = (137, 6, 19);
+        let dy = int_mat(&mut rng, m * n, 4);
+        let a = sparse_int_mat(&mut rng, m * k, 4, 0.4);
+        let mut want_w = vec![0f32; n * k];
+        let mut want_b = vec![0f32; n];
+        for r in 0..m {
+            for c in 0..n {
+                want_b[c] += dy[r * n + c];
+                for kk in 0..k {
+                    want_w[c * k + kk] += dy[r * n + c] * a[r * k + kk];
+                }
+            }
+        }
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            let mut scratch = GradScratch::default();
+            scratch.force_path(Some(path));
+            let mut base_w = vec![0f32; n * k];
+            let mut base_b = vec![0f32; n];
+            grad_reduce(&dy, &a, m, n, k, 1, &mut base_w, &mut base_b, &mut scratch);
+            assert_eq!(base_w, want_w, "{path:?} weight grad");
+            assert_eq!(base_b, want_b, "{path:?} bias grad");
+            for t in [2, 7] {
+                let mut gw = vec![0f32; n * k];
+                let mut gb = vec![0f32; n];
+                grad_reduce(&dy, &a, m, n, k, t, &mut gw, &mut gb, &mut scratch);
+                assert_eq!(gw, base_w, "{path:?} threads={t}");
+                assert_eq!(gb, base_b, "{path:?} threads={t}");
+            }
+        }
     }
 }

@@ -56,10 +56,12 @@ COMMANDS:
              (whole QNetwork under every width in one threaded pass: per-layer
               overflow/sparsity, fig2/fig3 network CSVs, FINN LUT estimate)
   models     (list native registry + artifacts-dir models)
-  perfcheck  --require FAST:SLOW[,FAST:SLOW...] [--journal BENCH_accsim.json]
-             (assert journaled bench FAST is at least as fast as SLOW; CI
-              uses this to pin the blocked train path ahead of the scalar
-              reference)
+  perfcheck  --require FAST:SLOW[,FAST:SLOW...] [--require ...]
+             [--journal BENCH_accsim.json]
+             (assert journaled bench FAST is at least as fast as SLOW;
+              --require repeats and each takes a comma list; CI uses this
+              to pin the blocked train path ahead of the scalar reference
+              and the sparse kernel ahead of the dense blocked one)
 ";
 
 fn main() -> Result<()> {
@@ -225,37 +227,41 @@ fn cmd_perfcheck(args: &Args) -> Result<()> {
         .map(PathBuf::from)
         .unwrap_or_else(a2q::perf::bench_json_path);
     let journal = a2q::perf::parse_journal(&std::fs::read_to_string(&path)?)?;
-    let spec = args
-        .opt_str("require")
-        .ok_or_else(|| anyhow::anyhow!("perfcheck needs --require FAST:SLOW[,FAST:SLOW...]"))?;
+    let specs = args.all_strs("require");
+    anyhow::ensure!(
+        !specs.is_empty(),
+        "perfcheck needs at least one --require FAST:SLOW[,FAST:SLOW...]"
+    );
     let find = |name: &str| {
         journal
             .iter()
             .find(|r| r.name == name)
             .ok_or_else(|| anyhow::anyhow!("no bench record {name:?} in {}", path.display()))
     };
-    for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
-        let (fast, slow) = pair
-            .trim()
-            .split_once(':')
-            .ok_or_else(|| anyhow::anyhow!("--require pair {pair:?} is not FAST:SLOW"))?;
-        let (f, s) = (find(fast.trim())?, find(slow.trim())?);
-        anyhow::ensure!(
-            f.ns_per_iter <= s.ns_per_iter,
-            "{} ({:.0} ns/iter) is slower than {} ({:.0} ns/iter)",
-            f.name,
-            f.ns_per_iter,
-            s.name,
-            s.ns_per_iter
-        );
-        println!(
-            "[perfcheck] ok: {} {:.0} ns/iter <= {} {:.0} ns/iter ({:.2}x)",
-            f.name,
-            f.ns_per_iter,
-            s.name,
-            s.ns_per_iter,
-            s.ns_per_iter / f.ns_per_iter.max(1.0)
-        );
+    for spec in &specs {
+        for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (fast, slow) = pair
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--require pair {pair:?} is not FAST:SLOW"))?;
+            let (f, s) = (find(fast.trim())?, find(slow.trim())?);
+            anyhow::ensure!(
+                f.ns_per_iter <= s.ns_per_iter,
+                "{} ({:.0} ns/iter) is slower than {} ({:.0} ns/iter)",
+                f.name,
+                f.ns_per_iter,
+                s.name,
+                s.ns_per_iter
+            );
+            println!(
+                "[perfcheck] ok: {} {:.0} ns/iter <= {} {:.0} ns/iter ({:.2}x)",
+                f.name,
+                f.ns_per_iter,
+                s.name,
+                s.ns_per_iter,
+                s.ns_per_iter / f.ns_per_iter.max(1.0)
+            );
+        }
     }
     Ok(())
 }

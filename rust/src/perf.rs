@@ -22,6 +22,9 @@ pub struct BenchRecord {
     pub ns_per_iter: f64,
     /// Throughput in MACs per second, when the bench has a MAC count.
     pub mac_per_s: Option<f64>,
+    /// Measured weight sparsity (fraction of zero codes) of the layer the
+    /// bench ran on, when the bench compares kernel dispatch paths.
+    pub sparsity: Option<f64>,
 }
 
 /// Repository root (the workspace directory holding EXPERIMENTS.md).
@@ -73,6 +76,13 @@ fn record_to_json(r: &BenchRecord) -> Json {
                 _ => Json::Null,
             },
         ),
+        (
+            "sparsity",
+            match r.sparsity {
+                Some(v) if v.is_finite() => Json::Num(v),
+                _ => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -81,6 +91,12 @@ fn record_from_json(v: &Json) -> Result<BenchRecord> {
         name: v.get("name")?.as_str()?.to_string(),
         ns_per_iter: v.get("ns_per_iter")?.as_f64()?,
         mac_per_s: match v.opt("mac_per_s") {
+            None | Some(Json::Null) => None,
+            Some(other) => Some(other.as_f64()?),
+        },
+        // journals written before the kernel-dispatch work have no
+        // sparsity column; absent parses as None
+        sparsity: match v.opt("sparsity") {
             None | Some(Json::Null) => None,
             Some(other) => Some(other.as_f64()?),
         },
@@ -269,7 +285,7 @@ mod tests {
     use crate::testutil::TempDir;
 
     fn rec(name: &str, ns: f64, macs: Option<f64>) -> BenchRecord {
-        BenchRecord { name: name.into(), ns_per_iter: ns, mac_per_s: macs }
+        BenchRecord { name: name.into(), ns_per_iter: ns, mac_per_s: macs, sparsity: None }
     }
 
     #[test]
@@ -331,5 +347,17 @@ mod tests {
         assert!(text.starts_with("[\n  {"));
         let back = parse_journal(&text).unwrap();
         assert_eq!(back, vec![rec("x", 1.5, Some(3.0))]);
+    }
+
+    #[test]
+    fn sparsity_round_trips_and_old_journals_still_parse() {
+        let mut r = rec("kpath", 9.0, Some(1e6));
+        r.sparsity = Some(0.75);
+        let back = parse_journal(&render_journal(&[r.clone()])).unwrap();
+        assert_eq!(back, vec![r]);
+        // journals written before the sparsity column existed
+        let old = "[\n  {\"name\": \"x\", \"ns_per_iter\": 2, \"mac_per_s\": null}\n]\n";
+        let back = parse_journal(old).unwrap();
+        assert_eq!(back[0].sparsity, None);
     }
 }

@@ -54,7 +54,7 @@ pub use models::{native_manifest, native_models};
 use super::artifact::ModelManifest;
 use super::backend::TrainBackend;
 use super::state::{ExportedLayer, TrainState};
-use crate::linalg::{self, GradScratch, PackedB};
+use crate::linalg::{self, GradScratch, KernelPath, PackedB};
 use crate::quant::quantizer::{quantizer_for_alg, WeightQuantizer};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -118,6 +118,9 @@ pub struct NativeBackend {
     /// Explicit worker-thread pin for the blocked path (`None` = pick from
     /// the job size, `A2Q_NATIVE_THREADS` overrides).
     threads: Option<usize>,
+    /// Explicit GEMM kernel-path pin for the blocked path's packs (`None`
+    /// = auto dispatch per pack; `A2Q_KERNEL` overrides inside auto).
+    kernel: Option<KernelPath>,
     ws: Mutex<Workspace>,
 }
 
@@ -129,6 +132,7 @@ impl NativeBackend {
             dir: artifacts_dir.as_ref().to_path_buf(),
             path: ComputePath::Blocked,
             threads: None,
+            kernel: None,
             ws: Mutex::new(Workspace::default()),
         }
     }
@@ -144,6 +148,14 @@ impl NativeBackend {
     /// bit-identical for any pin; this only moves wall-clock).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = Some(threads.max(1));
+        self
+    }
+
+    /// Pin the blocked path's GEMM kernel dispatch — forward, weight-grad
+    /// and input-grad packs all follow it (benches use this to compare
+    /// scalar vs SIMD vs sparse on identical training runs).
+    pub fn with_kernel(mut self, kernel: KernelPath) -> Self {
+        self.kernel = Some(kernel);
         self
     }
 
@@ -421,6 +433,7 @@ impl NativeBackend {
                     ComputePath::Scalar => dense_forward_ref(a, batch, k, &lw.wq, c_out, bias, z),
                     ComputePath::Blocked => {
                         let pack = &mut ws.fwd_packs[l];
+                        pack.force_path(self.kernel);
                         pack.pack_t(&lw.wq, c_out, k);
                         linalg::matmul_par(pack, a, batch, z, self.workers(batch, c_out * k));
                         linalg::add_bias(z, batch, c_out, bias);
@@ -620,17 +633,20 @@ impl TrainBackend for NativeBackend {
                         }
                     }
                 }
-                ComputePath::Blocked => linalg::grad_reduce(
-                    &ws.d_act,
-                    &ws.acts[l],
-                    batch,
-                    c_out,
-                    k,
-                    self.workers(batch, c_out * k),
-                    &mut ws.g_w,
-                    &mut ws.g_b,
-                    &mut ws.grad_scratch,
-                ),
+                ComputePath::Blocked => {
+                    ws.grad_scratch.force_path(self.kernel);
+                    linalg::grad_reduce(
+                        &ws.d_act,
+                        &ws.acts[l],
+                        batch,
+                        c_out,
+                        k,
+                        self.workers(batch, c_out * k),
+                        &mut ws.g_w,
+                        &mut ws.g_b,
+                        &mut ws.grad_scratch,
+                    )
+                }
             }
 
             // input gradient (before this layer's weights move)
@@ -656,6 +672,7 @@ impl TrainBackend for NativeBackend {
                     }
                     ComputePath::Blocked => {
                         // NN pack: W as a [K = c_out, N = k] operand
+                        ws.grad_pack.force_path(self.kernel);
                         ws.grad_pack.pack_nn(&lw.wq, c_out, k);
                         linalg::matmul_par(
                             &ws.grad_pack,
@@ -947,6 +964,50 @@ mod tests {
         assert_eq!(l1, l3, "losses must be bit-identical across thread counts");
         for (a, b) in s1.leaves.iter().zip(&s3.leaves) {
             assert_eq!(a.data(), b.data(), "leaves must be bit-identical across thread counts");
+        }
+    }
+
+    #[test]
+    fn forced_kernel_paths_track_the_scalar_reference_on_infer() {
+        let scalar = backend().with_compute(ComputePath::Scalar);
+        let manifest = scalar.manifest("mlp3").unwrap();
+        let (x, _) = batch(manifest.batch_size);
+        let state = scalar.init(&manifest, 11.0).unwrap();
+        let a = scalar.infer(&manifest, "a2q", &state, &x, (4, 4, 14)).unwrap();
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            let be = backend().with_kernel(path);
+            let b = be.infer(&manifest, "a2q", &state, &x, (4, 4, 14)).unwrap();
+            assert_eq!(a.shape(), b.shape());
+            for (s, bl) in a.data().iter().zip(b.data()) {
+                let tol = 1e-4 * (1.0 + s.abs());
+                assert!((s - bl).abs() <= tol, "{path:?}: scalar {s} vs blocked {bl}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_kernel_train_steps_stay_thread_count_invariant() {
+        let manifest = backend().manifest("mlp3").unwrap();
+        let (x, y) = batch(manifest.batch_size);
+        let run = |path: KernelPath, threads: usize| {
+            let be = backend().with_kernel(path).with_threads(threads);
+            let mut state = be.init(&manifest, 2.0).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(
+                    be.train_step(&manifest, "a2q", &mut state, &x, &y, (4, 4, 14), 0.05).unwrap(),
+                );
+            }
+            (losses, state)
+        };
+        for path in [KernelPath::Simd, KernelPath::SparseSimd] {
+            let (l1, s1) = run(path, 1);
+            let (l3, s3) = run(path, 3);
+            assert_eq!(l1, l3, "{path:?}: losses must not depend on thread count");
+            for (a, b) in s1.leaves.iter().zip(&s3.leaves) {
+                assert_eq!(a.data(), b.data(), "{path:?}: leaves must not depend on thread count");
+            }
+            assert!(l1.iter().all(|l| l.is_finite()), "{path:?}: {l1:?}");
         }
     }
 

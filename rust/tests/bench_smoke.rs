@@ -11,7 +11,9 @@
 
 use std::time::Instant;
 
-use a2q::accsim::{qlinear_forward_multi, qlinear_forward_ref, AccMode, IntMatrix};
+use a2q::accsim::{
+    qlinear_forward_multi, qlinear_forward_ref, AccMode, IntMatrix, KernelPath, LayerPlan,
+};
 use a2q::perf::{self, BenchRecord};
 use a2q::rng::Rng;
 use a2q::testutil::{psweep_constrained_layer, psweep_layer};
@@ -98,22 +100,26 @@ fn bench_smoke_psweep_records_journal() {
         name: "accsim_smoke/psweep25_scalar_baseline".into(),
         ns_per_iter: per_iter(t_ref),
         mac_per_s: Some(mac_rate(t_ref)),
+        sparsity: None,
     };
     let fused = BenchRecord {
         name: "accsim_smoke/psweep25_fused_engine".into(),
         ns_per_iter: per_iter(t_fused),
         mac_per_s: Some(mac_rate(t_fused)),
+        sparsity: None,
     };
     let cmac_rate = |t: std::time::Duration| cmacs as f64 / t.as_secs_f64().max(1e-12);
     let cbaseline = BenchRecord {
         name: "accsim_smoke/psweep25_constrained_scalar".into(),
         ns_per_iter: per_iter(t_cref),
         mac_per_s: Some(cmac_rate(t_cref)),
+        sparsity: None,
     };
     let cgemm = BenchRecord {
         name: "accsim_smoke/psweep25_constrained_gemm".into(),
         ns_per_iter: per_iter(t_cgemm),
         mac_per_s: Some(cmac_rate(t_cgemm)),
+        sparsity: None,
     };
     println!(
         "smoke constrained psweep ({} widths at/above target, {batch}x{c_out}x{k}, debug \
@@ -138,5 +144,86 @@ fn bench_smoke_psweep_records_journal() {
     );
     if let Err(e) = perf::update_experiments_smoke_block(&block) {
         eprintln!("EXPERIMENTS.md not writable here ({e}); smoke block not updated");
+    }
+}
+
+/// Smoke-scale kernel-dispatch comparison on a tightly-constrained (= very
+/// sparse) layer: every forced path must reproduce the scalar reference
+/// bit-for-bit, serial and threaded, and the three timings land in the
+/// journal with the measured weight sparsity attached.
+#[test]
+fn bench_smoke_kernel_paths_on_tight_layer() {
+    let quick = std::env::var("A2Q_BENCH_QUICK").map(|v| v != "0").unwrap_or(true);
+    let (batch, c_out, k, reps) = if quick { (8, 16, 256, 2) } else { (64, 64, 1024, 5) };
+
+    // P=14 with 8-bit inputs caps each row's l1 norm at 8191/255 ≈ 32
+    // nonzero full-scale codes — the Eq. 15 budget forces most of the k
+    // weights to zero, which is exactly the regime the sparse panels target.
+    let layer = psweep_constrained_layer(c_out, k, 14, 8, 7);
+    let sparsity = layer.sparsity();
+    assert!(sparsity >= 0.70, "tight fixture must be mostly zeros, got {sparsity:.3}");
+
+    let mut rng = Rng::new(21);
+    let x = IntMatrix::from_flat(batch, k, (0..batch * k).map(|_| rng.below(256) as i64).collect());
+    let modes: Vec<AccMode> = (14..=20).map(|p| AccMode::Wrap { p_bits: p }).collect();
+    let macs = (reps * modes.len() * batch * c_out * k) as u64;
+
+    let refs: Vec<_> = modes.iter().map(|m| qlinear_forward_ref(&x, 1.0, &layer, *m)).collect();
+    let mut records = Vec::new();
+    for (label, path) in [
+        ("scalar", KernelPath::Scalar),
+        ("simd", KernelPath::Simd),
+        ("sparse", KernelPath::SparseSimd),
+    ] {
+        let plan = LayerPlan::new_with_path(&layer, &modes, Some(path));
+        assert_eq!(plan.kernel_choice().path, path, "{label}");
+        for threads in [1, 2] {
+            let got = plan.execute_threads(&x, 1.0, threads);
+            for ((g, r), mode) in got.iter().zip(&refs).zip(&modes) {
+                assert_eq!(g.out.data(), r.out.data(), "{label} t{threads} {mode:?}");
+                assert_eq!(
+                    g.stats.overflow_events, r.stats.overflow_events,
+                    "{label} t{threads} {mode:?}"
+                );
+            }
+        }
+        let t0 = Instant::now();
+        let mut sink = 0u64;
+        for _ in 0..reps {
+            sink ^= plan
+                .execute_threads(&x, 1.0, 1)
+                .iter()
+                .map(|s| s.stats.overflow_events)
+                .sum::<u64>();
+        }
+        let dt = t0.elapsed();
+        std::hint::black_box(sink);
+        records.push(BenchRecord {
+            name: format!("accsim_smoke/kpath_tight_{label}"),
+            ns_per_iter: dt.as_nanos() as f64 / reps as f64,
+            mac_per_s: Some(macs as f64 / dt.as_secs_f64().max(1e-12)),
+            sparsity: Some(sparsity),
+        });
+    }
+    println!(
+        "smoke kpath ({batch}x{c_out}x{k}, sparsity {sparsity:.3}, debug profile): {}",
+        records
+            .iter()
+            .map(|r| format!("{} {:.0}ns", r.name, r.ns_per_iter))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    match perf::record_benches(&records) {
+        Ok(path) => {
+            let journal = perf::parse_journal(&std::fs::read_to_string(path).unwrap()).unwrap();
+            for label in ["scalar", "simd", "sparse"] {
+                let row = journal
+                    .iter()
+                    .find(|r| r.name == format!("accsim_smoke/kpath_tight_{label}"))
+                    .expect(label);
+                assert_eq!(row.sparsity, Some(sparsity), "{label}");
+            }
+        }
+        Err(e) => eprintln!("perf journal not writable here ({e}); measurements printed only"),
     }
 }

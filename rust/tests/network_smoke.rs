@@ -73,11 +73,13 @@ fn network_smoke_records_journal() {
         name: "accsim_smoke/netfwd_scalar_composed".into(),
         ns_per_iter: per_iter(t_ref),
         mac_per_s: Some(mac_rate(t_ref)),
+        sparsity: None,
     };
     let fused = BenchRecord {
         name: "accsim_smoke/netfwd_fused_network".into(),
         ns_per_iter: per_iter(t_fused),
         mac_per_s: Some(mac_rate(t_fused)),
+        sparsity: None,
     };
     match perf::record_benches(&[baseline.clone(), fused.clone()]) {
         Ok(path) => {

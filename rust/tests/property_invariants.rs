@@ -779,3 +779,128 @@ fn prop_native_blocked_train_matches_scalar_and_is_thread_invariant() {
         }
     }
 }
+
+/// Every forced GEMM kernel path (scalar blocked loops, SIMD microkernels,
+/// sparse packed panels) is bit-exact against the per-mode scalar MAC
+/// reference through the full accsim plan — outputs, wide outputs and every
+/// statistic — across random shapes (k = 0 and empty batches included),
+/// weight densities from all-zero to dense, magnitudes that reject the pack
+/// entirely (codes beyond i32), and worker counts {1, 2, 7}. The plan's
+/// `KernelChoice` must also report the forced path, the layer's measured
+/// sparsity, and whether the pack fell back.
+#[test]
+fn prop_forced_kernel_paths_bit_exact_through_the_plan() {
+    use a2q::accsim::KernelPath;
+    let mut rng = Rng::new(0xD15C);
+    for case in 0..60 {
+        let c_out = 1 + rng.below(18);
+        let k = rng.below(70); // 0 = degenerate no-MAC layer
+        let batch = rng.below(6); // 0 = empty batch
+        let keep = [0.0, 0.3, 1.0][rng.below(3)];
+        // every 5th case uses codes beyond i32 so PackedWeights::pack
+        // refuses and the plan must fall back to the fused scalar walk
+        let amp: i64 = if case % 5 == 0 { (i32::MAX as i64) * 4 } else { 120 };
+        let codes: Vec<i64> = (0..c_out * k)
+            .map(|_| {
+                if rng.uniform() < keep {
+                    let mag = 1 + rng.below(amp as usize) as i64;
+                    if rng.below(2) == 0 { mag } else { -mag }
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let w = QTensor {
+            codes,
+            scales: (0..c_out).map(|_| 0.05 + rng.uniform() as f32).collect(),
+            bias: (0..c_out).map(|_| rng.normal() as f32).collect(),
+            c_out,
+            k,
+        };
+        let x = IntMatrix::from_flat(
+            batch,
+            k,
+            (0..batch * k).map(|_| rng.below(256) as i64).collect(),
+        );
+        let n_modes = 1 + rng.below(8);
+        let modes: Vec<AccMode> = (0..n_modes)
+            .map(|_| {
+                let p_bits = 8 + rng.below(40) as u32;
+                match rng.below(3) {
+                    0 => AccMode::Wide,
+                    1 => AccMode::Wrap { p_bits },
+                    _ => AccMode::Saturate { p_bits },
+                }
+            })
+            .collect();
+
+        let refs: Vec<_> = modes.iter().map(|m| qlinear_forward_ref(&x, 0.5, &w, *m)).collect();
+        let packable = w.codes.iter().all(|c| i32::try_from(*c).is_ok());
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            let plan = LayerPlan::new_with_path(&w, &modes, Some(path));
+            let choice = plan.kernel_choice();
+            assert_eq!(choice.sparsity, w.sparsity(), "case {case} {path:?}");
+            assert_eq!(choice.pack_fallback, !packable, "case {case} {path:?}");
+            if !choice.pack_fallback {
+                assert_eq!(choice.path, path, "case {case}");
+            }
+            for threads in [1usize, 2, 7] {
+                let multi = plan.execute_threads(&x, 0.5, threads);
+                for (mi, mode) in modes.iter().enumerate() {
+                    let (a, b) = (&multi[mi], &refs[mi]);
+                    let ctx = format!("case {case} {path:?} {mode:?} t={threads}");
+                    assert_eq!(a.out.data(), b.out.data(), "{ctx}");
+                    assert_eq!(a.out_wide.data(), b.out_wide.data(), "{ctx}");
+                    assert_eq!(a.stats.overflow_events, b.stats.overflow_events, "{ctx}");
+                    assert_eq!(a.stats.abs_err_sum, b.stats.abs_err_sum, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// On A2Q-quantized layers (the regime the sparse panels are built for: the
+/// Eq. 15 l1 budget zeroes most weights at tight P), every forced kernel
+/// path reproduces the scalar-forced plan bitwise, and a tighter budget
+/// yields a sparser layer than a looser one.
+#[test]
+fn prop_forced_kernel_paths_agree_on_a2q_constrained_layers() {
+    use a2q::accsim::KernelPath;
+    use a2q::testutil::psweep_constrained_layer;
+    let mut rng = Rng::new(0xCAF);
+    for (case, p_bits) in [14u32, 16, 20, 28].iter().enumerate() {
+        let (c_out, k) = (8 + case * 4, 48 + case * 24);
+        let w = psweep_constrained_layer(c_out, k, *p_bits, 8, case as u64);
+        let x = IntMatrix::from_flat(
+            5,
+            k,
+            (0..5 * k).map(|_| rng.below(256) as i64).collect(),
+        );
+        let modes: Vec<AccMode> =
+            (*p_bits..=*p_bits + 8).map(|p| AccMode::Wrap { p_bits: p }).collect();
+        let base = LayerPlan::new_with_path(&w, &modes, Some(KernelPath::Scalar))
+            .execute_threads(&x, 1.0, 1);
+        for path in [KernelPath::Simd, KernelPath::SparseSimd] {
+            let plan = LayerPlan::new_with_path(&w, &modes, Some(path));
+            assert!(!plan.kernel_choice().pack_fallback, "case {case}");
+            for threads in [1usize, 3] {
+                let got = plan.execute_threads(&x, 1.0, threads);
+                for (mi, mode) in modes.iter().enumerate() {
+                    assert_eq!(
+                        got[mi].out.data(),
+                        base[mi].out.data(),
+                        "case {case} {path:?} {mode:?} t={threads}"
+                    );
+                    assert_eq!(
+                        got[mi].stats.overflow_events, base[mi].stats.overflow_events,
+                        "case {case} {path:?} {mode:?}"
+                    );
+                }
+            }
+        }
+    }
+    // tighter accumulator budget => more zeros for the sparse path to skip
+    let tight = psweep_constrained_layer(16, 96, 14, 8, 3).sparsity();
+    let loose = psweep_constrained_layer(16, 96, 28, 8, 3).sparsity();
+    assert!(tight > loose, "sparsity should grow as P tightens: {tight} vs {loose}");
+}

@@ -62,6 +62,7 @@ fn native_train_e2e_guarantee_and_journal() {
             name: format!("native_smoke/trainstep_{label}"),
             ns_per_iter: dt.as_nanos() as f64 / reps as f64,
             mac_per_s: Some(macs as f64 / dt.as_secs_f64().max(1e-12)),
+            sparsity: None,
         });
     }
 
