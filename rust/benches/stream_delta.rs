@@ -1,0 +1,261 @@
+//! Streaming sparse-delta throughput (EXPERIMENTS.md §Perf-Stream): rows/s
+//! through the NNUE-style incremental sessions versus a full recompute on
+//! every tick, at matched delta streams:
+//!
+//! * `accsim/stream_full_forward` — apply each tick to a plain input matrix
+//!   and run the batch engine from scratch (the pre-stream baseline);
+//! * `accsim/stream_delta_d05`    — the incremental session at 5% delta
+//!   density (the steady-state streaming regime; CI gates this row at or
+//!   ahead of the full forward via `a2q perfcheck`);
+//! * `accsim/stream_delta_d25`    — 25% density, approaching the
+//!   refresh-threshold crossover where incremental stops paying;
+//! * `accsim/stream_net_*`        — the same pair through a whole
+//!   [`NetworkPlan`] (maintained layer-0 accumulators, deeper layers
+//!   recomputed).
+//!
+//! Both sides of each pair consume *identically seeded* delta streams
+//! generated inside the timed region (generation cost is paid equally), so
+//! after the benches the final states must be bit-identical — outputs and
+//! overflow counters — and this binary asserts exactly that. Results are
+//! journaled to BENCH_accsim.json via `a2q::perf`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use a2q::accsim::{AccMode, IntMatrix, LayerPlan, LayerStreamSession, NetworkPlan, StreamSession};
+use a2q::perf::TrainRow;
+use a2q::rng::Rng;
+use a2q::testutil::{apply_deltas, psweep_constrained_layer, psweep_network, stream_delta_tick};
+
+fn main() {
+    let mut journal = harness::Journal::new();
+    let quick = harness::quick();
+    let iters = if quick { 5 } else { 15 };
+    let ticks = if quick { 3 } else { 10 };
+    let mut groups: Vec<(&str, Vec<TrainRow>)> = Vec::new();
+
+    // --- single A2Q-constrained layer ------------------------------------
+    // P = 14 with 8-bit inputs squeezes the l1 budget until most codes are
+    // zero (same regime as the kernel-dispatch bench): every channel is
+    // provably safe, so the full forward is pure safe-span GEMM — the
+    // strongest baseline the incremental path has to beat.
+    let (c_out, k, batch) = if quick { (32, 64, 16) } else { (128, 256, 64) };
+    let (p, n) = (14u32, 8u32);
+    let w = psweep_constrained_layer(c_out, k, p, n, 7);
+    let sparsity = w.sparsity();
+    assert!(sparsity >= 0.70, "stream fixture must be >= 70% sparse, got {sparsity:.3}");
+    let modes = [AccMode::Wide, AccMode::Wrap { p_bits: p }];
+    let plan = LayerPlan::new(&w, &modes);
+    let x_scale = 0.05f32;
+    let mut xrng = Rng::new(7 ^ 0x57AE);
+    let x0 = IntMatrix::from_flat(
+        batch,
+        k,
+        (0..batch * k).map(|_| xrng.below(1usize << n) as i64).collect(),
+    );
+    let rows_per_iter = (ticks * batch) as f64;
+    // Nominal (full-recompute-equivalent) MACs served per iteration: both
+    // rows deliver the same forwards, so the same denominator keeps the
+    // journal's MAC/s comparable.
+    let macs = (ticks * batch * c_out * k) as u64;
+    let per_row_d05 = ((k as f64) * 0.05).round().max(1.0) as usize;
+    let per_row_d25 = ((k as f64) * 0.25).round().max(1.0) as usize;
+    let mut rows = Vec::new();
+
+    // Full-forward baseline over the d=5% stream (seed shared with the
+    // incremental row below so final states can be compared bitwise).
+    let mut frng = Rng::new(0xD5);
+    let mut xf = x0.clone();
+    let rfull = harness::bench("accsim/stream_full_forward", 1, iters, || {
+        let mut events = 0u64;
+        for _ in 0..ticks {
+            let tick = stream_delta_tick(&xf, per_row_d05, n, &mut frng);
+            apply_deltas(&mut xf, &tick);
+            events += plan.execute_threads(&xf, x_scale, 1)[1].stats.overflow_events;
+        }
+        events
+    });
+    let full_rows_s = rows_per_iter / rfull.median.as_secs_f64().max(1e-12);
+    println!("  ({full_rows_s:.0} rows/s, weight sparsity {sparsity:.3})");
+    journal.add_sparse(&rfull, Some(macs), Some(sparsity));
+    rows.push(TrainRow {
+        name: rfull.name.clone(),
+        ns_per_iter: rfull.median.as_nanos() as f64,
+        rows_per_s: full_rows_s,
+    });
+
+    let mut srng = Rng::new(0xD5);
+    let mut session = LayerStreamSession::new(&plan, x0.clone(), x_scale);
+    let rinc = harness::bench("accsim/stream_delta_d05", 1, iters, || {
+        let mut events = 0u64;
+        for _ in 0..ticks {
+            let tick = stream_delta_tick(session.x(), per_row_d05, n, &mut srng);
+            session.apply(&tick);
+            events += session.forward_threads(1)[1].stats.overflow_events;
+        }
+        events
+    });
+    let inc_rows_s = rows_per_iter / rinc.median.as_secs_f64().max(1e-12);
+    println!(
+        "  ({inc_rows_s:.0} rows/s, {per_row_d05} deltas/row, {} rows refreshed)",
+        session.refreshed_rows()
+    );
+    journal.add_sparse(&rinc, Some(macs), Some(sparsity));
+    rows.push(TrainRow {
+        name: rinc.name.clone(),
+        ns_per_iter: rinc.median.as_nanos() as f64,
+        rows_per_s: inc_rows_s,
+    });
+
+    // Identical streams => identical final state, bit for bit.
+    assert_eq!(session.x(), &xf, "incremental input state diverged from the mirror");
+    let got = session.forward_threads(1);
+    let want = plan.execute_threads(&xf, x_scale, 1);
+    for (g, b) in got.iter().zip(&want) {
+        assert_eq!(g.out.data(), b.out.data());
+        assert_eq!(g.out_wide.data(), b.out_wide.data());
+        assert_eq!(g.stats.overflow_events, b.stats.overflow_events);
+        assert_eq!(g.stats.abs_err_sum, b.stats.abs_err_sum);
+        assert_eq!(g.stats.outputs, b.stats.outputs);
+    }
+    println!("  bit-identity verified against the full recompute");
+
+    // 25% density: approaching the crossover where the refresh fallback
+    // takes over (still bit-identical, journaled for the trend line).
+    let mut drng = Rng::new(0xD25);
+    let mut dsession = LayerStreamSession::new(&plan, x0.clone(), x_scale);
+    let rd25 = harness::bench("accsim/stream_delta_d25", 1, iters, || {
+        let mut events = 0u64;
+        for _ in 0..ticks {
+            let tick = stream_delta_tick(dsession.x(), per_row_d25, n, &mut drng);
+            dsession.apply(&tick);
+            events += dsession.forward_threads(1)[1].stats.overflow_events;
+        }
+        events
+    });
+    let d25_rows_s = rows_per_iter / rd25.median.as_secs_f64().max(1e-12);
+    println!(
+        "  ({d25_rows_s:.0} rows/s, {per_row_d25} deltas/row, {} rows refreshed)",
+        dsession.refreshed_rows()
+    );
+    journal.add_sparse(&rd25, Some(macs), Some(sparsity));
+    rows.push(TrainRow {
+        name: rd25.name.clone(),
+        ns_per_iter: rd25.median.as_nanos() as f64,
+        rows_per_s: d25_rows_s,
+    });
+    println!(
+        "stream layer ({batch} rows x {c_out}x{k}, {ticks} ticks/iter): incremental d=5% \
+         {:.2}x over full forward",
+        rfull.median.as_secs_f64() / rinc.median.as_secs_f64().max(1e-12)
+    );
+    let layer_label = if quick {
+        "layer 32x64 @ P14N8, 1 thread"
+    } else {
+        "layer 128x256 @ P14N8, 1 thread"
+    };
+    groups.push((layer_label, rows));
+    journal.flush();
+
+    // --- whole network: maintained layer-0 accumulators -------------------
+    let widths: Vec<usize> = if quick {
+        vec![64, 32, 16, 4]
+    } else {
+        vec![256, 128, 64, 10]
+    };
+    let net_batch = if quick { 16 } else { 64 };
+    let (net, xn0) = psweep_network(&widths, net_batch, 11);
+    let net_n_bits = 4u32;
+    let nmodes = [AccMode::Wide, AccMode::Wrap { p_bits: 16 }];
+    let nplan = NetworkPlan::new(&net, &nmodes);
+    let net_macs_row: usize = widths.windows(2).map(|pair| pair[0] * pair[1]).sum();
+    let nmacs = (ticks * net_batch * net_macs_row) as u64;
+    let net_rows_iter = (ticks * net_batch) as f64;
+    let net_per_row = ((widths[0] as f64) * 0.05).round().max(1.0) as usize;
+    let mut nrows = Vec::new();
+
+    let mut nfrng = Rng::new(0xA5);
+    let mut xnf = xn0.clone();
+    let rnfull = harness::bench("accsim/stream_net_full_forward", 1, iters, || {
+        let mut events = 0u64;
+        for _ in 0..ticks {
+            let tick = stream_delta_tick(&xnf, net_per_row, net_n_bits, &mut nfrng);
+            apply_deltas(&mut xnf, &tick);
+            let wrapped = &nplan.execute_threads(&xnf, 1)[1];
+            events += wrapped.layer_stats.iter().map(|s| s.overflow_events).sum::<u64>();
+        }
+        events
+    });
+    let nfull_rows_s = net_rows_iter / rnfull.median.as_secs_f64().max(1e-12);
+    println!("  ({nfull_rows_s:.0} rows/s)");
+    journal.add(&rnfull, Some(nmacs));
+    nrows.push(TrainRow {
+        name: rnfull.name.clone(),
+        ns_per_iter: rnfull.median.as_nanos() as f64,
+        rows_per_s: nfull_rows_s,
+    });
+
+    let mut nsrng = Rng::new(0xA5);
+    let mut nsession = StreamSession::new(&nplan, xn0.clone());
+    let rninc = harness::bench("accsim/stream_net_delta_d05", 1, iters, || {
+        let mut events = 0u64;
+        for _ in 0..ticks {
+            let tick = stream_delta_tick(nsession.x(), net_per_row, net_n_bits, &mut nsrng);
+            nsession.apply(&tick);
+            let wrapped = &nsession.forward_threads(1)[1];
+            events += wrapped.layer_stats.iter().map(|s| s.overflow_events).sum::<u64>();
+        }
+        events
+    });
+    let ninc_rows_s = net_rows_iter / rninc.median.as_secs_f64().max(1e-12);
+    println!(
+        "  ({ninc_rows_s:.0} rows/s, {net_per_row} deltas/row, {} rows refreshed)",
+        nsession.refreshed_rows()
+    );
+    journal.add(&rninc, Some(nmacs));
+    nrows.push(TrainRow {
+        name: rninc.name.clone(),
+        ns_per_iter: rninc.median.as_nanos() as f64,
+        rows_per_s: ninc_rows_s,
+    });
+
+    assert_eq!(nsession.x(), &xnf, "network stream state diverged from the mirror");
+    let ngot = nsession.forward_threads(1);
+    let nwant = nplan.execute_threads(&xnf, 1);
+    for (g, b) in ngot.iter().zip(&nwant) {
+        assert_eq!(g.out.data(), b.out.data());
+        assert_eq!(g.out_wide.data(), b.out_wide.data());
+        for (gs, bs) in g.layer_stats.iter().zip(&b.layer_stats) {
+            assert_eq!(gs.overflow_events, bs.overflow_events);
+            assert_eq!(gs.abs_err_sum, bs.abs_err_sum);
+            assert_eq!(gs.outputs, bs.outputs);
+        }
+    }
+    println!("  network bit-identity verified against the full recompute");
+    println!(
+        "stream net ({net_batch} rows x {widths:?}, {ticks} ticks/iter): incremental d=5% \
+         {:.2}x over full forward",
+        rnfull.median.as_secs_f64() / rninc.median.as_secs_f64().max(1e-12)
+    );
+    let net_label = if quick {
+        "net 64-32-16-4 @ P16N4, 1 thread"
+    } else {
+        "net 256-128-64-10 @ P16N4, 1 thread"
+    };
+    groups.push((net_label, nrows));
+    journal.flush();
+
+    // Refresh the auto-recorded §Perf-Stream block of EXPERIMENTS.md.
+    let block = a2q::perf::render_stream_block(
+        &format!(
+            "`cargo bench --bench stream_delta` (release{})",
+            if quick { ", quick" } else { "" }
+        ),
+        &groups,
+    );
+    match a2q::perf::update_experiments_stream_block(&block) {
+        Ok(true) => println!("EXPERIMENTS.md §Perf-Stream block updated"),
+        Ok(false) => println!("EXPERIMENTS.md markers not found; stream block not updated"),
+        Err(e) => eprintln!("EXPERIMENTS.md update failed: {e}"),
+    }
+}

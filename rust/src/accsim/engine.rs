@@ -320,8 +320,8 @@ pub fn dot_accumulate_multi(x: &[i64], w: &[i64], modes: &[AccMode]) -> Vec<DotR
 /// order that turns the per-(row, channel) bound gate into one
 /// `partition_point` per row, plus the weight panels the safe-span GEMM
 /// streams.
-struct LayerKernel<'w> {
-    w: &'w QTensor,
+pub(crate) struct LayerKernel<'w> {
+    pub(crate) w: &'w QTensor,
     /// Channel ids sorted ascending by integer l1 norm (stable, so the
     /// order — and every downstream result — is deterministic).
     order: Vec<usize>,
@@ -335,7 +335,7 @@ struct LayerKernel<'w> {
     /// dots for safe channels).
     packed: Option<PackedWeights>,
     /// The plan-time dispatch decision, for observability.
-    choice: KernelChoice,
+    pub(crate) choice: KernelChoice,
 }
 
 impl<'w> LayerKernel<'w> {
@@ -380,6 +380,50 @@ impl<'w> LayerKernel<'w> {
         let xm = xmax as i128;
         self.l1_sorted.partition_point(|&l1| l1 * xm <= cap)
     }
+
+    /// Exact wide accumulators of *every* channel for `rows` flat input
+    /// rows, written by **original channel id** (`acc[ri * c_out + c]`):
+    /// the initial / refresh state of the incremental stream sessions
+    /// ([`super::stream`]). Runs the packed safe-span GEMM when the layer
+    /// packed (then scatters out of the sorted order), or unpacked wide
+    /// dots on the i32-rejected fallback — the same arithmetic stage 2 of
+    /// [`simulate_block`] would run, so a maintained accumulator is
+    /// bit-identical to a recompute by construction.
+    pub(crate) fn accumulate_rows(
+        &self,
+        x: &[i64],
+        rows: usize,
+        scratch: &mut Vec<i64>,
+        acc: &mut [i64],
+    ) {
+        let c_out = self.w.c_out;
+        let k = self.w.k;
+        debug_assert_eq!(x.len(), rows * k);
+        debug_assert_eq!(acc.len(), rows * c_out);
+        if rows == 0 || c_out == 0 {
+            return;
+        }
+        match &self.packed {
+            Some(packed) => {
+                scratch.clear();
+                scratch.resize(rows * c_out, 0);
+                packed.gemm_into(x, rows, c_out, scratch);
+                for ri in 0..rows {
+                    for (ci, &c) in self.order.iter().enumerate() {
+                        acc[ri * c_out + c] = scratch[ri * c_out + ci];
+                    }
+                }
+            }
+            None => {
+                for ri in 0..rows {
+                    let xrow = &x[ri * k..(ri + 1) * k];
+                    for (c, a) in acc[ri * c_out..(ri + 1) * c_out].iter_mut().enumerate() {
+                        *a = wide_dot(xrow, self.w.row(c));
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Per-worker scratch arena for the block kernel, reused across row blocks
@@ -409,6 +453,18 @@ struct SimScratch {
 /// every mode of `plan`, writing dequantized per-mode outputs into
 /// `mode_out[slot]` and the wide outputs into `wide_out` (each
 /// `rows * c_out`), and accumulating per-mode stats into `stats`.
+///
+/// `acc`, when present, is a maintained exact-wide accumulator block
+/// (`rows * c_out`, by original channel id) from an incremental
+/// [`super::stream`] session: stage 2 (the safe-span GEMM) is skipped and
+/// safe channels read their wide values straight out of `acc` instead.
+/// Everything else — the stage-1 partition against the *current* per-row
+/// `max|x|`, the stage-3 register simulation of unsafe channels, stats
+/// recording and the dequantized epilogue — is the same code either way,
+/// so outputs and every [`OverflowStats`] counter are bit-identical to a
+/// full recompute by construction (the accumulator invariant
+/// `acc[ri * c_out + c] == Σ_j x[ri][j] * w[c][j]` makes the values equal;
+/// shared code makes everything downstream equal).
 #[allow(clippy::too_many_arguments)]
 fn simulate_block(
     kern: &LayerKernel,
@@ -420,6 +476,7 @@ fn simulate_block(
     mode_out: &mut [&mut [f32]],
     wide_out: &mut [f32],
     stats: &mut [OverflowStats],
+    acc: Option<&[i64]>,
 ) {
     let w = kern.w;
     let c_out = w.c_out;
@@ -429,6 +486,7 @@ fn simulate_block(
     debug_assert_eq!(wide_out.len(), rows * c_out);
     debug_assert_eq!(mode_out.len(), n_modes);
     debug_assert_eq!(stats.len(), n_modes);
+    debug_assert!(acc.is_none_or(|a| a.len() == rows * c_out));
     if rows == 0 || c_out == 0 {
         return;
     }
@@ -447,9 +505,10 @@ fn simulate_block(
         ws.n_safe.push(ns);
     }
 
-    // Stage 2: packed blocked GEMM over the common safe prefix.
+    // Stage 2: packed blocked GEMM over the common safe prefix (skipped
+    // entirely when the caller maintains the accumulators incrementally).
     ws.gemm.clear();
-    if n_common > 0 {
+    if n_common > 0 && acc.is_none() {
         match &kern.packed {
             Some(packed) => {
                 ws.gemm.resize(rows * n_common, 0);
@@ -481,13 +540,24 @@ fn simulate_block(
         let xmax = ws.xmax[ri];
         let n_safe = ws.n_safe[ri];
 
-        // Safe-span wides: the GEMM prefix plus the per-row remainder the
-        // block-wide tile could not cover.
-        for (ci, &c) in kern.order[..n_common].iter().enumerate() {
-            ws.wide_int[c] = ws.gemm[ri * n_common + ci];
-        }
-        for &c in &kern.order[n_common..n_safe] {
-            ws.wide_int[c] = wide_dot(xrow, w.row(c));
+        // Safe-span wides: the maintained accumulators when streaming,
+        // else the GEMM prefix plus the per-row remainder the block-wide
+        // tile could not cover.
+        match acc {
+            Some(a) => {
+                let arow = &a[row_off..row_off + c_out];
+                for &c in &kern.order[..n_safe] {
+                    ws.wide_int[c] = arow[c];
+                }
+            }
+            None => {
+                for (ci, &c) in kern.order[..n_common].iter().enumerate() {
+                    ws.wide_int[c] = ws.gemm[ri * n_common + ci];
+                }
+                for &c in &kern.order[n_common..n_safe] {
+                    ws.wide_int[c] = wide_dot(xrow, w.row(c));
+                }
+            }
         }
 
         // Stage 3: register simulation only for the channels the bound
@@ -630,13 +700,15 @@ struct LayerTask<'a> {
     mode_out: Vec<&'a mut [f32]>,
     wide_out: &'a mut [f32],
     stats: &'a mut [OverflowStats],
+    /// Maintained accumulator rows for this block (stream sessions only).
+    acc: Option<&'a [i64]>,
 }
 
 /// Bounds-aware execution plan for one quantized layer: the mode partition
 /// plus the l1-sorted channel order and packed weight panels that drive the
 /// safety-partitioned kernel.
 pub struct LayerPlan<'w> {
-    kern: LayerKernel<'w>,
+    pub(crate) kern: LayerKernel<'w>,
     plan: ModePlan,
 }
 
@@ -668,10 +740,26 @@ impl<'w> LayerPlan<'w> {
     /// Execute over a batch with an explicit worker count (tests use this to
     /// pin thread counts; [`Self::execute`] picks one automatically).
     pub fn execute_threads(&self, x: &IntMatrix, x_scale: f32, threads: usize) -> Vec<MatmulStats> {
+        self.execute_threads_acc(x, x_scale, threads, None)
+    }
+
+    /// [`Self::execute_threads`] with maintained layer accumulators
+    /// (`batch * c_out`, original channel order) supplied by an incremental
+    /// [`super::stream::LayerStreamSession`]: the safe-span GEMM is skipped
+    /// and safe channels resolve from `acc` instead — bit-identical to the
+    /// batch path by the accumulator invariant.
+    pub(crate) fn execute_threads_acc(
+        &self,
+        x: &IntMatrix,
+        x_scale: f32,
+        threads: usize,
+        l0: Option<&[i64]>,
+    ) -> Vec<MatmulStats> {
         let batch = x.rows();
         let w = self.kern.w;
         assert_eq!(x.cols(), w.k, "input cols {} vs layer k {}", x.cols(), w.k);
         let c_out = w.c_out;
+        debug_assert!(l0.is_none_or(|a| a.len() == batch * c_out));
         let n_modes = self.plan.modes.len();
         if n_modes == 0 {
             return Vec::new();
@@ -706,12 +794,13 @@ impl<'w> LayerPlan<'w> {
                                 .collect(),
                             wide_out: wide_iter.next().expect("wide block slice"),
                             stats: stats_iter.next().expect("stats block slice"),
+                            acc: l0.map(|a| &a[r0 * c_out..r1 * c_out]),
                         }))
                     })
                     .collect()
             };
             run_queue(tasks, t, SimScratch::default, |ws, task| {
-                let LayerTask { r0, r1, mut mode_out, wide_out, stats } = task;
+                let LayerTask { r0, r1, mut mode_out, wide_out, stats, acc } = task;
                 simulate_block(
                     &self.kern,
                     &self.plan,
@@ -722,6 +811,7 @@ impl<'w> LayerPlan<'w> {
                     &mut mode_out,
                     wide_out,
                     stats,
+                    acc,
                 );
             });
             for bi in 0..n_blocks {
@@ -758,7 +848,7 @@ impl<'w> LayerPlan<'w> {
 /// Pick a worker count for a `batch x c_out x k` MAC grid simulated under
 /// `n_modes` register models. Honors the `A2Q_ACCSIM_THREADS` environment
 /// variable when set.
-fn worker_count(batch: usize, c_out: usize, k: usize, n_modes: usize) -> usize {
+pub(crate) fn worker_count(batch: usize, c_out: usize, k: usize, n_modes: usize) -> usize {
     if let Some(n) = crate::linalg::env_threads("A2Q_ACCSIM_THREADS") {
         return n;
     }
@@ -854,6 +944,9 @@ struct NetTask<'a> {
     out: Vec<&'a mut [f32]>,
     out_wide: Vec<&'a mut [f32]>,
     stats: &'a mut [OverflowStats],
+    /// Maintained layer-0 accumulator rows for this block (stream sessions
+    /// only; deeper layers always recompute — the NNUE idiom).
+    l0: Option<&'a [i64]>,
 }
 
 /// Bounds-aware execution plan for a whole [`QNetwork`]: the multi-layer
@@ -872,10 +965,10 @@ struct NetTask<'a> {
 /// Bit-exact against composing the scalar reference per mode
 /// ([`crate::model::network_forward_ref`]).
 pub struct NetworkPlan<'n> {
-    net: &'n QNetwork,
-    modes: Vec<AccMode>,
+    pub(crate) net: &'n QNetwork,
+    pub(crate) modes: Vec<AccMode>,
     /// One kernel context (sorted order + packed panels) per layer.
-    kernels: Vec<LayerKernel<'n>>,
+    pub(crate) kernels: Vec<LayerKernel<'n>>,
 }
 
 impl<'n> NetworkPlan<'n> {
@@ -910,6 +1003,10 @@ impl<'n> NetworkPlan<'n> {
 
     /// Stream rows `r0..r1` through every layer, writing the final layer's
     /// outputs straight into the task's slices; the single-threaded core.
+    /// `l0` is the block's maintained layer-0 accumulator slice when an
+    /// incremental stream session is driving the forward (only layer 0 can
+    /// consume it: all modes are still fused in one group there, and it is
+    /// the only layer whose input the session tracks deltas against).
     #[allow(clippy::too_many_arguments)]
     fn forward_block(
         &self,
@@ -920,6 +1017,7 @@ impl<'n> NetworkPlan<'n> {
         out: &mut [&mut [f32]],
         out_wide: &mut [&mut [f32]],
         stats: &mut [OverflowStats],
+        l0: Option<&[i64]>,
     ) {
         let n_modes = self.modes.len();
         let depth = self.net.layers.len();
@@ -970,6 +1068,7 @@ impl<'n> NetworkPlan<'n> {
                         &mut refs,
                         wide,
                         gstats,
+                        if li == 0 { l0 } else { None },
                     );
                 }
                 for (gi, &slot) in g.slots.iter().enumerate() {
@@ -1015,6 +1114,20 @@ impl<'n> NetworkPlan<'n> {
     /// Execute over a batch with an explicit worker count (tests pin thread
     /// counts; [`Self::execute`] picks one from the network's MAC grid).
     pub fn execute_threads(&self, x: &IntMatrix, threads: usize) -> Vec<NetworkStats> {
+        self.execute_threads_l0(x, threads, None)
+    }
+
+    /// [`Self::execute_threads`] with maintained layer-0 accumulators
+    /// (`batch * c_out_0`, original channel order) supplied by an
+    /// incremental [`super::stream::StreamSession`]: layer 0 skips its
+    /// safe-span GEMM and resolves safe channels from `l0`; every deeper
+    /// layer recomputes as usual.
+    pub(crate) fn execute_threads_l0(
+        &self,
+        x: &IntMatrix,
+        threads: usize,
+        l0: Option<&[i64]>,
+    ) -> Vec<NetworkStats> {
         let batch = x.rows();
         assert_eq!(
             x.cols(),
@@ -1026,6 +1139,8 @@ impl<'n> NetworkPlan<'n> {
         let n_modes = self.modes.len();
         let depth = self.net.layers.len();
         let c_last = self.net.output_dim();
+        let c0 = self.net.layers.first().map_or(0, |l| l.weights.c_out);
+        debug_assert!(l0.is_none_or(|a| depth >= 1 && a.len() == batch * c0));
         if n_modes == 0 {
             return Vec::new();
         }
@@ -1085,13 +1200,14 @@ impl<'n> NetworkPlan<'n> {
                             out,
                             out_wide,
                             stats: stats_iter.next().expect("stats block slice"),
+                            l0: l0.map(|a| &a[r0 * c0..r1 * c0]),
                         }))
                     })
                     .collect()
             };
             run_queue(tasks, t, NetWorker::default, |ws, task| {
-                let NetTask { r0, r1, mut out, mut out_wide, stats } = task;
-                self.forward_block(x, r0, r1, ws, &mut out, &mut out_wide, stats);
+                let NetTask { r0, r1, mut out, mut out_wide, stats, l0 } = task;
+                self.forward_block(x, r0, r1, ws, &mut out, &mut out_wide, stats, l0);
             });
             for bi in 0..n_blocks {
                 let base = bi * stats_len;

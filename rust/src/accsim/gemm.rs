@@ -37,6 +37,14 @@
 //! and every product is exact, so *all* paths are bit-identical to any
 //! other MAC order: the GEMM output *is* the `AccMode::Wide` result for
 //! those channels regardless of dispatch.
+//!
+//! [`FeatureMajorWeights`] is the *transposed* sibling for the streaming
+//! engine ([`crate::accsim::stream`]): the same codes laid out
+//! column-major (one contiguous column per input feature), so an input
+//! delta `d` on feature `j` updates every channel's maintained accumulator
+//! with one `acc += w[:, j] * d` pass — dispatched through the same
+//! [`KernelPath`] (scalar reference, AVX2/NEON delta kernels, or a
+//! compressed nonzero-column walk for sparse A2Q layers).
 
 use std::cell::RefCell;
 
@@ -212,6 +220,148 @@ impl PackedWeights {
             }
         }
     }
+}
+
+/// Feature-major weight columns at the narrowest width that holds every
+/// code (`i32` feeds the SIMD delta kernels; wider codes keep an exact
+/// scalar `i64` column).
+enum FeatCols {
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+/// Weight codes packed once per stream session into contiguous
+/// *feature-major* columns: `cols[j * c_out + c]` is `w[c][j]`, channels in
+/// their **original** order (matching the engine's channel-indexed
+/// accumulator layout, not the l1-sorted packed order).
+///
+/// This is the NNUE-style update operand: for a sparse input delta
+/// `{(j, old, new)}` the maintained per-row accumulators move by
+/// `acc[c] += w[c][j] * (new - old)` for every channel at once —
+/// [`FeatureMajorWeights::apply_delta`] is exactly that column AXPY, exact
+/// in i64 on every path and therefore bit-identical to recomputing the
+/// dots from scratch. On [`KernelPath::SparseSimd`] the columns are stored
+/// compressed (A2Q-constrained layers are 70–95% zeros, so most of each
+/// column is skippable); on [`KernelPath::Simd`] a 4-lane widening
+/// multiply-add kernel runs when the codes fit `i32`.
+pub struct FeatureMajorWeights {
+    cols: FeatCols,
+    c_out: usize,
+    k: usize,
+    /// Kernel path fixed at pack time.
+    path: KernelPath,
+    /// Nonzero fraction of the weight codes.
+    density: f64,
+    /// CSC layout (populated only on the `SparseSimd` path): column `j`'s
+    /// nonzeros are `ch/val[col_ptr[j]..col_ptr[j + 1]]`.
+    col_ptr: Vec<usize>,
+    ch: Vec<u32>,
+    val: Vec<i64>,
+}
+
+impl FeatureMajorWeights {
+    /// Pack `w` feature-major with auto kernel dispatch (see
+    /// [`KernelPath::choose`]). Unlike [`PackedWeights::pack`] this never
+    /// fails: codes beyond `i32` simply keep the exact scalar i64 column.
+    pub fn pack(w: &QTensor) -> FeatureMajorWeights {
+        let density = 1.0 - w.sparsity();
+        FeatureMajorWeights::pack_with(w, KernelPath::choose(density))
+    }
+
+    /// [`FeatureMajorWeights::pack`] with the kernel path pinned
+    /// explicitly (stream sessions pass their layer plan's resolved path
+    /// so `A2Q_KERNEL` forcing reaches the delta kernels too).
+    pub fn pack_with(w: &QTensor, path: KernelPath) -> FeatureMajorWeights {
+        let (c_out, k) = (w.c_out, w.k);
+        assert!(c_out <= u32::MAX as usize, "channel count {c_out} exceeds the CSC index width");
+        let lo = w.codes.iter().copied().min().unwrap_or(0);
+        let hi = w.codes.iter().copied().max().unwrap_or(0);
+        let cols = if lo >= i32::MIN as i64 && hi <= i32::MAX as i64 {
+            FeatCols::I32(feat_major(w, |v| v as i32))
+        } else {
+            FeatCols::I64(feat_major(w, |v| v))
+        };
+        let (col_ptr, ch, val) = if path == KernelPath::SparseSimd {
+            let mut col_ptr = Vec::with_capacity(k + 1);
+            let (mut ch, mut val) = (Vec::new(), Vec::new());
+            col_ptr.push(0);
+            for j in 0..k {
+                for c in 0..c_out {
+                    let v = w.codes[c * k + j];
+                    if v != 0 {
+                        ch.push(c as u32);
+                        val.push(v);
+                    }
+                }
+                col_ptr.push(ch.len());
+            }
+            (col_ptr, ch, val)
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
+        let density = 1.0 - w.sparsity();
+        FeatureMajorWeights { cols, c_out, k, path, density, col_ptr, ch, val }
+    }
+
+    /// Number of output channels (the column length).
+    pub fn channels(&self) -> usize {
+        self.c_out
+    }
+
+    /// Number of input features (the column count).
+    pub fn features(&self) -> usize {
+        self.k
+    }
+
+    /// The kernel path fixed at pack time.
+    pub fn path(&self) -> KernelPath {
+        self.path
+    }
+
+    /// Nonzero fraction of the packed weight codes.
+    pub fn density(&self) -> f64 {
+        self.density
+    }
+
+    /// `acc[c] += w[c][feature] * d` for every channel `c`, exact in i64
+    /// and bit-identical across paths (every product is exact, and `+` on
+    /// disjoint channels has no ordering freedom). `acc` is indexed by
+    /// original channel id and must be `channels()` long.
+    pub fn apply_delta(&self, feature: usize, d: i64, acc: &mut [i64]) {
+        debug_assert!(feature < self.k, "feature {feature} of {}", self.k);
+        debug_assert_eq!(acc.len(), self.c_out);
+        if d == 0 {
+            return;
+        }
+        if self.path == KernelPath::SparseSimd {
+            for e in self.col_ptr[feature]..self.col_ptr[feature + 1] {
+                acc[self.ch[e] as usize] += self.val[e] * d;
+            }
+            return;
+        }
+        let (j0, j1) = (feature * self.c_out, (feature + 1) * self.c_out);
+        match &self.cols {
+            FeatCols::I32(cols) => kernel::delta_col_i32(
+                &cols[j0..j1],
+                d,
+                acc,
+                self.path == KernelPath::Simd && simd_available(),
+            ),
+            FeatCols::I64(cols) => kernel::delta_col_scalar_i64(&cols[j0..j1], d, acc),
+        }
+    }
+}
+
+/// Transpose `w`'s row-major codes into feature-major columns.
+fn feat_major<T: Copy + Default>(w: &QTensor, cast: impl Fn(i64) -> T) -> Vec<T> {
+    let (c_out, k) = (w.c_out, w.k);
+    let mut cols = vec![T::default(); k * c_out];
+    for c in 0..c_out {
+        for (j, &code) in w.row(c).iter().enumerate() {
+            cols[j * c_out + c] = cast(code);
+        }
+    }
+    cols
 }
 
 /// Narrow the i64 `x` operand to the i16 SIMD range. Values outside
@@ -464,6 +614,63 @@ mod tests {
             assert_eq!(out, vec![0i64; 6], "{path:?}");
             let mut empty: Vec<i64> = vec![];
             packed.gemm_into(&[], 0, 3, &mut empty);
+        }
+    }
+
+    #[test]
+    fn feature_major_delta_matches_column_recompute_on_every_path() {
+        let mut rng = Rng::new(0x77);
+        for keep in [0.1, 0.6, 1.0] {
+            for case in 0..8 {
+                let c_out = 1 + rng.below(20);
+                let k = 1 + rng.below(40);
+                // i32-overflowing amp on every third case pins the scalar
+                // i64 column fallback against the same reference.
+                let amp = if case % 3 == 2 { 40_000 } else { 7 };
+                let w = sparse_layer(c_out, k, amp, keep, &mut rng);
+                for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+                    let fmw = FeatureMajorWeights::pack_with(&w, path);
+                    assert_eq!(fmw.path(), path);
+                    assert_eq!(fmw.channels(), c_out);
+                    assert_eq!(fmw.features(), k);
+                    assert!((fmw.density() - (1.0 - w.sparsity())).abs() < 1e-12);
+                    let mut acc: Vec<i64> =
+                        (0..c_out).map(|_| rng.below(1001) as i64 - 500).collect();
+                    let mut want = acc.clone();
+                    for _ in 0..4 {
+                        let j = rng.below(k);
+                        let d = rng.below(131_071) as i64 - 65_535;
+                        fmw.apply_delta(j, d, &mut acc);
+                        for (c, wv) in want.iter_mut().enumerate() {
+                            *wv += w.row(c)[j] * d;
+                        }
+                    }
+                    assert_eq!(acc, want, "{path:?} keep={keep} case {case}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn feature_major_handles_codes_beyond_i32_and_zero_delta() {
+        // Row 0 = [1, i32::MAX + 7], row 1 = [-3, 0]: forces the i64
+        // column layout on every path (PackedWeights would reject this).
+        let w = QTensor {
+            codes: vec![1, i32::MAX as i64 + 7, -3, 0],
+            scales: vec![1.0; 2],
+            bias: vec![0.0; 2],
+            c_out: 2,
+            k: 2,
+        };
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            let fmw = FeatureMajorWeights::pack_with(&w, path);
+            let mut acc = vec![10i64, -4];
+            fmw.apply_delta(1, 0, &mut acc);
+            assert_eq!(acc, vec![10, -4], "{path:?}: zero delta must be a no-op");
+            fmw.apply_delta(1, -2, &mut acc);
+            assert_eq!(acc, vec![10 - 2 * (i32::MAX as i64 + 7), -4], "{path:?} feature 1");
+            fmw.apply_delta(0, 3, &mut acc);
+            assert_eq!(acc, vec![10 - 2 * (i32::MAX as i64 + 7) + 3, -4 - 9], "{path:?} feature 0");
         }
     }
 }

@@ -85,6 +85,20 @@ impl IntMatrix {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Element at `(r, c)`; panics out of bounds.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i64 {
+        assert!(r < self.rows && c < self.cols, "({r}, {c}) out of [{}, {}]", self.rows, self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Overwrite the element at `(r, c)`; panics out of bounds.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i64) {
+        assert!(r < self.rows && c < self.cols, "({r}, {c}) out of [{}, {}]", self.rows, self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
     /// Iterate rows as flat slices (handles `cols == 0` gracefully).
     pub fn iter_rows(&self) -> impl Iterator<Item = &[i64]> + '_ {
         let cols = self.cols;

@@ -27,8 +27,12 @@
 //! [`dot_accumulate_multi`]; whole-network sweeps go through
 //! [`NetworkPlan`] / [`network_forward_multi`], which stream a batch
 //! through every layer of a [`crate::model::QNetwork`] (with inter-layer
-//! requantization) in one thread-scoped pass. Throughput history lives in
-//! EXPERIMENTS.md §Perf and BENCH_accsim.json.
+//! requantization) in one thread-scoped pass. [`stream`] adds NNUE-style
+//! incremental sessions over the same engine: maintained first-layer
+//! accumulators updated per sparse input delta (feature-major column
+//! kernels in [`gemm`]), bit-identical to a full recompute. Throughput
+//! history lives in EXPERIMENTS.md §Perf / §Perf-Stream and
+//! BENCH_accsim.json.
 
 pub mod dot;
 pub mod engine;
@@ -37,13 +41,14 @@ pub mod intmat;
 pub mod matmul;
 pub mod reorder;
 pub mod stats;
+pub mod stream;
 
 pub use dot::{dot_accumulate, AccMode, DotResult};
 pub use engine::{
     dot_accumulate_multi, min_safe_p, network_forward_multi, qlinear_forward_multi, KernelChoice,
     LayerPlan, ModePlan, NetworkPlan, NetworkStats,
 };
-pub use gemm::PackedWeights;
+pub use gemm::{FeatureMajorWeights, PackedWeights};
 // The GEMM kernel dispatch enum lives with the float core in
 // `crate::linalg::kernel`; re-export it here because the integer engine's
 // plan APIs (`LayerPlan::new_with_path` etc.) take it too.
@@ -54,3 +59,4 @@ pub use matmul::{
 };
 pub use reorder::{reorder_study, ReorderScratch, ReorderStudy};
 pub use stats::OverflowStats;
+pub use stream::{LayerStreamSession, StreamDelta, StreamSession, DEFAULT_REFRESH_THRESHOLD};

@@ -1,0 +1,503 @@
+//! NNUE-style incremental accumulation sessions for streaming sparse-delta
+//! inference.
+//!
+//! The engine's batch path recomputes every dot product from scratch on
+//! every call. Streaming workloads (the `a2q serve` scenario) change only a
+//! handful of input features between consecutive forwards — exactly the
+//! regime efficient-evaluation NNUE engines exploit: *accumulate once, then
+//! update only changed features*. A session here owns the current input
+//! batch plus one exact i64 accumulator per `(row, channel)` of the first
+//! layer, and a sparse delta `{(row, feature, old, new)}` moves every
+//! channel of that row by one feature-major column AXPY,
+//! `acc[c] += w[c][j] * (new - old)` (see
+//! [`super::gemm::FeatureMajorWeights`], dispatched through the layer's
+//! [`crate::linalg::KernelPath`]). A forward then hands the maintained
+//! accumulators to the engine, which skips its safe-span GEMM (stage 2) and
+//! resolves provably-safe channels straight from them.
+//!
+//! **Determinism contract.** The incremental path is bit-identical to a
+//! full batch recompute — outputs *and* every [`super::OverflowStats`]
+//! counter — at any thread count and under any forced kernel path. This is
+//! by construction, not by tolerance: every delta product is exact in i64
+//! (i64 addition is commutative and associative, so maintained accumulators
+//! equal recomputed dots exactly), and the engine re-runs its per-row
+//! safety partition (stage 1) and fused register simulation (stage 3)
+//! against the session's *current* input matrix — only the arithmetic
+//! source of the already-exact safe-span wides changes. A delta that grows
+//! a row's `max|x|` therefore flips channels from the safe prefix back
+//! into the simulated remainder exactly as a recompute would, and the
+//! Eq. 15 guarantee is re-checked, never cached.
+//!
+//! **Refresh-threshold policy.** Incremental updates win only while deltas
+//! are sparse: one delta costs `O(c_out)` (dense column) or
+//! `O(nnz(column))` (sparse path), so a tick touching most of a row's `k`
+//! features costs more than the packed GEMM that recomputes the row in one
+//! pass. Each [`StreamSession::apply`] call counts deltas per row; rows at
+//! or above `threshold * k` deltas are *refreshed* — recomputed through the
+//! layer's batch kernel ([`LayerKernel::accumulate_rows`]) — while rows
+//! below it take the incremental column walks. The default threshold is
+//! [`DEFAULT_REFRESH_THRESHOLD`], overridable per process with the
+//! `A2Q_STREAM_REFRESH` environment variable (read at session creation,
+//! never cached: `0.0` refreshes every touched row, any value `> 1.0`
+//! disables refresh entirely) and per session with
+//! `with_refresh_threshold` (which wins over the environment). Either way
+//! the result is bit-identical; the threshold only picks which exact
+//! arithmetic computes it.
+//!
+//! [`StreamSession`] streams a whole [`NetworkPlan`] (accumulators are
+//! maintained for layer 0, whose input the session tracks; deeper layers
+//! recompute as usual — the NNUE idiom, where only the first layer sees
+//! the sparse input encoding); [`LayerStreamSession`] is the single-layer
+//! variant over a [`LayerPlan`]. Throughput history lives in EXPERIMENTS.md
+//! §Perf-Stream and the `accsim/stream_delta_*` rows of BENCH_accsim.json.
+
+use super::engine::{worker_count, LayerKernel, LayerPlan, NetworkPlan, NetworkStats};
+use super::gemm::FeatureMajorWeights;
+use super::intmat::IntMatrix;
+use super::matmul::MatmulStats;
+
+/// Default refresh threshold: a row is refreshed through the batch kernel
+/// once a single `apply` call delivers deltas to at least half its
+/// features.
+pub const DEFAULT_REFRESH_THRESHOLD: f64 = 0.5;
+
+/// One sparse input change: `x[row][feature]` moves from `old` to `new`
+/// (integer codes on the layer-0 input grid).
+///
+/// Carrying `old` makes the protocol self-checking: the session asserts it
+/// against its own state, so a producer that drops or reorders ticks fails
+/// loudly instead of silently diverging from the batch reference. Repeated
+/// deltas to the same `(row, feature)` within one call chain in order
+/// (each `old` must match the running value).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamDelta {
+    /// Batch row the change applies to.
+    pub row: usize,
+    /// Input feature (column of the session's input matrix).
+    pub feature: usize,
+    /// The code currently stored at `(row, feature)`.
+    pub old: i64,
+    /// The replacement code.
+    pub new: i64,
+}
+
+/// Parse a refresh threshold, falling back to the default on anything
+/// non-finite, negative, or unparseable.
+fn refresh_threshold_from(s: Option<&str>) -> f64 {
+    s.and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|t| t.is_finite() && *t >= 0.0)
+        .unwrap_or(DEFAULT_REFRESH_THRESHOLD)
+}
+
+/// The process-wide default threshold: `A2Q_STREAM_REFRESH` when set and
+/// valid, else [`DEFAULT_REFRESH_THRESHOLD`]. Read on every call (session
+/// creation is off the hot path), so tests and long-lived processes see
+/// changes immediately — unlike the OnceLock-cached `A2Q_KERNEL`.
+fn env_refresh_threshold() -> f64 {
+    let v = std::env::var("A2Q_STREAM_REFRESH").ok();
+    refresh_threshold_from(v.as_deref())
+}
+
+/// The session core shared by [`StreamSession`] and [`LayerStreamSession`]:
+/// the current input batch, the maintained per-`(row, channel)` exact wide
+/// accumulators of the tracked layer, and the feature-major update operand.
+struct StreamAcc {
+    /// Current input codes (updated in place by deltas).
+    x: IntMatrix,
+    /// Exact i64 accumulators, `rows * c_out`, original channel order —
+    /// invariant: `acc[r * c_out + c] == x.row(r) . w.row(c)` after every
+    /// `apply`.
+    acc: Vec<i64>,
+    /// Feature-major columns of the tracked layer's weights.
+    fmw: FeatureMajorWeights,
+    /// Rows receiving `>= refresh_threshold * k` deltas in one call are
+    /// recomputed through the batch kernel instead of updated per column.
+    refresh_threshold: f64,
+    /// Cumulative count of row refreshes (observability for the policy).
+    refreshes: u64,
+    /// Per-row delta counts for the current `apply` call (reset after).
+    counts: Vec<u32>,
+    /// Rows with a nonzero count in the current `apply` call.
+    touched: Vec<usize>,
+    /// Scratch for the refresh GEMM.
+    scratch: Vec<i64>,
+}
+
+impl StreamAcc {
+    fn new(x: IntMatrix, fmw: FeatureMajorWeights, kern: &LayerKernel<'_>) -> StreamAcc {
+        let rows = x.rows();
+        let c_out = fmw.channels();
+        let mut st = StreamAcc {
+            acc: vec![0; rows * c_out],
+            fmw,
+            refresh_threshold: env_refresh_threshold(),
+            refreshes: 0,
+            counts: vec![0; rows],
+            touched: Vec::new(),
+            scratch: Vec::new(),
+            x,
+        };
+        kern.accumulate_rows(st.x.data(), rows, &mut st.scratch, &mut st.acc);
+        st
+    }
+
+    /// Apply one tick of deltas: count per-row touches, then either walk
+    /// the touched columns (below the refresh cap) or recompute the row
+    /// through the batch kernel (at or above it). Panics on out-of-range
+    /// rows/features and on a stale `old` value.
+    fn apply(&mut self, kern: &LayerKernel<'_>, deltas: &[StreamDelta]) {
+        let rows = self.x.rows();
+        let k = self.x.cols();
+        let c_out = self.fmw.channels();
+        for d in deltas {
+            assert!(d.row < rows, "delta row {} of {rows}", d.row);
+            assert!(d.feature < k, "delta feature {} of {k}", d.feature);
+            if self.counts[d.row] == 0 {
+                self.touched.push(d.row);
+            }
+            self.counts[d.row] = self.counts[d.row].saturating_add(1);
+        }
+        let cap = self.refresh_threshold * k as f64;
+        for d in deltas {
+            let cur = self.x.get(d.row, d.feature);
+            assert_eq!(
+                cur, d.old,
+                "stale delta: row {} feature {} holds {cur} but delta claims old {}",
+                d.row, d.feature, d.old
+            );
+            self.x.set(d.row, d.feature, d.new);
+            if (self.counts[d.row] as f64) < cap {
+                let arow = &mut self.acc[d.row * c_out..(d.row + 1) * c_out];
+                self.fmw.apply_delta(d.feature, d.new - d.old, arow);
+            }
+        }
+        for &r in &self.touched {
+            if (self.counts[r] as f64) >= cap {
+                self.refreshes += 1;
+                kern.accumulate_rows(
+                    self.x.row(r),
+                    1,
+                    &mut self.scratch,
+                    &mut self.acc[r * c_out..(r + 1) * c_out],
+                );
+            }
+            self.counts[r] = 0;
+        }
+        self.touched.clear();
+    }
+}
+
+/// Incremental streaming session over a whole [`NetworkPlan`]: maintains
+/// exact layer-0 accumulators across sparse input deltas and forwards the
+/// current batch bit-identically to [`NetworkPlan::execute`] on the same
+/// input. See the module doc for the policy and determinism contract.
+pub struct StreamSession<'p, 'n> {
+    plan: &'p NetworkPlan<'n>,
+    st: StreamAcc,
+}
+
+impl<'p, 'n> StreamSession<'p, 'n> {
+    /// Open a session on `plan` with initial batch `x` (quantized layer-0
+    /// input codes, `[batch, input_dim]`), paying one full layer-0
+    /// accumulation up front. Panics on an empty network or a shape
+    /// mismatch.
+    pub fn new(plan: &'p NetworkPlan<'n>, x: IntMatrix) -> StreamSession<'p, 'n> {
+        assert!(plan.depth() >= 1, "stream session needs at least one layer");
+        assert_eq!(
+            x.cols(),
+            plan.net.input_dim(),
+            "input cols {} vs network input dim {}",
+            x.cols(),
+            plan.net.input_dim()
+        );
+        let kern = &plan.kernels[0];
+        // Pack with the plan's resolved path so `A2Q_KERNEL` / forced
+        // dispatch reaches the delta kernels too.
+        let fmw = FeatureMajorWeights::pack_with(&plan.net.layers[0].weights, kern.choice.path);
+        StreamSession { st: StreamAcc::new(x, fmw, kern), plan }
+    }
+
+    /// Override the refresh threshold for this session (wins over the
+    /// `A2Q_STREAM_REFRESH` environment default). `0.0` refreshes every
+    /// touched row; any value `> 1.0` never refreshes.
+    pub fn with_refresh_threshold(mut self, t: f64) -> Self {
+        assert!(t.is_finite() && t >= 0.0, "refresh threshold {t} must be finite and >= 0");
+        self.st.refresh_threshold = t;
+        self
+    }
+
+    /// Apply one tick of sparse deltas to the session's input (and its
+    /// maintained layer-0 accumulators). Panics on out-of-range indices or
+    /// a stale `old` value.
+    pub fn apply(&mut self, deltas: &[StreamDelta]) {
+        self.st.apply(&self.plan.kernels[0], deltas);
+    }
+
+    /// The session's current input batch.
+    pub fn x(&self) -> &IntMatrix {
+        &self.st.x
+    }
+
+    /// The active refresh threshold.
+    pub fn refresh_threshold(&self) -> f64 {
+        self.st.refresh_threshold
+    }
+
+    /// Cumulative number of row refreshes taken instead of incremental
+    /// updates.
+    pub fn refreshed_rows(&self) -> u64 {
+        self.st.refreshes
+    }
+
+    /// Forward the current batch with an explicit worker count —
+    /// bit-identical to `plan.execute_threads(session.x(), threads)` at
+    /// any `threads`.
+    pub fn forward_threads(&self, threads: usize) -> Vec<NetworkStats> {
+        self.plan.execute_threads_l0(&self.st.x, threads, Some(&self.st.acc))
+    }
+
+    /// Forward the current batch, choosing the worker count exactly as
+    /// [`NetworkPlan::execute`] does.
+    pub fn forward(&self) -> Vec<NetworkStats> {
+        self.forward_threads(worker_count(
+            self.st.x.rows(),
+            self.plan.net.macs_per_row(),
+            1,
+            self.plan.modes().len(),
+        ))
+    }
+}
+
+/// Single-layer incremental streaming session over a [`LayerPlan`]: the
+/// [`StreamSession`] contract for one quantized layer (bit-identical to
+/// [`LayerPlan::execute`] on the same input).
+pub struct LayerStreamSession<'p, 'w> {
+    plan: &'p LayerPlan<'w>,
+    x_scale: f32,
+    st: StreamAcc,
+}
+
+impl<'p, 'w> LayerStreamSession<'p, 'w> {
+    /// Open a session on `plan` with initial batch `x` (integer input
+    /// codes at scale `x_scale`), paying one full accumulation up front.
+    pub fn new(plan: &'p LayerPlan<'w>, x: IntMatrix, x_scale: f32) -> LayerStreamSession<'p, 'w> {
+        let w = plan.kern.w;
+        assert_eq!(x.cols(), w.k, "input cols {} vs layer k {}", x.cols(), w.k);
+        let fmw = FeatureMajorWeights::pack_with(w, plan.kern.choice.path);
+        LayerStreamSession { st: StreamAcc::new(x, fmw, &plan.kern), x_scale, plan }
+    }
+
+    /// Override the refresh threshold for this session (wins over the
+    /// `A2Q_STREAM_REFRESH` environment default).
+    pub fn with_refresh_threshold(mut self, t: f64) -> Self {
+        assert!(t.is_finite() && t >= 0.0, "refresh threshold {t} must be finite and >= 0");
+        self.st.refresh_threshold = t;
+        self
+    }
+
+    /// Apply one tick of sparse deltas. Panics on out-of-range indices or
+    /// a stale `old` value.
+    pub fn apply(&mut self, deltas: &[StreamDelta]) {
+        self.st.apply(&self.plan.kern, deltas);
+    }
+
+    /// The session's current input batch.
+    pub fn x(&self) -> &IntMatrix {
+        &self.st.x
+    }
+
+    /// The active refresh threshold.
+    pub fn refresh_threshold(&self) -> f64 {
+        self.st.refresh_threshold
+    }
+
+    /// Cumulative number of row refreshes taken instead of incremental
+    /// updates.
+    pub fn refreshed_rows(&self) -> u64 {
+        self.st.refreshes
+    }
+
+    /// Forward the current batch with an explicit worker count —
+    /// bit-identical to `plan.execute_threads(session.x(), x_scale,
+    /// threads)` at any `threads`.
+    pub fn forward_threads(&self, threads: usize) -> Vec<MatmulStats> {
+        self.plan.execute_threads_acc(&self.st.x, self.x_scale, threads, Some(&self.st.acc))
+    }
+
+    /// Forward the current batch, choosing the worker count exactly as
+    /// [`LayerPlan::execute`] does.
+    pub fn forward(&self) -> Vec<MatmulStats> {
+        let w = self.plan.kern.w;
+        self.forward_threads(worker_count(
+            self.st.x.rows(),
+            w.c_out,
+            w.k,
+            self.plan.modes().len(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accsim::AccMode;
+    use crate::rng::Rng;
+    use crate::testutil::psweep_constrained_layer;
+
+    const X_SCALE: f32 = 0.05;
+
+    fn modes() -> Vec<AccMode> {
+        vec![AccMode::Wide, AccMode::Wrap { p_bits: 14 }, AccMode::Saturate { p_bits: 12 }]
+    }
+
+    fn input(rows: usize, k: usize, n_bits: u32, seed: u64) -> IntMatrix {
+        let mut rng = Rng::new(seed);
+        IntMatrix::from_flat(
+            rows,
+            k,
+            (0..rows * k).map(|_| rng.below(1usize << n_bits) as i64).collect(),
+        )
+    }
+
+    /// The session's forward must equal the batch recompute on the
+    /// session's current input — outputs and every stats counter — at
+    /// several pinned thread counts.
+    fn assert_matches_batch(session: &LayerStreamSession<'_, '_>, plan: &LayerPlan<'_>, ctx: &str) {
+        for threads in [1, 2, 7] {
+            let want = plan.execute_threads(session.x(), X_SCALE, threads);
+            let got = session.forward_threads(threads);
+            assert_eq!(got.len(), want.len(), "{ctx} t={threads}");
+            for (mi, (g, w)) in got.iter().zip(&want).enumerate() {
+                let tag = format!("{ctx} t={threads} mode {mi}");
+                assert_eq!(g.out.data(), w.out.data(), "{tag}");
+                assert_eq!(g.out_wide.data(), w.out_wide.data(), "{tag}");
+                assert_eq!(g.stats.dots, w.stats.dots, "{tag}");
+                assert_eq!(g.stats.macs, w.stats.macs, "{tag}");
+                assert_eq!(g.stats.overflow_events, w.stats.overflow_events, "{tag}");
+                assert_eq!(g.stats.dots_overflowed, w.stats.dots_overflowed, "{tag}");
+                assert_eq!(g.stats.abs_err_sum, w.stats.abs_err_sum, "{tag}");
+                assert_eq!(g.stats.outputs, w.stats.outputs, "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_delta_set_is_a_no_op() {
+        let w = psweep_constrained_layer(12, 24, 14, 4, 3);
+        let plan = LayerPlan::new(&w, &modes());
+        let mut s = LayerStreamSession::new(&plan, input(5, 24, 4, 9), X_SCALE);
+        let before = s.x().clone();
+        s.apply(&[]);
+        assert_eq!(*s.x(), before);
+        assert_eq!(s.refreshed_rows(), 0);
+        assert_matches_batch(&s, &plan, "empty tick");
+    }
+
+    #[test]
+    fn repeated_deltas_to_one_feature_chain_in_one_call() {
+        let w = psweep_constrained_layer(12, 24, 14, 4, 3);
+        let plan = LayerPlan::new(&w, &modes());
+        let mut s =
+            LayerStreamSession::new(&plan, input(5, 24, 4, 9), X_SCALE).with_refresh_threshold(1.1);
+        let a = s.x().get(2, 7);
+        s.apply(&[
+            StreamDelta { row: 2, feature: 7, old: a, new: a + 3 },
+            StreamDelta { row: 2, feature: 7, old: a + 3, new: 1 },
+            StreamDelta { row: 2, feature: 7, old: 1, new: 9 },
+        ]);
+        assert_eq!(s.x().get(2, 7), 9);
+        assert_eq!(s.refreshed_rows(), 0, "threshold > 1 must never refresh");
+        assert_matches_batch(&s, &plan, "chained repeats");
+    }
+
+    #[test]
+    fn full_row_tick_refreshes_and_stays_bit_exact() {
+        let w = psweep_constrained_layer(12, 24, 14, 4, 3);
+        let plan = LayerPlan::new(&w, &modes());
+        // Pin the default threshold explicitly: the CI kernel matrix runs
+        // the suite under forced A2Q_STREAM_REFRESH values.
+        let mut s = LayerStreamSession::new(&plan, input(5, 24, 4, 9), X_SCALE)
+            .with_refresh_threshold(DEFAULT_REFRESH_THRESHOLD);
+        // Every feature of row 1 changes: at the default threshold this
+        // must take the batch-recompute fallback, not 24 column walks.
+        let tick: Vec<StreamDelta> = (0..24)
+            .map(|j| StreamDelta { row: 1, feature: j, old: s.x().get(1, j), new: (j as i64) % 13 })
+            .collect();
+        s.apply(&tick);
+        assert_eq!(s.refreshed_rows(), 1);
+        assert_matches_batch(&s, &plan, "full-row refresh");
+    }
+
+    #[test]
+    fn always_refresh_threshold_refreshes_every_touched_row() {
+        let w = psweep_constrained_layer(12, 24, 14, 4, 3);
+        let plan = LayerPlan::new(&w, &modes());
+        let mut s =
+            LayerStreamSession::new(&plan, input(5, 24, 4, 9), X_SCALE).with_refresh_threshold(0.0);
+        let (a, b) = (s.x().get(0, 3), s.x().get(4, 11));
+        s.apply(&[
+            StreamDelta { row: 0, feature: 3, old: a, new: a + 1 },
+            StreamDelta { row: 4, feature: 11, old: b, new: 0 },
+        ]);
+        assert_eq!(s.refreshed_rows(), 2);
+        assert_matches_batch(&s, &plan, "always-refresh");
+    }
+
+    #[test]
+    fn deltas_flip_rows_between_safe_and_simulated_partitions() {
+        // Codes quantized for 4-bit inputs, then a delta pushes one row's
+        // max|x| far past the grid: channels that were provably safe under
+        // Eq. 15 fall back into the register-simulated remainder, and the
+        // session must track that through its *updated* per-row bound
+        // check — overflow counters move, and still match the recompute.
+        let w = psweep_constrained_layer(10, 16, 14, 4, 5);
+        let plan = LayerPlan::new(&w, &modes());
+        let mut s =
+            LayerStreamSession::new(&plan, input(4, 16, 4, 2), X_SCALE).with_refresh_threshold(1.1);
+        let base = plan.execute_threads(s.x(), X_SCALE, 1);
+        // Spike a feature some channel actually reads, so the 2^20 code is
+        // guaranteed to reach (and overflow) the 14-bit wrap register.
+        let j = (0..16)
+            .find(|&j| (0..10).any(|c| w.row(c)[j] != 0))
+            .expect("constrained layer has a nonzero column");
+        let old = s.x().get(2, j);
+        s.apply(&[StreamDelta { row: 2, feature: j, old, new: 1 << 20 }]);
+        assert_matches_batch(&s, &plan, "safe -> simulated");
+        let spiked = plan.execute_threads(s.x(), X_SCALE, 1);
+        assert!(
+            spiked[1].stats.overflow_events > base[1].stats.overflow_events,
+            "the spike must actually push the wrap register into overflow"
+        );
+        // And back: restoring the old code must re-enter the safe span.
+        s.apply(&[StreamDelta { row: 2, feature: j, old: 1 << 20, new: old }]);
+        assert_matches_batch(&s, &plan, "simulated -> safe");
+    }
+
+    #[test]
+    #[should_panic(expected = "stale delta")]
+    fn stale_old_value_panics() {
+        let w = psweep_constrained_layer(6, 8, 14, 4, 3);
+        let plan = LayerPlan::new(&w, &modes());
+        let mut s = LayerStreamSession::new(&plan, input(2, 8, 4, 9), X_SCALE);
+        let cur = s.x().get(0, 0);
+        s.apply(&[StreamDelta { row: 0, feature: 0, old: cur + 1, new: 0 }]);
+    }
+
+    #[test]
+    fn refresh_threshold_parsing_and_precedence() {
+        assert_eq!(refresh_threshold_from(Some("0.25")), 0.25);
+        assert_eq!(refresh_threshold_from(Some(" 1.5 ")), 1.5);
+        assert_eq!(refresh_threshold_from(Some("0")), 0.0);
+        // Invalid values fall back to the default instead of poisoning the
+        // policy: negative, NaN, infinity, garbage, empty, absent.
+        for bad in [Some("-1"), Some("NaN"), Some("inf"), Some("fast"), Some(""), None] {
+            assert_eq!(refresh_threshold_from(bad), DEFAULT_REFRESH_THRESHOLD, "{bad:?}");
+        }
+        // The builder wins over whatever the environment said.
+        let w = psweep_constrained_layer(6, 8, 14, 4, 3);
+        let plan = LayerPlan::new(&w, &modes());
+        let s = LayerStreamSession::new(&plan, input(2, 8, 4, 9), X_SCALE)
+            .with_refresh_threshold(0.75);
+        assert_eq!(s.refresh_threshold(), 0.75);
+    }
+}

@@ -28,6 +28,12 @@
 //! tile changes rounding versus mul+add but keeps the strict per-element
 //! `kk` order, so results remain bit-identical across row partitionings
 //! (thread counts) *within* a path.
+//!
+//! Alongside the MR×NR GEMM tiles, this module also hosts the
+//! **delta-column kernels** of the incremental accumulator engine
+//! ([`crate::accsim::stream`]): `acc[c] += w[c][j] * d` over one
+//! feature-major column, as a scalar reference plus a 4-lane i64 SIMD
+//! widening kernel — exact i64 either way, so every path is bit-identical.
 
 use std::sync::OnceLock;
 
@@ -110,9 +116,35 @@ pub fn simd_available() -> bool {
     }
 }
 
+/// Test-only injection seam for [`env_kernel`]: the `OnceLock` cache makes
+/// real-env tests order-dependent (whichever test reads first pins the
+/// value for the whole process), so unit tests inject a pretend
+/// `A2Q_KERNEL` per thread instead of touching the environment.
+/// `Some(None)` simulates an unset/invalid variable.
+#[cfg(test)]
+thread_local! {
+    static ENV_KERNEL_OVERRIDE: std::cell::Cell<Option<Option<KernelPath>>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Run `f` with [`env_kernel`] pinned to `v` on the current thread (tests
+/// only; see [`ENV_KERNEL_OVERRIDE`]). Restores the previous override even
+/// though tests normally nest at most one level.
+#[cfg(test)]
+pub(crate) fn with_env_kernel_override<R>(v: Option<KernelPath>, f: impl FnOnce() -> R) -> R {
+    let prev = ENV_KERNEL_OVERRIDE.with(|c| c.replace(Some(v)));
+    let r = f();
+    ENV_KERNEL_OVERRIDE.with(|c| c.set(prev));
+    r
+}
+
 /// The `A2Q_KERNEL` override, read once per process. Unknown values are
 /// ignored (auto dispatch), so stale scripts cannot break runs.
 fn env_kernel() -> Option<KernelPath> {
+    #[cfg(test)]
+    if let Some(v) = ENV_KERNEL_OVERRIDE.with(|c| c.get()) {
+        return v;
+    }
     static CACHE: OnceLock<Option<KernelPath>> = OnceLock::new();
     *CACHE.get_or_init(|| std::env::var("A2Q_KERNEL").ok().as_deref().and_then(KernelPath::parse))
 }
@@ -273,6 +305,51 @@ pub(crate) fn dense_tile_i16(
     }
 }
 
+/// Scalar reference for one feature-major delta column of i32 codes:
+/// `acc[c] += col[c] * d`. Exact (i32 * i64 widened to i64), the
+/// property-test baseline for the SIMD kernel below.
+#[inline]
+pub(crate) fn delta_col_scalar_i32(col: &[i32], d: i64, acc: &mut [i64]) {
+    debug_assert_eq!(col.len(), acc.len());
+    for (a, &w) in acc.iter_mut().zip(col) {
+        *a += w as i64 * d;
+    }
+}
+
+/// Scalar delta column over i64 codes (the beyond-i32 fallback layout).
+#[inline]
+pub(crate) fn delta_col_scalar_i64(col: &[i64], d: i64, acc: &mut [i64]) {
+    debug_assert_eq!(col.len(), acc.len());
+    for (a, &w) in acc.iter_mut().zip(col) {
+        *a += w * d;
+    }
+}
+
+/// Dispatched delta column over i32 codes: `acc[c] += col[c] * d` for every
+/// channel. `use_simd` routes to the 4-lane i64 widening kernel when the
+/// caller confirmed [`simd_available`] — on x86_64 only while `d` itself
+/// fits i32 (`_mm256_mul_epi32` multiplies the signed low 32 bits of each
+/// lane, so both operands must be exact there); a wider `d` and every
+/// non-SIMD configuration take the scalar reference. All paths accumulate
+/// in exact i64, so results are bit-identical by construction.
+#[inline]
+pub(crate) fn delta_col_i32(col: &[i32], d: i64, acc: &mut [i64], use_simd: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if use_simd && i32::try_from(d).is_ok() {
+        // Safety: callers only pass use_simd=true after simd_available().
+        unsafe { x86::delta_col_i32(col, d as i32, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if use_simd {
+        // Safety: NEON is mandatory on aarch64 and detected by the caller.
+        unsafe { neon::delta_col_i32(col, d, acc) };
+        return;
+    }
+    let _ = use_simd;
+    delta_col_scalar_i32(col, d, acc);
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use super::{MR, NR};
@@ -365,6 +442,38 @@ mod x86 {
             _mm256_storeu_si256(acc.as_mut_ptr().add(mi * NR + 4) as *mut __m256i, hi[mi]);
         }
     }
+
+    /// The 4-lane i64 delta-column kernel: sign-extend four i32 codes to
+    /// i64 lanes (`cvtepi32_epi64` keeps the low 32 bits exact), multiply
+    /// by the splatted delta with `_mm256_mul_epi32` (signed low-32 ×
+    /// signed low-32 → exact i64 product, which is why the caller requires
+    /// `d` to fit i32), and add into the i64 accumulators. Exact, hence
+    /// bit-identical to [`super::delta_col_scalar_i32`].
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers gate on `simd_available`). `col` and `acc`
+    /// must be the same length.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn delta_col_i32(col: &[i32], d: i32, acc: &mut [i64]) {
+        debug_assert_eq!(col.len(), acc.len());
+        let n = acc.len();
+        let n4 = n / 4 * 4;
+        let dv = _mm256_set1_epi64x(d as i64);
+        let mut c = 0;
+        while c < n4 {
+            let cv = _mm256_cvtepi32_epi64(_mm_loadu_si128(col.as_ptr().add(c) as *const __m128i));
+            let prod = _mm256_mul_epi32(cv, dv);
+            let av = _mm256_loadu_si256(acc.as_ptr().add(c) as *const __m256i);
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(c) as *mut __m256i,
+                _mm256_add_epi64(av, prod),
+            );
+            c += 4;
+        }
+        for i in n4..n {
+            *acc.get_unchecked_mut(i) += *col.get_unchecked(i) as i64 * d as i64;
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -423,6 +532,19 @@ mod neon {
                     *l += xv * w as i64;
                 }
             }
+        }
+    }
+
+    /// NEON-pinned delta-column kernel (exact i64 widening loop,
+    /// bit-identical to the scalar reference by construction).
+    ///
+    /// # Safety
+    /// Requires NEON (callers gate on `simd_available`; NEON is mandatory
+    /// on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn delta_col_i32(col: &[i32], d: i64, acc: &mut [i64]) {
+        for (a, &w) in acc.iter_mut().zip(col) {
+            *a += w as i64 * d;
         }
     }
 }
@@ -537,5 +659,76 @@ mod tests {
                 assert_eq!(igot[..mr * NR], iwant[..mr * NR], "i16 k={k} mr={mr}");
             }
         }
+    }
+
+    #[test]
+    fn delta_col_kernels_match_scalar_reference() {
+        let mut rng = crate::rng::Rng::new(0xDE17A);
+        // Lengths straddling the 4-lane width, extreme i32 codes, deltas on
+        // both sides of the i32 gate (beyond-i32 deltas must route back to
+        // the scalar loop on x86 and still agree).
+        for n in [0usize, 1, 3, 4, 5, 8, 21] {
+            for d in [0i64, 1, -7, 255, i32::MAX as i64, i32::MIN as i64, (i32::MAX as i64) * 9] {
+                let col: Vec<i32> = (0..n)
+                    .map(|i| match i % 4 {
+                        0 => i32::MAX,
+                        1 => i32::MIN + 1,
+                        _ => rng.below(2001) as i32 - 1000,
+                    })
+                    .collect();
+                let base: Vec<i64> = (0..n).map(|_| rng.below(1 << 20) as i64 - (1 << 19)).collect();
+                let mut want = base.clone();
+                delta_col_scalar_i32(&col, d, &mut want);
+                for use_simd in [false, simd_available()] {
+                    let mut got = base.clone();
+                    delta_col_i32(&col, d, &mut got, use_simd);
+                    assert_eq!(got, want, "n={n} d={d} simd={use_simd}");
+                }
+                // The i64 layout's scalar kernel agrees on widened codes.
+                let col64: Vec<i64> = col.iter().map(|&v| v as i64).collect();
+                let mut got64 = base.clone();
+                delta_col_scalar_i64(&col64, d, &mut got64);
+                assert_eq!(got64, want, "i64 n={n} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_dispatch_precedence_is_force_then_env_then_density() {
+        use crate::accsim::gemm::PackedWeights;
+        use crate::quant::QTensor;
+
+        // Env (injected through the test seam) beats the density heuristic
+        // at both density extremes.
+        for p in [KernelPath::Scalar, KernelPath::Simd, KernelPath::SparseSimd] {
+            with_env_kernel_override(Some(p), || {
+                assert_eq!(KernelPath::choose(0.0), p, "env should beat low density");
+                assert_eq!(KernelPath::choose(1.0), p, "env should beat high density");
+            });
+        }
+        // Unset (or invalid) env falls through to the density heuristic.
+        with_env_kernel_override(None, || {
+            assert_eq!(KernelPath::choose(SPARSE_PANEL_DENSITY), KernelPath::SparseSimd);
+            let dense_want =
+                if simd_available() { KernelPath::Simd } else { KernelPath::Scalar };
+            assert_eq!(KernelPath::choose(1.0), dense_want);
+        });
+        // An explicit force beats the env override: pack_with never consults
+        // choose(), pack() does.
+        let w = QTensor {
+            codes: vec![1, 0, -2, 0, 0, 3],
+            scales: vec![1.0, 1.0],
+            bias: vec![0.0, 0.0],
+            c_out: 2,
+            k: 3,
+        };
+        let order = [0usize, 1];
+        with_env_kernel_override(Some(KernelPath::SparseSimd), || {
+            let forced = PackedWeights::pack_with(&w, &order, KernelPath::Scalar)
+                .expect("small codes must pack");
+            assert_eq!(forced.path(), KernelPath::Scalar, "force must beat env");
+            let auto = PackedWeights::pack(&w, &order).expect("small codes must pack");
+            assert_eq!(auto.path(), KernelPath::SparseSimd, "auto must honor env");
+        });
     }
 }

@@ -55,6 +55,14 @@ COMMANDS:
              [--quantizer a2q|a2q_plus] [--dataset synth_mnist]
              (whole QNetwork under every width in one threaded pass: per-layer
               overflow/sparsity, fig2/fig3 network CSVs, FINN LUT estimate)
+  stream     --c-out 64 --k 64 --p 14 --n 8 --batch 64 --ticks 200
+             [--density 0.05] [--threads 1] [--seed 7] [--refresh R]
+             [--kernel scalar|simd|sparse]
+             (NNUE-style incremental streaming bench on an A2Q-constrained
+              layer: maintained accumulators updated per sparse delta vs a
+              full recompute every tick, verified bit-identical at the end;
+              --refresh overrides the row-refresh threshold, --density is
+              the fraction of features changed per row per tick)
   models     (list native registry + artifacts-dir models)
   perfcheck  --require FAST:SLOW[,FAST:SLOW...] [--require ...]
              [--journal BENCH_accsim.json]
@@ -87,6 +95,7 @@ fn main() -> Result<()> {
         "bounds" => cmd_bounds(&args),
         "accsim" => cmd_accsim(&args),
         "netsim" => cmd_netsim(&args, &results),
+        "stream" => cmd_stream(&args),
         "models" => cmd_models(&artifacts),
         "perfcheck" => cmd_perfcheck(&args),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
@@ -565,6 +574,120 @@ fn cmd_netsim(args: &Args, results: &Path) -> Result<()> {
             est.total_luts()
         );
     }
+    Ok(())
+}
+
+/// Streaming sparse-delta bench: open an incremental
+/// [`a2q::accsim::LayerStreamSession`] on an A2Q-constrained layer, drive
+/// `--ticks` delta ticks (each changing `--density` of every row's
+/// features) through both the incremental path and a full recompute fed an
+/// identically seeded delta stream, report rows/s for both, and verify the
+/// final states bit-identical — outputs and overflow counters.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use std::time::Instant;
+
+    use a2q::accsim::{IntMatrix, KernelPath, LayerPlan, LayerStreamSession};
+    use a2q::testutil::{apply_deltas, psweep_constrained_layer, stream_delta_tick};
+
+    args.check_known(&[
+        "artifacts", "results", "c-out", "k", "p", "n", "batch", "ticks", "density", "threads",
+        "seed", "kernel", "refresh",
+    ])?;
+    let c_out = args.num_or("c-out", 64usize)?;
+    let k = args.num_or("k", 64usize)?;
+    let p = args.num_or("p", 14u32)?;
+    let n = args.num_or("n", 8u32)?;
+    let batch = args.num_or("batch", 64usize)?.max(1);
+    let ticks = args.num_or("ticks", 200usize)?.max(1);
+    let threads = args.num_or("threads", 1usize)?.max(1);
+    let seed = args.num_or("seed", 7u64)?;
+    let density: f64 = args.str_or("density", "0.05").parse()?;
+    anyhow::ensure!((0.0..=1.0).contains(&density), "--density must be in [0, 1]");
+    anyhow::ensure!(c_out > 0 && k > 0, "--c-out and --k must be positive");
+    let path = match args.opt_str("kernel") {
+        Some(s) => Some(KernelPath::parse(&s).ok_or_else(|| {
+            anyhow::anyhow!("--kernel expects scalar|simd|sparse, got {s:?}")
+        })?),
+        None => None,
+    };
+
+    let w = psweep_constrained_layer(c_out, k, p, n, seed);
+    let modes = [AccMode::Wide, AccMode::Wrap { p_bits: p }];
+    let plan = LayerPlan::new_with_path(&w, &modes, path);
+    let x_scale = 0.05f32;
+    let per_row = ((k as f64 * density).round() as usize).clamp(1, k);
+
+    let mut rng = Rng::new(seed ^ 0x57AE);
+    let x0 = IntMatrix::from_flat(
+        batch,
+        k,
+        (0..batch * k).map(|_| rng.below(1usize << n) as i64).collect(),
+    );
+
+    let mut session = LayerStreamSession::new(&plan, x0.clone(), x_scale);
+    if let Some(r) = args.opt_str("refresh") {
+        session = session.with_refresh_threshold(r.parse()?);
+    }
+
+    // Incremental loop: ticks are generated from the session's own state
+    // inside the timed region (the full loop pays the same generation
+    // cost from an identically seeded stream, so the comparison is fair).
+    let mut srng = Rng::new(seed ^ 0x7100);
+    let t0 = Instant::now();
+    for _ in 0..ticks {
+        let tick = stream_delta_tick(session.x(), per_row, n, &mut srng);
+        session.apply(&tick);
+        std::hint::black_box(session.forward_threads(threads));
+    }
+    let inc = t0.elapsed();
+
+    // Full-recompute loop over the same delta stream.
+    let mut frng = Rng::new(seed ^ 0x7100);
+    let mut xf = x0;
+    let t1 = Instant::now();
+    for _ in 0..ticks {
+        let tick = stream_delta_tick(&xf, per_row, n, &mut frng);
+        apply_deltas(&mut xf, &tick);
+        std::hint::black_box(plan.execute_threads(&xf, x_scale, threads));
+    }
+    let full = t1.elapsed();
+
+    // Both loops consumed identical streams, so the final states must be
+    // bit-identical — outputs and every overflow counter.
+    anyhow::ensure!(session.x() == &xf, "incremental input state diverged from the mirror");
+    let got = session.forward_threads(threads);
+    let want = plan.execute_threads(&xf, x_scale, threads);
+    for (mi, (g, wnt)) in got.iter().zip(&want).enumerate() {
+        anyhow::ensure!(
+            g.out.data() == wnt.out.data()
+                && g.out_wide.data() == wnt.out_wide.data()
+                && g.stats.overflow_events == wnt.stats.overflow_events
+                && g.stats.dots_overflowed == wnt.stats.dots_overflowed
+                && g.stats.abs_err_sum == wnt.stats.abs_err_sum,
+            "incremental forward diverged from full recompute in mode {mi}"
+        );
+    }
+
+    let rows = (batch * ticks) as f64;
+    let (inc_s, full_s) = (inc.as_secs_f64(), full.as_secs_f64());
+    let choice = plan.kernel_choice();
+    println!(
+        "[stream] layer {c_out}x{k} P={p} N={n} sparsity={:.3} kernel={:?} threads={threads}",
+        choice.sparsity, choice.path
+    );
+    println!(
+        "[stream] {ticks} ticks x {batch} rows at density {density} ({per_row} deltas/row), \
+         refresh threshold {:.2}, {} rows refreshed",
+        session.refresh_threshold(),
+        session.refreshed_rows()
+    );
+    println!(
+        "[stream] incremental: {:.1} rows/s   full recompute: {:.1} rows/s   speedup {:.2}x",
+        rows / inc_s.max(1e-9),
+        rows / full_s.max(1e-9),
+        full_s / inc_s.max(1e-9)
+    );
+    println!("[stream] bit-identity verified: outputs and overflow counters match");
     Ok(())
 }
 

@@ -123,14 +123,29 @@ pub fn render_journal(records: &[BenchRecord]) -> String {
     out
 }
 
+/// Load the journal at `path` for merging. An absent or blank file —
+/// including the checked-in literal two-line empty array a toolchain-less
+/// container leaves behind — is an empty journal; any other read or parse
+/// failure is an error, so a corrupt journal aborts the merge instead of
+/// silently restarting the perf trajectory from scratch.
+pub fn load_journal(path: &Path) -> Result<Vec<BenchRecord>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e.into()),
+    };
+    if text.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    parse_journal(&text)
+}
+
 /// Merge `records` into the journal at `path` (by name; existing entries
 /// with the same name are replaced, unknown ones preserved) and write it
-/// back sorted by name. A missing or unparseable journal starts fresh.
+/// back sorted by name. Missing/empty journals start fresh; a corrupt one
+/// is an error (see [`load_journal`]).
 pub fn record_benches_at(records: &[BenchRecord], path: &Path) -> Result<()> {
-    let mut merged: Vec<BenchRecord> = std::fs::read_to_string(path)
-        .ok()
-        .and_then(|text| parse_journal(&text).ok())
-        .unwrap_or_default();
+    let mut merged: Vec<BenchRecord> = load_journal(path)?;
     for r in records {
         match merged.iter_mut().find(|m| m.name == r.name) {
             Some(slot) => *slot = r.clone(),
@@ -171,6 +186,10 @@ pub const NET_SMOKE_END: &str = "<!-- PERF-NET-SMOKE:END -->";
 /// train_step`).
 pub const TRAIN_BEGIN: &str = "<!-- PERF-TRAIN:BEGIN (auto-recorded; do not edit by hand) -->";
 pub const TRAIN_END: &str = "<!-- PERF-TRAIN:END -->";
+/// Markers of the streaming-delta release block (`cargo bench --bench
+/// stream_delta`).
+pub const STREAM_BEGIN: &str = "<!-- PERF-STREAM:BEGIN (auto-recorded; do not edit by hand) -->";
+pub const STREAM_END: &str = "<!-- PERF-STREAM:END -->";
 
 /// Replace whatever sits between `begin` and `end` markers in EXPERIMENTS.md
 /// with `block`. Returns false (and leaves the file alone) when the file or
@@ -250,15 +269,19 @@ pub struct TrainRow {
     pub rows_per_s: f64,
 }
 
-/// Render the scalar-reference vs blocked vs batch-parallel comparison the
-/// `train_step` bench writes into EXPERIMENTS.md §Perf-Train. Rows must
-/// come in groups sharing an iteration shape; speedups are reported
-/// against each group's first (scalar) row.
-pub fn render_train_block(recorded_by: &str, groups: &[(&str, Vec<TrainRow>)]) -> String {
+/// Render a grouped baseline-vs-variants comparison table: rows come in
+/// groups sharing an iteration shape, and speedups are reported against
+/// each group's first (baseline) row under the `vs {vs_label}` column.
+/// Shared by the train-step and streaming-delta EXPERIMENTS.md blocks.
+pub fn render_rows_block(
+    recorded_by: &str,
+    vs_label: &str,
+    groups: &[(&str, Vec<TrainRow>)],
+) -> String {
     let mut out = format!("Last recorded by {recorded_by}:\n");
     for (shape, rows) in groups {
         out.push_str(&format!(
-            "\n**{shape}**\n\n| path | ns/iter (median) | rows/s | vs scalar |\n|---|---:|---:|---:|\n"
+            "\n**{shape}**\n\n| path | ns/iter (median) | rows/s | vs {vs_label} |\n|---|---:|---:|---:|\n"
         ));
         let base = rows.first().map(|r| r.ns_per_iter).unwrap_or(0.0);
         for r in rows {
@@ -274,9 +297,26 @@ pub fn render_train_block(recorded_by: &str, groups: &[(&str, Vec<TrainRow>)]) -
     out
 }
 
+/// Render the scalar-reference vs blocked vs batch-parallel comparison the
+/// `train_step` bench writes into EXPERIMENTS.md §Perf-Train.
+pub fn render_train_block(recorded_by: &str, groups: &[(&str, Vec<TrainRow>)]) -> String {
+    render_rows_block(recorded_by, "scalar", groups)
+}
+
+/// Render the full-forward vs incremental-delta comparison the
+/// `stream_delta` bench writes into EXPERIMENTS.md §Perf-Stream.
+pub fn render_stream_block(recorded_by: &str, groups: &[(&str, Vec<TrainRow>)]) -> String {
+    render_rows_block(recorded_by, "full fwd", groups)
+}
+
 /// Replace the native train-step release block of EXPERIMENTS.md.
 pub fn update_experiments_train_block(block: &str) -> Result<bool> {
     update_marked_block(TRAIN_BEGIN, TRAIN_END, block)
+}
+
+/// Replace the streaming-delta release block of EXPERIMENTS.md.
+pub fn update_experiments_stream_block(block: &str) -> Result<bool> {
+    update_marked_block(STREAM_BEGIN, STREAM_END, block)
 }
 
 #[cfg(test)]
@@ -339,6 +379,60 @@ mod tests {
         assert!(block.contains("**mlp3 @ M4N4P14**"), "{block}");
         assert!(block.contains("| native/trainstep_mlp3_scalar | 1000 | 10 | 1.00x |"), "{block}");
         assert!(block.contains("| native/trainstep_mlp3_blocked | 250 | 40 | 4.00x |"), "{block}");
+    }
+
+    #[test]
+    fn absent_and_blank_journals_merge_as_empty() {
+        let dir = TempDir::new().unwrap();
+        // Absent file.
+        let absent = dir.path().join("nope.json");
+        assert_eq!(load_journal(&absent).unwrap(), vec![]);
+        record_benches_at(&[rec("a", 1.0, None)], &absent).unwrap();
+        assert_eq!(load_journal(&absent).unwrap().len(), 1);
+        // Truly empty and whitespace-only files.
+        for (i, blank) in ["", "  \n\t\n"].iter().enumerate() {
+            let p = dir.path().join(format!("blank{i}.json"));
+            std::fs::write(&p, blank).unwrap();
+            assert_eq!(load_journal(&p).unwrap(), vec![], "{blank:?}");
+            record_benches_at(&[rec("x", 2.0, None)], &p).unwrap();
+            assert_eq!(load_journal(&p).unwrap().len(), 1, "{blank:?}");
+        }
+        // The checked-in placeholder: a literal two-line empty array.
+        let seed = dir.path().join("seed.json");
+        std::fs::write(&seed, "[\n]\n").unwrap();
+        assert_eq!(load_journal(&seed).unwrap(), vec![]);
+        record_benches_at(&[rec("s", 3.0, None)], &seed).unwrap();
+        assert_eq!(load_journal(&seed).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn corrupt_journal_is_an_error_not_a_silent_restart() {
+        let dir = TempDir::new().unwrap();
+        let p = dir.path().join("bad.json");
+        std::fs::write(&p, "{\"oops\": true}").unwrap();
+        assert!(load_journal(&p).is_err());
+        // The merge must refuse to clobber the corrupt file.
+        assert!(record_benches_at(&[rec("a", 1.0, None)], &p).is_err());
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"oops\": true}");
+    }
+
+    #[test]
+    fn stream_block_reports_speedup_vs_full_forward() {
+        let rows = vec![
+            TrainRow {
+                name: "accsim/stream_full_forward".into(),
+                ns_per_iter: 800.0,
+                rows_per_s: 20.0,
+            },
+            TrainRow {
+                name: "accsim/stream_delta_d05".into(),
+                ns_per_iter: 200.0,
+                rows_per_s: 80.0,
+            },
+        ];
+        let block = render_stream_block("test", &[("layer 64x64 @ d=5%", rows)]);
+        assert!(block.contains("vs full fwd"), "{block}");
+        assert!(block.contains("| accsim/stream_delta_d05 | 200 | 80 | 4.00x |"), "{block}");
     }
 
     #[test]

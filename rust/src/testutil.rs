@@ -1,10 +1,11 @@
 //! Test support: a tiny self-cleaning temporary directory (offline
 //! replacement for the `tempfile` crate) and shared bench fixtures.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::accsim::IntMatrix;
+use crate::accsim::{IntMatrix, StreamDelta};
 use crate::model::{NetSpec, QNetwork, SynthQuant};
 use crate::quant::a2q::a2q_quantize_row;
 use crate::quant::QTensor;
@@ -78,6 +79,48 @@ pub fn psweep_network(widths: &[usize], batch: usize, seed: u64) -> (QNetwork, I
     net.calibrate(&sample);
     let x = net.layers[0].in_quant.quantize(&sample);
     (net, x)
+}
+
+/// Deterministic sparse-delta tick for the streaming perf instruments:
+/// `per_row` feature changes on every batch row of `x`, each drawn as a
+/// fresh `n_bits`-bit unsigned code. `old` values are read from the
+/// *current* `x` (chaining correctly when the same feature is drawn twice
+/// in one tick), so the tick is valid for a session holding exactly `x` —
+/// generate, apply to the session, mirror into your `x` copy, repeat.
+/// Shared by the release bench (`benches/stream_delta.rs`), the test-suite
+/// smoke (`tests/stream_smoke.rs`) and the `a2q stream` CLI so every
+/// instrument measures the same delta distribution.
+pub fn stream_delta_tick(
+    x: &IntMatrix,
+    per_row: usize,
+    n_bits: u32,
+    rng: &mut Rng,
+) -> Vec<StreamDelta> {
+    let (rows, k) = (x.rows(), x.cols());
+    let mut deltas = Vec::with_capacity(rows * per_row);
+    if k == 0 || per_row == 0 {
+        return deltas;
+    }
+    let mut pending: HashMap<(usize, usize), i64> = HashMap::new();
+    for row in 0..rows {
+        for _ in 0..per_row {
+            let feature = rng.below(k);
+            let old = pending.get(&(row, feature)).copied().unwrap_or_else(|| x.get(row, feature));
+            let new = rng.below(1usize << n_bits) as i64;
+            pending.insert((row, feature), new);
+            deltas.push(StreamDelta { row, feature, old, new });
+        }
+    }
+    deltas
+}
+
+/// Apply `deltas` to a plain [`IntMatrix`] (the full-recompute mirror of a
+/// stream session's internal state).
+pub fn apply_deltas(x: &mut IntMatrix, deltas: &[StreamDelta]) {
+    for d in deltas {
+        debug_assert_eq!(x.get(d.row, d.feature), d.old, "stale delta in mirror");
+        x.set(d.row, d.feature, d.new);
+    }
 }
 
 static COUNTER: AtomicU64 = AtomicU64::new(0);

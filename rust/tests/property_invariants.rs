@@ -904,3 +904,64 @@ fn prop_forced_kernel_paths_agree_on_a2q_constrained_layers() {
     let loose = psweep_constrained_layer(16, 96, 28, 8, 3).sparsity();
     assert!(tight > loose, "sparsity should grow as P tightens: {tight} vs {loose}");
 }
+
+/// The NNUE-style incremental stream session is bit-identical to the batch
+/// recompute on its current input — outputs AND every [`OverflowStats`]
+/// counter, per layer — across delta densities (empty tick, sparse, heavy,
+/// whole-row), refresh thresholds (always-refresh, default, never-refresh),
+/// thread counts and forced kernel paths. This is the determinism contract
+/// of `accsim::stream`: the Eq. 15 safety partition is re-derived from the
+/// updated inputs on every forward, so overflow accounting can never drift
+/// from what a from-scratch `NetworkPlan::execute` would report.
+#[test]
+fn prop_stream_session_matches_full_recompute() {
+    use a2q::accsim::{KernelPath, StreamSession};
+    use a2q::testutil::{apply_deltas, psweep_network, stream_delta_tick};
+    let mut rng = Rng::new(0x57AE);
+    let widths = vec![24usize, 16, 8];
+    let batch = 6;
+    let n_bits = 4u32;
+    let modes =
+        [AccMode::Wide, AccMode::Wrap { p_bits: 16 }, AccMode::Saturate { p_bits: 12 }];
+    let paths =
+        [None, Some(KernelPath::Scalar), Some(KernelPath::Simd), Some(KernelPath::SparseSimd)];
+    for (case, path) in paths.iter().enumerate() {
+        let (net, x0) = psweep_network(&widths, batch, 11 + case as u64);
+        let plan = NetworkPlan::new_with_path(&net, &modes, *path);
+        for threshold in [0.0, 0.5, 1.1] {
+            let mut session =
+                StreamSession::new(&plan, x0.clone()).with_refresh_threshold(threshold);
+            let mut mirror = x0.clone();
+            // Escalating densities per tick: empty, ~4%, ~30%, whole-row
+            // (the last crosses the refresh cap at thresholds <= 1.0).
+            for per_row in [0usize, 1, 7, widths[0]] {
+                let tick = stream_delta_tick(session.x(), per_row, n_bits, &mut rng);
+                session.apply(&tick);
+                apply_deltas(&mut mirror, &tick);
+                let ctx = format!("{path:?} thr={threshold} per_row={per_row}");
+                assert_eq!(session.x(), &mirror, "{ctx}");
+                for threads in [1usize, 2, 7] {
+                    let got = session.forward_threads(threads);
+                    let want = plan.execute_threads(&mirror, threads);
+                    assert_eq!(got.len(), want.len(), "{ctx}");
+                    for (mi, (g, b)) in got.iter().zip(&want).enumerate() {
+                        let tag = format!("{ctx} t={threads} mode {mi}");
+                        assert_eq!(g.out.data(), b.out.data(), "{tag}");
+                        assert_eq!(g.out_wide.data(), b.out_wide.data(), "{tag}");
+                        for (li, (gs, bs)) in
+                            g.layer_stats.iter().zip(&b.layer_stats).enumerate()
+                        {
+                            let ltag = format!("{tag} layer {li}");
+                            assert_eq!(gs.dots, bs.dots, "{ltag}");
+                            assert_eq!(gs.macs, bs.macs, "{ltag}");
+                            assert_eq!(gs.overflow_events, bs.overflow_events, "{ltag}");
+                            assert_eq!(gs.dots_overflowed, bs.dots_overflowed, "{ltag}");
+                            assert_eq!(gs.abs_err_sum, bs.abs_err_sum, "{ltag}");
+                            assert_eq!(gs.outputs, bs.outputs, "{ltag}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Smoke-scale streaming-delta perf run wired into `cargo test`: exercises
+//! the incremental-session pipeline (delta ticks, refresh policy, journal
+//! write) at a size that finishes in well under a second, and pins the
+//! session bit-identical to the full recompute on the exact bench
+//! configuration. Lives in its own test binary so its journal
+//! read-modify-write cannot race the other smoke binaries (cargo runs test
+//! binaries sequentially).
+//!
+//! Timing numbers here come from the *debug* profile and land in the
+//! `accsim_smoke/stream_*` journal entries; the authoritative release
+//! numbers come from `cargo bench --bench stream_delta`.
+
+use std::time::Instant;
+
+use a2q::accsim::{AccMode, IntMatrix, LayerPlan, LayerStreamSession};
+use a2q::perf::{self, BenchRecord};
+use a2q::rng::Rng;
+use a2q::testutil::{apply_deltas, psweep_constrained_layer, stream_delta_tick};
+
+#[test]
+fn stream_smoke_records_journal() {
+    let quick = std::env::var("A2Q_BENCH_QUICK").map(|v| v != "0").unwrap_or(true);
+    let (c_out, k, batch, reps): (usize, usize, usize, usize) =
+        if quick { (16, 32, 8, 2) } else { (64, 128, 32, 4) };
+    let ticks = 3usize;
+    let (p, n) = (14u32, 8u32);
+    let w = psweep_constrained_layer(c_out, k, p, n, 7);
+    let sparsity = w.sparsity();
+    assert!(sparsity >= 0.70, "stream smoke fixture must be >= 70% sparse, got {sparsity:.3}");
+    let modes = [AccMode::Wide, AccMode::Wrap { p_bits: p }];
+    let plan = LayerPlan::new(&w, &modes);
+    let x_scale = 0.05f32;
+    let mut xrng = Rng::new(7 ^ 0x57AE);
+    let x0 = IntMatrix::from_flat(
+        batch,
+        k,
+        (0..batch * k).map(|_| xrng.below(1usize << n) as i64).collect(),
+    );
+    let per_row = ((k as f64) * 0.05).round().max(1.0) as usize;
+    let macs = (reps * ticks * batch * c_out * k) as u64;
+
+    // Full-forward mirror over the identically seeded stream.
+    let mut frng = Rng::new(0xD5);
+    let mut xf = x0.clone();
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..reps * ticks {
+        let tick = stream_delta_tick(&xf, per_row, n, &mut frng);
+        apply_deltas(&mut xf, &tick);
+        sink ^= plan.execute_threads(&xf, x_scale, 1)[1].stats.overflow_events;
+    }
+    let t_full = t0.elapsed();
+
+    let mut srng = Rng::new(0xD5);
+    let mut session = LayerStreamSession::new(&plan, x0, x_scale);
+    let t1 = Instant::now();
+    for _ in 0..reps * ticks {
+        let tick = stream_delta_tick(session.x(), per_row, n, &mut srng);
+        session.apply(&tick);
+        sink ^= session.forward_threads(1)[1].stats.overflow_events;
+    }
+    let t_inc = t1.elapsed();
+    std::hint::black_box(sink);
+
+    // Correctness at smoke scale: identical streams must leave identical
+    // state — outputs and every overflow counter (the property test covers
+    // this broadly; this guards the bench configuration).
+    assert_eq!(session.x(), &xf, "incremental input state diverged from the mirror");
+    let got = session.forward_threads(1);
+    let want = plan.execute_threads(&xf, x_scale, 1);
+    for (g, b) in got.iter().zip(&want) {
+        assert_eq!(g.out.data(), b.out.data());
+        assert_eq!(g.out_wide.data(), b.out_wide.data());
+        assert_eq!(g.stats.overflow_events, b.stats.overflow_events);
+        assert_eq!(g.stats.dots_overflowed, b.stats.dots_overflowed);
+        assert_eq!(g.stats.abs_err_sum, b.stats.abs_err_sum);
+        assert_eq!(g.stats.outputs, b.stats.outputs);
+    }
+
+    let speedup = t_full.as_secs_f64() / t_inc.as_secs_f64().max(1e-12);
+    let per_iter = |t: std::time::Duration| t.as_nanos() as f64 / reps as f64;
+    let mac_rate = |t: std::time::Duration| macs as f64 / t.as_secs_f64().max(1e-12);
+    println!(
+        "smoke stream ({batch} rows x {c_out}x{k}, {per_row} deltas/row, debug profile): \
+         incremental {speedup:.1}x over full forward"
+    );
+
+    let full = BenchRecord {
+        name: "accsim_smoke/stream_full_forward".into(),
+        ns_per_iter: per_iter(t_full),
+        mac_per_s: Some(mac_rate(t_full)),
+        sparsity: Some(sparsity),
+    };
+    let inc = BenchRecord {
+        name: "accsim_smoke/stream_delta_d05".into(),
+        ns_per_iter: per_iter(t_inc),
+        mac_per_s: Some(mac_rate(t_inc)),
+        sparsity: Some(sparsity),
+    };
+    match perf::record_benches(&[full, inc]) {
+        Ok(path) => {
+            let journal = perf::parse_journal(&std::fs::read_to_string(path).unwrap()).unwrap();
+            assert!(journal.iter().any(|r| r.name == "accsim_smoke/stream_delta_d05"));
+        }
+        Err(e) => eprintln!("perf journal not writable here ({e}); measurements printed only"),
+    }
+}
