@@ -90,7 +90,7 @@ fn main() {
         let mut events = 0u64;
         for _ in 0..ticks {
             let tick = stream_delta_tick(session.x(), per_row_d05, n, &mut srng);
-            session.apply(&tick);
+            session.apply(&tick).unwrap();
             events += session.forward_threads(1)[1].stats.overflow_events;
         }
         events
@@ -128,7 +128,7 @@ fn main() {
         let mut events = 0u64;
         for _ in 0..ticks {
             let tick = stream_delta_tick(dsession.x(), per_row_d25, n, &mut drng);
-            dsession.apply(&tick);
+            dsession.apply(&tick).unwrap();
             events += dsession.forward_threads(1)[1].stats.overflow_events;
         }
         events
@@ -201,7 +201,7 @@ fn main() {
         let mut events = 0u64;
         for _ in 0..ticks {
             let tick = stream_delta_tick(nsession.x(), net_per_row, net_n_bits, &mut nsrng);
-            nsession.apply(&tick);
+            nsession.apply(&tick).unwrap();
             let wrapped = &nsession.forward_threads(1)[1];
             events += wrapped.layer_stats.iter().map(|s| s.overflow_events).sum::<u64>();
         }

@@ -66,7 +66,7 @@
 //! §Perf and BENCH_accsim.json.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::dot::{range, AccMode, DotResult};
 use super::gemm::PackedWeights;
@@ -320,8 +320,13 @@ pub fn dot_accumulate_multi(x: &[i64], w: &[i64], modes: &[AccMode]) -> Vec<DotR
 /// order that turns the per-(row, channel) bound gate into one
 /// `partition_point` per row, plus the weight panels the safe-span GEMM
 /// streams.
-pub(crate) struct LayerKernel<'w> {
-    pub(crate) w: &'w QTensor,
+///
+/// Owned data only — no borrow of the source [`QTensor`] — so plans built
+/// over an `Arc<QNetwork>` ([`SharedNetworkPlan`]) can ship across threads.
+/// Callers pass the weight tensor back in at execution time; it must be the
+/// tensor the kernel was packed from (the sorted order and panels encode
+/// its contents).
+pub(crate) struct LayerKernel {
     /// Channel ids sorted ascending by integer l1 norm (stable, so the
     /// order — and every downstream result — is deterministic).
     order: Vec<usize>,
@@ -338,14 +343,14 @@ pub(crate) struct LayerKernel<'w> {
     pub(crate) choice: KernelChoice,
 }
 
-impl<'w> LayerKernel<'w> {
-    fn new(w: &'w QTensor) -> LayerKernel<'w> {
+impl LayerKernel {
+    fn new(w: &QTensor) -> LayerKernel {
         LayerKernel::new_with(w, None)
     }
 
     /// Build the kernel context, optionally pinning the GEMM dispatch
     /// (`None` = auto: `A2Q_KERNEL` override, then density heuristic).
-    fn new_with(w: &'w QTensor, forced: Option<KernelPath>) -> LayerKernel<'w> {
+    fn new_with(w: &QTensor, forced: Option<KernelPath>) -> LayerKernel {
         // One source of truth for the per-channel norm: QTensor::row_l1
         // (Eq. 13), widened to i128 for the overflow-proof bound products.
         let row_l1: Vec<i128> = w.row_l1().into_iter().map(|v| v as i128).collect();
@@ -361,7 +366,7 @@ impl<'w> LayerKernel<'w> {
             sparsity: w.sparsity(),
             pack_fallback: packed.is_none(),
         };
-        LayerKernel { w, order, l1_sorted, row_l1, packed, choice }
+        LayerKernel { order, l1_sorted, row_l1, packed, choice }
     }
 
     /// Length of the provably-safe prefix of `order` for a row with
@@ -391,13 +396,14 @@ impl<'w> LayerKernel<'w> {
     /// bit-identical to a recompute by construction.
     pub(crate) fn accumulate_rows(
         &self,
+        w: &QTensor,
         x: &[i64],
         rows: usize,
         scratch: &mut Vec<i64>,
         acc: &mut [i64],
     ) {
-        let c_out = self.w.c_out;
-        let k = self.w.k;
+        let c_out = w.c_out;
+        let k = w.k;
         debug_assert_eq!(x.len(), rows * k);
         debug_assert_eq!(acc.len(), rows * c_out);
         if rows == 0 || c_out == 0 {
@@ -418,7 +424,7 @@ impl<'w> LayerKernel<'w> {
                 for ri in 0..rows {
                     let xrow = &x[ri * k..(ri + 1) * k];
                     for (c, a) in acc[ri * c_out..(ri + 1) * c_out].iter_mut().enumerate() {
-                        *a = wide_dot(xrow, self.w.row(c));
+                        *a = wide_dot(xrow, w.row(c));
                     }
                 }
             }
@@ -468,6 +474,7 @@ struct SimScratch {
 #[allow(clippy::too_many_arguments)]
 fn simulate_block(
     kern: &LayerKernel,
+    w: &QTensor,
     plan: &ModePlan,
     x: &[i64],
     rows: usize,
@@ -478,7 +485,6 @@ fn simulate_block(
     stats: &mut [OverflowStats],
     acc: Option<&[i64]>,
 ) {
-    let w = kern.w;
     let c_out = w.c_out;
     let k = w.k;
     let n_modes = plan.modes.len();
@@ -708,7 +714,8 @@ struct LayerTask<'a> {
 /// plus the l1-sorted channel order and packed weight panels that drive the
 /// safety-partitioned kernel.
 pub struct LayerPlan<'w> {
-    pub(crate) kern: LayerKernel<'w>,
+    pub(crate) w: &'w QTensor,
+    pub(crate) kern: LayerKernel,
     plan: ModePlan,
 }
 
@@ -725,7 +732,7 @@ impl<'w> LayerPlan<'w> {
         modes: &[AccMode],
         path: Option<KernelPath>,
     ) -> LayerPlan<'w> {
-        LayerPlan { kern: LayerKernel::new_with(w, path), plan: ModePlan::new(modes) }
+        LayerPlan { w, kern: LayerKernel::new_with(w, path), plan: ModePlan::new(modes) }
     }
 
     pub fn modes(&self) -> &[AccMode] {
@@ -756,7 +763,7 @@ impl<'w> LayerPlan<'w> {
         l0: Option<&[i64]>,
     ) -> Vec<MatmulStats> {
         let batch = x.rows();
-        let w = self.kern.w;
+        let w = self.w;
         assert_eq!(x.cols(), w.k, "input cols {} vs layer k {}", x.cols(), w.k);
         let c_out = w.c_out;
         debug_assert!(l0.is_none_or(|a| a.len() == batch * c_out));
@@ -803,6 +810,7 @@ impl<'w> LayerPlan<'w> {
                 let LayerTask { r0, r1, mut mode_out, wide_out, stats, acc } = task;
                 simulate_block(
                     &self.kern,
+                    self.w,
                     &self.plan,
                     x.rows_slice(r0, r1),
                     r1 - r0,
@@ -836,7 +844,7 @@ impl<'w> LayerPlan<'w> {
     /// Execute over a batch, choosing the worker count from the simulated
     /// grid size (small grids run inline — thread spawn would dominate).
     pub fn execute(&self, x: &IntMatrix, x_scale: f32) -> Vec<MatmulStats> {
-        let w = self.kern.w;
+        let w = self.w;
         self.execute_threads(
             x,
             x_scale,
@@ -968,7 +976,7 @@ pub struct NetworkPlan<'n> {
     pub(crate) net: &'n QNetwork,
     pub(crate) modes: Vec<AccMode>,
     /// One kernel context (sorted order + packed panels) per layer.
-    pub(crate) kernels: Vec<LayerKernel<'n>>,
+    pub(crate) kernels: Vec<LayerKernel>,
 }
 
 impl<'n> NetworkPlan<'n> {
@@ -983,9 +991,7 @@ impl<'n> NetworkPlan<'n> {
         modes: &[AccMode],
         path: Option<KernelPath>,
     ) -> NetworkPlan<'n> {
-        let kernels =
-            net.layers.iter().map(|l| LayerKernel::new_with(&l.weights, path)).collect();
-        NetworkPlan { net, modes: modes.to_vec(), kernels }
+        NetworkPlan { net, modes: modes.to_vec(), kernels: net_kernels(net, path) }
     }
 
     pub fn modes(&self) -> &[AccMode] {
@@ -1001,47 +1007,87 @@ impl<'n> NetworkPlan<'n> {
         self.net.layers.len()
     }
 
-    /// Stream rows `r0..r1` through every layer, writing the final layer's
-    /// outputs straight into the task's slices; the single-threaded core.
-    /// `l0` is the block's maintained layer-0 accumulator slice when an
-    /// incremental stream session is driving the forward (only layer 0 can
-    /// consume it: all modes are still fused in one group there, and it is
-    /// the only layer whose input the session tracks deltas against).
-    #[allow(clippy::too_many_arguments)]
-    fn forward_block(
+    /// Execute over a batch with an explicit worker count (tests pin thread
+    /// counts; [`Self::execute`] picks one from the network's MAC grid).
+    pub fn execute_threads(&self, x: &IntMatrix, threads: usize) -> Vec<NetworkStats> {
+        self.execute_threads_l0(x, threads, None)
+    }
+
+    /// [`Self::execute_threads`] with maintained layer-0 accumulators
+    /// (`batch * c_out_0`, original channel order) supplied by an
+    /// incremental [`super::stream::StreamSession`]: layer 0 skips its
+    /// safe-span GEMM and resolves safe channels from `l0`; every deeper
+    /// layer recomputes as usual.
+    pub(crate) fn execute_threads_l0(
         &self,
         x: &IntMatrix,
-        r0: usize,
-        r1: usize,
-        ws: &mut NetWorker,
-        out: &mut [&mut [f32]],
-        out_wide: &mut [&mut [f32]],
-        stats: &mut [OverflowStats],
+        threads: usize,
         l0: Option<&[i64]>,
-    ) {
-        let n_modes = self.modes.len();
-        let depth = self.net.layers.len();
-        let rows = r1 - r0;
-        let NetWorker { sim, cur, next, outs, wide, gstats, qbuf, code_pool, slot_pool } = ws;
-        debug_assert!(cur.is_empty() && next.is_empty());
+    ) -> Vec<NetworkStats> {
+        net_execute_threads(self.net, &self.modes, &self.kernels, x, threads, l0)
+    }
 
-        // Layer 0 input: one group holding every mode over the block's rows.
-        {
-            let mut codes = code_pool.pop().unwrap_or_default();
-            codes.clear();
-            codes.extend_from_slice(x.rows_slice(r0, r1));
-            let mut slots = slot_pool.pop().unwrap_or_default();
-            slots.clear();
-            slots.extend(0..n_modes);
-            cur.push(Group { slots, codes });
-        }
+    /// Execute over a batch, choosing the worker count from the whole
+    /// network's simulated MAC grid (small networks run inline).
+    pub fn execute(&self, x: &IntMatrix) -> Vec<NetworkStats> {
+        self.execute_threads(
+            x,
+            worker_count(x.rows(), self.net.macs_per_row(), 1, self.modes.len()),
+        )
+    }
+}
 
-        for (li, layer) in self.net.layers.iter().enumerate() {
-            let kern = &self.kernels[li];
+/// Build one [`LayerKernel`] per layer of `net` (shared by the borrowing
+/// [`NetworkPlan`] and the owning [`SharedNetworkPlan`]).
+fn net_kernels(net: &QNetwork, path: Option<KernelPath>) -> Vec<LayerKernel> {
+    net.layers.iter().map(|l| LayerKernel::new_with(&l.weights, path)).collect()
+}
+
+/// Stream rows `r0..r1` through every layer, writing the final layer's
+/// outputs straight into the task's slices; the single-threaded core of the
+/// network engine. `l0` is the block's maintained layer-0 accumulator slice
+/// when an incremental stream session is driving the forward (only layer 0
+/// can consume it: all modes are still fused in one group there, and it is
+/// the only layer whose input the session tracks deltas against).
+/// `kernels[i]` must have been built from `net.layers[i].weights`.
+#[allow(clippy::too_many_arguments)]
+fn net_forward_block(
+    net: &QNetwork,
+    modes: &[AccMode],
+    kernels: &[LayerKernel],
+    x: &IntMatrix,
+    r0: usize,
+    r1: usize,
+    ws: &mut NetWorker,
+    out: &mut [&mut [f32]],
+    out_wide: &mut [&mut [f32]],
+    stats: &mut [OverflowStats],
+    l0: Option<&[i64]>,
+) {
+    let n_modes = modes.len();
+    let depth = net.layers.len();
+    let rows = r1 - r0;
+    let NetWorker { sim, cur, next, outs, wide, gstats, qbuf, code_pool, slot_pool } = ws;
+    debug_assert!(cur.is_empty() && next.is_empty());
+
+    // Layer 0 input: one group holding every mode over the block's rows.
+    {
+        let mut codes = code_pool.pop().unwrap_or_default();
+        codes.clear();
+        codes.extend_from_slice(x.rows_slice(r0, r1));
+        let mut slots = slot_pool.pop().unwrap_or_default();
+        slots.clear();
+        slots.extend(0..n_modes);
+        cur.push(Group { slots, codes });
+    }
+
+    {
+        for (li, layer) in net.layers.iter().enumerate() {
+            let kern = &kernels[li];
             let c_out = layer.weights.c_out;
             let last = li + 1 == depth;
             for g in cur.iter() {
-                let gmodes: Vec<AccMode> = g.slots.iter().map(|&s| self.modes[s]).collect();
+                let gmodes: Vec<AccMode> = g.slots.iter().map(|&s| modes[s]).collect();
                 let plan = ModePlan::new(&gmodes);
                 let gn = g.slots.len();
                 while outs.len() < gn {
@@ -1060,6 +1106,7 @@ impl<'n> NetworkPlan<'n> {
                         outs[..gn].iter_mut().map(|v| v.as_mut_slice()).collect();
                     simulate_block(
                         kern,
+                        &layer.weights,
                         &plan,
                         &g.codes,
                         rows,
@@ -1086,7 +1133,7 @@ impl<'n> NetworkPlan<'n> {
                     // (buffer to buffer, no Tensor round trip) and regroup:
                     // slots whose register models produced identical
                     // activations stay fused.
-                    let nq = &self.net.layers[li + 1].in_quant;
+                    let nq = &net.layers[li + 1].in_quant;
                     for (gi, &slot) in g.slots.iter().enumerate() {
                         nq.quantize_slice_into(&outs[gi], qbuf);
                         match next.iter().position(|g2| g2.codes == *qbuf) {
@@ -1110,36 +1157,33 @@ impl<'n> NetworkPlan<'n> {
             std::mem::swap(cur, next);
         }
     }
+}
 
-    /// Execute over a batch with an explicit worker count (tests pin thread
-    /// counts; [`Self::execute`] picks one from the network's MAC grid).
-    pub fn execute_threads(&self, x: &IntMatrix, threads: usize) -> Vec<NetworkStats> {
-        self.execute_threads_l0(x, threads, None)
-    }
-
-    /// [`Self::execute_threads`] with maintained layer-0 accumulators
-    /// (`batch * c_out_0`, original channel order) supplied by an
-    /// incremental [`super::stream::StreamSession`]: layer 0 skips its
-    /// safe-span GEMM and resolves safe channels from `l0`; every deeper
-    /// layer recomputes as usual.
-    pub(crate) fn execute_threads_l0(
-        &self,
-        x: &IntMatrix,
-        threads: usize,
-        l0: Option<&[i64]>,
-    ) -> Vec<NetworkStats> {
-        let batch = x.rows();
-        assert_eq!(
-            x.cols(),
-            self.net.input_dim(),
-            "input cols {} vs network input dim {}",
-            x.cols(),
-            self.net.input_dim()
-        );
-        let n_modes = self.modes.len();
-        let depth = self.net.layers.len();
-        let c_last = self.net.output_dim();
-        let c0 = self.net.layers.first().map_or(0, |l| l.weights.c_out);
+/// The multi-threaded network execute shared by [`NetworkPlan`] and
+/// [`SharedNetworkPlan`]: fan row blocks over scoped workers through the
+/// atomic queue and merge per-block stats in block order. `kernels[i]` must
+/// have been built from `net.layers[i].weights`.
+fn net_execute_threads(
+    net: &QNetwork,
+    modes: &[AccMode],
+    kernels: &[LayerKernel],
+    x: &IntMatrix,
+    threads: usize,
+    l0: Option<&[i64]>,
+) -> Vec<NetworkStats> {
+    let batch = x.rows();
+    assert_eq!(
+        x.cols(),
+        net.input_dim(),
+        "input cols {} vs network input dim {}",
+        x.cols(),
+        net.input_dim()
+    );
+    {
+        let n_modes = modes.len();
+        let depth = net.layers.len();
+        let c_last = net.output_dim();
+        let c0 = net.layers.first().map_or(0, |l| l.weights.c_out);
         debug_assert!(l0.is_none_or(|a| depth >= 1 && a.len() == batch * c0));
         if n_modes == 0 {
             return Vec::new();
@@ -1207,7 +1251,9 @@ impl<'n> NetworkPlan<'n> {
             };
             run_queue(tasks, t, NetWorker::default, |ws, task| {
                 let NetTask { r0, r1, mut out, mut out_wide, stats, l0 } = task;
-                self.forward_block(x, r0, r1, ws, &mut out, &mut out_wide, stats, l0);
+                net_forward_block(
+                    net, modes, kernels, x, r0, r1, ws, &mut out, &mut out_wide, stats, l0,
+                );
             });
             for bi in 0..n_blocks {
                 let base = bi * stats_len;
@@ -1230,14 +1276,133 @@ impl<'n> NetworkPlan<'n> {
             })
             .collect()
     }
+}
 
-    /// Execute over a batch, choosing the worker count from the whole
-    /// network's simulated MAC grid (small networks run inline).
+/// Opaque warm scratch arena for [`SharedNetworkPlan::execute_warm`]: a
+/// per-caller (e.g. per batch worker / per connection) [`NetWorker`] whose
+/// batch-sized buffers survive across calls, so steady-state serving
+/// allocates only its output tensors.
+#[derive(Default)]
+pub struct NetScratch(NetWorker);
+
+/// An owning, thread-shareable [`NetworkPlan`]: the network travels as an
+/// [`Arc`] and every kernel context is owned data, so one plan built at
+/// model-load time can be cached and executed concurrently from many server
+/// threads (`Send + Sync`, no locking — execution never mutates the plan).
+///
+/// Executions delegate to the exact machinery [`NetworkPlan`] runs
+/// ([`net_execute_threads`] over the same [`LayerKernel`]s), so results are
+/// bit-identical to a borrowing plan over the same network — outputs and
+/// every [`OverflowStats`] counter.
+pub struct SharedNetworkPlan {
+    net: Arc<QNetwork>,
+    modes: Vec<AccMode>,
+    kernels: Vec<LayerKernel>,
+}
+
+impl SharedNetworkPlan {
+    pub fn new(net: Arc<QNetwork>, modes: &[AccMode]) -> SharedNetworkPlan {
+        SharedNetworkPlan::new_with_path(net, modes, None)
+    }
+
+    /// [`SharedNetworkPlan::new`] with every layer's GEMM kernel dispatch
+    /// pinned (`None` = auto per layer).
+    pub fn new_with_path(
+        net: Arc<QNetwork>,
+        modes: &[AccMode],
+        path: Option<KernelPath>,
+    ) -> SharedNetworkPlan {
+        let kernels = net_kernels(&net, path);
+        SharedNetworkPlan { net, modes: modes.to_vec(), kernels }
+    }
+
+    /// The shared network the plan executes.
+    pub fn net(&self) -> &QNetwork {
+        &self.net
+    }
+
+    pub fn modes(&self) -> &[AccMode] {
+        &self.modes
+    }
+
+    /// Per-layer plan-time kernel dispatch decisions, in layer order.
+    pub fn kernel_choices(&self) -> Vec<KernelChoice> {
+        self.kernels.iter().map(|k| k.choice).collect()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.net.layers.len()
+    }
+
+    /// Execute over a batch with an explicit worker count.
+    pub fn execute_threads(&self, x: &IntMatrix, threads: usize) -> Vec<NetworkStats> {
+        net_execute_threads(&self.net, &self.modes, &self.kernels, x, threads, None)
+    }
+
+    /// Execute over a batch, choosing the worker count from the network's
+    /// simulated MAC grid exactly as [`NetworkPlan::execute`] does.
     pub fn execute(&self, x: &IntMatrix) -> Vec<NetworkStats> {
         self.execute_threads(
             x,
             worker_count(x.rows(), self.net.macs_per_row(), 1, self.modes.len()),
         )
+    }
+
+    /// Execute the whole batch inline on the calling thread through a warm
+    /// caller-owned scratch arena: the serving path, where each batch
+    /// worker keeps one [`NetScratch`] hot across micro-batches (workers
+    /// are already the parallelism axis, so per-call thread fan-out would
+    /// only fight them). Bit-identical to [`Self::execute`] at any thread
+    /// count by the engine's determinism contract.
+    pub fn execute_warm(&self, x: &IntMatrix, scratch: &mut NetScratch) -> Vec<NetworkStats> {
+        let batch = x.rows();
+        assert_eq!(
+            x.cols(),
+            self.net.input_dim(),
+            "input cols {} vs network input dim {}",
+            x.cols(),
+            self.net.input_dim()
+        );
+        let n_modes = self.modes.len();
+        if n_modes == 0 {
+            return Vec::new();
+        }
+        let depth = self.net.layers.len();
+        let c_last = self.net.output_dim();
+        let mut out_bufs: Vec<Vec<f32>> =
+            (0..n_modes).map(|_| vec![0f32; batch * c_last]).collect();
+        let mut wide_bufs: Vec<Vec<f32>> =
+            (0..n_modes).map(|_| vec![0f32; batch * c_last]).collect();
+        let mut stats = vec![OverflowStats::default(); depth * n_modes];
+        if batch > 0 {
+            let mut out: Vec<&mut [f32]> =
+                out_bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            let mut out_wide: Vec<&mut [f32]> =
+                wide_bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            net_forward_block(
+                &self.net,
+                &self.modes,
+                &self.kernels,
+                x,
+                0,
+                batch,
+                &mut scratch.0,
+                &mut out,
+                &mut out_wide,
+                &mut stats,
+                None,
+            );
+        }
+        out_bufs
+            .into_iter()
+            .zip(wide_bufs)
+            .enumerate()
+            .map(|(mi, (data, wide))| NetworkStats {
+                out: Tensor::new(vec![batch, c_last], data),
+                out_wide: Tensor::new(vec![batch, c_last], wide),
+                layer_stats: (0..depth).map(|li| stats[li * n_modes + mi].clone()).collect(),
+            })
+            .collect()
     }
 }
 
@@ -1515,6 +1680,46 @@ mod tests {
         assert!(c.pack_fallback);
         assert_eq!(c.path, KernelPath::Scalar);
         assert_eq!(c.sparsity, 0.0);
+    }
+
+    #[test]
+    fn shared_plan_matches_borrowing_plan_including_warm_scratch() {
+        use crate::testutil::psweep_network;
+        let (net, x) = psweep_network(&[10, 8, 4], 6, 3);
+        let modes = [
+            AccMode::Wide,
+            AccMode::Wrap { p_bits: 12 },
+            AccMode::Saturate { p_bits: 10 },
+            AccMode::SaturateFinal { p_bits: 12 },
+        ];
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SharedNetworkPlan>();
+        let want = NetworkPlan::new(&net, &modes).execute_threads(&x, 2);
+        let shared = SharedNetworkPlan::new(Arc::new(net), &modes);
+        let mut scratch = NetScratch::default();
+        // Threaded, warm, and warm-again (reused arena) must all be
+        // bit-identical to the borrowing plan: outputs and every counter.
+        let runs = [
+            ("threads", shared.execute_threads(&x, 3)),
+            ("warm", shared.execute_warm(&x, &mut scratch)),
+            ("warm reuse", shared.execute_warm(&x, &mut scratch)),
+        ];
+        for (tag, got) in &runs {
+            assert_eq!(got.len(), want.len(), "{tag}");
+            for (mi, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.out.data(), w.out.data(), "{tag} mode {mi}");
+                assert_eq!(g.out_wide.data(), w.out_wide.data(), "{tag} mode {mi}");
+                assert_eq!(g.layer_stats.len(), w.layer_stats.len(), "{tag} mode {mi}");
+                for (li, (a, b)) in g.layer_stats.iter().zip(&w.layer_stats).enumerate() {
+                    assert_eq!(a.overflow_events, b.overflow_events, "{tag} {mi} layer {li}");
+                    assert_eq!(a.dots_overflowed, b.dots_overflowed, "{tag} {mi} layer {li}");
+                    assert_eq!(a.abs_err_sum, b.abs_err_sum, "{tag} {mi} layer {li}");
+                    assert_eq!(a.dots, b.dots, "{tag} {mi} layer {li}");
+                    assert_eq!(a.macs, b.macs, "{tag} {mi} layer {li}");
+                    assert_eq!(a.outputs, b.outputs, "{tag} {mi} layer {li}");
+                }
+            }
+        }
     }
 
     #[test]

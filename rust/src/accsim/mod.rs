@@ -46,7 +46,7 @@ pub mod stream;
 pub use dot::{dot_accumulate, AccMode, DotResult};
 pub use engine::{
     dot_accumulate_multi, min_safe_p, network_forward_multi, qlinear_forward_multi, KernelChoice,
-    LayerPlan, ModePlan, NetworkPlan, NetworkStats,
+    LayerPlan, ModePlan, NetScratch, NetworkPlan, NetworkStats, SharedNetworkPlan,
 };
 pub use gemm::{FeatureMajorWeights, PackedWeights};
 // The GEMM kernel dispatch enum lives with the float core in
@@ -59,4 +59,6 @@ pub use matmul::{
 };
 pub use reorder::{reorder_study, ReorderScratch, ReorderStudy};
 pub use stats::OverflowStats;
-pub use stream::{LayerStreamSession, StreamDelta, StreamSession, DEFAULT_REFRESH_THRESHOLD};
+pub use stream::{
+    LayerStreamSession, StreamDelta, StreamError, StreamSession, DEFAULT_REFRESH_THRESHOLD,
+};

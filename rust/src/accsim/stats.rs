@@ -1,7 +1,11 @@
 //! Aggregated overflow statistics across a batch of simulated dot products.
 
 /// Running overflow/error statistics for a simulated layer execution.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq` is exact (including `abs_err_sum`): the engine's determinism
+/// contract makes whole-struct equality the right assertion for
+/// bit-identity tests.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct OverflowStats {
     /// Total dot products simulated.
     pub dots: u64,

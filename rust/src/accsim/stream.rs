@@ -51,10 +51,51 @@
 //! variant over a [`LayerPlan`]. Throughput history lives in EXPERIMENTS.md
 //! §Perf-Stream and the `accsim/stream_delta_*` rows of BENCH_accsim.json.
 
+use std::collections::HashMap;
+
 use super::engine::{worker_count, LayerKernel, LayerPlan, NetworkPlan, NetworkStats};
 use super::gemm::FeatureMajorWeights;
 use super::intmat::IntMatrix;
 use super::matmul::MatmulStats;
+use crate::quant::QTensor;
+
+/// A rejected delta tick: the client handed the session something that
+/// cannot be applied. Server-grade callers (the `a2q serve` ingest path)
+/// reply with these instead of aborting the process — a bad client delta is
+/// load to shed, not a crash. The session is left **unchanged** on error:
+/// validation runs over the whole tick before any state moves, so a
+/// rejected tick can simply be dropped and the session keeps serving.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamError {
+    /// `delta.row` is outside the session's batch.
+    RowOutOfRange { row: usize, rows: usize },
+    /// `delta.feature` is outside the tracked layer's input features.
+    FeatureOutOfRange { feature: usize, features: usize },
+    /// `delta.old` does not match the value the session holds (the
+    /// self-checking protocol: a producer that dropped or reordered ticks
+    /// fails loudly instead of silently diverging from the batch
+    /// reference).
+    StaleDelta { row: usize, feature: usize, held: i64, claimed: i64 },
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::RowOutOfRange { row, rows } => {
+                write!(f, "delta row {row} out of range (batch has {rows} rows)")
+            }
+            StreamError::FeatureOutOfRange { feature, features } => {
+                write!(f, "delta feature {feature} out of range (layer has {features} features)")
+            }
+            StreamError::StaleDelta { row, feature, held, claimed } => write!(
+                f,
+                "stale delta: row {row} feature {feature} holds {held} but delta claims old {claimed}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
 
 /// Default refresh threshold: a row is refreshed through the batch kernel
 /// once a single `apply` call delivers deltas to at least half its
@@ -121,10 +162,12 @@ struct StreamAcc {
     touched: Vec<usize>,
     /// Scratch for the refresh GEMM.
     scratch: Vec<i64>,
+    /// Validation scratch: `(row, feature) -> running value` over one tick.
+    pending: HashMap<(usize, usize), i64>,
 }
 
 impl StreamAcc {
-    fn new(x: IntMatrix, fmw: FeatureMajorWeights, kern: &LayerKernel<'_>) -> StreamAcc {
+    fn new(x: IntMatrix, fmw: FeatureMajorWeights, kern: &LayerKernel, w: &QTensor) -> StreamAcc {
         let rows = x.rows();
         let c_out = fmw.channels();
         let mut st = StreamAcc {
@@ -135,23 +178,65 @@ impl StreamAcc {
             counts: vec![0; rows],
             touched: Vec::new(),
             scratch: Vec::new(),
+            pending: HashMap::new(),
             x,
         };
-        kern.accumulate_rows(st.x.data(), rows, &mut st.scratch, &mut st.acc);
+        kern.accumulate_rows(w, st.x.data(), rows, &mut st.scratch, &mut st.acc);
         st
     }
 
-    /// Apply one tick of deltas: count per-row touches, then either walk
-    /// the touched columns (below the refresh cap) or recompute the row
-    /// through the batch kernel (at or above it). Panics on out-of-range
-    /// rows/features and on a stale `old` value.
-    fn apply(&mut self, kern: &LayerKernel<'_>, deltas: &[StreamDelta]) {
+    /// Validate one tick against the session's *current* state without
+    /// mutating anything: every index in range, every `old` matching the
+    /// running value (repeated deltas to one cell chain in order through
+    /// the pending map). Returning `Ok` here guarantees the mutation pass
+    /// cannot fail, which is what makes `apply` atomic per tick.
+    fn validate(&mut self, deltas: &[StreamDelta]) -> Result<(), StreamError> {
         let rows = self.x.rows();
+        let k = self.x.cols();
+        self.pending.clear();
+        for d in deltas {
+            if d.row >= rows {
+                self.pending.clear();
+                return Err(StreamError::RowOutOfRange { row: d.row, rows });
+            }
+            if d.feature >= k {
+                self.pending.clear();
+                return Err(StreamError::FeatureOutOfRange { feature: d.feature, features: k });
+            }
+            let cur = self
+                .pending
+                .get(&(d.row, d.feature))
+                .copied()
+                .unwrap_or_else(|| self.x.get(d.row, d.feature));
+            if cur != d.old {
+                self.pending.clear();
+                return Err(StreamError::StaleDelta {
+                    row: d.row,
+                    feature: d.feature,
+                    held: cur,
+                    claimed: d.old,
+                });
+            }
+            self.pending.insert((d.row, d.feature), d.new);
+        }
+        self.pending.clear();
+        Ok(())
+    }
+
+    /// Apply one tick of deltas: validate the whole tick first (rejecting
+    /// it unapplied on any bad delta), then count per-row touches and
+    /// either walk the touched columns (below the refresh cap) or recompute
+    /// the row through the batch kernel (at or above it).
+    fn apply(
+        &mut self,
+        kern: &LayerKernel,
+        w: &QTensor,
+        deltas: &[StreamDelta],
+    ) -> Result<(), StreamError> {
+        self.validate(deltas)?;
         let k = self.x.cols();
         let c_out = self.fmw.channels();
         for d in deltas {
-            assert!(d.row < rows, "delta row {} of {rows}", d.row);
-            assert!(d.feature < k, "delta feature {} of {k}", d.feature);
             if self.counts[d.row] == 0 {
                 self.touched.push(d.row);
             }
@@ -159,11 +244,12 @@ impl StreamAcc {
         }
         let cap = self.refresh_threshold * k as f64;
         for d in deltas {
-            let cur = self.x.get(d.row, d.feature);
-            assert_eq!(
-                cur, d.old,
-                "stale delta: row {} feature {} holds {cur} but delta claims old {}",
-                d.row, d.feature, d.old
+            // Internal invariant, not client validation: `validate` already
+            // accepted the tick, so the chain must hold here.
+            debug_assert_eq!(
+                self.x.get(d.row, d.feature),
+                d.old,
+                "validated delta went stale mid-apply"
             );
             self.x.set(d.row, d.feature, d.new);
             if (self.counts[d.row] as f64) < cap {
@@ -175,6 +261,7 @@ impl StreamAcc {
             if (self.counts[r] as f64) >= cap {
                 self.refreshes += 1;
                 kern.accumulate_rows(
+                    w,
                     self.x.row(r),
                     1,
                     &mut self.scratch,
@@ -184,6 +271,7 @@ impl StreamAcc {
             self.counts[r] = 0;
         }
         self.touched.clear();
+        Ok(())
     }
 }
 
@@ -211,10 +299,11 @@ impl<'p, 'n> StreamSession<'p, 'n> {
             plan.net.input_dim()
         );
         let kern = &plan.kernels[0];
+        let w0 = &plan.net.layers[0].weights;
         // Pack with the plan's resolved path so `A2Q_KERNEL` / forced
         // dispatch reaches the delta kernels too.
-        let fmw = FeatureMajorWeights::pack_with(&plan.net.layers[0].weights, kern.choice.path);
-        StreamSession { st: StreamAcc::new(x, fmw, kern), plan }
+        let fmw = FeatureMajorWeights::pack_with(w0, kern.choice.path);
+        StreamSession { st: StreamAcc::new(x, fmw, kern, w0), plan }
     }
 
     /// Override the refresh threshold for this session (wins over the
@@ -227,10 +316,11 @@ impl<'p, 'n> StreamSession<'p, 'n> {
     }
 
     /// Apply one tick of sparse deltas to the session's input (and its
-    /// maintained layer-0 accumulators). Panics on out-of-range indices or
-    /// a stale `old` value.
-    pub fn apply(&mut self, deltas: &[StreamDelta]) {
-        self.st.apply(&self.plan.kernels[0], deltas);
+    /// maintained layer-0 accumulators). A tick with an out-of-range index
+    /// or a stale `old` value is rejected whole — typed [`StreamError`],
+    /// session unchanged — so a bad client delta never aborts a server.
+    pub fn apply(&mut self, deltas: &[StreamDelta]) -> Result<(), StreamError> {
+        self.st.apply(&self.plan.kernels[0], &self.plan.net.layers[0].weights, deltas)
     }
 
     /// The session's current input batch.
@@ -281,10 +371,10 @@ impl<'p, 'w> LayerStreamSession<'p, 'w> {
     /// Open a session on `plan` with initial batch `x` (integer input
     /// codes at scale `x_scale`), paying one full accumulation up front.
     pub fn new(plan: &'p LayerPlan<'w>, x: IntMatrix, x_scale: f32) -> LayerStreamSession<'p, 'w> {
-        let w = plan.kern.w;
+        let w = plan.w;
         assert_eq!(x.cols(), w.k, "input cols {} vs layer k {}", x.cols(), w.k);
         let fmw = FeatureMajorWeights::pack_with(w, plan.kern.choice.path);
-        LayerStreamSession { st: StreamAcc::new(x, fmw, &plan.kern), x_scale, plan }
+        LayerStreamSession { st: StreamAcc::new(x, fmw, &plan.kern, w), x_scale, plan }
     }
 
     /// Override the refresh threshold for this session (wins over the
@@ -295,10 +385,11 @@ impl<'p, 'w> LayerStreamSession<'p, 'w> {
         self
     }
 
-    /// Apply one tick of sparse deltas. Panics on out-of-range indices or
-    /// a stale `old` value.
-    pub fn apply(&mut self, deltas: &[StreamDelta]) {
-        self.st.apply(&self.plan.kern, deltas);
+    /// Apply one tick of sparse deltas. A tick with an out-of-range index
+    /// or a stale `old` value is rejected whole — typed [`StreamError`],
+    /// session unchanged.
+    pub fn apply(&mut self, deltas: &[StreamDelta]) -> Result<(), StreamError> {
+        self.st.apply(&self.plan.kern, self.plan.w, deltas)
     }
 
     /// The session's current input batch.
@@ -327,7 +418,7 @@ impl<'p, 'w> LayerStreamSession<'p, 'w> {
     /// Forward the current batch, choosing the worker count exactly as
     /// [`LayerPlan::execute`] does.
     pub fn forward(&self) -> Vec<MatmulStats> {
-        let w = self.plan.kern.w;
+        let w = self.plan.w;
         self.forward_threads(worker_count(
             self.st.x.rows(),
             w.c_out,
@@ -387,7 +478,7 @@ mod tests {
         let plan = LayerPlan::new(&w, &modes());
         let mut s = LayerStreamSession::new(&plan, input(5, 24, 4, 9), X_SCALE);
         let before = s.x().clone();
-        s.apply(&[]);
+        s.apply(&[]).unwrap();
         assert_eq!(*s.x(), before);
         assert_eq!(s.refreshed_rows(), 0);
         assert_matches_batch(&s, &plan, "empty tick");
@@ -404,7 +495,8 @@ mod tests {
             StreamDelta { row: 2, feature: 7, old: a, new: a + 3 },
             StreamDelta { row: 2, feature: 7, old: a + 3, new: 1 },
             StreamDelta { row: 2, feature: 7, old: 1, new: 9 },
-        ]);
+        ])
+        .unwrap();
         assert_eq!(s.x().get(2, 7), 9);
         assert_eq!(s.refreshed_rows(), 0, "threshold > 1 must never refresh");
         assert_matches_batch(&s, &plan, "chained repeats");
@@ -423,7 +515,7 @@ mod tests {
         let tick: Vec<StreamDelta> = (0..24)
             .map(|j| StreamDelta { row: 1, feature: j, old: s.x().get(1, j), new: (j as i64) % 13 })
             .collect();
-        s.apply(&tick);
+        s.apply(&tick).unwrap();
         assert_eq!(s.refreshed_rows(), 1);
         assert_matches_batch(&s, &plan, "full-row refresh");
     }
@@ -438,7 +530,8 @@ mod tests {
         s.apply(&[
             StreamDelta { row: 0, feature: 3, old: a, new: a + 1 },
             StreamDelta { row: 4, feature: 11, old: b, new: 0 },
-        ]);
+        ])
+        .unwrap();
         assert_eq!(s.refreshed_rows(), 2);
         assert_matches_batch(&s, &plan, "always-refresh");
     }
@@ -461,7 +554,7 @@ mod tests {
             .find(|&j| (0..10).any(|c| w.row(c)[j] != 0))
             .expect("constrained layer has a nonzero column");
         let old = s.x().get(2, j);
-        s.apply(&[StreamDelta { row: 2, feature: j, old, new: 1 << 20 }]);
+        s.apply(&[StreamDelta { row: 2, feature: j, old, new: 1 << 20 }]).unwrap();
         assert_matches_batch(&s, &plan, "safe -> simulated");
         let spiked = plan.execute_threads(s.x(), X_SCALE, 1);
         assert!(
@@ -469,18 +562,47 @@ mod tests {
             "the spike must actually push the wrap register into overflow"
         );
         // And back: restoring the old code must re-enter the safe span.
-        s.apply(&[StreamDelta { row: 2, feature: j, old: 1 << 20, new: old }]);
+        s.apply(&[StreamDelta { row: 2, feature: j, old: 1 << 20, new: old }]).unwrap();
         assert_matches_batch(&s, &plan, "simulated -> safe");
     }
 
     #[test]
-    #[should_panic(expected = "stale delta")]
-    fn stale_old_value_panics() {
+    fn bad_deltas_return_typed_errors_and_leave_the_session_unchanged() {
         let w = psweep_constrained_layer(6, 8, 14, 4, 3);
         let plan = LayerPlan::new(&w, &modes());
         let mut s = LayerStreamSession::new(&plan, input(2, 8, 4, 9), X_SCALE);
         let cur = s.x().get(0, 0);
-        s.apply(&[StreamDelta { row: 0, feature: 0, old: cur + 1, new: 0 }]);
+        let before = s.x().clone();
+
+        // Stale old value: the error names both sides of the mismatch.
+        let err = s.apply(&[StreamDelta { row: 0, feature: 0, old: cur + 1, new: 0 }]).unwrap_err();
+        assert_eq!(err, StreamError::StaleDelta { row: 0, feature: 0, held: cur, claimed: cur + 1 });
+        assert!(err.to_string().contains("stale delta"), "{err}");
+
+        // Out-of-range row and feature.
+        let err = s.apply(&[StreamDelta { row: 2, feature: 0, old: 0, new: 0 }]).unwrap_err();
+        assert_eq!(err, StreamError::RowOutOfRange { row: 2, rows: 2 });
+        let err = s.apply(&[StreamDelta { row: 0, feature: 8, old: 0, new: 0 }]).unwrap_err();
+        assert_eq!(err, StreamError::FeatureOutOfRange { feature: 8, features: 8 });
+
+        // A tick where only the *last* delta is bad must mutate nothing:
+        // validation covers the whole tick before any state moves.
+        let good = s.x().get(1, 3);
+        let err = s
+            .apply(&[
+                StreamDelta { row: 1, feature: 3, old: good, new: good + 1 },
+                StreamDelta { row: 0, feature: 0, old: cur + 7, new: 0 },
+            ])
+            .unwrap_err();
+        assert!(matches!(err, StreamError::StaleDelta { .. }), "{err:?}");
+        assert_eq!(*s.x(), before, "rejected tick must leave the session untouched");
+        assert_eq!(s.refreshed_rows(), 0);
+        assert_matches_batch(&s, &plan, "after rejections");
+
+        // The session keeps serving: a subsequent valid tick applies cleanly.
+        s.apply(&[StreamDelta { row: 0, feature: 0, old: cur, new: cur + 2 }]).unwrap();
+        assert_eq!(s.x().get(0, 0), cur + 2);
+        assert_matches_batch(&s, &plan, "valid tick after rejections");
     }
 
     #[test]

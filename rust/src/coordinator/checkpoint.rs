@@ -93,11 +93,25 @@ impl Checkpoint {
         })
     }
 
+    /// Crash-safe save: the JSON is written to a sibling temp file and
+    /// atomically renamed over `path`, so a sweep killed mid-write leaves
+    /// either the previous complete checkpoint or the new one — never a
+    /// truncated file. (Same-directory rename stays on one filesystem,
+    /// which is what makes the rename atomic; the PID suffix keeps
+    /// concurrent writers from clobbering each other's temp files.)
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        std::fs::write(path, self.to_json().to_string())?;
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(format!(".tmp.{}", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            // Don't leave the temp file behind on a failed publish.
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
         Ok(())
     }
 
@@ -161,5 +175,37 @@ mod tests {
         // drift detection: a different model's manifest is rejected
         let other = be.manifest("mlp").unwrap();
         assert!(ckpt.restore(&other).is_err());
+    }
+
+    #[test]
+    fn torn_write_never_corrupts_a_published_checkpoint() {
+        let be = NativeBackend::new("artifacts");
+        let manifest = be.manifest("mlp").unwrap();
+        let state = be.init(&manifest, 2.0).unwrap();
+        let ckpt = Checkpoint::capture(&manifest, "a2q", 3, &state).unwrap();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        ckpt.save(&path).unwrap();
+
+        // Simulate a writer killed mid-write: a truncated temp file sits
+        // next to the published checkpoint. Load must see only the complete
+        // file, untouched by the torn write.
+        let good = std::fs::read_to_string(&path).unwrap();
+        let tmp = dir.path().join(format!("state.json.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, &good[..good.len() / 3]).unwrap();
+        let restored = Checkpoint::load(&path).unwrap().restore(&manifest).unwrap();
+        assert_eq!(restored.leaves.len(), state.leaves.len());
+
+        // A fresh save replaces both atomically and cleans up the stale
+        // temp file's name by renaming over it.
+        let ckpt2 = Checkpoint::capture(&manifest, "a2q", 4, &state).unwrap();
+        ckpt2.save(&path).unwrap();
+        assert!(!tmp.exists(), "save must not leave its temp file behind");
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 4);
+
+        // And the failure mode this guards against: a torn *published* file
+        // (the pre-atomic-rename hazard) fails loudly at load, not later.
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "truncated JSON must be a typed load error");
     }
 }

@@ -33,6 +33,9 @@
 //! offline; the PJRT executor for the AOT artifacts is the same trait
 //! behind the `xla` cargo feature. Bench throughput history is journaled
 //! to BENCH_accsim.json via [`perf`] (see EXPERIMENTS.md §Perf).
+//! Exported networks are served online by `a2q serve` ([`serve`]): a
+//! bounded-queue, micro-batching inference service whose overload and
+//! fault behaviour is typed and test-provable.
 
 pub mod accsim;
 pub mod cli;
@@ -50,6 +53,7 @@ pub mod quant;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testutil;
 

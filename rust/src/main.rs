@@ -26,6 +26,7 @@ use a2q::rng::Rng;
 use a2q::runtime::{
     artifact::discover_models, make_backend, native::native_models, BackendKind, ModelManifest,
 };
+use a2q::serve::{FaultPlan, LoadgenConfig, ModelSource, ServeConfig, Server};
 use a2q::Tensor;
 
 const USAGE: &str = "\
@@ -63,6 +64,24 @@ COMMANDS:
               full recompute every tick, verified bit-identical at the end;
               --refresh overrides the row-refresh threshold, --density is
               the fraction of features changed per row per tick)
+  serve      --models NAME=FILE.json|NAME:W0xW1x..:mMnNpP[,...]
+             [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 64]
+             [--max-batch-rows 64] [--batch-window-ms 1]
+             [--deadline-ms 1000]
+             (long-running TCP inference service over exported or synthetic
+              networks: bounded admission queue with typed overloaded /
+              deadline_exceeded rejections, deadline-aware micro-batching,
+              panic-isolated workers with automatic respawn; A2Q_FAULT=
+              panic_batch:N,delay_ms:D,cache_load injects faults; blocks
+              until a client sends {\"op\":\"shutdown\"})
+  loadgen    --model NAME [--addr 127.0.0.1:7878] [--rps 200]
+             [--duration-ms 2000] [--connections 4] [--rows 4]
+             [--deadline-ms 200] [--seed 1] [--journal LABEL] [--shutdown]
+             (open-loop load against a running a2q serve: prints a JSON
+              report with p50/p99 latency, rows/s and typed shed counts;
+              --journal LABEL records serve/LABEL_* rows to
+              BENCH_accsim.json and refreshes EXPERIMENTS.md §Perf-Serve;
+              --shutdown stops the server afterwards)
   models     (list native registry + artifacts-dir models)
   perfcheck  --require FAST:SLOW[,FAST:SLOW...] [--require ...]
              [--journal BENCH_accsim.json]
@@ -78,7 +97,7 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(raw, &["signed", "float-ref", "unconstrained"])?;
+    let args = Args::parse(raw, &["signed", "float-ref", "unconstrained", "shutdown"])?;
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let results = PathBuf::from(args.str_or("results", "results"));
     let cmd = args
@@ -96,6 +115,8 @@ fn main() -> Result<()> {
         "accsim" => cmd_accsim(&args),
         "netsim" => cmd_netsim(&args, &results),
         "stream" => cmd_stream(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "models" => cmd_models(&artifacts),
         "perfcheck" => cmd_perfcheck(&args),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
@@ -636,7 +657,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let t0 = Instant::now();
     for _ in 0..ticks {
         let tick = stream_delta_tick(session.x(), per_row, n, &mut srng);
-        session.apply(&tick);
+        session.apply(&tick)?;
         std::hint::black_box(session.forward_threads(threads));
     }
     let inc = t0.elapsed();
@@ -688,6 +709,85 @@ fn cmd_stream(args: &Args) -> Result<()> {
         full_s / inc_s.max(1e-9)
     );
     println!("[stream] bit-identity verified: outputs and overflow counters match");
+    Ok(())
+}
+
+/// Parse one `--models` entry: `name=path.json` (exported model file) or a
+/// `name:W0xW1x..:mMnNpP` synth spec.
+fn parse_model_entry(entry: &str) -> Result<(String, ModelSource)> {
+    if let Some((name, path)) = entry.split_once('=') {
+        anyhow::ensure!(!name.is_empty(), "empty model name in {entry:?}");
+        return Ok((name.to_string(), ModelSource::File(PathBuf::from(path))));
+    }
+    let (name, _) = a2q::model::parse_synth_spec(entry)?;
+    Ok((name, ModelSource::Synth(entry.to_string())))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifacts", "results", "models", "addr", "workers", "queue-cap", "max-batch-rows",
+        "batch-window-ms", "deadline-ms",
+    ])?;
+    let models: Vec<(String, ModelSource)> = args
+        .str_or("models", "")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| parse_model_entry(s.trim()))
+        .collect::<Result<_>>()?;
+    let cfg = ServeConfig {
+        addr: args.str_or("addr", "127.0.0.1:7878"),
+        workers: args.num_or("workers", 2usize)?,
+        queue_capacity: args.num_or("queue-cap", 64usize)?,
+        max_batch_rows: args.num_or("max-batch-rows", 64usize)?,
+        batch_window_ms: args.num_or("batch-window-ms", 1u64)?,
+        default_deadline_ms: args.num_or("deadline-ms", 1000u64)?,
+    };
+    let fault = FaultPlan::from_env();
+    if !fault.is_noop() {
+        println!("[serve] fault injection active: {fault:?}");
+    }
+    let server = Server::start(&cfg, &models, fault)?;
+    println!("[serve] listening on {}", server.addr());
+    for (name, source) in &models {
+        println!("[serve] model {name} <- {source:?}");
+    }
+    println!(
+        "[serve] workers={} queue-cap={} max-batch-rows={} batch-window={}ms",
+        cfg.workers, cfg.queue_capacity, cfg.max_batch_rows, cfg.batch_window_ms
+    );
+    // Block until a client sends {"op":"shutdown"}.
+    server.join();
+    println!("[serve] shut down cleanly");
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifacts", "results", "addr", "model", "rps", "duration-ms", "connections", "rows",
+        "deadline-ms", "seed", "journal", "shutdown",
+    ])?;
+    let cfg = LoadgenConfig {
+        addr: args.str_or("addr", "127.0.0.1:7878"),
+        model: args.str_or("model", "synth"),
+        rps: args.num_or("rps", 200.0f64)?,
+        duration_ms: args.num_or("duration-ms", 2000u64)?,
+        connections: args.num_or("connections", 4usize)?,
+        rows_per_req: args.num_or("rows", 4usize)?,
+        deadline_ms: args.num_or("deadline-ms", 200u64)?,
+        seed: args.num_or("seed", 1u64)?,
+    };
+    let report = a2q::serve::run_loadgen(&cfg)?;
+    let server_stats = a2q::serve::loadgen::fetch_server_stats(&cfg.addr).ok();
+    if let Some(label) = args.opt_str("journal") {
+        let path = a2q::serve::loadgen::journal_report(&label, &report)?;
+        eprintln!("[loadgen] journaled serve/{label}_* to {}", path.display());
+    }
+    if args.bool_or("shutdown", false) {
+        a2q::serve::loadgen::send_shutdown(&cfg.addr)?;
+        eprintln!("[loadgen] sent shutdown to {}", cfg.addr);
+    }
+    let line = a2q::serve::loadgen::report_json(&report, server_stats.as_ref()).to_string();
+    println!("{line}");
     Ok(())
 }
 

@@ -31,6 +31,8 @@
 //! layer's `x_signed` / `n_bits` contract is enforced at the boundary no
 //! matter what the register model upstream produced.
 
+pub mod netfile;
 pub mod qnetwork;
 
+pub use netfile::{fnv1a64, load_network, parse_synth_spec, save_network};
 pub use qnetwork::{network_forward_ref, ActQuant, NetSpec, QLayer, QNetwork, SynthQuant};

@@ -1,0 +1,336 @@
+//! `QNetwork` on disk: a self-contained JSON format for deploying trained
+//! or synthesized networks to the serving layer.
+//!
+//! The export-artifact path ([`QNetwork::from_exported`]) needs a manifest
+//! and a live training backend; a *served* model needs neither — just the
+//! integer codes, scales and activation grids. This module is that
+//! deployment boundary: [`save_network`] writes everything a
+//! [`crate::accsim::NetworkPlan`] consumes, [`load_network`] reads it back
+//! with trust-boundary validation (NaN/inf, non-integral codes, shape and
+//! chain mismatches, out-of-range bit widths all become descriptive typed
+//! errors — a malformed model file must never panic a long-running
+//! server). [`fnv1a64`] supplies the stable content hash the serve plan
+//! cache keys on, and [`parse_synth_spec`] the compact
+//! `name:784x64x10:m4n4p16` notation `a2q serve --models` uses to stand up
+//! synthetic networks without any file at all.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::json::Json;
+use crate::model::{ActQuant, NetSpec, QLayer, QNetwork, SynthQuant};
+use crate::quant::QTensor;
+
+/// FNV-1a 64-bit: the plan-cache content hash. Stable across platforms and
+/// processes (unlike `DefaultHasher`), cheap, and good enough for a cache
+/// keyed by a handful of models.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn layer_to_json(l: &QLayer) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&l.name)),
+        ("c_out", Json::num(l.weights.c_out as f64)),
+        ("k", Json::num(l.weights.k as f64)),
+        ("codes", Json::arr(l.weights.codes.iter().map(|c| Json::num(*c as f64)))),
+        ("scales", Json::from_f32s(&l.weights.scales)),
+        ("bias", Json::from_f32s(&l.weights.bias)),
+        ("in_bits", Json::num(l.in_quant.n_bits as f64)),
+        ("in_signed", Json::Bool(l.in_quant.signed)),
+        ("in_scale", Json::num(l.in_quant.scale as f64)),
+        ("m_bits", Json::num(l.m_bits as f64)),
+        ("p_bits", Json::num(l.p_bits as f64)),
+    ])
+}
+
+/// Serialize a network (including calibrated activation scales) to JSON
+/// text. Integer codes round-trip exactly: they are far below 2^53.
+pub fn network_to_json(net: &QNetwork) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&net.name)),
+        ("layers", Json::arr(net.layers.iter().map(layer_to_json))),
+    ])
+}
+
+fn layer_from_json(li: usize, v: &Json) -> Result<QLayer> {
+    let name = v.get("name")?.as_str()?.to_string();
+    let c_out = v.get("c_out")?.as_usize()?;
+    let k = v.get("k")?.as_usize()?;
+    anyhow::ensure!(c_out > 0 && k > 0, "layer {li} ({name}): degenerate shape [{c_out}, {k}]");
+    let raw = v.get("codes")?.as_arr()?;
+    anyhow::ensure!(
+        raw.len() == c_out * k,
+        "layer {li} ({name}): {} codes for shape [{c_out}, {k}]",
+        raw.len()
+    );
+    let mut codes = Vec::with_capacity(raw.len());
+    for (i, c) in raw.iter().enumerate() {
+        let n = c.as_f64()?;
+        anyhow::ensure!(
+            n.is_finite() && n.fract() == 0.0 && n.abs() < 9e15,
+            "layer {li} ({name}): code at [{}, {}] is not a finite integer: {n}",
+            i / k,
+            i % k
+        );
+        codes.push(n as i64);
+    }
+    let read_f32s = |key: &str| -> Result<Vec<f32>> {
+        let arr = v.get(key)?.as_arr()?;
+        anyhow::ensure!(
+            arr.len() == c_out,
+            "layer {li} ({name}): {} {key} for {c_out} channels",
+            arr.len()
+        );
+        arr.iter().map(|x| Ok(x.as_f64()? as f32)).collect()
+    };
+    let scales = read_f32s("scales")?;
+    for (c, s) in scales.iter().enumerate() {
+        anyhow::ensure!(
+            s.is_finite() && *s > 0.0,
+            "layer {li} ({name}): scale for channel {c} must be finite and positive, got {s}"
+        );
+    }
+    let bias = read_f32s("bias")?;
+    for (c, b) in bias.iter().enumerate() {
+        anyhow::ensure!(b.is_finite(), "layer {li} ({name}): bias for channel {c} is not finite");
+    }
+    let in_bits = v.get("in_bits")?.as_u32()?;
+    anyhow::ensure!(
+        (1..=32).contains(&in_bits),
+        "layer {li} ({name}): activation bits {in_bits} outside 1..=32"
+    );
+    let m_bits = v.get("m_bits")?.as_u32()?;
+    anyhow::ensure!(
+        (1..=32).contains(&m_bits),
+        "layer {li} ({name}): weight bits {m_bits} outside 1..=32"
+    );
+    let p_bits = v.get("p_bits")?.as_u32()?;
+    anyhow::ensure!(
+        (1..=63).contains(&p_bits),
+        "layer {li} ({name}): accumulator bits {p_bits} outside 1..=63 (simulated in i64)"
+    );
+    let in_scale = v.get("in_scale")?.as_f64()? as f32;
+    anyhow::ensure!(
+        in_scale.is_finite() && in_scale > 0.0,
+        "layer {li} ({name}): activation scale must be finite and positive, got {in_scale}"
+    );
+    Ok(QLayer {
+        name,
+        weights: QTensor { codes, scales, bias, c_out, k },
+        in_quant: ActQuant::new(in_bits, v.get("in_signed")?.as_bool()?, in_scale),
+        m_bits,
+        p_bits,
+    })
+}
+
+/// Deserialize a network from JSON, validating every field a panic could
+/// hide behind. Chain mismatches are caught by [`QNetwork::new`].
+pub fn network_from_json(v: &Json) -> Result<QNetwork> {
+    let name = v.get("name")?.as_str()?.to_string();
+    let layers = v
+        .get("layers")?
+        .as_arr()?
+        .iter()
+        .enumerate()
+        .map(|(li, l)| layer_from_json(li, l))
+        .collect::<Result<Vec<_>>>()?;
+    QNetwork::new(name, layers)
+}
+
+/// Write a network model file (crash-safe: temp file + atomic rename, the
+/// same discipline as checkpoint saves).
+pub fn save_network(net: &QNetwork, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(format!(".tmp.{}", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, network_to_json(net).to_string())?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    Ok(())
+}
+
+/// Load and validate a network model file.
+pub fn load_network(path: &Path) -> Result<QNetwork> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading model file {}: {e}", path.display()))?;
+    let v = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing model file {}: {e}", path.display()))?;
+    network_from_json(&v).map_err(|e| e.context(format!("model file {}", path.display())))
+}
+
+/// Parse the compact synthetic-model notation the serve CLI accepts:
+/// `name:W0xW1x...xWn:mMnNpP`, e.g. `mlp:784x64x10:m4n4p16` — an
+/// A2Q-constrained network with those layer widths at weight bits M,
+/// activation bits N and accumulator target P (unsigned input grid, the
+/// image-style default). Returns the model name and the [`NetSpec`] to
+/// synthesize.
+pub fn parse_synth_spec(spec: &str) -> Result<(String, NetSpec)> {
+    let mut parts = spec.split(':');
+    let (name, widths, bits) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(a), Some(b), Some(c), None) => (a.trim(), b.trim(), c.trim()),
+        _ => anyhow::bail!("synth spec {spec:?} is not name:W0xW1x..:mMnNpP"),
+    };
+    anyhow::ensure!(!name.is_empty(), "synth spec {spec:?} has an empty model name");
+    let widths = widths
+        .split('x')
+        .map(|w| {
+            w.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("synth spec {spec:?} width {w:?}: {e}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(widths.len() >= 2, "synth spec {spec:?} needs >= 2 widths");
+    let rest = bits
+        .strip_prefix('m')
+        .ok_or_else(|| anyhow::anyhow!("synth spec {spec:?} bits {bits:?} must start with m"))?;
+    let (m, rest) = rest
+        .split_once('n')
+        .ok_or_else(|| anyhow::anyhow!("synth spec {spec:?} bits {bits:?} missing n"))?;
+    let (n, p) = rest
+        .split_once('p')
+        .ok_or_else(|| anyhow::anyhow!("synth spec {spec:?} bits {bits:?} missing p"))?;
+    let parse_bits = |tag: &str, s: &str| -> Result<u32> {
+        s.parse::<u32>().map_err(|e| anyhow::anyhow!("synth spec {spec:?} {tag}={s:?}: {e}"))
+    };
+    Ok((
+        name.to_string(),
+        NetSpec {
+            widths,
+            m_bits: parse_bits("m", m)?,
+            n_bits: parse_bits("n", n)?,
+            p_bits: parse_bits("p", p)?,
+            x_signed: false,
+            quant: SynthQuant::A2q,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    fn sample_net() -> QNetwork {
+        let spec = NetSpec {
+            widths: vec![10, 6, 3],
+            m_bits: 4,
+            n_bits: 3,
+            p_bits: 12,
+            x_signed: false,
+            quant: SynthQuant::A2q,
+        };
+        let mut net = QNetwork::synthesize(&spec, 7).unwrap();
+        let sample = crate::tensor::Tensor::new(
+            vec![4, 10],
+            (0..40).map(|i| (i % 5) as f32 * 0.21).collect(),
+        );
+        net.calibrate(&sample);
+        net
+    }
+
+    #[test]
+    fn save_load_round_trip_is_bit_exact() {
+        let net = sample_net();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("net.json");
+        save_network(&net, &path).unwrap();
+        let back = load_network(&path).unwrap();
+        assert_eq!(back.name, net.name);
+        assert_eq!(back.depth(), net.depth());
+        for (a, b) in back.layers.iter().zip(&net.layers) {
+            assert_eq!(a.weights.codes, b.weights.codes);
+            assert_eq!(a.weights.scales, b.weights.scales);
+            assert_eq!(a.weights.bias, b.weights.bias);
+            assert_eq!(a.in_quant, b.in_quant);
+            assert_eq!((a.m_bits, a.p_bits), (b.m_bits, b.p_bits));
+        }
+    }
+
+    #[test]
+    fn malformed_model_files_load_as_typed_errors() {
+        let net = sample_net();
+        let good = network_to_json(&net).to_string();
+        let corrupt = |from: &str, to: &str, needle: &str| {
+            let text = good.replacen(from, to, 1);
+            assert_ne!(text, good, "corruption {from:?} -> {to:?} did not apply");
+            let err = network_from_json(&Json::parse(&text).unwrap()).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "error {msg:?} should mention {needle:?}");
+        };
+        // Out-of-range widths.
+        corrupt("\"in_bits\":3", "\"in_bits\":40", "outside 1..=32");
+        corrupt("\"p_bits\":12", "\"p_bits\":64", "outside 1..=63");
+        // Shape drift: fewer codes than c_out * k claims.
+        corrupt("\"c_out\":6", "\"c_out\":7", "codes for shape");
+        // Truncated files fail at parse, not later.
+        assert!(load_network(Path::new("/nonexistent/net.json")).is_err());
+        let dir = TempDir::new().unwrap();
+        let torn = dir.path().join("torn.json");
+        std::fs::write(&torn, &good[..good.len() / 2]).unwrap();
+        let err = load_network(&torn).unwrap_err();
+        assert!(format!("{err:#}").contains("parsing model file"), "{err:#}");
+    }
+
+    #[test]
+    fn non_finite_and_non_integral_fields_are_rejected() {
+        let net = sample_net();
+        let v = network_to_json(&net);
+        // Splice a bad code in via the parsed tree (the writer refuses to
+        // emit NaN, so corrupt structurally).
+        let with_code = |code: Json| {
+            let mut root = v.clone();
+            if let Json::Obj(m) = &mut root {
+                if let Some(Json::Arr(layers)) = m.get_mut("layers") {
+                    if let Json::Obj(l0) = &mut layers[0] {
+                        if let Some(Json::Arr(codes)) = l0.get_mut("codes") {
+                            codes[0] = code;
+                        }
+                    }
+                }
+            }
+            root
+        };
+        let err = network_from_json(&with_code(Json::num(0.5))).unwrap_err();
+        assert!(format!("{err:#}").contains("finite integer"), "{err:#}");
+        let err = network_from_json(&with_code(Json::str("NaN"))).unwrap_err();
+        assert!(format!("{err:#}").contains("expected number"), "{err:#}");
+    }
+
+    #[test]
+    fn synth_spec_parses_and_rejects() {
+        let (name, spec) = parse_synth_spec("mlp:784x64x10:m4n4p16").unwrap();
+        assert_eq!(name, "mlp");
+        assert_eq!(spec.widths, vec![784, 64, 10]);
+        assert_eq!((spec.m_bits, spec.n_bits, spec.p_bits), (4, 4, 16));
+        assert_eq!(spec.quant, SynthQuant::A2q);
+        for bad in
+            ["mlp", "mlp:16x4", "mlp:16x4:m4n4", ":16x4:m4n4p12", "mlp:16:m4n4p12", "m:ax4:m4n4p12"]
+        {
+            assert!(parse_synth_spec(bad).is_err(), "{bad:?} should be rejected");
+        }
+        // The synthesized network is actually loadable at those bits.
+        let net = QNetwork::synthesize(&parse_synth_spec("t:12x5:m4n3p12").unwrap().1, 1).unwrap();
+        assert_eq!(net.input_dim(), 12);
+        assert_eq!(net.output_dim(), 5);
+    }
+
+    #[test]
+    fn fnv_hash_is_stable_and_distinguishes() {
+        // Pinned reference values (FNV-1a 64 test vectors).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"mlp:16x4:m4n4p12"), fnv1a64(b"mlp:16x4:m4n4p14"));
+    }
+}

@@ -165,7 +165,10 @@ impl QNetwork {
     /// so run [`Self::calibrate`] over a sample batch before simulating.
     ///
     /// Fails for non-dense layer kinds (conv exports don't map onto the
-    /// dense accsim substrate).
+    /// dense accsim substrate), and validates the export like a trust
+    /// boundary: NaN/inf or non-integral weights, shape/geometry
+    /// mismatches, and out-of-range resolved bit widths become descriptive
+    /// typed errors instead of downstream panics.
     pub fn from_exported(
         name: impl Into<String>,
         exported: &[ExportedLayer],
@@ -190,10 +193,35 @@ impl QNetwork {
             let n_res = meta.n_bits.to_bitspec()?.resolve(m, n, p);
             let p_res = meta.p_bits.to_bitspec()?.resolve(m, n, p);
             let m_res = meta.m_bits.to_bitspec()?.resolve(m, n, p);
+            anyhow::ensure!(
+                (1..=32).contains(&n_res),
+                "layer {}: activation bits {n_res} outside 1..=32",
+                meta.name
+            );
+            anyhow::ensure!(
+                (1..=32).contains(&m_res),
+                "layer {}: weight bits {m_res} outside 1..=32",
+                meta.name
+            );
+            anyhow::ensure!(
+                (1..=63).contains(&p_res),
+                "layer {}: accumulator bits {p_res} outside 1..=63 (simulated in i64)",
+                meta.name
+            );
+            let weights = layer.try_to_qtensor()?;
+            anyhow::ensure!(
+                weights.c_out == meta.c_out && weights.k == meta.k,
+                "layer {}: exported weights [{}, {}] do not match manifest geometry [{}, {}]",
+                meta.name,
+                weights.c_out,
+                weights.k,
+                meta.c_out,
+                meta.k
+            );
             layers.push(QLayer {
                 name: meta.name.clone(),
-                weights: layer.to_qtensor(),
-                in_quant: ActQuant::new(n_res.clamp(1, 32), meta.x_signed, 1.0),
+                weights,
+                in_quant: ActQuant::new(n_res, meta.x_signed, 1.0),
                 m_bits: m_res,
                 p_bits: p_res,
             });
@@ -527,6 +555,57 @@ mod tests {
             crate::finn::estimate::DEFAULT_CYCLES_BUDGET,
         );
         assert!(est.total_luts() > 0.0);
+    }
+
+    #[test]
+    fn from_exported_rejects_malformed_exports_with_typed_errors() {
+        use crate::runtime::{NativeBackend, TrainBackend};
+
+        let be = NativeBackend::new("artifacts");
+        let manifest = be.manifest("mlp").unwrap();
+        let bits = (4u32, 4u32, 14u32);
+        let state = be.init(&manifest, 1.0).unwrap();
+        let exported = be.export(&manifest, "a2q", &state, bits).unwrap();
+        // The pristine export loads cleanly.
+        QNetwork::from_exported("mlp", &exported, &manifest, bits).unwrap();
+
+        let expect_err = |exported: &[ExportedLayer], bits, needle: &str| {
+            let err = QNetwork::from_exported("mlp", exported, &manifest, bits).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "error {msg:?} should mention {needle:?}");
+        };
+
+        // NaN weight code (would silently round to garbage in to_qtensor).
+        let mut bad = exported.clone();
+        bad[0].w_int.data_mut()[3] = f32::NAN;
+        expect_err(&bad, bits, "finite integer");
+
+        // Non-integral weight code.
+        let mut bad = exported.clone();
+        bad[0].w_int.data_mut()[0] = 0.5;
+        expect_err(&bad, bits, "finite integer");
+
+        // Infinite per-channel scale.
+        let mut bad = exported.clone();
+        bad[0].s.data_mut()[0] = f32::INFINITY;
+        expect_err(&bad, bits, "finite and positive");
+
+        // NaN bias.
+        let mut bad = exported.clone();
+        bad[0].b.data_mut()[0] = f32::NAN;
+        expect_err(&bad, bits, "not finite");
+
+        // Weight shape disagreeing with the manifest geometry.
+        let mut bad = exported.clone();
+        let c_out = manifest.qlayers[0].c_out;
+        bad[0].w_int = Tensor::new(vec![c_out, 2], vec![1.0; c_out * 2]);
+        expect_err(&bad, bits, "manifest geometry");
+
+        // Layer count mismatch.
+        expect_err(&[], bits, "manifest qlayers");
+
+        // Out-of-range resolved accumulator width.
+        expect_err(&exported, (4u32, 4u32, 0u32), "outside 1..=63");
     }
 
     #[test]

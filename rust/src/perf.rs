@@ -190,6 +190,9 @@ pub const TRAIN_END: &str = "<!-- PERF-TRAIN:END -->";
 /// stream_delta`).
 pub const STREAM_BEGIN: &str = "<!-- PERF-STREAM:BEGIN (auto-recorded; do not edit by hand) -->";
 pub const STREAM_END: &str = "<!-- PERF-STREAM:END -->";
+/// Markers of the serving-latency block (`a2q loadgen --journal`).
+pub const SERVE_BEGIN: &str = "<!-- PERF-SERVE:BEGIN (auto-recorded; do not edit by hand) -->";
+pub const SERVE_END: &str = "<!-- PERF-SERVE:END -->";
 
 /// Replace whatever sits between `begin` and `end` markers in EXPERIMENTS.md
 /// with `block`. Returns false (and leaves the file alone) when the file or
@@ -317,6 +320,11 @@ pub fn update_experiments_train_block(block: &str) -> Result<bool> {
 /// Replace the streaming-delta release block of EXPERIMENTS.md.
 pub fn update_experiments_stream_block(block: &str) -> Result<bool> {
     update_marked_block(STREAM_BEGIN, STREAM_END, block)
+}
+
+/// Replace the serving-latency block of EXPERIMENTS.md §Perf-Serve.
+pub fn update_experiments_serve_block(block: &str) -> Result<bool> {
+    update_marked_block(SERVE_BEGIN, SERVE_END, block)
 }
 
 #[cfg(test)]

@@ -20,6 +20,11 @@ pub struct QTensor {
 
 impl QTensor {
     /// Assemble from the export-artifact triple (w_int [C,K], s [C,1], b [C]).
+    ///
+    /// In-process callers holding tensors they just produced may keep this
+    /// panicking path; anything ingesting *external* exports (files, serve
+    /// requests) must go through [`Self::try_from_export`] so malformed
+    /// data becomes a typed error instead of an abort.
     pub fn from_export(w_int: &Tensor, s: &Tensor, b: &Tensor) -> Self {
         let c_out = w_int.shape()[0];
         let k = w_int.shape()[1];
@@ -32,6 +37,49 @@ impl QTensor {
             c_out,
             k,
         }
+    }
+
+    /// Validating twin of [`Self::from_export`] for untrusted exports:
+    /// rejects non-rank-2 weights, scale/bias count mismatches, NaN/inf
+    /// anywhere, non-integral weight codes (the f32 carrier must hold exact
+    /// integers — a NaN would otherwise round to a silent garbage code),
+    /// and non-positive scales, each with an error naming the offending
+    /// element.
+    pub fn try_from_export(w_int: &Tensor, s: &Tensor, b: &Tensor) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            w_int.shape().len() == 2,
+            "weight tensor must be rank-2 [c_out, k], got shape {:?}",
+            w_int.shape()
+        );
+        let c_out = w_int.shape()[0];
+        let k = w_int.shape()[1];
+        anyhow::ensure!(c_out > 0 && k > 0, "degenerate weight shape [{c_out}, {k}]");
+        anyhow::ensure!(s.len() == c_out, "{} scales for {} channels", s.len(), c_out);
+        anyhow::ensure!(b.len() == c_out, "{} biases for {} channels", b.len(), c_out);
+        for (i, v) in w_int.data().iter().enumerate() {
+            anyhow::ensure!(
+                v.is_finite() && *v == v.round(),
+                "weight code at [{}, {}] is not a finite integer: {v}",
+                i / k,
+                i % k
+            );
+        }
+        for (c, v) in s.data().iter().enumerate() {
+            anyhow::ensure!(
+                v.is_finite() && *v > 0.0,
+                "scale for channel {c} must be finite and positive, got {v}"
+            );
+        }
+        for (c, v) in b.data().iter().enumerate() {
+            anyhow::ensure!(v.is_finite(), "bias for channel {c} is not finite: {v}");
+        }
+        Ok(QTensor {
+            codes: w_int.to_i64(),
+            scales: s.data().to_vec(),
+            bias: b.data().to_vec(),
+            c_out,
+            k,
+        })
     }
 
     /// Row `c` of integer codes.
@@ -97,5 +145,63 @@ mod tests {
         let q = sample();
         assert_eq!(q.dequant_row(0), vec![0.5, -1.0, 0.0]);
         assert_eq!(q.dequant_row(1), vec![0.75, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn try_from_export_accepts_the_valid_triple_and_matches_the_panicking_path() {
+        let w = Tensor::new(vec![2, 3], vec![1.0, -2.0, 0.0, 3.0, 0.0, 0.0]);
+        let s = Tensor::new(vec![2, 1], vec![0.5, 0.25]);
+        let b = Tensor::from_vec(vec![0.1, -0.1]);
+        let q = QTensor::try_from_export(&w, &s, &b).unwrap();
+        let p = QTensor::from_export(&w, &s, &b);
+        assert_eq!(q.codes, p.codes);
+        assert_eq!(q.scales, p.scales);
+        assert_eq!(q.bias, p.bias);
+        assert_eq!((q.c_out, q.k), (2, 3));
+    }
+
+    #[test]
+    fn try_from_export_rejects_malformed_triples_with_descriptive_errors() {
+        let w = Tensor::new(vec![2, 3], vec![1.0, -2.0, 0.0, 3.0, 0.0, 0.0]);
+        let s = Tensor::new(vec![2, 1], vec![0.5, 0.25]);
+        let b = Tensor::from_vec(vec![0.1, -0.1]);
+        let cases: Vec<(Tensor, Tensor, Tensor, &str)> = vec![
+            // rank-1 weights
+            (Tensor::from_vec(vec![1.0; 6]), s.clone(), b.clone(), "rank-2"),
+            // NaN weight code
+            (
+                Tensor::new(vec![2, 3], vec![1.0, f32::NAN, 0.0, 3.0, 0.0, 0.0]),
+                s.clone(),
+                b.clone(),
+                "finite integer",
+            ),
+            // non-integral weight code
+            (
+                Tensor::new(vec![2, 3], vec![1.0, 0.5, 0.0, 3.0, 0.0, 0.0]),
+                s.clone(),
+                b.clone(),
+                "finite integer",
+            ),
+            // scale count mismatch
+            (w.clone(), Tensor::from_vec(vec![0.5]), b.clone(), "scales for"),
+            // infinite scale
+            (
+                w.clone(),
+                Tensor::new(vec![2, 1], vec![0.5, f32::INFINITY]),
+                b.clone(),
+                "finite and positive",
+            ),
+            // zero scale
+            (w.clone(), Tensor::new(vec![2, 1], vec![0.5, 0.0]), b.clone(), "finite and positive"),
+            // bias count mismatch
+            (w.clone(), s.clone(), Tensor::from_vec(vec![0.1]), "biases for"),
+            // NaN bias
+            (w.clone(), s.clone(), Tensor::from_vec(vec![0.1, f32::NAN]), "not finite"),
+        ];
+        for (w, s, b, needle) in cases {
+            let err = QTensor::try_from_export(&w, &s, &b).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "error {msg:?} should mention {needle:?}");
+        }
     }
 }

@@ -53,4 +53,12 @@ impl ExportedLayer {
     pub fn to_qtensor(&self) -> QTensor {
         QTensor::from_export(&self.w_int, &self.s, &self.b)
     }
+
+    /// Validating conversion for exports that crossed a trust boundary
+    /// (files on disk, serve-time model loads): typed errors instead of the
+    /// asserts/silent-rounding of [`Self::to_qtensor`].
+    pub fn try_to_qtensor(&self) -> Result<QTensor> {
+        QTensor::try_from_export(&self.w_int, &self.s, &self.b)
+            .map_err(|e| e.context(format!("layer {}", self.name)))
+    }
 }

@@ -1,0 +1,400 @@
+//! Admission control: the bounded queue between connections and batch
+//! workers.
+//!
+//! Overload policy in one sentence: *a request is either admitted and
+//! served bit-exactly, or rejected with a typed error at a well-defined
+//! point — never silently dropped, never allowed to wedge the server.* The
+//! enforcement points:
+//!
+//! * **At the door** ([`AdmissionQueue::submit`]): the queue holds at most
+//!   `capacity` requests. A full queue rejects with
+//!   [`ServeError::Overloaded`] immediately — callers get backpressure in
+//!   one round trip instead of unbounded memory growth and collapse.
+//! * **At dequeue** ([`AdmissionQueue::next_batch`]): every request
+//!   carries a deadline; requests whose deadline passed while queued are
+//!   shed with [`ServeError::DeadlineExceeded`] *before* any compute is
+//!   spent on them. Under sustained overload this is what keeps admitted
+//!   traffic's latency bounded: stale work is discarded, not executed.
+//!
+//! `next_batch` also does the micro-batching: it groups queued requests
+//! for the *same model* (plan-cache hash) into one batch of up to
+//! `max_rows` input rows, waiting up to a short batching window for more
+//! rows to arrive once it holds at least one request. Requests for other
+//! models stay queued in arrival order for the next call.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::error::ServeError;
+use crate::accsim::IntMatrix;
+use crate::tensor::Tensor;
+
+/// A successful inference reply: the final-layer dequantized outputs for
+/// this request's rows, plus the overflow accounting of the micro-batch
+/// that carried it.
+#[derive(Clone, Debug)]
+pub struct JobReply {
+    /// `[rows, output_dim]` dequantized outputs.
+    pub outputs: Tensor,
+    /// Overflow events summed over every layer of the executing batch (the
+    /// bit-exact `OverflowStats` contract surfaced to the client; 0 for an
+    /// A2Q-constrained model at its target P).
+    pub overflow_events: u64,
+    /// Micro-batch sequence number that executed this request.
+    pub batch_seq: u64,
+    /// Total rows in that micro-batch (for batching diagnostics).
+    pub batch_rows: usize,
+}
+
+/// What a request's submitter eventually receives.
+pub type JobOutcome = Result<JobReply, ServeError>;
+
+/// One admitted inference request.
+pub struct JobRequest {
+    /// Monotone request id (diagnostics).
+    pub id: u64,
+    /// Plan-cache key of the model to execute.
+    pub model_hash: u64,
+    /// Input codes `[rows, input_dim]` on the model's layer-0 grid.
+    pub rows: IntMatrix,
+    /// Moment the request was accepted into the queue.
+    pub enqueued: Instant,
+    /// Hard deadline: shed (never execute) past this instant.
+    pub deadline: Instant,
+    /// Deadline budget in ms as the client stated it (error reporting).
+    pub budget_ms: u64,
+    /// Where the outcome goes. Send failures are ignored: a client that
+    /// hung up forfeits its reply, nothing else.
+    pub responder: Sender<JobOutcome>,
+}
+
+impl JobRequest {
+    /// Reply to this request, consuming it.
+    pub fn respond(self, outcome: JobOutcome) {
+        let _ = self.responder.send(outcome);
+    }
+}
+
+/// Counters the server exposes via the `stats` op. All relaxed: they are
+/// diagnostics, not synchronization.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub admitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub shed_overloaded: AtomicU64,
+    pub shed_deadline: AtomicU64,
+    pub worker_panics: AtomicU64,
+    pub respawns: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_rows: AtomicU64,
+}
+
+/// A point-in-time copy of [`ServeStats`] (what the wire protocol carries).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub admitted: u64,
+    pub completed: u64,
+    pub shed_overloaded: u64,
+    pub shed_deadline: u64,
+    pub worker_panics: u64,
+    pub respawns: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+}
+
+impl ServeStats {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            shed_overloaded: self.shed_overloaded.load(Ordering::Relaxed),
+            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_rows: self.batched_rows.load(Ordering::Relaxed),
+        }
+    }
+}
+
+struct QueueState {
+    queue: VecDeque<JobRequest>,
+    closed: bool,
+}
+
+/// The bounded MPSC(-ish) admission queue: many connection threads submit,
+/// a few batch workers drain.
+pub struct AdmissionQueue {
+    inner: Mutex<QueueState>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            inner: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit a request, or reject it typed — full queue and draining
+    /// server are the caller's to report, the request never enters.
+    pub fn submit(&self, req: JobRequest) -> Result<(), ServeError> {
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            return Err(ServeError::ShuttingDown);
+        }
+        if st.queue.len() >= self.capacity {
+            return Err(ServeError::Overloaded {
+                queued: st.queue.len(),
+                capacity: self.capacity,
+            });
+        }
+        st.queue.push_back(req);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Number of requests currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: all queued requests are rejected `ShuttingDown`,
+    /// subsequent submits fail, and blocked workers wake up to exit.
+    pub fn close(&self, stats: &ServeStats) {
+        let drained: Vec<JobRequest> = {
+            let mut st = self.inner.lock().unwrap();
+            st.closed = true;
+            st.queue.drain(..).collect()
+        };
+        for req in drained {
+            req.respond(Err(ServeError::ShuttingDown));
+        }
+        let _ = stats; // drained requests were admitted; completion stats untouched
+        self.cv.notify_all();
+    }
+
+    /// Shed every queued request whose deadline has passed, replying
+    /// `DeadlineExceeded` to each. Must be called with the lock held;
+    /// replies are sent after collecting so the lock isn't held across
+    /// sends — here sends are channel pushes (non-blocking), so in-lock is
+    /// acceptable and keeps the scan atomic.
+    fn shed_expired(st: &mut QueueState, now: Instant, stats: &ServeStats) {
+        let mut kept = VecDeque::with_capacity(st.queue.len());
+        for req in st.queue.drain(..) {
+            if req.deadline <= now {
+                stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                let waited_ms = now.duration_since(req.enqueued).as_millis() as u64;
+                let budget_ms = req.budget_ms;
+                req.respond(Err(ServeError::DeadlineExceeded { waited_ms, budget_ms }));
+            } else {
+                kept.push_back(req);
+            }
+        }
+        st.queue = kept;
+    }
+
+    /// Dequeue the next deadline-aware micro-batch: requests sharing the
+    /// oldest queued request's model, up to `max_rows` total input rows.
+    /// Waits up to `window` after the first request is available to let a
+    /// fuller batch form (skipped when the batch is already full or the
+    /// queue is closing). Returns the global monotone 1-based batch
+    /// sequence number alongside the batch (the unit fault injection and
+    /// `WorkerPanicked` reporting speak in), or `None` only when the queue
+    /// is closed and drained — the worker's exit signal.
+    pub fn next_batch(
+        &self,
+        max_rows: usize,
+        window: Duration,
+        stats: &ServeStats,
+    ) -> Option<(u64, Vec<JobRequest>)> {
+        let max_rows = max_rows.max(1);
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            Self::shed_expired(&mut st, Instant::now(), stats);
+            if !st.queue.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            // Bounded wait so periodic expiry sheds don't depend on new
+            // arrivals to wake us.
+            let (guard, _timeout) = self.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+            st = guard;
+        }
+        // Give the batch a short window to fill (only helpful while the
+        // queued rows for this model are below the batch size).
+        let head_model = st.queue.front().map(|r| r.model_hash).unwrap();
+        let mut queued_rows: usize = st
+            .queue
+            .iter()
+            .filter(|r| r.model_hash == head_model)
+            .map(|r| r.rows.rows())
+            .sum();
+        if queued_rows < max_rows && !st.closed && !window.is_zero() {
+            let deadline = Instant::now() + window;
+            while queued_rows < max_rows && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+                Self::shed_expired(&mut st, Instant::now(), stats);
+                queued_rows = st
+                    .queue
+                    .iter()
+                    .filter(|r| r.model_hash == head_model)
+                    .map(|r| r.rows.rows())
+                    .sum();
+            }
+            Self::shed_expired(&mut st, Instant::now(), stats);
+        }
+        // Collect same-model requests in arrival order up to max_rows;
+        // everything else keeps its position for the next call. The window
+        // wait may have shed the whole queue — loop from the top then.
+        if st.queue.is_empty() {
+            drop(st);
+            return self.next_batch(max_rows, window, stats);
+        }
+        let head_model = st.queue.front().map(|r| r.model_hash).unwrap();
+        let mut batch = Vec::new();
+        let mut rows = 0usize;
+        let mut rest = VecDeque::with_capacity(st.queue.len());
+        for req in st.queue.drain(..) {
+            let take = req.model_hash == head_model
+                && (batch.is_empty() || rows + req.rows.rows() <= max_rows);
+            if take {
+                rows += req.rows.rows();
+                batch.push(req);
+            } else {
+                rest.push_back(req);
+            }
+        }
+        st.queue = rest;
+        let seq = stats.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        stats.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        Some((seq, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(
+        id: u64,
+        model: u64,
+        rows: usize,
+        budget: Duration,
+    ) -> (JobRequest, mpsc::Receiver<JobOutcome>) {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        let r = JobRequest {
+            id,
+            model_hash: model,
+            rows: IntMatrix::zeros(rows, 4),
+            enqueued: now,
+            deadline: now + budget,
+            budget_ms: budget.as_millis() as u64,
+            responder: tx,
+        };
+        (r, rx)
+    }
+
+    const LONG: Duration = Duration::from_secs(60);
+
+    #[test]
+    fn full_queue_rejects_typed_and_keeps_admitted_work() {
+        let q = AdmissionQueue::new(2);
+        let stats = ServeStats::default();
+        let (a, _ra) = req(1, 7, 1, LONG);
+        let (b, _rb) = req(2, 7, 1, LONG);
+        let (c, _rc) = req(3, 7, 1, LONG);
+        q.submit(a).unwrap();
+        q.submit(b).unwrap();
+        let err = q.submit(c).unwrap_err();
+        assert_eq!(err, ServeError::Overloaded { queued: 2, capacity: 2 });
+        assert_eq!(err.code(), "overloaded");
+        // The two admitted requests still come out as one micro-batch.
+        let (seq, batch) = q.next_batch(8, Duration::ZERO, &stats).unwrap();
+        assert_eq!(seq, 1, "batch sequence numbers are 1-based and monotone");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id, 1);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_before_any_compute() {
+        let q = AdmissionQueue::new(8);
+        let stats = ServeStats::default();
+        let (a, ra) = req(1, 7, 1, Duration::ZERO); // born expired
+        let (b, _rb) = req(2, 7, 1, LONG);
+        q.submit(a).unwrap();
+        q.submit(b).unwrap();
+        let (_, batch) = q.next_batch(8, Duration::ZERO, &stats).unwrap();
+        assert_eq!(batch.len(), 1, "expired request must not reach a worker");
+        assert_eq!(batch[0].id, 2);
+        match ra.recv().unwrap() {
+            Err(ServeError::DeadlineExceeded { budget_ms, .. }) => assert_eq!(budget_ms, 0),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(stats.snapshot().shed_deadline, 1);
+    }
+
+    #[test]
+    fn batches_group_by_model_and_respect_max_rows() {
+        let q = AdmissionQueue::new(16);
+        let stats = ServeStats::default();
+        for (id, model, rows) in [(1, 7, 3), (2, 9, 1), (3, 7, 3), (4, 7, 3)] {
+            let (r, rx) = req(id, model, rows, LONG);
+            std::mem::forget(rx); // keep responders alive without binding names
+            q.submit(r).unwrap();
+        }
+        // Model 7 head: takes ids 1 and 3 (3+3 rows), id 4 would exceed 6.
+        let (_, batch) = q.next_batch(6, Duration::ZERO, &stats).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        // Model 9 is now the head and batches alone.
+        let (_, batch) = q.next_batch(6, Duration::ZERO, &stats).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        let (seq, batch) = q.next_batch(6, Duration::ZERO, &stats).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(seq, 3);
+        // An oversized single request still ships alone rather than starving.
+        let (big, _rbig) = req(9, 7, 50, LONG);
+        q.submit(big).unwrap();
+        let (_, batch) = q.next_batch(6, Duration::ZERO, &stats).unwrap();
+        assert_eq!(batch[0].id, 9);
+    }
+
+    #[test]
+    fn close_rejects_queued_and_future_work_and_wakes_workers() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(4));
+        let stats = ServeStats::default();
+        let (a, ra) = req(1, 7, 1, LONG);
+        q.submit(a).unwrap();
+        q.close(&stats);
+        assert_eq!(ra.recv().unwrap().unwrap_err(), ServeError::ShuttingDown);
+        let (b, _rb) = req(2, 7, 1, LONG);
+        assert_eq!(q.submit(b).unwrap_err(), ServeError::ShuttingDown);
+        // A drained closed queue returns None (worker exit signal) without
+        // blocking.
+        assert!(q.next_batch(4, Duration::ZERO, &stats).is_none());
+    }
+}

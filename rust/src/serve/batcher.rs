@@ -1,0 +1,191 @@
+//! Micro-batch execution and the panic-isolated batch worker.
+//!
+//! [`execute_micro_batch`] is the pure serving core: concatenate every
+//! admitted request's rows into one batch, run it through
+//! [`SharedNetworkPlan::execute_warm`] at the plan's efficient batch size,
+//! and split the outputs back per request. It is deliberately free of
+//! threads, queues and faults so the property test can pin it bit-identical
+//! to per-request [`NetworkPlan::execute`][crate::accsim::NetworkPlan]
+//! across batch compositions.
+//!
+//! [`run_worker`] wraps that core in the server's fault boundary: compute
+//! runs under `catch_unwind`, so a panic — injected or real — rejects
+//! exactly the requests of the poisoned batch with a typed
+//! [`ServeError::WorkerPanicked`] and then re-raises to kill the worker
+//! thread. The supervisor (in [`super::session`]) observes the death and
+//! respawns a fresh worker with fresh scratch; queued requests for other
+//! batches never notice.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::admission::{AdmissionQueue, JobReply, ServeStats};
+use super::cache::PlanCache;
+use super::error::ServeError;
+use super::fault::FaultPlan;
+use crate::accsim::{IntMatrix, NetScratch, SharedNetworkPlan};
+use crate::tensor::Tensor;
+
+/// The result of one micro-batch execution, split back per request.
+pub struct MicroBatchOutcome {
+    /// One `[rows_i, output_dim]` output tensor per input, in input order.
+    pub per_request: Vec<Tensor>,
+    /// Overflow events summed over every layer of the batch execution.
+    pub overflow_events: u64,
+    /// Total rows executed.
+    pub total_rows: usize,
+}
+
+/// Run the concatenation of `inputs` through the plan as one batch and
+/// split the dequantized outputs back per input. Bit-identical to executing
+/// each input alone: the engine parallelizes over rows with per-row
+/// accumulation order fixed, so batch composition is invisible to both
+/// outputs and [`OverflowStats`][crate::accsim::OverflowStats] sums.
+pub fn execute_micro_batch(
+    plan: &SharedNetworkPlan,
+    inputs: &[&IntMatrix],
+    scratch: &mut NetScratch,
+) -> MicroBatchOutcome {
+    let cols = plan.net().input_dim();
+    let total_rows: usize = inputs.iter().map(|x| x.rows()).sum();
+    let mut flat = Vec::with_capacity(total_rows * cols);
+    for x in inputs {
+        assert_eq!(x.cols(), cols, "request width {} vs model input dim {cols}", x.cols());
+        flat.extend_from_slice(x.data());
+    }
+    let batch = IntMatrix::from_flat(total_rows, cols, flat);
+    let stats = plan.execute_warm(&batch, scratch);
+    let mode = &stats[0]; // serving plans carry exactly one AccMode
+    let overflow_events: u64 = mode.layer_stats.iter().map(|s| s.overflow_events).sum();
+    let out_dim = plan.net().output_dim();
+    let out = mode.out.data();
+    let mut per_request = Vec::with_capacity(inputs.len());
+    let mut row = 0usize;
+    for x in inputs {
+        let rows = x.rows();
+        let slice = &out[row * out_dim..(row + rows) * out_dim];
+        per_request.push(Tensor::new(vec![rows, out_dim], slice.to_vec()));
+        row += rows;
+    }
+    MicroBatchOutcome { per_request, overflow_events, total_rows }
+}
+
+/// Batch sizing knobs a worker drains the queue with.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum input rows per micro-batch.
+    pub max_rows: usize,
+    /// How long a non-full batch waits for more same-model rows.
+    pub window: Duration,
+}
+
+/// The batch-worker loop. Runs until [`AdmissionQueue::close`] drains the
+/// queue; panics propagate out (by design) after every request of the
+/// poisoned batch has been rejected with `WorkerPanicked`.
+pub fn run_worker(
+    queue: Arc<AdmissionQueue>,
+    cache: Arc<PlanCache>,
+    stats: Arc<ServeStats>,
+    policy: BatchPolicy,
+    fault: FaultPlan,
+) {
+    let mut scratch = NetScratch::default();
+    while let Some((seq, batch)) = queue.next_batch(policy.max_rows, policy.window, &stats) {
+        if let Some(ms) = fault.delay_ms {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        let plan = match cache.get(batch[0].model_hash) {
+            Ok(plan) => plan,
+            Err(e) => {
+                // A load failure poisons only this batch, typed — the
+                // worker itself keeps draining.
+                for req in batch {
+                    req.respond(Err(e.clone()));
+                }
+                continue;
+            }
+        };
+        let inputs: Vec<&IntMatrix> = batch.iter().map(|r| &r.rows).collect();
+        let inject = fault.panic_batch == Some(seq);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if inject {
+                panic!("injected fault: panic_batch {seq}");
+            }
+            execute_micro_batch(&plan, &inputs, &mut scratch)
+        }));
+        drop(inputs);
+        match outcome {
+            Ok(result) => {
+                let total_rows = result.total_rows;
+                for (req, outputs) in batch.into_iter().zip(result.per_request) {
+                    req.respond(Ok(JobReply {
+                        outputs,
+                        overflow_events: result.overflow_events,
+                        batch_seq: seq,
+                        batch_rows: total_rows,
+                    }));
+                    stats.completed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(payload) => {
+                stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+                for req in batch {
+                    req.respond(Err(ServeError::WorkerPanicked { batch_seq: seq }));
+                }
+                // Kill this worker: its scratch may be mid-mutation. The
+                // supervisor respawns a clean replacement.
+                resume_unwind(payload);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accsim::AccMode;
+    use crate::model::{parse_synth_spec, QNetwork};
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    fn plan() -> SharedNetworkPlan {
+        let (_, spec) = parse_synth_spec("t:10x8x4:m4n4p16").unwrap();
+        let mut net = QNetwork::synthesize(&spec, 7).unwrap();
+        let mut rng = Rng::new(11);
+        let data: Vec<f32> = (0..32 * 10).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+        net.calibrate(&Tensor::new(vec![32, 10], data));
+        let p = net.grid_bits().2;
+        SharedNetworkPlan::new(Arc::new(net), &[AccMode::Wrap { p_bits: p }])
+    }
+
+    fn inputs(rng: &mut Rng, rows: usize, cols: usize, hi: i64) -> IntMatrix {
+        let data = (0..rows * cols).map(|_| rng.below(hi as usize) as i64).collect();
+        IntMatrix::from_flat(rows, cols, data)
+    }
+
+    #[test]
+    fn micro_batch_is_bit_identical_to_per_request_execution() {
+        let plan = plan();
+        let mut rng = Rng::new(3);
+        let reqs: Vec<IntMatrix> =
+            [1usize, 3, 2, 5].iter().map(|&r| inputs(&mut rng, r, 10, 15)).collect();
+        let refs: Vec<&IntMatrix> = reqs.iter().collect();
+        let mut scratch = NetScratch::default();
+        let batched = execute_micro_batch(&plan, &refs, &mut scratch);
+        assert_eq!(batched.total_rows, 11);
+        let mut solo_events = 0u64;
+        for (req, got) in reqs.iter().zip(&batched.per_request) {
+            let solo = plan.execute(req);
+            assert_eq!(solo[0].out.data(), got.data(), "batched outputs must match solo");
+            solo_events += solo[0].layer_stats.iter().map(|s| s.overflow_events).sum::<u64>();
+        }
+        assert_eq!(batched.overflow_events, solo_events);
+        // Warm scratch reuse across calls stays bit-identical too.
+        let again = execute_micro_batch(&plan, &refs, &mut scratch);
+        for (a, b) in batched.per_request.iter().zip(&again.per_request) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+}

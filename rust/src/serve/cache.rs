@@ -1,0 +1,252 @@
+//! Fixed-capacity concurrent plan cache: model hash → ready-to-execute
+//! [`SharedNetworkPlan`].
+//!
+//! The server loads each registered model once, validates it at the trust
+//! boundary (the typed [`crate::model::netfile`] / `QNetwork` paths — a
+//! malformed export is a [`ServeError::LoadFailed`], never a panic), builds
+//! a [`SharedNetworkPlan`] and keeps up to `capacity` plans resident in LRU
+//! order. Plans are `Arc`-shared: a worker executing an evicted model's
+//! plan keeps it alive; the cache only bounds *resident* plans. Evicted
+//! models reload transparently from their recorded [`ModelSource`] on next
+//! use, so eviction is a latency event, not a correctness event.
+//!
+//! Keys are [`fnv1a64`] hashes of the model's identity — the synth spec
+//! string or the model file's bytes — so the wire protocol can address
+//! models by stable hash as well as by registered name.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use super::error::ServeError;
+use super::fault::FaultPlan;
+use crate::accsim::{AccMode, SharedNetworkPlan};
+use crate::model::{fnv1a64, load_network, parse_synth_spec, QNetwork};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Where a model's network comes from when (re)loading.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelSource {
+    /// Synthesized from a `name:W0xW1x..:mMnNpP` spec (deterministic seed
+    /// derived from the spec hash; calibrated over a deterministic sample).
+    Synth(String),
+    /// Loaded from a JSON model file written by [`crate::model::save_network`].
+    File(PathBuf),
+}
+
+/// Rows used for the deterministic calibration sample of synth models.
+const CALIBRATION_ROWS: usize = 64;
+
+fn load_source(name: &str, source: &ModelSource) -> Result<QNetwork, ServeError> {
+    let fail = |e: anyhow::Error| ServeError::LoadFailed {
+        model: name.to_string(),
+        reason: format!("{e:#}"),
+    };
+    match source {
+        ModelSource::Synth(spec) => {
+            let (_, net_spec) = parse_synth_spec(spec).map_err(fail)?;
+            let seed = fnv1a64(spec.as_bytes());
+            let mut net = QNetwork::synthesize(&net_spec, seed).map_err(fail)?;
+            // Deterministic calibration sample: same spec -> same scales,
+            // so a reload after eviction yields a bit-identical network.
+            let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+            let k = net.input_dim();
+            let data: Vec<f32> = (0..CALIBRATION_ROWS * k)
+                .map(|_| (rng.uniform() * 2.0 - 1.0) as f32)
+                .collect();
+            net.calibrate(&Tensor::new(vec![CALIBRATION_ROWS, k], data));
+            Ok(net)
+        }
+        ModelSource::File(path) => load_network(path).map_err(fail),
+    }
+}
+
+struct CacheState {
+    /// Resident plans, most recently used first.
+    resident: Vec<(u64, Arc<SharedNetworkPlan>)>,
+    /// Registered name → hash (the wire protocol's model addressing).
+    aliases: HashMap<String, u64>,
+    /// Hash → how to (re)load; kept for every registered model forever.
+    sources: HashMap<u64, (String, ModelSource)>,
+}
+
+/// The concurrent LRU plan cache.
+pub struct PlanCache {
+    inner: Mutex<CacheState>,
+    capacity: usize,
+    fault: FaultPlan,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize, fault: FaultPlan) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(CacheState {
+                resident: Vec::new(),
+                aliases: HashMap::new(),
+                sources: HashMap::new(),
+            }),
+            capacity: capacity.max(1),
+            fault,
+        }
+    }
+
+    /// Register a model and eagerly load + validate it (a server should
+    /// fail at startup, not on first request, for a bad model). Returns the
+    /// model's cache key.
+    pub fn insert_model(&self, name: &str, source: ModelSource) -> Result<u64, ServeError> {
+        let hash = match &source {
+            ModelSource::Synth(spec) => fnv1a64(spec.as_bytes()),
+            ModelSource::File(path) => {
+                let bytes = std::fs::read(path).map_err(|e| ServeError::LoadFailed {
+                    model: name.to_string(),
+                    reason: format!("reading {}: {e}", path.display()),
+                })?;
+                fnv1a64(&bytes)
+            }
+        };
+        {
+            let mut st = self.inner.lock().unwrap();
+            st.aliases.insert(name.to_string(), hash);
+            st.sources.insert(hash, (name.to_string(), source));
+        }
+        if self.fault.cache_load {
+            // Injected load failures must surface per-request as typed
+            // errors, not abort server startup — skip the eager load.
+            return Ok(hash);
+        }
+        self.get(hash)?;
+        Ok(hash)
+    }
+
+    /// Resolve a wire-protocol model reference — a registered name or a
+    /// decimal hash — to a cache key.
+    pub fn resolve(&self, model: &str) -> Result<u64, ServeError> {
+        let st = self.inner.lock().unwrap();
+        if let Some(hash) = st.aliases.get(model) {
+            return Ok(*hash);
+        }
+        if let Ok(hash) = model.parse::<u64>() {
+            if st.sources.contains_key(&hash) {
+                return Ok(hash);
+            }
+        }
+        Err(ServeError::UnknownModel { name: model.to_string() })
+    }
+
+    /// Registered model names with their hashes, for the `model_info` op.
+    pub fn registered(&self) -> Vec<(String, u64)> {
+        let st = self.inner.lock().unwrap();
+        let mut v: Vec<(String, u64)> = st.aliases.iter().map(|(n, h)| (n.clone(), *h)).collect();
+        v.sort();
+        v
+    }
+
+    /// Fetch the plan for a cache key, reloading from source after an
+    /// eviction. Loading happens *outside* the cache lock so a slow reload
+    /// never stalls cache hits for other models (two racing loaders of the
+    /// same evicted model both succeed; the second insert wins, both Arcs
+    /// are bit-identical by deterministic loading).
+    pub fn get(&self, hash: u64) -> Result<Arc<SharedNetworkPlan>, ServeError> {
+        let (name, source) = {
+            let mut st = self.inner.lock().unwrap();
+            if let Some(pos) = st.resident.iter().position(|(h, _)| *h == hash) {
+                let entry = st.resident.remove(pos);
+                let plan = entry.1.clone();
+                st.resident.insert(0, entry);
+                return Ok(plan);
+            }
+            match st.sources.get(&hash) {
+                Some((name, source)) => (name.clone(), source.clone()),
+                None => {
+                    return Err(ServeError::UnknownModel { name: format!("#{hash:016x}") })
+                }
+            }
+        };
+        if self.fault.cache_load {
+            return Err(ServeError::LoadFailed {
+                model: name,
+                reason: "injected fault: cache_load".to_string(),
+            });
+        }
+        let net = load_source(&name, &source)?;
+        let p_bits = net.grid_bits().2;
+        let plan = Arc::new(SharedNetworkPlan::new(Arc::new(net), &[AccMode::Wrap { p_bits }]));
+        let mut st = self.inner.lock().unwrap();
+        st.resident.retain(|(h, _)| *h != hash);
+        st.resident.insert(0, (hash, plan.clone()));
+        while st.resident.len() > self.capacity {
+            st.resident.pop();
+        }
+        Ok(plan)
+    }
+
+    /// Number of plans currently resident.
+    pub fn resident_len(&self) -> usize {
+        self.inner.lock().unwrap().resident.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, widths: &str) -> String {
+        format!("{name}:{widths}:m4n4p16")
+    }
+
+    #[test]
+    fn synth_models_load_resolve_and_survive_eviction_bit_identically() {
+        let cache = PlanCache::new(1, FaultPlan::none());
+        let h_a = cache.insert_model("a", ModelSource::Synth(spec("a", "8x6x3"))).unwrap();
+        let plan_a = cache.get(h_a).unwrap();
+        let h_b = cache.insert_model("b", ModelSource::Synth(spec("b", "5x4"))).unwrap();
+        assert_ne!(h_a, h_b);
+        assert_eq!(cache.resident_len(), 1, "capacity 1 evicts the older plan");
+        assert_eq!(cache.resolve("a").unwrap(), h_a);
+        assert_eq!(cache.resolve(&h_b.to_string()).unwrap(), h_b);
+        assert_eq!(
+            cache.resolve("nope").unwrap_err(),
+            ServeError::UnknownModel { name: "nope".to_string() }
+        );
+        // Reload after eviction is deterministic: same outputs as the plan
+        // loaded before eviction.
+        let reloaded = cache.get(h_a).unwrap();
+        let x = crate::accsim::IntMatrix::from_flat(2, 8, (0..16).map(|v| v % 5).collect());
+        let before = plan_a.execute(&x);
+        let after = reloaded.execute(&x);
+        assert_eq!(before[0].out.data(), after[0].out.data());
+        assert_eq!(before[0].layer_stats, after[0].layer_stats);
+    }
+
+    #[test]
+    fn cache_load_fault_is_a_typed_error_not_a_panic() {
+        let cache = PlanCache::new(2, FaultPlan::from_spec(Some("cache_load")));
+        // Registration succeeds (the fault must not abort startup)...
+        let hash = cache.insert_model("a", ModelSource::Synth(spec("a", "6x3"))).unwrap();
+        // ...but every load attempt fails typed.
+        let err = cache.get(hash).unwrap_err();
+        match &err {
+            ServeError::LoadFailed { model, reason } => {
+                assert_eq!(model, "a");
+                assert!(reason.contains("injected fault"), "{reason}");
+            }
+            other => panic!("expected LoadFailed, got {other:?}"),
+        }
+        assert_eq!(err.code(), "load_failed");
+    }
+
+    #[test]
+    fn bad_sources_surface_descriptive_load_errors() {
+        let cache = PlanCache::new(2, FaultPlan::none());
+        let err = cache
+            .insert_model("bad", ModelSource::Synth("bad:8x4:m99n4p16".to_string()))
+            .unwrap_err();
+        assert_eq!(err.code(), "load_failed");
+        assert!(err.to_string().contains("bad"), "{err}");
+        let err = cache
+            .insert_model("ghost", ModelSource::File(PathBuf::from("/nonexistent/x.json")))
+            .unwrap_err();
+        assert_eq!(err.code(), "load_failed");
+    }
+}

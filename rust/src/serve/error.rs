@@ -1,0 +1,92 @@
+//! Typed serving errors: every way `a2q serve` refuses work, as data.
+//!
+//! The admission-control contract is that overload and faults degrade
+//! *latency and availability of individual requests* — never correctness
+//! and never the process. That requires every rejection to be a value that
+//! travels back to exactly one client: a full queue, a blown deadline, a
+//! poisoned batch, a model that failed validation. The [`ServeError::code`]
+//! strings are the stable wire protocol (`loadgen` and CI match on them),
+//! so renaming one is a protocol break, not a refactor.
+
+/// A request-scoped serving failure. `Clone` so one batch-level failure can
+/// fan out to every request in the batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The bounded admission queue is full: shed at the door.
+    Overloaded { queued: usize, capacity: usize },
+    /// The request's deadline budget expired while it sat in the queue.
+    DeadlineExceeded { waited_ms: u64, budget_ms: u64 },
+    /// The worker executing this request's micro-batch panicked; the batch
+    /// was rejected and the worker respawned.
+    WorkerPanicked { batch_seq: u64 },
+    /// No model by this name (or hash) is registered.
+    UnknownModel { name: String },
+    /// The request itself is malformed (bad JSON, wrong input width, ...).
+    BadRequest { reason: String },
+    /// Loading (or reloading after eviction) the model failed validation.
+    LoadFailed { model: String, reason: String },
+    /// The server is draining: no new work admitted.
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// Stable wire code, the string clients switch on.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::DeadlineExceeded { .. } => "deadline_exceeded",
+            ServeError::WorkerPanicked { .. } => "worker_panicked",
+            ServeError::UnknownModel { .. } => "unknown_model",
+            ServeError::BadRequest { .. } => "bad_request",
+            ServeError::LoadFailed { .. } => "load_failed",
+            ServeError::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { queued, capacity } => {
+                write!(f, "admission queue full ({queued}/{capacity} requests)")
+            }
+            ServeError::DeadlineExceeded { waited_ms, budget_ms } => {
+                write!(f, "deadline exceeded after {waited_ms}ms of a {budget_ms}ms budget")
+            }
+            ServeError::WorkerPanicked { batch_seq } => {
+                write!(f, "batch worker panicked executing micro-batch {batch_seq}")
+            }
+            ServeError::UnknownModel { name } => write!(f, "unknown model {name:?}"),
+            ServeError::BadRequest { reason } => write!(f, "bad request: {reason}"),
+            ServeError::LoadFailed { model, reason } => {
+                write!(f, "loading model {model:?} failed: {reason}")
+            }
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_messages_carry_context() {
+        let cases: Vec<(ServeError, &str)> = vec![
+            (ServeError::Overloaded { queued: 8, capacity: 8 }, "overloaded"),
+            (ServeError::DeadlineExceeded { waited_ms: 250, budget_ms: 200 }, "deadline_exceeded"),
+            (ServeError::WorkerPanicked { batch_seq: 3 }, "worker_panicked"),
+            (ServeError::UnknownModel { name: "gpt".into() }, "unknown_model"),
+            (ServeError::BadRequest { reason: "width".into() }, "bad_request"),
+            (ServeError::LoadFailed { model: "m".into(), reason: "NaN".into() }, "load_failed"),
+            (ServeError::ShuttingDown, "shutting_down"),
+        ];
+        for (e, code) in cases {
+            assert_eq!(e.code(), code);
+            assert!(!e.to_string().is_empty());
+        }
+        assert!(ServeError::Overloaded { queued: 8, capacity: 8 }.to_string().contains("8/8"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Fault injection: the seam that lets tests and CI *prove* recovery.
+//!
+//! A robustness claim nobody can trigger is an assumption, not a feature.
+//! [`FaultPlan`] injects the three failure modes the server must survive —
+//! a worker panic mid-batch, pathological batch latency (to force queue
+//! buildup and deadline sheds), and a model-load failure — from the
+//! `A2Q_FAULT` environment variable, so a CI job can start a deliberately
+//! broken server and assert it keeps serving. The spec grammar is a comma
+//! list of `key[:value]` tokens:
+//!
+//! ```text
+//! A2Q_FAULT=panic_batch:3,delay_ms:20,cache_load
+//! ```
+//!
+//! `panic_batch:N` panics the worker executing the Nth micro-batch
+//! (1-based, once); `delay_ms:D` sleeps every batch D milliseconds before
+//! executing; `cache_load` fails every plan-cache load. Unknown or
+//! malformed tokens are ignored (same forgiving policy as
+//! `A2Q_STREAM_REFRESH`): a typo'd fault spec must not change production
+//! behaviour.
+
+/// The injected-failure schedule a server runs under. `Default` is no
+/// faults.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic the worker executing this (1-based) micro-batch sequence
+    /// number. Fires once: sequence numbers are global and monotone.
+    pub panic_batch: Option<u64>,
+    /// Sleep this long before executing every micro-batch.
+    pub delay_ms: Option<u64>,
+    /// Fail every plan-cache model load with a typed `LoadFailed`.
+    pub cache_load: bool,
+}
+
+impl FaultPlan {
+    /// No faults.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse a spec string (`None`/empty -> no faults; unknown tokens
+    /// ignored).
+    pub fn from_spec(spec: Option<&str>) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        let Some(spec) = spec else { return plan };
+        for token in spec.split(',') {
+            let token = token.trim();
+            let (key, value) = match token.split_once(':') {
+                Some((k, v)) => (k.trim(), Some(v.trim())),
+                None => (token, None),
+            };
+            match (key, value.and_then(|v| v.parse::<u64>().ok())) {
+                ("panic_batch", Some(n)) if n > 0 => plan.panic_batch = Some(n),
+                ("delay_ms", Some(d)) => plan.delay_ms = Some(d),
+                ("cache_load", _) => plan.cache_load = true,
+                _ => {} // unknown/malformed token: no behaviour change
+            }
+        }
+        plan
+    }
+
+    /// Read the process-wide plan from `A2Q_FAULT`.
+    pub fn from_env() -> FaultPlan {
+        FaultPlan::from_spec(std::env::var("A2Q_FAULT").ok().as_deref())
+    }
+
+    /// True when nothing is injected.
+    pub fn is_noop(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        assert!(FaultPlan::from_spec(None).is_noop());
+        assert!(FaultPlan::from_spec(Some("")).is_noop());
+        let p = FaultPlan::from_spec(Some("panic_batch:3,delay_ms:20,cache_load"));
+        assert_eq!(p.panic_batch, Some(3));
+        assert_eq!(p.delay_ms, Some(20));
+        assert!(p.cache_load);
+        // spacing tolerated, zero delay valid
+        let p = FaultPlan::from_spec(Some(" delay_ms:0 , panic_batch:1 "));
+        assert_eq!((p.panic_batch, p.delay_ms, p.cache_load), (Some(1), Some(0), false));
+    }
+
+    #[test]
+    fn malformed_tokens_never_change_behaviour() {
+        for bad in ["panic_batch", "panic_batch:0", "panic_batch:x", "delay_ms", "nope:5", "::,"] {
+            assert!(FaultPlan::from_spec(Some(bad)).is_noop(), "{bad:?}");
+        }
+        // a bad token next to a good one leaves the good one intact
+        let p = FaultPlan::from_spec(Some("bogus:9,delay_ms:5"));
+        assert_eq!(p.delay_ms, Some(5));
+        assert_eq!(p.panic_batch, None);
+    }
+}

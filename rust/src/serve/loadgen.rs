@@ -1,0 +1,369 @@
+//! Open-loop load generator and latency journal for `a2q serve`.
+//!
+//! Open-loop means the arrival schedule is fixed up front from the target
+//! rate — a client never slows down because the server is slow. That is the
+//! honest way to measure an overloaded service: a closed loop (wait for the
+//! reply, then send) self-throttles to whatever the server can do and hides
+//! both queueing delay and shed rate (the coordinated-omission trap).
+//! Every connection sends request `i` at `start + i * interval`, sleeping
+//! only when ahead of schedule, and records wall latency and the typed
+//! outcome code of each reply.
+//!
+//! The report separates outcomes by the admission-control contract:
+//! `ok` (served, bit-exact), `shed_overloaded` / `shed_deadline` (typed
+//! rejections — the *expected* overload behaviour), `worker_panicked`
+//! (typed fault isolation) and `errors_other` (everything that would mean
+//! the contract broke: connection resets, malformed replies, unexpected
+//! codes). Latency percentiles are computed over served requests only —
+//! shed requests are availability events, not latency samples.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::json::Json;
+use crate::perf::{self, BenchRecord};
+use crate::rng::Rng;
+
+/// Load-generation knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// Model name (or decimal hash) to infer against.
+    pub model: String,
+    /// Aggregate target request rate across all connections.
+    pub rps: f64,
+    /// How long to generate load.
+    pub duration_ms: u64,
+    /// Parallel connections the rate is split across.
+    pub connections: usize,
+    /// Input rows per request.
+    pub rows_per_req: usize,
+    /// Per-request deadline budget sent to the server.
+    pub deadline_ms: u64,
+    /// Input-generation seed (deterministic per connection).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            model: "synth".to_string(),
+            rps: 200.0,
+            duration_ms: 2000,
+            connections: 4,
+            rows_per_req: 4,
+            deadline_ms: 200,
+            seed: 1,
+        }
+    }
+}
+
+/// Outcome of one loadgen run, aggregated over all connections.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub shed_overloaded: u64,
+    pub shed_deadline: u64,
+    pub worker_panicked: u64,
+    pub errors_other: u64,
+    /// Latency percentiles over served requests, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Served input rows per second of generation time.
+    pub rows_per_s: f64,
+    /// Total overflow events reported for served requests (0 for A2Q
+    /// models: overload must never degrade correctness).
+    pub overflow_events: u64,
+    /// Wall time the run actually took.
+    pub elapsed_ms: f64,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One request/reply exchange on an established connection. Returns the
+/// reply's outcome code (`"ok"` for success) plus served-path details.
+fn exchange(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+) -> anyhow::Result<Json> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reply = String::new();
+    if reader.read_line(&mut reply)? == 0 {
+        anyhow::bail!("server closed the connection");
+    }
+    Ok(Json::parse(&reply)?)
+}
+
+/// Ask the server for a model's grid so inputs can be generated on it.
+fn model_info(addr: &str, model: &str) -> anyhow::Result<(usize, i64, i64)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let req = Json::obj(vec![("op", Json::str("model_info")), ("model", Json::str(model))]);
+    let reply = exchange(&mut stream, &mut reader, &reply_line(&req))?;
+    if !reply.get("ok")?.as_bool()? {
+        anyhow::bail!(
+            "model_info {model:?} failed: {}",
+            reply.opt("error").and_then(|e| e.as_str().ok()).unwrap_or("?")
+        );
+    }
+    let k = reply.get("input_dim")?.as_usize()?;
+    let lo = reply.get("code_lo")?.as_f64()? as i64;
+    let hi = reply.get("code_hi")?.as_f64()? as i64;
+    Ok((k, lo, hi))
+}
+
+fn reply_line(v: &Json) -> String {
+    v.to_string()
+}
+
+/// Fetch the server's stats counters (`op: stats`) as raw JSON.
+pub fn fetch_server_stats(addr: &str) -> anyhow::Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    exchange(&mut stream, &mut reader, &reply_line(&Json::obj(vec![("op", Json::str("stats"))])))
+}
+
+/// Ask the server to shut down.
+pub fn send_shutdown(addr: &str) -> anyhow::Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let line = reply_line(&Json::obj(vec![("op", Json::str("shutdown"))]));
+    exchange(&mut stream, &mut reader, &line)?;
+    Ok(())
+}
+
+/// Run the open-loop load and aggregate the report.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
+    anyhow::ensure!(cfg.rps > 0.0, "rps must be positive");
+    anyhow::ensure!(cfg.rows_per_req > 0, "rows_per_req must be positive");
+    let connections = cfg.connections.max(1);
+    let (k, lo, hi) = model_info(&cfg.addr, &cfg.model)?;
+    let duration = Duration::from_millis(cfg.duration_ms.max(1));
+    let per_conn_interval = Duration::from_secs_f64(connections as f64 / cfg.rps);
+    let per_conn_requests =
+        ((duration.as_secs_f64() * cfg.rps) / connections as f64).ceil().max(1.0) as u64;
+    let cfg = Arc::new(cfg.clone());
+
+    struct ConnTally {
+        sent: u64,
+        ok: u64,
+        shed_overloaded: u64,
+        shed_deadline: u64,
+        worker_panicked: u64,
+        errors_other: u64,
+        overflow_events: u64,
+        latencies_ms: Vec<f64>,
+    }
+
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for conn_id in 0..connections {
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> ConnTally {
+            let mut tally = ConnTally {
+                sent: 0,
+                ok: 0,
+                shed_overloaded: 0,
+                shed_deadline: 0,
+                worker_panicked: 0,
+                errors_other: 0,
+                overflow_events: 0,
+                latencies_ms: Vec::with_capacity(per_conn_requests as usize),
+            };
+            let Ok(mut stream) = TcpStream::connect(&cfg.addr) else {
+                tally.errors_other = per_conn_requests;
+                tally.sent = per_conn_requests;
+                return tally;
+            };
+            let Ok(clone) = stream.try_clone() else {
+                tally.errors_other = per_conn_requests;
+                tally.sent = per_conn_requests;
+                return tally;
+            };
+            let mut reader = BufReader::new(clone);
+            let mut rng = Rng::new(cfg.seed ^ (conn_id as u64).wrapping_mul(0x9e37_79b9));
+            let span = (hi - lo + 1).max(1) as usize;
+            let start = Instant::now();
+            for i in 0..per_conn_requests {
+                // Open loop: request i fires at its scheduled instant no
+                // matter how the previous one fared.
+                let due = start + per_conn_interval.mul_f64(i as f64);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                let rows: Vec<Json> = (0..cfg.rows_per_req)
+                    .map(|_| {
+                        let codes = (0..k).map(|_| lo + rng.below(span) as i64);
+                        Json::Arr(codes.map(|c| Json::num(c as f64)).collect())
+                    })
+                    .collect();
+                let req = Json::obj(vec![
+                    ("op", Json::str("infer")),
+                    ("model", Json::str(cfg.model.as_str())),
+                    ("rows", Json::arr(rows)),
+                    ("deadline_ms", Json::num(cfg.deadline_ms as f64)),
+                ]);
+                tally.sent += 1;
+                let sent_at = Instant::now();
+                match exchange(&mut stream, &mut reader, &reply_line(&req)) {
+                    Ok(reply) => {
+                        let ok = reply.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+                        if ok {
+                            tally.ok += 1;
+                            tally.latencies_ms.push(sent_at.elapsed().as_secs_f64() * 1e3);
+                            tally.overflow_events += reply
+                                .opt("overflow_events")
+                                .and_then(|v| v.as_u64().ok())
+                                .unwrap_or(0);
+                        } else {
+                            match reply.opt("code").and_then(|c| c.as_str().ok()) {
+                                Some("overloaded") => tally.shed_overloaded += 1,
+                                Some("deadline_exceeded") => tally.shed_deadline += 1,
+                                Some("worker_panicked") => tally.worker_panicked += 1,
+                                _ => tally.errors_other += 1,
+                            }
+                        }
+                    }
+                    Err(_) => tally.errors_other += 1,
+                }
+            }
+            tally
+        }));
+    }
+
+    let mut report = LoadReport::default();
+    let mut latencies: Vec<f64> = Vec::new();
+    for h in handles {
+        let t = h.join().map_err(|_| anyhow::anyhow!("loadgen connection thread panicked"))?;
+        report.sent += t.sent;
+        report.ok += t.ok;
+        report.shed_overloaded += t.shed_overloaded;
+        report.shed_deadline += t.shed_deadline;
+        report.worker_panicked += t.worker_panicked;
+        report.errors_other += t.errors_other;
+        report.overflow_events += t.overflow_events;
+        latencies.extend(t.latencies_ms);
+    }
+    let elapsed = started.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    report.p50_ms = percentile(&latencies, 0.50);
+    report.p99_ms = percentile(&latencies, 0.99);
+    report.rows_per_s = if elapsed > 0.0 {
+        (report.ok * cfg.rows_per_req as u64) as f64 / elapsed
+    } else {
+        0.0
+    };
+    report.elapsed_ms = elapsed * 1e3;
+    Ok(report)
+}
+
+/// Render the report as one JSON object (the `a2q loadgen` stdout line).
+pub fn report_json(r: &LoadReport, server_stats: Option<&Json>) -> Json {
+    let mut pairs = vec![
+        ("sent", Json::num(r.sent as f64)),
+        ("ok", Json::num(r.ok as f64)),
+        ("shed_overloaded", Json::num(r.shed_overloaded as f64)),
+        ("shed_deadline", Json::num(r.shed_deadline as f64)),
+        ("worker_panicked", Json::num(r.worker_panicked as f64)),
+        ("errors_other", Json::num(r.errors_other as f64)),
+        ("overflow_events", Json::num(r.overflow_events as f64)),
+        ("p50_ms", Json::num((r.p50_ms * 1e3).round() / 1e3)),
+        ("p99_ms", Json::num((r.p99_ms * 1e3).round() / 1e3)),
+        ("rows_per_s", Json::num(r.rows_per_s.round())),
+        ("elapsed_ms", Json::num(r.elapsed_ms.round())),
+    ];
+    if let Some(stats) = server_stats {
+        pairs.push(("server", stats.clone()));
+    }
+    Json::obj(pairs)
+}
+
+/// Journal the report under `serve/{label}_*` names and refresh the
+/// EXPERIMENTS.md §Perf-Serve block. Latency rows reuse the journal's
+/// ns-per-iter convention (p50/p99 wall latency per request; rows/s as its
+/// own row), so `a2q perfcheck` can gate on them like any other bench.
+pub fn journal_report(label: &str, r: &LoadReport) -> anyhow::Result<std::path::PathBuf> {
+    let records = vec![
+        BenchRecord {
+            name: format!("serve/{label}_p50"),
+            ns_per_iter: r.p50_ms * 1e6,
+            mac_per_s: None,
+            sparsity: None,
+        },
+        BenchRecord {
+            name: format!("serve/{label}_p99"),
+            ns_per_iter: r.p99_ms * 1e6,
+            mac_per_s: None,
+            sparsity: None,
+        },
+        BenchRecord {
+            name: format!("serve/{label}_rows_per_s"),
+            ns_per_iter: if r.rows_per_s > 0.0 { 1e9 / r.rows_per_s } else { 0.0 },
+            mac_per_s: None,
+            sparsity: None,
+        },
+    ];
+    let path = perf::record_benches(&records)?;
+    let shed = r.shed_overloaded + r.shed_deadline;
+    let block = format!(
+        "Last recorded by `a2q loadgen --journal` ({label}):\n\n\
+         | metric | value |\n|---|---|\n\
+         | served | {} / {} sent |\n\
+         | shed (overloaded + deadline) | {} |\n\
+         | p50 latency | {:.3} ms |\n\
+         | p99 latency | {:.3} ms |\n\
+         | served rows/s | {:.0} |\n\
+         | overflow events (served) | {} |\n",
+        r.ok, r.sent, shed, r.p50_ms, r.p99_ms, r.rows_per_s, r.overflow_events
+    );
+    perf::update_experiments_serve_block(&block)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_interpolate_sanely() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+    }
+
+    #[test]
+    fn report_json_carries_the_contract_counters() {
+        let r = LoadReport {
+            sent: 10,
+            ok: 7,
+            shed_overloaded: 2,
+            shed_deadline: 1,
+            p50_ms: 1.5,
+            p99_ms: 4.0,
+            rows_per_s: 1234.0,
+            ..LoadReport::default()
+        };
+        let j = report_json(&r, None);
+        let text = j.to_string();
+        for needle in ["\"ok\":7", "\"shed_overloaded\":2", "\"shed_deadline\":1", "\"sent\":10"] {
+            assert!(text.contains(needle), "{needle} missing from {text}");
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! `a2q serve`: an overload-safe inference service over the accumulator
+//! simulation engine.
+//!
+//! The serving claim mirrors the paper's: A2Q makes overflow behaviour a
+//! *provable property* rather than a load-dependent accident — so a server
+//! built on it must extend the same discipline to its own failure modes.
+//! Overload and faults degrade latency and per-request availability, never
+//! correctness and never the process:
+//!
+//! * [`cache`] — fixed-capacity concurrent plan cache: model hash →
+//!   [`crate::accsim::SharedNetworkPlan`], LRU-evicted, reloaded from
+//!   source on demand, validated at the trust boundary with typed errors.
+//! * [`admission`] — the bounded queue between connections and workers:
+//!   explicit [`ServeError::Overloaded`] at the door, deadline shedding at
+//!   dequeue, deadline-aware same-model micro-batching.
+//! * [`batcher`] — micro-batch execution ([`execute_micro_batch`], pinned
+//!   bit-identical to per-request execution) and the `catch_unwind` worker
+//!   loop that converts panics into per-batch typed rejections.
+//! * [`session`] — the TCP line-JSON server: accept loop, per-connection
+//!   sessions, worker pool and the supervisor that respawns panicked
+//!   workers.
+//! * [`fault`] — the `A2Q_FAULT` injection seam (worker panic, batch
+//!   latency, cache-load failure) that lets tests and CI *prove* recovery.
+//! * [`loadgen`] — open-loop load generation with p50/p99 + shed-rate
+//!   reporting and the §Perf-Serve journal hook.
+
+pub mod admission;
+pub mod batcher;
+pub mod cache;
+pub mod error;
+pub mod fault;
+pub mod loadgen;
+pub mod session;
+
+pub use admission::{AdmissionQueue, JobReply, JobRequest, ServeStats, StatsSnapshot};
+pub use batcher::{execute_micro_batch, run_worker, BatchPolicy, MicroBatchOutcome};
+pub use cache::{ModelSource, PlanCache};
+pub use error::ServeError;
+pub use fault::FaultPlan;
+pub use loadgen::{run_loadgen, LoadReport, LoadgenConfig};
+pub use session::{ServeConfig, Server};

@@ -1,0 +1,467 @@
+//! The server: TCP listener, connection sessions, worker pool and the
+//! supervisor that keeps it alive through worker panics.
+//!
+//! Thread topology: one accept loop spawns a session thread per connection;
+//! session threads validate requests and submit them to the shared
+//! [`AdmissionQueue`]; `workers` batch-worker threads drain it through
+//! [`run_worker`]; one supervisor polls the workers and respawns any that
+//! died by panic (a normal worker exit only happens when the queue is
+//! closed). Every thread communicates through `Arc`s — there is no global
+//! state, so in-process tests can run several servers at once.
+//!
+//! ## Wire protocol
+//!
+//! Line-delimited JSON over TCP, one request per line, one response line
+//! each (keys sorted — [`crate::json`]). Ops:
+//!
+//! ```text
+//! {"op":"ping"}
+//! {"op":"model_info","model":"m"}
+//! {"op":"infer","model":"m","rows":[[codes...],...],"deadline_ms":100}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Responses carry `"ok":true` plus op-specific fields, or `"ok":false`
+//! with the stable [`ServeError::code`] under `"code"` and a human message
+//! under `"error"`. Inference inputs are integer codes on the model's
+//! layer-0 activation grid (see `model_info` for the grid range);
+//! `deadline_ms` is the request's admission-to-execution budget.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::admission::{AdmissionQueue, JobRequest, ServeStats, StatsSnapshot};
+use super::batcher::{run_worker, BatchPolicy};
+use super::cache::{ModelSource, PlanCache};
+use super::error::ServeError;
+use super::fault::FaultPlan;
+use crate::accsim::IntMatrix;
+use crate::json::Json;
+
+/// Server knobs. `Default` is a sane single-host profile.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (tests).
+    pub addr: String,
+    /// Batch-worker threads.
+    pub workers: usize,
+    /// Admission-queue capacity (requests, not rows).
+    pub queue_capacity: usize,
+    /// Maximum input rows per micro-batch.
+    pub max_batch_rows: usize,
+    /// How long a non-full batch waits for more same-model rows.
+    pub batch_window_ms: u64,
+    /// Deadline budget applied when a request names none.
+    pub default_deadline_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 2,
+            queue_capacity: 64,
+            max_batch_rows: 64,
+            batch_window_ms: 1,
+            default_deadline_ms: 1000,
+        }
+    }
+}
+
+/// A running server. Dropping it does NOT stop it — call
+/// [`Server::shutdown`] then [`Server::join`].
+pub struct Server {
+    addr: SocketAddr,
+    queue: Arc<AdmissionQueue>,
+    stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    supervisor_handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, load + validate every model, start workers and supervisor.
+    /// Model validation failures abort startup with the typed load error —
+    /// a server that cannot serve its models should not come up.
+    pub fn start(
+        cfg: &ServeConfig,
+        models: &[(String, ModelSource)],
+        fault: FaultPlan,
+    ) -> anyhow::Result<Server> {
+        anyhow::ensure!(!models.is_empty(), "a2q serve needs at least one --models entry");
+        let cache = Arc::new(PlanCache::new(models.len().max(1), fault));
+        for (name, source) in models {
+            cache
+                .insert_model(name, source.clone())
+                .map_err(|e| anyhow::anyhow!("model {name:?}: {e}"))?;
+        }
+        let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity));
+        let stats = Arc::new(ServeStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let policy = BatchPolicy {
+            max_rows: cfg.max_batch_rows.max(1),
+            window: Duration::from_millis(cfg.batch_window_ms),
+        };
+
+        let spawn_worker = {
+            let queue = queue.clone();
+            let cache = cache.clone();
+            let stats = stats.clone();
+            move || {
+                let queue = queue.clone();
+                let cache = cache.clone();
+                let stats = stats.clone();
+                std::thread::Builder::new()
+                    .name("a2q-serve-worker".to_string())
+                    .spawn(move || run_worker(queue, cache, stats, policy, fault))
+                    .expect("spawn batch worker")
+            }
+        };
+        let mut workers: Vec<JoinHandle<()>> = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            workers.push(spawn_worker());
+        }
+
+        // Supervisor: respawn panicked workers until shutdown, then reap.
+        let supervisor_handle = {
+            let stats = stats.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("a2q-serve-supervisor".to_string())
+                .spawn(move || loop {
+                    let mut i = 0;
+                    while i < workers.len() {
+                        if workers[i].is_finished() {
+                            let dead = workers.swap_remove(i);
+                            let panicked = dead.join().is_err();
+                            if panicked && !shutdown.load(Ordering::SeqCst) {
+                                stats.respawns.fetch_add(1, Ordering::Relaxed);
+                                workers.push(spawn_worker());
+                            }
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    if shutdown.load(Ordering::SeqCst) && workers.is_empty() {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                })
+                .expect("spawn supervisor")
+        };
+
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let accept_handle = {
+            let queue = queue.clone();
+            let cache = cache.clone();
+            let stats = stats.clone();
+            let shutdown = shutdown.clone();
+            let default_deadline = Duration::from_millis(cfg.default_deadline_ms.max(1));
+            std::thread::Builder::new()
+                .name("a2q-serve-accept".to_string())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let queue = queue.clone();
+                        let cache = cache.clone();
+                        let stats = stats.clone();
+                        let shutdown = shutdown.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("a2q-serve-conn".to_string())
+                            .spawn(move || {
+                                run_session(
+                                    stream,
+                                    &queue,
+                                    &cache,
+                                    &stats,
+                                    &shutdown,
+                                    default_deadline,
+                                )
+                            });
+                    }
+                })
+                .expect("spawn accept loop")
+        };
+
+        Ok(Server {
+            addr,
+            queue,
+            stats,
+            shutdown,
+            accept_handle: Some(accept_handle),
+            supervisor_handle: Some(supervisor_handle),
+        })
+    }
+
+    /// The actually bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Begin draining: reject new work typed, wake the accept loop, let
+    /// workers run out.
+    pub fn shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.queue.close(&self.stats);
+        // Wake the accept loop so it observes the flag and exits.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Wait for the accept loop and worker pool to finish. Call after
+    /// [`Server::shutdown`]; joining a live server blocks forever.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.supervisor_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn err_json(e: &ServeError) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::str(e.code())),
+        ("error", Json::str(e.to_string())),
+    ])
+}
+
+fn stats_json(s: &StatsSnapshot) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("admitted", Json::num(s.admitted as f64)),
+        ("completed", Json::num(s.completed as f64)),
+        ("shed_overloaded", Json::num(s.shed_overloaded as f64)),
+        ("shed_deadline", Json::num(s.shed_deadline as f64)),
+        ("worker_panics", Json::num(s.worker_panics as f64)),
+        ("respawns", Json::num(s.respawns as f64)),
+        ("batches", Json::num(s.batches as f64)),
+        ("batched_rows", Json::num(s.batched_rows as f64)),
+    ])
+}
+
+/// One connection: read request lines, write response lines, until the
+/// client hangs up or asks for shutdown. Per-request state is a counter and
+/// an mpsc channel; the plan cache and queue are shared.
+fn run_session(
+    stream: TcpStream,
+    queue: &AdmissionQueue,
+    cache: &PlanCache,
+    stats: &ServeStats,
+    shutdown: &AtomicBool,
+    default_deadline: Duration,
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    // The accepted socket's local address IS the listening address: the
+    // shutdown op uses it to wake the blocked accept loop.
+    let listen_addr = stream.local_addr().ok();
+    let reader = BufReader::new(stream);
+    let mut next_id = 0u64;
+    for line in reader.lines() {
+        let Ok(line) = line else { return };
+        if line.trim().is_empty() {
+            continue;
+        }
+        next_id += 1;
+        let reply = handle_line(
+            &line,
+            next_id,
+            queue,
+            cache,
+            stats,
+            shutdown,
+            listen_addr,
+            default_deadline,
+        );
+        let mut text = reply.to_string();
+        text.push('\n');
+        if writer.write_all(text.as_bytes()).is_err() {
+            return;
+        }
+    }
+}
+
+fn bad(reason: impl Into<String>) -> ServeError {
+    ServeError::BadRequest { reason: reason.into() }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_line(
+    line: &str,
+    req_id: u64,
+    queue: &AdmissionQueue,
+    cache: &PlanCache,
+    stats: &ServeStats,
+    shutdown: &AtomicBool,
+    listen_addr: Option<SocketAddr>,
+    default_deadline: Duration,
+) -> Json {
+    let parsed = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err_json(&bad(format!("invalid JSON: {e:#}"))),
+    };
+    let op = match parsed.get("op").and_then(|v| v.as_str()) {
+        Ok(op) => op.to_string(),
+        Err(_) => return err_json(&bad("missing \"op\"")),
+    };
+    match op.as_str() {
+        "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
+        "stats" => stats_json(&stats.snapshot()),
+        "shutdown" => {
+            if !shutdown.swap(true, Ordering::SeqCst) {
+                queue.close(stats);
+                // Wake the blocked accept loop so it observes the flag.
+                if let Some(addr) = listen_addr {
+                    let _ = TcpStream::connect(addr);
+                }
+            }
+            Json::obj(vec![("ok", Json::Bool(true))])
+        }
+        "model_info" => match model_info(&parsed, cache) {
+            Ok(v) => v,
+            Err(e) => err_json(&e),
+        },
+        "infer" => match infer(&parsed, req_id, queue, cache, stats, default_deadline) {
+            Ok(v) => v,
+            Err(e) => err_json(&e),
+        },
+        other => err_json(&bad(format!("unknown op {other:?}"))),
+    }
+}
+
+fn model_info(req: &Json, cache: &PlanCache) -> Result<Json, ServeError> {
+    let name = req
+        .get("model")
+        .and_then(|v| v.as_str())
+        .map_err(|_| bad("model_info needs \"model\""))?;
+    let hash = cache.resolve(name)?;
+    let plan = cache.get(hash)?;
+    let net = plan.net();
+    let (lo, hi) = net.layers[0].in_quant.int_range();
+    let (m, n, p) = net.grid_bits();
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("model", Json::str(name)),
+        ("hash", Json::str(hash.to_string())),
+        ("input_dim", Json::num(net.input_dim() as f64)),
+        ("output_dim", Json::num(net.output_dim() as f64)),
+        ("depth", Json::num(net.layers.len() as f64)),
+        ("code_lo", Json::num(lo as f64)),
+        ("code_hi", Json::num(hi as f64)),
+        ("m_bits", Json::num(m as f64)),
+        ("n_bits", Json::num(n as f64)),
+        ("p_bits", Json::num(p as f64)),
+    ]))
+}
+
+fn infer(
+    req: &Json,
+    req_id: u64,
+    queue: &AdmissionQueue,
+    cache: &PlanCache,
+    stats: &ServeStats,
+    default_deadline: Duration,
+) -> Result<Json, ServeError> {
+    let name = req
+        .get("model")
+        .and_then(|v| v.as_str())
+        .map_err(|_| bad("infer needs \"model\""))?;
+    let hash = cache.resolve(name)?;
+    // Validate against the model's grid before admission: a malformed
+    // request must never occupy queue capacity.
+    let plan = cache.get(hash)?;
+    let k = plan.net().input_dim();
+    let (lo, hi) = plan.net().layers[0].in_quant.int_range();
+    let rows_json = req
+        .get("rows")
+        .and_then(|v| v.as_arr())
+        .map_err(|_| bad("infer needs \"rows\""))?;
+    if rows_json.is_empty() {
+        return Err(bad("empty rows"));
+    }
+    let mut flat: Vec<i64> = Vec::with_capacity(rows_json.len() * k);
+    for (ri, row) in rows_json.iter().enumerate() {
+        let row = row.as_arr().map_err(|_| bad(format!("row {ri} is not an array")))?;
+        if row.len() != k {
+            return Err(bad(format!("row {ri} has {} codes, model takes {k}", row.len())));
+        }
+        for (ci, v) in row.iter().enumerate() {
+            let f = v.as_f64().map_err(|_| bad(format!("row {ri} code {ci} is not a number")))?;
+            if !f.is_finite() || f != f.trunc() {
+                return Err(bad(format!("row {ri} code {ci} is not an integer")));
+            }
+            let code = f as i64;
+            if code < lo || code > hi {
+                return Err(bad(format!(
+                    "row {ri} code {ci} = {code} outside the model's input grid [{lo}, {hi}]"
+                )));
+            }
+            flat.push(code);
+        }
+    }
+    let budget = match req.opt("deadline_ms") {
+        Some(v) => Duration::from_millis(v.as_u64().map_err(|_| bad("bad deadline_ms"))?),
+        None => default_deadline,
+    };
+    let now = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    let request = JobRequest {
+        id: req_id,
+        model_hash: hash,
+        rows: IntMatrix::from_flat(rows_json.len(), k, flat),
+        enqueued: now,
+        deadline: now + budget,
+        budget_ms: budget.as_millis() as u64,
+        responder: tx,
+    };
+    queue.submit(request).map_err(|e| {
+        if matches!(e, ServeError::Overloaded { .. }) {
+            stats.shed_overloaded.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        e
+    })?;
+    stats.admitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    // Admitted: the worker (or the queue's shed/close paths) owns the reply.
+    match rx.recv() {
+        Ok(Ok(reply)) => {
+            let out_dim = reply.outputs.cols();
+            let rows: Vec<Json> = reply
+                .outputs
+                .data()
+                .chunks(out_dim)
+                .map(Json::from_f32s)
+                .collect();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("outputs", Json::arr(rows)),
+                ("overflow_events", Json::num(reply.overflow_events as f64)),
+                ("batch_seq", Json::num(reply.batch_seq as f64)),
+                ("batch_rows", Json::num(reply.batch_rows as f64)),
+            ]))
+        }
+        Ok(Err(e)) => Err(e),
+        // The responder was dropped without a reply: a worker died between
+        // dequeue and respond in a way catch_unwind could not cover.
+        Err(_) => Err(ServeError::WorkerPanicked { batch_seq: 0 }),
+    }
+}

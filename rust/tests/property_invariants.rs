@@ -936,7 +936,7 @@ fn prop_stream_session_matches_full_recompute() {
             // (the last crosses the refresh cap at thresholds <= 1.0).
             for per_row in [0usize, 1, 7, widths[0]] {
                 let tick = stream_delta_tick(session.x(), per_row, n_bits, &mut rng);
-                session.apply(&tick);
+                session.apply(&tick).unwrap();
                 apply_deltas(&mut mirror, &tick);
                 let ctx = format!("{path:?} thr={threshold} per_row={per_row}");
                 assert_eq!(session.x(), &mirror, "{ctx}");

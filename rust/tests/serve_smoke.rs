@@ -1,0 +1,329 @@
+//! Serving-stack smoke + property tests: the admission-control contract,
+//! bit-identical micro-batching, and fault recovery — all in-process
+//! against real TCP servers on ephemeral ports.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use a2q::accsim::{AccMode, IntMatrix, KernelPath, NetScratch, NetworkPlan, SharedNetworkPlan};
+use a2q::json::Json;
+use a2q::model::{parse_synth_spec, QNetwork};
+use a2q::rng::Rng;
+use a2q::serve::{
+    execute_micro_batch, FaultPlan, LoadgenConfig, ModelSource, ServeConfig, ServeError, Server,
+};
+use a2q::tensor::Tensor;
+
+fn calibrated_net(spec: &str, seed: u64) -> QNetwork {
+    let (_, net_spec) = parse_synth_spec(spec).unwrap();
+    let mut net = QNetwork::synthesize(&net_spec, seed).unwrap();
+    let mut rng = Rng::new(seed ^ 0xCA11);
+    let k = net.input_dim();
+    let data: Vec<f32> = (0..48 * k).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect();
+    net.calibrate(&Tensor::new(vec![48, k], data));
+    net
+}
+
+fn random_rows(rng: &mut Rng, rows: usize, cols: usize, n_bits: u32) -> IntMatrix {
+    let hi = 1usize << n_bits;
+    IntMatrix::from_flat(rows, cols, (0..rows * cols).map(|_| rng.below(hi) as i64).collect())
+}
+
+/// The tentpole property: serving a micro-batch is bit-identical to serving
+/// each request alone — outputs and every `OverflowStats` counter — across
+/// batch compositions, thread counts and forced kernel paths, both at the
+/// overflow-free target P and at a deliberately narrow P where wraps fire.
+#[test]
+fn micro_batched_serving_is_bit_identical_to_per_request_execution() {
+    let net = calibrated_net("prop:18x12x5:m4n4p16", 21);
+    let p_safe = net.grid_bits().2;
+    let arc = Arc::new(net);
+    let paths = [
+        None,
+        Some(KernelPath::Scalar),
+        Some(KernelPath::Simd),
+        Some(KernelPath::SparseSimd),
+    ];
+    // Wrap at the A2Q target (no overflow) and at a starved register
+    // (overflow events fire and must still be batch-invariant).
+    for p_bits in [p_safe, 8] {
+        let modes = [AccMode::Wrap { p_bits }];
+        for (case, path) in paths.iter().enumerate() {
+            let shared = SharedNetworkPlan::new_with_path(arc.clone(), &modes, *path);
+            let borrowing = NetworkPlan::new_with_path(&arc, &modes, *path);
+            let mut rng = Rng::new(0xBA7C + case as u64 + p_bits as u64);
+            let mut scratch = NetScratch::default();
+            for sizes in [vec![1usize], vec![2, 3], vec![1, 4, 2, 1], vec![5, 5, 5]] {
+                let reqs: Vec<IntMatrix> =
+                    sizes.iter().map(|&r| random_rows(&mut rng, r, 18, 4)).collect();
+                let refs: Vec<&IntMatrix> = reqs.iter().collect();
+                let tag = format!("P={p_bits} path={path:?} sizes={sizes:?}");
+
+                // (a) The warm-scratch serving path matches threaded
+                // execution of the same concatenated batch exactly.
+                let total: usize = sizes.iter().sum();
+                let mut flat = Vec::new();
+                for r in &reqs {
+                    flat.extend_from_slice(r.data());
+                }
+                let concat = IntMatrix::from_flat(total, 18, flat);
+                let warm = shared.execute_warm(&concat, &mut scratch);
+                for threads in [1usize, 2, 5] {
+                    for (plan_tag, got) in [
+                        ("shared", shared.execute_threads(&concat, threads)),
+                        ("borrowing", borrowing.execute_threads(&concat, threads)),
+                    ] {
+                        assert_eq!(
+                            warm[0].out.data(),
+                            got[0].out.data(),
+                            "{tag} {plan_tag} t={threads}"
+                        );
+                        assert_eq!(
+                            warm[0].out_wide.data(),
+                            got[0].out_wide.data(),
+                            "{tag} {plan_tag} t={threads}"
+                        );
+                        assert_eq!(
+                            warm[0].layer_stats,
+                            got[0].layer_stats,
+                            "{tag} {plan_tag} t={threads}"
+                        );
+                    }
+                }
+
+                // (b) The per-request split of the micro-batch matches each
+                // request executed alone.
+                let batched = execute_micro_batch(&shared, &refs, &mut scratch);
+                assert_eq!(batched.total_rows, total, "{tag}");
+                let mut solo_events = 0u64;
+                let mut solo_dots = 0u64;
+                let mut solo_macs = 0u64;
+                for (ri, (req, got)) in reqs.iter().zip(&batched.per_request).enumerate() {
+                    let solo = borrowing.execute(req);
+                    assert_eq!(solo[0].out.data(), got.data(), "{tag} req {ri}");
+                    for s in &solo[0].layer_stats {
+                        solo_events += s.overflow_events;
+                        solo_dots += s.dots;
+                        solo_macs += s.macs;
+                    }
+                }
+                assert_eq!(batched.overflow_events, solo_events, "{tag}");
+                let warm_dots: u64 = warm[0].layer_stats.iter().map(|s| s.dots).sum();
+                let warm_macs: u64 = warm[0].layer_stats.iter().map(|s| s.macs).sum();
+                assert_eq!((warm_dots, warm_macs), (solo_dots, solo_macs), "{tag}");
+            }
+        }
+    }
+    // Sanity that the starved-P leg actually exercised overflow somewhere:
+    // otherwise the counter assertions above prove nothing.
+    let modes = [AccMode::Wrap { p_bits: 8 }];
+    let shared = SharedNetworkPlan::new(arc.clone(), &modes);
+    let mut rng = Rng::new(5);
+    let x = random_rows(&mut rng, 16, 18, 4);
+    let events: u64 = shared.execute(&x)[0].layer_stats.iter().map(|s| s.overflow_events).sum();
+    assert!(events > 0, "P=8 was expected to overflow on this net; tighten the test inputs");
+}
+
+// ---------------------------------------------------------------------------
+// TCP helpers
+// ---------------------------------------------------------------------------
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        Client { stream, reader }
+    }
+
+    fn call(&mut self, req: Json) -> Json {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes()).expect("write");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read");
+        Json::parse(&reply).expect("parse reply")
+    }
+
+    fn infer(&mut self, model: &str, rows: Vec<Vec<i64>>, deadline_ms: u64) -> Json {
+        let rows = Json::arr(
+            rows.into_iter()
+                .map(|r| Json::Arr(r.into_iter().map(|v| Json::num(v as f64)).collect())),
+        );
+        self.call(Json::obj(vec![
+            ("op", Json::str("infer")),
+            ("model", Json::str(model)),
+            ("rows", rows),
+            ("deadline_ms", Json::num(deadline_ms as f64)),
+        ]))
+    }
+}
+
+fn ok(reply: &Json) -> bool {
+    reply.get("ok").and_then(|v| v.as_bool()).unwrap_or(false)
+}
+
+fn code(reply: &Json) -> String {
+    reply.opt("code").and_then(|c| c.as_str().ok()).unwrap_or("").to_string()
+}
+
+const SPEC: &str = "smoke:12x8x3:m4n4p16";
+
+fn test_server(cfg: ServeConfig, fault: FaultPlan) -> Server {
+    let models = [("smoke".to_string(), ModelSource::Synth(SPEC.to_string()))];
+    Server::start(&cfg, &models, fault).expect("server start")
+}
+
+fn quiet_cfg() -> ServeConfig {
+    ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end smoke
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_round_trip_serves_inference_and_validates_requests() {
+    let server = test_server(quiet_cfg(), FaultPlan::none());
+    let addr = server.addr();
+    let mut c = Client::connect(addr);
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("ping"))]))));
+
+    let info = c.call(Json::obj(vec![
+        ("op", Json::str("model_info")),
+        ("model", Json::str("smoke")),
+    ]));
+    assert!(ok(&info), "{info:?}");
+    assert_eq!(info.get("input_dim").unwrap().as_usize().unwrap(), 12);
+    assert_eq!(info.get("output_dim").unwrap().as_usize().unwrap(), 3);
+
+    let reply = c.infer("smoke", vec![vec![1; 12], vec![3; 12]], 1000);
+    assert!(ok(&reply), "{reply:?}");
+    let outputs = reply.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(outputs.len(), 2, "one output row per input row");
+    assert_eq!(outputs[0].as_arr().unwrap().len(), 3);
+    assert_eq!(reply.get("overflow_events").unwrap().as_u64().unwrap(), 0, "A2Q net at target P");
+
+    // Same rows again: bit-identical replies (JSON text equality works
+    // because key order and float rendering are deterministic).
+    let again = c.infer("smoke", vec![vec![1; 12], vec![3; 12]], 1000);
+    assert_eq!(reply.to_string(), again.to_string());
+
+    // Typed request validation, all without dropping the connection.
+    assert_eq!(code(&c.infer("nope", vec![vec![0; 12]], 100)), "unknown_model");
+    assert_eq!(code(&c.infer("smoke", vec![vec![0; 11]], 100)), "bad_request");
+    assert_eq!(code(&c.infer("smoke", vec![vec![99; 12]], 100)), "bad_request");
+    assert_eq!(code(&c.call(Json::parse("{\"op\":\"bogus\"}").unwrap())), "bad_request");
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("ping"))]))));
+
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    drop(c);
+    server.join();
+}
+
+/// Overload contract under 2x+ pressure: only typed sheds, no connection
+/// errors, the server keeps serving admitted work and survives to serve
+/// more after the storm.
+#[test]
+fn overload_sheds_typed_and_server_survives() {
+    let cfg = ServeConfig { queue_capacity: 2, workers: 1, max_batch_rows: 8, ..quiet_cfg() };
+    // Artificial batch latency makes the 1-worker service rate far below
+    // the offered load, forcing queue-full and deadline sheds.
+    let server = test_server(cfg, FaultPlan::from_spec(Some("delay_ms:20")));
+    let addr = server.addr();
+
+    let report = a2q::serve::run_loadgen(&LoadgenConfig {
+        addr: addr.to_string(),
+        model: "smoke".to_string(),
+        rps: 300.0,
+        duration_ms: 700,
+        connections: 3,
+        rows_per_req: 2,
+        deadline_ms: 120,
+        seed: 9,
+    })
+    .expect("loadgen");
+
+    assert!(report.ok > 0, "some requests must be served: {report:?}");
+    assert!(
+        report.shed_overloaded + report.shed_deadline > 0,
+        "overload must shed typed: {report:?}"
+    );
+    assert_eq!(report.errors_other, 0, "no untyped failures allowed: {report:?}");
+    assert_eq!(report.overflow_events, 0, "overload must never cost correctness");
+
+    // The storm is over; the server still serves.
+    let mut c = Client::connect(addr);
+    let reply = c.infer("smoke", vec![vec![2; 12]], 1000);
+    assert!(ok(&reply), "{reply:?}");
+    let stats = c.call(Json::obj(vec![("op", Json::str("stats"))]));
+    let so = stats.get("shed_overloaded").unwrap().as_u64().unwrap();
+    let sd = stats.get("shed_deadline").unwrap().as_u64().unwrap();
+    assert!(so > 0 || sd > 0, "server stats must record the sheds");
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    drop(c);
+    server.join();
+}
+
+/// Fault isolation: an injected worker panic rejects exactly its own batch
+/// with a typed error; the supervisor respawns a fresh worker and the very
+/// next request is served normally.
+#[test]
+fn worker_panic_rejects_only_its_batch_and_respawns() {
+    let cfg = ServeConfig { workers: 1, ..quiet_cfg() };
+    let server = test_server(cfg, FaultPlan::from_spec(Some("panic_batch:2")));
+    let addr = server.addr();
+    let mut c = Client::connect(addr);
+
+    // Sequential requests on one connection => one request per batch.
+    let first = c.infer("smoke", vec![vec![1; 12]], 2000);
+    assert!(ok(&first), "batch 1 precedes the fault: {first:?}");
+
+    let second = c.infer("smoke", vec![vec![1; 12]], 2000);
+    assert_eq!(code(&second), "worker_panicked", "{second:?}");
+    assert_eq!(
+        second.get("error").unwrap().as_str().unwrap(),
+        ServeError::WorkerPanicked { batch_seq: 2 }.to_string(),
+        "the typed error names the poisoned batch"
+    );
+
+    // The respawned worker serves the next request; the reply matches the
+    // pre-panic reply bit for bit (fresh scratch, same plan).
+    let third = c.infer("smoke", vec![vec![1; 12]], 2000);
+    assert!(ok(&third), "server must keep serving after a worker panic: {third:?}");
+    assert_eq!(
+        first.get("outputs").unwrap().to_string(),
+        third.get("outputs").unwrap().to_string()
+    );
+
+    let stats = c.call(Json::obj(vec![("op", Json::str("stats"))]));
+    assert_eq!(stats.get("worker_panics").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(stats.get("respawns").unwrap().as_u64().unwrap(), 1);
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    drop(c);
+    server.join();
+}
+
+/// An injected cache-load failure is a per-request typed error on an
+/// otherwise healthy server.
+#[test]
+fn cache_load_fault_fails_requests_typed_not_the_server() {
+    let server = test_server(quiet_cfg(), FaultPlan::from_spec(Some("cache_load")));
+    let addr = server.addr();
+    let mut c = Client::connect(addr);
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("ping"))]))));
+    let reply = c.call(Json::obj(vec![
+        ("op", Json::str("model_info")),
+        ("model", Json::str("smoke")),
+    ]));
+    assert_eq!(code(&reply), "load_failed", "{reply:?}");
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("ping"))]))));
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    drop(c);
+    server.join();
+}

@@ -56,7 +56,7 @@ fn stream_smoke_records_journal() {
     let t1 = Instant::now();
     for _ in 0..reps * ticks {
         let tick = stream_delta_tick(session.x(), per_row, n, &mut srng);
-        session.apply(&tick);
+        session.apply(&tick).unwrap();
         sink ^= session.forward_threads(1)[1].stats.overflow_events;
     }
     let t_inc = t1.elapsed();
