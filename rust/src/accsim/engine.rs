@@ -942,6 +942,13 @@ struct NetWorker {
     /// Spare buffers recycled between groups.
     code_pool: Vec<Vec<i64>>,
     slot_pool: Vec<Vec<usize>>,
+    /// Current group's mode list staging (rebuilt per group, no alloc).
+    gmodes: Vec<AccMode>,
+    /// Memoized [`ModePlan`] keyed by `plan_modes`: consecutive groups with
+    /// the same mode list (always, for single-mode serving plans) reuse it,
+    /// so the per-group plan build drops off the steady-state path.
+    plan_modes: Vec<AccMode>,
+    plan: Option<ModePlan>,
 }
 
 /// One row block of a network forward: per-mode final-layer output slices
@@ -1067,7 +1074,8 @@ fn net_forward_block(
     let n_modes = modes.len();
     let depth = net.layers.len();
     let rows = r1 - r0;
-    let NetWorker { sim, cur, next, outs, wide, gstats, qbuf, code_pool, slot_pool } = ws;
+    let NetWorker { sim, cur, next, outs, wide, gstats, qbuf, code_pool, slot_pool, gmodes, plan_modes, plan } =
+        ws;
     debug_assert!(cur.is_empty() && next.is_empty());
 
     // Layer 0 input: one group holding every mode over the block's rows.
@@ -1087,8 +1095,14 @@ fn net_forward_block(
             let c_out = layer.weights.c_out;
             let last = li + 1 == depth;
             for g in cur.iter() {
-                let gmodes: Vec<AccMode> = g.slots.iter().map(|&s| modes[s]).collect();
-                let plan = ModePlan::new(&gmodes);
+                gmodes.clear();
+                gmodes.extend(g.slots.iter().map(|&s| modes[s]));
+                if plan.is_none() || plan_modes.as_slice() != gmodes.as_slice() {
+                    plan_modes.clear();
+                    plan_modes.extend_from_slice(gmodes);
+                    *plan = Some(ModePlan::new(gmodes));
+                }
+                let plan: &ModePlan = plan.as_ref().expect("memoized group plan");
                 let gn = g.slots.len();
                 while outs.len() < gn {
                     outs.push(Vec::new());
@@ -1102,17 +1116,27 @@ fn net_forward_block(
                 gstats.clear();
                 gstats.resize(gn, OverflowStats::default());
                 {
-                    let mut refs: Vec<&mut [f32]> =
-                        outs[..gn].iter_mut().map(|v| v.as_mut_slice()).collect();
+                    // Single-mode groups (every group of a serving plan)
+                    // borrow their one output slice on the stack; only
+                    // multi-mode fan-outs pay for a ref list.
+                    let mut one: [&mut [f32]; 1];
+                    let mut many: Vec<&mut [f32]>;
+                    let refs: &mut [&mut [f32]] = if gn == 1 {
+                        one = [outs[0].as_mut_slice()];
+                        &mut one
+                    } else {
+                        many = outs[..gn].iter_mut().map(|v| v.as_mut_slice()).collect();
+                        &mut many
+                    };
                     simulate_block(
                         kern,
                         &layer.weights,
-                        &plan,
+                        plan,
                         &g.codes,
                         rows,
                         layer.in_quant.scale,
                         sim,
-                        &mut refs,
+                        refs,
                         wide,
                         gstats,
                         if li == 0 { l0 } else { None },
@@ -1403,6 +1427,58 @@ impl SharedNetworkPlan {
                 layer_stats: (0..depth).map(|li| stats[li * n_modes + mi].clone()).collect(),
             })
             .collect()
+    }
+
+    /// [`Self::execute_warm`] for single-mode plans, writing into
+    /// caller-owned buffers instead of allocating output tensors: `out` and
+    /// `out_wide` become the `[batch, output_dim]` flat outputs and
+    /// `layer_stats` one [`OverflowStats`] per layer in depth order. With
+    /// warm buffers and warm scratch the whole call is allocation-free —
+    /// the serve worker's zero-alloc contract (`tests/serve_alloc.rs`).
+    /// Bit-identical to [`Self::execute_warm`] (same [`net_forward_block`]
+    /// core, same traversal).
+    pub fn execute_warm_into(
+        &self,
+        x: &IntMatrix,
+        scratch: &mut NetScratch,
+        out: &mut Vec<f32>,
+        out_wide: &mut Vec<f32>,
+        layer_stats: &mut Vec<OverflowStats>,
+    ) {
+        assert_eq!(self.modes.len(), 1, "execute_warm_into serves single-mode plans");
+        assert_eq!(
+            x.cols(),
+            self.net.input_dim(),
+            "input cols {} vs network input dim {}",
+            x.cols(),
+            self.net.input_dim()
+        );
+        let batch = x.rows();
+        let c_last = self.net.output_dim();
+        let depth = self.net.layers.len();
+        out.clear();
+        out.resize(batch * c_last, 0.0);
+        out_wide.clear();
+        out_wide.resize(batch * c_last, 0.0);
+        layer_stats.clear();
+        layer_stats.resize(depth, OverflowStats::default());
+        if batch > 0 {
+            let mut o: [&mut [f32]; 1] = [out.as_mut_slice()];
+            let mut w: [&mut [f32]; 1] = [out_wide.as_mut_slice()];
+            net_forward_block(
+                &self.net,
+                &self.modes,
+                &self.kernels,
+                x,
+                0,
+                batch,
+                &mut scratch.0,
+                &mut o,
+                &mut w,
+                layer_stats,
+                None,
+            );
+        }
     }
 }
 

@@ -32,6 +32,45 @@ impl IntMatrix {
         IntMatrix { data, rows, cols }
     }
 
+    /// Empty `[0, 0]` matrix with `cap` elements of reserved storage — the
+    /// seed of a pooled request buffer that will be [`IntMatrix::reset`]
+    /// many times without reallocating.
+    pub fn with_capacity(cap: usize) -> Self {
+        IntMatrix { data: Vec::with_capacity(cap), rows: 0, cols: 0 }
+    }
+
+    /// Reshape in place to an all-zero `[rows, cols]` matrix, reusing the
+    /// existing storage. Steady-state allocation-free once the buffer has
+    /// grown to the working-set shape (the pooled-decode contract of the
+    /// serve hot path).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.data.clear();
+        self.data.resize(rows * cols, 0);
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Reshape in place to an *empty* `[0, cols]` matrix, reusing storage:
+    /// the starting state for [`IntMatrix::append_rows`] concatenation.
+    pub fn clear_rows(&mut self, cols: usize) {
+        self.data.clear();
+        self.rows = 0;
+        self.cols = cols;
+    }
+
+    /// Append every row of `other` (same `cols`); amortized allocation-free
+    /// once capacity covers the largest batch concatenated through it.
+    pub fn append_rows(&mut self, other: &IntMatrix) {
+        assert_eq!(other.cols, self.cols, "append cols {} vs {}", other.cols, self.cols);
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
+    /// Take back the flat storage (pool recycling of a spent buffer).
+    pub fn into_data(self) -> Vec<i64> {
+        self.data
+    }
+
     /// Gather nested rows into flat storage (migration helper; every row
     /// must have the same length).
     pub fn from_rows(rows: &[Vec<i64>]) -> Self {
@@ -165,6 +204,29 @@ mod tests {
         assert_eq!(m.rows_slice(2, 2), &[] as &[i64]);
         let z = IntMatrix::zeros(2, 0);
         assert_eq!(z.rows_slice(0, 2), &[] as &[i64]);
+    }
+
+    #[test]
+    fn reset_and_append_reuse_storage() {
+        let mut m = IntMatrix::with_capacity(12);
+        let cap_ptr = m.data.as_ptr();
+        m.reset(3, 4);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 4);
+        assert!(m.data().iter().all(|&v| v == 0));
+        assert_eq!(m.data.as_ptr(), cap_ptr, "reset within capacity must not reallocate");
+        m.data_mut()[11] = 9;
+        m.reset(2, 4);
+        assert_eq!(m.rows(), 2);
+        assert!(m.data().iter().all(|&v| v == 0), "reset must rezero reused storage");
+
+        m.clear_rows(2);
+        assert!(m.is_empty());
+        m.append_rows(&IntMatrix::from_rows(&[vec![1, 2]]));
+        m.append_rows(&IntMatrix::from_rows(&[vec![3, 4], vec![5, 6]]));
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.data(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(m.into_data(), vec![1, 2, 3, 4, 5, 6]);
     }
 
     #[test]

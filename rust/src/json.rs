@@ -149,18 +149,18 @@ impl Json {
         out
     }
 
+    /// Serialize into a caller-owned buffer (appended, not cleared): the
+    /// reuse surface for per-connection write buffers — same bytes as
+    /// [`Json::to_string`].
+    pub fn write_into(&self, out: &mut String) {
+        self.write(out);
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    // shortest round-trip float formatting
-                    let _ = write!(out, "{n}");
-                }
-            }
+            Json::Num(n) => write_num(out, *n),
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(v) => {
                 out.push('[');
@@ -185,6 +185,21 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// The one JSON number formatter: integral values within f64's exact-int
+/// window print without a fractional part, everything else as shortest
+/// round-trip float. Public (and generic over [`std::fmt::Write`]) so
+/// out-of-tree encoders — e.g. the serve worker writing replies straight
+/// into pooled byte buffers — produce bytes byte-identical to
+/// [`Json::to_string`].
+pub fn write_num<W: std::fmt::Write>(out: &mut W, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        // shortest round-trip float formatting
+        let _ = write!(out, "{n}");
     }
 }
 

@@ -67,18 +67,23 @@ COMMANDS:
   serve      --models NAME=FILE.json|NAME:W0xW1x..:mMnNpP[,...]
              [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 64]
              [--max-batch-rows 64] [--batch-window-ms 1]
-             [--deadline-ms 1000]
+             [--deadline-ms 1000] [--pool-retain 0]
              (long-running TCP inference service over exported or synthetic
               networks: bounded admission queue with typed overloaded /
-              deadline_exceeded rejections, deadline-aware micro-batching,
-              panic-isolated workers with automatic respawn; A2Q_FAULT=
-              panic_batch:N,delay_ms:D,cache_load injects faults; blocks
-              until a client sends {\"op\":\"shutdown\"})
+              deadline_exceeded rejections, deadline-aware micro-batching
+              with round-robin model rotation, panic-isolated workers with
+              automatic respawn; speaks line-JSON and the zero-copy binary
+              frame protocol on the same port (first byte negotiates);
+              --pool-retain 0 auto-sizes the request buffer pool;
+              A2Q_FAULT=panic_batch:N,delay_ms:D,cache_load injects
+              faults; blocks until a client sends {\"op\":\"shutdown\"})
   loadgen    --model NAME [--addr 127.0.0.1:7878] [--rps 200]
              [--duration-ms 2000] [--connections 4] [--rows 4]
-             [--deadline-ms 200] [--seed 1] [--journal LABEL] [--shutdown]
+             [--deadline-ms 200] [--seed 1] [--wire json|binary]
+             [--journal LABEL] [--shutdown]
              (open-loop load against a running a2q serve: prints a JSON
               report with p50/p99 latency, rows/s and typed shed counts;
+              --wire picks the protocol driven (default json);
               --journal LABEL records serve/LABEL_* rows to
               BENCH_accsim.json and refreshes EXPERIMENTS.md §Perf-Serve;
               --shutdown stops the server afterwards)
@@ -726,7 +731,7 @@ fn parse_model_entry(entry: &str) -> Result<(String, ModelSource)> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "artifacts", "results", "models", "addr", "workers", "queue-cap", "max-batch-rows",
-        "batch-window-ms", "deadline-ms",
+        "batch-window-ms", "deadline-ms", "pool-retain",
     ])?;
     let models: Vec<(String, ModelSource)> = args
         .str_or("models", "")
@@ -741,6 +746,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch_rows: args.num_or("max-batch-rows", 64usize)?,
         batch_window_ms: args.num_or("batch-window-ms", 1u64)?,
         default_deadline_ms: args.num_or("deadline-ms", 1000u64)?,
+        pool_retain: args.num_or("pool-retain", 0usize)?,
     };
     let fault = FaultPlan::from_env();
     if !fault.is_noop() {
@@ -764,8 +770,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_loadgen(args: &Args) -> Result<()> {
     args.check_known(&[
         "artifacts", "results", "addr", "model", "rps", "duration-ms", "connections", "rows",
-        "deadline-ms", "seed", "journal", "shutdown",
+        "deadline-ms", "seed", "wire", "journal", "shutdown",
     ])?;
+    let wire = match args.str_or("wire", "json").as_str() {
+        "json" => a2q::serve::WireFormat::Json,
+        "binary" => a2q::serve::WireFormat::Binary,
+        other => anyhow::bail!("--wire must be json or binary, got {other:?}"),
+    };
     let cfg = LoadgenConfig {
         addr: args.str_or("addr", "127.0.0.1:7878"),
         model: args.str_or("model", "synth"),
@@ -775,6 +786,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         rows_per_req: args.num_or("rows", 4usize)?,
         deadline_ms: args.num_or("deadline-ms", 200u64)?,
         seed: args.num_or("seed", 1u64)?,
+        wire,
     };
     let report = a2q::serve::run_loadgen(&cfg)?;
     let server_stats = a2q::serve::loadgen::fetch_server_stats(&cfg.addr).ok();

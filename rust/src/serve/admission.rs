@@ -9,7 +9,9 @@
 //! * **At the door** ([`AdmissionQueue::submit`]): the queue holds at most
 //!   `capacity` requests. A full queue rejects with
 //!   [`ServeError::Overloaded`] immediately — callers get backpressure in
-//!   one round trip instead of unbounded memory growth and collapse.
+//!   one round trip instead of unbounded memory growth and collapse. The
+//!   rejected request comes back to the caller (so its pooled buffer and
+//!   reply slot stay under the session's control).
 //! * **At dequeue** ([`AdmissionQueue::next_batch`]): every request
 //!   carries a deadline; requests whose deadline passed while queued are
 //!   shed with [`ServeError::DeadlineExceeded`] *before* any compute is
@@ -17,28 +19,35 @@
 //!   traffic's latency bounded: stale work is discarded, not executed.
 //!
 //! `next_batch` also does the micro-batching: it groups queued requests
-//! for the *same model* (plan-cache hash) into one batch of up to
-//! `max_rows` input rows, waiting up to a short batching window for more
-//! rows to arrive once it holds at least one request. Requests for other
-//! models stay queued in arrival order for the next call.
+//! for one model (plan-cache hash) into a batch of up to `max_rows` input
+//! rows, waiting up to a short batching window for more rows to arrive
+//! once it holds at least one request. Which model gets the batch rotates
+//! round-robin across the distinct queued hashes (in hash order), so a hot
+//! model cannot starve a cold one; within the chosen model, requests ship
+//! in arrival order.
+//!
+//! Everything here is steady-state allocation-free: requests carry pooled
+//! buffers ([`PooledBuf`]), replies travel through per-connection
+//! [`ReplySlot`]s instead of channels, and the queue swaps between two
+//! pre-sized `VecDeque`s when it filters (shed, batch extraction).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::error::ServeError;
+use super::pool::PooledBuf;
+use super::wire::WireFormat;
 use crate::accsim::IntMatrix;
-use crate::tensor::Tensor;
 
-/// A successful inference reply: the final-layer dequantized outputs for
-/// this request's rows, plus the overflow accounting of the micro-batch
-/// that carried it.
-#[derive(Clone, Debug)]
+/// A successful inference reply. The pooled buffer inside carries the
+/// complete encoded wire reply (the worker writes it before responding);
+/// the scalar fields exist for in-process callers and diagnostics.
+#[derive(Debug)]
 pub struct JobReply {
-    /// `[rows, output_dim]` dequantized outputs.
-    pub outputs: Tensor,
+    /// The request's buffer, now holding the encoded reply bytes.
+    buf: PooledBuf,
     /// Overflow events summed over every layer of the executing batch (the
     /// bit-exact `OverflowStats` contract surfaced to the client; 0 for an
     /// A2Q-constrained model at its target P).
@@ -49,33 +58,190 @@ pub struct JobReply {
     pub batch_rows: usize,
 }
 
+impl JobReply {
+    /// Take the buffer (encoded reply bytes + recyclable storage).
+    pub fn into_buf(self) -> PooledBuf {
+        self.buf
+    }
+
+    /// The encoded wire reply bytes.
+    pub fn reply_bytes(&self) -> &[u8] {
+        self.buf.reply()
+    }
+}
+
 /// What a request's submitter eventually receives.
 pub type JobOutcome = Result<JobReply, ServeError>;
 
-/// One admitted inference request.
+/// A single-slot rendezvous for one request's outcome. Each connection
+/// owns one and re-arms it per request ([`ReplySlot::sender`]) — unlike an
+/// `mpsc` channel, delivering through it never allocates.
+#[derive(Debug, Default)]
+pub struct ReplySlot {
+    slot: Mutex<Option<JobOutcome>>,
+    cv: Condvar,
+}
+
+impl ReplySlot {
+    pub fn new() -> Arc<ReplySlot> {
+        Arc::new(ReplySlot::default())
+    }
+
+    /// Arm the slot for one request. Exactly one outcome will arrive: the
+    /// sender delivers on [`ReplySender::send`], and its `Drop` fails
+    /// closed with [`ServeError::WorkerPanicked`] if the holder vanished
+    /// without responding (e.g. a worker unwound past the request).
+    pub fn sender(self: &Arc<Self>) -> ReplySender {
+        ReplySender { slot: Arc::clone(self), sent: false }
+    }
+
+    /// Block until the armed request's outcome arrives.
+    pub fn recv(&self) -> JobOutcome {
+        let mut g = self.slot.lock().unwrap();
+        loop {
+            if let Some(out) = g.take() {
+                return out;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking take (tests; a disarmed sender delivers nothing).
+    pub fn try_recv(&self) -> Option<JobOutcome> {
+        self.slot.lock().unwrap().take()
+    }
+}
+
+/// The delivering half of a [`ReplySlot`], owned by a [`JobRequest`].
+#[derive(Debug)]
+pub struct ReplySender {
+    slot: Arc<ReplySlot>,
+    sent: bool,
+}
+
+impl ReplySender {
+    fn deliver(&mut self, outcome: JobOutcome) {
+        if self.sent {
+            return;
+        }
+        self.sent = true;
+        *self.slot.slot.lock().unwrap() = Some(outcome);
+        self.slot.cv.notify_one();
+    }
+
+    /// Deliver the outcome, consuming the sender.
+    pub fn send(mut self, outcome: JobOutcome) {
+        self.deliver(outcome);
+    }
+
+    /// Disarm without delivering — used when a submit is refused and the
+    /// session reports the error itself, so a reusable slot isn't polluted
+    /// by the drop fail-safe.
+    fn disarm(mut self) {
+        self.sent = true;
+    }
+}
+
+impl Drop for ReplySender {
+    fn drop(&mut self) {
+        if !self.sent {
+            // Fail closed: a request whose sender evaporated (worker
+            // unwind, dropped batch) still gets a typed reply. batch_seq 0
+            // marks "never reached a batch / batch unknown".
+            self.deliver(Err(ServeError::WorkerPanicked { batch_seq: 0 }));
+        }
+    }
+}
+
+/// One admitted inference request, owning its pooled input/reply buffer.
+#[derive(Debug)]
 pub struct JobRequest {
-    /// Monotone request id (diagnostics).
+    /// Monotone per-connection request id (diagnostics).
     pub id: u64,
     /// Plan-cache key of the model to execute.
     pub model_hash: u64,
-    /// Input codes `[rows, input_dim]` on the model's layer-0 grid.
-    pub rows: IntMatrix,
+    /// Which encoding the reply must use.
+    pub wire: WireFormat,
+    /// Input codes `[rows, input_dim]` decoded onto the model's layer-0
+    /// grid, plus the reply byte buffer the worker will encode into.
+    buf: PooledBuf,
     /// Moment the request was accepted into the queue.
     pub enqueued: Instant,
     /// Hard deadline: shed (never execute) past this instant.
     pub deadline: Instant,
     /// Deadline budget in ms as the client stated it (error reporting).
     pub budget_ms: u64,
-    /// Where the outcome goes. Send failures are ignored: a client that
-    /// hung up forfeits its reply, nothing else.
-    pub responder: Sender<JobOutcome>,
+    responder: ReplySender,
 }
 
 impl JobRequest {
-    /// Reply to this request, consuming it.
-    pub fn respond(self, outcome: JobOutcome) {
-        let _ = self.responder.send(outcome);
+    pub fn new(
+        id: u64,
+        model_hash: u64,
+        wire: WireFormat,
+        buf: PooledBuf,
+        budget: Duration,
+        responder: ReplySender,
+    ) -> JobRequest {
+        let now = Instant::now();
+        JobRequest {
+            id,
+            model_hash,
+            wire,
+            buf,
+            enqueued: now,
+            deadline: now + budget,
+            budget_ms: budget.as_millis() as u64,
+            responder,
+        }
     }
+
+    /// The decoded input codes.
+    pub fn input(&self) -> &IntMatrix {
+        self.buf.input()
+    }
+
+    /// Input row count (what admission batching sums).
+    pub fn rows(&self) -> usize {
+        self.buf.input().rows()
+    }
+
+    /// The reply byte buffer the worker encodes the wire reply into.
+    pub fn reply_buf_mut(&mut self) -> &mut Vec<u8> {
+        self.buf.reply_mut()
+    }
+
+    /// Deliver success: the encoded reply (already in the buffer) plus its
+    /// batch accounting travel back to the session; the buffer returns to
+    /// the pool once the session has written it out.
+    pub fn respond_ok(self, overflow_events: u64, batch_seq: u64, batch_rows: usize) {
+        let JobRequest { buf, responder, .. } = self;
+        responder.send(Ok(JobReply { buf, overflow_events, batch_seq, batch_rows }));
+    }
+
+    /// Deliver a typed refusal. The pooled buffer returns to the pool here.
+    pub fn reject(self, err: ServeError) {
+        let JobRequest { responder, .. } = self;
+        responder.send(Err(err));
+        // self.buf dropped -> pool
+    }
+
+    /// Abandon without delivering (submit refused; the session reports the
+    /// error itself and will re-arm the same slot for its next request).
+    pub fn cancel(self) {
+        let JobRequest { responder, .. } = self;
+        responder.disarm();
+        // self.buf dropped -> pool
+    }
+}
+
+/// A refused [`AdmissionQueue::submit`]: the request comes back with the
+/// typed reason, leaving buffer recycling and error reporting to the
+/// caller.
+#[derive(Debug)]
+pub struct RejectedJob {
+    pub request: JobRequest,
+    pub error: ServeError,
 }
 
 /// Counters the server exposes via the `stats` op. All relaxed: they are
@@ -122,7 +288,13 @@ impl ServeStats {
 
 struct QueueState {
     queue: VecDeque<JobRequest>,
+    /// Scratch deque for in-place filtering (shed, batch extraction): the
+    /// kept requests move here, then the deques swap. Pre-sized like
+    /// `queue`, so filtering never allocates.
+    spare: VecDeque<JobRequest>,
     closed: bool,
+    /// Model hash the previous batch served — the round-robin cursor.
+    last_model: Option<u64>,
 }
 
 /// The bounded MPSC(-ish) admission queue: many connection threads submit,
@@ -135,10 +307,16 @@ pub struct AdmissionQueue {
 
 impl AdmissionQueue {
     pub fn new(capacity: usize) -> AdmissionQueue {
+        let capacity = capacity.max(1);
         AdmissionQueue {
-            inner: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
+            inner: Mutex::new(QueueState {
+                queue: VecDeque::with_capacity(capacity),
+                spare: VecDeque::with_capacity(capacity),
+                closed: false,
+                last_model: None,
+            }),
             cv: Condvar::new(),
-            capacity: capacity.max(1),
+            capacity,
         }
     }
 
@@ -146,18 +324,17 @@ impl AdmissionQueue {
         self.capacity
     }
 
-    /// Admit a request, or reject it typed — full queue and draining
+    /// Admit a request, or hand it back typed — full queue and draining
     /// server are the caller's to report, the request never enters.
-    pub fn submit(&self, req: JobRequest) -> Result<(), ServeError> {
+    pub fn submit(&self, req: JobRequest) -> Result<(), RejectedJob> {
         let mut st = self.inner.lock().unwrap();
         if st.closed {
-            return Err(ServeError::ShuttingDown);
+            return Err(RejectedJob { request: req, error: ServeError::ShuttingDown });
         }
         if st.queue.len() >= self.capacity {
-            return Err(ServeError::Overloaded {
-                queued: st.queue.len(),
-                capacity: self.capacity,
-            });
+            let error =
+                ServeError::Overloaded { queued: st.queue.len(), capacity: self.capacity };
+            return Err(RejectedJob { request: req, error });
         }
         st.queue.push_back(req);
         drop(st);
@@ -177,146 +354,159 @@ impl AdmissionQueue {
     /// Close the queue: all queued requests are rejected `ShuttingDown`,
     /// subsequent submits fail, and blocked workers wake up to exit.
     pub fn close(&self, stats: &ServeStats) {
-        let drained: Vec<JobRequest> = {
+        {
             let mut st = self.inner.lock().unwrap();
             st.closed = true;
-            st.queue.drain(..).collect()
-        };
-        for req in drained {
-            req.respond(Err(ServeError::ShuttingDown));
+            // Slot delivery is a non-blocking store+notify, so rejecting
+            // in-lock is fine and keeps the drain atomic.
+            while let Some(req) = st.queue.pop_front() {
+                req.reject(ServeError::ShuttingDown);
+            }
         }
         let _ = stats; // drained requests were admitted; completion stats untouched
         self.cv.notify_all();
     }
 
     /// Shed every queued request whose deadline has passed, replying
-    /// `DeadlineExceeded` to each. Must be called with the lock held;
-    /// replies are sent after collecting so the lock isn't held across
-    /// sends — here sends are channel pushes (non-blocking), so in-lock is
-    /// acceptable and keeps the scan atomic.
+    /// `DeadlineExceeded` to each. Runs under the queue lock; slot
+    /// delivery is non-blocking, and the double-buffer swap keeps the
+    /// filter allocation-free.
     fn shed_expired(st: &mut QueueState, now: Instant, stats: &ServeStats) {
-        let mut kept = VecDeque::with_capacity(st.queue.len());
-        for req in st.queue.drain(..) {
+        if st.queue.iter().all(|r| r.deadline > now) {
+            return;
+        }
+        debug_assert!(st.spare.is_empty());
+        while let Some(req) = st.queue.pop_front() {
             if req.deadline <= now {
                 stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
                 let waited_ms = now.duration_since(req.enqueued).as_millis() as u64;
                 let budget_ms = req.budget_ms;
-                req.respond(Err(ServeError::DeadlineExceeded { waited_ms, budget_ms }));
+                req.reject(ServeError::DeadlineExceeded { waited_ms, budget_ms });
             } else {
-                kept.push_back(req);
+                st.spare.push_back(req);
             }
         }
-        st.queue = kept;
+        std::mem::swap(&mut st.queue, &mut st.spare);
     }
 
-    /// Dequeue the next deadline-aware micro-batch: requests sharing the
-    /// oldest queued request's model, up to `max_rows` total input rows.
-    /// Waits up to `window` after the first request is available to let a
-    /// fuller batch form (skipped when the batch is already full or the
-    /// queue is closing). Returns the global monotone 1-based batch
-    /// sequence number alongside the batch (the unit fault injection and
+    /// The model hash the next batch should serve: the smallest queued
+    /// hash strictly greater than the last served one, wrapping to the
+    /// smallest overall — a round-robin walk over whatever distinct models
+    /// are queued, in hash order. One O(n) scan, no allocation.
+    fn rotation_head(st: &QueueState) -> Option<u64> {
+        let mut min_all: Option<u64> = None;
+        let mut next_above: Option<u64> = None;
+        for r in st.queue.iter() {
+            let h = r.model_hash;
+            min_all = Some(min_all.map_or(h, |m| m.min(h)));
+            if let Some(last) = st.last_model {
+                if h > last {
+                    next_above = Some(next_above.map_or(h, |m| m.min(h)));
+                }
+            }
+        }
+        next_above.or(min_all)
+    }
+
+    /// Dequeue the next deadline-aware micro-batch into `batch` (cleared
+    /// first): requests sharing the rotation-head model, up to `max_rows`
+    /// total input rows. Waits up to `window` after the first request is
+    /// available to let a fuller batch form (skipped when the batch is
+    /// already full or the queue is closing). Returns the global monotone
+    /// 1-based batch sequence number (the unit fault injection and
     /// `WorkerPanicked` reporting speak in), or `None` only when the queue
     /// is closed and drained — the worker's exit signal.
+    ///
+    /// The out-parameter batch (workers keep one sized to the queue
+    /// capacity) makes the dequeue path allocation-free in steady state.
     pub fn next_batch(
         &self,
         max_rows: usize,
         window: Duration,
         stats: &ServeStats,
-    ) -> Option<(u64, Vec<JobRequest>)> {
+        batch: &mut Vec<JobRequest>,
+    ) -> Option<u64> {
+        batch.clear();
         let max_rows = max_rows.max(1);
         let mut st = self.inner.lock().unwrap();
         loop {
-            Self::shed_expired(&mut st, Instant::now(), stats);
-            if !st.queue.is_empty() {
-                break;
-            }
-            if st.closed {
-                return None;
-            }
-            // Bounded wait so periodic expiry sheds don't depend on new
-            // arrivals to wake us.
-            let (guard, _timeout) = self.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
-            st = guard;
-        }
-        // Give the batch a short window to fill (only helpful while the
-        // queued rows for this model are below the batch size).
-        let head_model = st.queue.front().map(|r| r.model_hash).unwrap();
-        let mut queued_rows: usize = st
-            .queue
-            .iter()
-            .filter(|r| r.model_hash == head_model)
-            .map(|r| r.rows.rows())
-            .sum();
-        if queued_rows < max_rows && !st.closed && !window.is_zero() {
-            let deadline = Instant::now() + window;
-            while queued_rows < max_rows && !st.closed {
-                let now = Instant::now();
-                if now >= deadline {
+            loop {
+                Self::shed_expired(&mut st, Instant::now(), stats);
+                if !st.queue.is_empty() {
                     break;
                 }
-                let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                if st.closed {
+                    return None;
+                }
+                // Bounded wait so periodic expiry sheds don't depend on
+                // new arrivals to wake us.
+                let (guard, _timeout) =
+                    self.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
                 st = guard;
-                Self::shed_expired(&mut st, Instant::now(), stats);
-                queued_rows = st
-                    .queue
+            }
+            let head_model = Self::rotation_head(&st).expect("non-empty queue has a head");
+            // Give the batch a short window to fill (only helpful while
+            // the queued rows for this model are below the batch size).
+            let model_rows = |st: &QueueState| -> usize {
+                st.queue
                     .iter()
                     .filter(|r| r.model_hash == head_model)
-                    .map(|r| r.rows.rows())
-                    .sum();
+                    .map(|r| r.rows())
+                    .sum()
+            };
+            let mut queued_rows = model_rows(&st);
+            if queued_rows < max_rows && !st.closed && !window.is_zero() {
+                let fill_deadline = Instant::now() + window;
+                while queued_rows < max_rows && !st.closed {
+                    let now = Instant::now();
+                    if now >= fill_deadline {
+                        break;
+                    }
+                    let (guard, _timeout) =
+                        self.cv.wait_timeout(st, fill_deadline - now).unwrap();
+                    st = guard;
+                    Self::shed_expired(&mut st, Instant::now(), stats);
+                    queued_rows = model_rows(&st);
+                }
+                Self::shed_expired(&mut st, Instant::now(), stats);
             }
-            Self::shed_expired(&mut st, Instant::now(), stats);
-        }
-        // Collect same-model requests in arrival order up to max_rows;
-        // everything else keeps its position for the next call. The window
-        // wait may have shed the whole queue — loop from the top then.
-        if st.queue.is_empty() {
-            drop(st);
-            return self.next_batch(max_rows, window, stats);
-        }
-        let head_model = st.queue.front().map(|r| r.model_hash).unwrap();
-        let mut batch = Vec::new();
-        let mut rows = 0usize;
-        let mut rest = VecDeque::with_capacity(st.queue.len());
-        for req in st.queue.drain(..) {
-            let take = req.model_hash == head_model
-                && (batch.is_empty() || rows + req.rows.rows() <= max_rows);
-            if take {
-                rows += req.rows.rows();
-                batch.push(req);
-            } else {
-                rest.push_back(req);
+            // The window wait may have shed the head model (or the whole
+            // queue) — re-pick from the top then.
+            if !st.queue.iter().any(|r| r.model_hash == head_model) {
+                continue;
             }
+            // Extract same-model requests in arrival order up to max_rows;
+            // everything else keeps its position for the next call.
+            debug_assert!(st.spare.is_empty());
+            let mut rows = 0usize;
+            while let Some(req) = st.queue.pop_front() {
+                let take = req.model_hash == head_model
+                    && (batch.is_empty() || rows + req.rows() <= max_rows);
+                if take {
+                    rows += req.rows();
+                    batch.push(req);
+                } else {
+                    st.spare.push_back(req);
+                }
+            }
+            std::mem::swap(&mut st.queue, &mut st.spare);
+            st.last_model = Some(head_model);
+            let seq = stats.batches.fetch_add(1, Ordering::Relaxed) + 1;
+            stats.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+            return Some(seq);
         }
-        st.queue = rest;
-        let seq = stats.batches.fetch_add(1, Ordering::Relaxed) + 1;
-        stats.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
-        Some((seq, batch))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
 
-    fn req(
-        id: u64,
-        model: u64,
-        rows: usize,
-        budget: Duration,
-    ) -> (JobRequest, mpsc::Receiver<JobOutcome>) {
-        let (tx, rx) = mpsc::channel();
-        let now = Instant::now();
-        let r = JobRequest {
-            id,
-            model_hash: model,
-            rows: IntMatrix::zeros(rows, 4),
-            enqueued: now,
-            deadline: now + budget,
-            budget_ms: budget.as_millis() as u64,
-            responder: tx,
-        };
-        (r, rx)
+    fn req(id: u64, model: u64, rows: usize, budget: Duration) -> (JobRequest, Arc<ReplySlot>) {
+        let slot = ReplySlot::new();
+        let buf = PooledBuf::detached(IntMatrix::zeros(rows, 4));
+        let r = JobRequest::new(id, model, WireFormat::Json, buf, budget, slot.sender());
+        (r, slot)
     }
 
     const LONG: Duration = Duration::from_secs(60);
@@ -327,14 +517,19 @@ mod tests {
         let stats = ServeStats::default();
         let (a, _ra) = req(1, 7, 1, LONG);
         let (b, _rb) = req(2, 7, 1, LONG);
-        let (c, _rc) = req(3, 7, 1, LONG);
+        let (c, rc) = req(3, 7, 1, LONG);
         q.submit(a).unwrap();
         q.submit(b).unwrap();
-        let err = q.submit(c).unwrap_err();
-        assert_eq!(err, ServeError::Overloaded { queued: 2, capacity: 2 });
-        assert_eq!(err.code(), "overloaded");
+        let rejected = q.submit(c).unwrap_err();
+        assert_eq!(rejected.error, ServeError::Overloaded { queued: 2, capacity: 2 });
+        assert_eq!(rejected.error.code(), "overloaded");
+        // The refused request comes back intact; cancelling it neither
+        // replies nor loses the buffer.
+        rejected.request.cancel();
+        assert!(rc.try_recv().is_none(), "cancel() must not manufacture a reply");
         // The two admitted requests still come out as one micro-batch.
-        let (seq, batch) = q.next_batch(8, Duration::ZERO, &stats).unwrap();
+        let mut batch = Vec::new();
+        let seq = q.next_batch(8, Duration::ZERO, &stats, &mut batch).unwrap();
         assert_eq!(seq, 1, "batch sequence numbers are 1-based and monotone");
         assert_eq!(batch.len(), 2);
         assert_eq!(batch[0].id, 1);
@@ -348,10 +543,11 @@ mod tests {
         let (b, _rb) = req(2, 7, 1, LONG);
         q.submit(a).unwrap();
         q.submit(b).unwrap();
-        let (_, batch) = q.next_batch(8, Duration::ZERO, &stats).unwrap();
+        let mut batch = Vec::new();
+        q.next_batch(8, Duration::ZERO, &stats, &mut batch).unwrap();
         assert_eq!(batch.len(), 1, "expired request must not reach a worker");
         assert_eq!(batch[0].id, 2);
-        match ra.recv().unwrap() {
+        match ra.recv() {
             Err(ServeError::DeadlineExceeded { budget_ms, .. }) => assert_eq!(budget_ms, 0),
             other => panic!("expected DeadlineExceeded, got {other:?}"),
         }
@@ -362,25 +558,72 @@ mod tests {
     fn batches_group_by_model_and_respect_max_rows() {
         let q = AdmissionQueue::new(16);
         let stats = ServeStats::default();
+        let mut slots = Vec::new();
         for (id, model, rows) in [(1, 7, 3), (2, 9, 1), (3, 7, 3), (4, 7, 3)] {
-            let (r, rx) = req(id, model, rows, LONG);
-            std::mem::forget(rx); // keep responders alive without binding names
+            let (r, slot) = req(id, model, rows, LONG);
+            slots.push(slot);
             q.submit(r).unwrap();
         }
-        // Model 7 head: takes ids 1 and 3 (3+3 rows), id 4 would exceed 6.
-        let (_, batch) = q.next_batch(6, Duration::ZERO, &stats).unwrap();
+        let mut batch = Vec::new();
+        // Model 7 is first in rotation: takes ids 1 and 3 (3+3 rows), id 4
+        // would exceed 6.
+        q.next_batch(6, Duration::ZERO, &stats, &mut batch).unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
-        // Model 9 is now the head and batches alone.
-        let (_, batch) = q.next_batch(6, Duration::ZERO, &stats).unwrap();
+        batch.drain(..).for_each(JobRequest::cancel);
+        // Rotation moves on to model 9.
+        q.next_batch(6, Duration::ZERO, &stats, &mut batch).unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
-        let (seq, batch) = q.next_batch(6, Duration::ZERO, &stats).unwrap();
+        batch.drain(..).for_each(JobRequest::cancel);
+        let seq = q.next_batch(6, Duration::ZERO, &stats, &mut batch).unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
         assert_eq!(seq, 3);
+        batch.drain(..).for_each(JobRequest::cancel);
         // An oversized single request still ships alone rather than starving.
         let (big, _rbig) = req(9, 7, 50, LONG);
         q.submit(big).unwrap();
-        let (_, batch) = q.next_batch(6, Duration::ZERO, &stats).unwrap();
+        q.next_batch(6, Duration::ZERO, &stats, &mut batch).unwrap();
         assert_eq!(batch[0].id, 9);
+    }
+
+    #[test]
+    fn round_robin_interleaves_a_hot_model_with_a_cold_one() {
+        let q = AdmissionQueue::new(16);
+        let stats = ServeStats::default();
+        let (hot, cold) = (5u64, 9u64);
+        let mut slots = Vec::new();
+        // Hot model floods the queue ahead of the cold model's requests.
+        for (id, model) in [(1, hot), (2, hot), (3, hot), (4, cold), (5, cold)] {
+            let (r, slot) = req(id, model, 1, LONG);
+            slots.push(slot);
+            q.submit(r).unwrap();
+        }
+        let mut order = Vec::new();
+        let mut batch = Vec::new();
+        for _ in 0..5 {
+            q.next_batch(1, Duration::ZERO, &stats, &mut batch).unwrap();
+            assert_eq!(batch.len(), 1);
+            order.push(batch[0].id);
+            batch.drain(..).for_each(JobRequest::cancel);
+        }
+        // Head-of-line draining would serve 1,2,3 before the cold model
+        // ever ran; rotation alternates models every batch.
+        assert_eq!(order, vec![1, 4, 2, 5, 3], "models must interleave round-robin");
+    }
+
+    #[test]
+    fn dropped_requests_fail_closed_and_cancel_disarms() {
+        let (r, slot) = req(1, 7, 1, LONG);
+        drop(r); // e.g. a worker unwound while holding the batch
+        match slot.recv() {
+            Err(ServeError::WorkerPanicked { batch_seq }) => assert_eq!(batch_seq, 0),
+            other => panic!("expected the fail-closed WorkerPanicked, got {other:?}"),
+        }
+        // The same slot re-arms cleanly afterwards, and cancel() disarms
+        // the fail-safe so the next request sees a clean slot.
+        let buf = PooledBuf::detached(IntMatrix::zeros(1, 4));
+        let r = JobRequest::new(2, 7, WireFormat::Json, buf, LONG, slot.sender());
+        r.cancel();
+        assert!(slot.try_recv().is_none());
     }
 
     #[test]
@@ -390,11 +633,12 @@ mod tests {
         let (a, ra) = req(1, 7, 1, LONG);
         q.submit(a).unwrap();
         q.close(&stats);
-        assert_eq!(ra.recv().unwrap().unwrap_err(), ServeError::ShuttingDown);
+        assert_eq!(ra.recv().unwrap_err(), ServeError::ShuttingDown);
         let (b, _rb) = req(2, 7, 1, LONG);
-        assert_eq!(q.submit(b).unwrap_err(), ServeError::ShuttingDown);
+        assert_eq!(q.submit(b).unwrap_err().error, ServeError::ShuttingDown);
         // A drained closed queue returns None (worker exit signal) without
         // blocking.
-        assert!(q.next_batch(4, Duration::ZERO, &stats).is_none());
+        let mut batch = Vec::new();
+        assert!(q.next_batch(4, Duration::ZERO, &stats, &mut batch).is_none());
     }
 }

@@ -1,31 +1,41 @@
 //! Micro-batch execution and the panic-isolated batch worker.
 //!
-//! [`execute_micro_batch`] is the pure serving core: concatenate every
-//! admitted request's rows into one batch, run it through
-//! [`SharedNetworkPlan::execute_warm`] at the plan's efficient batch size,
-//! and split the outputs back per request. It is deliberately free of
-//! threads, queues and faults so the property test can pin it bit-identical
-//! to per-request [`NetworkPlan::execute`][crate::accsim::NetworkPlan]
-//! across batch compositions.
+//! [`run_worker`] is the serve hot path's compute stage, built to be
+//! steady-state allocation-free: it owns a [`WorkerScratch`] (engine
+//! scratch, a concatenation matrix, output/stat buffers, and the batch
+//! vector `next_batch` fills), executes each micro-batch through
+//! [`SharedNetworkPlan::execute_warm_into`], and encodes every request's
+//! complete wire reply straight into that request's pooled byte buffer
+//! before responding. Single-request batches (the common case at low
+//! concurrency) execute directly out of the request's pooled `IntMatrix` —
+//! no concatenation copy at all.
 //!
-//! [`run_worker`] wraps that core in the server's fault boundary: compute
-//! runs under `catch_unwind`, so a panic — injected or real — rejects
-//! exactly the requests of the poisoned batch with a typed
+//! Compute runs under `catch_unwind`, so a panic — injected or real —
+//! rejects exactly the requests of the poisoned batch with a typed
 //! [`ServeError::WorkerPanicked`] and then re-raises to kill the worker
 //! thread. The supervisor (in [`super::session`]) observes the death and
 //! respawns a fresh worker with fresh scratch; queued requests for other
-//! batches never notice.
+//! batches never notice. Requests still held by the unwinding batch are
+//! also covered by the reply-slot fail-safe (their drop delivers a typed
+//! error), so no client ever hangs.
+//!
+//! [`execute_micro_batch`] remains as the thread-free serving core the
+//! property test pins bit-identical to per-request
+//! [`NetworkPlan::execute`][crate::accsim::NetworkPlan] across batch
+//! compositions; it now runs on the same `execute_warm_into` path the
+//! worker uses, so the pin covers the production code.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::admission::{AdmissionQueue, JobReply, ServeStats};
+use super::admission::{AdmissionQueue, JobRequest, ServeStats};
 use super::cache::PlanCache;
 use super::error::ServeError;
 use super::fault::FaultPlan;
-use crate::accsim::{IntMatrix, NetScratch, SharedNetworkPlan};
+use super::wire;
+use crate::accsim::{IntMatrix, NetScratch, OverflowStats, SharedNetworkPlan};
 use crate::tensor::Tensor;
 
 /// The result of one micro-batch execution, split back per request.
@@ -42,7 +52,7 @@ pub struct MicroBatchOutcome {
 /// split the dequantized outputs back per input. Bit-identical to executing
 /// each input alone: the engine parallelizes over rows with per-row
 /// accumulation order fixed, so batch composition is invisible to both
-/// outputs and [`OverflowStats`][crate::accsim::OverflowStats] sums.
+/// outputs and [`OverflowStats`] sums.
 pub fn execute_micro_batch(
     plan: &SharedNetworkPlan,
     inputs: &[&IntMatrix],
@@ -50,17 +60,18 @@ pub fn execute_micro_batch(
 ) -> MicroBatchOutcome {
     let cols = plan.net().input_dim();
     let total_rows: usize = inputs.iter().map(|x| x.rows()).sum();
-    let mut flat = Vec::with_capacity(total_rows * cols);
+    let mut batch = IntMatrix::with_capacity(total_rows * cols);
+    batch.clear_rows(cols);
     for x in inputs {
         assert_eq!(x.cols(), cols, "request width {} vs model input dim {cols}", x.cols());
-        flat.extend_from_slice(x.data());
+        batch.append_rows(x);
     }
-    let batch = IntMatrix::from_flat(total_rows, cols, flat);
-    let stats = plan.execute_warm(&batch, scratch);
-    let mode = &stats[0]; // serving plans carry exactly one AccMode
-    let overflow_events: u64 = mode.layer_stats.iter().map(|s| s.overflow_events).sum();
+    let mut out = Vec::new();
+    let mut wide = Vec::new();
+    let mut layer_stats = Vec::new();
+    plan.execute_warm_into(&batch, scratch, &mut out, &mut wide, &mut layer_stats);
+    let overflow_events: u64 = layer_stats.iter().map(|s| s.overflow_events).sum();
     let out_dim = plan.net().output_dim();
-    let out = mode.out.data();
     let mut per_request = Vec::with_capacity(inputs.len());
     let mut row = 0usize;
     for x in inputs {
@@ -81,6 +92,35 @@ pub struct BatchPolicy {
     pub window: Duration,
 }
 
+/// Everything a batch worker reuses across micro-batches: engine scratch,
+/// the multi-request concatenation matrix, the execute outputs, and the
+/// batch vector the admission queue fills. One warmup batch per model
+/// shape grows these to the working set; after that the loop allocates
+/// nothing.
+pub struct WorkerScratch {
+    net: NetScratch,
+    concat: IntMatrix,
+    out: Vec<f32>,
+    wide: Vec<f32>,
+    layer_stats: Vec<OverflowStats>,
+    batch: Vec<JobRequest>,
+}
+
+impl WorkerScratch {
+    /// Scratch sized for a queue: the batch vector can hold every queued
+    /// request without growing.
+    pub fn for_queue(queue: &AdmissionQueue) -> WorkerScratch {
+        WorkerScratch {
+            net: NetScratch::default(),
+            concat: IntMatrix::with_capacity(0),
+            out: Vec::new(),
+            wide: Vec::new(),
+            layer_stats: Vec::new(),
+            batch: Vec::with_capacity(queue.capacity()),
+        }
+    }
+}
+
 /// The batch-worker loop. Runs until [`AdmissionQueue::close`] drains the
 /// queue; panics propagate out (by design) after every request of the
 /// poisoned batch has been rejected with `WorkerPanicked`.
@@ -91,8 +131,12 @@ pub fn run_worker(
     policy: BatchPolicy,
     fault: FaultPlan,
 ) {
-    let mut scratch = NetScratch::default();
-    while let Some((seq, batch)) = queue.next_batch(policy.max_rows, policy.window, &stats) {
+    let mut ws = WorkerScratch::for_queue(&queue);
+    loop {
+        let WorkerScratch { net, concat, out, wide, layer_stats, batch } = &mut ws;
+        let Some(seq) = queue.next_batch(policy.max_rows, policy.window, &stats, batch) else {
+            return;
+        };
         if let Some(ms) = fault.delay_ms {
             std::thread::sleep(Duration::from_millis(ms));
         }
@@ -101,38 +145,67 @@ pub fn run_worker(
             Err(e) => {
                 // A load failure poisons only this batch, typed — the
                 // worker itself keeps draining.
-                for req in batch {
-                    req.respond(Err(e.clone()));
+                for req in batch.drain(..) {
+                    req.reject(e.clone());
                 }
                 continue;
             }
         };
-        let inputs: Vec<&IntMatrix> = batch.iter().map(|r| &r.rows).collect();
+        let cols = plan.net().input_dim();
         let inject = fault.panic_batch == Some(seq);
-        let outcome = catch_unwind(AssertUnwindSafe(|| {
-            if inject {
-                panic!("injected fault: panic_batch {seq}");
-            }
-            execute_micro_batch(&plan, &inputs, &mut scratch)
-        }));
-        drop(inputs);
+        let outcome = {
+            let batch_view: &[JobRequest] = batch;
+            catch_unwind(AssertUnwindSafe(|| {
+                if inject {
+                    panic!("injected fault: panic_batch {seq}");
+                }
+                // Single-request batches execute straight out of the pooled
+                // request buffer; multi-request batches concatenate into
+                // the reusable matrix.
+                let x: &IntMatrix = if batch_view.len() == 1 {
+                    batch_view[0].input()
+                } else {
+                    concat.clear_rows(cols);
+                    for req in batch_view {
+                        concat.append_rows(req.input());
+                    }
+                    concat
+                };
+                plan.execute_warm_into(x, net, out, wide, layer_stats);
+                x.rows()
+            }))
+        };
         match outcome {
-            Ok(result) => {
-                let total_rows = result.total_rows;
-                for (req, outputs) in batch.into_iter().zip(result.per_request) {
-                    req.respond(Ok(JobReply {
-                        outputs,
-                        overflow_events: result.overflow_events,
-                        batch_seq: seq,
-                        batch_rows: total_rows,
-                    }));
+            Ok(total_rows) => {
+                let overflow_events: u64 =
+                    layer_stats.iter().map(|s| s.overflow_events).sum();
+                let out_dim = plan.net().output_dim();
+                let mut row = 0usize;
+                for mut req in batch.drain(..) {
+                    let rows = req.rows();
+                    let slice = &out[row * out_dim..(row + rows) * out_dim];
+                    row += rows;
+                    // The worker encodes the complete wire reply into the
+                    // request's pooled byte buffer; the session only
+                    // writes bytes to the socket.
+                    wire::encode_infer_ok(
+                        req.wire,
+                        req.reply_buf_mut(),
+                        slice,
+                        rows,
+                        out_dim,
+                        overflow_events,
+                        seq,
+                        total_rows,
+                    );
+                    req.respond_ok(overflow_events, seq, total_rows);
                     stats.completed.fetch_add(1, Ordering::Relaxed);
                 }
             }
             Err(payload) => {
                 stats.worker_panics.fetch_add(1, Ordering::Relaxed);
-                for req in batch {
-                    req.respond(Err(ServeError::WorkerPanicked { batch_seq: seq }));
+                for req in batch.drain(..) {
+                    req.reject(ServeError::WorkerPanicked { batch_seq: seq });
                 }
                 // Kill this worker: its scratch may be mid-mutation. The
                 // supervisor respawns a clean replacement.
@@ -187,5 +260,23 @@ mod tests {
         for (a, b) in batched.per_request.iter().zip(&again.per_request) {
             assert_eq!(a.data(), b.data());
         }
+    }
+
+    #[test]
+    fn execute_warm_into_matches_execute_warm() {
+        let plan = plan();
+        let mut rng = Rng::new(9);
+        let x = inputs(&mut rng, 6, 10, 15);
+        let mut scratch = NetScratch::default();
+        let baseline = plan.execute_warm(&x, &mut scratch);
+        let (mut out, mut wide, mut ls) = (Vec::new(), Vec::new(), Vec::new());
+        plan.execute_warm_into(&x, &mut scratch, &mut out, &mut wide, &mut ls);
+        assert_eq!(baseline[0].out.data(), &out[..], "outputs must match the Tensor path");
+        assert_eq!(baseline[0].out_wide.data(), &wide[..]);
+        assert_eq!(baseline[0].layer_stats, ls, "per-layer OverflowStats must match");
+        // Warm reuse through the same buffers is deterministic.
+        plan.execute_warm_into(&x, &mut scratch, &mut out, &mut wide, &mut ls);
+        assert_eq!(baseline[0].out.data(), &out[..]);
+        assert_eq!(baseline[0].layer_stats, ls);
     }
 }

@@ -12,7 +12,11 @@
 //!
 //! Keys are [`fnv1a64`] hashes of the model's identity — the synth spec
 //! string or the model file's bytes — so the wire protocol can address
-//! models by stable hash as well as by registered name.
+//! models by stable hash as well as by registered name. The binary wire
+//! format leans on this: its request header carries the hash directly
+//! (`model_hash`), so a binary client resolves a name once via the JSON
+//! `model_info` op and then addresses the model hash-only on the data
+//! plane — no string lookup on the hot path.
 
 use std::collections::HashMap;
 use std::path::PathBuf;

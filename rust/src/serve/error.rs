@@ -42,6 +42,37 @@ impl ServeError {
             ServeError::ShuttingDown => "shutting_down",
         }
     }
+
+    /// Stable numeric tag of the binary wire protocol's reply `status`
+    /// byte (0 means success, so tags start at 1). As frozen as
+    /// [`ServeError::code`]: renumbering one is a protocol break.
+    pub fn tag(&self) -> u8 {
+        match self {
+            ServeError::Overloaded { .. } => 1,
+            ServeError::DeadlineExceeded { .. } => 2,
+            ServeError::WorkerPanicked { .. } => 3,
+            ServeError::UnknownModel { .. } => 4,
+            ServeError::BadRequest { .. } => 5,
+            ServeError::LoadFailed { .. } => 6,
+            ServeError::ShuttingDown => 7,
+        }
+    }
+
+    /// The [`ServeError::code`] string a binary reply's `status` tag maps
+    /// to (`None` for 0/unknown): how binary clients — `a2q loadgen
+    /// --wire binary` — classify rejections identically to JSON clients.
+    pub fn code_for_tag(tag: u8) -> Option<&'static str> {
+        Some(match tag {
+            1 => "overloaded",
+            2 => "deadline_exceeded",
+            3 => "worker_panicked",
+            4 => "unknown_model",
+            5 => "bad_request",
+            6 => "load_failed",
+            7 => "shutting_down",
+            _ => return None,
+        })
+    }
 }
 
 impl std::fmt::Display for ServeError {
@@ -88,5 +119,27 @@ mod tests {
             assert!(!e.to_string().is_empty());
         }
         assert!(ServeError::Overloaded { queued: 8, capacity: 8 }.to_string().contains("8/8"));
+    }
+
+    #[test]
+    fn binary_tags_round_trip_to_codes() {
+        let all = vec![
+            ServeError::Overloaded { queued: 1, capacity: 1 },
+            ServeError::DeadlineExceeded { waited_ms: 1, budget_ms: 1 },
+            ServeError::WorkerPanicked { batch_seq: 1 },
+            ServeError::UnknownModel { name: "m".into() },
+            ServeError::BadRequest { reason: "r".into() },
+            ServeError::LoadFailed { model: "m".into(), reason: "r".into() },
+            ServeError::ShuttingDown,
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &all {
+            let tag = e.tag();
+            assert!(tag >= 1, "0 is the success status");
+            assert!(seen.insert(tag), "duplicate tag {tag}");
+            assert_eq!(ServeError::code_for_tag(tag), Some(e.code()));
+        }
+        assert_eq!(ServeError::code_for_tag(0), None);
+        assert_eq!(ServeError::code_for_tag(200), None);
     }
 }

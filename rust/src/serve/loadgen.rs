@@ -16,12 +16,23 @@
 //! the contract broke: connection resets, malformed replies, unexpected
 //! codes). Latency percentiles are computed over served requests only —
 //! shed requests are availability events, not latency samples.
+//!
+//! The generator speaks either wire format ([`LoadgenConfig::wire`],
+//! `a2q loadgen --wire json|binary`): JSON requests exercise the original
+//! line protocol, binary requests the zero-copy frame protocol. Both
+//! classify replies through the same typed-code table (binary status tags
+//! map through [`ServeError::code_for_tag`]), so the report is directly
+//! comparable across formats — that comparison is what the CI serve-smoke
+//! job gates on (`serve/wire_binary_rows_per_s` vs
+//! `serve/wire_json_rows_per_s`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::error::ServeError;
+use super::wire::{self, WireFormat};
 use crate::json::Json;
 use crate::perf::{self, BenchRecord};
 use crate::rng::Rng;
@@ -45,6 +56,8 @@ pub struct LoadgenConfig {
     pub deadline_ms: u64,
     /// Input-generation seed (deterministic per connection).
     pub seed: u64,
+    /// Which wire protocol to drive the server with.
+    pub wire: WireFormat,
 }
 
 impl Default for LoadgenConfig {
@@ -58,6 +71,7 @@ impl Default for LoadgenConfig {
             rows_per_req: 4,
             deadline_ms: 200,
             seed: 1,
+            wire: WireFormat::Json,
         }
     }
 }
@@ -107,8 +121,10 @@ fn exchange(
     Ok(Json::parse(&reply)?)
 }
 
-/// Ask the server for a model's grid so inputs can be generated on it.
-fn model_info(addr: &str, model: &str) -> anyhow::Result<(usize, i64, i64)> {
+/// Ask the server for a model's grid (and plan-cache hash) so inputs can
+/// be generated on it. Metadata always travels over JSON — binary clients
+/// resolve once here, then address the model by hash on the data plane.
+fn model_info(addr: &str, model: &str) -> anyhow::Result<(usize, i64, i64, u64)> {
     let mut stream = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let req = Json::obj(vec![("op", Json::str("model_info")), ("model", Json::str(model))]);
@@ -122,7 +138,8 @@ fn model_info(addr: &str, model: &str) -> anyhow::Result<(usize, i64, i64)> {
     let k = reply.get("input_dim")?.as_usize()?;
     let lo = reply.get("code_lo")?.as_f64()? as i64;
     let hi = reply.get("code_hi")?.as_f64()? as i64;
-    Ok((k, lo, hi))
+    let hash: u64 = reply.get("hash")?.as_str()?.parse()?;
+    Ok((k, lo, hi, hash))
 }
 
 fn reply_line(v: &Json) -> String {
@@ -150,7 +167,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
     anyhow::ensure!(cfg.rps > 0.0, "rps must be positive");
     anyhow::ensure!(cfg.rows_per_req > 0, "rows_per_req must be positive");
     let connections = cfg.connections.max(1);
-    let (k, lo, hi) = model_info(&cfg.addr, &cfg.model)?;
+    let (k, lo, hi, hash) = model_info(&cfg.addr, &cfg.model)?;
     let duration = Duration::from_millis(cfg.duration_ms.max(1));
     let per_conn_interval = Duration::from_secs_f64(connections as f64 / cfg.rps);
     let per_conn_requests =
@@ -196,6 +213,11 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
             let mut reader = BufReader::new(clone);
             let mut rng = Rng::new(cfg.seed ^ (conn_id as u64).wrapping_mul(0x9e37_79b9));
             let span = (hi - lo + 1).max(1) as usize;
+            // Binary-path reusable buffers: codes, the request frame and
+            // the reply scratch amortize to zero allocation per request.
+            let mut codes: Vec<i64> = Vec::with_capacity(cfg.rows_per_req * k);
+            let mut frame: Vec<u8> = Vec::new();
+            let mut scratch: Vec<u8> = Vec::new();
             let start = Instant::now();
             for i in 0..per_conn_requests {
                 // Open loop: request i fires at its scheduled instant no
@@ -205,40 +227,81 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
                 if due > now {
                     std::thread::sleep(due - now);
                 }
-                let rows: Vec<Json> = (0..cfg.rows_per_req)
-                    .map(|_| {
-                        let codes = (0..k).map(|_| lo + rng.below(span) as i64);
-                        Json::Arr(codes.map(|c| Json::num(c as f64)).collect())
-                    })
-                    .collect();
-                let req = Json::obj(vec![
-                    ("op", Json::str("infer")),
-                    ("model", Json::str(cfg.model.as_str())),
-                    ("rows", Json::arr(rows)),
-                    ("deadline_ms", Json::num(cfg.deadline_ms as f64)),
-                ]);
-                tally.sent += 1;
-                let sent_at = Instant::now();
-                match exchange(&mut stream, &mut reader, &reply_line(&req)) {
-                    Ok(reply) => {
-                        let ok = reply.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
-                        if ok {
-                            tally.ok += 1;
-                            tally.latencies_ms.push(sent_at.elapsed().as_secs_f64() * 1e3);
-                            tally.overflow_events += reply
-                                .opt("overflow_events")
-                                .and_then(|v| v.as_u64().ok())
-                                .unwrap_or(0);
-                        } else {
-                            match reply.opt("code").and_then(|c| c.as_str().ok()) {
-                                Some("overloaded") => tally.shed_overloaded += 1,
-                                Some("deadline_exceeded") => tally.shed_deadline += 1,
-                                Some("worker_panicked") => tally.worker_panicked += 1,
-                                _ => tally.errors_other += 1,
+                match cfg.wire {
+                    WireFormat::Binary => {
+                        codes.clear();
+                        codes.extend((0..cfg.rows_per_req * k).map(|_| lo + rng.below(span) as i64));
+                        wire::encode_infer_request(
+                            &mut frame,
+                            hash,
+                            cfg.rows_per_req,
+                            k,
+                            cfg.deadline_ms,
+                            &codes,
+                        );
+                        tally.sent += 1;
+                        let sent_at = Instant::now();
+                        let outcome = stream
+                            .write_all(&frame)
+                            .map_err(anyhow::Error::from)
+                            .and_then(|()| wire::read_reply(&mut reader, &mut scratch));
+                        match outcome {
+                            Ok(wire::Reply::InferOk { overflow_events, .. }) => {
+                                tally.ok += 1;
+                                tally.latencies_ms.push(sent_at.elapsed().as_secs_f64() * 1e3);
+                                tally.overflow_events += overflow_events;
                             }
+                            Ok(wire::Reply::Err { tag, .. }) => {
+                                match ServeError::code_for_tag(tag) {
+                                    Some("overloaded") => tally.shed_overloaded += 1,
+                                    Some("deadline_exceeded") => tally.shed_deadline += 1,
+                                    Some("worker_panicked") => tally.worker_panicked += 1,
+                                    _ => tally.errors_other += 1,
+                                }
+                            }
+                            Ok(wire::Reply::Ok { .. }) | Err(_) => tally.errors_other += 1,
                         }
                     }
-                    Err(_) => tally.errors_other += 1,
+                    WireFormat::Json => {
+                        let rows: Vec<Json> = (0..cfg.rows_per_req)
+                            .map(|_| {
+                                let codes = (0..k).map(|_| lo + rng.below(span) as i64);
+                                Json::Arr(codes.map(|c| Json::num(c as f64)).collect())
+                            })
+                            .collect();
+                        let req = Json::obj(vec![
+                            ("op", Json::str("infer")),
+                            ("model", Json::str(cfg.model.as_str())),
+                            ("rows", Json::arr(rows)),
+                            ("deadline_ms", Json::num(cfg.deadline_ms as f64)),
+                        ]);
+                        tally.sent += 1;
+                        let sent_at = Instant::now();
+                        match exchange(&mut stream, &mut reader, &reply_line(&req)) {
+                            Ok(reply) => {
+                                let ok =
+                                    reply.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+                                if ok {
+                                    tally.ok += 1;
+                                    tally
+                                        .latencies_ms
+                                        .push(sent_at.elapsed().as_secs_f64() * 1e3);
+                                    tally.overflow_events += reply
+                                        .opt("overflow_events")
+                                        .and_then(|v| v.as_u64().ok())
+                                        .unwrap_or(0);
+                                } else {
+                                    match reply.opt("code").and_then(|c| c.as_str().ok()) {
+                                        Some("overloaded") => tally.shed_overloaded += 1,
+                                        Some("deadline_exceeded") => tally.shed_deadline += 1,
+                                        Some("worker_panicked") => tally.worker_panicked += 1,
+                                        _ => tally.errors_other += 1,
+                                    }
+                                }
+                            }
+                            Err(_) => tally.errors_other += 1,
+                        }
+                    }
                 }
             }
             tally

@@ -12,17 +12,38 @@
 //!   source on demand, validated at the trust boundary with typed errors.
 //! * [`admission`] — the bounded queue between connections and workers:
 //!   explicit [`ServeError::Overloaded`] at the door, deadline shedding at
-//!   dequeue, deadline-aware same-model micro-batching.
+//!   dequeue, deadline-aware same-model micro-batching with round-robin
+//!   rotation across models.
 //! * [`batcher`] — micro-batch execution ([`execute_micro_batch`], pinned
 //!   bit-identical to per-request execution) and the `catch_unwind` worker
 //!   loop that converts panics into per-batch typed rejections.
-//! * [`session`] — the TCP line-JSON server: accept loop, per-connection
-//!   sessions, worker pool and the supervisor that respawns panicked
-//!   workers.
+//! * [`session`] — the TCP server: accept loop, per-connection sessions,
+//!   worker pool and the supervisor that respawns panicked workers.
 //! * [`fault`] — the `A2Q_FAULT` injection seam (worker panic, batch
 //!   latency, cache-load failure) that lets tests and CI *prove* recovery.
-//! * [`loadgen`] — open-loop load generation with p50/p99 + shed-rate
-//!   reporting and the §Perf-Serve journal hook.
+//! * [`loadgen`] — open-loop load generation (either wire format) with
+//!   p50/p99 + shed-rate reporting and the §Perf-Serve journal hook.
+//!
+//! ## Two wire protocols, one serving core
+//!
+//! A connection's first byte picks its protocol (see [`session`]):
+//!
+//! * **Line-JSON** (first byte `{` or whitespace): one JSON object per
+//!   line, one JSON reply line per request. Human-debuggable; carries the
+//!   control-plane ops (`stats`, `model_info`) as well as `ping` /
+//!   `infer` / `shutdown`.
+//! * **Binary frames** (first byte `b'A'`, the magic): the
+//!   length-prefixed format of [`wire`] — versioned header, i64 codes in,
+//!   f32 outputs out, [`ServeError::tag`] status bytes. The
+//!   steady-state-allocation-free hot path.
+//!
+//! Both speak the same typed error contract and produce bit-identical
+//! inference results (the serve smoke tests pin JSON ≡ binary across
+//! batch shapes and kernel paths). The shared core: [`pool`] hands every
+//! request one [`PooledBuf`] (decoded input codes + encoded reply bytes)
+//! that travels session → admission → worker → session and returns to the
+//! pool on drop, so a warmed server's request→reply path performs no heap
+//! allocation (pinned by `tests/serve_alloc.rs`).
 
 pub mod admission;
 pub mod batcher;
@@ -30,12 +51,18 @@ pub mod cache;
 pub mod error;
 pub mod fault;
 pub mod loadgen;
+pub mod pool;
 pub mod session;
+pub mod wire;
 
-pub use admission::{AdmissionQueue, JobReply, JobRequest, ServeStats, StatsSnapshot};
-pub use batcher::{execute_micro_batch, run_worker, BatchPolicy, MicroBatchOutcome};
+pub use admission::{
+    AdmissionQueue, JobReply, JobRequest, RejectedJob, ReplySlot, ServeStats, StatsSnapshot,
+};
+pub use batcher::{execute_micro_batch, run_worker, BatchPolicy, MicroBatchOutcome, WorkerScratch};
 pub use cache::{ModelSource, PlanCache};
 pub use error::ServeError;
 pub use fault::FaultPlan;
 pub use loadgen::{run_loadgen, LoadReport, LoadgenConfig};
-pub use session::{ServeConfig, Server};
+pub use pool::{BufferPool, PooledBuf};
+pub use session::{run_binary_session, ServeConfig, Server};
+pub use wire::WireFormat;

@@ -1,0 +1,195 @@
+//! Pooled request/reply buffers: the allocation backbone of the serve hot
+//! path.
+//!
+//! Every infer request owns one [`PooledBuf`] for its whole lifetime: the
+//! session decodes wire codes straight into its [`IntMatrix`], the buffer
+//! rides through admission queue → batcher → worker, the worker encodes the
+//! complete wire reply (JSON line or binary frame) into its byte buffer,
+//! and the session writes those bytes to the socket. Dropping the buffer —
+//! on the happy path, on a shed, on a typed rejection, or while a panic
+//! unwinds — returns its storage to the [`BufferPool`], so a warmed server
+//! recycles the same handful of allocations forever (pinned by
+//! `tests/serve_alloc.rs`).
+//!
+//! Sizing: the pool retains up to `retain` idle buffers. The server sizes
+//! it as `queue_capacity + 2 * workers + 8` — enough for a full admission
+//! queue plus every worker's in-flight batch plus sessions mid-decode —
+//! so steady state never constructs a fresh buffer and never frees one.
+//! Beyond `retain`, returned buffers are simply dropped (a burst shrinks
+//! back to the cap instead of holding peak memory forever).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::accsim::IntMatrix;
+
+/// Recycled storage of one spent [`PooledBuf`]: the request codes vector
+/// (extracted from its `IntMatrix`) and the reply byte vector, both cleared
+/// but keeping their grown capacity.
+struct BufParts {
+    codes: Vec<i64>,
+    reply: Vec<u8>,
+}
+
+/// A bounded free-list of request/reply buffer storage.
+pub struct BufferPool {
+    free: Mutex<Vec<BufParts>>,
+    retain: usize,
+    /// Buffers constructed fresh because the free list was empty — a
+    /// steady-state server stops incrementing this after warmup.
+    fresh: AtomicU64,
+}
+
+impl BufferPool {
+    /// Pool retaining up to `retain` idle buffers. The free list is
+    /// pre-reserved so returning a buffer never allocates.
+    pub fn new(retain: usize) -> BufferPool {
+        let retain = retain.max(1);
+        BufferPool {
+            free: Mutex::new(Vec::with_capacity(retain)),
+            retain,
+            fresh: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a buffer (recycled if available, fresh otherwise). The returned
+    /// buffer is empty; callers shape the input with
+    /// [`IntMatrix::reset`] via [`PooledBuf::input_mut`].
+    pub fn acquire(self: &Arc<Self>) -> PooledBuf {
+        let parts = self.free.lock().unwrap().pop();
+        let parts = parts.unwrap_or_else(|| {
+            self.fresh.fetch_add(1, Ordering::Relaxed);
+            BufParts { codes: Vec::new(), reply: Vec::new() }
+        });
+        PooledBuf {
+            pool: Some(Arc::clone(self)),
+            input: IntMatrix::from_flat(0, 0, parts.codes),
+            reply: parts.reply,
+        }
+    }
+
+    /// Number of idle buffers currently in the free list.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// How many buffers were ever constructed fresh (free list empty).
+    pub fn fresh_count(&self) -> u64 {
+        self.fresh.load(Ordering::Relaxed)
+    }
+
+    fn release(&self, mut parts: BufParts) {
+        parts.codes.clear();
+        parts.reply.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.retain {
+            free.push(parts);
+        }
+        // else: drop outside the pool cap — bursts shrink back down.
+    }
+}
+
+/// One request's owned buffers: the decoded input codes and the encoded
+/// wire reply. Travels by value with the request through every serve stage;
+/// its storage returns to the pool on drop (every path — replies, sheds,
+/// typed errors, unwinding panics — converges here).
+pub struct PooledBuf {
+    pool: Option<Arc<BufferPool>>,
+    input: IntMatrix,
+    reply: Vec<u8>,
+}
+
+impl PooledBuf {
+    /// A pool-less buffer (dropped storage is simply freed). For tests and
+    /// one-shot callers that want the `PooledBuf` API without a server.
+    pub fn detached(input: IntMatrix) -> PooledBuf {
+        PooledBuf { pool: None, input, reply: Vec::new() }
+    }
+
+    /// The decoded request rows.
+    pub fn input(&self) -> &IntMatrix {
+        &self.input
+    }
+
+    /// Mutable access for the session's wire decode
+    /// ([`IntMatrix::reset`] to shape, then fill `data_mut`).
+    pub fn input_mut(&mut self) -> &mut IntMatrix {
+        &mut self.input
+    }
+
+    /// The encoded wire reply bytes (written by the worker).
+    pub fn reply(&self) -> &[u8] {
+        &self.reply
+    }
+
+    pub fn reply_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.reply
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledBuf")
+            .field("rows", &self.input.rows())
+            .field("cols", &self.input.cols())
+            .field("reply_len", &self.reply.len())
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            let input = std::mem::replace(&mut self.input, IntMatrix::from_flat(0, 0, Vec::new()));
+            let parts =
+                BufParts { codes: input.into_data(), reply: std::mem::take(&mut self.reply) };
+            pool.release(parts);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_recycle_storage_through_the_pool() {
+        let pool = Arc::new(BufferPool::new(4));
+        let mut buf = pool.acquire();
+        assert_eq!(pool.fresh_count(), 1);
+        buf.input_mut().reset(3, 5);
+        buf.input_mut().data_mut()[14] = 42;
+        buf.reply_mut().extend_from_slice(b"hello");
+        let codes_ptr = buf.input().data().as_ptr();
+        drop(buf);
+        assert_eq!(pool.pooled(), 1);
+
+        // Reacquire: same storage, cleared, no fresh construction.
+        let mut buf = pool.acquire();
+        assert_eq!(pool.fresh_count(), 1, "recycled, not rebuilt");
+        assert_eq!(pool.pooled(), 0);
+        assert!(buf.input().is_empty());
+        assert!(buf.reply().is_empty());
+        buf.input_mut().reset(3, 5);
+        assert_eq!(buf.input().data().as_ptr(), codes_ptr, "storage was recycled");
+        assert!(buf.input().data().iter().all(|&v| v == 0), "recycled codes are zeroed");
+    }
+
+    #[test]
+    fn pool_retains_at_most_its_cap() {
+        let pool = Arc::new(BufferPool::new(2));
+        let bufs: Vec<PooledBuf> = (0..5).map(|_| pool.acquire()).collect();
+        assert_eq!(pool.fresh_count(), 5);
+        drop(bufs);
+        assert_eq!(pool.pooled(), 2, "excess buffers are freed, not hoarded");
+    }
+
+    #[test]
+    fn detached_buffers_skip_the_pool() {
+        let m = IntMatrix::from_flat(2, 2, vec![1, 2, 3, 4]);
+        let buf = PooledBuf::detached(m);
+        assert_eq!(buf.input().rows(), 2);
+        drop(buf); // no pool to return to; must not panic
+    }
+}

@@ -2,17 +2,25 @@
 //! supervisor that keeps it alive through worker panics.
 //!
 //! Thread topology: one accept loop spawns a session thread per connection;
-//! session threads validate requests and submit them to the shared
-//! [`AdmissionQueue`]; `workers` batch-worker threads drain it through
-//! [`run_worker`]; one supervisor polls the workers and respawns any that
-//! died by panic (a normal worker exit only happens when the queue is
-//! closed). Every thread communicates through `Arc`s — there is no global
-//! state, so in-process tests can run several servers at once.
+//! session threads decode + validate requests into pooled buffers and
+//! submit them to the shared [`AdmissionQueue`]; `workers` batch-worker
+//! threads drain it through [`run_worker`], encoding each reply into the
+//! request's pooled buffer; one supervisor polls the workers and respawns
+//! any that died by panic (a normal worker exit only happens when the
+//! queue is closed). Every thread communicates through `Arc`s — there is
+//! no global state, so in-process tests can run several servers at once.
 //!
-//! ## Wire protocol
+//! ## Wire protocols
 //!
-//! Line-delimited JSON over TCP, one request per line, one response line
-//! each (keys sorted — [`crate::json`]). Ops:
+//! A connection picks its protocol with its first byte, once:
+//!
+//! * `b'A'` (the binary magic's first byte) — the length-prefixed binary
+//!   frame protocol of [`super::wire`]: infer/ping/shutdown, i64 codes in,
+//!   f32 outputs out, typed errors as status tags. This is the
+//!   allocation-free hot path (`tests/serve_alloc.rs` pins it).
+//! * anything else (JSON objects start with `{` or whitespace) —
+//!   line-delimited JSON, one request per line, one response line each
+//!   (keys sorted — [`crate::json`]). Ops:
 //!
 //! ```text
 //! {"op":"ping"}
@@ -22,26 +30,39 @@
 //! {"op":"shutdown"}
 //! ```
 //!
-//! Responses carry `"ok":true` plus op-specific fields, or `"ok":false`
-//! with the stable [`ServeError::code`] under `"code"` and a human message
-//! under `"error"`. Inference inputs are integer codes on the model's
-//! layer-0 activation grid (see `model_info` for the grid range);
-//! `deadline_ms` is the request's admission-to-execution budget.
+//! JSON responses carry `"ok":true` plus op-specific fields, or
+//! `"ok":false` with the stable [`ServeError::code`] under `"code"` and a
+//! human message under `"error"`. Binary replies carry the same errors as
+//! [`ServeError::tag`] status bytes with the `Display` text as payload —
+//! one error surface, two encodings. Inference inputs are integer codes
+//! on the model's layer-0 activation grid (see `model_info` for the grid
+//! range); `deadline_ms` is the request's admission-to-execution budget
+//! (binary: header field, 0 = server default). `stats`/`model_info` are
+//! JSON-only ops — binary clients open a JSON connection for metadata and
+//! keep the binary one for data.
+//!
+//! Both protocols share the serving core: the same pooled buffers, the
+//! same admission queue, the same workers. A worker encodes the complete
+//! wire reply (JSON line or binary frame, per the request's
+//! [`WireFormat`]) into the request's pooled byte buffer; sessions only
+//! move bytes between socket and buffer.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::admission::{AdmissionQueue, JobRequest, ServeStats, StatsSnapshot};
+use super::admission::{
+    AdmissionQueue, JobRequest, RejectedJob, ReplySlot, ServeStats, StatsSnapshot,
+};
 use super::batcher::{run_worker, BatchPolicy};
 use super::cache::{ModelSource, PlanCache};
 use super::error::ServeError;
 use super::fault::FaultPlan;
-use crate::accsim::IntMatrix;
+use super::pool::{BufferPool, PooledBuf};
+use super::wire::{self, WireFormat};
 use crate::json::Json;
 
 /// Server knobs. `Default` is a sane single-host profile.
@@ -59,6 +80,10 @@ pub struct ServeConfig {
     pub batch_window_ms: u64,
     /// Deadline budget applied when a request names none.
     pub default_deadline_ms: u64,
+    /// Idle buffers the request pool retains; 0 sizes it automatically
+    /// (`queue_capacity + 2 * workers + 8` — a full queue plus every
+    /// worker's in-flight batch plus sessions mid-decode).
+    pub pool_retain: usize,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +95,7 @@ impl Default for ServeConfig {
             max_batch_rows: 64,
             batch_window_ms: 1,
             default_deadline_ms: 1000,
+            pool_retain: 0,
         }
     }
 }
@@ -104,6 +130,12 @@ impl Server {
         let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity));
         let stats = Arc::new(ServeStats::default());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let retain = if cfg.pool_retain > 0 {
+            cfg.pool_retain
+        } else {
+            cfg.queue_capacity + 2 * cfg.workers.max(1) + 8
+        };
+        let pool = Arc::new(BufferPool::new(retain));
         let policy = BatchPolicy {
             max_rows: cfg.max_batch_rows.max(1),
             window: Duration::from_millis(cfg.batch_window_ms),
@@ -176,6 +208,7 @@ impl Server {
                         let cache = cache.clone();
                         let stats = stats.clone();
                         let shutdown = shutdown.clone();
+                        let pool = pool.clone();
                         let _ = std::thread::Builder::new()
                             .name("a2q-serve-conn".to_string())
                             .spawn(move || {
@@ -186,6 +219,7 @@ impl Server {
                                     &stats,
                                     &shutdown,
                                     default_deadline,
+                                    &pool,
                                 )
                             });
                     }
@@ -257,9 +291,28 @@ fn stats_json(s: &StatsSnapshot) -> Json {
     ])
 }
 
-/// One connection: read request lines, write response lines, until the
-/// client hangs up or asks for shutdown. Per-request state is a counter and
-/// an mpsc channel; the plan cache and queue are shared.
+fn bad(reason: impl Into<String>) -> ServeError {
+    ServeError::BadRequest { reason: reason.into() }
+}
+
+/// Flip the shutdown flag once: close the queue and poke the accept loop.
+fn trigger_shutdown(
+    queue: &AdmissionQueue,
+    stats: &ServeStats,
+    shutdown: &AtomicBool,
+    listen_addr: Option<SocketAddr>,
+) {
+    if !shutdown.swap(true, Ordering::SeqCst) {
+        queue.close(stats);
+        // Wake the blocked accept loop so it observes the flag.
+        if let Some(addr) = listen_addr {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+}
+
+/// One connection: peek the first byte to pick the protocol, then hand the
+/// stream to that protocol's session loop.
 fn run_session(
     stream: TcpStream,
     queue: &AdmissionQueue,
@@ -267,18 +320,80 @@ fn run_session(
     stats: &ServeStats,
     shutdown: &AtomicBool,
     default_deadline: Duration,
+    pool: &Arc<BufferPool>,
 ) {
-    let mut writer = match stream.try_clone() {
+    let writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
     // The accepted socket's local address IS the listening address: the
     // shutdown op uses it to wake the blocked accept loop.
     let listen_addr = stream.local_addr().ok();
-    let reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream);
+    let first = match reader.fill_buf() {
+        Ok([]) => return, // EOF before any request
+        Ok(b) => b[0],
+        Err(_) => return,
+    };
+    if first == wire::MAGIC_BYTE0 {
+        run_binary_session(
+            reader,
+            writer,
+            queue,
+            cache,
+            stats,
+            shutdown,
+            listen_addr,
+            default_deadline,
+            pool,
+        );
+    } else {
+        run_json_session(
+            reader,
+            writer,
+            queue,
+            cache,
+            stats,
+            shutdown,
+            listen_addr,
+            default_deadline,
+            pool,
+        );
+    }
+}
+
+/// What one JSON request produced: either a small control-plane reply
+/// (rendered into the connection's reusable write buffer) or an infer
+/// reply the worker already encoded into a pooled buffer.
+enum LineReply {
+    Inline(Json),
+    Encoded(PooledBuf),
+}
+
+/// The line-JSON session loop. Per-connection reusable state: the read
+/// line, the write buffer, and one [`ReplySlot`] re-armed per request.
+#[allow(clippy::too_many_arguments)]
+fn run_json_session(
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+    queue: &AdmissionQueue,
+    cache: &PlanCache,
+    stats: &ServeStats,
+    shutdown: &AtomicBool,
+    listen_addr: Option<SocketAddr>,
+    default_deadline: Duration,
+    pool: &Arc<BufferPool>,
+) {
+    let slot = ReplySlot::new();
+    let mut line = String::new();
+    let mut wbuf = String::new();
     let mut next_id = 0u64;
-    for line in reader.lines() {
-        let Ok(line) = line else { return };
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -292,17 +407,27 @@ fn run_session(
             shutdown,
             listen_addr,
             default_deadline,
+            pool,
+            &slot,
         );
-        let mut text = reply.to_string();
-        text.push('\n');
-        if writer.write_all(text.as_bytes()).is_err() {
-            return;
+        match reply {
+            LineReply::Encoded(buf) => {
+                // The worker wrote the full reply line (newline included).
+                if writer.write_all(buf.reply()).is_err() {
+                    return;
+                }
+                // buf drops here -> storage returns to the pool
+            }
+            LineReply::Inline(json) => {
+                wbuf.clear();
+                json.write_into(&mut wbuf);
+                wbuf.push('\n');
+                if writer.write_all(wbuf.as_bytes()).is_err() {
+                    return;
+                }
+            }
         }
     }
-}
-
-fn bad(reason: impl Into<String>) -> ServeError {
-    ServeError::BadRequest { reason: reason.into() }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -315,38 +440,37 @@ fn handle_line(
     shutdown: &AtomicBool,
     listen_addr: Option<SocketAddr>,
     default_deadline: Duration,
-) -> Json {
+    pool: &Arc<BufferPool>,
+    slot: &Arc<ReplySlot>,
+) -> LineReply {
     let parsed = match Json::parse(line) {
         Ok(v) => v,
-        Err(e) => return err_json(&bad(format!("invalid JSON: {e:#}"))),
+        Err(e) => return LineReply::Inline(err_json(&bad(format!("invalid JSON: {e:#}")))),
     };
     let op = match parsed.get("op").and_then(|v| v.as_str()) {
         Ok(op) => op.to_string(),
-        Err(_) => return err_json(&bad("missing \"op\"")),
+        Err(_) => return LineReply::Inline(err_json(&bad("missing \"op\""))),
     };
-    match op.as_str() {
+    LineReply::Inline(match op.as_str() {
         "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
         "stats" => stats_json(&stats.snapshot()),
         "shutdown" => {
-            if !shutdown.swap(true, Ordering::SeqCst) {
-                queue.close(stats);
-                // Wake the blocked accept loop so it observes the flag.
-                if let Some(addr) = listen_addr {
-                    let _ = TcpStream::connect(addr);
-                }
-            }
+            trigger_shutdown(queue, stats, shutdown, listen_addr);
             Json::obj(vec![("ok", Json::Bool(true))])
         }
         "model_info" => match model_info(&parsed, cache) {
             Ok(v) => v,
             Err(e) => err_json(&e),
         },
-        "infer" => match infer(&parsed, req_id, queue, cache, stats, default_deadline) {
-            Ok(v) => v,
-            Err(e) => err_json(&e),
-        },
+        "infer" => {
+            return match infer_json(&parsed, req_id, queue, cache, stats, default_deadline, pool, slot)
+            {
+                Ok(buf) => LineReply::Encoded(buf),
+                Err(e) => LineReply::Inline(err_json(&e)),
+            };
+        }
         other => err_json(&bad(format!("unknown op {other:?}"))),
-    }
+    })
 }
 
 fn model_info(req: &Json, cache: &PlanCache) -> Result<Json, ServeError> {
@@ -374,14 +498,44 @@ fn model_info(req: &Json, cache: &PlanCache) -> Result<Json, ServeError> {
     ]))
 }
 
-fn infer(
+/// Submit an admissible request and wait for its outcome; shared tail of
+/// both protocols' infer paths. On success the returned buffer holds the
+/// complete encoded reply.
+fn submit_and_wait(
+    request: JobRequest,
+    queue: &AdmissionQueue,
+    stats: &ServeStats,
+    slot: &Arc<ReplySlot>,
+) -> Result<PooledBuf, ServeError> {
+    if let Err(RejectedJob { request, error }) = queue.submit(request) {
+        if matches!(error, ServeError::Overloaded { .. }) {
+            stats.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+        }
+        // Disarm the reply sender (the refusal is reported right here) and
+        // let the pooled buffer return to the pool.
+        request.cancel();
+        return Err(error);
+    }
+    stats.admitted.fetch_add(1, Ordering::Relaxed);
+    // Admitted: the worker (or the queue's shed/close paths, or the
+    // sender's fail-closed drop) owns the reply.
+    match slot.recv() {
+        Ok(reply) => Ok(reply.into_buf()),
+        Err(e) => Err(e),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn infer_json(
     req: &Json,
     req_id: u64,
     queue: &AdmissionQueue,
     cache: &PlanCache,
     stats: &ServeStats,
     default_deadline: Duration,
-) -> Result<Json, ServeError> {
+    pool: &Arc<BufferPool>,
+    slot: &Arc<ReplySlot>,
+) -> Result<PooledBuf, ServeError> {
     let name = req
         .get("model")
         .and_then(|v| v.as_str())
@@ -399,7 +553,11 @@ fn infer(
     if rows_json.is_empty() {
         return Err(bad("empty rows"));
     }
-    let mut flat: Vec<i64> = Vec::with_capacity(rows_json.len() * k);
+    // Decode straight into a pooled buffer (an early validation return
+    // drops it back to the pool).
+    let mut buf = pool.acquire();
+    buf.input_mut().reset(rows_json.len(), k);
+    let codes = buf.input_mut().data_mut();
     for (ri, row) in rows_json.iter().enumerate() {
         let row = row.as_arr().map_err(|_| bad(format!("row {ri} is not an array")))?;
         if row.len() != k {
@@ -416,52 +574,208 @@ fn infer(
                     "row {ri} code {ci} = {code} outside the model's input grid [{lo}, {hi}]"
                 )));
             }
-            flat.push(code);
+            codes[ri * k + ci] = code;
         }
     }
     let budget = match req.opt("deadline_ms") {
         Some(v) => Duration::from_millis(v.as_u64().map_err(|_| bad("bad deadline_ms"))?),
         None => default_deadline,
     };
-    let now = Instant::now();
-    let (tx, rx) = mpsc::channel();
-    let request = JobRequest {
-        id: req_id,
-        model_hash: hash,
-        rows: IntMatrix::from_flat(rows_json.len(), k, flat),
-        enqueued: now,
-        deadline: now + budget,
-        budget_ms: budget.as_millis() as u64,
-        responder: tx,
+    let request = JobRequest::new(req_id, hash, WireFormat::Json, buf, budget, slot.sender());
+    submit_and_wait(request, queue, stats, slot)
+}
+
+/// What one binary infer produced (or why it didn't).
+enum BinOutcome {
+    /// Success: the pooled buffer holds the encoded reply frame.
+    Reply(PooledBuf),
+    /// Typed refusal; the frame's payload was fully consumed, so the
+    /// connection keeps its framing.
+    Refused(ServeError),
+    /// Transport died mid-frame; close the connection.
+    Hangup,
+}
+
+/// The binary-frame session loop. Public so the allocation-counting
+/// harness (`tests/serve_alloc.rs`) can drive it over in-memory transport;
+/// the server itself passes the accepted socket pair.
+///
+/// Per-request steady state reads the frame header into a stack array,
+/// streams codes into a pooled `IntMatrix` through a stack chunk, and
+/// writes back the worker-encoded reply bytes — no heap allocation once
+/// the pool and scratch are warm.
+#[allow(clippy::too_many_arguments)]
+pub fn run_binary_session<R: Read, W: Write>(
+    mut reader: R,
+    mut writer: W,
+    queue: &AdmissionQueue,
+    cache: &PlanCache,
+    stats: &ServeStats,
+    shutdown: &AtomicBool,
+    listen_addr: Option<SocketAddr>,
+    default_deadline: Duration,
+    pool: &Arc<BufferPool>,
+) {
+    let slot = ReplySlot::new();
+    let mut wbuf: Vec<u8> = Vec::with_capacity(256);
+    let mut hdr = [0u8; wire::REQ_HEADER_LEN];
+    let mut next_id = 0u64;
+    loop {
+        let mut prefix = [0u8; wire::PREFIX_LEN];
+        if reader.read_exact(&mut prefix).is_err() {
+            return; // clean EOF between frames, or transport death
+        }
+        let magic = u32::from_le_bytes([prefix[0], prefix[1], prefix[2], prefix[3]]);
+        if let Err(e) = wire::check_magic(magic) {
+            // Framing cannot be trusted: reply typed and close.
+            wire::encode_binary_err(&mut wbuf, 0, &e);
+            let _ = writer.write_all(&wbuf);
+            return;
+        }
+        let len = u32::from_le_bytes([prefix[4], prefix[5], prefix[6], prefix[7]]) as usize;
+        if !(wire::REQ_HEADER_LEN..=wire::MAX_FRAME).contains(&len) {
+            wire::encode_binary_err(&mut wbuf, 0, &bad(format!("bad frame length {len}")));
+            let _ = writer.write_all(&wbuf);
+            return;
+        }
+        if reader.read_exact(&mut hdr).is_err() {
+            return;
+        }
+        let payload_len = len - wire::REQ_HEADER_LEN;
+        let h = match wire::parse_request_header(&hdr) {
+            Ok(h) => h,
+            Err(e) => {
+                // Unsupported wire version: same framing-loss rule.
+                wire::encode_binary_err(&mut wbuf, 0, &e);
+                let _ = writer.write_all(&wbuf);
+                return;
+            }
+        };
+        next_id += 1;
+        match h.op {
+            wire::OP_PING => {
+                if wire::drain_payload(&mut reader, payload_len).is_err() {
+                    return;
+                }
+                wire::encode_ok_empty(&mut wbuf, wire::OP_PING);
+                if writer.write_all(&wbuf).is_err() {
+                    return;
+                }
+            }
+            wire::OP_SHUTDOWN => {
+                if wire::drain_payload(&mut reader, payload_len).is_err() {
+                    return;
+                }
+                trigger_shutdown(queue, stats, shutdown, listen_addr);
+                wire::encode_ok_empty(&mut wbuf, wire::OP_SHUTDOWN);
+                if writer.write_all(&wbuf).is_err() {
+                    return;
+                }
+            }
+            wire::OP_INFER => {
+                let outcome = infer_binary(
+                    &h,
+                    payload_len,
+                    &mut reader,
+                    next_id,
+                    queue,
+                    cache,
+                    stats,
+                    default_deadline,
+                    pool,
+                    &slot,
+                );
+                match outcome {
+                    BinOutcome::Reply(buf) => {
+                        if writer.write_all(buf.reply()).is_err() {
+                            return;
+                        }
+                        // buf drops here -> storage returns to the pool
+                    }
+                    BinOutcome::Refused(e) => {
+                        wire::encode_binary_err(&mut wbuf, wire::OP_INFER, &e);
+                        if writer.write_all(&wbuf).is_err() {
+                            return;
+                        }
+                    }
+                    BinOutcome::Hangup => return,
+                }
+            }
+            other => {
+                if wire::drain_payload(&mut reader, payload_len).is_err() {
+                    return;
+                }
+                wire::encode_binary_err(&mut wbuf, other, &bad(format!("unknown op {other}")));
+                if writer.write_all(&wbuf).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn infer_binary<R: Read>(
+    h: &wire::RequestHeader,
+    payload_len: usize,
+    reader: &mut R,
+    req_id: u64,
+    queue: &AdmissionQueue,
+    cache: &PlanCache,
+    stats: &ServeStats,
+    default_deadline: Duration,
+    pool: &Arc<BufferPool>,
+    slot: &Arc<ReplySlot>,
+) -> BinOutcome {
+    // Frame-consistency first: the payload length is what we must consume
+    // to keep framing, so it has to agree with the stated shape.
+    let rows = h.rows as usize;
+    let cols = h.cols as usize;
+    let refuse = |reader: &mut R, e: ServeError| -> BinOutcome {
+        if wire::drain_payload(reader, payload_len).is_err() {
+            return BinOutcome::Hangup;
+        }
+        BinOutcome::Refused(e)
     };
-    queue.submit(request).map_err(|e| {
-        if matches!(e, ServeError::Overloaded { .. }) {
-            stats.shed_overloaded.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    if (rows as u64) * (cols as u64) * 8 != payload_len as u64 {
+        return refuse(
+            reader,
+            bad(format!("payload {payload_len} bytes does not match {rows}x{cols} i64 codes")),
+        );
+    }
+    if rows == 0 {
+        return refuse(reader, bad("empty rows"));
+    }
+    // Validate against the model's grid before admission: a malformed
+    // request must never occupy queue capacity.
+    let plan = match cache.get(h.model_hash) {
+        Ok(plan) => plan,
+        Err(e) => return refuse(reader, e),
+    };
+    let k = plan.net().input_dim();
+    if cols != k {
+        return refuse(reader, bad(format!("request is {cols} codes wide, model takes {k}")));
+    }
+    let (lo, hi) = plan.net().layers[0].in_quant.int_range();
+    let mut buf = pool.acquire();
+    buf.input_mut().reset(rows, cols);
+    // read_codes always consumes the whole payload, so a validation
+    // failure here still leaves the connection framed.
+    match wire::read_codes(reader, rows, cols, lo, hi, buf.input_mut().data_mut()) {
+        Err(_) => BinOutcome::Hangup,
+        Ok(Err(e)) => BinOutcome::Refused(e),
+        Ok(Ok(())) => {
+            let budget = if h.deadline_ms == 0 {
+                default_deadline
+            } else {
+                Duration::from_millis(h.deadline_ms)
+            };
+            let request =
+                JobRequest::new(req_id, h.model_hash, WireFormat::Binary, buf, budget, slot.sender());
+            match submit_and_wait(request, queue, stats, slot) {
+                Ok(reply) => BinOutcome::Reply(reply),
+                Err(e) => BinOutcome::Refused(e),
+            }
         }
-        e
-    })?;
-    stats.admitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    // Admitted: the worker (or the queue's shed/close paths) owns the reply.
-    match rx.recv() {
-        Ok(Ok(reply)) => {
-            let out_dim = reply.outputs.cols();
-            let rows: Vec<Json> = reply
-                .outputs
-                .data()
-                .chunks(out_dim)
-                .map(Json::from_f32s)
-                .collect();
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("outputs", Json::arr(rows)),
-                ("overflow_events", Json::num(reply.overflow_events as f64)),
-                ("batch_seq", Json::num(reply.batch_seq as f64)),
-                ("batch_rows", Json::num(reply.batch_rows as f64)),
-            ]))
-        }
-        Ok(Err(e)) => Err(e),
-        // The responder was dropped without a reply: a worker died between
-        // dequeue and respond in a way catch_unwind could not cover.
-        Err(_) => Err(ServeError::WorkerPanicked { batch_seq: 0 }),
     }
 }

@@ -1,0 +1,579 @@
+//! The serve wire formats: length-prefixed binary frames and their
+//! line-JSON twin.
+//!
+//! Both protocols carry the same operations against the same typed
+//! [`ServeError`] contract; the binary format exists purely to take wire
+//! parsing off the hot path (no JSON tree, no per-row vectors — codes
+//! stream straight into a pooled [`crate::accsim::IntMatrix`], replies
+//! stream straight out of a pooled byte buffer). A connection picks its
+//! protocol implicitly with its first byte: binary frames open with the
+//! magic byte `b'A'`, JSON requests open with `{` (or whitespace), and the
+//! session peeks once to dispatch (see `serve/session.rs`).
+//!
+//! # Binary frame layout (all integers little-endian)
+//!
+//! The magic leads every frame — its first byte (`b'A'`) is what protocol
+//! negotiation peeks at, so it must be byte 0 on the wire. The length
+//! field counts every byte *after itself* (header rest + payload).
+//!
+//! Request:
+//!
+//! ```text
+//! u32 magic      -- "A2QB" (0x4251_3241 LE); first byte b'A'
+//! u32 len        -- bytes after this field (= REQ_HEADER_LEN + payload), <= MAX_FRAME
+//! u16 version    -- 1; anything else is refused typed and the connection closes
+//! u8  op         -- 1 = infer, 2 = ping, 3 = shutdown
+//! u8  reserved   -- 0
+//! u64 model_hash -- PlanCache key (fnv1a64 of spec/file bytes)
+//! u32 rows
+//! u32 cols
+//! u64 deadline_ms -- 0 means "use the server default"
+//! i64 codes[rows * cols]   -- infer payload; empty for ping/shutdown
+//! ```
+//!
+//! Reply:
+//!
+//! ```text
+//! u32 magic | u32 len | u16 version | u8 op (echoed) | u8 status
+//! ```
+//!
+//! `status` 0 is success; otherwise it is [`ServeError::tag`] and the
+//! payload is `u32 msg_len + utf8` of the error's `Display` text. A
+//! successful infer reply's payload is `u32 rows | u32 cols |
+//! u64 overflow_events | u64 batch_seq | u32 batch_rows |
+//! f32 outputs[rows * cols]`; ping/shutdown success has no payload.
+//!
+//! Framing errors (bad magic, wrong version, oversized length) poison the
+//! stream — the server replies typed and closes. Recoverable request
+//! errors (unknown model, wrong dims, out-of-grid codes) drain the frame's
+//! remaining payload first, so the connection stays usable.
+
+use std::fmt::Write as _;
+use std::io::{self, Read};
+
+use super::error::ServeError;
+use crate::json::write_num;
+
+/// Which encoding a request arrived in (and so which encoding its reply
+/// must use). Travels with the request through the admission queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Newline-delimited JSON objects (the original `a2q serve` protocol).
+    Json,
+    /// Length-prefixed binary frames defined in this module.
+    Binary,
+}
+
+/// `"A2QB"` interpreted little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"A2QB");
+/// First byte of every binary frame's magic — the protocol-negotiation
+/// peek byte (`b'A'`; JSON requests start with `{` or whitespace).
+pub const MAGIC_BYTE0: u8 = b'A';
+/// Current (and only) wire version. Bump on any layout change.
+pub const VERSION: u16 = 1;
+
+pub const OP_INFER: u8 = 1;
+pub const OP_PING: u8 = 2;
+pub const OP_SHUTDOWN: u8 = 3;
+
+/// Bytes of the frame prefix every frame opens with: magic + length.
+pub const PREFIX_LEN: usize = 8;
+/// Request header bytes after the length field, before the payload.
+pub const REQ_HEADER_LEN: usize = 28;
+/// Reply header bytes after the length field, before the payload.
+pub const REPLY_HEADER_LEN: usize = 4;
+/// Upper bound on `len` (64 MiB): refuses absurd frames before buffering.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// Stack chunk for streaming payload decode/drain — multiple of 8 so i64
+/// codes never straddle a chunk boundary.
+const CHUNK: usize = 8192;
+
+/// A parsed request frame header (everything but the payload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestHeader {
+    pub op: u8,
+    pub model_hash: u64,
+    pub rows: u32,
+    pub cols: u32,
+    pub deadline_ms: u64,
+}
+
+fn rd_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn rd_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn rd_u64(b: &[u8], at: usize) -> u64 {
+    let mut v = [0u8; 8];
+    v.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(v)
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Validate a frame prefix's magic. A mismatch means the stream cannot be
+/// trusted for framing: reply typed and close the connection.
+pub fn check_magic(magic: u32) -> Result<(), ServeError> {
+    if magic != MAGIC {
+        return Err(ServeError::BadRequest {
+            reason: format!("bad frame magic {magic:#010x} (want {MAGIC:#010x})"),
+        });
+    }
+    Ok(())
+}
+
+/// Validate the version and split out the header fields (the bytes after
+/// the length field, magic already checked via [`check_magic`]). A version
+/// mismatch also poisons framing: reply typed and close.
+pub fn parse_request_header(hdr: &[u8; REQ_HEADER_LEN]) -> Result<RequestHeader, ServeError> {
+    let version = rd_u16(hdr, 0);
+    if version != VERSION {
+        return Err(ServeError::BadRequest {
+            reason: format!("unsupported wire version {version} (server speaks {VERSION})"),
+        });
+    }
+    Ok(RequestHeader {
+        op: hdr[2],
+        model_hash: rd_u64(hdr, 4),
+        rows: rd_u32(hdr, 12),
+        cols: rd_u32(hdr, 16),
+        deadline_ms: rd_u64(hdr, 20),
+    })
+}
+
+/// Discard exactly `n` payload bytes through a stack chunk (keeps framing
+/// intact after a request is refused before its payload matters).
+pub fn drain_payload<R: Read>(r: &mut R, mut n: usize) -> io::Result<()> {
+    let mut chunk = [0u8; CHUNK];
+    while n > 0 {
+        let take = n.min(CHUNK);
+        r.read_exact(&mut chunk[..take])?;
+        n -= take;
+    }
+    Ok(())
+}
+
+/// Stream `rows * cols` little-endian i64 codes into `dst`, validating
+/// each against the model's input grid `[lo, hi]`. Allocation-free: codes
+/// decode through a stack chunk straight into the (pooled) destination.
+///
+/// The full payload is always consumed, even after a validation failure —
+/// the outer `Ok(Err(..))` carries the typed refusal while the connection
+/// keeps its framing. The outer `Err` is a transport failure (hang up).
+pub fn read_codes<R: Read>(
+    r: &mut R,
+    rows: usize,
+    cols: usize,
+    lo: i64,
+    hi: i64,
+    dst: &mut [i64],
+) -> io::Result<Result<(), ServeError>> {
+    debug_assert_eq!(dst.len(), rows * cols);
+    let mut chunk = [0u8; CHUNK];
+    let mut bad: Option<(usize, i64)> = None;
+    let total = rows * cols * 8;
+    let mut consumed = 0usize;
+    while consumed < total {
+        let take = (total - consumed).min(CHUNK);
+        r.read_exact(&mut chunk[..take])?;
+        let base = consumed / 8;
+        for (i, word) in chunk[..take].chunks_exact(8).enumerate() {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(word);
+            let code = i64::from_le_bytes(b);
+            if (code < lo || code > hi) && bad.is_none() {
+                bad = Some((base + i, code));
+            }
+            dst[base + i] = code;
+        }
+        consumed += take;
+    }
+    Ok(match bad {
+        // Identical wording to the JSON path's validation: clients see one
+        // error surface regardless of encoding.
+        Some((at, code)) => Err(ServeError::BadRequest {
+            reason: format!(
+                "row {} code {} = {code} outside the model's input grid [{lo}, {hi}]",
+                at / cols,
+                at % cols
+            ),
+        }),
+        None => Ok(()),
+    })
+}
+
+// --------------------------------------------------------------- encoders
+
+/// Build an infer request frame (client side: loadgen, tests).
+pub fn encode_infer_request(
+    out: &mut Vec<u8>,
+    model_hash: u64,
+    rows: usize,
+    cols: usize,
+    deadline_ms: u64,
+    codes: &[i64],
+) {
+    assert_eq!(codes.len(), rows * cols, "codes vs {rows}x{cols}");
+    out.clear();
+    put_u32(out, MAGIC);
+    put_u32(out, (REQ_HEADER_LEN + codes.len() * 8) as u32);
+    put_u16(out, VERSION);
+    out.push(OP_INFER);
+    out.push(0); // reserved
+    put_u64(out, model_hash);
+    put_u32(out, rows as u32);
+    put_u32(out, cols as u32);
+    put_u64(out, deadline_ms);
+    for &c in codes {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+}
+
+/// Build a payload-less request frame (`OP_PING` / `OP_SHUTDOWN`).
+pub fn encode_simple_request(out: &mut Vec<u8>, op: u8) {
+    out.clear();
+    put_u32(out, MAGIC);
+    put_u32(out, REQ_HEADER_LEN as u32);
+    put_u16(out, VERSION);
+    out.push(op);
+    out.push(0);
+    put_u64(out, 0); // model_hash
+    put_u32(out, 0); // rows
+    put_u32(out, 0); // cols
+    put_u64(out, 0); // deadline_ms
+}
+
+fn put_reply_header(out: &mut Vec<u8>, op: u8, status: u8, payload_len: usize) {
+    out.clear();
+    put_u32(out, MAGIC);
+    put_u32(out, (REPLY_HEADER_LEN + payload_len) as u32);
+    put_u16(out, VERSION);
+    out.push(op);
+    out.push(status);
+}
+
+/// Encode a successful binary infer reply into `out` (cleared first).
+/// Allocation-free once `out` has grown to the reply size.
+pub fn encode_binary_infer_ok(
+    out: &mut Vec<u8>,
+    outputs: &[f32],
+    rows: usize,
+    cols: usize,
+    overflow_events: u64,
+    batch_seq: u64,
+    batch_rows: usize,
+) {
+    assert_eq!(outputs.len(), rows * cols, "outputs vs {rows}x{cols}");
+    put_reply_header(out, OP_INFER, 0, 28 + outputs.len() * 4);
+    put_u32(out, rows as u32);
+    put_u32(out, cols as u32);
+    put_u64(out, overflow_events);
+    put_u64(out, batch_seq);
+    put_u32(out, batch_rows as u32);
+    for &v in outputs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a payload-less success reply (ping/shutdown acks).
+pub fn encode_ok_empty(out: &mut Vec<u8>, op: u8) {
+    put_reply_header(out, op, 0, 0);
+}
+
+/// Encode a typed error reply: `status` is [`ServeError::tag`], payload is
+/// the `Display` text. Off the steady-state path, so the formatting may
+/// allocate.
+pub fn encode_binary_err(out: &mut Vec<u8>, op: u8, e: &ServeError) {
+    put_reply_header(out, op, e.tag(), 0);
+    put_u32(out, 0); // msg_len, patched below
+    let msg_start = out.len();
+    let _ = write!(ByteWriter(out), "{e}");
+    let msg_len = (out.len() - msg_start) as u32;
+    out[msg_start - 4..msg_start].copy_from_slice(&msg_len.to_le_bytes());
+    // Patch the frame length (bytes after the len field at offset 4..8).
+    let frame_len = (out.len() - PREFIX_LEN) as u32;
+    out[4..8].copy_from_slice(&frame_len.to_le_bytes());
+}
+
+/// Encode the JSON line for a successful infer reply into `out` (cleared
+/// first), byte-identical to serializing the equivalent [`Json`] tree and
+/// appending `'\n'` — pinned by this module's tests. Sorted-key order:
+/// `batch_rows < batch_seq < ok < outputs < overflow_events`.
+///
+/// [`Json`]: crate::json::Json
+pub fn encode_json_infer_ok(
+    out: &mut Vec<u8>,
+    outputs: &[f32],
+    rows: usize,
+    cols: usize,
+    overflow_events: u64,
+    batch_seq: u64,
+    batch_rows: usize,
+) {
+    assert_eq!(outputs.len(), rows * cols, "outputs vs {rows}x{cols}");
+    out.clear();
+    let w = &mut ByteWriter(out);
+    let _ = w.write_str("{\"batch_rows\":");
+    write_num(w, batch_rows as f64);
+    let _ = w.write_str(",\"batch_seq\":");
+    write_num(w, batch_seq as f64);
+    let _ = w.write_str(",\"ok\":true,\"outputs\":[");
+    for r in 0..rows {
+        if r > 0 {
+            let _ = w.write_str(",");
+        }
+        let _ = w.write_str("[");
+        for (c, &v) in outputs[r * cols..(r + 1) * cols].iter().enumerate() {
+            if c > 0 {
+                let _ = w.write_str(",");
+            }
+            write_num(w, v as f64);
+        }
+        let _ = w.write_str("]");
+    }
+    let _ = w.write_str("],\"overflow_events\":");
+    write_num(w, overflow_events as f64);
+    let _ = w.write_str("}\n");
+}
+
+/// Dispatch the worker-side reply encode on the request's wire format.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_infer_ok(
+    wire: WireFormat,
+    out: &mut Vec<u8>,
+    outputs: &[f32],
+    rows: usize,
+    cols: usize,
+    overflow_events: u64,
+    batch_seq: u64,
+    batch_rows: usize,
+) {
+    match wire {
+        WireFormat::Json => {
+            encode_json_infer_ok(out, outputs, rows, cols, overflow_events, batch_seq, batch_rows)
+        }
+        WireFormat::Binary => encode_binary_infer_ok(
+            out,
+            outputs,
+            rows,
+            cols,
+            overflow_events,
+            batch_seq,
+            batch_rows,
+        ),
+    }
+}
+
+/// `fmt::Write` over a byte vector: lets integer/float formatting write
+/// straight into pooled reply buffers with no intermediate `String`.
+pub struct ByteWriter<'a>(pub &'a mut Vec<u8>);
+
+impl std::fmt::Write for ByteWriter<'_> {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        self.0.extend_from_slice(s.as_bytes());
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------- client decode
+
+/// A decoded binary reply (client side — allocates, not on the serve hot
+/// path).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    InferOk {
+        rows: usize,
+        cols: usize,
+        overflow_events: u64,
+        batch_seq: u64,
+        batch_rows: usize,
+        outputs: Vec<f32>,
+    },
+    /// Payload-less success (ping/shutdown ack).
+    Ok { op: u8 },
+    /// Typed refusal: `tag` maps to a code via [`ServeError::code_for_tag`].
+    Err { op: u8, tag: u8, message: String },
+}
+
+/// Read and decode one reply frame (client side: loadgen, tests).
+pub fn read_reply<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> anyhow::Result<Reply> {
+    let mut prefix = [0u8; PREFIX_LEN];
+    r.read_exact(&mut prefix)?;
+    let magic = rd_u32(&prefix, 0);
+    anyhow::ensure!(magic == MAGIC, "bad reply magic {magic:#010x}");
+    let len = rd_u32(&prefix, 4) as usize;
+    anyhow::ensure!(
+        (REPLY_HEADER_LEN..=MAX_FRAME).contains(&len),
+        "bad reply frame length {len}"
+    );
+    scratch.clear();
+    scratch.resize(len, 0);
+    r.read_exact(scratch)?;
+    let version = rd_u16(scratch, 0);
+    anyhow::ensure!(version == VERSION, "unsupported reply version {version}");
+    let op = scratch[2];
+    let status = scratch[3];
+    let payload = &scratch[REPLY_HEADER_LEN..];
+    if status != 0 {
+        anyhow::ensure!(payload.len() >= 4, "truncated error payload");
+        let msg_len = rd_u32(payload, 0) as usize;
+        anyhow::ensure!(payload.len() == 4 + msg_len, "bad error payload length");
+        let message = std::str::from_utf8(&payload[4..])?.to_string();
+        return Ok(Reply::Err { op, tag: status, message });
+    }
+    if op != OP_INFER {
+        return Ok(Reply::Ok { op });
+    }
+    anyhow::ensure!(payload.len() >= 28, "truncated infer payload");
+    let rows = rd_u32(payload, 0) as usize;
+    let cols = rd_u32(payload, 4) as usize;
+    let overflow_events = rd_u64(payload, 8);
+    let batch_seq = rd_u64(payload, 16);
+    let batch_rows = rd_u32(payload, 24) as usize;
+    anyhow::ensure!(payload.len() == 28 + rows * cols * 4, "infer payload vs {rows}x{cols}");
+    let outputs = payload[28..]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Reply::InferOk { rows, cols, overflow_events, batch_seq, batch_rows, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Json;
+    use std::io::Cursor;
+
+    #[test]
+    fn infer_request_frames_round_trip() {
+        let codes: Vec<i64> = vec![3, -2, 0, 7, 1, -5];
+        let mut frame = Vec::new();
+        encode_infer_request(&mut frame, 0xfeed_beef, 2, 3, 250, &codes);
+        assert_eq!(frame.len(), PREFIX_LEN + REQ_HEADER_LEN + 6 * 8);
+        assert_eq!(frame[0], MAGIC_BYTE0, "byte 0 on the wire is the negotiation peek byte");
+
+        let mut cur = Cursor::new(&frame[..]);
+        let mut prefix = [0u8; PREFIX_LEN];
+        cur.read_exact(&mut prefix).unwrap();
+        check_magic(u32::from_le_bytes([prefix[0], prefix[1], prefix[2], prefix[3]])).unwrap();
+        let len = u32::from_le_bytes([prefix[4], prefix[5], prefix[6], prefix[7]]) as usize;
+        assert_eq!(len, REQ_HEADER_LEN + 6 * 8);
+        let mut hdr = [0u8; REQ_HEADER_LEN];
+        cur.read_exact(&mut hdr).unwrap();
+        let h = parse_request_header(&hdr).unwrap();
+        assert_eq!(
+            h,
+            RequestHeader { op: OP_INFER, model_hash: 0xfeed_beef, rows: 2, cols: 3, deadline_ms: 250 }
+        );
+        let mut dst = vec![0i64; 6];
+        read_codes(&mut cur, 2, 3, -8, 7, &mut dst).unwrap().unwrap();
+        assert_eq!(dst, codes);
+        assert_eq!(cur.position() as usize, frame.len(), "payload fully consumed");
+    }
+
+    #[test]
+    fn out_of_grid_codes_refuse_typed_but_consume_the_frame() {
+        let codes: Vec<i64> = vec![1, 99, 2, -99];
+        let mut frame = Vec::new();
+        encode_infer_request(&mut frame, 1, 2, 2, 0, &codes);
+        let mut cur = Cursor::new(&frame[PREFIX_LEN + REQ_HEADER_LEN..]);
+        let mut dst = vec![0i64; 4];
+        let err = read_codes(&mut cur, 2, 2, -8, 7, &mut dst).unwrap().unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::BadRequest {
+                reason: "row 0 code 1 = 99 outside the model's input grid [-8, 7]".to_string()
+            },
+            "first violation wins, with the JSON path's exact wording"
+        );
+        assert_eq!(cur.position() as usize, 4 * 8, "payload drained despite the refusal");
+    }
+
+    #[test]
+    fn bad_magic_and_version_close_typed() {
+        let mut frame = Vec::new();
+        encode_simple_request(&mut frame, OP_PING);
+        assert_eq!(frame.len(), PREFIX_LEN + REQ_HEADER_LEN);
+        assert_eq!(frame[0], MAGIC_BYTE0);
+        let mut hdr = [0u8; REQ_HEADER_LEN];
+        hdr.copy_from_slice(&frame[PREFIX_LEN..]);
+        assert_eq!(parse_request_header(&hdr).unwrap().op, OP_PING);
+
+        check_magic(MAGIC).unwrap();
+        let e = check_magic(u32::from_le_bytes(*b"X2QB")).unwrap_err();
+        assert_eq!(e.code(), "bad_request");
+        assert!(e.to_string().contains("magic"), "{e}");
+
+        let mut bad_version = hdr;
+        bad_version[0] = 9;
+        let e = parse_request_header(&bad_version).unwrap_err();
+        assert_eq!(e.code(), "bad_request");
+        assert!(e.to_string().contains("version 9"), "{e}");
+    }
+
+    #[test]
+    fn binary_replies_round_trip() {
+        let outputs = vec![1.5f32, -2.0, 0.25, 3.0];
+        let mut frame = Vec::new();
+        encode_binary_infer_ok(&mut frame, &outputs, 2, 2, 7, 42, 5);
+        let mut scratch = Vec::new();
+        let reply = read_reply(&mut Cursor::new(&frame[..]), &mut scratch).unwrap();
+        assert_eq!(
+            reply,
+            Reply::InferOk {
+                rows: 2,
+                cols: 2,
+                overflow_events: 7,
+                batch_seq: 42,
+                batch_rows: 5,
+                outputs
+            }
+        );
+
+        encode_ok_empty(&mut frame, OP_PING);
+        let reply = read_reply(&mut Cursor::new(&frame[..]), &mut scratch).unwrap();
+        assert_eq!(reply, Reply::Ok { op: OP_PING });
+
+        let e = ServeError::Overloaded { queued: 8, capacity: 8 };
+        encode_binary_err(&mut frame, OP_INFER, &e);
+        let reply = read_reply(&mut Cursor::new(&frame[..]), &mut scratch).unwrap();
+        assert_eq!(reply, Reply::Err { op: OP_INFER, tag: e.tag(), message: e.to_string() });
+        assert_eq!(ServeError::code_for_tag(e.tag()), Some("overloaded"));
+    }
+
+    #[test]
+    fn json_infer_encode_is_byte_identical_to_the_json_tree() {
+        // Mixed integral and fractional outputs exercise both write_num arms.
+        let outputs = vec![1.0f32, -0.5, 3.25, 2.0, 0.0, -7.125];
+        let mut encoded = Vec::new();
+        encode_json_infer_ok(&mut encoded, &outputs, 2, 3, 9, 17, 6);
+
+        let tree = Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "outputs",
+                Json::arr(outputs.chunks(3).map(Json::from_f32s).collect::<Vec<_>>()),
+            ),
+            ("overflow_events", Json::num(9.0)),
+            ("batch_seq", Json::num(17.0)),
+            ("batch_rows", Json::num(6.0)),
+        ]);
+        let mut want = tree.to_string();
+        want.push('\n');
+        assert_eq!(std::str::from_utf8(&encoded).unwrap(), want);
+    }
+}

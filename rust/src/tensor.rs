@@ -75,6 +75,14 @@ impl Tensor {
         &self.data[r * c..(r + 1) * c]
     }
 
+    /// Borrow rows `r0..r1` of a 2-D tensor as one contiguous slice —
+    /// the zero-copy way to hand a row range to an encoder or a
+    /// per-request split without materializing a new tensor.
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r0 * c..r1 * c]
+    }
+
     /// Reinterpret with a new shape (same element count).
     pub fn reshape(mut self, shape: Vec<usize>) -> Self {
         let n: usize = shape.iter().product();
@@ -131,6 +139,9 @@ mod tests {
         assert_eq!(t.rows(), 2);
         assert_eq!(t.cols(), 3);
         assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.rows_slice(0, 2), t.data());
+        assert_eq!(t.rows_slice(1, 2), &[4., 5., 6.]);
+        assert!(t.rows_slice(1, 1).is_empty());
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! The zero-allocation pin for the binary serve hot path.
+//!
+//! A counting global allocator wraps `System`; the test drives a warmed
+//! in-process binary session (session decode → admission → batch worker →
+//! reply encode → session write) and asserts the steady-state request→reply
+//! loop performs **zero** heap allocations. This file must stay a
+//! single-test integration binary: any concurrently running test would
+//! allocate on another thread and poison the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::{self, Read};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use a2q::serve::{
+    run_binary_session, run_worker, wire, AdmissionQueue, BatchPolicy, BufferPool, FaultPlan,
+    ModelSource, PlanCache, ServeStats,
+};
+
+/// Counts every allocation-path call (alloc, alloc_zeroed, realloc);
+/// deallocations are free to happen (returning pooled storage must not
+/// count against the hot path, and `dealloc` never allocates).
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Serves the same request frame `total` times from one flat buffer and
+/// snapshots the allocation counter the moment the warmup frames have been
+/// fully consumed. The session reads with exact-size `read_exact` calls
+/// that never straddle a frame boundary, so the snapshot lands exactly
+/// between two requests.
+struct SnappingReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    boundary: usize,
+    snapshot: &'a AtomicU64, // u64::MAX until taken
+}
+
+impl Read for SnappingReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = buf.len().min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        if self.pos >= self.boundary && self.snapshot.load(Ordering::SeqCst) == u64::MAX {
+            self.snapshot.store(ALLOC_CALLS.load(Ordering::SeqCst), Ordering::SeqCst);
+        }
+        Ok(n)
+    }
+}
+
+const SPEC: &str = "alloc:12x8x3:m4n4p16";
+const ROWS: usize = 2;
+const COLS: usize = 12;
+const WARM: usize = 8;
+const MEASURE: usize = 32;
+
+#[test]
+fn warmed_binary_infer_round_trip_allocates_nothing() {
+    // In-process serving core: cache + queue + pool + one batch worker,
+    // exactly the pieces a TCP session would use.
+    let cache = Arc::new(PlanCache::new(1, FaultPlan::none()));
+    let hash = cache.insert_model("alloc", ModelSource::Synth(SPEC.to_string())).unwrap();
+    let queue = Arc::new(AdmissionQueue::new(16));
+    let stats = Arc::new(ServeStats::default());
+    let pool = Arc::new(BufferPool::new(16));
+    let shutdown = AtomicBool::new(false);
+    let policy = BatchPolicy { max_rows: 8, window: Duration::ZERO };
+    let worker = {
+        let (queue, cache, stats) = (queue.clone(), cache.clone(), stats.clone());
+        std::thread::spawn(move || run_worker(queue, cache, stats, policy, FaultPlan::none()))
+    };
+
+    // One infer frame, repeated: codes well inside the m4n4 input grid.
+    let codes: Vec<i64> = (0..ROWS * COLS).map(|i| (i % 4) as i64).collect();
+    let mut frame = Vec::new();
+    wire::encode_infer_request(&mut frame, hash, ROWS, COLS, 0, &codes);
+    let total = WARM + MEASURE;
+    let stream: Vec<u8> = frame.repeat(total);
+
+    let snapshot = AtomicU64::new(u64::MAX);
+    let reader = SnappingReader {
+        data: &stream,
+        pos: 0,
+        boundary: WARM * frame.len(),
+        snapshot: &snapshot,
+    };
+    // Pre-sized reply sink: Vec<u8> as io::Write only appends, and with
+    // enough capacity it never reallocates mid-measurement.
+    let mut replies: Vec<u8> = Vec::with_capacity(total * 4096);
+
+    run_binary_session(
+        reader,
+        &mut replies,
+        &queue,
+        &cache,
+        &stats,
+        &shutdown,
+        None,
+        Duration::from_secs(60),
+        &pool,
+    );
+    let end = ALLOC_CALLS.load(Ordering::SeqCst);
+
+    queue.close(&stats);
+    worker.join().expect("worker exits cleanly");
+
+    // Every request got a successful reply...
+    let mut cursor = io::Cursor::new(&replies[..]);
+    let mut scratch = Vec::new();
+    let mut served = 0usize;
+    let mut first: Option<Vec<f32>> = None;
+    while (cursor.position() as usize) < replies.len() {
+        match wire::read_reply(&mut cursor, &mut scratch).expect("well-formed reply frame") {
+            wire::Reply::InferOk { rows, cols, overflow_events, outputs, .. } => {
+                assert_eq!((rows, cols), (ROWS, 3));
+                assert_eq!(overflow_events, 0, "A2Q net at target P");
+                match &first {
+                    None => first = Some(outputs),
+                    Some(f) => assert_eq!(f, &outputs, "identical requests, identical replies"),
+                }
+                served += 1;
+            }
+            other => panic!("expected InferOk, got {other:?}"),
+        }
+    }
+    assert_eq!(served, total, "every frame must be served");
+
+    // ...and the measured window allocated nothing, anywhere: not in the
+    // session decode, not in admission, not in the worker's execute or
+    // reply encode, not in pool recycling.
+    let snap = snapshot.load(Ordering::SeqCst);
+    assert_ne!(snap, u64::MAX, "warmup boundary was never reached");
+    assert_eq!(
+        end - snap,
+        0,
+        "steady-state binary serve path must not allocate ({MEASURE} requests allocated {} times)",
+        end - snap
+    );
+    assert_eq!(stats.snapshot().completed, total as u64);
+}

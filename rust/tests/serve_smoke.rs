@@ -11,7 +11,8 @@ use a2q::json::Json;
 use a2q::model::{parse_synth_spec, QNetwork};
 use a2q::rng::Rng;
 use a2q::serve::{
-    execute_micro_batch, FaultPlan, LoadgenConfig, ModelSource, ServeConfig, ServeError, Server,
+    execute_micro_batch, wire, FaultPlan, LoadgenConfig, ModelSource, ServeConfig, ServeError,
+    Server, WireFormat,
 };
 use a2q::tensor::Tensor;
 
@@ -164,6 +165,62 @@ impl Client {
     }
 }
 
+/// Binary-protocol counterpart of [`Client`]: one reusable request frame
+/// and one reply scratch per connection, the way a real binary client
+/// stays allocation-free.
+struct BinClient {
+    stream: TcpStream,
+    frame: Vec<u8>,
+    scratch: Vec<u8>,
+}
+
+impl BinClient {
+    fn connect(addr: std::net::SocketAddr) -> BinClient {
+        BinClient {
+            stream: TcpStream::connect(addr).expect("connect"),
+            frame: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    fn infer(
+        &mut self,
+        hash: u64,
+        rows: usize,
+        cols: usize,
+        codes: &[i64],
+        deadline_ms: u64,
+    ) -> wire::Reply {
+        wire::encode_infer_request(&mut self.frame, hash, rows, cols, deadline_ms, codes);
+        self.stream.write_all(&self.frame).expect("write frame");
+        wire::read_reply(&mut self.stream, &mut self.scratch).expect("reply frame")
+    }
+
+    fn simple(&mut self, op: u8) -> wire::Reply {
+        wire::encode_simple_request(&mut self.frame, op);
+        self.stream.write_all(&self.frame).expect("write frame");
+        wire::read_reply(&mut self.stream, &mut self.scratch).expect("reply frame")
+    }
+}
+
+/// Binary requests address models by hash; resolve it once over JSON,
+/// exactly as real binary clients are expected to.
+fn model_hash(c: &mut Client, model: &str) -> u64 {
+    let info = c.call(Json::obj(vec![
+        ("op", Json::str("model_info")),
+        ("model", Json::str(model)),
+    ]));
+    assert!(ok(&info), "{info:?}");
+    info.get("hash").unwrap().as_str().unwrap().parse().expect("hash parses")
+}
+
+fn err_code(reply: &wire::Reply) -> &'static str {
+    match reply {
+        wire::Reply::Err { tag, .. } => ServeError::code_for_tag(*tag).unwrap_or("unknown_tag"),
+        other => panic!("expected Reply::Err, got {other:?}"),
+    }
+}
+
 fn ok(reply: &Json) -> bool {
     reply.get("ok").and_then(|v| v.as_bool()).unwrap_or(false)
 }
@@ -246,6 +303,7 @@ fn overload_sheds_typed_and_server_survives() {
         rows_per_req: 2,
         deadline_ms: 120,
         seed: 9,
+        wire: WireFormat::Json,
     })
     .expect("loadgen");
 
@@ -307,6 +365,153 @@ fn worker_panic_rejects_only_its_batch_and_respawns() {
     assert!(ok(&c.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
     drop(c);
     server.join();
+}
+
+/// Binary-protocol end-to-end: negotiation by first byte on the same
+/// listener that serves JSON, framed infer round trips, typed refusals
+/// that keep the connection, framing loss that closes it, and shutdown.
+#[test]
+fn binary_wire_round_trip_and_typed_errors() {
+    let server = test_server(quiet_cfg(), FaultPlan::none());
+    let addr = server.addr();
+    let mut jc = Client::connect(addr);
+    let hash = model_hash(&mut jc, "smoke");
+
+    let mut b = BinClient::connect(addr);
+    assert_eq!(b.simple(wire::OP_PING), wire::Reply::Ok { op: wire::OP_PING });
+
+    let codes: Vec<i64> = (0..2 * 12).map(|i| (i % 4) as i64).collect();
+    let first = match b.infer(hash, 2, 12, &codes, 1000) {
+        wire::Reply::InferOk { rows, cols, overflow_events, outputs, .. } => {
+            assert_eq!((rows, cols), (2, 3));
+            assert_eq!(overflow_events, 0, "A2Q net at target P");
+            outputs
+        }
+        other => panic!("expected InferOk, got {other:?}"),
+    };
+    // Same codes again: bit-identical reply.
+    match b.infer(hash, 2, 12, &codes, 1000) {
+        wire::Reply::InferOk { outputs, .. } => assert_eq!(first, outputs),
+        other => panic!("expected InferOk, got {other:?}"),
+    }
+
+    // Typed refusals, each leaving the connection framed and serving.
+    assert_eq!(err_code(&b.infer(hash ^ 1, 1, 12, &codes[..12], 100)), "unknown_model");
+    assert_eq!(err_code(&b.infer(hash, 1, 11, &codes[..11], 100)), "bad_request");
+    let mut bad_codes = codes[..12].to_vec();
+    bad_codes[5] = 99;
+    match b.infer(hash, 1, 12, &bad_codes, 100) {
+        wire::Reply::Err { tag, message, .. } => {
+            assert_eq!(ServeError::code_for_tag(tag), Some("bad_request"));
+            // Same validator wording as the JSON path for the same violation.
+            assert!(message.contains("row 0 code 5 = 99"), "{message}");
+        }
+        other => panic!("expected Reply::Err, got {other:?}"),
+    }
+    match b.infer(hash, 2, 12, &codes, 1000) {
+        wire::Reply::InferOk { outputs, .. } => {
+            assert_eq!(first, outputs, "refusals must not perturb later replies")
+        }
+        other => panic!("expected InferOk, got {other:?}"),
+    }
+
+    // Framing loss: a corrupt magic gets one typed error frame, then the
+    // server hangs up on this connection — but only this connection.
+    let mut bad_frame = Vec::new();
+    wire::encode_simple_request(&mut bad_frame, wire::OP_PING);
+    bad_frame[0] = b'X';
+    b.stream.write_all(&bad_frame).expect("write");
+    match wire::read_reply(&mut b.stream, &mut b.scratch).expect("error frame") {
+        wire::Reply::Err { tag, message, .. } => {
+            assert_eq!(ServeError::code_for_tag(tag), Some("bad_request"));
+            assert!(message.contains("magic"), "{message}");
+        }
+        other => panic!("expected Reply::Err, got {other:?}"),
+    }
+    assert!(
+        wire::read_reply(&mut b.stream, &mut b.scratch).is_err(),
+        "connection must close after framing loss"
+    );
+
+    // The JSON connection on the same listener was untouched throughout.
+    assert!(ok(&jc.call(Json::obj(vec![("op", Json::str("ping"))]))));
+
+    // Shutdown over the binary protocol.
+    let mut b2 = BinClient::connect(addr);
+    assert_eq!(b2.simple(wire::OP_SHUTDOWN), wire::Reply::Ok { op: wire::OP_SHUTDOWN });
+    drop(b2);
+    drop(jc);
+    server.join();
+}
+
+/// The wire-parity property: for identical requests the JSON and binary
+/// protocols return bit-identical outputs and `OverflowStats` counters,
+/// and identical typed error codes on refusals — across batch shapes and
+/// worker counts. (Kernel-path invariance is covered at the compute layer
+/// by `micro_batched_serving_is_bit_identical_to_per_request_execution`;
+/// both wire encoders sit strictly above kernel dispatch.)
+#[test]
+fn json_and_binary_wire_paths_are_bit_identical() {
+    for workers in [1usize, 3] {
+        let cfg = ServeConfig { workers, ..quiet_cfg() };
+        let server = test_server(cfg, FaultPlan::none());
+        let addr = server.addr();
+        let mut jc = Client::connect(addr);
+        let hash = model_hash(&mut jc, "smoke");
+        let info = jc.call(Json::obj(vec![
+            ("op", Json::str("model_info")),
+            ("model", Json::str("smoke")),
+        ]));
+        let lo = info.get("code_lo").unwrap().as_f64().unwrap() as i64;
+        let hi = info.get("code_hi").unwrap().as_f64().unwrap() as i64;
+        let mut b = BinClient::connect(addr);
+        let mut rng = Rng::new(0xB17 + workers as u64);
+        for shape in [vec![1usize], vec![2, 3], vec![1, 4, 2, 1]] {
+            for rows in shape {
+                let codes: Vec<i64> = (0..rows * 12)
+                    .map(|_| lo + rng.below((hi - lo + 1) as usize) as i64)
+                    .collect();
+                let rows_json: Vec<Vec<i64>> =
+                    codes.chunks(12).map(|r| r.to_vec()).collect();
+                let jreply = jc.infer("smoke", rows_json, 1000);
+                assert!(ok(&jreply), "{jreply:?}");
+                let joutputs = jreply.get("outputs").unwrap().as_arr().unwrap();
+                let joverflow = jreply.get("overflow_events").unwrap().as_u64().unwrap();
+                match b.infer(hash, rows, 12, &codes, 1000) {
+                    wire::Reply::InferOk { rows: br, cols: bc, overflow_events, outputs, .. } => {
+                        assert_eq!((br, bc), (rows, 3), "w={workers} rows={rows}");
+                        assert_eq!(overflow_events, joverflow, "w={workers} rows={rows}");
+                        for r in 0..rows {
+                            let jrow = joutputs[r].as_arr().unwrap();
+                            assert_eq!(jrow.len(), 3);
+                            for c in 0..3 {
+                                // JSON floats render shortest-round-trip, so
+                                // parsing back gives exactly `f32 as f64`.
+                                let jv = jrow[c].as_f64().unwrap();
+                                let bv = outputs[r * 3 + c] as f64;
+                                assert_eq!(
+                                    jv.to_bits(),
+                                    bv.to_bits(),
+                                    "w={workers} rows={rows} r={r} c={c}: json {jv} vs binary {bv}"
+                                );
+                            }
+                        }
+                    }
+                    other => panic!("expected InferOk, got {other:?}"),
+                }
+            }
+        }
+        // Error-code parity for the same violations.
+        assert_eq!(code(&jc.infer("nope", vec![vec![lo; 12]], 100)), "unknown_model");
+        assert_eq!(err_code(&b.infer(hash ^ 1, 1, 12, &[lo; 12], 100)), "unknown_model");
+        assert_eq!(code(&jc.infer("smoke", vec![vec![hi + 1; 12]], 100)), "bad_request");
+        assert_eq!(err_code(&b.infer(hash, 1, 12, &[hi + 1; 12], 100)), "bad_request");
+
+        assert_eq!(b.simple(wire::OP_SHUTDOWN), wire::Reply::Ok { op: wire::OP_SHUTDOWN });
+        drop(b);
+        drop(jc);
+        server.join();
+    }
 }
 
 /// An injected cache-load failure is a per-request typed error on an
