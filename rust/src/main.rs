@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use a2q::accsim::{dot_accumulate_multi, AccMode, NetworkPlan};
 use a2q::cli::Args;
@@ -26,7 +26,10 @@ use a2q::rng::Rng;
 use a2q::runtime::{
     artifact::discover_models, make_backend, native::native_models, BackendKind, ModelManifest,
 };
-use a2q::serve::{FaultPlan, LoadgenConfig, ModelSource, ServeConfig, Server};
+use a2q::serve::{
+    BackendSpec, FaultPlan, LoadgenConfig, ModelSource, RetryPolicy, Router, RouterConfig,
+    ServeConfig, Server,
+};
 use a2q::Tensor;
 
 const USAGE: &str = "\
@@ -67,7 +70,7 @@ COMMANDS:
   serve      --models NAME=FILE.json|NAME:W0xW1x..:mMnNpP[,...]
              [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 64]
              [--max-batch-rows 64] [--batch-window-ms 1]
-             [--deadline-ms 1000] [--pool-retain 0]
+             [--deadline-ms 1000] [--pool-retain 0] [--idle-timeout-ms 0]
              (long-running TCP inference service over exported or synthetic
               networks: bounded admission queue with typed overloaded /
               deadline_exceeded rejections, deadline-aware micro-batching
@@ -75,16 +78,43 @@ COMMANDS:
               automatic respawn; speaks line-JSON and the zero-copy binary
               frame protocol on the same port (first byte negotiates);
               --pool-retain 0 auto-sizes the request buffer pool;
-              A2Q_FAULT=panic_batch:N,delay_ms:D,cache_load injects
-              faults; blocks until a client sends {\"op\":\"shutdown\"})
+              --idle-timeout-ms closes silent connections typed;
+              A2Q_FAULT=panic_batch:N,delay_ms:D,cache_load,conn_drop:N,
+              ping_stall_ms:D injects faults; blocks until a client sends
+              {\"op\":\"shutdown\"})
+  route      --backend ADDR [--backend ADDR]... | --spawn SPEC[,SPEC...]
+             [--addr 127.0.0.1:7979] [--workers 2]
+             [--probe-interval-ms 50] [--probe-timeout-ms 250]
+             [--breaker 3] [--retry-max 3] [--retry-base-ms 2]
+             [--retry-cap-ms 50] [--hedge-ms 0] [--connect-timeout-ms 1000]
+             [--deadline-ms 1000] [--respawn true]
+             (fault-tolerant shard router over N a2q serve replicas:
+              health-probes every replica, breaks the circuit on
+              consecutive failures, retries safe-to-retry outcomes with
+              decorrelated-jitter backoff, optionally hedges slow infers,
+              and drains/restarts replicas with zero in-flight loss;
+              --backend attaches running replicas, --spawn starts children
+              on ephemeral ports (same SPEC grammar as serve --models) and
+              respawns them when they die; clients connect to the router
+              exactly as they would to a replica — either wire protocol;
+              blocks until a client sends shutdown)
+  ctl        <ping|stats|drain|resume|shutdown> [--addr 127.0.0.1:7979]
+             [--backend ADDR] [--journal LABEL]
+             (one-shot JSON control-plane client for a2q serve/route:
+              prints the reply line and exits nonzero on ok=false;
+              drain/resume against a router take --backend (a replica
+              address from ctl stats); ctl stats --journal route/ records
+              route/retry_rate to BENCH_accsim.json for perf gating)
   loadgen    --model NAME [--addr 127.0.0.1:7878] [--rps 200]
              [--duration-ms 2000] [--connections 4] [--rows 4]
-             [--deadline-ms 200] [--seed 1] [--wire json|binary]
-             [--journal LABEL] [--shutdown]
-             (open-loop load against a running a2q serve: prints a JSON
-              report with p50/p99 latency, rows/s and typed shed counts;
+             [--deadline-ms 200] [--connect-timeout-ms 1000] [--seed 1]
+             [--wire json|binary] [--journal LABEL] [--shutdown]
+             (open-loop load against a running a2q serve or route: prints a
+              JSON report with p50/p99 latency, rows/s, typed shed counts
+              and transport-fault classes (conn_refused/conn_reset/timeout);
               --wire picks the protocol driven (default json);
-              --journal LABEL records serve/LABEL_* rows to
+              --journal LABEL records serve/LABEL_* rows — or LABEL*
+              verbatim when LABEL ends in '/' (e.g. route/) — to
               BENCH_accsim.json and refreshes EXPERIMENTS.md §Perf-Serve;
               --shutdown stops the server afterwards)
   models     (list native registry + artifacts-dir models)
@@ -102,7 +132,7 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(raw, &["signed", "float-ref", "unconstrained", "shutdown"])?;
+    let args = Args::parse(raw, &["signed", "float-ref", "unconstrained", "shutdown", "respawn"])?;
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let results = PathBuf::from(args.str_or("results", "results"));
     let cmd = args
@@ -121,6 +151,8 @@ fn main() -> Result<()> {
         "netsim" => cmd_netsim(&args, &results),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
+        "ctl" => cmd_ctl(&args),
         "loadgen" => cmd_loadgen(&args),
         "models" => cmd_models(&artifacts),
         "perfcheck" => cmd_perfcheck(&args),
@@ -731,7 +763,7 @@ fn parse_model_entry(entry: &str) -> Result<(String, ModelSource)> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "artifacts", "results", "models", "addr", "workers", "queue-cap", "max-batch-rows",
-        "batch-window-ms", "deadline-ms", "pool-retain",
+        "batch-window-ms", "deadline-ms", "pool-retain", "idle-timeout-ms",
     ])?;
     let models: Vec<(String, ModelSource)> = args
         .str_or("models", "")
@@ -747,6 +779,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_window_ms: args.num_or("batch-window-ms", 1u64)?,
         default_deadline_ms: args.num_or("deadline-ms", 1000u64)?,
         pool_retain: args.num_or("pool-retain", 0usize)?,
+        idle_timeout_ms: args.num_or("idle-timeout-ms", 0u64)?,
     };
     let fault = FaultPlan::from_env();
     if !fault.is_noop() {
@@ -767,10 +800,115 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_route(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifacts", "results", "backend", "spawn", "addr", "workers", "probe-interval-ms",
+        "probe-timeout-ms", "breaker", "retry-max", "retry-base-ms", "retry-cap-ms", "hedge-ms",
+        "connect-timeout-ms", "deadline-ms", "respawn",
+    ])?;
+    let mut specs: Vec<BackendSpec> = args
+        .all_strs("backend")
+        .into_iter()
+        .map(BackendSpec::Attached)
+        .collect();
+    let workers = args.num_or("workers", 2usize)?;
+    for group in args.all_strs("spawn") {
+        for spec in group.split(',').filter(|s| !s.trim().is_empty()) {
+            let spec = spec.trim();
+            // Validate the model grammar up front so a typo fails the router
+            // with one error instead of N dead children.
+            parse_model_entry(spec)?;
+            specs.push(BackendSpec::Spawn { models: spec.to_string(), workers });
+        }
+    }
+    anyhow::ensure!(!specs.is_empty(), "route needs at least one --backend or --spawn SPEC");
+    let cfg = RouterConfig {
+        addr: args.str_or("addr", "127.0.0.1:7979"),
+        probe_interval_ms: args.num_or("probe-interval-ms", 50u64)?,
+        probe_timeout_ms: args.num_or("probe-timeout-ms", 250u64)?,
+        breaker_threshold: args.num_or("breaker", 3u32)?,
+        retry: RetryPolicy {
+            max_attempts: args.num_or("retry-max", 3u32)?,
+            base_ms: args.num_or("retry-base-ms", 2u64)?,
+            cap_ms: args.num_or("retry-cap-ms", 50u64)?,
+        },
+        hedge_ms: args.num_or("hedge-ms", 0u64)?,
+        connect_timeout_ms: args.num_or("connect-timeout-ms", 1000u64)?,
+        default_deadline_ms: args.num_or("deadline-ms", 1000u64)?,
+        respawn: args.bool_or("respawn", true)?,
+    };
+    let router = Router::start(&cfg, &specs)?;
+    println!("[route] listening on {}", router.addr());
+    for snap in router.replicas().snapshot() {
+        let kind = if snap.spawned { "spawned" } else { "attached" };
+        println!("[route] backend {} ({kind})", snap.addr);
+    }
+    println!(
+        "[route] probe={}ms breaker={} retries={} hedge={}ms",
+        cfg.probe_interval_ms, cfg.breaker_threshold, cfg.retry.max_attempts, cfg.hedge_ms
+    );
+    // Block until a client sends {"op":"shutdown"} (or a binary shutdown op).
+    router.join();
+    println!("[route] shut down cleanly");
+    Ok(())
+}
+
+fn cmd_ctl(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "results", "addr", "backend", "journal"])?;
+    let op = args.positional.get(1).map(String::as_str).unwrap_or("");
+    anyhow::ensure!(
+        matches!(op, "ping" | "stats" | "drain" | "resume" | "shutdown"),
+        "a2q ctl needs an op: ping|stats|drain|resume|shutdown"
+    );
+    let addr = args.str_or("addr", "127.0.0.1:7979");
+    let mut fields = vec![("op", a2q::json::Json::str(op))];
+    if let Some(backend) = args.opt_str("backend") {
+        fields.push(("backend", a2q::json::Json::str(backend)));
+    }
+    let mut line = a2q::json::Json::obj(fields).to_string();
+    line.push('\n');
+
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(line.as_bytes())?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    let reply = reply.trim_end();
+    anyhow::ensure!(!reply.is_empty(), "{addr} closed the connection without a reply");
+    println!("{reply}");
+    let parsed = a2q::json::Json::parse(reply)?;
+    let ok = parsed.get("ok")?.as_bool()?;
+    anyhow::ensure!(ok, "{op} against {addr} returned ok=false");
+
+    if let Some(label) = args.opt_str("journal") {
+        anyhow::ensure!(op == "stats", "--journal only applies to ctl stats");
+        let forwarded = parsed.get("forwarded")?.as_f64()?;
+        let retries = parsed.get("retries")?.as_f64()?;
+        let rate = if forwarded > 0.0 { retries / forwarded } else { 0.0 };
+        let name = if label.ends_with('/') {
+            format!("{label}retry_rate")
+        } else {
+            format!("{label}/retry_rate")
+        };
+        let rec = a2q::perf::BenchRecord {
+            name: name.clone(),
+            ns_per_iter: rate,
+            mac_per_s: None,
+            sparsity: None,
+        };
+        let path = a2q::perf::record_benches(&[rec])?;
+        eprintln!("[ctl] journaled {name}={rate:.4} to {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_loadgen(args: &Args) -> Result<()> {
     args.check_known(&[
         "artifacts", "results", "addr", "model", "rps", "duration-ms", "connections", "rows",
-        "deadline-ms", "seed", "wire", "journal", "shutdown",
+        "deadline-ms", "connect-timeout-ms", "seed", "wire", "journal", "shutdown",
     ])?;
     let wire = match args.str_or("wire", "json").as_str() {
         "json" => a2q::serve::WireFormat::Json,
@@ -785,6 +923,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         connections: args.num_or("connections", 4usize)?,
         rows_per_req: args.num_or("rows", 4usize)?,
         deadline_ms: args.num_or("deadline-ms", 200u64)?,
+        connect_timeout_ms: args.num_or("connect-timeout-ms", 1000u64)?,
         seed: args.num_or("seed", 1u64)?,
         wire,
     };
@@ -792,9 +931,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let server_stats = a2q::serve::loadgen::fetch_server_stats(&cfg.addr).ok();
     if let Some(label) = args.opt_str("journal") {
         let path = a2q::serve::loadgen::journal_report(&label, &report)?;
-        eprintln!("[loadgen] journaled serve/{label}_* to {}", path.display());
+        eprintln!("[loadgen] journaled {label} metrics to {}", path.display());
     }
-    if args.bool_or("shutdown", false) {
+    if args.bool_or("shutdown", false)? {
         a2q::serve::loadgen::send_shutdown(&cfg.addr)?;
         eprintln!("[loadgen] sent shutdown to {}", cfg.addr);
     }

@@ -252,10 +252,14 @@ pub struct ServeStats {
     pub completed: AtomicU64,
     pub shed_overloaded: AtomicU64,
     pub shed_deadline: AtomicU64,
+    pub shed_draining: AtomicU64,
     pub worker_panics: AtomicU64,
     pub respawns: AtomicU64,
     pub batches: AtomicU64,
     pub batched_rows: AtomicU64,
+    /// Gauge, not a counter: requests admitted whose outcome has not yet
+    /// been delivered (queued or executing). What a drain bleeds to zero.
+    pub in_flight: AtomicU64,
 }
 
 /// A point-in-time copy of [`ServeStats`] (what the wire protocol carries).
@@ -265,10 +269,12 @@ pub struct StatsSnapshot {
     pub completed: u64,
     pub shed_overloaded: u64,
     pub shed_deadline: u64,
+    pub shed_draining: u64,
     pub worker_panics: u64,
     pub respawns: u64,
     pub batches: u64,
     pub batched_rows: u64,
+    pub in_flight: u64,
 }
 
 impl ServeStats {
@@ -278,10 +284,12 @@ impl ServeStats {
             completed: self.completed.load(Ordering::Relaxed),
             shed_overloaded: self.shed_overloaded.load(Ordering::Relaxed),
             shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            shed_draining: self.shed_draining.load(Ordering::Relaxed),
             worker_panics: self.worker_panics.load(Ordering::Relaxed),
             respawns: self.respawns.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_rows: self.batched_rows.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
         }
     }
 }
@@ -293,6 +301,10 @@ struct QueueState {
     /// `queue`, so filtering never allocates.
     spare: VecDeque<JobRequest>,
     closed: bool,
+    /// Drain mode: new submits are refused typed (`Draining`) while queued
+    /// and executing work completes normally — unlike `close`, nothing
+    /// already admitted is rejected. Reversible via `set_draining(false)`.
+    draining: bool,
     /// Model hash the previous batch served — the round-robin cursor.
     last_model: Option<u64>,
 }
@@ -313,6 +325,7 @@ impl AdmissionQueue {
                 queue: VecDeque::with_capacity(capacity),
                 spare: VecDeque::with_capacity(capacity),
                 closed: false,
+                draining: false,
                 last_model: None,
             }),
             cv: Condvar::new(),
@@ -331,6 +344,9 @@ impl AdmissionQueue {
         if st.closed {
             return Err(RejectedJob { request: req, error: ServeError::ShuttingDown });
         }
+        if st.draining {
+            return Err(RejectedJob { request: req, error: ServeError::Draining });
+        }
         if st.queue.len() >= self.capacity {
             let error =
                 ServeError::Overloaded { queued: st.queue.len(), capacity: self.capacity };
@@ -345,6 +361,16 @@ impl AdmissionQueue {
     /// Number of requests currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Enter or leave drain mode (see `QueueState::draining`).
+    pub fn set_draining(&self, draining: bool) {
+        self.inner.lock().unwrap().draining = draining;
+    }
+
+    /// Whether the queue is refusing new work as `Draining`.
+    pub fn draining(&self) -> bool {
+        self.inner.lock().unwrap().draining
     }
 
     pub fn is_empty(&self) -> bool {
@@ -624,6 +650,32 @@ mod tests {
         let r = JobRequest::new(2, 7, WireFormat::Json, buf, LONG, slot.sender());
         r.cancel();
         assert!(slot.try_recv().is_none());
+    }
+
+    #[test]
+    fn drain_refuses_new_work_but_keeps_admitted_work_and_is_reversible() {
+        let q = AdmissionQueue::new(4);
+        let stats = ServeStats::default();
+        let (a, _ra) = req(1, 7, 1, LONG);
+        q.submit(a).unwrap();
+        q.set_draining(true);
+        assert!(q.draining());
+        // New work is refused typed, already-admitted work is untouched.
+        let (b, rb) = req(2, 7, 1, LONG);
+        let rejected = q.submit(b).unwrap_err();
+        assert_eq!(rejected.error, ServeError::Draining);
+        assert_eq!(rejected.error.code(), "draining");
+        rejected.request.cancel();
+        assert!(rb.try_recv().is_none());
+        assert_eq!(q.len(), 1, "drain must not reject queued requests");
+        let mut batch = Vec::new();
+        q.next_batch(4, Duration::ZERO, &stats, &mut batch).unwrap();
+        assert_eq!(batch.len(), 1, "queued work still executes while draining");
+        batch.drain(..).for_each(JobRequest::cancel);
+        // Resume re-admits.
+        q.set_draining(false);
+        let (c, _rc) = req(3, 7, 1, LONG);
+        q.submit(c).unwrap();
     }
 
     #[test]

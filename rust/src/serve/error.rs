@@ -25,8 +25,16 @@ pub enum ServeError {
     BadRequest { reason: String },
     /// Loading (or reloading after eviction) the model failed validation.
     LoadFailed { model: String, reason: String },
-    /// The server is draining: no new work admitted.
+    /// The server is shutting down: no new work admitted, queue rejected.
     ShuttingDown,
+    /// The server is draining: no new work admitted, but in-flight work
+    /// completes. A router treats this as safe-to-retry on another replica.
+    Draining,
+    /// The router has no healthy replica to forward to.
+    NoBackend { replicas: usize },
+    /// The connection sat idle past the per-connection read timeout and was
+    /// closed by the server (slow-loris defence).
+    IdleTimeout { idle_ms: u64 },
 }
 
 impl ServeError {
@@ -40,6 +48,9 @@ impl ServeError {
             ServeError::BadRequest { .. } => "bad_request",
             ServeError::LoadFailed { .. } => "load_failed",
             ServeError::ShuttingDown => "shutting_down",
+            ServeError::Draining => "draining",
+            ServeError::NoBackend { .. } => "no_backend",
+            ServeError::IdleTimeout { .. } => "idle_timeout",
         }
     }
 
@@ -55,6 +66,9 @@ impl ServeError {
             ServeError::BadRequest { .. } => 5,
             ServeError::LoadFailed { .. } => 6,
             ServeError::ShuttingDown => 7,
+            ServeError::Draining => 8,
+            ServeError::NoBackend { .. } => 9,
+            ServeError::IdleTimeout { .. } => 10,
         }
     }
 
@@ -70,6 +84,9 @@ impl ServeError {
             5 => "bad_request",
             6 => "load_failed",
             7 => "shutting_down",
+            8 => "draining",
+            9 => "no_backend",
+            10 => "idle_timeout",
             _ => return None,
         })
     }
@@ -93,6 +110,13 @@ impl std::fmt::Display for ServeError {
                 write!(f, "loading model {model:?} failed: {reason}")
             }
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::Draining => write!(f, "server is draining: no new work admitted"),
+            ServeError::NoBackend { replicas } => {
+                write!(f, "no healthy backend replica ({replicas} registered)")
+            }
+            ServeError::IdleTimeout { idle_ms } => {
+                write!(f, "connection idle past the {idle_ms}ms read timeout")
+            }
         }
     }
 }
@@ -113,6 +137,9 @@ mod tests {
             (ServeError::BadRequest { reason: "width".into() }, "bad_request"),
             (ServeError::LoadFailed { model: "m".into(), reason: "NaN".into() }, "load_failed"),
             (ServeError::ShuttingDown, "shutting_down"),
+            (ServeError::Draining, "draining"),
+            (ServeError::NoBackend { replicas: 3 }, "no_backend"),
+            (ServeError::IdleTimeout { idle_ms: 30_000 }, "idle_timeout"),
         ];
         for (e, code) in cases {
             assert_eq!(e.code(), code);
@@ -131,6 +158,9 @@ mod tests {
             ServeError::BadRequest { reason: "r".into() },
             ServeError::LoadFailed { model: "m".into(), reason: "r".into() },
             ServeError::ShuttingDown,
+            ServeError::Draining,
+            ServeError::NoBackend { replicas: 1 },
+            ServeError::IdleTimeout { idle_ms: 1 },
         ];
         let mut seen = std::collections::BTreeSet::new();
         for e in &all {

@@ -14,10 +14,13 @@
 //!
 //! `panic_batch:N` panics the worker executing the Nth micro-batch
 //! (1-based, once); `delay_ms:D` sleeps every batch D milliseconds before
-//! executing; `cache_load` fails every plan-cache load. Unknown or
-//! malformed tokens are ignored (same forgiving policy as
-//! `A2Q_STREAM_REFRESH`): a typo'd fault spec must not change production
-//! behaviour.
+//! executing; `cache_load` fails every plan-cache load; `conn_drop:N` cuts
+//! each connection mid-frame while writing its Nth reply (1-based), so a
+//! router sees a torn reply on a live replica; `ping_stall_ms:D` delays
+//! every health-probe (`ping`) reply by D milliseconds, so probe-timeout
+//! paths are deterministic. Unknown or malformed tokens are ignored (same
+//! forgiving policy as `A2Q_STREAM_REFRESH`): a typo'd fault spec must not
+//! change production behaviour.
 
 /// The injected-failure schedule a server runs under. `Default` is no
 /// faults.
@@ -30,6 +33,12 @@ pub struct FaultPlan {
     pub delay_ms: Option<u64>,
     /// Fail every plan-cache model load with a typed `LoadFailed`.
     pub cache_load: bool,
+    /// Close each connection after writing only half of its (1-based) Nth
+    /// reply frame: the client sees a torn reply from a live replica.
+    pub conn_drop: Option<u64>,
+    /// Sleep this long before answering every `ping`, stalling health
+    /// probes past their timeout without touching the infer path.
+    pub ping_stall_ms: Option<u64>,
 }
 
 impl FaultPlan {
@@ -53,6 +62,8 @@ impl FaultPlan {
                 ("panic_batch", Some(n)) if n > 0 => plan.panic_batch = Some(n),
                 ("delay_ms", Some(d)) => plan.delay_ms = Some(d),
                 ("cache_load", _) => plan.cache_load = true,
+                ("conn_drop", Some(n)) if n > 0 => plan.conn_drop = Some(n),
+                ("ping_stall_ms", Some(d)) => plan.ping_stall_ms = Some(d),
                 _ => {} // unknown/malformed token: no behaviour change
             }
         }
@@ -82,6 +93,9 @@ mod tests {
         assert_eq!(p.panic_batch, Some(3));
         assert_eq!(p.delay_ms, Some(20));
         assert!(p.cache_load);
+        let p = FaultPlan::from_spec(Some("conn_drop:2,ping_stall_ms:250"));
+        assert_eq!(p.conn_drop, Some(2));
+        assert_eq!(p.ping_stall_ms, Some(250));
         // spacing tolerated, zero delay valid
         let p = FaultPlan::from_spec(Some(" delay_ms:0 , panic_batch:1 "));
         assert_eq!((p.panic_batch, p.delay_ms, p.cache_load), (Some(1), Some(0), false));
@@ -89,7 +103,17 @@ mod tests {
 
     #[test]
     fn malformed_tokens_never_change_behaviour() {
-        for bad in ["panic_batch", "panic_batch:0", "panic_batch:x", "delay_ms", "nope:5", "::,"] {
+        for bad in [
+            "panic_batch",
+            "panic_batch:0",
+            "panic_batch:x",
+            "delay_ms",
+            "nope:5",
+            "::,",
+            "conn_drop:0",
+            "conn_drop",
+            "ping_stall_ms",
+        ] {
             assert!(FaultPlan::from_spec(Some(bad)).is_noop(), "{bad:?}");
         }
         // a bad token next to a good one leaves the good one intact

@@ -10,12 +10,18 @@
 //! outcome code of each reply.
 //!
 //! The report separates outcomes by the admission-control contract:
-//! `ok` (served, bit-exact), `shed_overloaded` / `shed_deadline` (typed
-//! rejections — the *expected* overload behaviour), `worker_panicked`
-//! (typed fault isolation) and `errors_other` (everything that would mean
-//! the contract broke: connection resets, malformed replies, unexpected
-//! codes). Latency percentiles are computed over served requests only —
-//! shed requests are availability events, not latency samples.
+//! `ok` (served, bit-exact), `shed_overloaded` / `shed_deadline` /
+//! `shed_draining` / `shed_no_backend` (typed rejections — the *expected*
+//! overload/failover behaviour), `worker_panicked` (typed fault
+//! isolation), the transport classes `conn_refused` / `conn_reset` /
+//! `timeout` (the connection failed before a reply arrived — what a router
+//! experiment must distinguish from sheds), and `errors_other` (everything
+//! that means the contract broke: malformed replies, unexpected codes).
+//! Connections reconnect per scheduled request after a transport fault, so
+//! a replica restart shows up as a bounded run of transport-classed
+//! outcomes, not a dead connection for the rest of the run. Latency
+//! percentiles are computed over served requests only — shed requests are
+//! availability events, not latency samples.
 //!
 //! The generator speaks either wire format ([`LoadgenConfig::wire`],
 //! `a2q loadgen --wire json|binary`): JSON requests exercise the original
@@ -26,8 +32,8 @@
 //! job gates on (`serve/wire_binary_rows_per_s` vs
 //! `serve/wire_json_rows_per_s`).
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -58,6 +64,8 @@ pub struct LoadgenConfig {
     pub seed: u64,
     /// Which wire protocol to drive the server with.
     pub wire: WireFormat,
+    /// TCP connect timeout (also bounds per-request reconnect attempts).
+    pub connect_timeout_ms: u64,
 }
 
 impl Default for LoadgenConfig {
@@ -72,6 +80,7 @@ impl Default for LoadgenConfig {
             deadline_ms: 200,
             seed: 1,
             wire: WireFormat::Json,
+            connect_timeout_ms: 1000,
         }
     }
 }
@@ -83,7 +92,15 @@ pub struct LoadReport {
     pub ok: u64,
     pub shed_overloaded: u64,
     pub shed_deadline: u64,
+    pub shed_draining: u64,
+    pub shed_no_backend: u64,
     pub worker_panicked: u64,
+    /// Transport classes: the connection itself failed. A router in front
+    /// must drive all three to zero; against a bare replica they separate
+    /// "refused at connect" / "died mid-exchange" / "read timed out".
+    pub conn_refused: u64,
+    pub conn_reset: u64,
+    pub timeout: u64,
     pub errors_other: u64,
     /// Latency percentiles over served requests, milliseconds.
     pub p50_ms: f64,
@@ -119,6 +136,57 @@ fn exchange(
         anyhow::bail!("server closed the connection");
     }
     Ok(Json::parse(&reply)?)
+}
+
+/// How a transport-level failure counts in the report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TransportClass {
+    Refused,
+    Reset,
+    Timeout,
+    Other,
+}
+
+/// Map an io error kind onto the report's transport classes. `WouldBlock`
+/// is how a socket read timeout surfaces on unix; `UnexpectedEof` is a
+/// frame torn mid-read (`read_exact` past a hangup).
+fn classify_io(kind: io::ErrorKind) -> TransportClass {
+    use io::ErrorKind as K;
+    match kind {
+        K::ConnectionRefused => TransportClass::Refused,
+        K::ConnectionReset
+        | K::ConnectionAborted
+        | K::BrokenPipe
+        | K::NotConnected
+        | K::UnexpectedEof => TransportClass::Reset,
+        K::WouldBlock | K::TimedOut => TransportClass::Timeout,
+        _ => TransportClass::Other,
+    }
+}
+
+/// A client connection with its buffered read half.
+struct Conn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// Connect with a bounded timeout (every resolved address gets a try) and
+/// a read timeout so a hung peer becomes a classified `timeout`, not a
+/// wedged loadgen thread.
+fn connect(addr: &str, connect_timeout: Duration, read_timeout: Duration) -> io::Result<Conn> {
+    let mut last =
+        io::Error::new(io::ErrorKind::InvalidInput, format!("no address resolved for {addr}"));
+    for sock_addr in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sock_addr, connect_timeout) {
+            Ok(stream) => {
+                stream.set_read_timeout(Some(read_timeout))?;
+                let reader = BufReader::new(stream.try_clone()?);
+                return Ok(Conn { stream, reader });
+            }
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
 }
 
 /// Ask the server for a model's grid (and plan-cache hash) so inputs can
@@ -174,15 +242,43 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
         ((duration.as_secs_f64() * cfg.rps) / connections as f64).ceil().max(1.0) as u64;
     let cfg = Arc::new(cfg.clone());
 
+    #[derive(Default)]
     struct ConnTally {
         sent: u64,
         ok: u64,
         shed_overloaded: u64,
         shed_deadline: u64,
+        shed_draining: u64,
+        shed_no_backend: u64,
         worker_panicked: u64,
+        conn_refused: u64,
+        conn_reset: u64,
+        timeout: u64,
         errors_other: u64,
         overflow_events: u64,
         latencies_ms: Vec<f64>,
+    }
+
+    impl ConnTally {
+        fn count_transport(&mut self, class: TransportClass) {
+            match class {
+                TransportClass::Refused => self.conn_refused += 1,
+                TransportClass::Reset => self.conn_reset += 1,
+                TransportClass::Timeout => self.timeout += 1,
+                TransportClass::Other => self.errors_other += 1,
+            }
+        }
+
+        fn count_code(&mut self, code: Option<&str>) {
+            match code {
+                Some("overloaded") => self.shed_overloaded += 1,
+                Some("deadline_exceeded") => self.shed_deadline += 1,
+                Some("draining") => self.shed_draining += 1,
+                Some("no_backend") => self.shed_no_backend += 1,
+                Some("worker_panicked") => self.worker_panicked += 1,
+                _ => self.errors_other += 1,
+            }
+        }
     }
 
     let started = Instant::now();
@@ -191,26 +287,14 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
         let cfg = cfg.clone();
         handles.push(std::thread::spawn(move || -> ConnTally {
             let mut tally = ConnTally {
-                sent: 0,
-                ok: 0,
-                shed_overloaded: 0,
-                shed_deadline: 0,
-                worker_panicked: 0,
-                errors_other: 0,
-                overflow_events: 0,
                 latencies_ms: Vec::with_capacity(per_conn_requests as usize),
+                ..ConnTally::default()
             };
-            let Ok(mut stream) = TcpStream::connect(&cfg.addr) else {
-                tally.errors_other = per_conn_requests;
-                tally.sent = per_conn_requests;
-                return tally;
-            };
-            let Ok(clone) = stream.try_clone() else {
-                tally.errors_other = per_conn_requests;
-                tally.sent = per_conn_requests;
-                return tally;
-            };
-            let mut reader = BufReader::new(clone);
+            let connect_timeout = Duration::from_millis(cfg.connect_timeout_ms.max(1));
+            // Generous read ceiling: a healthy server sheds at the request
+            // deadline, so anything this late is a transport-level hang.
+            let read_timeout = Duration::from_millis(cfg.deadline_ms.saturating_mul(2) + 2000);
+            let mut conn: Option<Conn> = None;
             let mut rng = Rng::new(cfg.seed ^ (conn_id as u64).wrapping_mul(0x9e37_79b9));
             let span = (hi - lo + 1).max(1) as usize;
             // Binary-path reusable buffers: codes, the request frame and
@@ -227,6 +311,20 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
                 if due > now {
                     std::thread::sleep(due - now);
                 }
+                tally.sent += 1;
+                // Reconnect per scheduled request after a transport fault:
+                // a dead replica costs exactly the requests that land while
+                // it is down, never the remainder of the run.
+                if conn.is_none() {
+                    match connect(&cfg.addr, connect_timeout, read_timeout) {
+                        Ok(c) => conn = Some(c),
+                        Err(e) => {
+                            tally.count_transport(classify_io(e.kind()));
+                            continue;
+                        }
+                    }
+                }
+                let c = conn.as_mut().expect("connection established above");
                 match cfg.wire {
                     WireFormat::Binary => {
                         codes.clear();
@@ -239,27 +337,32 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
                             cfg.deadline_ms,
                             &codes,
                         );
-                        tally.sent += 1;
                         let sent_at = Instant::now();
-                        let outcome = stream
-                            .write_all(&frame)
-                            .map_err(anyhow::Error::from)
-                            .and_then(|()| wire::read_reply(&mut reader, &mut scratch));
+                        let outcome = match c.stream.write_all(&frame) {
+                            Err(e) => Err(e),
+                            Ok(()) => wire::read_reply_frame(&mut c.reader, &mut scratch),
+                        };
                         match outcome {
-                            Ok(wire::Reply::InferOk { overflow_events, .. }) => {
+                            Ok(Ok(wire::Reply::InferOk { overflow_events, .. })) => {
                                 tally.ok += 1;
                                 tally.latencies_ms.push(sent_at.elapsed().as_secs_f64() * 1e3);
                                 tally.overflow_events += overflow_events;
                             }
-                            Ok(wire::Reply::Err { tag, .. }) => {
-                                match ServeError::code_for_tag(tag) {
-                                    Some("overloaded") => tally.shed_overloaded += 1,
-                                    Some("deadline_exceeded") => tally.shed_deadline += 1,
-                                    Some("worker_panicked") => tally.worker_panicked += 1,
-                                    _ => tally.errors_other += 1,
-                                }
+                            Ok(Ok(wire::Reply::Err { tag, .. })) => {
+                                tally.count_code(ServeError::code_for_tag(tag));
                             }
-                            Ok(wire::Reply::Ok { .. }) | Err(_) => tally.errors_other += 1,
+                            Ok(Ok(_)) | Ok(Err(_)) => {
+                                // Unexpected or malformed frame: the stream
+                                // may be desynchronized — count it against
+                                // the contract and resynchronize by
+                                // reconnecting.
+                                tally.errors_other += 1;
+                                conn = None;
+                            }
+                            Err(e) => {
+                                tally.count_transport(classify_io(e.kind()));
+                                conn = None;
+                            }
                         }
                     }
                     WireFormat::Json => {
@@ -275,31 +378,54 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
                             ("rows", Json::arr(rows)),
                             ("deadline_ms", Json::num(cfg.deadline_ms as f64)),
                         ]);
-                        tally.sent += 1;
+                        let line = reply_line(&req);
                         let sent_at = Instant::now();
-                        match exchange(&mut stream, &mut reader, &reply_line(&req)) {
-                            Ok(reply) => {
-                                let ok =
-                                    reply.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
-                                if ok {
-                                    tally.ok += 1;
-                                    tally
-                                        .latencies_ms
-                                        .push(sent_at.elapsed().as_secs_f64() * 1e3);
-                                    tally.overflow_events += reply
-                                        .opt("overflow_events")
-                                        .and_then(|v| v.as_u64().ok())
-                                        .unwrap_or(0);
-                                } else {
-                                    match reply.opt("code").and_then(|c| c.as_str().ok()) {
-                                        Some("overloaded") => tally.shed_overloaded += 1,
-                                        Some("deadline_exceeded") => tally.shed_deadline += 1,
-                                        Some("worker_panicked") => tally.worker_panicked += 1,
-                                        _ => tally.errors_other += 1,
+                        let outcome = c
+                            .stream
+                            .write_all(line.as_bytes())
+                            .and_then(|()| c.stream.write_all(b"\n"))
+                            .and_then(|()| {
+                                let mut reply = String::new();
+                                let n = c.reader.read_line(&mut reply)?;
+                                Ok((n, reply))
+                            });
+                        match outcome {
+                            Ok((0, _)) => {
+                                // Orderly close before any reply bytes:
+                                // same class as a mid-exchange reset.
+                                tally.conn_reset += 1;
+                                conn = None;
+                            }
+                            Ok((_, reply)) => match Json::parse(&reply) {
+                                Ok(reply) => {
+                                    let ok = reply
+                                        .get("ok")
+                                        .and_then(|v| v.as_bool())
+                                        .unwrap_or(false);
+                                    if ok {
+                                        tally.ok += 1;
+                                        tally
+                                            .latencies_ms
+                                            .push(sent_at.elapsed().as_secs_f64() * 1e3);
+                                        tally.overflow_events += reply
+                                            .opt("overflow_events")
+                                            .and_then(|v| v.as_u64().ok())
+                                            .unwrap_or(0);
+                                    } else {
+                                        tally.count_code(
+                                            reply.opt("code").and_then(|v| v.as_str().ok()),
+                                        );
                                     }
                                 }
+                                Err(_) => {
+                                    tally.errors_other += 1;
+                                    conn = None;
+                                }
+                            },
+                            Err(e) => {
+                                tally.count_transport(classify_io(e.kind()));
+                                conn = None;
                             }
-                            Err(_) => tally.errors_other += 1,
                         }
                     }
                 }
@@ -316,7 +442,12 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadReport> {
         report.ok += t.ok;
         report.shed_overloaded += t.shed_overloaded;
         report.shed_deadline += t.shed_deadline;
+        report.shed_draining += t.shed_draining;
+        report.shed_no_backend += t.shed_no_backend;
         report.worker_panicked += t.worker_panicked;
+        report.conn_refused += t.conn_refused;
+        report.conn_reset += t.conn_reset;
+        report.timeout += t.timeout;
         report.errors_other += t.errors_other;
         report.overflow_events += t.overflow_events;
         latencies.extend(t.latencies_ms);
@@ -341,7 +472,12 @@ pub fn report_json(r: &LoadReport, server_stats: Option<&Json>) -> Json {
         ("ok", Json::num(r.ok as f64)),
         ("shed_overloaded", Json::num(r.shed_overloaded as f64)),
         ("shed_deadline", Json::num(r.shed_deadline as f64)),
+        ("shed_draining", Json::num(r.shed_draining as f64)),
+        ("shed_no_backend", Json::num(r.shed_no_backend as f64)),
         ("worker_panicked", Json::num(r.worker_panicked as f64)),
+        ("conn_refused", Json::num(r.conn_refused as f64)),
+        ("conn_reset", Json::num(r.conn_reset as f64)),
+        ("timeout", Json::num(r.timeout as f64)),
         ("errors_other", Json::num(r.errors_other as f64)),
         ("overflow_events", Json::num(r.overflow_events as f64)),
         ("p50_ms", Json::num((r.p50_ms * 1e3).round() / 1e3)),
@@ -355,43 +491,59 @@ pub fn report_json(r: &LoadReport, server_stats: Option<&Json>) -> Json {
     Json::obj(pairs)
 }
 
-/// Journal the report under `serve/{label}_*` names and refresh the
-/// EXPERIMENTS.md §Perf-Serve block. Latency rows reuse the journal's
-/// ns-per-iter convention (p50/p99 wall latency per request; rows/s as its
-/// own row), so `a2q perfcheck` can gate on them like any other bench.
+/// Journal row name for a metric under a loadgen label. A label ending in
+/// `/` is a namespace: `route/` journals `route/p50`, `route/p99`,
+/// `route/rows_per_s` — its own top-level family, comparable against the
+/// serve family via `a2q perfcheck --require`. Any other label keeps the
+/// legacy `serve/{label}_{metric}` names.
+fn journal_name(label: &str, metric: &str) -> String {
+    if label.ends_with('/') {
+        format!("{label}{metric}")
+    } else {
+        format!("serve/{label}_{metric}")
+    }
+}
+
+/// Journal the report (see [`journal_name`] for the naming scheme) and
+/// refresh the EXPERIMENTS.md §Perf-Serve block. Latency rows reuse the
+/// journal's ns-per-iter convention (p50/p99 wall latency per request;
+/// rows/s as its own row), so `a2q perfcheck` can gate on them like any
+/// other bench.
 pub fn journal_report(label: &str, r: &LoadReport) -> anyhow::Result<std::path::PathBuf> {
     let records = vec![
         BenchRecord {
-            name: format!("serve/{label}_p50"),
+            name: journal_name(label, "p50"),
             ns_per_iter: r.p50_ms * 1e6,
             mac_per_s: None,
             sparsity: None,
         },
         BenchRecord {
-            name: format!("serve/{label}_p99"),
+            name: journal_name(label, "p99"),
             ns_per_iter: r.p99_ms * 1e6,
             mac_per_s: None,
             sparsity: None,
         },
         BenchRecord {
-            name: format!("serve/{label}_rows_per_s"),
+            name: journal_name(label, "rows_per_s"),
             ns_per_iter: if r.rows_per_s > 0.0 { 1e9 / r.rows_per_s } else { 0.0 },
             mac_per_s: None,
             sparsity: None,
         },
     ];
     let path = perf::record_benches(&records)?;
-    let shed = r.shed_overloaded + r.shed_deadline;
+    let shed = r.shed_overloaded + r.shed_deadline + r.shed_draining + r.shed_no_backend;
+    let transport = r.conn_refused + r.conn_reset + r.timeout;
     let block = format!(
         "Last recorded by `a2q loadgen --journal` ({label}):\n\n\
          | metric | value |\n|---|---|\n\
          | served | {} / {} sent |\n\
-         | shed (overloaded + deadline) | {} |\n\
+         | shed (typed rejections) | {} |\n\
+         | transport faults (refused + reset + timeout) | {} |\n\
          | p50 latency | {:.3} ms |\n\
          | p99 latency | {:.3} ms |\n\
          | served rows/s | {:.0} |\n\
          | overflow events (served) | {} |\n",
-        r.ok, r.sent, shed, r.p50_ms, r.p99_ms, r.rows_per_s, r.overflow_events
+        r.ok, r.sent, shed, transport, r.p50_ms, r.p99_ms, r.rows_per_s, r.overflow_events
     );
     perf::update_experiments_serve_block(&block)?;
     Ok(path)
@@ -415,9 +567,12 @@ mod tests {
     fn report_json_carries_the_contract_counters() {
         let r = LoadReport {
             sent: 10,
-            ok: 7,
+            ok: 4,
             shed_overloaded: 2,
             shed_deadline: 1,
+            shed_draining: 1,
+            conn_refused: 1,
+            conn_reset: 1,
             p50_ms: 1.5,
             p99_ms: 4.0,
             rows_per_s: 1234.0,
@@ -425,8 +580,43 @@ mod tests {
         };
         let j = report_json(&r, None);
         let text = j.to_string();
-        for needle in ["\"ok\":7", "\"shed_overloaded\":2", "\"shed_deadline\":1", "\"sent\":10"] {
+        for needle in [
+            "\"ok\":4",
+            "\"shed_overloaded\":2",
+            "\"shed_deadline\":1",
+            "\"shed_draining\":1",
+            "\"shed_no_backend\":0",
+            "\"conn_refused\":1",
+            "\"conn_reset\":1",
+            "\"timeout\":0",
+            "\"sent\":10",
+        ] {
             assert!(text.contains(needle), "{needle} missing from {text}");
         }
+    }
+
+    #[test]
+    fn io_error_kinds_map_to_transport_classes() {
+        use io::ErrorKind as K;
+        assert_eq!(classify_io(K::ConnectionRefused), TransportClass::Refused);
+        for kind in [
+            K::ConnectionReset,
+            K::ConnectionAborted,
+            K::BrokenPipe,
+            K::NotConnected,
+            K::UnexpectedEof,
+        ] {
+            assert_eq!(classify_io(kind), TransportClass::Reset, "{kind:?}");
+        }
+        assert_eq!(classify_io(K::WouldBlock), TransportClass::Timeout);
+        assert_eq!(classify_io(K::TimedOut), TransportClass::Timeout);
+        assert_eq!(classify_io(K::PermissionDenied), TransportClass::Other);
+    }
+
+    #[test]
+    fn journal_labels_support_namespaces() {
+        assert_eq!(journal_name("route/", "p50"), "route/p50");
+        assert_eq!(journal_name("route/", "rows_per_s"), "route/rows_per_s");
+        assert_eq!(journal_name("wire_binary", "p99"), "serve/wire_binary_p99");
     }
 }

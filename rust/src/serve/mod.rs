@@ -22,7 +22,12 @@
 //! * [`fault`] — the `A2Q_FAULT` injection seam (worker panic, batch
 //!   latency, cache-load failure) that lets tests and CI *prove* recovery.
 //! * [`loadgen`] — open-loop load generation (either wire format) with
-//!   p50/p99 + shed-rate reporting and the §Perf-Serve journal hook.
+//!   p50/p99 + typed-shed/transport-fault classification and the
+//!   §Perf-Serve journal hook.
+//! * [`router`] — `a2q route`: the fault-tolerant shard router fronting N
+//!   replicas (health probes, circuit breaker, bounded retry, hedging,
+//!   zero-loss drain/failover). Replica failure becomes an availability
+//!   event, never a correctness event.
 //!
 //! ## Two wire protocols, one serving core
 //!
@@ -52,6 +57,7 @@ pub mod error;
 pub mod fault;
 pub mod loadgen;
 pub mod pool;
+pub mod router;
 pub mod session;
 pub mod wire;
 
@@ -64,5 +70,6 @@ pub use error::ServeError;
 pub use fault::FaultPlan;
 pub use loadgen::{run_loadgen, LoadReport, LoadgenConfig};
 pub use pool::{BufferPool, PooledBuf};
+pub use router::{BackendSpec, HealthState, RetryPolicy, Router, RouterConfig, RouterStats};
 pub use session::{run_binary_session, ServeConfig, Server};
 pub use wire::WireFormat;

@@ -192,4 +192,75 @@ mod tests {
         assert_eq!(buf.input().rows(), 2);
         drop(buf); // no pool to return to; must not panic
     }
+
+    #[test]
+    fn exhausted_pool_constructs_fresh_then_recovers_to_high_water() {
+        // A burst past the retain cap must never fail — acquire() always
+        // hands out a buffer, constructing fresh once the free list is dry.
+        let pool = Arc::new(BufferPool::new(3));
+        let burst: Vec<PooledBuf> = (0..10).map(|_| pool.acquire()).collect();
+        assert_eq!(pool.fresh_count(), 10, "every buffer past the empty free list is fresh");
+        assert_eq!(pool.pooled(), 0);
+        drop(burst);
+        // The free list settles at the high-water mark (retain), not at the
+        // burst size — the excess storage is freed, not hoarded.
+        assert_eq!(pool.pooled(), 3);
+        // Steady state after the burst: retain-many concurrent buffers
+        // recycle without a single fresh construction.
+        let steady: Vec<PooledBuf> = (0..3).map(|_| pool.acquire()).collect();
+        assert_eq!(pool.fresh_count(), 10, "post-burst acquires recycle, never rebuild");
+        assert_eq!(pool.pooled(), 0);
+        drop(steady);
+        assert_eq!(pool.pooled(), 3);
+        // One past retain is the exact boundary where fresh resumes.
+        let held: Vec<PooledBuf> = (0..4).map(|_| pool.acquire()).collect();
+        assert_eq!(pool.fresh_count(), 11, "retain+1 concurrent buffers need one fresh build");
+        drop(held);
+        assert_eq!(pool.pooled(), 3);
+    }
+
+    #[test]
+    fn shed_and_rejection_paths_return_buffers_to_the_pool() {
+        use std::time::Duration;
+
+        use crate::serve::admission::{AdmissionQueue, JobRequest, ReplySlot, ServeStats};
+        use crate::serve::error::ServeError;
+        use crate::serve::wire::WireFormat;
+
+        let pool = Arc::new(BufferPool::new(8));
+        let long = Duration::from_secs(60);
+        let mk = |id: u64| {
+            let slot = ReplySlot::new();
+            let mut buf = pool.acquire();
+            buf.input_mut().reset(1, 4);
+            (JobRequest::new(id, 7, WireFormat::Json, buf, long, slot.sender()), slot)
+        };
+
+        // Overload shed: the refused request's buffer must come back.
+        let q = AdmissionQueue::new(1);
+        let stats = ServeStats::default();
+        let (a, _ra) = mk(1);
+        let (b, _rb) = mk(2);
+        q.submit(a).unwrap();
+        let rejected = q.submit(b).unwrap_err();
+        assert!(matches!(rejected.error, ServeError::Overloaded { .. }));
+        rejected.request.cancel();
+        assert_eq!(pool.pooled(), 1, "cancelled rejection must recycle its buffer");
+
+        // Typed rejection (the worker-panic / shutdown path): same story.
+        let (c, rc) = mk(3);
+        c.reject(ServeError::WorkerPanicked { batch_seq: 9 });
+        assert!(rc.recv().is_err());
+        assert_eq!(pool.pooled(), 2, "reject() must recycle its buffer");
+
+        // Drain the admitted request through the queue and close: every
+        // buffer this test acquired is back in the free list — nothing
+        // leaked through any path.
+        let mut batch = Vec::new();
+        q.next_batch(4, Duration::ZERO, &stats, &mut batch).unwrap();
+        batch.drain(..).for_each(JobRequest::cancel);
+        q.close(&stats);
+        assert_eq!(pool.pooled(), 3, "all acquired buffers returned");
+        assert_eq!(pool.fresh_count(), 3);
+    }
 }

@@ -1,0 +1,210 @@
+//! `a2q route`: a fault-tolerant shard router in front of N `a2q serve`
+//! replicas.
+//!
+//! The paper's discipline — overflow avoidance as a *guaranteed property*,
+//! not a load-dependent accident — extends one tier up: replica failure
+//! must be an availability event the serving system absorbs, never a
+//! correctness event the client observes. The router makes that concrete.
+//! Because an A2Q infer is idempotent and bit-identical across replicas,
+//! any single replica's death, drain, or panic is invisible to clients:
+//! every request either succeeds (byte-identical to a direct hit) or fails
+//! with a typed shed code — never a transport error the client didn't
+//! cause, never a torn frame, never a hang.
+//!
+//! The moving parts:
+//!
+//! * [`replica`] — the backend pool: the Up/Degraded/Down/Draining health
+//!   state machine, the consecutive-failure circuit breaker, spawned-child
+//!   lifecycle (crash respawn, drain-restart), and address bookkeeping.
+//! * One **prober thread** — binary wire pings every replica each probe
+//!   interval, drives the state machine (a pong from a Down replica is the
+//!   half-open re-admission), watches drain progress via the pong's
+//!   in-flight gauge, and respawns dead or drained spawned children.
+//! * [`proxy`] — per-connection data-plane sessions for both wire
+//!   protocols: buffer-then-relay forwarding, bounded retry with
+//!   decorrelated-jitter backoff, optional tail-latency hedging with
+//!   first-wins cancellation, and the JSON control plane (`stats`,
+//!   addressed `drain`/`resume`, `shutdown`).
+//! * [`retry`] — the frozen policy of *what* may be retried and the
+//!   backoff between attempts.
+//!
+//! Backends come in two flavors: **attached** (`--backend addr`, a process
+//! someone else runs) and **spawned** (`--spawn spec`, children the router
+//! starts on ephemeral ports and may kill/respawn). A router whose every
+//! replica is dead stays up and sheds typed `no_backend`; the prober
+//! re-admits replicas automatically as they come back.
+
+pub mod proxy;
+pub mod replica;
+pub mod retry;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::pool::BufferPool;
+pub use proxy::ProxyContext;
+pub use replica::{BackendSpec, HealthState, Replica, ReplicaSet, ReplicaSnapshot, RouterStats};
+pub use retry::{retryable_code, Backoff, RetryPolicy};
+
+/// Router knobs. `Default` is a sane local profile: fast probes, three
+/// attempts per request, hedging off.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Bind address; port 0 picks a free port (tests).
+    pub addr: String,
+    /// How often the prober pings every replica.
+    pub probe_interval_ms: u64,
+    /// Per-probe connect/read timeout (also the admin-op timeout).
+    pub probe_timeout_ms: u64,
+    /// Consecutive failures that open a replica's circuit breaker.
+    pub breaker_threshold: u32,
+    /// Retry policy for forwarded requests.
+    pub retry: RetryPolicy,
+    /// Hedge delay for binary infers; 0 disables hedging.
+    pub hedge_ms: u64,
+    /// Backend connect timeout on the proxy path.
+    pub connect_timeout_ms: u64,
+    /// Deadline assumed for backend read timeouts when a request names
+    /// none; mirror the replicas' `--default-deadline-ms`.
+    pub default_deadline_ms: u64,
+    /// Respawn spawned replicas that die or complete a drain. Attached
+    /// replicas are never respawned regardless.
+    pub respawn: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            addr: "127.0.0.1:7979".to_string(),
+            probe_interval_ms: 50,
+            probe_timeout_ms: 250,
+            breaker_threshold: 3,
+            retry: RetryPolicy::default(),
+            hedge_ms: 0,
+            connect_timeout_ms: 1000,
+            default_deadline_ms: 1000,
+            respawn: true,
+        }
+    }
+}
+
+/// A running router. Dropping it does NOT stop it — call
+/// [`Router::shutdown`] then [`Router::join`].
+pub struct Router {
+    addr: SocketAddr,
+    ctx: Arc<ProxyContext>,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    prober_handle: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind, bring up the replica pool (spawning children for spawn
+    /// specs), start the prober and the accept loop.
+    pub fn start(cfg: &RouterConfig, specs: &[BackendSpec]) -> anyhow::Result<Router> {
+        let replicas = Arc::new(ReplicaSet::start(specs, cfg.breaker_threshold, cfg.respawn)?);
+        let stats = Arc::new(RouterStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        // The proxy only ever needs two buffers per live session; retain a
+        // small multiple so concurrent sessions recycle instead of building.
+        let pool = Arc::new(BufferPool::new(32));
+        let ctx = Arc::new(ProxyContext {
+            replicas: Arc::clone(&replicas),
+            stats: Arc::clone(&stats),
+            retry: cfg.retry,
+            hedge_ms: cfg.hedge_ms,
+            connect_timeout_ms: cfg.connect_timeout_ms,
+            admin_timeout_ms: cfg.probe_timeout_ms,
+            default_deadline_ms: cfg.default_deadline_ms,
+            pool,
+            shutdown: Arc::clone(&shutdown),
+            session_seq: AtomicU64::new(1),
+        });
+
+        let prober_handle = {
+            let replicas = Arc::clone(&replicas);
+            let stats = Arc::clone(&stats);
+            let shutdown = Arc::clone(&shutdown);
+            let interval = Duration::from_millis(cfg.probe_interval_ms.max(1));
+            let timeout = Duration::from_millis(cfg.probe_timeout_ms.max(1));
+            std::thread::Builder::new()
+                .name("a2q-route-prober".to_string())
+                .spawn(move || {
+                    while !shutdown.load(Ordering::SeqCst) {
+                        replicas.probe_all(timeout, &stats);
+                        std::thread::sleep(interval);
+                    }
+                })
+                .expect("spawn prober")
+        };
+
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let accept_handle = {
+            let ctx = Arc::clone(&ctx);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("a2q-route-accept".to_string())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let ctx = Arc::clone(&ctx);
+                        let _ = std::thread::Builder::new()
+                            .name("a2q-route-conn".to_string())
+                            .spawn(move || proxy::run_proxy_session(stream, &ctx));
+                    }
+                })
+                .expect("spawn accept loop")
+        };
+
+        Ok(Router {
+            addr,
+            ctx,
+            shutdown,
+            accept_handle: Some(accept_handle),
+            prober_handle: Some(prober_handle),
+        })
+    }
+
+    /// The actually bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &RouterStats {
+        &self.ctx.stats
+    }
+
+    pub fn replicas(&self) -> &ReplicaSet {
+        &self.ctx.replicas
+    }
+
+    /// Stop accepting, stop probing. Live proxy sessions finish with their
+    /// clients; spawned children die in [`Router::join`].
+    pub fn shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the blocked accept loop so it observes the flag.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Wait for the accept loop and prober, then kill spawned children.
+    /// Call after [`Router::shutdown`]; joining a live router blocks
+    /// forever.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.prober_handle.take() {
+            let _ = h.join();
+        }
+        self.ctx.replicas.shutdown_children();
+    }
+}

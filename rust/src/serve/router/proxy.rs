@@ -1,0 +1,744 @@
+//! Per-connection proxy sessions: the router's data plane.
+//!
+//! One proxy session serves one client connection, speaking whichever
+//! protocol the client opened with (same first-byte negotiation as
+//! `serve/session.rs`) and holding its own cached connection per replica.
+//! The load-bearing invariant is *buffer-then-relay*: a session reads the
+//! client's complete request frame before picking a replica, and reads the
+//! replica's complete reply frame before relaying a single byte to the
+//! client. The client can therefore never observe a torn frame, and a
+//! replica that dies mid-reply costs the router a retry, not the client a
+//! corrupted stream — which is what makes the retry loop safe (see
+//! `retry.rs` for the full argument).
+//!
+//! Failover shape per request:
+//!
+//! 1. pick a replica (round-robin over Up, then Degraded; replicas already
+//!    tried for this request are excluded while an untried one exists);
+//! 2. forward and read the buffered reply; a transport failure feeds the
+//!    replica's breaker and moves on; a typed retryable refusal
+//!    (`overloaded`, `draining`, `shutting_down`, `worker_panicked`) is
+//!    kept as the relay-of-last-resort and the next replica is tried;
+//! 3. between attempts: decorrelated-jitter backoff;
+//! 4. exhaustion relays the last typed refusal if any replica produced
+//!    one, else sheds typed `no_backend` — a client of the router sees
+//!    typed outcomes only, never a transport error it didn't cause.
+//!
+//! Optional hedging (`hedge_ms > 0`) duplicates a slow binary infer onto a
+//! second replica after the hedge delay; the first complete reply wins and
+//! the loser's socket is shut down. Hedged attempts use fresh connections
+//! (cancellation must not poison a cached stream's framing).
+//!
+//! The proxy buffers live in pooled [`PooledBuf`]s (their reply vectors),
+//! so a warmed router's binary relay path allocates nothing per request.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::super::error::ServeError;
+use super::super::pool::BufferPool;
+use super::super::wire;
+use super::replica::{ReplicaSet, RouterStats};
+use super::retry::{retryable_code, RetryPolicy};
+use crate::json::Json;
+
+/// Everything a proxy session shares with the rest of the router.
+pub struct ProxyContext {
+    pub replicas: Arc<ReplicaSet>,
+    pub stats: Arc<RouterStats>,
+    pub retry: RetryPolicy,
+    /// Hedge delay for binary infers; 0 disables hedging.
+    pub hedge_ms: u64,
+    pub connect_timeout_ms: u64,
+    /// Admin-op (drain/resume) round-trip timeout.
+    pub admin_timeout_ms: u64,
+    /// Deadline assumed for backend read timeouts when a request names
+    /// none (mirrors the replicas' own default).
+    pub default_deadline_ms: u64,
+    pub pool: Arc<BufferPool>,
+    pub shutdown: Arc<AtomicBool>,
+    /// Monotonic session counter; seeds each session's backoff jitter.
+    pub session_seq: AtomicU64,
+}
+
+impl ProxyContext {
+    fn connect_timeout(&self) -> Duration {
+        Duration::from_millis(self.connect_timeout_ms.max(1))
+    }
+
+    /// Backend read timeout for a request with this deadline budget: the
+    /// replica itself sheds at the deadline, so double it plus slack only
+    /// fires when the replica is truly wedged.
+    fn read_timeout(&self, deadline_ms: u64) -> Duration {
+        let d = if deadline_ms == 0 { self.default_deadline_ms } else { deadline_ms };
+        Duration::from_millis(d.saturating_mul(2).saturating_add(2000))
+    }
+}
+
+/// One client connection: peek the first byte, run that protocol's proxy
+/// loop until the client hangs up or the router shuts down.
+pub fn run_proxy_session(stream: TcpStream, ctx: &Arc<ProxyContext>) {
+    let seed = ctx.session_seq.fetch_add(1, Ordering::Relaxed) ^ 0x9e37_79b9_7f4a_7c15;
+    let Ok(writer) = stream.try_clone() else { return };
+    // The accepted socket's local address IS the router's listen address:
+    // the shutdown op uses it to wake the blocked accept loop.
+    let listen_addr = stream.local_addr().ok();
+    let mut reader = BufReader::new(stream);
+    let first = match reader.fill_buf() {
+        Ok([]) | Err(_) => return,
+        Ok(b) => b[0],
+    };
+    if first == wire::MAGIC_BYTE0 {
+        run_binary_proxy(reader, writer, ctx, listen_addr, seed);
+    } else {
+        run_json_proxy(reader, writer, ctx, listen_addr, seed);
+    }
+}
+
+/// Flip the router's shutdown flag once and wake its accept loop.
+fn trigger_shutdown(ctx: &ProxyContext, listen_addr: Option<SocketAddr>) {
+    if !ctx.shutdown.swap(true, Ordering::SeqCst) {
+        if let Some(addr) = listen_addr {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+}
+
+// ------------------------------------------------------------ frame moves
+
+/// Byte offset of a request header's `deadline_ms` field in a full frame.
+const REQ_DEADLINE_AT: usize = wire::PREFIX_LEN + 20;
+/// Byte offset of the op in a full (request or reply) frame.
+const FRAME_OP_AT: usize = wire::PREFIX_LEN + 2;
+/// Byte offset of a reply frame's status byte ([`ServeError::tag`]).
+const REPLY_STATUS_AT: usize = wire::PREFIX_LEN + 3;
+
+fn rd_u64_at(b: &[u8], at: usize) -> u64 {
+    let mut v = [0u8; 8];
+    v.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(v)
+}
+
+/// Read one complete frame (prefix + body) into `buf`, validating the
+/// prefix. The outer `Err` is a transport failure; bad framing from a live
+/// transport maps to `InvalidData` so callers treat both as "this stream
+/// is lost" without losing the EOF-vs-garbage distinction elsewhere.
+fn read_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>, min_len: usize) -> io::Result<()> {
+    let mut prefix = [0u8; wire::PREFIX_LEN];
+    r.read_exact(&mut prefix)?;
+    let magic = u32::from_le_bytes([prefix[0], prefix[1], prefix[2], prefix[3]]);
+    if magic != wire::MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame magic"));
+    }
+    let len = u32::from_le_bytes([prefix[4], prefix[5], prefix[6], prefix[7]]) as usize;
+    if !(min_len..=wire::MAX_FRAME).contains(&len) {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame length"));
+    }
+    buf.clear();
+    buf.extend_from_slice(&prefix);
+    buf.resize(wire::PREFIX_LEN + len, 0);
+    r.read_exact(&mut buf[wire::PREFIX_LEN..])
+}
+
+/// The typed code a buffered reply frame carries, if its status byte is a
+/// known [`ServeError::tag`] (`None` means success).
+fn reply_code(frame: &[u8]) -> Option<&'static str> {
+    match frame[REPLY_STATUS_AT] {
+        0 => None,
+        tag => ServeError::code_for_tag(tag).or(Some("bad_request")),
+    }
+}
+
+// ---------------------------------------------------------- binary proxy
+
+/// What one forwarded request resolved to.
+enum Forward {
+    /// A reply frame to relay sits in the response buffer.
+    Relay,
+    /// Every attempt failed at the transport level and no replica produced
+    /// a typed refusal: shed typed `no_backend`.
+    Shed,
+}
+
+fn run_binary_proxy(
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+    ctx: &Arc<ProxyContext>,
+    listen_addr: Option<SocketAddr>,
+    seed: u64,
+) {
+    // Pooled scratch: request frame in, reply frame out. Their storage
+    // returns to the router's pool when the session ends.
+    let mut req_buf = ctx.pool.acquire();
+    let mut rsp_buf = ctx.pool.acquire();
+    let mut typed_buf: Vec<u8> = Vec::new();
+    let mut conns: Vec<Option<TcpStream>> = (0..ctx.replicas.len()).map(|_| None).collect();
+    let mut req_seq = 0u64;
+    loop {
+        let req = req_buf.reply_mut();
+        if read_frame(&mut reader, req, wire::REQ_HEADER_LEN).is_err() {
+            return; // client EOF, hangup, or unframeable garbage
+        }
+        req_seq += 1;
+        let rsp = rsp_buf.reply_mut();
+        match req[FRAME_OP_AT] {
+            // The router answers pings itself: a pong proves *router*
+            // liveness; replica health is the prober's job.
+            wire::OP_PING => {
+                wire::encode_pong(rsp, false, 0);
+                if writer.write_all(rsp).is_err() {
+                    return;
+                }
+            }
+            wire::OP_SHUTDOWN => {
+                wire::encode_ok_empty(rsp, wire::OP_SHUTDOWN);
+                let _ = writer.write_all(rsp);
+                trigger_shutdown(ctx, listen_addr);
+                return;
+            }
+            wire::OP_INFER => {
+                let outcome =
+                    forward_binary(ctx, req, rsp, &mut typed_buf, &mut conns, seed ^ req_seq);
+                match outcome {
+                    Forward::Relay => {
+                        if writer.write_all(rsp).is_err() {
+                            return;
+                        }
+                    }
+                    Forward::Shed => {
+                        ctx.stats.shed_no_backend.fetch_add(1, Ordering::Relaxed);
+                        let e = ServeError::NoBackend { replicas: ctx.replicas.len() };
+                        wire::encode_binary_err(rsp, wire::OP_INFER, &e);
+                        if writer.write_all(rsp).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            // Drain/resume are per-replica admin ops; the binary header has
+            // no address field, so they live on the JSON control plane.
+            op => {
+                let e = ServeError::BadRequest {
+                    reason: format!("op {op} is not routable; use the JSON control plane"),
+                };
+                wire::encode_binary_err(rsp, op, &e);
+                if writer.write_all(rsp).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Forward one buffered binary infer with retry/hedging. On `Relay` the
+/// reply frame to send the client is in `rsp` (possibly swapped in from
+/// the saved typed refusal).
+fn forward_binary(
+    ctx: &Arc<ProxyContext>,
+    req: &[u8],
+    rsp: &mut Vec<u8>,
+    typed: &mut Vec<u8>,
+    conns: &mut [Option<TcpStream>],
+    seed: u64,
+) -> Forward {
+    let read_timeout = ctx.read_timeout(rd_u64_at(req, REQ_DEADLINE_AT));
+    let mut backoff = ctx.retry.backoff(seed);
+    let mut exclude = 0u64;
+    let mut have_typed = false;
+    let mut attempts = 0u32;
+    let max_attempts = ctx.retry.max_attempts.max(1);
+    loop {
+        // Prefer an untried replica; with every routable replica already
+        // tried, retry anywhere (backoff has passed — an overloaded
+        // replica may have queue room now). None at all: truly no backend.
+        let picked = ctx.replicas.pick(exclude).or_else(|| ctx.replicas.pick(0));
+        let Some(i) = picked else {
+            return if have_typed {
+                std::mem::swap(rsp, typed);
+                finish(ctx, attempts);
+                Forward::Relay
+            } else {
+                Forward::Shed
+            };
+        };
+        attempts += 1;
+        let res = if ctx.hedge_ms > 0 {
+            attempt_hedged(ctx, req, rsp, i, exclude, read_timeout)
+        } else {
+            attempt_cached(ctx, req, rsp, conns, i, read_timeout).map(|()| i)
+        };
+        match res {
+            Ok(winner) => {
+                ctx.replicas.record_success(winner);
+                match reply_code(rsp) {
+                    Some(code) if retryable_code(code) => {
+                        // Keep the refusal as the relay of last resort.
+                        std::mem::swap(rsp, typed);
+                        have_typed = true;
+                        exclude |= 1u64 << winner;
+                    }
+                    // Success or a non-retryable typed outcome (deadline,
+                    // bad request): the client's answer, verbatim.
+                    _ => {
+                        finish(ctx, attempts);
+                        return Forward::Relay;
+                    }
+                }
+            }
+            Err(_) => {
+                ctx.replicas.record_failure(i);
+                conns[i] = None;
+                exclude |= 1u64 << i;
+            }
+        }
+        if attempts >= max_attempts {
+            return if have_typed {
+                std::mem::swap(rsp, typed);
+                finish(ctx, attempts);
+                Forward::Relay
+            } else {
+                Forward::Shed
+            };
+        }
+        std::thread::sleep(backoff.next_delay());
+    }
+}
+
+fn finish(ctx: &ProxyContext, attempts: u32) {
+    ctx.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+    ctx.stats.retries.fetch_add(attempts.saturating_sub(1) as u64, Ordering::Relaxed);
+}
+
+fn connect(addr: &str, connect_timeout: Duration, read_timeout: Duration) -> io::Result<TcpStream> {
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "unresolvable backend"))?;
+    let stream = TcpStream::connect_timeout(&sock, connect_timeout)?;
+    stream.set_read_timeout(Some(read_timeout))?;
+    stream.set_nodelay(true)?;
+    Ok(stream)
+}
+
+/// One attempt over the session's cached connection to replica `i`
+/// (connecting it first if needed). On success the complete reply frame is
+/// in `rsp`.
+fn attempt_cached(
+    ctx: &ProxyContext,
+    req: &[u8],
+    rsp: &mut Vec<u8>,
+    conns: &mut [Option<TcpStream>],
+    i: usize,
+    read_timeout: Duration,
+) -> io::Result<()> {
+    if conns[i].is_none() {
+        conns[i] = Some(connect(&ctx.replicas.addr(i), ctx.connect_timeout(), read_timeout)?);
+    }
+    let s = conns[i].as_mut().expect("just connected");
+    s.set_read_timeout(Some(read_timeout))?;
+    s.write_all(req)?;
+    read_frame(s, rsp, wire::REPLY_HEADER_LEN)
+}
+
+/// One hedged attempt: primary on replica `i`; if no reply lands within
+/// the hedge delay, duplicate onto a second replica and take whichever
+/// complete reply arrives first. Returns the winning replica's index.
+/// Loser sockets are shut down (their detached threads then fail out);
+/// all hedge connections are fresh, so no cached stream's framing is ever
+/// poisoned by a cancelled exchange.
+fn attempt_hedged(
+    ctx: &Arc<ProxyContext>,
+    req: &[u8],
+    rsp: &mut Vec<u8>,
+    i: usize,
+    exclude: u64,
+    read_timeout: Duration,
+) -> io::Result<usize> {
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, io::Result<Vec<u8>>)>();
+    let cancel: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let launch = |replica: usize| {
+        let ctx = Arc::clone(ctx);
+        let req = req.to_vec();
+        let tx = tx.clone();
+        let cancel = Arc::clone(&cancel);
+        std::thread::Builder::new()
+            .name("a2q-route-hedge".to_string())
+            .spawn(move || {
+                let run = || -> io::Result<Vec<u8>> {
+                    let mut s =
+                        connect(&ctx.replicas.addr(replica), ctx.connect_timeout(), read_timeout)?;
+                    cancel.lock().unwrap().push(s.try_clone()?);
+                    s.write_all(&req)?;
+                    let mut out = Vec::new();
+                    read_frame(&mut s, &mut out, wire::REPLY_HEADER_LEN)?;
+                    Ok(out)
+                };
+                let _ = tx.send((replica, run()));
+            })
+            .ok()
+    };
+    let mut outstanding = 0u32;
+    if launch(i).is_some() {
+        outstanding += 1;
+    }
+    let mut hedged = false;
+    let mut last_err: io::Result<usize> = Err(io::Error::other("hedge spawn failed"));
+    while outstanding > 0 {
+        let received = if hedged || outstanding > 1 {
+            rx.recv().map_err(|_| ())
+        } else {
+            match rx.recv_timeout(Duration::from_millis(ctx.hedge_ms.max(1))) {
+                Ok(v) => Ok(v),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    // Primary is slow: duplicate onto a different replica.
+                    hedged = true;
+                    if let Some(j) = ctx.replicas.pick(exclude | (1u64 << i)) {
+                        if launch(j).is_some() {
+                            ctx.stats.hedges.fetch_add(1, Ordering::Relaxed);
+                            outstanding += 1;
+                        }
+                    }
+                    continue;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(()),
+            }
+        };
+        let Ok((replica, result)) = received else { break };
+        outstanding -= 1;
+        match result {
+            Ok(frame) => {
+                rsp.clear();
+                rsp.extend_from_slice(&frame);
+                if hedged && replica != i {
+                    ctx.stats.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                }
+                // First complete reply wins; cut the loser loose.
+                for s in cancel.lock().unwrap().drain(..) {
+                    let _ = s.shutdown(std::net::Shutdown::Both);
+                }
+                return Ok(replica);
+            }
+            Err(e) => {
+                if replica != i {
+                    // A failed hedge must not mask the primary's outcome,
+                    // but it does feed that replica's breaker.
+                    ctx.replicas.record_failure(replica);
+                }
+                last_err = Err(e);
+            }
+        }
+    }
+    last_err
+}
+
+// ------------------------------------------------------------ JSON proxy
+
+fn err_json(e: &ServeError) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::str(e.code())),
+        ("error", Json::str(e.to_string())),
+    ])
+}
+
+fn bad(reason: impl Into<String>) -> ServeError {
+    ServeError::BadRequest { reason: reason.into() }
+}
+
+/// The typed code of a line-JSON reply, extracted without a parse: error
+/// replies serialize with sorted keys, so they always open `{"code":"..`.
+fn json_error_code(line: &str) -> Option<&str> {
+    let rest = line.strip_prefix("{\"code\":\"")?;
+    rest.split('"').next()
+}
+
+/// The router's own `stats` reply: router counters plus one row per
+/// replica.
+fn router_stats_json(ctx: &ProxyContext) -> Json {
+    let s = &ctx.stats;
+    let replicas: Vec<Json> = ctx.replicas.snapshot().iter().map(|r| r.to_json()).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("role", Json::str("router")),
+        ("forwarded", Json::num(s.forwarded.load(Ordering::Relaxed) as f64)),
+        ("retries", Json::num(s.retries.load(Ordering::Relaxed) as f64)),
+        ("hedges", Json::num(s.hedges.load(Ordering::Relaxed) as f64)),
+        ("hedge_wins", Json::num(s.hedge_wins.load(Ordering::Relaxed) as f64)),
+        ("shed_no_backend", Json::num(s.shed_no_backend.load(Ordering::Relaxed) as f64)),
+        ("respawns", Json::num(s.respawns.load(Ordering::Relaxed) as f64)),
+        ("probes_ok", Json::num(s.probes_ok.load(Ordering::Relaxed) as f64)),
+        ("probes_failed", Json::num(s.probes_failed.load(Ordering::Relaxed) as f64)),
+        ("replicas", Json::arr(replicas)),
+    ])
+}
+
+/// A cached line-JSON connection to one replica.
+struct JsonConn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+fn run_json_proxy(
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+    ctx: &Arc<ProxyContext>,
+    listen_addr: Option<SocketAddr>,
+    seed: u64,
+) {
+    let mut conns: Vec<Option<JsonConn>> = (0..ctx.replicas.len()).map(|_| None).collect();
+    let mut line = String::new();
+    let mut reply = String::new();
+    let mut wbuf = String::new();
+    let mut req_seq = 0u64;
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        req_seq += 1;
+        let inline: Option<Json> = match Json::parse(&line) {
+            Err(e) => Some(err_json(&bad(format!("invalid JSON: {e:#}")))),
+            Ok(parsed) => match parsed.get("op").and_then(|v| v.as_str()) {
+                Err(_) => Some(err_json(&bad("missing \"op\""))),
+                Ok("ping") => {
+                    Some(Json::obj(vec![("ok", Json::Bool(true)), ("role", Json::str("router"))]))
+                }
+                Ok("stats") => Some(router_stats_json(ctx)),
+                Ok("drain") => Some(admin_op(ctx, &parsed, true)),
+                Ok("resume") => Some(admin_op(ctx, &parsed, false)),
+                Ok("shutdown") => {
+                    wbuf.clear();
+                    Json::obj(vec![("ok", Json::Bool(true))]).write_into(&mut wbuf);
+                    wbuf.push('\n');
+                    let _ = writer.write_all(wbuf.as_bytes());
+                    trigger_shutdown(ctx, listen_addr);
+                    return;
+                }
+                // Data-plane lines relay through the same failover loop as
+                // binary infers (model_info rides along: it is read-only
+                // and deterministic, so retrying it is equally safe).
+                Ok("infer") | Ok("model_info") => {
+                    match forward_json(ctx, &line, &mut reply, &mut conns, seed ^ req_seq) {
+                        Forward::Relay => None,
+                        Forward::Shed => {
+                            ctx.stats.shed_no_backend.fetch_add(1, Ordering::Relaxed);
+                            let e = ServeError::NoBackend { replicas: ctx.replicas.len() };
+                            Some(err_json(&e))
+                        }
+                    }
+                }
+                Ok(other) => Some(err_json(&bad(format!("unknown op {other:?}")))),
+            },
+        };
+        let bytes: &[u8] = match &inline {
+            Some(json) => {
+                wbuf.clear();
+                json.write_into(&mut wbuf);
+                wbuf.push('\n');
+                wbuf.as_bytes()
+            }
+            None => reply.as_bytes(),
+        };
+        if writer.write_all(bytes).is_err() {
+            return;
+        }
+    }
+}
+
+/// The addressed drain/resume control op: `{"op":"drain","backend":ADDR}`.
+fn admin_op(ctx: &ProxyContext, req: &Json, drain: bool) -> Json {
+    let op = if drain { "drain" } else { "resume" };
+    let addr = match req.get("backend").and_then(|v| v.as_str()) {
+        Ok(a) => a.to_string(),
+        Err(_) => return err_json(&bad(format!("{op} needs \"backend\" (a replica address)"))),
+    };
+    let Some(i) = ctx.replicas.find(&addr) else {
+        return err_json(&bad(format!("no replica at {addr:?}")));
+    };
+    let timeout = Duration::from_millis(ctx.admin_timeout_ms.max(1));
+    let result =
+        if drain { ctx.replicas.drain(i, timeout) } else { ctx.replicas.resume(i, timeout) };
+    match result {
+        Ok(()) => {
+            let state = ctx.replicas.snapshot()[i].state;
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("backend", Json::str(addr)),
+                ("state", Json::str(state.as_str())),
+            ])
+        }
+        Err(e) => err_json(&bad(format!("{op} {addr}: {e:#}"))),
+    }
+}
+
+/// Forward one JSON line with the same pick/retry/exclude loop as the
+/// binary path. On `Relay` the backend's reply line is in `reply`.
+fn forward_json(
+    ctx: &Arc<ProxyContext>,
+    line: &str,
+    reply: &mut String,
+    conns: &mut [Option<JsonConn>],
+    seed: u64,
+) -> Forward {
+    let read_timeout = ctx.read_timeout(0);
+    let mut backoff = ctx.retry.backoff(seed);
+    let mut exclude = 0u64;
+    let mut typed = String::new();
+    let mut have_typed = false;
+    let mut attempts = 0u32;
+    let max_attempts = ctx.retry.max_attempts.max(1);
+    loop {
+        let picked = ctx.replicas.pick(exclude).or_else(|| ctx.replicas.pick(0));
+        let Some(i) = picked else {
+            return if have_typed {
+                std::mem::swap(reply, &mut typed);
+                finish(ctx, attempts);
+                Forward::Relay
+            } else {
+                Forward::Shed
+            };
+        };
+        attempts += 1;
+        match attempt_json(ctx, line, reply, conns, i, read_timeout) {
+            Ok(()) => {
+                ctx.replicas.record_success(i);
+                match json_error_code(reply) {
+                    Some(code) if retryable_code(code) => {
+                        std::mem::swap(reply, &mut typed);
+                        have_typed = true;
+                        exclude |= 1u64 << i;
+                    }
+                    _ => {
+                        finish(ctx, attempts);
+                        return Forward::Relay;
+                    }
+                }
+            }
+            Err(_) => {
+                ctx.replicas.record_failure(i);
+                conns[i] = None;
+                exclude |= 1u64 << i;
+            }
+        }
+        if attempts >= max_attempts {
+            return if have_typed {
+                std::mem::swap(reply, &mut typed);
+                finish(ctx, attempts);
+                Forward::Relay
+            } else {
+                Forward::Shed
+            };
+        }
+        std::thread::sleep(backoff.next_delay());
+    }
+}
+
+fn attempt_json(
+    ctx: &ProxyContext,
+    line: &str,
+    reply: &mut String,
+    conns: &mut [Option<JsonConn>],
+    i: usize,
+    read_timeout: Duration,
+) -> io::Result<()> {
+    if conns[i].is_none() {
+        let stream = connect(&ctx.replicas.addr(i), ctx.connect_timeout(), read_timeout)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        conns[i] = Some(JsonConn { stream, reader });
+    }
+    let c = conns[i].as_mut().expect("just connected");
+    c.stream.set_read_timeout(Some(read_timeout))?;
+    c.stream.write_all(line.as_bytes())?;
+    reply.clear();
+    match c.reader.read_line(reply)? {
+        0 => Err(io::Error::new(io::ErrorKind::UnexpectedEof, "backend closed mid-request")),
+        _ => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_frames_expose_status_and_deadline_at_fixed_offsets() {
+        // Typed refusal: the status byte at its fixed offset maps to the
+        // frozen code, which is what the retry decision reads.
+        let mut frame = Vec::new();
+        let e = ServeError::Overloaded { queued: 8, capacity: 8 };
+        wire::encode_binary_err(&mut frame, wire::OP_INFER, &e);
+        assert_eq!(frame[REPLY_STATUS_AT], e.tag());
+        assert_eq!(reply_code(&frame), Some("overloaded"));
+        assert_eq!(frame[FRAME_OP_AT], wire::OP_INFER);
+
+        // Success: status 0, no code.
+        wire::encode_pong(&mut frame, false, 3);
+        assert_eq!(reply_code(&frame), None);
+
+        // Request deadline field at its fixed offset.
+        wire::encode_infer_request(&mut frame, 7, 1, 2, 1234, &[1, -1]);
+        assert_eq!(rd_u64_at(&frame, REQ_DEADLINE_AT), 1234);
+        assert_eq!(frame[FRAME_OP_AT], wire::OP_INFER);
+    }
+
+    #[test]
+    fn read_frame_rejects_bad_framing_as_invalid_data() {
+        use std::io::Cursor;
+        let mut good = Vec::new();
+        wire::encode_simple_request(&mut good, wire::OP_PING);
+        let mut buf = Vec::new();
+        read_frame(&mut Cursor::new(&good[..]), &mut buf, wire::REQ_HEADER_LEN).unwrap();
+        assert_eq!(buf, good, "a relayed frame is byte-identical to what arrived");
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        let e = read_frame(&mut Cursor::new(&bad_magic[..]), &mut buf, wire::REQ_HEADER_LEN)
+            .unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+
+        let mut truncated = good.clone();
+        truncated.truncate(wire::PREFIX_LEN + 4);
+        let e = read_frame(&mut Cursor::new(&truncated[..]), &mut buf, wire::REQ_HEADER_LEN)
+            .unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn json_error_codes_extract_without_a_parse() {
+        let mut line = String::new();
+        err_json(&ServeError::Draining).write_into(&mut line);
+        assert_eq!(json_error_code(&line), Some("draining"));
+
+        line.clear();
+        err_json(&ServeError::NoBackend { replicas: 3 }).write_into(&mut line);
+        assert_eq!(json_error_code(&line), Some("no_backend"));
+
+        // Success lines (sorted keys never start with "code") pass through.
+        assert_eq!(json_error_code("{\"batch_rows\":1,\"ok\":true}"), None);
+        assert_eq!(json_error_code("{\"draining\":false,\"in_flight\":0,\"ok\":true}"), None);
+    }
+
+    #[test]
+    fn synthesized_no_backend_sheds_decode_typed() {
+        let mut frame = Vec::new();
+        let e = ServeError::NoBackend { replicas: 4 };
+        wire::encode_binary_err(&mut frame, wire::OP_INFER, &e);
+        let mut scratch = Vec::new();
+        let reply = wire::read_reply(&mut std::io::Cursor::new(&frame[..]), &mut scratch).unwrap();
+        match reply {
+            wire::Reply::Err { op, tag, message } => {
+                assert_eq!(op, wire::OP_INFER);
+                assert_eq!(ServeError::code_for_tag(tag), Some("no_backend"));
+                assert!(message.contains('4'), "{message}");
+            }
+            other => panic!("expected typed error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,566 @@
+//! Replica management: the health state machine, the prober that drives
+//! it, and spawned-child lifecycle (spawn, drain-restart, respawn).
+//!
+//! Each backend replica carries one of four states:
+//!
+//! ```text
+//!        probe ok                probe/forward failure
+//!   Up ───────────── Up      Up ──────────────────────▶ Degraded
+//!   Degraded ───────▶ Up     Degraded ──(threshold)───▶ Down
+//!   Down ───────────▶ Up     Down ────────────────────▶ Down
+//!   (admin drain) anything ─▶ Draining ─(resume/restart)▶ Down → Up
+//! ```
+//!
+//! * **Up** — routable. **Degraded** — routable, but it has recent
+//!   failures below the breaker threshold (picked only when no Up replica
+//!   exists). **Down** — the circuit breaker is open: the proxy never
+//!   routes here, but the prober keeps pinging (that *is* the half-open
+//!   probe), and one successful pong re-admits the replica. **Draining** —
+//!   admin-quiesced: not routable, while its queued/executing work
+//!   completes.
+//!
+//! The breaker counts *consecutive* failures from both probes and proxy
+//! forwards; any success resets it. Kill -9 on a replica therefore costs
+//! at most `threshold` failed requests (each retried elsewhere) before the
+//! router stops sending traffic, and a restarted replica re-enters the
+//! pool within one probe interval with no operator action.
+//!
+//! Drain-to-restart is the zero-loss failover primitive: `drain` marks the
+//! replica Draining and forwards the wire drain op (the replica starts
+//! refusing new work typed); the prober watches its pong's `in_flight`
+//! gauge; at zero a *spawned* replica is killed and respawned fresh
+//! (attached replicas wait for an explicit `resume`). Nothing in flight is
+//! ever abandoned.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::super::wire;
+use crate::json::Json;
+
+/// One backend entry of the router's pool.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// An already-running `a2q serve` at this address. The router never
+    /// manages its process — drain holds until an explicit resume.
+    Attached(String),
+    /// A replica the router spawns itself (`a2q serve --addr 127.0.0.1:0`)
+    /// and may kill/respawn: `models` is the child's `--models` value.
+    Spawn { models: String, workers: usize },
+}
+
+/// The health state machine (see module docs for transitions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    Up,
+    Degraded,
+    Down,
+    Draining,
+}
+
+impl HealthState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthState::Up => "up",
+            HealthState::Degraded => "degraded",
+            HealthState::Down => "down",
+            HealthState::Draining => "draining",
+        }
+    }
+}
+
+/// Router-level counters (the `stats` admin op surfaces them).
+#[derive(Debug, Default)]
+pub struct RouterStats {
+    /// Requests relayed to a backend (each counted once, not per attempt).
+    pub forwarded: AtomicU64,
+    /// Extra attempts beyond each request's first.
+    pub retries: AtomicU64,
+    /// Hedge attempts launched (tail-latency duplicates).
+    pub hedges: AtomicU64,
+    /// Hedges whose duplicate finished first.
+    pub hedge_wins: AtomicU64,
+    /// Requests shed typed `no_backend` (no routable replica).
+    pub shed_no_backend: AtomicU64,
+    /// Spawned replicas restarted (drain-restart or crash respawn).
+    pub respawns: AtomicU64,
+    pub probes_ok: AtomicU64,
+    pub probes_failed: AtomicU64,
+}
+
+#[derive(Debug)]
+struct ReplicaInner {
+    addr: String,
+    state: HealthState,
+    /// Consecutive probe/forward failures (the breaker input).
+    failures: u32,
+    /// Last pong's in-flight gauge (drain watches this reach zero).
+    in_flight: u64,
+    /// Last pong's drain flag (stats mirror of the replica's own view).
+    reports_draining: bool,
+    child: Option<Child>,
+}
+
+/// One replica: its spec plus the mutable health state.
+#[derive(Debug)]
+pub struct Replica {
+    spec: BackendSpec,
+    inner: Mutex<ReplicaInner>,
+}
+
+/// Point-in-time view of one replica (the `stats` admin op's rows).
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    pub addr: String,
+    pub state: HealthState,
+    pub failures: u32,
+    pub in_flight: u64,
+    /// What the replica's own last pong said about its drain flag (can lag
+    /// or disagree with the router's `state` across a restart).
+    pub reports_draining: bool,
+    pub spawned: bool,
+}
+
+impl ReplicaSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("addr", Json::str(self.addr.as_str())),
+            ("state", Json::str(self.state.as_str())),
+            ("failures", Json::num(self.failures as f64)),
+            ("in_flight", Json::num(self.in_flight as f64)),
+            ("reports_draining", Json::Bool(self.reports_draining)),
+            ("spawned", Json::Bool(self.spawned)),
+        ])
+    }
+}
+
+/// The router's replica pool. Pick/record methods are called from proxy
+/// sessions; probe/respawn from the single prober thread.
+pub struct ReplicaSet {
+    replicas: Vec<Replica>,
+    rr: AtomicUsize,
+    breaker_threshold: u32,
+    respawn: bool,
+}
+
+/// Replica count ceiling: `pick` exclusion travels as a u64 bitmask.
+pub const MAX_REPLICAS: usize = 64;
+
+impl ReplicaSet {
+    /// Build the pool: attach addresses as given, spawn children for spawn
+    /// specs (startup fails if any child fails to come up — a router with
+    /// fewer replicas than asked is a silent capacity lie).
+    pub fn start(
+        specs: &[BackendSpec],
+        breaker_threshold: u32,
+        respawn: bool,
+    ) -> anyhow::Result<ReplicaSet> {
+        anyhow::ensure!(!specs.is_empty(), "a2q route needs at least one backend");
+        anyhow::ensure!(
+            specs.len() <= MAX_REPLICAS,
+            "at most {MAX_REPLICAS} replicas (got {})",
+            specs.len()
+        );
+        let mut replicas = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let (addr, child) = match spec {
+                BackendSpec::Attached(addr) => (addr.clone(), None),
+                BackendSpec::Spawn { models, workers } => {
+                    let (child, addr) = spawn_replica(models, *workers)?;
+                    (addr, Some(child))
+                }
+            };
+            replicas.push(Replica {
+                spec: spec.clone(),
+                inner: Mutex::new(ReplicaInner {
+                    addr,
+                    // Start Up: backends were just spawned/attached, and a
+                    // wrong guess self-corrects within one probe interval.
+                    state: HealthState::Up,
+                    failures: 0,
+                    in_flight: 0,
+                    reports_draining: false,
+                    child,
+                }),
+            });
+        }
+        Ok(ReplicaSet {
+            replicas,
+            rr: AtomicUsize::new(0),
+            breaker_threshold: breaker_threshold.max(1),
+            respawn,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn addr(&self, i: usize) -> String {
+        self.replicas[i].inner.lock().unwrap().addr.clone()
+    }
+
+    /// Index of the replica currently at `addr` (admin ops name replicas
+    /// by address).
+    pub fn find(&self, addr: &str) -> Option<usize> {
+        self.replicas.iter().position(|r| r.inner.lock().unwrap().addr == addr)
+    }
+
+    /// Pick a routable replica, skipping `exclude` (bitmask of indices
+    /// already tried this request). Round-robin over Up replicas; if none,
+    /// a second pass accepts Degraded (better a shaky replica than a
+    /// typed shed). Down and Draining are never picked.
+    pub fn pick(&self, exclude: u64) -> Option<usize> {
+        let n = self.replicas.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        for accept_degraded in [false, true] {
+            for k in 0..n {
+                let i = (start + k) % n;
+                if exclude & (1u64 << i) != 0 {
+                    continue;
+                }
+                let st = self.replicas[i].inner.lock().unwrap().state;
+                let ok = match st {
+                    HealthState::Up => true,
+                    HealthState::Degraded => accept_degraded,
+                    HealthState::Down | HealthState::Draining => false,
+                };
+                if ok {
+                    return Some(i);
+                }
+            }
+        }
+        None
+    }
+
+    /// A proxy forward (or probe) against replica `i` succeeded: reset the
+    /// breaker and re-admit unless the replica is admin-drained.
+    pub fn record_success(&self, i: usize) {
+        let mut inner = self.replicas[i].inner.lock().unwrap();
+        inner.failures = 0;
+        if inner.state != HealthState::Draining {
+            inner.state = HealthState::Up;
+        }
+    }
+
+    /// A transport-level failure against replica `i`: count it toward the
+    /// breaker; at the threshold the breaker opens (Down).
+    pub fn record_failure(&self, i: usize) {
+        let mut inner = self.replicas[i].inner.lock().unwrap();
+        inner.failures = inner.failures.saturating_add(1);
+        if inner.state == HealthState::Draining {
+            return; // drain owns the state until restart/resume
+        }
+        inner.state = if inner.failures >= self.breaker_threshold {
+            HealthState::Down
+        } else {
+            HealthState::Degraded
+        };
+    }
+
+    /// Admin drain: stop routing to `i` and tell the replica to refuse new
+    /// work typed. The prober finishes the job (restart at in-flight zero
+    /// for spawned replicas).
+    pub fn drain(&self, i: usize, probe_timeout: Duration) -> anyhow::Result<()> {
+        send_admin_op(&self.addr(i), wire::OP_DRAIN, probe_timeout)?;
+        self.replicas[i].inner.lock().unwrap().state = HealthState::Draining;
+        Ok(())
+    }
+
+    /// Admin resume: tell the replica to admit work again and put it back
+    /// through the probe loop (Down → first pong promotes it Up).
+    pub fn resume(&self, i: usize, probe_timeout: Duration) -> anyhow::Result<()> {
+        send_admin_op(&self.addr(i), wire::OP_RESUME, probe_timeout)?;
+        let mut inner = self.replicas[i].inner.lock().unwrap();
+        inner.state = HealthState::Down;
+        inner.failures = 0;
+        Ok(())
+    }
+
+    pub fn snapshot(&self) -> Vec<ReplicaSnapshot> {
+        self.replicas
+            .iter()
+            .map(|r| {
+                let inner = r.inner.lock().unwrap();
+                ReplicaSnapshot {
+                    addr: inner.addr.clone(),
+                    state: inner.state,
+                    failures: inner.failures,
+                    in_flight: inner.in_flight,
+                    reports_draining: inner.reports_draining,
+                    spawned: matches!(r.spec, BackendSpec::Spawn { .. }),
+                }
+            })
+            .collect()
+    }
+
+    /// One prober pass: ping every replica, drive the state machine, and
+    /// handle spawned-child lifecycle (crash respawn, drain-restart).
+    /// Runs on the single prober thread.
+    pub fn probe_all(&self, probe_timeout: Duration, stats: &RouterStats) {
+        for i in 0..self.replicas.len() {
+            let addr = self.addr(i);
+            match probe_once(&addr, probe_timeout) {
+                Ok((draining, in_flight)) => {
+                    stats.probes_ok.fetch_add(1, Ordering::Relaxed);
+                    let restart = {
+                        let mut inner = self.replicas[i].inner.lock().unwrap();
+                        inner.failures = 0;
+                        inner.in_flight = in_flight;
+                        inner.reports_draining = draining;
+                        match inner.state {
+                            // Half-open: a pong from a Down replica is the
+                            // re-admission signal.
+                            HealthState::Down | HealthState::Degraded => {
+                                inner.state = HealthState::Up;
+                                false
+                            }
+                            // Drain complete: a spawned replica restarts
+                            // fresh; an attached one waits for resume.
+                            HealthState::Draining => {
+                                in_flight == 0 && self.respawn && inner.child.is_some()
+                            }
+                            HealthState::Up => false,
+                        }
+                    };
+                    if restart {
+                        self.respawn_replica(i, stats);
+                    }
+                }
+                Err(_) => {
+                    stats.probes_failed.fetch_add(1, Ordering::Relaxed);
+                    self.record_failure(i);
+                    // A spawned child that actually exited (kill -9, crash)
+                    // is respawned without waiting for the breaker.
+                    let exited = {
+                        let mut inner = self.replicas[i].inner.lock().unwrap();
+                        match inner.child.as_mut() {
+                            Some(c) => c.try_wait().map(|st| st.is_some()).unwrap_or(true),
+                            None => false,
+                        }
+                    };
+                    if exited && self.respawn {
+                        self.respawn_replica(i, stats);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Kill (if alive) and respawn a spawned replica's child, installing
+    /// the fresh address. The replica re-enters the pool via the probe
+    /// loop: Down until its first pong. The spawn itself runs outside the
+    /// lock so proxy sessions keep routing around it meanwhile.
+    fn respawn_replica(&self, i: usize, stats: &RouterStats) {
+        let (models, workers) = match &self.replicas[i].spec {
+            BackendSpec::Spawn { models, workers } => (models.clone(), *workers),
+            BackendSpec::Attached(_) => return,
+        };
+        let old = {
+            let mut inner = self.replicas[i].inner.lock().unwrap();
+            inner.state = HealthState::Down;
+            inner.failures = 0;
+            inner.child.take()
+        };
+        if let Some(mut c) = old {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        // On spawn failure (fork pressure, port exhaustion) the replica
+        // stays Down and the next prober pass tries again via `exited`.
+        if let Ok((child, addr)) = spawn_replica(&models, workers) {
+            stats.respawns.fetch_add(1, Ordering::Relaxed);
+            let mut inner = self.replicas[i].inner.lock().unwrap();
+            inner.addr = addr;
+            inner.child = Some(child);
+            inner.in_flight = 0;
+            inner.reports_draining = false;
+        }
+    }
+
+    /// Kill every spawned child (router shutdown).
+    pub fn shutdown_children(&self) {
+        for r in &self.replicas {
+            if let Some(mut c) = r.inner.lock().unwrap().child.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+/// One binary health probe: connect, ping, read the pong. Both the connect
+/// and the read are bounded by `timeout` — a stalled replica (see the
+/// `ping_stall_ms` fault) counts as a failed probe, exactly like a dead
+/// one.
+fn probe_once(addr: &str, timeout: Duration) -> anyhow::Result<(bool, u64)> {
+    use std::net::ToSocketAddrs;
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no address resolved for {addr}"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut frame = Vec::with_capacity(wire::PREFIX_LEN + wire::REQ_HEADER_LEN);
+    wire::encode_simple_request(&mut frame, wire::OP_PING);
+    stream.write_all(&frame)?;
+    let mut scratch = Vec::new();
+    match wire::read_reply(&mut stream, &mut scratch)? {
+        wire::Reply::Pong { draining, in_flight } => Ok((draining, in_flight)),
+        // A payload-less ack (pre-drain wire) still proves liveness.
+        wire::Reply::Ok { op } if op == wire::OP_PING => Ok((false, 0)),
+        other => anyhow::bail!("unexpected ping reply {other:?}"),
+    }
+}
+
+/// Forward a drain/resume op to a replica and wait for the ack.
+fn send_admin_op(addr: &str, op: u8, timeout: Duration) -> anyhow::Result<()> {
+    use std::net::ToSocketAddrs;
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no address resolved for {addr}"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut frame = Vec::new();
+    wire::encode_simple_request(&mut frame, op);
+    stream.write_all(&frame)?;
+    let mut scratch = Vec::new();
+    match wire::read_reply(&mut stream, &mut scratch)? {
+        wire::Reply::Ok { op: ack } if ack == op => Ok(()),
+        other => anyhow::bail!("unexpected ack for op {op}: {other:?}"),
+    }
+}
+
+/// Spawn one `a2q serve` child on an ephemeral port and parse the bound
+/// address from its startup line. The child's remaining stdout is drained
+/// by a detached thread so it can never block on a full pipe.
+fn spawn_replica(models: &str, workers: usize) -> anyhow::Result<(Child, String)> {
+    // `A2Q_SERVE_BIN` points tests at the real CLI: inside `cargo test`
+    // the current executable is the test harness, which cannot serve.
+    let exe = match std::env::var_os("A2Q_SERVE_BIN") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::env::current_exe()?,
+    };
+    let mut child = Command::new(exe)
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--models",
+            models,
+            "--workers",
+            &workers.max(1).to_string(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .stdin(Stdio::null())
+        .spawn()?;
+    let stdout = child.stdout.take().ok_or_else(|| anyhow::anyhow!("no child stdout"))?;
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            let _ = child.kill();
+            let _ = child.wait();
+            anyhow::bail!("spawned replica exited before announcing its address");
+        }
+        if let Some(rest) = line.trim().strip_prefix("[serve] listening on ") {
+            break rest.trim().to_string();
+        }
+    };
+    std::thread::Builder::new()
+        .name("a2q-route-child-stdout".to_string())
+        .spawn(move || {
+            let mut sink = [0u8; 4096];
+            let mut r = reader;
+            while matches!(r.read(&mut sink), Ok(n) if n > 0) {}
+        })
+        .ok();
+    Ok((child, addr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attached_set(n: usize, threshold: u32) -> ReplicaSet {
+        let specs: Vec<BackendSpec> =
+            (0..n).map(|i| BackendSpec::Attached(format!("127.0.0.1:{}", 7000 + i))).collect();
+        ReplicaSet::start(&specs, threshold, false).unwrap()
+    }
+
+    #[test]
+    fn breaker_opens_at_threshold_and_success_resets_it() {
+        let set = attached_set(1, 3);
+        assert_eq!(set.snapshot()[0].state, HealthState::Up);
+        set.record_failure(0);
+        assert_eq!(set.snapshot()[0].state, HealthState::Degraded);
+        set.record_failure(0);
+        assert_eq!(set.snapshot()[0].state, HealthState::Degraded);
+        set.record_failure(0);
+        assert_eq!(set.snapshot()[0].state, HealthState::Down, "third strike opens the breaker");
+        assert!(set.pick(0).is_none(), "an open breaker is unroutable");
+        set.record_success(0);
+        assert_eq!(set.snapshot()[0].state, HealthState::Up, "one success re-admits");
+        assert_eq!(set.snapshot()[0].failures, 0);
+    }
+
+    #[test]
+    fn pick_prefers_up_over_degraded_and_honors_exclusion() {
+        let set = attached_set(3, 5);
+        set.record_failure(0); // 0: Degraded
+        for _ in 0..16 {
+            let i = set.pick(0).unwrap();
+            assert!(i == 1 || i == 2, "Up replicas win over Degraded");
+        }
+        // With both Up replicas excluded, Degraded is better than a shed.
+        assert_eq!(set.pick(0b110), Some(0));
+        // Everything excluded: typed shed territory.
+        assert_eq!(set.pick(0b111), None);
+    }
+
+    #[test]
+    fn pick_round_robins_across_up_replicas() {
+        let set = attached_set(3, 3);
+        let mut seen = [0usize; 3];
+        for _ in 0..30 {
+            seen[set.pick(0).unwrap()] += 1;
+        }
+        for (i, &count) in seen.iter().enumerate() {
+            assert_eq!(count, 10, "replica {i} must get an equal share");
+        }
+    }
+
+    #[test]
+    fn draining_is_unroutable_but_failure_proof() {
+        let set = attached_set(2, 2);
+        set.replicas[0].inner.lock().unwrap().state = HealthState::Draining;
+        for _ in 0..8 {
+            assert_eq!(set.pick(0), Some(1), "draining replicas receive no traffic");
+        }
+        // Failures during drain must not flip the state to Down (the
+        // prober owns the drain-to-restart transition).
+        set.record_failure(0);
+        assert_eq!(set.snapshot()[0].state, HealthState::Draining);
+        // And success (e.g. a probe pong) must not re-admit mid-drain.
+        set.record_success(0);
+        assert_eq!(set.snapshot()[0].state, HealthState::Draining);
+    }
+
+    #[test]
+    fn find_locates_replicas_by_address() {
+        let set = attached_set(2, 2);
+        assert_eq!(set.find("127.0.0.1:7001"), Some(1));
+        assert_eq!(set.find("127.0.0.1:9999"), None);
+    }
+}

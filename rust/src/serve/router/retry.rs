@@ -1,0 +1,140 @@
+//! Retry policy: what the router may re-send, and how long it waits.
+//!
+//! The safety argument comes first. An `infer` against an A2Q replica is
+//! idempotent and bit-identical across replicas (the accumulator plan is a
+//! pure function of the model hash and the input codes), so re-sending a
+//! request can never produce a different answer — only the same answer
+//! later. The one thing a retry must never do is duplicate or interleave
+//! bytes the client has already started reading; the proxy guarantees that
+//! structurally by buffering the complete backend reply before relaying a
+//! single byte (see `proxy.rs`), which reduces "is this retry safe?" to
+//! "did this outcome leave the request unserved?".
+//!
+//! Outcomes that leave the request unserved and are therefore retryable:
+//!
+//! * every transport failure (connect refused/reset, mid-exchange hangup,
+//!   read timeout) — the replica died or was killed before completing a
+//!   reply;
+//! * the typed codes [`retryable_code`] accepts: `overloaded` (another
+//!   replica may have queue room), `draining` / `shutting_down` (the
+//!   replica is leaving the pool; that is exactly what failover is for)
+//!   and `worker_panicked` (per-batch fault isolation on one replica says
+//!   nothing about the others).
+//!
+//! `deadline_exceeded` is typed but NOT retryable: the client's budget is
+//! already spent, and re-queueing elsewhere can only blow it further.
+//! Request errors (`bad_request`, `unknown_model`, ...) are deterministic —
+//! retrying them is pure waste.
+//!
+//! Between attempts the router sleeps per *decorrelated jitter*: each delay
+//! is drawn uniformly from `[base, prev * 3]`, capped. Unlike plain
+//! exponential backoff, concurrent sessions that failed together decorrelate
+//! after one round instead of thundering back in lockstep.
+
+use std::time::Duration;
+
+use crate::rng::Rng;
+
+/// Retry knobs. `Default` trades at most ~100ms of added latency for
+/// riding out a replica kill.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per request, first try included (1 = never retry).
+    pub max_attempts: u32,
+    /// Backoff floor per retry.
+    pub base_ms: u64,
+    /// Backoff ceiling per retry.
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 3, base_ms: 2, cap_ms: 50 }
+    }
+}
+
+impl RetryPolicy {
+    /// A fresh backoff sequence for one request's retry chain. `seed`
+    /// varies per session/request so concurrent chains decorrelate.
+    pub fn backoff(&self, seed: u64) -> Backoff {
+        Backoff {
+            base_ms: self.base_ms.max(1),
+            cap_ms: self.cap_ms.max(self.base_ms.max(1)),
+            prev_ms: self.base_ms.max(1),
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+/// Decorrelated-jitter backoff state for one retry chain.
+#[derive(Debug)]
+pub struct Backoff {
+    base_ms: u64,
+    cap_ms: u64,
+    prev_ms: u64,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// The next delay: uniform in `[base, prev * 3]`, capped.
+    pub fn next_delay(&mut self) -> Duration {
+        let hi = (self.prev_ms.saturating_mul(3)).min(self.cap_ms).max(self.base_ms);
+        let span = (hi - self.base_ms + 1) as usize;
+        let ms = self.base_ms + self.rng.below(span) as u64;
+        self.prev_ms = ms;
+        Duration::from_millis(ms)
+    }
+}
+
+/// Whether a typed [`ServeError::code`] outcome left the request unserved
+/// on a replica that is overloaded, leaving, or faulted — i.e. worth one
+/// more attempt elsewhere. See the module docs for the full argument.
+///
+/// [`ServeError::code`]: crate::serve::ServeError::code
+pub fn retryable_code(code: &str) -> bool {
+    matches!(code, "overloaded" | "draining" | "shutting_down" | "worker_panicked")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retryable_codes_match_the_failover_contract() {
+        for code in ["overloaded", "draining", "shutting_down", "worker_panicked"] {
+            assert!(retryable_code(code), "{code} leaves the request unserved elsewhere");
+        }
+        for code in ["deadline_exceeded", "bad_request", "unknown_model", "load_failed", "ok"] {
+            assert!(!retryable_code(code), "{code} must not be retried");
+        }
+    }
+
+    #[test]
+    fn backoff_stays_within_bounds_and_decorrelates() {
+        let policy = RetryPolicy { max_attempts: 5, base_ms: 2, cap_ms: 50 };
+        let mut a = policy.backoff(1);
+        let mut b = policy.backoff(2);
+        let (mut da, mut db) = (Vec::new(), Vec::new());
+        for _ in 0..32 {
+            let (x, y) = (a.next_delay().as_millis() as u64, b.next_delay().as_millis() as u64);
+            assert!((2..=50).contains(&x), "delay {x}ms outside [base, cap]");
+            assert!((2..=50).contains(&y), "delay {y}ms outside [base, cap]");
+            da.push(x);
+            db.push(y);
+        }
+        assert_ne!(da, db, "different seeds must produce different jitter");
+    }
+
+    #[test]
+    fn degenerate_policies_stay_sane() {
+        // cap below base clamps to base; zero base clamps to 1ms.
+        let mut z = RetryPolicy { max_attempts: 2, base_ms: 0, cap_ms: 0 }.backoff(7);
+        for _ in 0..8 {
+            assert_eq!(z.next_delay(), Duration::from_millis(1));
+        }
+        let mut c = RetryPolicy { max_attempts: 2, base_ms: 10, cap_ms: 3 }.backoff(7);
+        for _ in 0..8 {
+            assert_eq!(c.next_delay(), Duration::from_millis(10));
+        }
+    }
+}

@@ -15,9 +15,9 @@
 //! A connection picks its protocol with its first byte, once:
 //!
 //! * `b'A'` (the binary magic's first byte) — the length-prefixed binary
-//!   frame protocol of [`super::wire`]: infer/ping/shutdown, i64 codes in,
-//!   f32 outputs out, typed errors as status tags. This is the
-//!   allocation-free hot path (`tests/serve_alloc.rs` pins it).
+//!   frame protocol of [`super::wire`]: infer/ping/shutdown/drain/resume,
+//!   i64 codes in, f32 outputs out, typed errors as status tags. This is
+//!   the allocation-free hot path (`tests/serve_alloc.rs` pins it).
 //! * anything else (JSON objects start with `{` or whitespace) —
 //!   line-delimited JSON, one request per line, one response line each
 //!   (keys sorted — [`crate::json`]). Ops:
@@ -27,6 +27,8 @@
 //! {"op":"model_info","model":"m"}
 //! {"op":"infer","model":"m","rows":[[codes...],...],"deadline_ms":100}
 //! {"op":"stats"}
+//! {"op":"drain"}
+//! {"op":"resume"}
 //! {"op":"shutdown"}
 //! ```
 //!
@@ -40,6 +42,16 @@
 //! (binary: header field, 0 = server default). `stats`/`model_info` are
 //! JSON-only ops — binary clients open a JSON connection for metadata and
 //! keep the binary one for data.
+//!
+//! `drain` flips the admission queue into drain mode — new work is refused
+//! with the typed `draining` code while queued and executing requests
+//! complete normally — and `resume` flips it back; `ping` acks report the
+//! drain flag and the in-flight gauge (both protocols), which is how a
+//! router bleeds a replica to zero before restarting it. Connections are
+//! also guarded by an optional per-connection idle timeout
+//! (`--idle-timeout-ms`): a socket that produces no request bytes for that
+//! long gets a typed `idle_timeout` close instead of pinning its session
+//! thread forever (slow-loris defence).
 //!
 //! Both protocols share the serving core: the same pooled buffers, the
 //! same admission queue, the same workers. A worker encodes the complete
@@ -84,6 +96,10 @@ pub struct ServeConfig {
     /// (`queue_capacity + 2 * workers + 8` — a full queue plus every
     /// worker's in-flight batch plus sessions mid-decode).
     pub pool_retain: usize,
+    /// Per-connection read/idle timeout in ms; a connection that sends no
+    /// request bytes for this long is closed with a typed `idle_timeout`
+    /// reply. 0 disables the timeout (the pre-router behaviour).
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -96,6 +112,7 @@ impl Default for ServeConfig {
             batch_window_ms: 1,
             default_deadline_ms: 1000,
             pool_retain: 0,
+            idle_timeout_ms: 0,
         }
     }
 }
@@ -196,6 +213,7 @@ impl Server {
             let stats = stats.clone();
             let shutdown = shutdown.clone();
             let default_deadline = Duration::from_millis(cfg.default_deadline_ms.max(1));
+            let idle_timeout_ms = cfg.idle_timeout_ms;
             std::thread::Builder::new()
                 .name("a2q-serve-accept".to_string())
                 .spawn(move || {
@@ -219,6 +237,8 @@ impl Server {
                                     &stats,
                                     &shutdown,
                                     default_deadline,
+                                    idle_timeout_ms,
+                                    fault,
                                     &pool,
                                 )
                             });
@@ -277,17 +297,30 @@ fn err_json(e: &ServeError) -> Json {
     ])
 }
 
-fn stats_json(s: &StatsSnapshot) -> Json {
+fn stats_json(s: &StatsSnapshot, draining: bool) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("admitted", Json::num(s.admitted as f64)),
         ("completed", Json::num(s.completed as f64)),
         ("shed_overloaded", Json::num(s.shed_overloaded as f64)),
         ("shed_deadline", Json::num(s.shed_deadline as f64)),
+        ("shed_draining", Json::num(s.shed_draining as f64)),
         ("worker_panics", Json::num(s.worker_panics as f64)),
         ("respawns", Json::num(s.respawns as f64)),
         ("batches", Json::num(s.batches as f64)),
         ("batched_rows", Json::num(s.batched_rows as f64)),
+        ("in_flight", Json::num(s.in_flight as f64)),
+        ("draining", Json::Bool(draining)),
+    ])
+}
+
+/// The `ping`/`drain`/`resume` ack: liveness plus drain progress, the two
+/// facts a router's health probe needs from one round trip.
+fn drain_state_json(queue: &AdmissionQueue, stats: &ServeStats) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("draining", Json::Bool(queue.draining())),
+        ("in_flight", Json::num(stats.in_flight.load(Ordering::Relaxed) as f64)),
     ])
 }
 
@@ -313,6 +346,7 @@ fn trigger_shutdown(
 
 /// One connection: peek the first byte to pick the protocol, then hand the
 /// stream to that protocol's session loop.
+#[allow(clippy::too_many_arguments)]
 fn run_session(
     stream: TcpStream,
     queue: &AdmissionQueue,
@@ -320,8 +354,19 @@ fn run_session(
     stats: &ServeStats,
     shutdown: &AtomicBool,
     default_deadline: Duration,
+    idle_timeout_ms: u64,
+    fault: FaultPlan,
     pool: &Arc<BufferPool>,
 ) {
+    // Slow-loris defence: a connection that stops producing request bytes
+    // gets a typed close instead of pinning this thread forever. The
+    // timeout surfaces as a WouldBlock/TimedOut read error, which the
+    // session loops translate into a typed `idle_timeout` reply.
+    if idle_timeout_ms > 0
+        && stream.set_read_timeout(Some(Duration::from_millis(idle_timeout_ms))).is_err()
+    {
+        return;
+    }
     let writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -333,7 +378,16 @@ fn run_session(
     let first = match reader.fill_buf() {
         Ok([]) => return, // EOF before any request
         Ok(b) => b[0],
-        Err(_) => return,
+        Err(e) => {
+            if is_timeout(&e) {
+                let mut wbuf = Vec::new();
+                let idle = ServeError::IdleTimeout { idle_ms: idle_timeout_ms };
+                wire::encode_binary_err(&mut wbuf, 0, &idle);
+                let mut w = writer;
+                let _ = w.write_all(&wbuf);
+            }
+            return;
+        }
     };
     if first == wire::MAGIC_BYTE0 {
         run_binary_session(
@@ -345,6 +399,8 @@ fn run_session(
             shutdown,
             listen_addr,
             default_deadline,
+            idle_timeout_ms,
+            fault,
             pool,
         );
     } else {
@@ -357,8 +413,42 @@ fn run_session(
             shutdown,
             listen_addr,
             default_deadline,
+            idle_timeout_ms,
+            fault,
             pool,
         );
+    }
+}
+
+/// Whether a read error is the idle-timeout firing (`set_read_timeout`
+/// surfaces as WouldBlock on unix, TimedOut on windows).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Reply writer shared by both session loops: counts reply frames so the
+/// `conn_drop:N` fault can cut the connection after writing only half of
+/// the Nth reply — the deterministic "replica died mid-reply" a router's
+/// retry classification must handle. `Err(())` means "close the session".
+struct ReplyWriter<W: Write> {
+    w: W,
+    frames: u64,
+    drop_at: Option<u64>,
+}
+
+impl<W: Write> ReplyWriter<W> {
+    fn new(w: W, fault: &FaultPlan) -> ReplyWriter<W> {
+        ReplyWriter { w, frames: 0, drop_at: fault.conn_drop }
+    }
+
+    fn write_frame(&mut self, bytes: &[u8]) -> Result<(), ()> {
+        self.frames += 1;
+        if self.drop_at == Some(self.frames) {
+            let _ = self.w.write_all(&bytes[..bytes.len() / 2]);
+            let _ = self.w.flush();
+            return Err(()); // torn reply: the session closes the socket
+        }
+        self.w.write_all(bytes).map_err(|_| ())
     }
 }
 
@@ -375,23 +465,39 @@ enum LineReply {
 #[allow(clippy::too_many_arguments)]
 fn run_json_session(
     mut reader: BufReader<TcpStream>,
-    mut writer: TcpStream,
+    writer: TcpStream,
     queue: &AdmissionQueue,
     cache: &PlanCache,
     stats: &ServeStats,
     shutdown: &AtomicBool,
     listen_addr: Option<SocketAddr>,
     default_deadline: Duration,
+    idle_timeout_ms: u64,
+    fault: FaultPlan,
     pool: &Arc<BufferPool>,
 ) {
     let slot = ReplySlot::new();
+    let mut writer = ReplyWriter::new(writer, &fault);
     let mut line = String::new();
     let mut wbuf = String::new();
     let mut next_id = 0u64;
     loop {
         line.clear();
         match reader.read_line(&mut line) {
-            Ok(0) | Err(_) => return,
+            Ok(0) => return,
+            Err(e) => {
+                if is_timeout(&e) {
+                    // Typed close: the client learns why before the socket
+                    // goes away (a partially-read line is discarded — the
+                    // connection is closing either way).
+                    wbuf.clear();
+                    let idle = ServeError::IdleTimeout { idle_ms: idle_timeout_ms };
+                    err_json(&idle).write_into(&mut wbuf);
+                    wbuf.push('\n');
+                    let _ = writer.write_frame(wbuf.as_bytes());
+                }
+                return;
+            }
             Ok(_) => {}
         }
         if line.trim().is_empty() {
@@ -407,13 +513,14 @@ fn run_json_session(
             shutdown,
             listen_addr,
             default_deadline,
+            fault,
             pool,
             &slot,
         );
         match reply {
             LineReply::Encoded(buf) => {
                 // The worker wrote the full reply line (newline included).
-                if writer.write_all(buf.reply()).is_err() {
+                if writer.write_frame(buf.reply()).is_err() {
                     return;
                 }
                 // buf drops here -> storage returns to the pool
@@ -422,7 +529,7 @@ fn run_json_session(
                 wbuf.clear();
                 json.write_into(&mut wbuf);
                 wbuf.push('\n');
-                if writer.write_all(wbuf.as_bytes()).is_err() {
+                if writer.write_frame(wbuf.as_bytes()).is_err() {
                     return;
                 }
             }
@@ -440,6 +547,7 @@ fn handle_line(
     shutdown: &AtomicBool,
     listen_addr: Option<SocketAddr>,
     default_deadline: Duration,
+    fault: FaultPlan,
     pool: &Arc<BufferPool>,
     slot: &Arc<ReplySlot>,
 ) -> LineReply {
@@ -452,8 +560,21 @@ fn handle_line(
         Err(_) => return LineReply::Inline(err_json(&bad("missing \"op\""))),
     };
     LineReply::Inline(match op.as_str() {
-        "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
-        "stats" => stats_json(&stats.snapshot()),
+        "ping" => {
+            if let Some(stall) = fault.ping_stall_ms {
+                std::thread::sleep(Duration::from_millis(stall));
+            }
+            drain_state_json(queue, stats)
+        }
+        "stats" => stats_json(&stats.snapshot(), queue.draining()),
+        "drain" => {
+            queue.set_draining(true);
+            drain_state_json(queue, stats)
+        }
+        "resume" => {
+            queue.set_draining(false);
+            drain_state_json(queue, stats)
+        }
         "shutdown" => {
             trigger_shutdown(queue, stats, shutdown, listen_addr);
             Json::obj(vec![("ok", Json::Bool(true))])
@@ -508,8 +629,14 @@ fn submit_and_wait(
     slot: &Arc<ReplySlot>,
 ) -> Result<PooledBuf, ServeError> {
     if let Err(RejectedJob { request, error }) = queue.submit(request) {
-        if matches!(error, ServeError::Overloaded { .. }) {
-            stats.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+        match error {
+            ServeError::Overloaded { .. } => {
+                stats.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+            }
+            ServeError::Draining => {
+                stats.shed_draining.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
         }
         // Disarm the reply sender (the refusal is reported right here) and
         // let the pooled buffer return to the pool.
@@ -517,9 +644,14 @@ fn submit_and_wait(
         return Err(error);
     }
     stats.admitted.fetch_add(1, Ordering::Relaxed);
+    // In-flight covers admitted-to-delivered (queued or executing): the
+    // gauge a drain bleeds to zero before its replica restarts.
+    stats.in_flight.fetch_add(1, Ordering::Relaxed);
     // Admitted: the worker (or the queue's shed/close paths, or the
     // sender's fail-closed drop) owns the reply.
-    match slot.recv() {
+    let outcome = slot.recv();
+    stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+    match outcome {
         Ok(reply) => Ok(reply.into_buf()),
         Err(e) => Err(e),
     }
@@ -607,35 +739,45 @@ enum BinOutcome {
 #[allow(clippy::too_many_arguments)]
 pub fn run_binary_session<R: Read, W: Write>(
     mut reader: R,
-    mut writer: W,
+    writer: W,
     queue: &AdmissionQueue,
     cache: &PlanCache,
     stats: &ServeStats,
     shutdown: &AtomicBool,
     listen_addr: Option<SocketAddr>,
     default_deadline: Duration,
+    idle_timeout_ms: u64,
+    fault: FaultPlan,
     pool: &Arc<BufferPool>,
 ) {
     let slot = ReplySlot::new();
+    let mut writer = ReplyWriter::new(writer, &fault);
     let mut wbuf: Vec<u8> = Vec::with_capacity(256);
     let mut hdr = [0u8; wire::REQ_HEADER_LEN];
     let mut next_id = 0u64;
     loop {
         let mut prefix = [0u8; wire::PREFIX_LEN];
-        if reader.read_exact(&mut prefix).is_err() {
-            return; // clean EOF between frames, or transport death
+        if let Err(e) = reader.read_exact(&mut prefix) {
+            // Clean EOF between frames, transport death — or the idle
+            // timeout, which gets a typed close so the peer learns why.
+            if is_timeout(&e) {
+                let idle = ServeError::IdleTimeout { idle_ms: idle_timeout_ms };
+                wire::encode_binary_err(&mut wbuf, 0, &idle);
+                let _ = writer.write_frame(&wbuf);
+            }
+            return;
         }
         let magic = u32::from_le_bytes([prefix[0], prefix[1], prefix[2], prefix[3]]);
         if let Err(e) = wire::check_magic(magic) {
             // Framing cannot be trusted: reply typed and close.
             wire::encode_binary_err(&mut wbuf, 0, &e);
-            let _ = writer.write_all(&wbuf);
+            let _ = writer.write_frame(&wbuf);
             return;
         }
         let len = u32::from_le_bytes([prefix[4], prefix[5], prefix[6], prefix[7]]) as usize;
         if !(wire::REQ_HEADER_LEN..=wire::MAX_FRAME).contains(&len) {
             wire::encode_binary_err(&mut wbuf, 0, &bad(format!("bad frame length {len}")));
-            let _ = writer.write_all(&wbuf);
+            let _ = writer.write_frame(&wbuf);
             return;
         }
         if reader.read_exact(&mut hdr).is_err() {
@@ -647,7 +789,7 @@ pub fn run_binary_session<R: Read, W: Write>(
             Err(e) => {
                 // Unsupported wire version: same framing-loss rule.
                 wire::encode_binary_err(&mut wbuf, 0, &e);
-                let _ = writer.write_all(&wbuf);
+                let _ = writer.write_frame(&wbuf);
                 return;
             }
         };
@@ -657,8 +799,22 @@ pub fn run_binary_session<R: Read, W: Write>(
                 if wire::drain_payload(&mut reader, payload_len).is_err() {
                     return;
                 }
-                wire::encode_ok_empty(&mut wbuf, wire::OP_PING);
-                if writer.write_all(&wbuf).is_err() {
+                if let Some(stall) = fault.ping_stall_ms {
+                    std::thread::sleep(Duration::from_millis(stall));
+                }
+                let in_flight = stats.in_flight.load(Ordering::Relaxed);
+                wire::encode_pong(&mut wbuf, queue.draining(), in_flight);
+                if writer.write_frame(&wbuf).is_err() {
+                    return;
+                }
+            }
+            wire::OP_DRAIN | wire::OP_RESUME => {
+                if wire::drain_payload(&mut reader, payload_len).is_err() {
+                    return;
+                }
+                queue.set_draining(h.op == wire::OP_DRAIN);
+                wire::encode_ok_empty(&mut wbuf, h.op);
+                if writer.write_frame(&wbuf).is_err() {
                     return;
                 }
             }
@@ -668,7 +824,7 @@ pub fn run_binary_session<R: Read, W: Write>(
                 }
                 trigger_shutdown(queue, stats, shutdown, listen_addr);
                 wire::encode_ok_empty(&mut wbuf, wire::OP_SHUTDOWN);
-                if writer.write_all(&wbuf).is_err() {
+                if writer.write_frame(&wbuf).is_err() {
                     return;
                 }
             }
@@ -687,14 +843,14 @@ pub fn run_binary_session<R: Read, W: Write>(
                 );
                 match outcome {
                     BinOutcome::Reply(buf) => {
-                        if writer.write_all(buf.reply()).is_err() {
+                        if writer.write_frame(buf.reply()).is_err() {
                             return;
                         }
                         // buf drops here -> storage returns to the pool
                     }
                     BinOutcome::Refused(e) => {
                         wire::encode_binary_err(&mut wbuf, wire::OP_INFER, &e);
-                        if writer.write_all(&wbuf).is_err() {
+                        if writer.write_frame(&wbuf).is_err() {
                             return;
                         }
                     }
@@ -706,7 +862,7 @@ pub fn run_binary_session<R: Read, W: Write>(
                     return;
                 }
                 wire::encode_binary_err(&mut wbuf, other, &bad(format!("unknown op {other}")));
-                if writer.write_all(&wbuf).is_err() {
+                if writer.write_frame(&wbuf).is_err() {
                     return;
                 }
             }

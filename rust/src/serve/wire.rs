@@ -22,7 +22,7 @@
 //! u32 magic      -- "A2QB" (0x4251_3241 LE); first byte b'A'
 //! u32 len        -- bytes after this field (= REQ_HEADER_LEN + payload), <= MAX_FRAME
 //! u16 version    -- 1; anything else is refused typed and the connection closes
-//! u8  op         -- 1 = infer, 2 = ping, 3 = shutdown
+//! u8  op         -- 1 = infer, 2 = ping, 3 = shutdown, 4 = drain, 5 = resume
 //! u8  reserved   -- 0
 //! u64 model_hash -- PlanCache key (fnv1a64 of spec/file bytes)
 //! u32 rows
@@ -41,7 +41,9 @@
 //! payload is `u32 msg_len + utf8` of the error's `Display` text. A
 //! successful infer reply's payload is `u32 rows | u32 cols |
 //! u64 overflow_events | u64 batch_seq | u32 batch_rows |
-//! f32 outputs[rows * cols]`; ping/shutdown success has no payload.
+//! f32 outputs[rows * cols]`; a ping ack carries `u8 draining |
+//! u64 in_flight` (the router's health probes read both);
+//! shutdown/drain/resume success has no payload.
 //!
 //! Framing errors (bad magic, wrong version, oversized length) poison the
 //! stream — the server replies typed and closes. Recoverable request
@@ -75,6 +77,11 @@ pub const VERSION: u16 = 1;
 pub const OP_INFER: u8 = 1;
 pub const OP_PING: u8 = 2;
 pub const OP_SHUTDOWN: u8 = 3;
+/// Stop admitting new work (typed `draining` refusals) but let queued and
+/// in-flight requests complete; the zero-loss half of a router failover.
+pub const OP_DRAIN: u8 = 4;
+/// Clear a previous drain and admit work again.
+pub const OP_RESUME: u8 = 5;
 
 /// Bytes of the frame prefix every frame opens with: magic + length.
 pub const PREFIX_LEN: usize = 8;
@@ -289,9 +296,21 @@ pub fn encode_binary_infer_ok(
     }
 }
 
-/// Encode a payload-less success reply (ping/shutdown acks).
+/// Encode a payload-less success reply (shutdown/drain/resume acks).
 pub fn encode_ok_empty(out: &mut Vec<u8>, op: u8) {
     put_reply_header(out, op, 0, 0);
+}
+
+/// Bytes of a ping ack's payload: `u8 draining | u64 in_flight`.
+pub const PONG_PAYLOAD_LEN: usize = 9;
+
+/// Encode a ping ack carrying the replica's drain flag and in-flight
+/// count — one cheap probe tells a router both liveness and drain
+/// progress.
+pub fn encode_pong(out: &mut Vec<u8>, draining: bool, in_flight: u64) {
+    put_reply_header(out, OP_PING, 0, PONG_PAYLOAD_LEN);
+    out.push(draining as u8);
+    put_u64(out, in_flight);
 }
 
 /// Encode a typed error reply: `status` is [`ServeError::tag`], payload is
@@ -403,26 +422,46 @@ pub enum Reply {
         batch_rows: usize,
         outputs: Vec<f32>,
     },
-    /// Payload-less success (ping/shutdown ack).
+    /// Payload-less success (shutdown/drain/resume ack, or a legacy ping).
     Ok { op: u8 },
+    /// Ping ack with the replica's drain flag and in-flight count.
+    Pong { draining: bool, in_flight: u64 },
     /// Typed refusal: `tag` maps to a code via [`ServeError::code_for_tag`].
     Err { op: u8, tag: u8, message: String },
 }
 
-/// Read and decode one reply frame (client side: loadgen, tests).
-pub fn read_reply<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> anyhow::Result<Reply> {
+/// Read one reply frame into `scratch` and decode it, keeping transport
+/// failures separate from protocol violations: the outer `io::Error` (a
+/// hangup, reset or read timeout — its `ErrorKind` intact for outcome
+/// classification) versus the inner decode error (malformed frame from a
+/// live transport). Clients that don't care use [`read_reply`].
+pub fn read_reply_frame<R: Read>(
+    r: &mut R,
+    scratch: &mut Vec<u8>,
+) -> io::Result<anyhow::Result<Reply>> {
     let mut prefix = [0u8; PREFIX_LEN];
     r.read_exact(&mut prefix)?;
     let magic = rd_u32(&prefix, 0);
-    anyhow::ensure!(magic == MAGIC, "bad reply magic {magic:#010x}");
+    if magic != MAGIC {
+        return Ok(Err(anyhow::anyhow!("bad reply magic {magic:#010x}")));
+    }
     let len = rd_u32(&prefix, 4) as usize;
-    anyhow::ensure!(
-        (REPLY_HEADER_LEN..=MAX_FRAME).contains(&len),
-        "bad reply frame length {len}"
-    );
+    if !(REPLY_HEADER_LEN..=MAX_FRAME).contains(&len) {
+        return Ok(Err(anyhow::anyhow!("bad reply frame length {len}")));
+    }
     scratch.clear();
     scratch.resize(len, 0);
     r.read_exact(scratch)?;
+    Ok(parse_reply_body(scratch))
+}
+
+/// Read and decode one reply frame (client side: loadgen, tests).
+pub fn read_reply<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> anyhow::Result<Reply> {
+    read_reply_frame(r, scratch)?
+}
+
+/// Decode a reply frame's body (everything after the 8-byte prefix).
+fn parse_reply_body(scratch: &[u8]) -> anyhow::Result<Reply> {
     let version = rd_u16(scratch, 0);
     anyhow::ensure!(version == VERSION, "unsupported reply version {version}");
     let op = scratch[2];
@@ -434,6 +473,9 @@ pub fn read_reply<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> anyhow::Result<R
         anyhow::ensure!(payload.len() == 4 + msg_len, "bad error payload length");
         let message = std::str::from_utf8(&payload[4..])?.to_string();
         return Ok(Reply::Err { op, tag: status, message });
+    }
+    if op == OP_PING && payload.len() >= PONG_PAYLOAD_LEN {
+        return Ok(Reply::Pong { draining: payload[0] != 0, in_flight: rd_u64(payload, 1) });
     }
     if op != OP_INFER {
         return Ok(Reply::Ok { op });
@@ -544,6 +586,17 @@ mod tests {
             }
         );
 
+        encode_ok_empty(&mut frame, OP_SHUTDOWN);
+        let reply = read_reply(&mut Cursor::new(&frame[..]), &mut scratch).unwrap();
+        assert_eq!(reply, Reply::Ok { op: OP_SHUTDOWN });
+
+        encode_pong(&mut frame, true, 17);
+        let reply = read_reply(&mut Cursor::new(&frame[..]), &mut scratch).unwrap();
+        assert_eq!(reply, Reply::Pong { draining: true, in_flight: 17 });
+        encode_pong(&mut frame, false, 0);
+        let reply = read_reply(&mut Cursor::new(&frame[..]), &mut scratch).unwrap();
+        assert_eq!(reply, Reply::Pong { draining: false, in_flight: 0 });
+        // A payload-less ping ack (pre-drain wire) still decodes.
         encode_ok_empty(&mut frame, OP_PING);
         let reply = read_reply(&mut Cursor::new(&frame[..]), &mut scratch).unwrap();
         assert_eq!(reply, Reply::Ok { op: OP_PING });

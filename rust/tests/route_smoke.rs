@@ -1,0 +1,544 @@
+//! Router smoke tests: replica failure must be invisible to clients.
+//!
+//! Every test drives a real in-process [`Router`] over real `a2q serve`
+//! child processes (spawned from the built CLI binary) and asserts the
+//! ISSUE's contract: every client request either succeeds bit-identically
+//! to a direct replica hit or fails with a typed shed code — never a
+//! transport error the client didn't cause, never a torn frame, never a
+//! hang. Kill -9, drain, torn replies, worker panics and whole-pool death
+//! are all exercised.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use a2q::json::Json;
+use a2q::serve::{
+    wire, BackendSpec, LoadgenConfig, RetryPolicy, Router, RouterConfig, ServeError, WireFormat,
+};
+
+const SPEC: &str = "smoke:12x8x3:m4n4p16";
+
+// ---------------------------------------------------------------------------
+// Real `a2q serve` child processes
+// ---------------------------------------------------------------------------
+
+/// One replica process, killed on drop. `kill` is SIGKILL — the
+/// unannounced death the router must absorb.
+struct ServeChild {
+    child: Child,
+    addr: String,
+}
+
+impl ServeChild {
+    fn spawn(fault: Option<&str>) -> ServeChild {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_a2q"));
+        cmd.args(["serve", "--addr", "127.0.0.1:0", "--models", SPEC, "--workers", "2"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .stdin(Stdio::null());
+        if let Some(f) = fault {
+            cmd.env("A2Q_FAULT", f);
+        }
+        let mut child = cmd.spawn().expect("spawn serve child");
+        let stdout = child.stdout.take().expect("child stdout");
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        let addr = loop {
+            line.clear();
+            let n = reader.read_line(&mut line).expect("read child stdout");
+            assert!(n > 0, "serve child exited before announcing its address");
+            if let Some(rest) = line.trim().strip_prefix("[serve] listening on ") {
+                break rest.trim().to_string();
+            }
+        };
+        // Drain the rest of the child's stdout so it never blocks on a
+        // full pipe.
+        std::thread::spawn(move || {
+            let mut sink = [0u8; 4096];
+            while matches!(reader.read(&mut sink), Ok(n) if n > 0) {}
+        });
+        ServeChild { child, addr }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ServeChild {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// A router over already-running replicas, on an ephemeral port, with
+/// test-fast probing. `tweak` adjusts knobs per test.
+fn router_over(addrs: &[&str], tweak: impl FnOnce(&mut RouterConfig)) -> Router {
+    let specs: Vec<BackendSpec> =
+        addrs.iter().map(|a| BackendSpec::Attached(a.to_string())).collect();
+    let mut cfg = RouterConfig {
+        addr: "127.0.0.1:0".to_string(),
+        probe_interval_ms: 20,
+        respawn: false,
+        ..RouterConfig::default()
+    };
+    tweak(&mut cfg);
+    Router::start(&cfg, &specs).expect("router start")
+}
+
+// ---------------------------------------------------------------------------
+// Wire clients (same shape as serve_smoke's)
+// ---------------------------------------------------------------------------
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: impl std::net::ToSocketAddrs) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(20))).expect("read timeout");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        Client { stream, reader }
+    }
+
+    fn call(&mut self, req: Json) -> Json {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes()).expect("write");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read");
+        Json::parse(&reply).expect("parse reply")
+    }
+
+    fn infer(&mut self, rows: Vec<Vec<i64>>, deadline_ms: u64) -> Json {
+        let rows = Json::arr(
+            rows.into_iter()
+                .map(|r| Json::Arr(r.into_iter().map(|v| Json::num(v as f64)).collect())),
+        );
+        self.call(Json::obj(vec![
+            ("op", Json::str("infer")),
+            ("model", Json::str("smoke")),
+            ("rows", rows),
+            ("deadline_ms", Json::num(deadline_ms as f64)),
+        ]))
+    }
+}
+
+struct BinClient {
+    stream: TcpStream,
+    frame: Vec<u8>,
+    scratch: Vec<u8>,
+}
+
+impl BinClient {
+    fn connect(addr: impl std::net::ToSocketAddrs) -> BinClient {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(20))).expect("read timeout");
+        BinClient { stream, frame: Vec::new(), scratch: Vec::new() }
+    }
+
+    fn infer(&mut self, hash: u64, rows: usize, codes: &[i64], deadline_ms: u64) -> wire::Reply {
+        wire::encode_infer_request(&mut self.frame, hash, rows, 12, deadline_ms, codes);
+        self.stream.write_all(&self.frame).expect("write frame");
+        wire::read_reply(&mut self.stream, &mut self.scratch).expect("reply frame")
+    }
+
+    fn simple(&mut self, op: u8) -> wire::Reply {
+        wire::encode_simple_request(&mut self.frame, op);
+        self.stream.write_all(&self.frame).expect("write frame");
+        wire::read_reply(&mut self.stream, &mut self.scratch).expect("reply frame")
+    }
+}
+
+fn ok(reply: &Json) -> bool {
+    reply.get("ok").and_then(|v| v.as_bool()).unwrap_or(false)
+}
+
+fn code(reply: &Json) -> String {
+    reply.opt("code").and_then(|c| c.as_str().ok()).unwrap_or("").to_string()
+}
+
+/// Resolve the model hash through whatever speaks the JSON protocol —
+/// through the router this relays like any data-plane op.
+fn model_hash(c: &mut Client) -> u64 {
+    let info = c.call(Json::obj(vec![
+        ("op", Json::str("model_info")),
+        ("model", Json::str("smoke")),
+    ]));
+    assert!(ok(&info), "{info:?}");
+    info.get("hash").unwrap().as_str().unwrap().parse().expect("hash parses")
+}
+
+fn replica_states(stats: &Json) -> Vec<(String, String)> {
+    stats
+        .get("replicas")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| {
+            (
+                r.get("addr").unwrap().as_str().unwrap().to_string(),
+                r.get("state").unwrap().as_str().unwrap().to_string(),
+            )
+        })
+        .collect()
+}
+
+/// Poll the router's stats until `pred` holds (the prober needs a beat to
+/// observe state changes).
+fn wait_for(ctl: &mut Client, what: &str, mut pred: impl FnMut(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = ctl.call(Json::obj(vec![("op", Json::str("stats"))]));
+        if pred(&stats) {
+            return stats;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}: {stats:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn counter(stats: &Json, name: &str) -> u64 {
+    stats.get(name).unwrap().as_u64().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+/// The router is transparent: both protocols relay bit-identically to a
+/// direct replica hit, the router answers its own pings, refuses
+/// un-routable binary admin ops typed, and a client `shutdown` op unblocks
+/// `Router::join` — the exact blocking pattern `a2q route` relies on.
+#[test]
+fn router_relays_bit_identically_and_shuts_down_on_op() {
+    let replica = ServeChild::spawn(None);
+    let router = router_over(&[&replica.addr], |_| {});
+
+    // Direct reference replies, both protocols.
+    let mut dj = Client::connect(replica.addr.as_str());
+    let hash = model_hash(&mut dj);
+    let dref = dj.infer(vec![vec![1; 12], vec![3; 12]], 1000);
+    assert!(ok(&dref), "{dref:?}");
+    let mut db = BinClient::connect(replica.addr.as_str());
+    let codes: Vec<i64> = (0..2 * 12).map(|i| (i % 4) as i64).collect();
+    let bref = db.infer(hash, 2, &codes, 1000);
+    assert!(matches!(bref, wire::Reply::InferOk { .. }), "{bref:?}");
+
+    // JSON through the router: ping answered locally, data plane relayed.
+    let mut c = Client::connect(router.addr());
+    let pong = c.call(Json::obj(vec![("op", Json::str("ping"))]));
+    assert!(ok(&pong), "{pong:?}");
+    assert_eq!(pong.get("role").unwrap().as_str().unwrap(), "router");
+    assert_eq!(model_hash(&mut c), hash, "model_info relays through the router");
+    let via = c.infer(vec![vec![1; 12], vec![3; 12]], 1000);
+    assert_eq!(dref.to_string(), via.to_string(), "JSON relay is bit-identical");
+
+    // Binary through the router.
+    let mut b = BinClient::connect(router.addr());
+    assert_eq!(b.simple(wire::OP_PING), wire::Reply::Pong { draining: false, in_flight: 0 });
+    assert_eq!(b.infer(hash, 2, &codes, 1000), bref, "binary relay is bit-identical");
+    match b.simple(wire::OP_DRAIN) {
+        wire::Reply::Err { tag, .. } => {
+            assert_eq!(ServeError::code_for_tag(tag), Some("bad_request"));
+        }
+        other => panic!("binary drain at the router must be refused typed, got {other:?}"),
+    }
+
+    // Stats carry router counters and one row per replica.
+    let stats = c.call(Json::obj(vec![("op", Json::str("stats"))]));
+    assert_eq!(stats.get("role").unwrap().as_str().unwrap(), "router");
+    assert!(counter(&stats, "forwarded") >= 3, "{stats:?}");
+    assert_eq!(replica_states(&stats), vec![(replica.addr.clone(), "up".to_string())]);
+
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    router.join();
+}
+
+/// Kill -9 one of two replicas mid-stream: every subsequent request keeps
+/// succeeding bit-identically; the breaker takes the dead replica out of
+/// rotation and the survivor carries the traffic.
+#[test]
+fn replica_kill_is_invisible_to_clients() {
+    let mut victim = ServeChild::spawn(None);
+    let survivor = ServeChild::spawn(None);
+    let router = router_over(&[&victim.addr, &survivor.addr], |_| {});
+    let mut ctl = Client::connect(router.addr());
+    let hash = model_hash(&mut ctl);
+
+    let mut b = BinClient::connect(router.addr());
+    let codes = vec![1i64; 2 * 12];
+    let reference = b.infer(hash, 2, &codes, 2000);
+    assert!(matches!(reference, wire::Reply::InferOk { .. }), "{reference:?}");
+
+    victim.kill();
+    for i in 0..12 {
+        let got = b.infer(hash, 2, &codes, 2000);
+        assert_eq!(reference, got, "request {i} after the kill must be bit-identical");
+    }
+    // The breaker opens on the dead replica; the survivor stays up.
+    let stats = wait_for(&mut ctl, "victim breaker to open", |s| {
+        replica_states(s).iter().any(|(a, st)| a == &victim.addr && st == "down")
+    });
+    assert!(
+        replica_states(&stats).iter().any(|(a, st)| a == &survivor.addr && st == "up"),
+        "{stats:?}"
+    );
+
+    assert!(ok(&ctl.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    router.join();
+}
+
+/// Deterministic torn-reply handling: a replica that cuts the connection
+/// halfway through every second reply (`conn_drop:2`) costs the router a
+/// retry per tear — the client sees only complete, identical replies.
+#[test]
+fn torn_replies_are_retried_never_relayed() {
+    let replica = ServeChild::spawn(Some("conn_drop:2"));
+    let router = router_over(&[&replica.addr], |cfg| cfg.breaker_threshold = 10);
+    let mut ctl = Client::connect(router.addr());
+    let hash = model_hash(&mut ctl);
+
+    let mut b = BinClient::connect(router.addr());
+    let codes = vec![1i64; 12];
+    let reference = b.infer(hash, 1, &codes, 2000);
+    assert!(matches!(reference, wire::Reply::InferOk { .. }), "{reference:?}");
+    for i in 0..7 {
+        let got = b.infer(hash, 1, &codes, 2000);
+        assert_eq!(reference, got, "request {i} must survive the torn reply");
+    }
+    // Every second backend reply is torn, so the retry counter must have
+    // moved — and every tear was absorbed, never relayed.
+    let stats = ctl.call(Json::obj(vec![("op", Json::str("stats"))]));
+    assert!(counter(&stats, "retries") >= 3, "{stats:?}");
+
+    assert!(ok(&ctl.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    router.join();
+}
+
+/// The addressed drain control op is zero-loss: the drained replica
+/// refuses new work typed while the router routes around it; `resume`
+/// re-admits it within a probe interval.
+#[test]
+fn drain_via_router_routes_around_and_resume_readmits() {
+    let a = ServeChild::spawn(None);
+    let b_replica = ServeChild::spawn(None);
+    let router = router_over(&[&a.addr, &b_replica.addr], |_| {});
+    let mut ctl = Client::connect(router.addr());
+    let hash = model_hash(&mut ctl);
+
+    let drained = ctl.call(Json::obj(vec![
+        ("op", Json::str("drain")),
+        ("backend", Json::str(a.addr.as_str())),
+    ]));
+    assert!(ok(&drained), "{drained:?}");
+    assert_eq!(drained.get("state").unwrap().as_str().unwrap(), "draining");
+
+    // The drained replica refuses direct hits typed...
+    let mut direct = BinClient::connect(a.addr.as_str());
+    let codes = vec![1i64; 12];
+    match direct.infer(hash, 1, &codes, 1000) {
+        wire::Reply::Err { tag, .. } => {
+            assert_eq!(ServeError::code_for_tag(tag), Some("draining"));
+        }
+        other => panic!("drained replica must refuse typed, got {other:?}"),
+    }
+    // ...while clients of the router never notice.
+    let mut b = BinClient::connect(router.addr());
+    let reference = b.infer(hash, 1, &codes, 2000);
+    assert!(matches!(reference, wire::Reply::InferOk { .. }), "{reference:?}");
+    for _ in 0..6 {
+        assert_eq!(b.infer(hash, 1, &codes, 2000), reference);
+    }
+
+    // Admin ops validate their target.
+    let bogus = ctl.call(Json::obj(vec![
+        ("op", Json::str("drain")),
+        ("backend", Json::str("127.0.0.1:1")),
+    ]));
+    assert_eq!(code(&bogus), "bad_request", "{bogus:?}");
+
+    // Resume: the replica re-enters rotation via the probe loop.
+    let resumed = ctl.call(Json::obj(vec![
+        ("op", Json::str("resume")),
+        ("backend", Json::str(a.addr.as_str())),
+    ]));
+    assert!(ok(&resumed), "{resumed:?}");
+    wait_for(&mut ctl, "drained replica to re-admit", |s| {
+        replica_states(s).iter().any(|(addr, st)| addr == &a.addr && st == "up")
+    });
+    assert_eq!(b.infer(hash, 1, &codes, 2000), reference, "re-admitted replica is bit-identical");
+
+    assert!(ok(&ctl.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    router.join();
+}
+
+/// Tail-latency hedging: with one replica injected 150ms slow, a 40ms
+/// hedge duplicates the infer onto the fast replica and the duplicate's
+/// reply wins — bit-identical, of course.
+#[test]
+fn hedging_wins_over_a_slow_replica() {
+    let slow = ServeChild::spawn(Some("delay_ms:150"));
+    let fast = ServeChild::spawn(None);
+    let router = router_over(&[&slow.addr, &fast.addr], |cfg| cfg.hedge_ms = 40);
+    let mut ctl = Client::connect(router.addr());
+    let hash = model_hash(&mut ctl);
+
+    let mut b = BinClient::connect(router.addr());
+    let codes = vec![1i64; 12];
+    let reference = b.infer(hash, 1, &codes, 2000);
+    assert!(matches!(reference, wire::Reply::InferOk { .. }), "{reference:?}");
+    for _ in 0..7 {
+        assert_eq!(b.infer(hash, 1, &codes, 2000), reference);
+    }
+    // Round-robin started roughly half the requests on the slow replica;
+    // each of those must have hedged, and the fast duplicate must have won
+    // at least once.
+    let stats = ctl.call(Json::obj(vec![("op", Json::str("stats"))]));
+    assert!(counter(&stats, "hedges") >= 1, "{stats:?}");
+    assert!(counter(&stats, "hedge_wins") >= 1, "{stats:?}");
+
+    assert!(ok(&ctl.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    router.join();
+}
+
+/// Whole-pool death: the router survives every replica dying, sheds typed
+/// `no_backend` on both protocols, and automatically re-admits + respawns
+/// a spawned replica — clients never see a transport error throughout.
+#[test]
+fn dead_pool_sheds_typed_and_respawn_readmits() {
+    std::env::set_var("A2Q_SERVE_BIN", env!("CARGO_BIN_EXE_a2q"));
+    let cfg = RouterConfig {
+        addr: "127.0.0.1:0".to_string(),
+        probe_interval_ms: 20,
+        respawn: true,
+        ..RouterConfig::default()
+    };
+    let specs = [BackendSpec::Spawn { models: SPEC.to_string(), workers: 1 }];
+    let router = Router::start(&cfg, &specs).expect("router start");
+    let mut ctl = Client::connect(router.addr());
+    let hash = model_hash(&mut ctl);
+
+    let mut b = BinClient::connect(router.addr());
+    let codes = vec![1i64; 12];
+    let reference = b.infer(hash, 1, &codes, 2000);
+    assert!(matches!(reference, wire::Reply::InferOk { .. }), "{reference:?}");
+
+    // Kill the only replica from outside the router (graceful shutdown so
+    // its ephemeral port frees immediately; the router only sees a backend
+    // that stopped answering).
+    let stats = ctl.call(Json::obj(vec![("op", Json::str("stats"))]));
+    let (old_addr, _) = replica_states(&stats)[0].clone();
+    let mut killer = BinClient::connect(old_addr.as_str());
+    assert_eq!(killer.simple(wire::OP_SHUTDOWN), wire::Reply::Ok { op: wire::OP_SHUTDOWN });
+    drop(killer);
+
+    // Until the respawn lands every request fails TYPED on the same
+    // still-open client connection; afterwards requests succeed again,
+    // bit-identically. No transport errors at any point.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut recovered = false;
+    while Instant::now() < deadline {
+        match b.infer(hash, 1, &codes, 2000) {
+            got @ wire::Reply::InferOk { .. } => {
+                assert_eq!(reference, got, "respawned replica must serve identically");
+                recovered = true;
+                break;
+            }
+            wire::Reply::Err { tag, .. } => {
+                let c = ServeError::code_for_tag(tag).unwrap_or("unknown_tag");
+                assert!(
+                    matches!(c, "no_backend" | "shutting_down" | "draining" | "overloaded"),
+                    "only typed shed codes may surface while the pool is down, got {c}"
+                );
+                std::thread::sleep(Duration::from_millis(30));
+            }
+            other => panic!("expected InferOk or a typed error, got {other:?}"),
+        }
+    }
+    assert!(recovered, "the router must respawn and re-admit its spawned replica");
+    let stats = ctl.call(Json::obj(vec![("op", Json::str("stats"))]));
+    assert!(counter(&stats, "respawns") >= 1, "{stats:?}");
+
+    router.shutdown();
+    router.join(); // also kills the respawned child
+}
+
+/// The centerpiece: open-loop load through the router while one replica is
+/// killed -9, a second is drained, and a third panics a worker batch.
+/// Every request succeeds or sheds typed; the transport-error classes the
+/// loadgen distinguishes stay exactly zero.
+#[test]
+fn open_loop_load_survives_kill_drain_and_panic() {
+    let mut victim = ServeChild::spawn(None);
+    let drained = ServeChild::spawn(None);
+    let panicky = ServeChild::spawn(Some("panic_batch:3"));
+    let router = router_over(&[&victim.addr, &drained.addr, &panicky.addr], |cfg| {
+        cfg.retry = RetryPolicy { max_attempts: 4, base_ms: 1, cap_ms: 20 };
+    });
+    let raddr = router.addr();
+
+    let load = std::thread::spawn(move || {
+        a2q::serve::run_loadgen(&LoadgenConfig {
+            addr: raddr.to_string(),
+            model: "smoke".to_string(),
+            rps: 250.0,
+            duration_ms: 1800,
+            connections: 4,
+            rows_per_req: 2,
+            deadline_ms: 1000,
+            connect_timeout_ms: 2000,
+            seed: 11,
+            wire: WireFormat::Binary,
+        })
+    });
+
+    // Mid-load choreography: kill -9 one replica, drain another through
+    // the router's control plane.
+    std::thread::sleep(Duration::from_millis(400));
+    victim.kill();
+    std::thread::sleep(Duration::from_millis(300));
+    let mut ctl = Client::connect(router.addr());
+    let ack = ctl.call(Json::obj(vec![
+        ("op", Json::str("drain")),
+        ("backend", Json::str(drained.addr.as_str())),
+    ]));
+    assert!(ok(&ack), "{ack:?}");
+
+    let report = load.join().expect("loadgen thread").expect("loadgen run");
+    assert!(report.ok > 0, "requests must still be served: {report:?}");
+    assert_eq!(report.conn_refused, 0, "no transport errors through the router: {report:?}");
+    assert_eq!(report.conn_reset, 0, "no transport errors through the router: {report:?}");
+    assert_eq!(report.timeout, 0, "no transport errors through the router: {report:?}");
+    assert_eq!(report.errors_other, 0, "no untyped failures through the router: {report:?}");
+    assert_eq!(report.overflow_events, 0, "failover must never cost correctness");
+
+    // The kill forced failover retries; the storm is over and the pool
+    // still serves — resume the drained replica and hit it via the router.
+    let stats = ctl.call(Json::obj(vec![("op", Json::str("stats"))]));
+    assert!(counter(&stats, "retries") >= 1, "{stats:?}");
+    let ack = ctl.call(Json::obj(vec![
+        ("op", Json::str("resume")),
+        ("backend", Json::str(drained.addr.as_str())),
+    ]));
+    assert!(ok(&ack), "{ack:?}");
+    wait_for(&mut ctl, "drained replica to re-admit", |s| {
+        replica_states(s).iter().any(|(addr, st)| addr == &drained.addr && st == "up")
+    });
+    let hash = model_hash(&mut ctl);
+    let mut b = BinClient::connect(router.addr());
+    let codes = vec![1i64; 12];
+    let via = b.infer(hash, 1, &codes, 2000);
+    assert!(matches!(via, wire::Reply::InferOk { .. }), "{via:?}");
+    let mut direct = BinClient::connect(drained.addr.as_str());
+    assert_eq!(direct.infer(hash, 1, &codes, 2000), via, "post-storm replies stay bit-identical");
+
+    assert!(ok(&ctl.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    router.join();
+}

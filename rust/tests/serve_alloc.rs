@@ -122,6 +122,8 @@ fn warmed_binary_infer_round_trip_allocates_nothing() {
         &shutdown,
         None,
         Duration::from_secs(60),
+        0,
+        FaultPlan::none(),
         &pool,
     );
     let end = ALLOC_CALLS.load(Ordering::SeqCst);

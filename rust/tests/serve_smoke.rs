@@ -302,6 +302,7 @@ fn overload_sheds_typed_and_server_survives() {
         connections: 3,
         rows_per_req: 2,
         deadline_ms: 120,
+        connect_timeout_ms: 1000,
         seed: 9,
         wire: WireFormat::Json,
     })
@@ -378,7 +379,9 @@ fn binary_wire_round_trip_and_typed_errors() {
     let hash = model_hash(&mut jc, "smoke");
 
     let mut b = BinClient::connect(addr);
-    assert_eq!(b.simple(wire::OP_PING), wire::Reply::Ok { op: wire::OP_PING });
+    // A ping ack carries the drain flag and in-flight gauge (the router's
+    // health probes read both); an idle server reports neither.
+    assert_eq!(b.simple(wire::OP_PING), wire::Reply::Pong { draining: false, in_flight: 0 });
 
     let codes: Vec<i64> = (0..2 * 12).map(|i| (i % 4) as i64).collect();
     let first = match b.infer(hash, 2, 12, &codes, 1000) {
@@ -512,6 +515,99 @@ fn json_and_binary_wire_paths_are_bit_identical() {
         drop(jc);
         server.join();
     }
+}
+
+/// The zero-loss drain contract on a single replica: a drained server
+/// refuses new work with the typed `draining` code on both protocols,
+/// reports the drain flag through ping (JSON and binary pong), and
+/// resumes serving bit-identically after `resume`.
+#[test]
+fn drain_refuses_typed_reports_state_and_resume_readmits() {
+    let server = test_server(quiet_cfg(), FaultPlan::none());
+    let addr = server.addr();
+    let mut c = Client::connect(addr);
+    let hash = model_hash(&mut c, "smoke");
+    let before = c.infer("smoke", vec![vec![1; 12]], 1000);
+    assert!(ok(&before), "{before:?}");
+
+    // JSON drain: the ack and subsequent pings report draining=true with
+    // the in-flight gauge a router watches bleed to zero.
+    let drained = c.call(Json::obj(vec![("op", Json::str("drain"))]));
+    assert!(ok(&drained), "{drained:?}");
+    assert!(drained.get("draining").unwrap().as_bool().unwrap());
+    assert_eq!(drained.get("in_flight").unwrap().as_u64().unwrap(), 0);
+    let pong = c.call(Json::obj(vec![("op", Json::str("ping"))]));
+    assert!(pong.get("draining").unwrap().as_bool().unwrap(), "{pong:?}");
+
+    // Both protocols shed new work typed; neither connection drops.
+    assert_eq!(code(&c.infer("smoke", vec![vec![1; 12]], 1000)), "draining");
+    let mut b = BinClient::connect(addr);
+    assert_eq!(b.simple(wire::OP_PING), wire::Reply::Pong { draining: true, in_flight: 0 });
+    let codes = vec![1i64; 12];
+    assert_eq!(err_code(&b.infer(hash, 1, 12, &codes, 1000)), "draining");
+
+    // Binary resume ack; the very next request serves bit-identically.
+    assert_eq!(b.simple(wire::OP_RESUME), wire::Reply::Ok { op: wire::OP_RESUME });
+    let after = c.infer("smoke", vec![vec![1; 12]], 1000);
+    assert_eq!(before.to_string(), after.to_string(), "drain/resume must not perturb replies");
+
+    // Binary drain ack flips the flag right back.
+    assert_eq!(b.simple(wire::OP_DRAIN), wire::Reply::Ok { op: wire::OP_DRAIN });
+    assert_eq!(code(&c.infer("smoke", vec![vec![1; 12]], 1000)), "draining");
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("resume"))]))));
+
+    let stats = c.call(Json::obj(vec![("op", Json::str("stats"))]));
+    assert!(stats.get("shed_draining").unwrap().as_u64().unwrap() >= 2, "{stats:?}");
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    drop(c);
+    drop(b);
+    server.join();
+}
+
+/// The slow-loris defence: a connection that sends no request bytes for
+/// the idle timeout gets a typed `idle_timeout` close — on the very first
+/// byte (binary error frame, protocol not yet negotiated) and mid-stream
+/// on an established JSON session — while fresh connections still serve.
+#[test]
+fn idle_connections_close_typed_and_server_keeps_serving() {
+    let cfg = ServeConfig { idle_timeout_ms: 150, ..quiet_cfg() };
+    let server = test_server(cfg, FaultPlan::none());
+    let addr = server.addr();
+
+    // Totally silent connection: the first-byte read times out before the
+    // protocol is even negotiated; the typed close arrives as a binary
+    // error frame.
+    let mut silent = TcpStream::connect(addr).expect("connect");
+    let mut scratch = Vec::new();
+    match wire::read_reply(&mut silent, &mut scratch).expect("typed close frame") {
+        wire::Reply::Err { tag, message, .. } => {
+            assert_eq!(ServeError::code_for_tag(tag), Some("idle_timeout"));
+            assert!(message.contains("150"), "{message}");
+        }
+        other => panic!("expected Reply::Err, got {other:?}"),
+    }
+    assert!(
+        wire::read_reply(&mut silent, &mut scratch).is_err(),
+        "connection must close after the typed idle_timeout"
+    );
+
+    // Established JSON session that goes quiet: typed line, then EOF.
+    let mut c = Client::connect(addr);
+    assert!(ok(&c.call(Json::obj(vec![("op", Json::str("ping"))]))));
+    let mut line = String::new();
+    c.reader.read_line(&mut line).expect("typed close line");
+    let close = Json::parse(&line).expect("typed close parses");
+    assert_eq!(code(&close), "idle_timeout", "{close:?}");
+    line.clear();
+    assert_eq!(c.reader.read_line(&mut line).unwrap_or(0), 0, "EOF after typed close");
+
+    // The server itself is unharmed: a fresh, active connection serves.
+    let mut fresh = Client::connect(addr);
+    let reply = fresh.infer("smoke", vec![vec![2; 12]], 1000);
+    assert!(ok(&reply), "{reply:?}");
+    assert!(ok(&fresh.call(Json::obj(vec![("op", Json::str("shutdown"))]))));
+    drop(fresh);
+    server.join();
 }
 
 /// An injected cache-load failure is a per-request typed error on an
